@@ -1,0 +1,206 @@
+//! Regenerate every table/figure of the paper's evaluation section, plus
+//! the ablation studies DESIGN.md calls out.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures -- --fig all --scale 0.5 --out results
+//! # or a single figure: --fig 3 | 5 | 8lda | 8mf | 8lasso | 9 | 10 | ablation
+//! ```
+//!
+//! `--scale` shrinks workload sizes (1.0 = the defaults recorded in
+//! EXPERIMENTS.md; the paper's absolute sizes are cluster-scale).
+
+use strads::cluster::NetworkConfig;
+use strads::coordinator::RunConfig;
+use strads::figures::{common, fig10, fig3, fig5, fig8, fig9};
+use strads::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let fig = args.str_or("fig", "all");
+    let scale = args.parse_or("scale", 1.0f64);
+    let out = args.str_or("out", "results");
+    let _ = std::fs::create_dir_all(&out);
+    let sc = |v: usize| ((v as f64 * scale) as usize).max(8);
+
+    let all = fig == "all";
+    if all || fig == "3" {
+        let rows = fig3::run(&fig3::Fig3Config {
+            vocab: sc(20_000),
+            n_docs: sc(1_000),
+            n_topics: sc(100),
+            ..Default::default()
+        });
+        fig3::print(&rows);
+        let _ = std::fs::write(
+            format!("{out}/fig3.json"),
+            fig3::to_json(&rows).to_json(),
+        );
+    }
+    if all || fig == "5" {
+        let series = fig5::run(&fig5::Fig5Config {
+            vocab: sc(20_000),
+            n_docs: sc(2_000),
+            n_topics: sc(100),
+            ..Default::default()
+        });
+        fig5::print(&series);
+        let csv: String = series
+            .iter()
+            .enumerate()
+            .map(|(i, d)| format!("{i},{d}\n"))
+            .collect();
+        let _ = std::fs::write(format!("{out}/fig5.csv"), csv);
+    }
+    if all || fig == "8lda" {
+        let bars = fig8::run_lda(&fig8::LdaPanelConfig {
+            vocab: sc(20_000),
+            n_docs: sc(2_000),
+            ..Default::default()
+        });
+        fig8::print_panel(
+            "Figure 8 (left): LDA time-to-convergence vs model size",
+            "YahooLDA",
+            &bars,
+        );
+    }
+    if all || fig == "8mf" {
+        let bars = fig8::run_mf(&fig8::MfPanelConfig {
+            users: sc(4_000),
+            items: sc(300),
+            ..Default::default()
+        });
+        fig8::print_panel(
+            "Figure 8 (center): MF time-to-convergence vs rank",
+            "GraphLab-ALS",
+            &bars,
+        );
+    }
+    if all || fig == "8lasso" {
+        let bars = fig8::run_lasso(&fig8::LassoPanelConfig {
+            n_samples: sc(256),
+            ..Default::default()
+        });
+        fig8::print_panel(
+            "Figure 8 (right): Lasso time-to-convergence vs features",
+            "Lasso-RR",
+            &bars,
+        );
+    }
+    if all || fig == "9" {
+        let cfg = fig9::Fig9Config { scale, ..Default::default() };
+        for panel in
+            [fig9::run_lda(&cfg), fig9::run_mf(&cfg), fig9::run_lasso(&cfg)]
+        {
+            fig9::print_panel(&panel);
+            let _ = panel.strads.save_csv(&out);
+            let _ = panel.baseline.save_csv(&out);
+        }
+    }
+    if all || fig == "10" {
+        let rows = fig10::run(&fig10::Fig10Config {
+            vocab: sc(10_000),
+            n_docs: sc(5_000),
+            n_topics: sc(100),
+            ..Default::default()
+        });
+        fig10::print(&rows);
+        for r in &rows {
+            let _ = r.trajectory.save_csv(&out);
+        }
+    }
+    if all || fig == "ablation" {
+        ablation_lasso(scale);
+    }
+    println!("\nArtifacts written to {out}/");
+}
+
+/// Ablation: isolate the two ingredients of the Lasso schedule (paper
+/// §3.3) — priority sampling and dependency filtering — plus a ρ sweep.
+fn ablation_lasso(scale: f64) {
+    use strads::apps::lasso::{LassoApp, LassoConfig, LassoSched};
+    use strads::backend::native::NativeLassoShard;
+    use strads::backend::LassoShard;
+    use strads::coordinator::StradsEngine;
+    use strads::datagen::lasso_synth::{self, LassoGenConfig};
+    use strads::scheduler::priority::{PriorityConfig, PriorityScheduler};
+    use std::sync::Arc;
+
+    let sc = |v: usize| ((v as f64 * scale) as usize).max(64);
+    let (n, j, workers, u, lambda, rounds) =
+        (sc(256), sc(4_096), 4usize, 24usize, 0.08f32, 300u64);
+    let prob = lasso_synth::generate(&LassoGenConfig {
+        n_samples: n,
+        n_features: j,
+        seed: 42,
+        ..Default::default()
+    });
+    let x = Arc::new(prob.x);
+
+    let variants: Vec<(&str, PriorityConfig)> = vec![
+        ("priority + filter (paper)", PriorityConfig::paper_defaults(u)),
+        ("priority only", {
+            let mut c = PriorityConfig::paper_defaults(u);
+            c.use_dependency_filter = false;
+            c
+        }),
+        ("filter only", {
+            let mut c = PriorityConfig::paper_defaults(u);
+            c.use_priority = false;
+            c
+        }),
+        ("neither (random)", {
+            let mut c = PriorityConfig::paper_defaults(u);
+            c.use_priority = false;
+            c.use_dependency_filter = false;
+            c
+        }),
+        ("rho=0.5 (loose filter)", {
+            let mut c = PriorityConfig::paper_defaults(u);
+            c.rho = 0.5;
+            c
+        }),
+    ];
+
+    let mut rows = Vec::new();
+    for (name, pcfg) in variants {
+        let app = LassoApp::new(
+            x.clone(),
+            LassoConfig { lambda, n_workers: workers },
+            LassoSched::Priority(PriorityScheduler::new(j, pcfg, 7)),
+        );
+        let per = n / workers;
+        let states: Vec<Box<dyn LassoShard>> = (0..workers)
+            .map(|p| {
+                let lo = p * per;
+                let hi = if p == workers - 1 { n } else { lo + per };
+                Box::new(NativeLassoShard::new(
+                    x.row_slice(lo, hi),
+                    prob.y[lo..hi].to_vec(),
+                )) as Box<dyn LassoShard>
+            })
+            .collect();
+        let cfg = RunConfig {
+            max_rounds: rounds,
+            eval_every: rounds,
+            network: NetworkConfig::gbps40(),
+            label: name.into(),
+            ..Default::default()
+        };
+        let mut e = StradsEngine::new(app, states, &cfg);
+        let res = e.run(&cfg);
+        rows.push(vec![
+            name.to_string(),
+            if res.final_objective.is_finite() {
+                format!("{:.4}", res.final_objective)
+            } else {
+                "DIVERGED".into()
+            },
+            e.app().nnz().to_string(),
+        ]);
+    }
+    common::print_table(
+        &format!("Ablation: Lasso schedule ingredients (J={j}, U={u}, {rounds} rounds)"),
+        &["variant", "final objective", "nnz"],
+        &rows,
+    );
+}

@@ -1,0 +1,175 @@
+"""L1 performance analysis: VMEM footprint + MXU utilization estimates.
+
+interpret=True gives CPU-numpy execution, so TPU performance must be
+*estimated structurally* from each kernel's BlockSpec tiling (DESIGN.md
+§Perf).  This module computes, per kernel and per canonical shape config:
+
+  * VMEM bytes resident per grid step (inputs + outputs + accumulators),
+    checked against the ~16 MiB/core budget;
+  * FLOPs per grid step and the fraction issued on the MXU (matmul) vs the
+    VPU (elementwise);
+  * an MXU utilization estimate: how full the 128x128 systolic array is for
+    the kernel's contraction shapes;
+  * HBM<->VMEM traffic per step and the resulting arithmetic intensity
+    (FLOP/byte), placing the kernel on the roofline.
+
+Run:  cd python && python -m compile.analysis
+"""
+
+from dataclasses import dataclass
+
+from compile import shapes
+
+F32 = 4
+MXU_DIM = 128  # TPU systolic array edge
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes/core (v4-class)
+
+
+@dataclass
+class KernelProfile:
+    name: str
+    grid_steps: int
+    vmem_bytes_per_step: int
+    flops_per_step: float
+    mxu_flops_per_step: float
+    hbm_bytes_per_step: int
+    mxu_m: int  # contraction tile dims as seen by the MXU
+    mxu_n: int
+    mxu_k: int
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes_per_step / VMEM_BUDGET
+
+    @property
+    def mxu_fraction(self) -> float:
+        """Share of FLOPs eligible for the MXU."""
+        if self.flops_per_step == 0:
+            return 0.0
+        return self.mxu_flops_per_step / self.flops_per_step
+
+    @property
+    def mxu_utilization(self) -> float:
+        """How full the 128x128 array is for this contraction shape."""
+        fill_m = min(self.mxu_m, MXU_DIM) / MXU_DIM
+        fill_n = min(self.mxu_n, MXU_DIM) / MXU_DIM
+        return fill_m * fill_n
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        if self.hbm_bytes_per_step == 0:
+            return float("inf")
+        return self.flops_per_step / self.hbm_bytes_per_step
+
+
+def lasso_partials_profile() -> KernelProfile:
+    """lasso_cd._partials_kernel at canonical shapes.
+
+    Per step: X tile (TILE_N x U) + r tile (TILE_N,) + beta (U,) resident,
+    (U,) accumulator.  corr = X^T r is a (U x TILE_N) @ (TILE_N,) matvec on
+    the MXU; the column-norm term is VPU elementwise.
+    """
+    tn, u = shapes.LASSO_TILE_N, shapes.LASSO_U
+    vmem = (tn * u + tn + u + u) * F32
+    mxu = 2.0 * tn * u  # X^T r
+    vpu = 2.0 * tn * u + 2.0 * u  # x*x reduce + fused axpy
+    hbm = (tn * u + tn) * F32  # streamed per step (beta/acc stay resident)
+    return KernelProfile(
+        name="lasso_partials",
+        grid_steps=shapes.LASSO_N_SHARD // tn,
+        vmem_bytes_per_step=vmem,
+        flops_per_step=mxu + vpu,
+        mxu_flops_per_step=mxu,
+        hbm_bytes_per_step=hbm,
+        mxu_m=u,
+        mxu_n=1,
+        mxu_k=tn,
+    )
+
+
+def lasso_residual_profile() -> KernelProfile:
+    """lasso_cd._residual_kernel: r = y - X beta, (TILE_N x J) @ (J,)."""
+    tn, j = shapes.LASSO_TILE_N, shapes.LASSO_J
+    vmem = (tn * j + tn + j + tn) * F32
+    mxu = 2.0 * tn * j
+    vpu = tn
+    hbm = (tn * j + tn + tn) * F32
+    return KernelProfile(
+        name="lasso_residual",
+        grid_steps=shapes.LASSO_N_SHARD // tn,
+        vmem_bytes_per_step=vmem,
+        flops_per_step=mxu + vpu,
+        mxu_flops_per_step=mxu,
+        hbm_bytes_per_step=hbm,
+        mxu_m=tn,
+        mxu_n=1,
+        mxu_k=j,
+    )
+
+
+def mf_block_stats_profile() -> KernelProfile:
+    """mf_cd._block_stats_kernel: resid^T wk + mask^T wk² over a user tile."""
+    tn, m = shapes.MF_TILE_N, shapes.MF_M
+    vmem = (2 * tn * m + tn + 2 * m) * F32
+    mxu = 2.0 * tn * m * 2  # two (M x TILE_N)@(TILE_N,) contractions
+    vpu = tn + 2.0 * m
+    hbm = (2 * tn * m + tn) * F32
+    return KernelProfile(
+        name="mf_block_stats",
+        grid_steps=shapes.MF_N_SHARD // tn,
+        vmem_bytes_per_step=vmem,
+        flops_per_step=mxu + vpu,
+        mxu_flops_per_step=mxu,
+        hbm_bytes_per_step=hbm,
+        mxu_m=m,
+        mxu_n=1,
+        mxu_k=tn,
+    )
+
+
+def lda_tile_sample_profile() -> KernelProfile:
+    """lda_gibbs._gibbs_tile_kernel: (TILE_T x K) conditional + cumsum."""
+    tt, k = shapes.LDA_TILE_T, shapes.LDA_K
+    vmem = (3 * tt * k + k + 2 * tt) * F32
+    vpu = 6.0 * tt * k + tt * k  # conditional arith + cumsum + compare
+    hbm = (2 * tt * k + k + tt + tt) * F32
+    return KernelProfile(
+        name="lda_tile_sample",
+        grid_steps=shapes.LDA_T // tt,
+        vmem_bytes_per_step=vmem,
+        flops_per_step=vpu,
+        mxu_flops_per_step=0.0,  # pure VPU kernel
+        hbm_bytes_per_step=hbm,
+        mxu_m=0,
+        mxu_n=0,
+        mxu_k=0,
+    )
+
+
+ALL_PROFILES = [
+    lasso_partials_profile,
+    lasso_residual_profile,
+    mf_block_stats_profile,
+    lda_tile_sample_profile,
+]
+
+
+def report() -> str:
+    lines = [
+        f"{'kernel':<18} {'grid':>5} {'VMEM/step':>11} {'%budget':>8} "
+        f"{'FLOP/step':>11} {'MXU%':>6} {'MXUfill':>8} {'AI(F/B)':>8}",
+        "-" * 84,
+    ]
+    for make in ALL_PROFILES:
+        p = make()
+        lines.append(
+            f"{p.name:<18} {p.grid_steps:>5} "
+            f"{p.vmem_bytes_per_step:>10,}B {p.vmem_fraction:>7.1%} "
+            f"{p.flops_per_step:>11,.0f} {p.mxu_fraction:>6.0%} "
+            f"{p.mxu_utilization:>8.1%} {p.arithmetic_intensity:>8.2f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

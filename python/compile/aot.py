@@ -1,0 +1,199 @@
+"""AOT lowering: L2 graphs (+L1 pallas kernels inside) -> HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is lowered at the canonical shapes in shapes.py and described
+in artifacts/manifest.txt, a line-based format the rust runtime parses:
+
+    artifact <name>
+    file <name>.hlo.txt
+    in <param> <dtype> <d0,d1|->      # '-' marks a scalar
+    out <name> <dtype> <dims|->
+    end
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model, shapes
+from compile.kernels import lda_gibbs  # noqa: F401  (re-export for tests)
+
+
+def to_hlo_text(lowered):
+    """Convert a jax lowering to XLA HLO text via stablehlo (return_tuple so
+    the rust side always unwraps a tuple, matching the reference wiring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dims(shape):
+    return ",".join(str(d) for d in shape) if shape else "-"
+
+
+class Artifact:
+    def __init__(self, name, fn, in_specs, out_specs, meta=None):
+        self.name = name
+        self.fn = fn
+        self.in_specs = in_specs          # [(param, ShapeDtypeStruct)]
+        self.out_specs = out_specs        # [(name, ShapeDtypeStruct)]
+        self.meta = meta or {}
+
+    def lower(self):
+        return to_hlo_text(jax.jit(self.fn).lower(
+            *[s for _, s in self.in_specs]))
+
+    def manifest_lines(self):
+        lines = [f"artifact {self.name}", f"file {self.name}.hlo.txt"]
+        for pname, s in self.in_specs:
+            lines.append(f"in {pname} {s.dtype.name} {_dims(s.shape)}")
+        for oname, s in self.out_specs:
+            lines.append(f"out {oname} {s.dtype.name} {_dims(s.shape)}")
+        for k, v in self.meta.items():
+            lines.append(f"meta {k} {v}")
+        lines.append("end")
+        return lines
+
+
+def build_artifacts():
+    s = shapes
+    f32, i32 = jnp.float32, jnp.int32
+    arts = []
+
+    # ------------------------------------------------------------ Lasso --
+    arts.append(Artifact(
+        "lasso_push", model.lasso_push,
+        [("x_sel", _spec((s.LASSO_N_SHARD, s.LASSO_U))),
+         ("r", _spec((s.LASSO_N_SHARD,))),
+         ("beta_sel", _spec((s.LASSO_U,)))],
+        [("z", _spec((s.LASSO_U,)))],
+        meta={"n_shard": s.LASSO_N_SHARD, "u": s.LASSO_U}))
+    arts.append(Artifact(
+        "lasso_residual", model.lasso_residual,
+        [("x", _spec((s.LASSO_N_SHARD, s.LASSO_J))),
+         ("y", _spec((s.LASSO_N_SHARD,))),
+         ("beta", _spec((s.LASSO_J,)))],
+        [("r", _spec((s.LASSO_N_SHARD,)))],
+        meta={"j": s.LASSO_J}))
+    arts.append(Artifact(
+        "lasso_residual_update", model.lasso_residual_update,
+        [("r", _spec((s.LASSO_N_SHARD,))),
+         ("x_sel", _spec((s.LASSO_N_SHARD, s.LASSO_U))),
+         ("delta_sel", _spec((s.LASSO_U,)))],
+        [("r", _spec((s.LASSO_N_SHARD,)))]))
+    arts.append(Artifact(
+        "lasso_objective", model.lasso_objective,
+        [("r", _spec((s.LASSO_N_SHARD,))),
+         ("beta", _spec((s.LASSO_J,))),
+         ("lam", _spec(()))],
+        [("obj", _spec(()))]))
+
+    # --------------------------------------------------------------- MF --
+    mf_in = [("a_blk", _spec((s.MF_N_SHARD, s.MF_M))),
+             ("mask", _spec((s.MF_N_SHARD, s.MF_M))),
+             ("w", _spec((s.MF_N_SHARD, s.MF_K))),
+             ("h", _spec((s.MF_K, s.MF_M))),
+             ("k", _spec((), i32))]
+    arts.append(Artifact(
+        "mf_push", model.mf_push, mf_in,
+        [("a", _spec((s.MF_M,))), ("b", _spec((s.MF_M,)))],
+        meta={"n": s.MF_N_SHARD, "m": s.MF_M, "k_rank": s.MF_K}))
+    arts.append(Artifact(
+        "mf_push_w", model.mf_push_w, mf_in,
+        [("a", _spec((s.MF_N_SHARD,))), ("b", _spec((s.MF_N_SHARD,)))]))
+    # note: the reg term is added coordinator-side, so lam is not an input
+    # (XLA would dead-code-eliminate the parameter and break the call ABI)
+    mf_obj = lambda a_blk, mask, w, h: model.mf_objective(  # noqa: E731
+        a_blk, mask, w, h, 0.0)
+    arts.append(Artifact(
+        "mf_objective", mf_obj,
+        [("a_blk", _spec((s.MF_N_SHARD, s.MF_M))),
+         ("mask", _spec((s.MF_N_SHARD, s.MF_M))),
+         ("w", _spec((s.MF_N_SHARD, s.MF_K))),
+         ("h", _spec((s.MF_K, s.MF_M)))],
+        [("obj", _spec(()))]))
+
+    # -------------------------------------------------------------- LDA --
+    lda_fn = functools.partial(
+        model.lda_push, alpha=s.LDA_ALPHA, gamma=s.LDA_GAMMA,
+        v_global=s.LDA_V_GLOBAL)
+    arts.append(Artifact(
+        "lda_push", lda_fn,
+        [("doc_ids", _spec((s.LDA_T,), i32)),
+         ("word_ids", _spec((s.LDA_T,), i32)),
+         ("z", _spec((s.LDA_T,), i32)),
+         ("u", _spec((s.LDA_T,))),
+         ("d_tab", _spec((s.LDA_ND, s.LDA_K))),
+         ("b_tab", _spec((s.LDA_VS, s.LDA_K))),
+         ("s", _spec((s.LDA_K,)))],
+        [("z_new", _spec((s.LDA_T,), i32)),
+         ("d_tab", _spec((s.LDA_ND, s.LDA_K))),
+         ("b_tab", _spec((s.LDA_VS, s.LDA_K))),
+         ("s", _spec((s.LDA_K,)))],
+        meta={"t": s.LDA_T, "nd": s.LDA_ND, "vs": s.LDA_VS,
+              "k": s.LDA_K, "v_global": s.LDA_V_GLOBAL,
+              "alpha": s.LDA_ALPHA, "gamma": s.LDA_GAMMA}))
+    tile_fn = functools.partial(
+        model.lda_tile_push, alpha=s.LDA_ALPHA, gamma=s.LDA_GAMMA,
+        v_global=s.LDA_V_GLOBAL)
+    arts.append(Artifact(
+        "lda_tile_push", tile_fn,
+        [("b_rows", _spec((s.LDA_T, s.LDA_K))),
+         ("d_rows", _spec((s.LDA_T, s.LDA_K))),
+         ("s", _spec((s.LDA_K,))),
+         ("u", _spec((s.LDA_T,)))],
+        [("z", _spec((s.LDA_T,), i32))]))
+    loglik_fn = lambda b_tab, s_sum: model.lda_loglik(  # noqa: E731
+        None, b_tab, s_sum, s.LDA_ALPHA, s.LDA_GAMMA, s.LDA_V_GLOBAL)
+    arts.append(Artifact(
+        "lda_loglik", loglik_fn,
+        [("b_tab", _spec((s.LDA_VS, s.LDA_K))),
+         ("s", _spec((s.LDA_K,)))],
+        [("ll", _spec(()))]))
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.txt")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = []
+    for art in build_artifacts():
+        manifest.extend(art.manifest_lines())
+        if only is not None and art.name not in only:
+            continue
+        text = art.lower()
+        path = os.path.join(args.out, f"{art.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {art.name:24s} -> {path}  ({len(text)} chars)",
+              file=sys.stderr)
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: LDA collapsed-Gibbs conditional + inverse-CDF sampling.
+
+The inner computation of STRADS LDA **push** (paper §3.1, function f_1) is,
+for a token (d, w) with current tables D, B and topic-column sums s,
+
+    p_k ∝ (gamma + B[w,k]) / (V*gamma + s_k) * (alpha + D[d,k])
+
+followed by a categorical draw from p.  This kernel evaluates that for a
+*tile* of tokens at once — the rows of B and D are pre-gathered per token so
+the kernel body is a dense (TILE_T x K) vectorized block (the paper's
+per-token scalar loop, restructured for the VPU/MXU; see DESIGN.md
+§Hardware-Adaptation).  Sampling is inverse-CDF against caller-supplied
+uniforms, so the kernel is deterministic and replayable.
+
+Used for the tile-parallel sampling variant and kernel-level benches; the
+sequential exact sweep lives in the L2 scan graph (model.lda_push).
+
+VMEM per step at TILE_T=128, K=64, f32: 3*128*64*4 + 64*4 + 2*128*4 ≈ 99 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gibbs_tile_kernel(alpha, gamma, vgamma, b_rows_ref, d_rows_ref, s_ref,
+                       u_ref, z_ref):
+    b_rows = b_rows_ref[...]          # (TILE_T, K)
+    d_rows = d_rows_ref[...]          # (TILE_T, K)
+    s = s_ref[...]                    # (K,)
+    u = u_ref[...]                    # (TILE_T,)
+    w = (gamma + b_rows) / (vgamma + s) * (alpha + d_rows)
+    cdf = jnp.cumsum(w, axis=-1)
+    total = cdf[:, -1:]
+    z_ref[...] = jnp.sum(cdf < u[:, None] * total, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "gamma", "v_global", "tile_t"))
+def lda_tile_sample(b_rows, d_rows, s, u, *, alpha, gamma, v_global,
+                    tile_t=128):
+    """Sample new topics for a tile of tokens.
+
+    Args:
+      b_rows: (T, K) f32 — B[w_t, :] gathered per token (decremented counts).
+      d_rows: (T, K) f32 — D[d_t, :] gathered per token.
+      s:      (K,)   f32 — topic column sums (decremented).
+      u:      (T,)   f32 — uniforms in [0, 1).
+      alpha, gamma, v_global: smoothing hyperparameters (static).
+
+    Returns:
+      (T,) i32 sampled topic indices.
+    """
+    t, k = b_rows.shape
+    assert t % tile_t == 0
+    grid = (t // tile_t,)
+    kern = functools.partial(
+        _gibbs_tile_kernel, alpha, gamma, v_global * gamma)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((tile_t,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile_t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+        interpret=True,
+    )(b_rows, d_rows, s, u)

@@ -1,0 +1,99 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and L2 push graphs.
+
+These implement the paper's update equations directly (eqs. 3, 5, 6 and the
+collapsed-Gibbs conditional of section 3.1) with no tiling, no pallas, no
+scan tricks — the simplest possible transcription.  Every kernel and every
+L2 graph is pytest/hypothesis-compared against these.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- Lasso ----
+def lasso_partials_ref(x_sel, r, beta_sel):
+    """Partial CD correlations for the selected columns (paper eq. 6).
+
+    z_j = x_j^T r + (x_j^T x_j) beta_j  over this worker's sample shard,
+    where r = y - X beta is the shard residual.  Summing z_j over workers
+    reconstructs  x_j^T y - sum_{k != j} x_j^T x_k beta_k,  the argument of
+    the soft-threshold in eq. (5).
+    """
+    return x_sel.T @ r + jnp.sum(x_sel * x_sel, axis=0) * beta_sel
+
+
+def lasso_residual_ref(x, y, beta):
+    """Shard residual r = y - X beta."""
+    return y - x @ beta
+
+
+def soft_threshold_ref(v, lam):
+    """S(v, lam) = sign(v) * max(|v| - lam, 0) (paper's soft-thresholding)."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - lam, 0.0)
+
+
+# ------------------------------------------------------------------- MF ----
+def mf_block_stats_ref(a_blk, mask, w, h, k):
+    """CCD numerator/denominator partial sums for row k of H (paper eq. 3).
+
+    For each item column j over this worker's user-row shard:
+      b_j = sum_{i in Omega_j} w_ik^2
+      a_j = sum_{i in Omega_j} (r_ij + w_ik h_kj) w_ik
+          = sum_i R_ij w_ik + h_kj b_j          with R = mask * (A - W H)
+    Returns (a, b); the pull step commits h_kj <- sum_p a / (lam + sum_p b).
+    """
+    resid = mask * (a_blk - w @ h)
+    wk = w[:, k]
+    b = mask.T @ (wk * wk)
+    a = resid.T @ wk + h[k, :] * b
+    return a, b
+
+
+def mf_objective_ref(a_blk, mask, w, h, lam):
+    """Regularized squared error (paper eq. 2) on one shard."""
+    resid = mask * (a_blk - w @ h)
+    return jnp.sum(resid * resid) + lam * (jnp.sum(w * w) + jnp.sum(h * h))
+
+
+# ------------------------------------------------------------------ LDA ----
+def lda_conditional_ref(b_rows, d_rows, s, alpha, gamma, v_global):
+    """Collapsed-Gibbs conditional P(z=k | ...) for a batch of tokens.
+
+    p_k ∝ (gamma + B[w,k]) / (V*gamma + s_k) * (alpha + D[d,k])
+    b_rows/d_rows are the B/D table rows already gathered for each token.
+    Returns unnormalized weights, shape (T, K).
+    """
+    return (gamma + b_rows) / (v_global * gamma + s) * (alpha + d_rows)
+
+
+def lda_sample_ref(weights, u):
+    """Inverse-CDF categorical sampling given uniforms u in [0,1)."""
+    cdf = jnp.cumsum(weights, axis=-1)
+    total = cdf[..., -1:]
+    return jnp.sum(cdf < u[..., None] * total, axis=-1).astype(jnp.int32)
+
+
+def lda_gibbs_sweep_ref(doc_ids, word_ids, z, u, d_tab, b_tab, s,
+                        alpha, gamma, v_global):
+    """Exact sequential collapsed-Gibbs sweep, numpy reference.
+
+    Mirrors the L2 scan graph: decrement -> conditional -> sample ->
+    increment, token by token, in order.
+    """
+    d_tab = np.array(d_tab, dtype=np.float32).copy()
+    b_tab = np.array(b_tab, dtype=np.float32).copy()
+    s = np.array(s, dtype=np.float32).copy()
+    z = np.array(z).copy()
+    for t in range(len(doc_ids)):
+        d, w, zi = int(doc_ids[t]), int(word_ids[t]), int(z[t])
+        d_tab[d, zi] -= 1.0
+        b_tab[w, zi] -= 1.0
+        s[zi] -= 1.0
+        p = (gamma + b_tab[w]) / (v_global * gamma + s) * (alpha + d_tab[d])
+        cdf = np.cumsum(p)
+        znew = int(np.sum(cdf < float(u[t]) * cdf[-1]))
+        d_tab[d, znew] += 1.0
+        b_tab[w, znew] += 1.0
+        s[znew] += 1.0
+        z[t] = znew
+    return z.astype(np.int32), d_tab, b_tab, s

@@ -1,0 +1,133 @@
+"""L2: STRADS push/pull compute graphs for the three paper applications.
+
+These are the functions the rust coordinator executes on its hot path (via
+the AOT artifacts); they compose the L1 Pallas kernels into the exact
+per-round computation each worker performs inside **push**, plus the
+objective graphs used for convergence monitoring.
+
+All functions here are pure, fixed-shape, jit-able, and are lowered once by
+aot.py.  Python never runs at serving time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import lasso_cd, lda_gibbs, mf_cd
+
+
+# ---------------------------------------------------------------- Lasso ----
+def lasso_push(x_sel, r, beta_sel):
+    """Worker push for the scheduled coefficient set (paper eq. 6).
+
+    Returns z (U,) — partial correlations to be summed across workers and
+    soft-thresholded by pull.
+    """
+    return (lasso_cd.lasso_partials(x_sel, r, beta_sel),)
+
+
+def lasso_residual(x, y, beta):
+    """Full shard residual recompute r = y - X beta (used at round 0 and
+    for periodic drift correction)."""
+    return (lasso_cd.lasso_residual(x, y, beta),)
+
+
+def lasso_residual_update(r, x_sel, delta_sel):
+    """Incremental residual maintenance after pull commits delta = beta_new -
+    beta_old on the scheduled set:  r <- r - X_sel delta."""
+    return (r - x_sel @ delta_sel,)
+
+
+def lasso_objective(r, beta, lam):
+    """0.5 ||r||^2 + lam ||beta||_1 on one shard (loss part is shard-local;
+    the l1 term is added once by the coordinator)."""
+    return (0.5 * jnp.sum(r * r) + lam * jnp.sum(jnp.abs(beta)),)
+
+
+# ------------------------------------------------------------------- MF ----
+def mf_push(a_blk, mask, w, h, k):
+    """Worker push for factor row k of H over this user-row shard.
+
+    Computes the masked residual once, then the CCD partial sums via the
+    pallas kernel.  Returns (a, b), each (M,):
+      h_kj <- sum_p a_j / (lam + sum_p b_j)   committed by pull.
+    """
+    resid = mask * (a_blk - w @ h)
+    wk = jnp.take(w, k, axis=1)
+    a_corr, b = mf_cd.mf_block_stats(resid, mask, wk)
+    a = a_corr + jnp.take(h, k, axis=0) * b
+    return a, b
+
+
+def mf_push_w(a_blk, mask, w, h, k):
+    """Symmetric push for factor column k of W over an item-column shard.
+
+    Uses the same kernel on the transposed problem: rows of W play the role
+    of columns of H.
+    """
+    resid = mask * (a_blk - w @ h)
+    hk = jnp.take(h, k, axis=0)
+    a_corr, b = mf_cd.mf_block_stats(resid.T, mask.T, hk)
+    a = a_corr + jnp.take(w, k, axis=1) * b
+    return a, b
+
+
+def mf_objective(a_blk, mask, w, h, lam):
+    """Paper eq. 2 on one shard (reg term added once by the coordinator)."""
+    resid = mask * (a_blk - w @ h)
+    return (jnp.sum(resid * resid),)
+
+
+# ------------------------------------------------------------------ LDA ----
+@functools.partial(jax.jit, static_argnames=("alpha", "gamma", "v_global"))
+def lda_push(doc_ids, word_ids, z, u, d_tab, b_tab, s, *, alpha, gamma,
+             v_global):
+    """Exact sequential collapsed-Gibbs sweep over a worker's token slice.
+
+    The scan carries (D, B, s); each step decrements the current assignment,
+    evaluates the collapsed conditional (paper §3.1), draws by inverse CDF
+    against the supplied uniform, and re-increments.  This is f_1/f_2 of the
+    paper's pseudocode fused into one graph.
+
+    Shapes: doc_ids/word_ids/z/u are (T,); d_tab (ND, K); b_tab (VS, K) is
+    the rotation word-slice; s (K,) is the worker's local copy of the global
+    topic sums.  Returns (z_new, d_tab, b_tab, s).
+    """
+    vgamma = v_global * gamma
+
+    def step(carry, tok):
+        d_t, b_t, s_t = carry
+        d, w, zi, ui = tok
+        d_t = d_t.at[d, zi].add(-1.0)
+        b_t = b_t.at[w, zi].add(-1.0)
+        s_t = s_t.at[zi].add(-1.0)
+        p = (gamma + b_t[w]) / (vgamma + s_t) * (alpha + d_t[d])
+        cdf = jnp.cumsum(p)
+        znew = jnp.sum(cdf < ui * cdf[-1]).astype(jnp.int32)
+        d_t = d_t.at[d, znew].add(1.0)
+        b_t = b_t.at[w, znew].add(1.0)
+        s_t = s_t.at[znew].add(1.0)
+        return (d_t, b_t, s_t), znew
+
+    (d_tab, b_tab, s), z_new = lax.scan(
+        step, (d_tab, b_tab, s), (doc_ids, word_ids, z, u))
+    return z_new, d_tab, b_tab, s
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "gamma", "v_global"))
+def lda_tile_push(b_rows, d_rows, s, u, *, alpha, gamma, v_global):
+    """Tile-parallel sampling variant (pallas kernel): tokens in the tile
+    are treated as conditionally independent (disjoint words/docs within a
+    worker round — the same approximation STRADS makes *across* workers).
+    """
+    return (lda_gibbs.lda_tile_sample(
+        b_rows, d_rows, s, u, alpha=alpha, gamma=gamma, v_global=v_global),)
+
+
+def lda_loglik(d_tab, b_tab, s, alpha, gamma, v_global):
+    """Collapsed log-likelihood surrogate (word term) used as the
+    convergence objective: sum over nonzero counts of n*log(phi_hat)."""
+    phi = (b_tab + gamma) / (s + v_global * gamma)
+    return (jnp.sum(b_tab * jnp.log(phi)),)

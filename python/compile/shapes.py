@@ -1,0 +1,32 @@
+"""Canonical AOT shape configurations shared by aot.py and the test suite.
+
+Every artifact is lowered at a fixed shape (AOT requires static shapes); the
+rust coordinator reads these out of artifacts/manifest.txt and pads/partitions
+its per-round work to match.  Keep the numbers here modest: pallas interpret
+mode inlines each grid step into the HLO, so grids are kept <= 16 steps.
+"""
+
+# ---------------------------------------------------------------- Lasso ----
+# Worker shard: N_SHARD sample rows.  A round updates exactly U coefficients.
+LASSO_N_SHARD = 2048  # rows per worker shard
+LASSO_TILE_N = 256  # pallas tile over the sample axis (8 grid steps)
+LASSO_U = 64  # coefficients scheduled per round (padded by rust)
+LASSO_J = 1024  # dense feature count for the residual artifact
+
+# ------------------------------------------------------------------- MF ----
+MF_N_SHARD = 256  # user rows per worker shard
+MF_TILE_N = 64  # pallas tile over user rows (4 grid steps)
+MF_M = 512  # item columns
+MF_K = 64  # factorization rank
+
+# ------------------------------------------------------------------ LDA ----
+LDA_T = 512  # tokens Gibbs-swept per push call (sequential scan)
+LDA_ND = 128  # distinct local documents in a push slice
+LDA_VS = 256  # word-slice size (rotation subset V_a, local ids)
+LDA_K = 64  # topics
+LDA_V_GLOBAL = 4096  # global vocabulary size (normalizer V*gamma)
+LDA_ALPHA = 0.1  # document-topic smoothing
+LDA_GAMMA = 0.01  # word-topic smoothing
+
+# pallas tile sampler (conditionally-independent token tile)
+LDA_TILE_T = 128  # tokens per tile sampling call

@@ -1,0 +1,15 @@
+"""Shared pytest fixtures/settings for the kernel + model test suite."""
+
+import os
+import sys
+
+# Allow `import compile.*` when pytest is invoked from python/ or the repo
+# root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Pallas interpret-mode compiles are slow; keep example counts sane and
+# disable the per-example deadline globally.
+settings.register_profile("kernels", max_examples=20, deadline=None)
+settings.load_profile("kernels")

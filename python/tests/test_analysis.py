@@ -1,0 +1,41 @@
+"""L1 kernel structural profiles: VMEM budgets and tiling sanity."""
+
+from compile import analysis, shapes
+
+
+def test_all_kernels_fit_vmem_budget():
+    for make in analysis.ALL_PROFILES:
+        p = make()
+        assert p.vmem_bytes_per_step < analysis.VMEM_BUDGET, (
+            f"{p.name} VMEM {p.vmem_bytes_per_step} exceeds budget"
+        )
+        # and with comfortable double-buffering headroom (<50%)
+        assert p.vmem_fraction < 0.5, f"{p.name}: {p.vmem_fraction:.1%}"
+
+
+def test_grid_steps_cover_shard_exactly():
+    p = analysis.lasso_partials_profile()
+    assert p.grid_steps * shapes.LASSO_TILE_N == shapes.LASSO_N_SHARD
+    m = analysis.mf_block_stats_profile()
+    assert m.grid_steps * shapes.MF_TILE_N == shapes.MF_N_SHARD
+
+
+def test_matmul_kernels_are_mxu_dominated():
+    for make in (analysis.lasso_partials_profile,
+                 analysis.lasso_residual_profile,
+                 analysis.mf_block_stats_profile):
+        p = make()
+        assert p.mxu_fraction > 0.4, f"{p.name}: {p.mxu_fraction}"
+
+
+def test_lda_sampler_is_vpu_kernel():
+    p = analysis.lda_tile_sample_profile()
+    assert p.mxu_fraction == 0.0
+    assert p.flops_per_step > 0
+
+
+def test_report_renders():
+    text = analysis.report()
+    assert "lasso_partials" in text
+    assert "VMEM/step" in text
+    assert len(text.splitlines()) >= 6

@@ -1,0 +1,98 @@
+"""AOT layer: manifest structure, artifact files, and shape agreement."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, shapes
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+
+
+def _manifest_entries():
+    arts = {}
+    cur = None
+    path = os.path.join(ART_DIR, "manifest.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            if parts[0] == "artifact":
+                cur = {"name": parts[1], "in": [], "out": [], "meta": {}}
+                arts[parts[1]] = cur
+            elif parts[0] == "file":
+                cur["file"] = parts[1]
+            elif parts[0] == "in":
+                cur["in"].append((parts[1], parts[2], parts[3]))
+            elif parts[0] == "out":
+                cur["out"].append((parts[1], parts[2], parts[3]))
+            elif parts[0] == "meta":
+                cur["meta"][parts[1]] = parts[2]
+    return arts
+
+
+EXPECTED = ["lasso_push", "lasso_residual", "lasso_residual_update",
+            "lasso_objective", "mf_push", "mf_push_w", "mf_objective",
+            "lda_push", "lda_tile_push", "lda_loglik"]
+
+
+def test_manifest_lists_all_artifacts():
+    arts = _manifest_entries()
+    for name in EXPECTED:
+        assert name in arts, f"missing artifact {name}"
+
+
+def test_artifact_files_exist_and_are_hlo_text():
+    arts = _manifest_entries()
+    for name, ent in arts.items():
+        path = os.path.join(ART_DIR, ent["file"])
+        assert os.path.exists(path), path
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name}: not HLO text"
+
+
+def test_manifest_shapes_match_build_specs():
+    arts = _manifest_entries()
+    for art in aot.build_artifacts():
+        ent = arts[art.name]
+        assert len(ent["in"]) == len(art.in_specs)
+        for (pname, dt, dims), (bname, spec) in zip(ent["in"],
+                                                    art.in_specs):
+            assert pname == bname
+            assert dt == spec.dtype.name
+            want = ",".join(str(d) for d in spec.shape) if spec.shape else "-"
+            assert dims == want
+        assert len(ent["out"]) == len(art.out_specs)
+
+
+def test_lasso_push_shapes_are_canonical():
+    arts = _manifest_entries()
+    ent = arts["lasso_push"]
+    assert ent["in"][0][2] == f"{shapes.LASSO_N_SHARD},{shapes.LASSO_U}"
+    assert int(ent["meta"]["u"]) == shapes.LASSO_U
+
+
+def test_lda_push_meta_records_hyperparams():
+    arts = _manifest_entries()
+    meta = arts["lda_push"]["meta"]
+    assert float(meta["alpha"]) == shapes.LDA_ALPHA
+    assert float(meta["gamma"]) == shapes.LDA_GAMMA
+    assert int(meta["v_global"]) == shapes.LDA_V_GLOBAL
+
+
+def test_canonical_shape_lasso_push_runs():
+    """Run the canonical-shape graph end to end (what rust will execute)."""
+    from compile import model
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(
+        (shapes.LASSO_N_SHARD, shapes.LASSO_U)).astype(np.float32)
+    r = rng.standard_normal(shapes.LASSO_N_SHARD).astype(np.float32)
+    b = rng.standard_normal(shapes.LASSO_U).astype(np.float32)
+    (z,) = model.lasso_push(x, r, b)
+    assert np.asarray(z).shape == (shapes.LASSO_U,)
+    assert np.isfinite(np.asarray(z)).all()

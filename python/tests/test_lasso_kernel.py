@@ -1,0 +1,71 @@
+"""L1 lasso_cd pallas kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import lasso_cd
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# tile divisors of the sample axis we sweep over
+_NS = st.sampled_from([64, 128, 256, 512])
+_US = st.sampled_from([1, 4, 16, 64])
+_TILES = st.sampled_from([32, 64])
+
+
+@given(n=_NS, u=_US, tile=_TILES, seed=st.integers(0, 2**31 - 1))
+def test_partials_matches_ref(n, u, tile, seed):
+    rng = np.random.default_rng(seed)
+    x_sel, r, beta = _rand(rng, n, u), _rand(rng, n), _rand(rng, u)
+    got = lasso_cd.lasso_partials(x_sel, r, beta, tile_n=tile)
+    want = ref.lasso_partials_ref(x_sel, r, beta)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@given(n=_NS, j=st.sampled_from([8, 64, 256]), tile=_TILES,
+       seed=st.integers(0, 2**31 - 1))
+def test_residual_matches_ref(n, j, tile, seed):
+    rng = np.random.default_rng(seed)
+    x, y, beta = _rand(rng, n, j), _rand(rng, n), _rand(rng, j)
+    got = lasso_cd.lasso_residual(x, y, beta, tile_n=tile)
+    want = ref.lasso_residual_ref(x, y, beta)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_partials_zero_beta_is_pure_correlation():
+    rng = np.random.default_rng(0)
+    x_sel, r = _rand(rng, 128, 8), _rand(rng, 128)
+    z = lasso_cd.lasso_partials(x_sel, r, np.zeros(8, np.float32), tile_n=64)
+    assert_allclose(np.asarray(z), np.asarray(x_sel.T @ r), rtol=1e-4,
+                    atol=1e-4)
+
+
+def test_partials_unit_columns_recover_beta_plus_corr():
+    # With orthonormal-ish columns and r = 0, z_j = ||x_j||^2 beta_j.
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 256, 4)
+    x /= np.linalg.norm(x, axis=0, keepdims=True)
+    beta = _rand(rng, 4)
+    z = lasso_cd.lasso_partials(x, np.zeros(256, np.float32), beta,
+                                tile_n=64)
+    assert_allclose(np.asarray(z), beta, rtol=1e-4, atol=1e-4)
+
+
+def test_tile_must_divide_n():
+    with pytest.raises(AssertionError):
+        lasso_cd.lasso_partials(np.zeros((100, 4), np.float32),
+                                np.zeros(100, np.float32),
+                                np.zeros(4, np.float32), tile_n=64)
+
+
+def test_soft_threshold_ref_properties():
+    v = jnp.array([-3.0, -0.5, 0.0, 0.5, 3.0])
+    out = np.asarray(ref.soft_threshold_ref(v, 1.0))
+    assert_allclose(out, [-2.0, 0.0, 0.0, 0.0, 2.0])

@@ -1,0 +1,77 @@
+"""L1 lda_gibbs pallas tile sampler vs the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import lda_gibbs, ref
+
+ALPHA, GAMMA, VG = 0.1, 0.01, 1000
+
+
+def _counts(rng, *shape):
+    return rng.integers(0, 50, shape).astype(np.float32)
+
+
+@given(t=st.sampled_from([16, 64, 128]),
+       k=st.sampled_from([4, 16, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_tile_sample_matches_ref(t, k, seed):
+    rng = np.random.default_rng(seed)
+    b_rows, d_rows = _counts(rng, t, k), _counts(rng, t, k)
+    s = _counts(rng, k) + k  # keep strictly positive
+    u = rng.random(t).astype(np.float32)
+    got = lda_gibbs.lda_tile_sample(
+        b_rows, d_rows, s, u, alpha=ALPHA, gamma=GAMMA, v_global=VG,
+        tile_t=min(t, 16))
+    w = ref.lda_conditional_ref(b_rows, d_rows, s, ALPHA, GAMMA, VG)
+    want = ref.lda_sample_ref(w, u)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_samples_in_range():
+    rng = np.random.default_rng(3)
+    t, k = 64, 8
+    z = lda_gibbs.lda_tile_sample(
+        _counts(rng, t, k), _counts(rng, t, k), _counts(rng, k) + 1,
+        rng.random(t).astype(np.float32),
+        alpha=ALPHA, gamma=GAMMA, v_global=VG, tile_t=16)
+    z = np.asarray(z)
+    assert z.min() >= 0 and z.max() < k
+
+
+def test_peaked_distribution_selects_mode():
+    # One topic dominating the conditional must win for all u in (0,1).
+    t, k = 16, 8
+    b_rows = np.full((t, k), 1e-3, np.float32)
+    d_rows = np.full((t, k), 1e-3, np.float32)
+    b_rows[:, 5] = 1e4
+    d_rows[:, 5] = 1e4
+    s = np.ones(k, np.float32)
+    for u_val in (0.05, 0.5, 0.95):
+        u = np.full(t, u_val, np.float32)
+        z = lda_gibbs.lda_tile_sample(
+            b_rows, d_rows, s, u, alpha=ALPHA, gamma=GAMMA, v_global=VG,
+            tile_t=16)
+        assert (np.asarray(z) == 5).all()
+
+
+def test_empirical_distribution_tracks_conditional():
+    # Frequencies over many uniforms approximate the conditional probs.
+    rng = np.random.default_rng(11)
+    k = 4
+    b_row = np.array([5.0, 1.0, 1.0, 1.0], np.float32)
+    d_row = np.array([1.0, 1.0, 1.0, 5.0], np.float32)
+    s = np.full(k, 20.0, np.float32)
+    n = 4096
+    b_rows = np.tile(b_row, (n, 1))
+    d_rows = np.tile(d_row, (n, 1))
+    u = rng.random(n).astype(np.float32)
+    z = np.asarray(lda_gibbs.lda_tile_sample(
+        b_rows, d_rows, s, u, alpha=ALPHA, gamma=GAMMA, v_global=VG,
+        tile_t=128))
+    w = np.asarray(ref.lda_conditional_ref(
+        b_row, d_row, s, ALPHA, GAMMA, VG))
+    p = w / w.sum()
+    freq = np.bincount(z, minlength=k) / n
+    assert_allclose(freq, p, atol=0.03)

@@ -1,0 +1,79 @@
+"""Shape-sweep hypothesis tests for the lda_push scan graph: the exact
+sequential Gibbs sweep must match the numpy reference at every shape
+combination, not just the canonical AOT shapes."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+ALPHA, GAMMA = 0.1, 0.01
+
+
+def _problem(rng, t, nd, vs, k):
+    doc_ids = rng.integers(0, nd, t).astype(np.int32)
+    word_ids = rng.integers(0, vs, t).astype(np.int32)
+    z = rng.integers(0, k, t).astype(np.int32)
+    u = rng.random(t).astype(np.float32)
+    d_tab = np.zeros((nd, k), np.float32)
+    b_tab = np.zeros((vs, k), np.float32)
+    for i in range(t):
+        d_tab[doc_ids[i], z[i]] += 1
+        b_tab[word_ids[i], z[i]] += 1
+    return doc_ids, word_ids, z, u, d_tab, b_tab, b_tab.sum(axis=0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(t=st.sampled_from([1, 7, 32, 100]),
+       nd=st.sampled_from([1, 4, 16]),
+       vs=st.sampled_from([2, 8, 32]),
+       k=st.sampled_from([2, 5, 16]),
+       vg=st.sampled_from([64, 1024]),
+       seed=st.integers(0, 2**31 - 1))
+def test_scan_sweep_matches_reference_across_shapes(t, nd, vs, k, vg, seed):
+    rng = np.random.default_rng(seed)
+    doc_ids, word_ids, z, u, d_tab, b_tab, s = _problem(rng, t, nd, vs, k)
+    z_new, d_new, b_new, s_new = model.lda_push(
+        doc_ids, word_ids, z, u, d_tab, b_tab, s,
+        alpha=ALPHA, gamma=GAMMA, v_global=vg)
+    z_ref, d_ref, b_ref, s_ref = ref.lda_gibbs_sweep_ref(
+        doc_ids, word_ids, z, u, d_tab, b_tab, s, ALPHA, GAMMA, vg)
+    np.testing.assert_array_equal(np.asarray(z_new), z_ref)
+    assert_allclose(np.asarray(d_new), d_ref, atol=1e-4)
+    assert_allclose(np.asarray(b_new), b_ref, atol=1e-4)
+    assert_allclose(np.asarray(s_new), s_ref, atol=1e-4)
+
+
+def test_single_token_single_topic_degenerate():
+    # K=1: the only topic must always be resampled to itself
+    z_new, d_new, b_new, s_new = model.lda_push(
+        np.array([0], np.int32), np.array([0], np.int32),
+        np.array([0], np.int32), np.array([0.5], np.float32),
+        np.ones((1, 1), np.float32), np.ones((1, 1), np.float32),
+        np.ones(1, np.float32), alpha=ALPHA, gamma=GAMMA, v_global=16)
+    assert int(np.asarray(z_new)[0]) == 0
+    assert float(np.asarray(s_new)[0]) == 1.0
+
+
+def test_repeated_token_sequential_dependence():
+    # two tokens of the same word/doc: the second draw must see the
+    # first's update (sequential scan, not parallel)
+    rng = np.random.default_rng(0)
+    t, nd, vs, k = 2, 1, 1, 3
+    doc_ids = np.zeros(t, np.int32)
+    word_ids = np.zeros(t, np.int32)
+    z = np.array([0, 1], np.int32)
+    u = rng.random(t).astype(np.float32)
+    d_tab = np.zeros((nd, k), np.float32)
+    b_tab = np.zeros((vs, k), np.float32)
+    for i in range(t):
+        d_tab[0, z[i]] += 1
+        b_tab[0, z[i]] += 1
+    s = b_tab.sum(axis=0)
+    out = model.lda_push(doc_ids, word_ids, z, u, d_tab, b_tab, s,
+                         alpha=ALPHA, gamma=GAMMA, v_global=8)
+    z_ref, *_ = ref.lda_gibbs_sweep_ref(
+        doc_ids, word_ids, z, u, d_tab, b_tab, s, ALPHA, GAMMA, 8)
+    np.testing.assert_array_equal(np.asarray(out[0]), z_ref)

@@ -1,0 +1,186 @@
+"""L2 push/pull graphs vs references: shapes, numerics, and the STRADS
+push→pull contract (summing worker partials reconstructs the global update).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+ALPHA, GAMMA, VG = 0.1, 0.01, 512
+
+
+# ---------------------------------------------------------------- Lasso ----
+def test_lasso_push_pull_reconstructs_global_cd_update():
+    """Partition rows across P workers; summed pushes must equal the
+    single-machine CD argument x_j^T y - sum_{k!=j} x_j^T x_k beta_k."""
+    rng = np.random.default_rng(0)
+    n, j, u, p = 1024, 32, 4, 4  # 256-row shards match the kernel tile
+    x = rng.standard_normal((n, j)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=0, keepdims=True)  # standardized columns
+    y = rng.standard_normal(n).astype(np.float32)
+    beta = (rng.standard_normal(j) * (rng.random(j) < 0.3)).astype(np.float32)
+    sel = np.array([3, 11, 17, 29])
+
+    z_sum = np.zeros(u, np.float32)
+    rows = np.array_split(np.arange(n), p)
+    for rs in rows:
+        xs, ys = x[rs], y[rs]
+        (r,) = model.lasso_residual(xs, ys, beta)
+        (z,) = model.lasso_push(xs[:, sel], np.asarray(r), beta[sel])
+        z_sum += np.asarray(z)
+
+    want = x[:, sel].T @ y - (x[:, sel].T @ x) @ beta \
+        + (x[:, sel] * x[:, sel]).sum(0) * beta[sel]
+    assert_allclose(z_sum, want, rtol=1e-3, atol=1e-3)
+
+
+def test_lasso_residual_update_matches_recompute():
+    rng = np.random.default_rng(1)
+    n, j, u = 256, 16, 4
+    x = rng.standard_normal((n, j)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    beta = rng.standard_normal(j).astype(np.float32)
+    sel = np.array([1, 5, 9, 13])
+    (r0,) = model.lasso_residual(x, y, beta)
+    delta = rng.standard_normal(u).astype(np.float32)
+    beta2 = beta.copy()
+    beta2[sel] += delta
+    (r_inc,) = model.lasso_residual_update(np.asarray(r0), x[:, sel], delta)
+    (r_full,) = model.lasso_residual(x, y, beta2)
+    assert_allclose(np.asarray(r_inc), np.asarray(r_full), rtol=1e-3,
+                    atol=1e-3)
+
+
+def test_lasso_objective_decomposes():
+    rng = np.random.default_rng(2)
+    r = rng.standard_normal(128).astype(np.float32)
+    beta = rng.standard_normal(64).astype(np.float32)
+    lam = 0.3
+    (obj,) = model.lasso_objective(r, beta, np.float32(lam))
+    want = 0.5 * (r ** 2).sum() + lam * np.abs(beta).sum()
+    assert_allclose(float(obj), want, rtol=1e-4)
+
+
+# ------------------------------------------------------------------- MF ----
+@settings(max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mf_push_pull_equals_serial_ccd(seed):
+    """Row-sharded pushes summed in pull must equal the single-machine CCD
+    update (paper eq. 3)."""
+    rng = np.random.default_rng(seed)
+    n, m, k, p, lam = 64, 32, 4, 2, 0.05
+    w = rng.standard_normal((n, k)).astype(np.float32)
+    h = rng.standard_normal((k, m)).astype(np.float32)
+    mask = (rng.random((n, m)) < 0.4).astype(np.float32)
+    a = (w @ h + rng.standard_normal((n, m))).astype(np.float32) * mask
+    kk = int(rng.integers(0, k))
+
+    a_sum = np.zeros(m, np.float32)
+    b_sum = np.zeros(m, np.float32)
+    for rs in np.array_split(np.arange(n), p):
+        pa, pb = model.mf_push(a[rs], mask[rs], w[rs], h, np.int32(kk))
+        a_sum += np.asarray(pa)
+        b_sum += np.asarray(pb)
+    h_new = a_sum / (lam + b_sum)
+
+    a_ref, b_ref = ref.mf_block_stats_ref(a, mask, w, h, kk)
+    assert_allclose(h_new, np.asarray(a_ref) / (lam + np.asarray(b_ref)),
+                    rtol=2e-3, atol=2e-3)
+
+
+def test_mf_push_w_symmetry():
+    """mf_push_w on (A, W, H) must equal mf_push on the transposed problem."""
+    rng = np.random.default_rng(5)
+    n, m, k = 32, 16, 4
+    w = rng.standard_normal((n, k)).astype(np.float32)
+    h = rng.standard_normal((k, m)).astype(np.float32)
+    mask = (rng.random((n, m)) < 0.5).astype(np.float32)
+    a = (w @ h).astype(np.float32) * mask
+    kk = 2
+    aw, bw = model.mf_push_w(a, mask, w, h, np.int32(kk))
+    at, bt = model.mf_push(a.T, mask.T, h.T, w.T, np.int32(kk))
+    assert_allclose(np.asarray(aw), np.asarray(at), rtol=1e-3, atol=1e-3)
+    assert_allclose(np.asarray(bw), np.asarray(bt), rtol=1e-3, atol=1e-3)
+
+
+def test_mf_objective_matches_ref():
+    rng = np.random.default_rng(6)
+    n, m, k, lam = 32, 16, 4, 0.1
+    w = rng.standard_normal((n, k)).astype(np.float32)
+    h = rng.standard_normal((k, m)).astype(np.float32)
+    mask = (rng.random((n, m)) < 0.5).astype(np.float32)
+    a = (w @ h).astype(np.float32) * mask + mask
+    (obj,) = model.mf_objective(a, mask, w, h, np.float32(lam))
+    resid = mask * (a - w @ h)
+    assert_allclose(float(obj), (resid ** 2).sum(), rtol=1e-4)
+
+
+# ------------------------------------------------------------------ LDA ----
+def _lda_problem(rng, t, nd, vs, k):
+    doc_ids = rng.integers(0, nd, t).astype(np.int32)
+    word_ids = rng.integers(0, vs, t).astype(np.int32)
+    z = rng.integers(0, k, t).astype(np.int32)
+    u = rng.random(t).astype(np.float32)
+    # build consistent count tables from the assignments
+    d_tab = np.zeros((nd, k), np.float32)
+    b_tab = np.zeros((vs, k), np.float32)
+    for i in range(t):
+        d_tab[doc_ids[i], z[i]] += 1
+        b_tab[word_ids[i], z[i]] += 1
+    s = b_tab.sum(axis=0)
+    return doc_ids, word_ids, z, u, d_tab, b_tab, s
+
+
+@settings(max_examples=8)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lda_push_matches_sequential_reference(seed):
+    rng = np.random.default_rng(seed)
+    t, nd, vs, k = 64, 8, 16, 4
+    doc_ids, word_ids, z, u, d_tab, b_tab, s = _lda_problem(
+        rng, t, nd, vs, k)
+    z_new, d_new, b_new, s_new = model.lda_push(
+        doc_ids, word_ids, z, u, d_tab, b_tab, s,
+        alpha=ALPHA, gamma=GAMMA, v_global=VG)
+    z_ref, d_ref, b_ref, s_ref = ref.lda_gibbs_sweep_ref(
+        doc_ids, word_ids, z, u, d_tab, b_tab, s, ALPHA, GAMMA, VG)
+    np.testing.assert_array_equal(np.asarray(z_new), z_ref)
+    assert_allclose(np.asarray(d_new), d_ref, atol=1e-4)
+    assert_allclose(np.asarray(b_new), b_ref, atol=1e-4)
+    assert_allclose(np.asarray(s_new), s_ref, atol=1e-4)
+
+
+def test_lda_push_conserves_counts():
+    """Total counts in D, B, s are invariant under a Gibbs sweep."""
+    rng = np.random.default_rng(13)
+    t, nd, vs, k = 128, 16, 32, 8
+    doc_ids, word_ids, z, u, d_tab, b_tab, s = _lda_problem(
+        rng, t, nd, vs, k)
+    _, d_new, b_new, s_new = model.lda_push(
+        doc_ids, word_ids, z, u, d_tab, b_tab, s,
+        alpha=ALPHA, gamma=GAMMA, v_global=VG)
+    assert_allclose(np.asarray(d_new).sum(), d_tab.sum(), atol=1e-3)
+    assert_allclose(np.asarray(b_new).sum(), b_tab.sum(), atol=1e-3)
+    assert_allclose(np.asarray(s_new).sum(), s.sum(), atol=1e-3)
+    # per-document token counts preserved
+    assert_allclose(np.asarray(d_new).sum(1), d_tab.sum(1), atol=1e-3)
+    # per-word token counts preserved
+    assert_allclose(np.asarray(b_new).sum(1), b_tab.sum(1), atol=1e-3)
+
+
+def test_lda_loglik_increases_with_concentration():
+    """A sharply topic-concentrated B table has higher word log-likelihood
+    than a uniform one with the same totals."""
+    vs, k = 16, 4
+    total = 400.0
+    b_flat = np.full((vs, k), total / (vs * k), np.float32)
+    b_peak = np.zeros((vs, k), np.float32)
+    for v in range(vs):
+        b_peak[v, v % k] = total / vs
+    s_flat = b_flat.sum(0)
+    s_peak = b_peak.sum(0)
+    (ll_flat,) = model.lda_loglik(None, b_flat, s_flat, ALPHA, GAMMA, VG)
+    (ll_peak,) = model.lda_loglik(None, b_peak, s_peak, ALPHA, GAMMA, VG)
+    assert float(ll_peak) > float(ll_flat)

@@ -1,0 +1,26 @@
+//! Bench: regenerate paper Figure 10 (LDA scalability with machines) at
+//! bench scale.  `cargo bench --bench fig10_scalability`
+
+use strads::cluster::NetworkConfig;
+use strads::figures::fig10;
+
+fn main() {
+    let t = std::time::Instant::now();
+    let rows = fig10::run(&fig10::Fig10Config {
+        vocab: 8_000,
+        n_docs: 2_000,
+        n_topics: 32,
+        machine_counts: vec![2, 4, 8, 16],
+        sweeps: 10,
+        network: NetworkConfig::ideal(), // isolate compute scaling at bench scale
+        seed: 42,
+    });
+    fig10::print(&rows);
+    let t2 = rows[0].time_to_target.expect("2 machines converge");
+    let t16 = rows.last().unwrap().time_to_target.expect("16 machines converge");
+    assert!(
+        t16 < t2,
+        "time-to-LL must fall with machines ({t2}s -> {t16}s)"
+    );
+    println!("\nfig10 bench completed in {:.2}s", t.elapsed().as_secs_f64());
+}

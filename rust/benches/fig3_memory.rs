@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Figure 3 (LDA memory per machine) at bench
+//! scale.  `cargo bench --bench fig3_memory`
+
+use strads::figures::fig3;
+
+fn main() {
+    let t = std::time::Instant::now();
+    let rows = fig3::run(&fig3::Fig3Config {
+        vocab: 8_000,
+        n_docs: 600,
+        n_topics: 64,
+        machine_counts: vec![2, 4, 8, 16],
+        seed: 42,
+    });
+    fig3::print(&rows);
+    // the figure's claims, asserted
+    assert!(
+        rows.last().unwrap().strads_bytes < rows[0].strads_bytes,
+        "STRADS per-machine memory must fall with machines"
+    );
+    assert!(
+        rows.last().unwrap().yahoo_bytes
+            > 2 * rows.last().unwrap().strads_bytes,
+        "data-parallel replication must dominate at high machine counts"
+    );
+    println!("\nfig3 bench completed in {:.2}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Figure 5 (LDA s-error per iteration) at bench
+//! scale.  `cargo bench --bench fig5_serror`
+
+use strads::figures::fig5;
+
+fn main() {
+    let t = std::time::Instant::now();
+    let series = fig5::run(&fig5::Fig5Config {
+        vocab: 8_000,
+        n_docs: 1_000,
+        n_topics: 64,
+        n_workers: 16,
+        iterations: 20,
+        seed: 42,
+    });
+    fig5::print(&series);
+    let max = series.iter().cloned().fold(0.0, f64::max);
+    // Δ_t is normalized by total token count M (eq. 1): the paper's 0.002
+    // is measured at M = 179M tokens; at this bench's M ≈ 45K the same
+    // absolute drift shows as a proportionally larger Δ_t.  The claim that
+    // survives scaling is "orders of magnitude below the [0,2] bound".
+    assert!(max < 0.05, "s-error must stay tiny (got {max})");
+    println!("\nfig5 bench completed in {:.2}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,55 @@
+//! Bench: regenerate paper Figure 8 (convergence time vs model size, all
+//! three panels) at bench scale.  `cargo bench --bench fig8_model_size`
+
+use strads::figures::fig8;
+
+fn main() {
+    let t = std::time::Instant::now();
+
+    let lda = fig8::run_lda(&fig8::LdaPanelConfig {
+        vocab: 6_000,
+        n_docs: 600,
+        topic_counts: vec![16, 32, 64, 128],
+        n_workers: 8,
+        sweeps: 12,
+        mem_capacity: None,
+        seed: 42,
+    });
+    fig8::print_panel("Figure 8 (left): LDA", "YahooLDA", &lda);
+    assert!(lda.iter().all(|b| b.strads_secs.is_some()));
+    assert!(
+        lda.last().unwrap().baseline_secs.is_none(),
+        "YahooLDA must DNF at the largest model"
+    );
+
+    let mf = fig8::run_mf(&fig8::MfPanelConfig {
+        users: 1_200,
+        items: 120,
+        ranks: vec![8, 16, 32, 64],
+        n_workers: 4,
+        sweeps: 6,
+        lambda: 0.05,
+        mem_capacity: None,
+        seed: 42,
+    });
+    fig8::print_panel("Figure 8 (center): MF", "GraphLab-ALS", &mf);
+    assert!(mf.iter().all(|b| b.strads_secs.is_some()));
+    assert!(
+        mf.last().unwrap().baseline_secs.is_none(),
+        "ALS must DNF at the largest rank"
+    );
+
+    let lasso = fig8::run_lasso(&fig8::LassoPanelConfig {
+        n_samples: 256,
+        feature_counts: vec![4_096, 8_192, 16_384],
+        n_workers: 4,
+        u: 24,
+        rounds: 400,
+        lambda: 0.06,
+        seed: 42,
+    });
+    fig8::print_panel("Figure 8 (right): Lasso", "Lasso-RR", &lasso);
+    assert!(lasso.iter().all(|b| b.strads_secs.is_some()));
+
+    println!("\nfig8 bench completed in {:.2}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate paper Figure 9 (convergence trajectories, all three
+//! panels) at bench scale.  `cargo bench --bench fig9_trajectories`
+
+use strads::figures::fig9;
+
+fn main() {
+    let t = std::time::Instant::now();
+    let cfg = fig9::Fig9Config { scale: 0.25, n_workers: 4, seed: 42 };
+
+    let lda = fig9::run_lda(&cfg);
+    fig9::print_panel(&lda);
+    assert!(
+        lda.strads.last_objective().unwrap()
+            > lda.strads.points()[0].objective,
+        "STRADS LDA LL must improve"
+    );
+
+    let mf = fig9::run_mf(&cfg);
+    fig9::print_panel(&mf);
+    assert!(
+        mf.strads.last_objective().unwrap()
+            < mf.strads.points()[0].objective,
+        "STRADS MF objective must fall"
+    );
+
+    let lasso = fig9::run_lasso(&cfg);
+    fig9::print_panel(&lasso);
+    assert!(
+        lasso.strads.last_objective().unwrap()
+            < lasso.strads.points()[0].objective,
+        "STRADS Lasso objective must fall"
+    );
+
+    println!("\nfig9 bench completed in {:.2}s", t.elapsed().as_secs_f64());
+}

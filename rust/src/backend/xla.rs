@@ -1,0 +1,378 @@
+//! XLA-artifact shard backends: the three-layer AOT path.
+//!
+//! Each shard stages its state into the fixed canonical shapes the
+//! artifacts were lowered at (see python/compile/shapes.py, recorded in the
+//! manifest) and executes the JAX/Pallas graphs via PJRT.  Scheduled sets
+//! smaller than the artifact's U are padded by repeating the first index —
+//! duplicates compute identical z values and the pull step reads only the
+//! valid prefix.
+
+use super::{LassoShard, LdaShard, MfShard};
+use crate::backend::native::Token;
+use crate::runtime::{Engine, Tensor};
+use crate::util::Rng;
+use std::sync::Arc;
+
+// ------------------------------------------------------------- Lasso -----
+
+/// Dense row shard evaluated through `lasso_push` / `lasso_residual[_update]`.
+pub struct XlaLassoShard {
+    engine: Arc<Engine>,
+    /// Dense row-major shard design matrix (n × j).
+    x: Vec<f32>,
+    y: Vec<f32>,
+    r: Vec<f32>,
+    n: usize,
+    j: usize,
+    /// Artifact batch width U.
+    u: usize,
+}
+
+impl XlaLassoShard {
+    /// `x` row-major (n × j); dims must match the artifact's canonical
+    /// shapes.
+    pub fn new(engine: Arc<Engine>, x: Vec<f32>, y: Vec<f32>) -> anyhow::Result<Self> {
+        let spec = engine.spec("lasso_push")?;
+        let n = spec.inputs[0].dims[0];
+        let u = spec.inputs[0].dims[1];
+        let rspec = engine.spec("lasso_residual")?;
+        let j = rspec.inputs[0].dims[1];
+        anyhow::ensure!(
+            x.len() == n * j,
+            "x must be {n}x{j} dense (got {} elems)",
+            x.len()
+        );
+        anyhow::ensure!(y.len() == n, "y must have {n} rows");
+        let r = y.clone();
+        Ok(XlaLassoShard { engine, x, y, r, n, j, u })
+    }
+
+    pub fn batch_width(&self) -> usize {
+        self.u
+    }
+
+    /// Gather columns `sel` (padded to U) into a dense (n × U) block.
+    fn gather(&self, sel: &[usize]) -> (Vec<f32>, Vec<usize>) {
+        let mut padded: Vec<usize> = sel.to_vec();
+        while padded.len() < self.u {
+            padded.push(sel.first().copied().unwrap_or(0));
+        }
+        let mut block = vec![0.0f32; self.n * self.u];
+        for (c, &j) in padded.iter().enumerate() {
+            for row in 0..self.n {
+                block[row * self.u + c] = self.x[row * self.j + j];
+            }
+        }
+        (block, padded)
+    }
+}
+
+impl LassoShard for XlaLassoShard {
+    fn partials(&mut self, sel: &[usize], beta_sel: &[f32]) -> Vec<f32> {
+        assert!(sel.len() <= self.u, "set larger than artifact width");
+        let (block, padded) = self.gather(sel);
+        let mut beta_pad = vec![0.0f32; self.u];
+        beta_pad[..beta_sel.len()].copy_from_slice(beta_sel);
+        for c in sel.len()..self.u {
+            // padding repeats sel[0]; give it the true beta so the value is
+            // merely duplicated, never wrong
+            beta_pad[c] = beta_sel.first().copied().unwrap_or(0.0);
+        }
+        let _ = padded;
+        let out = self
+            .engine
+            .call(
+                "lasso_push",
+                &[
+                    Tensor::f32(&[self.n, self.u], block),
+                    Tensor::f32(&[self.n], self.r.clone()),
+                    Tensor::f32(&[self.u], beta_pad),
+                ],
+            )
+            .expect("lasso_push artifact");
+        let z = out.into_iter().next().unwrap().into_f32().unwrap();
+        z[..sel.len()].to_vec()
+    }
+
+    fn apply_delta(&mut self, sel: &[usize], delta: &[f32]) {
+        let (block, _) = self.gather(sel);
+        let mut delta_pad = vec![0.0f32; self.u];
+        delta_pad[..delta.len()].copy_from_slice(delta);
+        // padding columns get delta 0 → no effect
+        let out = self
+            .engine
+            .call(
+                "lasso_residual_update",
+                &[
+                    Tensor::f32(&[self.n], self.r.clone()),
+                    Tensor::f32(&[self.n, self.u], block),
+                    Tensor::f32(&[self.u], delta_pad),
+                ],
+            )
+            .expect("lasso_residual_update artifact");
+        self.r = out.into_iter().next().unwrap().into_f32().unwrap();
+    }
+
+    fn reset_residual(&mut self, beta: &[f32]) {
+        assert_eq!(beta.len(), self.j);
+        let out = self
+            .engine
+            .call(
+                "lasso_residual",
+                &[
+                    Tensor::f32(&[self.n, self.j], self.x.clone()),
+                    Tensor::f32(&[self.n], self.y.clone()),
+                    Tensor::f32(&[self.j], beta.to_vec()),
+                ],
+            )
+            .expect("lasso_residual artifact");
+        self.r = out.into_iter().next().unwrap().into_f32().unwrap();
+    }
+
+    fn loss(&self) -> f64 {
+        0.5 * crate::sparse::ops::norm_sq(&self.r)
+    }
+
+    fn model_bytes(&self) -> u64 {
+        (self.r.len() * 4) as u64
+    }
+}
+
+// ---------------------------------------------------------------- MF -----
+
+/// Dense masked shard evaluated through `mf_push` / `mf_push_w`.
+pub struct XlaMfShard {
+    engine: Arc<Engine>,
+    a: Vec<f32>,
+    mask: Vec<f32>,
+    w: Vec<f32>,
+    h: Vec<f32>,
+    n: usize,
+    m: usize,
+    k: usize,
+    lambda: f32,
+}
+
+impl XlaMfShard {
+    pub fn new(
+        engine: Arc<Engine>,
+        a: Vec<f32>,
+        mask: Vec<f32>,
+        w0: Vec<f32>,
+        h0: Vec<f32>,
+        lambda: f32,
+    ) -> anyhow::Result<Self> {
+        let spec = engine.spec("mf_push")?;
+        let n = spec.inputs[0].dims[0];
+        let m = spec.inputs[0].dims[1];
+        let k = spec.inputs[2].dims[1];
+        anyhow::ensure!(a.len() == n * m && mask.len() == n * m);
+        anyhow::ensure!(w0.len() == n * k && h0.len() == k * m);
+        Ok(XlaMfShard { engine, a, mask, w: w0, h: h0, n, m, k, lambda })
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.n, self.m, self.k)
+    }
+
+    fn inputs_with_k(&self, k: usize) -> Vec<Tensor> {
+        vec![
+            Tensor::f32(&[self.n, self.m], self.a.clone()),
+            Tensor::f32(&[self.n, self.m], self.mask.clone()),
+            Tensor::f32(&[self.n, self.k], self.w.clone()),
+            Tensor::f32(&[self.k, self.m], self.h.clone()),
+            Tensor::scalar_i32(k as i32),
+        ]
+    }
+}
+
+impl MfShard for XlaMfShard {
+    fn h_stats(&mut self, k: usize) -> (Vec<f32>, Vec<f32>) {
+        let out = self
+            .engine
+            .call("mf_push", &self.inputs_with_k(k))
+            .expect("mf_push artifact");
+        let mut it = out.into_iter();
+        let a = it.next().unwrap().into_f32().unwrap();
+        let b = it.next().unwrap().into_f32().unwrap();
+        (a, b)
+    }
+
+    fn set_h_row(&mut self, k: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.m);
+        self.h[k * self.m..(k + 1) * self.m].copy_from_slice(row);
+        // residuals are recomputed inside each artifact call — nothing else
+        // to maintain
+    }
+
+    fn update_w(&mut self, k: usize) {
+        let out = self
+            .engine
+            .call("mf_push_w", &self.inputs_with_k(k))
+            .expect("mf_push_w artifact");
+        let mut it = out.into_iter();
+        let a = it.next().unwrap().into_f32().unwrap();
+        let b = it.next().unwrap().into_f32().unwrap();
+        for i in 0..self.n {
+            self.w[i * self.k + k] = a[i] / (self.lambda + b[i]);
+        }
+    }
+
+    fn loss(&self) -> f64 {
+        let out = self
+            .engine
+            .call(
+                "mf_objective",
+                &[
+                    Tensor::f32(&[self.n, self.m], self.a.clone()),
+                    Tensor::f32(&[self.n, self.m], self.mask.clone()),
+                    Tensor::f32(&[self.n, self.k], self.w.clone()),
+                    Tensor::f32(&[self.k, self.m], self.h.clone()),
+                ],
+            )
+            .expect("mf_objective artifact");
+        let sq = out[0].as_f32().unwrap()[0] as f64;
+        let wreg: f64 = self.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        sq + self.lambda as f64 * wreg
+    }
+
+    fn model_bytes(&self) -> u64 {
+        (self.w.len() * 4 + self.h.len() * 4) as u64
+    }
+}
+
+// --------------------------------------------------------------- LDA -----
+
+/// Token shard swept through the `lda_push` scan artifact.  Every slice
+/// bucket must hold exactly the artifact's T tokens (the e2e example
+/// constructs workloads at that size).
+pub struct XlaLdaShard {
+    engine: Arc<Engine>,
+    tokens: Vec<Vec<Token>>,
+    /// Local doc ids per bucket (parallel to tokens).
+    d_tab: Vec<f32>,
+    n_docs: usize,
+    k: usize,
+    t_cap: usize,
+    vs: usize,
+    alpha: f32,
+    rng: Rng,
+    doc_totals: Vec<f32>,
+}
+
+impl XlaLdaShard {
+    pub fn new(
+        engine: Arc<Engine>,
+        tokens_by_slice: Vec<Vec<Token>>,
+        n_docs: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let spec = engine.spec("lda_push")?;
+        let t_cap = spec.inputs[0].dims[0];
+        let nd = spec.inputs[4].dims[0];
+        let k = spec.inputs[4].dims[1];
+        let vs = spec.inputs[5].dims[0];
+        let alpha: f32 = spec.meta_parse("alpha").unwrap_or(0.1);
+        anyhow::ensure!(n_docs <= nd, "shard has more docs than artifact ND");
+        for (a, b) in tokens_by_slice.iter().enumerate() {
+            anyhow::ensure!(
+                b.len() == t_cap,
+                "bucket {a} has {} tokens; artifact requires exactly {t_cap}",
+                b.len()
+            );
+        }
+        let mut d_tab = vec![0.0f32; nd * k];
+        let mut doc_totals = vec![0.0f32; nd];
+        for bucket in &tokens_by_slice {
+            for t in bucket {
+                d_tab[t.doc as usize * k + t.z as usize] += 1.0;
+                doc_totals[t.doc as usize] += 1.0;
+            }
+        }
+        Ok(XlaLdaShard {
+            engine,
+            tokens: tokens_by_slice,
+            d_tab,
+            n_docs: nd,
+            k,
+            t_cap,
+            vs,
+            alpha,
+            rng: Rng::new(seed),
+            doc_totals,
+        })
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.iter().map(|b| b.len()).sum()
+    }
+}
+
+impl LdaShard for XlaLdaShard {
+    fn gibbs_slice(
+        &mut self,
+        slice_id: usize,
+        b_slice: &mut [f32],
+        s: &[f32],
+    ) -> (Vec<f32>, usize, usize) {
+        assert_eq!(b_slice.len(), self.vs * self.k);
+        let bucket = &self.tokens[slice_id];
+        let t = self.t_cap;
+        let touched: std::collections::HashSet<u32> =
+            bucket.iter().map(|x| x.word_local).collect();
+        let n_touched = touched.len();
+        let doc_ids: Vec<i32> = bucket.iter().map(|x| x.doc as i32).collect();
+        let word_ids: Vec<i32> =
+            bucket.iter().map(|x| x.word_local as i32).collect();
+        let z: Vec<i32> = bucket.iter().map(|x| x.z as i32).collect();
+        let u: Vec<f32> = (0..t).map(|_| self.rng.next_f32()).collect();
+        let out = self
+            .engine
+            .call(
+                "lda_push",
+                &[
+                    Tensor::i32(&[t], doc_ids),
+                    Tensor::i32(&[t], word_ids),
+                    Tensor::i32(&[t], z),
+                    Tensor::f32(&[t], u),
+                    Tensor::f32(&[self.n_docs, self.k], self.d_tab.clone()),
+                    Tensor::f32(&[self.vs, self.k], b_slice.to_vec()),
+                    Tensor::f32(&[self.k], s.to_vec()),
+                ],
+            )
+            .expect("lda_push artifact");
+        let mut it = out.into_iter();
+        let z_new = it.next().unwrap().into_i32().unwrap();
+        self.d_tab = it.next().unwrap().into_f32().unwrap();
+        let b_new = it.next().unwrap().into_f32().unwrap();
+        let s_new = it.next().unwrap().into_f32().unwrap();
+        b_slice.copy_from_slice(&b_new);
+        let bucket = &mut self.tokens[slice_id];
+        for (tok, &zn) in bucket.iter_mut().zip(z_new.iter()) {
+            tok.z = zn as u32;
+        }
+        (s_new, t, n_touched)
+    }
+
+    fn doc_loglik(&self) -> f64 {
+        let k = self.k;
+        let mut ll = 0.0f64;
+        for d in 0..self.n_docs {
+            let denom = self.doc_totals[d] + k as f32 * self.alpha;
+            if denom <= 0.0 {
+                continue;
+            }
+            for kk in 0..k {
+                let c = self.d_tab[d * k + kk];
+                if c > 0.0 {
+                    ll += c as f64 * (((c + self.alpha) / denom) as f64).ln();
+                }
+            }
+        }
+        ll
+    }
+
+    fn model_bytes(&self) -> u64 {
+        (self.d_tab.len() * 4 + self.k * 4) as u64
+    }
+}

@@ -1,0 +1,366 @@
+//! GraphLab-style Alternating Least Squares baseline for MF.
+//!
+//! ALS alternates closed-form solves: fixing H, each user row w_i solves a
+//! K×K ridge system built from the H rows of its rated items — and
+//! symmetrically for H.  Both factor matrices are **fully replicated** on
+//! every worker (GraphLab's vertex-replication behaviour at high-degree
+//! nodes approximates this), so per-machine memory and per-update cost grow
+//! as O((N+M)K) and O(K³) — the reason the paper's Fig 8 (center) shows
+//! GraphLab failing beyond rank ≈ 80 while STRADS CCD keeps scaling.
+
+use crate::cluster::{MemoryTracker, NetworkConfig, NetworkModel, VirtualClock, WorkerPool};
+use crate::metrics::Recorder;
+use crate::sparse::CsrMatrix;
+use crate::util::linalg::{cholesky_solve, syr};
+use crate::util::stats::Stopwatch;
+use crate::util::Rng;
+
+/// Baseline configuration.
+#[derive(Debug, Clone)]
+pub struct AlsConfig {
+    pub rank: usize,
+    pub lambda: f32,
+    pub n_workers: usize,
+    pub seed: u64,
+}
+
+struct AlsWorker {
+    /// User-row shard of ratings.
+    a: CsrMatrix,
+    /// Item-column shard (transpose rows) for the H solves.
+    a_t: CsrMatrix,
+    /// Item range [item_lo, item_hi) owned for H solves.
+    item_lo: usize,
+    item_hi: usize,
+    /// Full replicas of both factors (the baseline's memory signature).
+    w: Vec<f32>,
+    h: Vec<f32>,
+    /// This worker's user range in the global W.
+    user_lo: usize,
+    user_hi: usize,
+    rank: usize,
+    lambda: f32,
+}
+
+impl AlsWorker {
+    /// Solve all owned user rows against the (replicated) H.
+    fn solve_w(&mut self) -> Vec<f32> {
+        let k = self.rank;
+        let mut out = vec![0.0f32; (self.user_hi - self.user_lo) * k];
+        let mut gram = vec![0.0f64; k * k];
+        let mut rhs = vec![0.0f64; k];
+        for (local, i) in (self.user_lo..self.user_hi).enumerate() {
+            gram.iter_mut().for_each(|x| *x = 0.0);
+            rhs.iter_mut().for_each(|x| *x = 0.0);
+            let mut hj = vec![0.0f64; k];
+            for (j, v) in self.a.row_iter(local) {
+                for p in 0..k {
+                    hj[p] = self.h[p * self.a.cols() + j as usize] as f64;
+                }
+                syr(&mut gram, &hj);
+                for p in 0..k {
+                    rhs[p] += v as f64 * hj[p];
+                }
+            }
+            if let Some(x) = cholesky_solve(&gram, self.lambda as f64, &rhs) {
+                for p in 0..k {
+                    out[local * k + p] = x[p] as f32;
+                }
+            }
+            let _ = i;
+        }
+        out
+    }
+
+    /// Solve all owned item columns against the (replicated) W.
+    fn solve_h(&mut self) -> Vec<f32> {
+        let k = self.rank;
+        let n_users = self.a_t.cols();
+        let mut out = vec![0.0f32; (self.item_hi - self.item_lo) * k];
+        let mut gram = vec![0.0f64; k * k];
+        let mut rhs = vec![0.0f64; k];
+        for (local, _j) in (self.item_lo..self.item_hi).enumerate() {
+            gram.iter_mut().for_each(|x| *x = 0.0);
+            rhs.iter_mut().for_each(|x| *x = 0.0);
+            let mut wi = vec![0.0f64; k];
+            for (i, v) in self.a_t.row_iter(local) {
+                for p in 0..k {
+                    wi[p] = self.w[i as usize * k + p] as f64;
+                }
+                syr(&mut gram, &wi);
+                for p in 0..k {
+                    rhs[p] += v as f64 * wi[p];
+                }
+            }
+            let _ = n_users;
+            if let Some(x) = cholesky_solve(&gram, self.lambda as f64, &rhs) {
+                for p in 0..k {
+                    out[local * k + p] = x[p] as f32;
+                }
+            }
+        }
+        out
+    }
+
+    fn loss(&self) -> f64 {
+        let k = self.rank;
+        let m = self.a.cols();
+        let mut sq = 0.0f64;
+        for (local, i) in (self.user_lo..self.user_hi).enumerate() {
+            let _ = i;
+            let w_row = &self.w[(self.user_lo + local) * k..(self.user_lo + local + 1) * k];
+            for (j, v) in self.a.row_iter(local) {
+                let mut pred = 0.0f32;
+                for p in 0..k {
+                    pred += w_row[p] * self.h[p * m + j as usize];
+                }
+                sq += ((v - pred) as f64).powi(2);
+            }
+        }
+        sq
+    }
+
+    fn model_bytes(&self) -> u64 {
+        // both factors fully replicated
+        ((self.w.len() + self.h.len()) * 4) as u64
+    }
+}
+
+/// The instrumented ALS baseline runner.
+pub struct AlsMf {
+    pool: WorkerPool<AlsWorker>,
+    w: Vec<f32>,
+    h: Vec<f32>,
+    n_users: usize,
+    n_items: usize,
+    cfg: AlsConfig,
+    user_ranges: Vec<(usize, usize)>,
+    item_ranges: Vec<(usize, usize)>,
+    pub clock: VirtualClock,
+    pub network: NetworkModel,
+    pub memory: MemoryTracker,
+}
+
+impl AlsMf {
+    pub fn new(
+        a: &CsrMatrix,
+        cfg: AlsConfig,
+        network: NetworkConfig,
+        mem_capacity: Option<u64>,
+    ) -> Self {
+        let (n, m, k) = (a.rows(), a.cols(), cfg.rank);
+        let mut rng = Rng::new(cfg.seed);
+        let scale = 1.0 / (k as f32).sqrt();
+        let w: Vec<f32> = (0..n * k).map(|_| rng.normal_f32() * scale).collect();
+        let h: Vec<f32> = (0..k * m).map(|_| rng.normal_f32() * scale).collect();
+        let a_t = a.transpose();
+
+        let p = cfg.n_workers;
+        let ur: Vec<(usize, usize)> = (0..p)
+            .map(|q| (q * n / p, if q == p - 1 { n } else { (q + 1) * n / p }))
+            .collect();
+        let ir: Vec<(usize, usize)> = (0..p)
+            .map(|q| (q * m / p, if q == p - 1 { m } else { (q + 1) * m / p }))
+            .collect();
+
+        let workers: Vec<AlsWorker> = (0..p)
+            .map(|q| AlsWorker {
+                a: a.row_slice(ur[q].0, ur[q].1),
+                a_t: a_t.row_slice(ir[q].0, ir[q].1),
+                item_lo: ir[q].0,
+                item_hi: ir[q].1,
+                w: w.clone(),
+                h: h.clone(),
+                user_lo: ur[q].0,
+                user_hi: ur[q].1,
+                rank: k,
+                lambda: cfg.lambda,
+            })
+            .collect();
+
+        let n_workers = cfg.n_workers;
+        AlsMf {
+            pool: WorkerPool::new(workers),
+            w,
+            h,
+            n_users: n,
+            n_items: m,
+            cfg,
+            user_ranges: ur,
+            item_ranges: ir,
+            clock: VirtualClock::new(),
+            network: NetworkModel::new(network, n_workers),
+            memory: MemoryTracker::new(n_workers, mem_capacity),
+        }
+    }
+
+    /// One ALS iteration: solve W (all workers), broadcast; solve H,
+    /// broadcast.
+    pub fn iterate(&mut self) {
+        let k = self.cfg.rank;
+        // --- W phase
+        let results = self.pool.run(|_| move |ws: &mut AlsWorker| ws.solve_w());
+        let mut compute = Vec::new();
+        for (p, (block, secs)) in results.into_iter().enumerate() {
+            self.network.send_up(p, block.len() * 4);
+            let (lo, _) = self.user_ranges[p];
+            self.w[lo * k..lo * k + block.len()].copy_from_slice(&block);
+            compute.push(secs);
+        }
+        let w = self.w.clone();
+        for p in 0..self.pool.n_workers() {
+            self.network.send_down(p, w.len() * 4);
+        }
+        self.pool.broadcast(move |_| {
+            let w = w.clone();
+            move |ws: &mut AlsWorker| ws.w = w
+        });
+        let comm_w = self.network.round_time_and_reset();
+        self.clock.advance_round(&compute, comm_w, 0.0);
+
+        // --- H phase
+        let results = self.pool.run(|_| move |ws: &mut AlsWorker| ws.solve_h());
+        let mut compute = Vec::new();
+        let m = self.n_items;
+        for (p, (block, secs)) in results.into_iter().enumerate() {
+            self.network.send_up(p, block.len() * 4);
+            let (lo, hi) = self.item_ranges[p];
+            for (local, j) in (lo..hi).enumerate() {
+                for q in 0..k {
+                    self.h[q * m + j] = block[local * k + q];
+                }
+            }
+            compute.push(secs);
+        }
+        let h = self.h.clone();
+        for p in 0..self.pool.n_workers() {
+            self.network.send_down(p, h.len() * 4);
+        }
+        self.pool.broadcast(move |_| {
+            let h = h.clone();
+            move |ws: &mut AlsWorker| ws.h = h
+        });
+        let comm_h = self.network.round_time_and_reset();
+        self.clock.advance_round(&compute, comm_h, 0.0);
+    }
+
+    /// Regularized objective (paper eq. 2).
+    pub fn objective(&mut self) -> f64 {
+        let sq: f64 = self
+            .pool
+            .run(|_| |ws: &mut AlsWorker| ws.loss())
+            .into_iter()
+            .map(|(v, _)| v)
+            .sum();
+        let wreg: f64 = self.w.iter().map(|&x| (x as f64).powi(2)).sum();
+        let hreg: f64 = self.h.iter().map(|&x| (x as f64).powi(2)).sum();
+        sq + self.cfg.lambda as f64 * (wreg + hreg)
+    }
+
+    pub fn memory_census(&mut self) -> Result<u64, String> {
+        let sizes = self.pool.run(|_| |ws: &mut AlsWorker| ws.model_bytes());
+        let mut err = None;
+        for (p, (bytes, _)) in sizes.into_iter().enumerate() {
+            if let Err(e) = self.memory.set(p, bytes) {
+                err = Some(e.to_string());
+            }
+        }
+        match err {
+            Some(e) => Err(e),
+            None => Ok(self.memory.max_per_machine()),
+        }
+    }
+
+    /// Instrumented run loop.
+    pub fn run(&mut self, iters: u64, label: &str) -> (Recorder, Option<String>) {
+        let wall = Stopwatch::start();
+        let mut rec = Recorder::new(label);
+        rec.record(0, self.clock.seconds(), wall.secs(), self.objective());
+        let mut oom = None;
+        for t in 0..iters {
+            self.iterate();
+            rec.record(t + 1, self.clock.seconds(), wall.secs(), self.objective());
+            if let Err(e) = self.memory_census() {
+                oom = Some(e);
+                break;
+            }
+        }
+        (rec, oom)
+    }
+
+    pub fn factors(&self) -> (&[f32], &[f32]) {
+        (&self.w, &self.h)
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.n_users, self.n_items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::mf_ratings::{self, MfGenConfig};
+
+    fn data() -> CsrMatrix {
+        mf_ratings::generate(&MfGenConfig {
+            n_users: 150,
+            n_items: 100,
+            density: 0.08,
+            true_rank: 3,
+            seed: 8,
+            ..Default::default()
+        })
+        .a
+    }
+
+    fn cfg(rank: usize, workers: usize) -> AlsConfig {
+        AlsConfig { rank, lambda: 0.1, n_workers: workers, seed: 9 }
+    }
+
+    #[test]
+    fn als_iterations_reduce_objective() {
+        let a = data();
+        let mut als = AlsMf::new(&a, cfg(4, 3), NetworkConfig::ideal(), None);
+        let o0 = als.objective();
+        for _ in 0..5 {
+            als.iterate();
+        }
+        let o1 = als.objective();
+        assert!(o1 < 0.8 * o0, "objective {o0} -> {o1}");
+    }
+
+    #[test]
+    fn replication_memory_grows_with_rank() {
+        let a = data();
+        let mut a8 = AlsMf::new(&a, cfg(8, 2), NetworkConfig::ideal(), None);
+        let mut a32 = AlsMf::new(&a, cfg(32, 2), NetworkConfig::ideal(), None);
+        let m8 = a8.memory_census().unwrap();
+        let m32 = a32.memory_census().unwrap();
+        assert!(
+            (m32 as f64 / m8 as f64 - 4.0).abs() < 0.2,
+            "m8={m8} m32={m32}"
+        );
+    }
+
+    #[test]
+    fn memory_capacity_fails_large_rank() {
+        let a = data();
+        let cap = {
+            let mut probe = AlsMf::new(&a, cfg(8, 2), NetworkConfig::ideal(), None);
+            probe.memory_census().unwrap() + 1024
+        };
+        let mut big = AlsMf::new(&a, cfg(64, 2), NetworkConfig::ideal(), Some(cap));
+        assert!(big.memory_census().is_err());
+    }
+
+    #[test]
+    fn run_records_trajectory() {
+        let a = data();
+        let mut als = AlsMf::new(&a, cfg(4, 2), NetworkConfig::gbps40(), None);
+        let (rec, oom) = als.run(3, "als");
+        assert_eq!(rec.points().len(), 4);
+        assert!(oom.is_none());
+        assert!(als.clock.seconds() > 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Baseline systems the paper compares against (§4):
+//!
+//! * [`yahoo_lda`] — data-parallel LDA in the style of YahooLDA/Ahmed et
+//!   al.: every worker holds a **full replica** of the word-topic table,
+//!   samples all its tokens each sweep, and merges deltas afterwards.
+//!   Memory per machine does not shrink with more machines (Fig 3) and the
+//!   replicas go stale within a sweep (convergence drag, Fig 8/9).
+//! * [`als_mf`] — GraphLab-style Alternating Least Squares: each update
+//!   solves a K×K normal-equations system per row/column with full-factor
+//!   replication; the O(K²) memory and O(K³) solves are why it collapses
+//!   at rank ≥ 80 in the paper's Fig 8 (center).
+//! * Lasso-RR — random parallel CD (Shotgun imitation) is *not* a separate
+//!   system: the paper runs it as a STRADS schedule, and so do we
+//!   ([`crate::scheduler::RandomScheduler`] plugged into
+//!   [`crate::apps::LassoApp`]).
+
+pub mod als_mf;
+pub mod yahoo_lda;
+
+pub use als_mf::{AlsConfig, AlsMf};
+pub use yahoo_lda::{YahooLda, YahooLdaConfig};

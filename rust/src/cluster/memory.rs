@@ -1,0 +1,107 @@
+//! Per-machine model-memory accounting (paper Fig 3).
+//!
+//! Workers report the resident bytes of their *model state* (word-topic
+//! slices, factor panels, coefficient caches — not the immutable data
+//! shard, which both STRADS and the data-parallel baselines partition the
+//! same way).  A configurable per-machine capacity reproduces the paper's
+//! "baseline could not run this model size" failures.
+
+/// Tracks per-worker model bytes and enforces an optional capacity.
+#[derive(Debug, Clone)]
+pub struct MemoryTracker {
+    per_worker: Vec<u64>,
+    capacity: Option<u64>,
+}
+
+/// Error raised when a worker would exceed machine memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutOfMemory {
+    pub worker: usize,
+    pub needed: u64,
+    pub capacity: u64,
+}
+
+impl std::fmt::Display for OutOfMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "worker {} needs {} bytes of model memory (capacity {})",
+            self.worker, self.needed, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for OutOfMemory {}
+
+impl MemoryTracker {
+    pub fn new(n_workers: usize, capacity: Option<u64>) -> Self {
+        MemoryTracker { per_worker: vec![0; n_workers], capacity }
+    }
+
+    /// Set worker p's current model residency (absolute, not delta).
+    pub fn set(&mut self, worker: usize, bytes: u64) -> Result<(), OutOfMemory> {
+        self.per_worker[worker] = bytes;
+        match self.capacity {
+            Some(cap) if bytes > cap => {
+                Err(OutOfMemory { worker, needed: bytes, capacity: cap })
+            }
+            _ => Ok(()),
+        }
+    }
+
+    pub fn get(&self, worker: usize) -> u64 {
+        self.per_worker[worker]
+    }
+
+    /// Largest per-machine residency — the Fig 3 y-axis.
+    pub fn max_per_machine(&self) -> u64 {
+        self.per_worker.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean per-machine residency.
+    pub fn mean_per_machine(&self) -> f64 {
+        if self.per_worker.is_empty() {
+            0.0
+        } else {
+            self.per_worker.iter().sum::<u64>() as f64
+                / self.per_worker.len() as f64
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.per_worker.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_max_and_mean() {
+        let mut m = MemoryTracker::new(3, None);
+        m.set(0, 100).unwrap();
+        m.set(1, 300).unwrap();
+        m.set(2, 200).unwrap();
+        assert_eq!(m.max_per_machine(), 300);
+        assert!((m.mean_per_machine() - 200.0).abs() < 1e-12);
+        assert_eq!(m.total(), 600);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut m = MemoryTracker::new(2, Some(250));
+        assert!(m.set(0, 200).is_ok());
+        let err = m.set(1, 300).unwrap_err();
+        assert_eq!(err.worker, 1);
+        assert_eq!(err.capacity, 250);
+    }
+
+    #[test]
+    fn set_is_absolute_not_delta() {
+        let mut m = MemoryTracker::new(1, None);
+        m.set(0, 500).unwrap();
+        m.set(0, 100).unwrap();
+        assert_eq!(m.get(0), 100);
+    }
+}

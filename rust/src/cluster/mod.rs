@@ -1,0 +1,23 @@
+//! Simulated-cluster substrate.
+//!
+//! The paper evaluates on two physical clusters (128× 2-core @1Gbps, 9×
+//! 16-core @40Gbps).  We simulate: each STRADS worker is an OS thread with
+//! a mailbox, the star topology's communication cost is modelled by
+//! [`network::NetworkModel`] and charged to a **virtual cluster clock**
+//! ([`clock::VirtualClock`]), and per-machine model-memory residency is
+//! tracked by [`memory::MemoryTracker`] (paper Fig 3).
+//!
+//! The virtual clock is what the figure harnesses report: per-round time =
+//! max over workers of (measured compute time + modelled link time).  This
+//! makes the scalability curves (Fig 10) independent of how many physical
+//! cores this build machine happens to have.
+
+pub mod clock;
+pub mod memory;
+pub mod network;
+pub mod pool;
+
+pub use clock::VirtualClock;
+pub use memory::MemoryTracker;
+pub use network::{NetworkConfig, NetworkModel};
+pub use pool::WorkerPool;

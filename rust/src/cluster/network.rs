@@ -1,0 +1,195 @@
+//! Star-topology network cost model.
+//!
+//! STRADS uses a star topology: scheduler/coordinator machines in the
+//! middle, workers on the points (paper §5 notes the scheduler eventually
+//! bottlenecks).  We model each coordinator↔worker link with a fixed
+//! per-message latency plus bytes/bandwidth, and the coordinator's shared
+//! NIC as a serialization point — reproducing that bottleneck.
+
+/// Link parameters.  Defaults model the paper's 1 Gbps cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkConfig {
+    /// One-way per-message latency (seconds).
+    pub latency_s: f64,
+    /// Worker link bandwidth (bytes/second).
+    pub bandwidth_bps: f64,
+    /// Coordinator NIC aggregate bandwidth (bytes/second). All worker
+    /// traffic shares this — the star-topology serialization point.
+    pub hub_bandwidth_bps: f64,
+}
+
+impl NetworkConfig {
+    /// Paper's LDA cluster: 1 Gbps, commodity latency.
+    pub fn gbps1() -> Self {
+        NetworkConfig {
+            latency_s: 100e-6,
+            bandwidth_bps: 125e6,
+            hub_bandwidth_bps: 125e6,
+        }
+    }
+
+    /// Paper's Lasso/MF cluster: 40 Gbps low-latency.
+    pub fn gbps40() -> Self {
+        NetworkConfig {
+            latency_s: 10e-6,
+            bandwidth_bps: 5e9,
+            hub_bandwidth_bps: 5e9,
+        }
+    }
+
+    /// Zero-cost network (ablation: isolate compute scaling).
+    pub fn ideal() -> Self {
+        NetworkConfig { latency_s: 0.0, bandwidth_bps: f64::INFINITY, hub_bandwidth_bps: f64::INFINITY }
+    }
+}
+
+/// Per-round traffic accounting and time modelling.
+#[derive(Debug)]
+pub struct NetworkModel {
+    cfg: NetworkConfig,
+    n_workers: usize,
+    /// Total bytes sent coordinator→worker p this round.
+    down_bytes: Vec<u64>,
+    /// Total bytes sent worker p→coordinator this round.
+    up_bytes: Vec<u64>,
+    /// Worker↔worker bytes this round (rotation slice passing): these
+    /// traverse the worker links in parallel, NOT the coordinator hub.
+    p2p_bytes: Vec<u64>,
+    /// Lifetime counters.
+    total_bytes: u64,
+    total_msgs: u64,
+}
+
+impl NetworkModel {
+    pub fn new(cfg: NetworkConfig, n_workers: usize) -> Self {
+        NetworkModel {
+            cfg,
+            n_workers,
+            down_bytes: vec![0; n_workers],
+            up_bytes: vec![0; n_workers],
+            p2p_bytes: vec![0; n_workers],
+            total_bytes: 0,
+            total_msgs: 0,
+        }
+    }
+
+    pub fn config(&self) -> NetworkConfig {
+        self.cfg
+    }
+
+    /// Record a coordinator→worker message of `bytes` payload.
+    pub fn send_down(&mut self, worker: usize, bytes: usize) {
+        self.down_bytes[worker] += bytes as u64;
+        self.total_bytes += bytes as u64;
+        self.total_msgs += 1;
+    }
+
+    /// Record a worker→coordinator message of `bytes` payload.
+    pub fn send_up(&mut self, worker: usize, bytes: usize) {
+        self.up_bytes[worker] += bytes as u64;
+        self.total_bytes += bytes as u64;
+        self.total_msgs += 1;
+    }
+
+    /// Record a worker↔worker transfer (e.g. LDA's rotating word-topic
+    /// slices, or a worker's KV-shard fetch served by a peer).  These run
+    /// on the point links in parallel and bypass the hub.
+    pub fn send_p2p(&mut self, worker: usize, bytes: usize) {
+        self.p2p_bytes[worker] += bytes as u64;
+        self.total_bytes += bytes as u64;
+        self.total_msgs += 1;
+    }
+
+    /// Modelled communication time for the round, then reset round
+    /// counters.  Round comm time = per-link max(latency + bytes/bw) for
+    /// the parallel links, plus hub serialization of the aggregate bytes.
+    pub fn round_time_and_reset(&mut self) -> f64 {
+        let mut link_max = 0.0f64;
+        let mut hub_bytes = 0u64;
+        for p in 0..self.n_workers {
+            let b = self.down_bytes[p] + self.up_bytes[p];
+            let link_b = b + self.p2p_bytes[p];
+            if link_b > 0 {
+                let t = 2.0 * self.cfg.latency_s
+                    + link_b as f64 / self.cfg.bandwidth_bps;
+                link_max = link_max.max(t);
+            }
+            hub_bytes += b; // p2p traffic does not cross the hub
+            self.down_bytes[p] = 0;
+            self.up_bytes[p] = 0;
+            self.p2p_bytes[p] = 0;
+        }
+        let hub_time = if self.cfg.hub_bandwidth_bps.is_finite() {
+            hub_bytes as f64 / self.cfg.hub_bandwidth_bps
+        } else {
+            0.0
+        };
+        link_max.max(hub_time)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+    pub fn total_msgs(&self) -> u64 {
+        self.total_msgs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_time_includes_latency_and_bandwidth() {
+        let mut n = NetworkModel::new(
+            NetworkConfig { latency_s: 1e-3, bandwidth_bps: 1e6, hub_bandwidth_bps: f64::INFINITY },
+            2,
+        );
+        n.send_down(0, 1_000_000); // 1 s of bandwidth
+        let t = n.round_time_and_reset();
+        assert!((t - (2e-3 + 1.0)).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn round_counters_reset() {
+        let mut n = NetworkModel::new(NetworkConfig::gbps1(), 1);
+        n.send_up(0, 1000);
+        let t1 = n.round_time_and_reset();
+        let t2 = n.round_time_and_reset();
+        assert!(t1 > 0.0);
+        assert_eq!(t2, 0.0);
+        assert_eq!(n.total_bytes(), 1000);
+    }
+
+    #[test]
+    fn hub_serializes_aggregate_traffic() {
+        // 4 workers × 1MB each in parallel on 1MB/s links = ~1s per link,
+        // but a 1MB/s hub must serialize 4MB = 4s.
+        let mut n = NetworkModel::new(
+            NetworkConfig { latency_s: 0.0, bandwidth_bps: 1e6, hub_bandwidth_bps: 1e6 },
+            4,
+        );
+        for p in 0..4 {
+            n.send_up(p, 1_000_000);
+        }
+        let t = n.round_time_and_reset();
+        assert!((t - 4.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn ideal_network_is_free() {
+        let mut n = NetworkModel::new(NetworkConfig::ideal(), 3);
+        n.send_down(1, 123456);
+        assert_eq!(n.round_time_and_reset(), 0.0);
+    }
+
+    #[test]
+    fn faster_fabric_is_faster() {
+        let mk = |cfg: NetworkConfig| {
+            let mut n = NetworkModel::new(cfg, 1);
+            n.send_down(0, 10_000_000);
+            n.round_time_and_reset()
+        };
+        assert!(mk(NetworkConfig::gbps40()) < mk(NetworkConfig::gbps1()));
+    }
+}

@@ -1,0 +1,182 @@
+//! Worker thread pool with typed per-worker state and mailbox dispatch.
+//!
+//! Each simulated machine is an OS thread owning its `S` (data shard +
+//! model caches).  The coordinator dispatches closures (push / sync / eval
+//! jobs) to specific workers and collects replies together with the
+//! *measured on-thread compute time*, which feeds the virtual cluster
+//! clock.  Mailboxes are FIFO, so a `sync` enqueued before the next `push`
+//! is always applied first — this ordering is what makes the engine's BSP
+//! barrier correct (see coordinator::engine).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+type Job<S> = Box<dyn FnOnce(&mut S) + Send>;
+
+/// Per-thread CPU seconds (CLOCK_THREAD_CPUTIME_ID).
+///
+/// The virtual cluster clock needs each worker's *own* compute time: on a
+/// build machine with fewer cores than simulated workers, wall-clock
+/// measurements would include preemption by sibling workers and destroy
+/// the scaling curves (paper Fig 10).  Thread CPU time is
+/// oversubscription-immune.
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; the clock id is a constant.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Pool of worker threads, one per simulated machine.
+pub struct WorkerPool<S> {
+    senders: Vec<mpsc::Sender<Job<S>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<S: Send + 'static> WorkerPool<S> {
+    /// Spawn one thread per element of `states`.
+    pub fn new(states: Vec<S>) -> Self {
+        let mut senders = Vec::with_capacity(states.len());
+        let mut handles = Vec::with_capacity(states.len());
+        for (p, mut state) in states.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Job<S>>();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("strads-worker-{p}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job(&mut state);
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool { senders, handles }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Run `make_job(p)`'s closure on every worker; collect results in
+    /// worker order along with per-worker on-thread seconds.
+    pub fn run<R, F, G>(&self, make_job: G) -> Vec<(R, f64)>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut S) -> R + Send + 'static,
+        G: Fn(usize) -> F,
+    {
+        let (rtx, rrx) = mpsc::channel::<(usize, R, f64)>();
+        for (p, sender) in self.senders.iter().enumerate() {
+            let job = make_job(p);
+            let rtx = rtx.clone();
+            let wrapped: Job<S> = Box::new(move |state: &mut S| {
+                let t0 = thread_cpu_secs();
+                let out = job(state);
+                let secs = thread_cpu_secs() - t0;
+                // receiver never hangs up before collecting
+                let _ = rtx.send((p, out, secs));
+            });
+            sender.send(wrapped).expect("worker thread alive");
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<(R, f64)>> =
+            (0..self.senders.len()).map(|_| None).collect();
+        for _ in 0..self.senders.len() {
+            let (p, r, secs) = rrx.recv().expect("worker reply");
+            slots[p] = Some((r, secs));
+        }
+        slots.into_iter().map(|s| s.expect("all replied")).collect()
+    }
+
+    /// Run a job on a single worker and wait for its result.
+    pub fn run_on<R, F>(&self, p: usize, job: F) -> (R, f64)
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut S) -> R + Send + 'static,
+    {
+        let (rtx, rrx) = mpsc::channel::<(R, f64)>();
+        let wrapped: Job<S> = Box::new(move |state: &mut S| {
+            let t0 = thread_cpu_secs();
+            let out = job(state);
+            let _ = rtx.send((out, thread_cpu_secs() - t0));
+        });
+        self.senders[p].send(wrapped).expect("worker thread alive");
+        rrx.recv().expect("worker reply")
+    }
+
+    /// Fire-and-forget broadcast (sync messages): FIFO mailboxes guarantee
+    /// application before any later push on the same worker.
+    pub fn broadcast<F, G>(&self, make_job: G)
+    where
+        F: FnOnce(&mut S) + Send + 'static,
+        G: Fn(usize) -> F,
+    {
+        for (p, sender) in self.senders.iter().enumerate() {
+            let job = make_job(p);
+            let wrapped: Job<S> = Box::new(move |state: &mut S| job(state));
+            sender.send(wrapped).expect("worker thread alive");
+        }
+    }
+}
+
+impl<S> Drop for WorkerPool<S> {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes mailboxes; threads exit their loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_returns_results_in_worker_order() {
+        let pool = WorkerPool::new(vec![10i64, 20, 30]);
+        let out = pool.run(|p| move |s: &mut i64| *s + p as i64);
+        let values: Vec<i64> = out.iter().map(|(v, _)| *v).collect();
+        assert_eq!(values, vec![10, 21, 32]);
+        assert!(out.iter().all(|(_, secs)| *secs >= 0.0));
+    }
+
+    #[test]
+    fn state_persists_across_jobs() {
+        let pool = WorkerPool::new(vec![0usize; 2]);
+        pool.run(|_| |s: &mut usize| *s += 1);
+        pool.run(|_| |s: &mut usize| *s += 1);
+        let out = pool.run(|_| |s: &mut usize| *s);
+        assert_eq!(out.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![2, 2]);
+    }
+
+    #[test]
+    fn broadcast_applies_before_later_run() {
+        let pool = WorkerPool::new(vec![0i64; 4]);
+        pool.broadcast(|_| |s: &mut i64| *s = 7);
+        let out = pool.run(|_| |s: &mut i64| *s);
+        assert!(out.iter().all(|(v, _)| *v == 7));
+    }
+
+    #[test]
+    fn run_on_targets_one_worker() {
+        let pool = WorkerPool::new(vec![1i64, 2]);
+        let (v, _) = pool.run_on(1, |s: &mut i64| {
+            *s *= 10;
+            *s
+        });
+        assert_eq!(v, 20);
+        let all = pool.run(|_| |s: &mut i64| *s);
+        assert_eq!(all.iter().map(|(v, _)| *v).collect::<Vec<_>>(), vec![1, 20]);
+    }
+
+    #[test]
+    fn pool_drop_joins_threads() {
+        let pool = WorkerPool::new(vec![(); 8]);
+        drop(pool); // must not deadlock
+    }
+}

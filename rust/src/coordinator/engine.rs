@@ -1,0 +1,411 @@
+//! Generic schedule → push → pull → sync round loop.
+//!
+//! One round (paper Fig 1):
+//!
+//! 1. coordinator `schedule()` picks per-worker tasks;
+//! 2. tasks are **pushed** to workers (bytes charged to the star network);
+//! 3. workers compute partials over their data shards (measured on-thread);
+//! 4. partials return to the coordinator (bytes charged);
+//! 5. coordinator `pull()` aggregates and commits the variable update;
+//! 6. the resulting sync message is broadcast (**sync**, BSP): FIFO worker
+//!    mailboxes guarantee every worker applies it before its next push.
+//!
+//! The engine owns the virtual cluster clock: each round advances it by
+//! `max_p(compute_p) + comm + coordinator_time`, making reported scaling
+//! behaviour independent of the physical core count of the build machine.
+
+use crate::cluster::{MemoryTracker, NetworkConfig, NetworkModel, VirtualClock, WorkerPool};
+use crate::metrics::Recorder;
+use crate::util::stats::Stopwatch;
+use std::cell::RefCell;
+
+/// A STRADS application: the user-defined primitives (paper Fig 2).
+///
+/// `push` and `sync` are associated functions (not `&self`) because they
+/// execute on worker threads against worker-owned state; the coordinator
+/// side (`schedule`, `pull`) owns the model variables.
+pub trait StradsApp {
+    /// What `schedule` dispatches to one worker.
+    type Task: Send + 'static;
+    /// What one worker's `push` returns.
+    type Partial: Send + 'static;
+    /// What `pull` broadcasts for BSP sync.
+    type SyncMsg: Clone + Send + 'static;
+    /// Per-worker state: data shard + local model caches.
+    type WorkerState: Send + 'static;
+
+    /// Pick the tasks for this round, one per worker (index-aligned).
+    fn schedule(&mut self, round: u64) -> Vec<Self::Task>;
+
+    /// Worker-side partial update over the worker's data shard.
+    fn push(ws: &mut Self::WorkerState, task: Self::Task) -> Self::Partial;
+
+    /// Aggregate worker partials and commit the update; the returned
+    /// message is broadcast to all workers (None = nothing to sync).
+    fn pull(&mut self, round: u64, partials: Vec<Self::Partial>) -> Option<Self::SyncMsg>;
+
+    /// Worker-side application of a sync broadcast.
+    fn sync(ws: &mut Self::WorkerState, msg: &Self::SyncMsg);
+
+    /// Worker-side contribution to the global objective (shard loss).
+    fn eval(ws: &mut Self::WorkerState) -> f64;
+
+    /// Coordinator-side completion of the objective (adds regularizers /
+    /// model-wide terms to the summed shard losses).
+    fn objective_from(&self, shard_sum: f64) -> f64;
+
+    /// Whether lower objective is better (Lasso/MF minimize; LDA maximizes
+    /// log-likelihood).
+    fn minimizing() -> bool {
+        true
+    }
+
+    // ---- accounting hooks (network + memory modelling) ----
+    fn task_bytes(task: &Self::Task) -> usize;
+    fn partial_bytes(partial: &Self::Partial) -> usize;
+    fn sync_bytes(msg: &Self::SyncMsg) -> usize;
+
+    /// When true, task/partial payloads move worker↔worker (the rotation
+    /// pattern: model slices pass between peers / are served by the
+    /// partitioned KV store) and bypass the coordinator hub.  Scheduling
+    /// metadata and sync broadcasts always use the hub.
+    fn p2p_payloads() -> bool {
+        false
+    }
+
+    /// Worker model-state residency in bytes (paper Fig 3); data shards are
+    /// excluded by convention (identical across systems).
+    fn model_bytes(ws: &Self::WorkerState) -> u64;
+}
+
+/// Engine run parameters.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub max_rounds: u64,
+    /// Evaluate the objective every this many rounds.
+    pub eval_every: u64,
+    /// Stop when the objective improves less than this (relative) between
+    /// consecutive evals.  None = run all rounds.
+    pub rel_tol: Option<f64>,
+    pub network: NetworkConfig,
+    /// Per-machine model-memory capacity (None = unlimited).
+    pub mem_capacity: Option<u64>,
+    /// Label for the recorder.
+    pub label: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            max_rounds: 100,
+            eval_every: 10,
+            rel_tol: None,
+            network: NetworkConfig::ideal(),
+            mem_capacity: None,
+            label: "run".to_string(),
+        }
+    }
+}
+
+/// Outcome of an engine run.
+#[derive(Debug)]
+pub struct RunResult {
+    pub recorder: Recorder,
+    pub rounds_run: u64,
+    pub virtual_secs: f64,
+    pub wall_secs: f64,
+    pub final_objective: f64,
+    pub max_model_bytes_per_machine: u64,
+    pub total_network_bytes: u64,
+    /// Set if a worker exceeded the modelled memory capacity.
+    pub oom: Option<String>,
+}
+
+/// The coordinator: owns the app, the worker pool, and all accounting.
+pub struct Engine<A: StradsApp> {
+    app: A,
+    pool: WorkerPool<A::WorkerState>,
+    network: NetworkModel,
+    clock: VirtualClock,
+    memory: MemoryTracker,
+}
+
+impl<A: StradsApp> Engine<A> {
+    pub fn new(app: A, worker_states: Vec<A::WorkerState>, cfg: &RunConfig) -> Self {
+        let n = worker_states.len();
+        Engine {
+            app,
+            pool: WorkerPool::new(worker_states),
+            network: NetworkModel::new(cfg.network, n),
+            clock: VirtualClock::new(),
+            memory: MemoryTracker::new(n, cfg.mem_capacity),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.pool.n_workers()
+    }
+
+    pub fn app(&self) -> &A {
+        &self.app
+    }
+
+    pub fn app_mut(&mut self) -> &mut A {
+        &mut self.app
+    }
+
+    pub fn clock(&self) -> &VirtualClock {
+        &self.clock
+    }
+
+    /// Execute one schedule→push→pull→sync round.  Returns the measured
+    /// coordinator-side seconds (schedule+pull).
+    pub fn round(&mut self, round_idx: u64) -> f64 {
+        let coord = Stopwatch::start();
+        let tasks = self.app.schedule(round_idx);
+        assert_eq!(
+            tasks.len(),
+            self.pool.n_workers(),
+            "schedule must emit one task per worker"
+        );
+        for (p, t) in tasks.iter().enumerate() {
+            if A::p2p_payloads() {
+                self.network.send_p2p(p, A::task_bytes(t));
+            } else {
+                self.network.send_down(p, A::task_bytes(t));
+            }
+        }
+        let schedule_secs = coord.secs();
+
+        // dispatch push: tasks move into per-worker closures
+        let slots = RefCell::new(tasks.into_iter().map(Some).collect::<Vec<_>>());
+        let results = self.pool.run(|p| {
+            let task = slots.borrow_mut()[p].take().expect("one task per worker");
+            move |ws: &mut A::WorkerState| A::push(ws, task)
+        });
+
+        let mut partials = Vec::with_capacity(results.len());
+        let mut compute_secs = Vec::with_capacity(results.len());
+        for (p, (partial, secs)) in results.into_iter().enumerate() {
+            if A::p2p_payloads() {
+                self.network.send_p2p(p, A::partial_bytes(&partial));
+            } else {
+                self.network.send_up(p, A::partial_bytes(&partial));
+            }
+            partials.push(partial);
+            compute_secs.push(secs);
+        }
+
+        let pull_sw = Stopwatch::start();
+        let sync_msg = self.app.pull(round_idx, partials);
+        let pull_secs = pull_sw.secs();
+
+        if let Some(msg) = sync_msg {
+            for p in 0..self.pool.n_workers() {
+                self.network.send_down(p, A::sync_bytes(&msg));
+            }
+            self.pool.broadcast(|_| {
+                let msg = msg.clone();
+                move |ws: &mut A::WorkerState| A::sync(ws, &msg)
+            });
+        }
+
+        let comm = self.network.round_time_and_reset();
+        let coord_secs = schedule_secs + pull_secs;
+        self.clock.advance_round(&compute_secs, comm, coord_secs);
+        coord_secs
+    }
+
+    /// Query the current global objective (not charged to the clock: the
+    /// paper evaluates off the critical path).
+    pub fn evaluate(&mut self) -> f64 {
+        let shard_sum: f64 = self
+            .pool
+            .run(|_| |ws: &mut A::WorkerState| A::eval(ws))
+            .into_iter()
+            .map(|(v, _)| v)
+            .sum();
+        self.app.objective_from(shard_sum)
+    }
+
+    /// Refresh the per-machine memory census.  Returns Err on capacity
+    /// violation (the baseline-DNF mechanism of Fig 8).
+    pub fn memory_census(&mut self) -> Result<u64, String> {
+        let sizes = self
+            .pool
+            .run(|_| |ws: &mut A::WorkerState| A::model_bytes(ws));
+        let mut err = None;
+        for (p, (bytes, _)) in sizes.into_iter().enumerate() {
+            if let Err(e) = self.memory.set(p, bytes) {
+                err = Some(e.to_string());
+            }
+        }
+        match err {
+            Some(e) => Err(e),
+            None => Ok(self.memory.max_per_machine()),
+        }
+    }
+
+    /// Run a full experiment loop with periodic evaluation and optional
+    /// early stop.
+    pub fn run(&mut self, cfg: &RunConfig) -> RunResult {
+        let wall = Stopwatch::start();
+        let mut recorder = Recorder::new(&cfg.label);
+        let mut last_obj = self.evaluate();
+        recorder.record(0, self.clock.seconds(), wall.secs(), last_obj);
+        let mut oom = None;
+
+        let mut rounds_run = 0;
+        for r in 0..cfg.max_rounds {
+            self.round(r);
+            rounds_run = r + 1;
+            if (r + 1) % cfg.eval_every == 0 || r + 1 == cfg.max_rounds {
+                let obj = self.evaluate();
+                recorder.record(r + 1, self.clock.seconds(), wall.secs(), obj);
+                if let Err(e) = self.memory_census() {
+                    oom = Some(e);
+                    break;
+                }
+                if let Some(tol) = cfg.rel_tol {
+                    let denom = last_obj.abs().max(1e-12);
+                    if ((last_obj - obj).abs() / denom) < tol {
+                        last_obj = obj;
+                        break;
+                    }
+                }
+                last_obj = obj;
+            }
+        }
+
+        RunResult {
+            rounds_run,
+            virtual_secs: self.clock.seconds(),
+            wall_secs: wall.secs(),
+            final_objective: last_obj,
+            max_model_bytes_per_machine: self.memory.max_per_machine(),
+            total_network_bytes: self.network.total_bytes(),
+            recorder,
+            oom,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy app: distributed sum-reduction toward a target.  Each worker
+    /// holds a number; pull averages them; sync overwrites.  Converges to
+    /// consensus in one round — exercises every engine path.
+    struct Consensus {
+        n_workers: usize,
+        committed: f64,
+    }
+
+    impl StradsApp for Consensus {
+        type Task = u64;
+        type Partial = f64;
+        type SyncMsg = f64;
+        type WorkerState = f64;
+
+        fn schedule(&mut self, round: u64) -> Vec<u64> {
+            vec![round; self.n_workers]
+        }
+
+        fn push(ws: &mut f64, _task: u64) -> f64 {
+            *ws
+        }
+
+        fn pull(&mut self, _round: u64, partials: Vec<f64>) -> Option<f64> {
+            self.committed =
+                partials.iter().sum::<f64>() / partials.len() as f64;
+            Some(self.committed)
+        }
+
+        fn sync(ws: &mut f64, msg: &f64) {
+            *ws = *msg;
+        }
+
+        fn eval(ws: &mut f64) -> f64 {
+            *ws
+        }
+
+        fn objective_from(&self, shard_sum: f64) -> f64 {
+            shard_sum
+        }
+
+        fn task_bytes(_: &u64) -> usize {
+            8
+        }
+        fn partial_bytes(_: &f64) -> usize {
+            8
+        }
+        fn sync_bytes(_: &f64) -> usize {
+            8
+        }
+        fn model_bytes(_: &f64) -> u64 {
+            8
+        }
+    }
+
+    #[test]
+    fn consensus_in_one_round() {
+        let app = Consensus { n_workers: 4, committed: 0.0 };
+        let cfg = RunConfig { max_rounds: 2, eval_every: 1, ..Default::default() };
+        let mut e = Engine::new(app, vec![1.0, 2.0, 3.0, 6.0], &cfg);
+        assert_eq!(e.evaluate(), 12.0);
+        e.round(0);
+        // all workers now hold the mean 3.0
+        assert_eq!(e.evaluate(), 12.0);
+        assert_eq!(e.app().committed, 3.0);
+    }
+
+    #[test]
+    fn run_records_trajectory_and_clock() {
+        let app = Consensus { n_workers: 2, committed: 0.0 };
+        let cfg = RunConfig {
+            max_rounds: 5,
+            eval_every: 1,
+            network: NetworkConfig::gbps1(),
+            label: "consensus".into(),
+            ..Default::default()
+        };
+        let mut e = Engine::new(app, vec![0.0, 10.0], &cfg);
+        let res = e.run(&cfg);
+        assert_eq!(res.rounds_run, 5);
+        assert_eq!(res.recorder.points().len(), 6); // initial + 5 evals
+        assert!(res.virtual_secs > 0.0);
+        assert!(res.total_network_bytes > 0);
+        assert!(res.oom.is_none());
+        assert_eq!(res.max_model_bytes_per_machine, 8);
+    }
+
+    #[test]
+    fn memory_capacity_aborts_run() {
+        let app = Consensus { n_workers: 2, committed: 0.0 };
+        let cfg = RunConfig {
+            max_rounds: 10,
+            eval_every: 1,
+            mem_capacity: Some(4), // below the 8-byte model
+            ..Default::default()
+        };
+        let mut e = Engine::new(app, vec![0.0, 1.0], &cfg);
+        let res = e.run(&cfg);
+        assert!(res.oom.is_some());
+        assert!(res.rounds_run < 10);
+    }
+
+    #[test]
+    fn rel_tol_stops_early() {
+        let app = Consensus { n_workers: 2, committed: 0.0 };
+        let cfg = RunConfig {
+            max_rounds: 100,
+            eval_every: 1,
+            rel_tol: Some(1e-9),
+            ..Default::default()
+        };
+        let mut e = Engine::new(app, vec![5.0, 5.0], &cfg);
+        let res = e.run(&cfg);
+        assert!(res.rounds_run <= 2, "stopped at {}", res.rounds_run);
+    }
+}

@@ -1,0 +1,7 @@
+//! The STRADS round engine: executes user-defined **schedule**, **push**,
+//! **pull** primitives in order, with automatic BSP **sync** (paper §2,
+//! Fig 1), over the simulated cluster.
+
+pub mod engine;
+
+pub use engine::{Engine as StradsEngine, RunConfig, RunResult, StradsApp};

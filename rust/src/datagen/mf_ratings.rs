@@ -1,0 +1,143 @@
+//! Netflix-like rating matrix generator (paper §4.1, MF experiments).
+//!
+//! The Netflix data (480,189 users × 17,770 movies, 100M ratings ≈ 1.2%
+//! density) is proprietary; we synthesize a low-rank-plus-noise matrix with
+//! matched density and scaled dimensions — CCD/ALS cost and convergence are
+//! governed by rank, density and conditioning, which this preserves
+//! (DESIGN.md §4).
+
+use crate::sparse::CsrMatrix;
+use crate::util::Rng;
+
+/// A generated rating problem.
+pub struct RatingMatrix {
+    /// Observed ratings, CSR (users × items).
+    pub a: CsrMatrix,
+    /// Ground-truth rank used for synthesis.
+    pub true_rank: usize,
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct MfGenConfig {
+    pub n_users: usize,
+    pub n_items: usize,
+    /// Observation density (paper's Netflix: ~0.012).
+    pub density: f64,
+    /// Ground-truth rank of the synthesized preference structure.
+    pub true_rank: usize,
+    /// Observation noise stddev.
+    pub noise_sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for MfGenConfig {
+    fn default() -> Self {
+        MfGenConfig {
+            n_users: 2000,
+            n_items: 1500,
+            density: 0.012,
+            true_rank: 8,
+            noise_sigma: 0.1,
+            seed: 2,
+        }
+    }
+}
+
+/// Generate ratings A ≈ U V^T + noise at the requested density.
+pub fn generate(cfg: &MfGenConfig) -> RatingMatrix {
+    let mut rng = Rng::new(cfg.seed);
+    let k = cfg.true_rank;
+    let scale = 1.0 / (k as f64).sqrt();
+    let u: Vec<f32> = (0..cfg.n_users * k)
+        .map(|_| (rng.normal() * scale) as f32)
+        .collect();
+    let v: Vec<f32> = (0..cfg.n_items * k)
+        .map(|_| (rng.normal() * scale) as f32)
+        .collect();
+
+    let mut trips = Vec::new();
+    for i in 0..cfg.n_users {
+        for j in 0..cfg.n_items {
+            if rng.next_f64() < cfg.density {
+                let mut val = 0.0f32;
+                for p in 0..k {
+                    val += u[i * k + p] * v[j * k + p];
+                }
+                val += (rng.normal() * cfg.noise_sigma) as f32;
+                trips.push((i as u32, j as u32, val));
+            }
+        }
+    }
+    // guarantee every user/item has at least one rating (avoids dead rows)
+    for i in 0..cfg.n_users {
+        let j = rng.below(cfg.n_items);
+        trips.push((i as u32, j as u32, 0.1));
+    }
+    for j in 0..cfg.n_items {
+        let i = rng.below(cfg.n_users);
+        trips.push((i as u32, j as u32, 0.1));
+    }
+    // dedupe (keep first) — from_triplets would sum duplicates otherwise
+    trips.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+    trips.dedup_by_key(|&mut (r, c, _)| ((r as u64) << 32) | c as u64);
+
+    RatingMatrix {
+        a: CsrMatrix::from_triplets(cfg.n_users, cfg.n_items, &trips),
+        true_rank: k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> MfGenConfig {
+        MfGenConfig {
+            n_users: 300,
+            n_items: 200,
+            density: 0.05,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn density_is_close_to_requested() {
+        let r = generate(&small());
+        let density =
+            r.a.nnz() as f64 / (r.a.rows() as f64 * r.a.cols() as f64);
+        assert!((density - 0.05).abs() < 0.02, "density={density}");
+    }
+
+    #[test]
+    fn no_empty_rows_or_columns() {
+        let r = generate(&small());
+        for i in 0..r.a.rows() {
+            assert!(r.a.row_nnz(i) > 0, "empty user row {i}");
+        }
+        let t = r.a.transpose();
+        for j in 0..t.rows() {
+            assert!(t.row_nnz(j) > 0, "empty item column {j}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        assert_eq!(generate(&small()).a, generate(&small()).a);
+    }
+
+    #[test]
+    fn low_rank_structure_is_recoverable() {
+        // The best rank-k approximation of the generated data must explain
+        // much more variance than noise would: check via the generator's own
+        // factors implicitly — ratings should have nontrivial magnitude.
+        let r = generate(&small());
+        let mut sumsq = 0.0f64;
+        for i in 0..r.a.rows() {
+            for (_, v) in r.a.row_iter(i) {
+                sumsq += (v as f64) * (v as f64);
+            }
+        }
+        assert!(sumsq / r.a.nnz() as f64 > 0.01);
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic workload generators matching the paper's §4.1 datasets.
+//!
+//! * [`lasso_synth`] — the **exact** recipe from the paper: 25 non-zero
+//!   samples per feature, with adjacent-feature correlation injected via a
+//!   0.9-probability noise carryover chain.
+//! * [`mf_ratings`] — Netflix-like low-rank + noise rating matrices at the
+//!   paper's density (~1.2%).
+//! * [`lda_corpus`] — Zipf-distributed synthetic corpus standing in for the
+//!   3.9M-abstract Wikipedia dump (see DESIGN.md §4 substitutions).
+
+pub mod lasso_synth;
+pub mod lda_corpus;
+pub mod mf_ratings;
+
+pub use lasso_synth::LassoProblem;
+pub use lda_corpus::Corpus;
+pub use mf_ratings::RatingMatrix;

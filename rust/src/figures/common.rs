@@ -1,0 +1,175 @@
+//! Shared experiment-construction helpers for the figure harnesses.
+
+use crate::apps::lasso::{LassoApp, LassoConfig, LassoSched};
+use crate::apps::lda::{setup as lda_setup, LdaApp};
+use crate::apps::mf::{MfApp, MfConfig};
+use crate::backend::native::{NativeLassoShard, NativeMfShard};
+use crate::backend::{LassoShard, MfShard};
+use crate::coordinator::{RunConfig, StradsEngine};
+use crate::datagen::lasso_synth::{self, LassoGenConfig};
+use crate::datagen::lda_corpus::{self, CorpusConfig};
+use crate::datagen::mf_ratings::{self, MfGenConfig};
+use crate::datagen::Corpus;
+use crate::scheduler::priority::{PriorityConfig, PriorityScheduler};
+use crate::scheduler::RandomScheduler;
+use crate::sparse::CscMatrix;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// Canonical LDA experiment corpus for figure harnesses.
+pub fn figure_corpus(vocab: usize, n_docs: usize, seed: u64) -> Corpus {
+    lda_corpus::generate(&CorpusConfig {
+        n_docs,
+        vocab,
+        doc_len_mean: 40,
+        n_topics: 20,
+        zipf_alpha: 1.1,
+        seed,
+    })
+}
+
+/// Build a STRADS LDA engine over a corpus.
+pub fn lda_engine(
+    corpus: &Corpus,
+    k: usize,
+    workers: usize,
+    seed: u64,
+    cfg: &RunConfig,
+) -> StradsEngine<LdaApp> {
+    let s = lda_setup::build(corpus, k, workers, 0.1, 0.01, seed);
+    StradsEngine::new(s.app, s.shards, cfg)
+}
+
+/// Build a STRADS Lasso engine (priority or random scheduling) on the
+/// paper-recipe data (0.9 independent-noise probability).
+pub fn lasso_engine(
+    n: usize,
+    j: usize,
+    workers: usize,
+    u: usize,
+    priority: bool,
+    lambda: f32,
+    seed: u64,
+    cfg: &RunConfig,
+) -> (StradsEngine<LassoApp>, Arc<CscMatrix>) {
+    lasso_engine_corr(n, j, workers, u, priority, lambda, 0.9, seed, cfg)
+}
+
+/// Like [`lasso_engine`] but with a configurable correlation level
+/// (`independent_prob` from the paper's recipe; lower ⇒ more correlated
+/// adjacent features).
+#[allow(clippy::too_many_arguments)]
+pub fn lasso_engine_corr(
+    n: usize,
+    j: usize,
+    workers: usize,
+    u: usize,
+    priority: bool,
+    lambda: f32,
+    independent_prob: f64,
+    seed: u64,
+    cfg: &RunConfig,
+) -> (StradsEngine<LassoApp>, Arc<CscMatrix>) {
+    let prob = lasso_synth::generate(&LassoGenConfig {
+        n_samples: n,
+        n_features: j,
+        independent_prob,
+        seed,
+        ..Default::default()
+    });
+    let x = Arc::new(prob.x);
+    let sched = if priority {
+        LassoSched::Priority(PriorityScheduler::new(
+            j,
+            PriorityConfig::paper_defaults(u),
+            seed ^ 0x51,
+        ))
+    } else {
+        LassoSched::Random(RandomScheduler::new(j, u, seed ^ 0x51))
+    };
+    let app = LassoApp::new(
+        x.clone(),
+        LassoConfig { lambda, n_workers: workers },
+        sched,
+    );
+    let per = n / workers;
+    let mut states: Vec<Box<dyn LassoShard>> = Vec::new();
+    for p in 0..workers {
+        let lo = p * per;
+        let hi = if p == workers - 1 { n } else { lo + per };
+        states.push(Box::new(NativeLassoShard::new(
+            x.row_slice(lo, hi),
+            prob.y[lo..hi].to_vec(),
+        )));
+    }
+    (StradsEngine::new(app, states, cfg), x)
+}
+
+/// Build a STRADS MF engine over generated ratings.
+pub fn mf_engine(
+    users: usize,
+    items: usize,
+    rank: usize,
+    workers: usize,
+    lambda: f32,
+    seed: u64,
+    cfg: &RunConfig,
+) -> StradsEngine<MfApp> {
+    let data = mf_ratings::generate(&MfGenConfig {
+        n_users: users,
+        n_items: items,
+        density: 0.012,
+        true_rank: 8.min(rank),
+        seed,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let scale = 1.0 / (rank as f32).sqrt();
+    let h0: Vec<f32> = (0..rank * items).map(|_| rng.normal_f32() * scale).collect();
+    let app = MfApp::new(
+        MfConfig { rank, n_items: items, lambda, n_workers: workers },
+        h0.clone(),
+    );
+    let per = users / workers;
+    let mut states: Vec<Box<dyn MfShard>> = Vec::new();
+    for p in 0..workers {
+        let lo = p * per;
+        let hi = if p == workers - 1 { users } else { lo + per };
+        let shard = data.a.row_slice(lo, hi);
+        let w0: Vec<f32> = (0..shard.rows() * rank)
+            .map(|_| rng.normal_f32() * scale)
+            .collect();
+        states.push(Box::new(NativeMfShard::new(
+            shard, w0, h0.clone(), rank, lambda,
+        )));
+    }
+    StradsEngine::new(app, states, cfg)
+}
+
+/// Pretty-print a results table (fixed-width columns).
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let widths: Vec<usize> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|r| r.get(i).map(|c| c.len()).unwrap_or(0))
+                .chain(std::iter::once(h.len()))
+                .max()
+                .unwrap_or(h.len())
+        })
+        .collect();
+    let line = |cells: Vec<String>| {
+        let mut s = String::from("  ");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{s}");
+    };
+    line(headers.iter().map(|h| h.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for r in rows {
+        line(r.clone());
+    }
+}

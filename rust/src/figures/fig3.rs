@@ -1,0 +1,148 @@
+//! **Figure 3** — Topic modeling: memory usage per machine, STRADS
+//! (model-parallel) vs YahooLDA-style (data-parallel), as machines grow.
+//!
+//! Paper result: with more machines, STRADS LDA uses *less memory per
+//! machine* (the word-topic table is partitioned), while YahooLDA's
+//! per-machine usage stays ≈ flat (full replication).
+
+use crate::baselines::{YahooLda, YahooLdaConfig};
+use crate::cluster::NetworkConfig;
+use crate::coordinator::RunConfig;
+use crate::figures::common::{figure_corpus, lda_engine, print_table};
+use crate::util::JsonValue;
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub machines: usize,
+    pub strads_bytes: u64,
+    pub yahoo_bytes: u64,
+}
+
+/// Experiment parameters.
+#[derive(Debug, Clone)]
+pub struct Fig3Config {
+    pub vocab: usize,
+    pub n_docs: usize,
+    pub n_topics: usize,
+    pub machine_counts: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for Fig3Config {
+    fn default() -> Self {
+        Fig3Config {
+            vocab: 20_000,
+            n_docs: 1_000,
+            n_topics: 100,
+            machine_counts: vec![2, 4, 8, 16, 32],
+            seed: 42,
+        }
+    }
+}
+
+/// Run the experiment and return one row per machine count.
+pub fn run(cfg: &Fig3Config) -> Vec<Fig3Row> {
+    let corpus = figure_corpus(cfg.vocab, cfg.n_docs, cfg.seed);
+    let mut rows = Vec::new();
+    for &p in &cfg.machine_counts {
+        // STRADS: run one rotation round then census
+        let run_cfg = RunConfig::default();
+        let mut strads =
+            lda_engine(&corpus, cfg.n_topics, p, cfg.seed, &run_cfg);
+        strads.round(0);
+        // census reports worker-resident model state; add the leased B
+        // slice (V/p words × K), the in-flight model partition a worker
+        // holds at peak.
+        let worker_bytes = strads.memory_census().unwrap_or(0);
+        let slice_bytes =
+            ((cfg.vocab / p).max(1) * cfg.n_topics * 4) as u64;
+        let strads_bytes = worker_bytes + slice_bytes;
+
+        let mut yahoo = YahooLda::new(
+            &corpus,
+            YahooLdaConfig {
+                n_topics: cfg.n_topics,
+                alpha: 0.1,
+                gamma: 0.01,
+                n_workers: p,
+                seed: cfg.seed,
+            },
+            NetworkConfig::gbps1(),
+            None,
+        );
+        let yahoo_bytes = yahoo.memory_census().unwrap_or(u64::MAX);
+
+        rows.push(Fig3Row { machines: p, strads_bytes, yahoo_bytes });
+    }
+    rows
+}
+
+/// Print the figure's series.
+pub fn print(rows: &[Fig3Row]) {
+    print_table(
+        "Figure 3: LDA memory per machine (bytes)",
+        &["machines", "STRADS", "YahooLDA", "ratio"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.machines.to_string(),
+                    r.strads_bytes.to_string(),
+                    r.yahoo_bytes.to_string(),
+                    format!(
+                        "{:.2}x",
+                        r.yahoo_bytes as f64 / r.strads_bytes.max(1) as f64
+                    ),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+/// JSON emission for downstream plotting.
+pub fn to_json(rows: &[Fig3Row]) -> JsonValue {
+    JsonValue::Arr(
+        rows.iter()
+            .map(|r| {
+                JsonValue::obj()
+                    .field("machines", r.machines)
+                    .field("strads_bytes", r.strads_bytes)
+                    .field("yahoo_bytes", r.yahoo_bytes)
+                    .build()
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Fig3Config {
+        Fig3Config {
+            vocab: 2_000,
+            n_docs: 150,
+            n_topics: 16,
+            machine_counts: vec![2, 4, 8],
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn strads_memory_shrinks_with_machines() {
+        let rows = run(&quick());
+        assert!(rows[2].strads_bytes < rows[0].strads_bytes);
+    }
+
+    #[test]
+    fn yahoo_memory_stays_flat_and_dominates() {
+        let rows = run(&quick());
+        // replication: per-machine usage does not shrink proportionally
+        let ratio =
+            rows[0].yahoo_bytes as f64 / rows[2].yahoo_bytes as f64;
+        assert!(ratio < 2.0, "yahoo dropped {ratio}x over 4x machines");
+        // and at 8 machines STRADS is well below YahooLDA
+        assert!(rows[2].strads_bytes * 2 < rows[2].yahoo_bytes);
+    }
+}

@@ -1,0 +1,10 @@
+//! One harness per paper figure; each returns structured rows/series and
+//! prints the same quantities the paper plots.  Shared by the `cargo bench`
+//! targets and `examples/paper_figures.rs`.
+
+pub mod common;
+pub mod fig10;
+pub mod fig3;
+pub mod fig5;
+pub mod fig8;
+pub mod fig9;

@@ -1,0 +1,18 @@
+//! Partitioned key-value store for model variables (paper §2, "Sync").
+//!
+//! Model variables live in a partitioned store owned by the coordinator
+//! side; workers receive values through **push** payloads and BSP **sync**
+//! broadcasts.  Two pieces:
+//!
+//! * [`SliceStore`] — exclusively-leased model partitions (the LDA
+//!   word-topic table slices that *rotate* between workers: one owner per
+//!   slice per round, enforced at runtime).
+//! * [`VersionedParams`] — a BSP-versioned dense parameter block (Lasso's
+//!   beta, MF's H): `commit` bumps the version, `snapshot` hands out the
+//!   committed value.  Staleness tracking supports the SSP extension.
+
+pub mod slices;
+pub mod versioned;
+
+pub use slices::{SliceLease, SliceStore};
+pub use versioned::VersionedParams;

@@ -1,0 +1,116 @@
+//! Exclusively-leased model partitions.
+//!
+//! STRADS LDA partitions the word-topic table **B** into U slices that
+//! rotate among workers; correctness requires that at most one worker holds
+//! a slice at any time (disjointness is what makes parallel Gibbs nearly
+//! exact, paper §3.1).  `SliceStore` enforces that invariant at runtime:
+//! `checkout` moves the slice out (panicking on double-checkout — a
+//! scheduling bug), `checkin` returns it.
+
+/// A checked-out slice; must be returned via [`SliceStore::checkin`].
+#[derive(Debug)]
+pub struct SliceLease<T> {
+    pub slice_id: usize,
+    pub data: T,
+    /// Version at checkout time (incremented every checkin).
+    pub version: u64,
+}
+
+/// Store of `n` exclusively-leased partitions.
+#[derive(Debug)]
+pub struct SliceStore<T> {
+    slots: Vec<Option<T>>,
+    versions: Vec<u64>,
+}
+
+impl<T> SliceStore<T> {
+    /// Build from initial slice contents.
+    pub fn new(slices: Vec<T>) -> Self {
+        let n = slices.len();
+        SliceStore { slots: slices.into_iter().map(Some).collect(), versions: vec![0; n] }
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Exclusive checkout.  Panics if the slice is already leased — that is
+    /// a scheduler bug (two workers assigned the same partition).
+    pub fn checkout(&mut self, slice_id: usize) -> SliceLease<T> {
+        let data = self.slots[slice_id]
+            .take()
+            .unwrap_or_else(|| panic!("slice {slice_id} already leased"));
+        SliceLease { slice_id, data, version: self.versions[slice_id] }
+    }
+
+    /// Return a leased slice, bumping its version.
+    pub fn checkin(&mut self, lease: SliceLease<T>) {
+        assert!(
+            self.slots[lease.slice_id].is_none(),
+            "slice {} returned twice",
+            lease.slice_id
+        );
+        self.versions[lease.slice_id] = lease.version + 1;
+        self.slots[lease.slice_id] = Some(lease.data);
+    }
+
+    /// Is the slice currently leased out?
+    pub fn is_leased(&self, slice_id: usize) -> bool {
+        self.slots[slice_id].is_none()
+    }
+
+    /// Read-only access to a checked-in slice.
+    pub fn peek(&self, slice_id: usize) -> Option<&T> {
+        self.slots[slice_id].as_ref()
+    }
+
+    pub fn version(&self, slice_id: usize) -> u64 {
+        self.versions[slice_id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_checkin_roundtrip() {
+        let mut s = SliceStore::new(vec![vec![1.0f32], vec![2.0]]);
+        let lease = s.checkout(0);
+        assert!(s.is_leased(0));
+        assert!(!s.is_leased(1));
+        assert_eq!(lease.data, vec![1.0]);
+        s.checkin(lease);
+        assert!(!s.is_leased(0));
+        assert_eq!(s.version(0), 1);
+        assert_eq!(s.version(1), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already leased")]
+    fn double_checkout_panics() {
+        let mut s = SliceStore::new(vec![0u8, 1]);
+        let _a = s.checkout(1);
+        let _b = s.checkout(1);
+    }
+
+    #[test]
+    fn peek_reads_without_lease() {
+        let mut s = SliceStore::new(vec![7i32]);
+        assert_eq!(s.peek(0), Some(&7));
+        let lease = s.checkout(0);
+        assert_eq!(s.peek(0), None);
+        s.checkin(lease);
+        assert_eq!(s.peek(0), Some(&7));
+    }
+
+    #[test]
+    fn versions_count_checkins() {
+        let mut s = SliceStore::new(vec![0u8]);
+        for expect in 1..=5u64 {
+            let lease = s.checkout(0);
+            s.checkin(lease);
+            assert_eq!(s.version(0), expect);
+        }
+    }
+}

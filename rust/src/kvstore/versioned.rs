@@ -1,0 +1,93 @@
+//! BSP-versioned parameter block.
+//!
+//! The coordinator commits pull results here; workers are brought up to
+//! date by sync broadcasts.  Versions let us implement BSP strictly (the
+//! default, as in the paper) and support the SSP extension: a reader
+//! declares its version and the store reports the staleness gap.
+
+/// A dense parameter vector with a monotone version counter.
+#[derive(Debug, Clone)]
+pub struct VersionedParams<T: Clone> {
+    value: T,
+    version: u64,
+}
+
+impl<T: Clone> VersionedParams<T> {
+    pub fn new(initial: T) -> Self {
+        VersionedParams { value: initial, version: 0 }
+    }
+
+    /// Commit a full replacement (pull output), bumping the version.
+    pub fn commit(&mut self, value: T) -> u64 {
+        self.value = value;
+        self.version += 1;
+        self.version
+    }
+
+    /// Commit via in-place mutation, bumping the version.
+    pub fn commit_with<F: FnOnce(&mut T)>(&mut self, f: F) -> u64 {
+        f(&mut self.value);
+        self.version += 1;
+        self.version
+    }
+
+    /// Current committed value (coordinator-side read).
+    pub fn read(&self) -> &T {
+        &self.value
+    }
+
+    /// Clone-out snapshot for a sync broadcast.
+    pub fn snapshot(&self) -> (T, u64) {
+        (self.value.clone(), self.version)
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Staleness of a reader holding `reader_version` — 0 under strict BSP.
+    pub fn staleness(&self, reader_version: u64) -> u64 {
+        self.version.saturating_sub(reader_version)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commit_bumps_version() {
+        let mut p = VersionedParams::new(vec![0.0f32; 3]);
+        assert_eq!(p.version(), 0);
+        let v = p.commit(vec![1.0, 2.0, 3.0]);
+        assert_eq!(v, 1);
+        assert_eq!(p.read(), &vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn commit_with_mutates_in_place() {
+        let mut p = VersionedParams::new(vec![1.0f32, 2.0]);
+        p.commit_with(|v| v[0] = 9.0);
+        assert_eq!(p.read(), &vec![9.0, 2.0]);
+        assert_eq!(p.version(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_consistent() {
+        let mut p = VersionedParams::new(5i64);
+        p.commit(6);
+        let (val, ver) = p.snapshot();
+        assert_eq!((val, ver), (6, 1));
+    }
+
+    #[test]
+    fn staleness_gap() {
+        let mut p = VersionedParams::new(());
+        for _ in 0..4 {
+            p.commit(());
+        }
+        assert_eq!(p.staleness(4), 0);
+        assert_eq!(p.staleness(1), 3);
+        assert_eq!(p.staleness(9), 0); // future reader clamps to 0
+    }
+}

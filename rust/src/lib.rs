@@ -1,0 +1,50 @@
+//! # STRADS — Primitives for Dynamic Big Model Parallelism
+//!
+//! A reproduction of Lee, Kim, Zheng, Ho, Gibson & Xing, *"Primitives for
+//! Dynamic Big Model Parallelism"* (CMU, 2014): a **model-parallel**
+//! distributed ML framework built around three user-programmable
+//! primitives — [`schedule`](scheduler), **push**, and **pull** — plus an
+//! automatic BSP **sync**, executed by a rust coordinator over a simulated
+//! cluster of workers.
+//!
+//! The compute hot paths are AOT-compiled JAX/Pallas graphs (HLO text
+//! artifacts) executed through the PJRT C API ([`runtime`]); python never
+//! runs at coordination time.  A [`backend`] native implementation provides
+//! the same math in sparse rust for the model-size sweeps of the paper's
+//! evaluation, cross-checked against the XLA path in integration tests.
+//!
+//! Layout (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — PRNG, CLI args, JSON/CSV emit, stats, small linalg
+//! * [`sparse`] — CSC/CSR matrices for the Lasso/MF substrates
+//! * [`datagen`] — the paper's synthetic workloads (§4.1 recipes)
+//! * [`cluster`] — worker threads, star-topology network cost model,
+//!   per-machine memory accounting, virtual cluster clock
+//! * [`kvstore`] — partitioned model-variable store with leased shards
+//! * [`scheduler`] — rotation / round-robin / dynamic-priority / random
+//! * [`coordinator`] — the schedule→push→pull→sync round engine
+//! * [`apps`] — LDA, MF, Lasso expressed as STRADS applications
+//! * [`baselines`] — YahooLDA-style data-parallel LDA, ALS MF, Shotgun
+//! * [`backend`] — native compute kernels mirroring the L1/L2 math
+//! * [`runtime`] — PJRT client, artifact manifest, executable cache
+//! * [`metrics`] — objectives, s-error (paper eq. 1), recorders
+//! * [`figures`] — one harness per paper figure (3, 5, 8, 9, 10)
+//! * [`testing`] — minimal property-testing framework (offline substrate)
+
+pub mod apps;
+pub mod backend;
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod datagen;
+pub mod figures;
+pub mod kvstore;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod sparse;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

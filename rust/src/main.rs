@@ -1,0 +1,338 @@
+//! STRADS command-line interface.
+//!
+//! ```text
+//! strads train --app lasso|mf|lda [--workers N] [--rounds R] ...
+//! strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
+//! strads artifacts [--dir artifacts]          # inspect the AOT manifest
+//! strads datagen --kind lasso|mf|lda ...      # summarize a generated set
+//! ```
+//!
+//! (clap is unavailable in this offline build; `util::Args` provides the
+//! parsing.)
+
+use strads::cluster::NetworkConfig;
+use strads::coordinator::RunConfig;
+use strads::figures::{common, fig10, fig3, fig5, fig8, fig9};
+use strads::runtime::ArtifactManifest;
+use strads::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "figure" => cmd_figure(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "datagen" => cmd_datagen(&args),
+        _ => print_help(),
+    }
+}
+
+fn print_help() {
+    println!(
+        "STRADS — Primitives for Dynamic Big Model Parallelism (Lee et al. 2014)
+
+USAGE:
+  strads train --app lasso|mf|lda [options]
+      --workers N     simulated machines (default 8)
+      --rounds R      engine rounds (default 200)
+      --net 1g|40g|ideal   network model (default 40g)
+      --seed S
+      lasso: --features J --samples N --u U --lambda L --random (RR baseline)
+      mf:    --users N --items M --rank K --lambda L
+      lda:   --vocab V --docs D --topics K
+
+  strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
+      regenerate a paper figure's rows/series (scaled-down by default)
+
+  strads artifacts [--dir artifacts]
+      list the AOT artifact manifest (HLO-text graphs the runtime executes)
+
+  strads datagen --kind lasso|mf|lda [generator options]
+      generate + summarize a synthetic dataset (paper §4.1 recipes)"
+    );
+}
+
+fn cmd_train(args: &Args) {
+    // --config file provides defaults; CLI flags override
+    let cfg_file = args
+        .get("config")
+        .map(|p| strads::util::Config::load(p).expect("config file"))
+        .unwrap_or_default();
+    let app = args.str_or("app", &cfg_file.get("", "app").unwrap_or("lasso").to_string());
+    let workers = args.parse_or(
+        "workers",
+        cfg_file.parse_or("cluster", "workers", 8usize),
+    );
+    let rounds = args.parse_or("rounds", 200u64);
+    let seed = args.parse_or("seed", 42u64);
+    let net_name = args.str_or(
+        "net",
+        &cfg_file.get("cluster", "net").unwrap_or("40g").to_string(),
+    );
+    let network = match net_name.as_str() {
+        "1g" => NetworkConfig::gbps1(),
+        "ideal" => NetworkConfig::ideal(),
+        _ => NetworkConfig::gbps40(),
+    };
+    let run_cfg = RunConfig {
+        max_rounds: rounds,
+        eval_every: (rounds / 20).max(1),
+        network,
+        label: format!("{app}-train"),
+        ..Default::default()
+    };
+    match app.as_str() {
+        "lasso" => {
+            let j = args.parse_or(
+                "features",
+                cfg_file.parse_or("lasso", "features", 16_384usize),
+            );
+            let n = args.parse_or(
+                "samples",
+                cfg_file.parse_or("lasso", "samples", 512usize),
+            );
+            let u = args
+                .parse_or("u", cfg_file.parse_or("lasso", "u", 32usize));
+            let lambda = args.parse_or(
+                "lambda",
+                cfg_file.parse_or("lasso", "lambda", 0.05f32),
+            );
+            let priority = if args.flag("random") {
+                false
+            } else {
+                cfg_file.bool_or("lasso", "priority", true)
+            };
+            let (mut e, _) = common::lasso_engine(
+                n, j, workers, u, priority, lambda, seed, &run_cfg,
+            );
+            let res = e.run(&run_cfg);
+            report(&res.recorder, res.virtual_secs, res.wall_secs);
+            println!(
+                "final objective {:.6}, nnz(beta) = {}",
+                res.final_objective,
+                e.app().nnz()
+            );
+        }
+        "mf" => {
+            let users = args.parse_or("users", 2_000usize);
+            let items = args.parse_or("items", 1_500usize);
+            let rank = args.parse_or("rank", 32usize);
+            let lambda = args.parse_or("lambda", 0.05f32);
+            let mut e = common::mf_engine(
+                users, items, rank, workers, lambda, seed, &run_cfg,
+            );
+            let res = e.run(&run_cfg);
+            report(&res.recorder, res.virtual_secs, res.wall_secs);
+            println!("final objective {:.6}", res.final_objective);
+        }
+        "lda" => {
+            let vocab = args.parse_or("vocab", 20_000usize);
+            let docs = args.parse_or("docs", 2_000usize);
+            let k = args.parse_or("topics", 100usize);
+            let corpus = common::figure_corpus(vocab, docs, seed);
+            let mut e = common::lda_engine(&corpus, k, workers, seed, &run_cfg);
+            let res = e.run(&run_cfg);
+            report(&res.recorder, res.virtual_secs, res.wall_secs);
+            println!(
+                "final log-likelihood {:.4}, mean s-error {:.6}",
+                res.final_objective,
+                e.app().s_error_history.iter().sum::<f64>()
+                    / e.app().s_error_history.len().max(1) as f64
+            );
+        }
+        other => {
+            eprintln!("unknown app {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn report(rec: &strads::metrics::Recorder, vsecs: f64, wsecs: f64) {
+    println!("{:>8}  {:>12}  {:>16}", "round", "vtime(s)", "objective");
+    for p in rec.points() {
+        println!(
+            "{:>8}  {:>12.4}  {:>16.6}",
+            p.round, p.virtual_secs, p.objective
+        );
+    }
+    println!("virtual {vsecs:.3}s  wall {wsecs:.3}s");
+}
+
+fn cmd_figure(args: &Args) {
+    let fig = args.str_or("fig", "3");
+    let scale = args.parse_or("scale", 1.0f64);
+    let out = args.str_or("out", "results");
+    let sc = |v: usize| ((v as f64 * scale) as usize).max(8);
+    match fig.as_str() {
+        "3" => {
+            let rows = fig3::run(&fig3::Fig3Config {
+                vocab: sc(20_000),
+                n_docs: sc(1_000),
+                n_topics: sc(100),
+                ..Default::default()
+            });
+            fig3::print(&rows);
+            let _ = std::fs::create_dir_all(&out);
+            let _ = std::fs::write(
+                format!("{out}/fig3.json"),
+                fig3::to_json(&rows).to_json(),
+            );
+        }
+        "5" => {
+            let series = fig5::run(&fig5::Fig5Config {
+                vocab: sc(20_000),
+                n_docs: sc(2_000),
+                n_topics: sc(100),
+                ..Default::default()
+            });
+            fig5::print(&series);
+        }
+        "8lda" => {
+            let bars = fig8::run_lda(&fig8::LdaPanelConfig {
+                vocab: sc(20_000),
+                n_docs: sc(2_000),
+                ..Default::default()
+            });
+            fig8::print_panel(
+                "Figure 8 (left): LDA time-to-convergence vs model size",
+                "YahooLDA",
+                &bars,
+            );
+        }
+        "8mf" => {
+            let bars = fig8::run_mf(&fig8::MfPanelConfig {
+                users: sc(2_000),
+                items: sc(1_500),
+                ..Default::default()
+            });
+            fig8::print_panel(
+                "Figure 8 (center): MF time-to-convergence vs rank",
+                "GraphLab-ALS",
+                &bars,
+            );
+        }
+        "8lasso" => {
+            let bars = fig8::run_lasso(&fig8::LassoPanelConfig {
+                n_samples: sc(512),
+                ..Default::default()
+            });
+            fig8::print_panel(
+                "Figure 8 (right): Lasso time-to-convergence vs features",
+                "Lasso-RR",
+                &bars,
+            );
+        }
+        "9" => {
+            let cfg = fig9::Fig9Config { scale, ..Default::default() };
+            for panel in
+                [fig9::run_lda(&cfg), fig9::run_mf(&cfg), fig9::run_lasso(&cfg)]
+            {
+                fig9::print_panel(&panel);
+                let _ = panel.strads.save_csv(&out);
+                let _ = panel.baseline.save_csv(&out);
+            }
+        }
+        "10" => {
+            let rows = fig10::run(&fig10::Fig10Config {
+                vocab: sc(10_000),
+                n_docs: sc(5_000),
+                n_topics: sc(100),
+                ..Default::default()
+            });
+            fig10::print(&rows);
+            let _ = std::fs::create_dir_all(&out);
+            for r in &rows {
+                let _ = r.trajectory.save_csv(&out);
+            }
+        }
+        other => {
+            eprintln!("unknown figure {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = args.str_or("dir", "artifacts");
+    match ArtifactManifest::load(&dir) {
+        Err(e) => {
+            eprintln!("cannot load manifest from {dir}: {e:#}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+        Ok(m) => {
+            let mut names: Vec<&String> = m.artifacts.keys().collect();
+            names.sort();
+            for name in names {
+                let a = &m.artifacts[name];
+                println!("{name}");
+                for i in &a.inputs {
+                    println!("  in  {:<12} {:?} {:?}", i.name, i.dtype, i.dims);
+                }
+                for o in &a.outputs {
+                    println!("  out {:<12} {:?} {:?}", o.name, o.dtype, o.dims);
+                }
+            }
+        }
+    }
+}
+
+fn cmd_datagen(args: &Args) {
+    let kind = args.str_or("kind", "lasso");
+    let seed = args.parse_or("seed", 42u64);
+    match kind.as_str() {
+        "lasso" => {
+            let cfg = strads::datagen::lasso_synth::LassoGenConfig {
+                n_samples: args.parse_or("samples", 2048usize),
+                n_features: args.parse_or("features", 16_384usize),
+                seed,
+                ..Default::default()
+            };
+            let p = strads::datagen::lasso_synth::generate(&cfg);
+            println!(
+                "lasso: X {}x{} nnz={} ({} per col), correlated pairs={}",
+                p.x.rows(),
+                p.x.cols(),
+                p.x.nnz(),
+                p.x.nnz() / p.x.cols(),
+                p.correlated_pairs.len()
+            );
+        }
+        "mf" => {
+            let cfg = strads::datagen::mf_ratings::MfGenConfig {
+                n_users: args.parse_or("users", 2_000usize),
+                n_items: args.parse_or("items", 1_500usize),
+                seed,
+                ..Default::default()
+            };
+            let r = strads::datagen::mf_ratings::generate(&cfg);
+            println!(
+                "mf: A {}x{} nnz={} (density {:.4})",
+                r.a.rows(),
+                r.a.cols(),
+                r.a.nnz(),
+                r.a.nnz() as f64 / (r.a.rows() * r.a.cols()) as f64
+            );
+        }
+        "lda" => {
+            let cfg = strads::datagen::lda_corpus::CorpusConfig {
+                n_docs: args.parse_or("docs", 2_000usize),
+                vocab: args.parse_or("vocab", 20_000usize),
+                seed,
+                ..Default::default()
+            };
+            let c = strads::datagen::lda_corpus::generate(&cfg);
+            println!(
+                "lda: {} docs, vocab {}, {} tokens",
+                c.docs.len(),
+                c.vocab,
+                c.n_tokens()
+            );
+        }
+        other => {
+            eprintln!("unknown kind {other:?}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Convergence metrics, the paper's s-error (eq. 1), and run recorders.
+
+pub mod recorder;
+pub mod serror;
+
+pub use recorder::{Recorder, TrajectoryPoint};
+pub use serror::s_error;

@@ -1,0 +1,205 @@
+//! Run recorder: (round, virtual time, wall time, objective, extras)
+//! trajectories with CSV and JSON emission — the data source for every
+//! figure harness.
+
+use crate::util::JsonValue;
+use std::io::Write;
+
+/// One sample on a convergence trajectory.
+#[derive(Debug, Clone)]
+pub struct TrajectoryPoint {
+    pub round: u64,
+    pub virtual_secs: f64,
+    pub wall_secs: f64,
+    pub objective: f64,
+    /// App-specific extras, e.g. ("s_error", Δ_t) or ("nnz", count).
+    pub extras: Vec<(String, f64)>,
+}
+
+/// Collects trajectory points for one run.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub label: String,
+    points: Vec<TrajectoryPoint>,
+}
+
+impl Recorder {
+    pub fn new(label: &str) -> Self {
+        Recorder { label: label.to_string(), points: Vec::new() }
+    }
+
+    pub fn record(
+        &mut self,
+        round: u64,
+        virtual_secs: f64,
+        wall_secs: f64,
+        objective: f64,
+    ) {
+        self.points.push(TrajectoryPoint {
+            round,
+            virtual_secs,
+            wall_secs,
+            objective,
+            extras: Vec::new(),
+        });
+    }
+
+    pub fn record_with(
+        &mut self,
+        round: u64,
+        virtual_secs: f64,
+        wall_secs: f64,
+        objective: f64,
+        extras: Vec<(String, f64)>,
+    ) {
+        self.points.push(TrajectoryPoint { round, virtual_secs, wall_secs, objective, extras });
+    }
+
+    pub fn points(&self) -> &[TrajectoryPoint] {
+        &self.points
+    }
+
+    pub fn last_objective(&self) -> Option<f64> {
+        self.points.last().map(|p| p.objective)
+    }
+
+    pub fn best_objective_min(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.objective).fold(None, |acc, x| {
+            Some(acc.map_or(x, |a: f64| a.min(x)))
+        })
+    }
+
+    /// First virtual time at which the objective reaches `target`
+    /// (`minimize=true`: obj <= target; else obj >= target).
+    pub fn time_to_target(&self, target: f64, minimize: bool) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| {
+                if minimize {
+                    p.objective <= target
+                } else {
+                    p.objective >= target
+                }
+            })
+            .map(|p| p.virtual_secs)
+    }
+
+    /// CSV with a header; extras become extra columns (from first point).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("round,virtual_secs,wall_secs,objective");
+        let extra_names: Vec<&str> = self
+            .points
+            .first()
+            .map(|p| p.extras.iter().map(|(k, _)| k.as_str()).collect())
+            .unwrap_or_default();
+        for name in &extra_names {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.8}",
+                p.round, p.virtual_secs, p.wall_secs, p.objective
+            ));
+            for (_, v) in &p.extras {
+                out.push_str(&format!(",{v:.8}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj()
+            .field("label", self.label.as_str())
+            .field(
+                "points",
+                JsonValue::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            let mut o = JsonValue::obj()
+                                .field("round", p.round)
+                                .field("virtual_secs", p.virtual_secs)
+                                .field("wall_secs", p.wall_secs)
+                                .field("objective", p.objective);
+                            for (k, v) in &p.extras {
+                                o = o.field(k, *v);
+                            }
+                            o.build()
+                        })
+                        .collect(),
+                ),
+            )
+            .build()
+    }
+
+    /// Write CSV to `dir/<label>.csv` (creating `dir`).
+    pub fn save_csv(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{}/{}.csv", dir, self.label.replace([' ', '/'], "_"));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Recorder {
+        let mut r = Recorder::new("test");
+        r.record(0, 0.0, 0.0, 100.0);
+        r.record(1, 1.0, 0.5, 50.0);
+        r.record(2, 2.0, 1.0, 25.0);
+        r
+    }
+
+    #[test]
+    fn time_to_target_minimizing() {
+        let r = sample();
+        assert_eq!(r.time_to_target(50.0, true), Some(1.0));
+        assert_eq!(r.time_to_target(10.0, true), None);
+    }
+
+    #[test]
+    fn time_to_target_maximizing() {
+        let mut r = Recorder::new("ll");
+        r.record(0, 0.0, 0.0, -300.0);
+        r.record(1, 5.0, 1.0, -200.0);
+        assert_eq!(r.time_to_target(-250.0, false), Some(5.0));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("round,virtual_secs"));
+        assert!(lines[1].starts_with("0,"));
+    }
+
+    #[test]
+    fn extras_become_columns() {
+        let mut r = Recorder::new("e");
+        r.record_with(0, 0.0, 0.0, 1.0, vec![("s_error".into(), 0.001)]);
+        let csv = r.to_csv();
+        assert!(csv.lines().next().unwrap().ends_with(",s_error"));
+        assert!(csv.contains("0.00100000"));
+    }
+
+    #[test]
+    fn best_objective() {
+        assert_eq!(sample().best_objective_min(), Some(25.0));
+        assert_eq!(sample().last_objective(), Some(25.0));
+    }
+
+    #[test]
+    fn json_emits() {
+        let j = sample().to_json().to_json();
+        assert!(j.contains("\"label\":\"test\""));
+        assert!(j.contains("\"points\":["));
+    }
+}

@@ -1,0 +1,133 @@
+//! Executable cache + call interface over the PJRT CPU client.
+
+use super::manifest::{ArtifactManifest, ArtifactSpec};
+use super::tensor::Tensor;
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Owns the PJRT client and the compiled executables.
+///
+/// `call` is thread-safe (the executable cache is mutex-guarded; PJRT CPU
+/// execution itself is serialized per call which is correct for the
+/// simulated-cluster usage where XLA-backend workers share one device).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let manifest = ArtifactManifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            calls: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Total artifact invocations (perf accounting).
+    pub fn call_count(&self) -> u64 {
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Compile (or fetch cached) and pre-warm an artifact.
+    pub fn warm(&self, name: &str) -> anyhow::Result<()> {
+        let spec = self.manifest.get(name)?.clone();
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(name) {
+            let exe = self.compile_spec(&spec)?;
+            cache.insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    fn compile_spec(&self, spec: &ArtifactSpec) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("loading HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {:?}", spec.name))
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the tuple of
+    /// outputs as host tensors (order per manifest).
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: got {} inputs, want {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(spec.inputs.iter()) {
+            t.check_spec(s).with_context(|| format!("artifact {name}"))?;
+        }
+        self.warm(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("warmed above");
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let elems = out_lit.to_tuple().context("untupling result")?;
+        if elems.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: got {} outputs, want {}",
+                elems.len(),
+                spec.outputs.len()
+            );
+        }
+        elems
+            .iter()
+            .zip(spec.outputs.iter())
+            .map(|(lit, ospec)| Tensor::from_literal(lit, ospec))
+            .collect()
+    }
+}
+
+// SAFETY: all executable access (compile + execute) happens while holding
+// the cache mutex, so PJRT objects are never used from two threads at once;
+// the CPU PJRT client itself is thread-safe for the remaining read-only
+// calls (platform_name).  The raw pointers inside the xla wrappers are
+// process-global resources, not thread-affine.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .finish()
+    }
+}

@@ -1,0 +1,232 @@
+//! Parser for `artifacts/manifest.txt` (the line-based format emitted by
+//! `python/compile/aot.py`):
+//!
+//! ```text
+//! artifact lasso_push
+//! file lasso_push.hlo.txt
+//! in x_sel float32 2048,64
+//! in r float32 2048
+//! out z float32 64
+//! meta u 64
+//! end
+//! ```
+
+use anyhow::{anyhow, bail, Context};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape+dtype of one artifact parameter or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    /// Empty for scalars (manifest dims "-").
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn n_elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactSpec {
+    /// Look up a meta value parsed as T.
+    pub fn meta_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// The full artifact set.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+fn parse_tensor_line(parts: &[&str]) -> anyhow::Result<TensorSpec> {
+    if parts.len() != 4 {
+        bail!("malformed tensor line: {parts:?}");
+    }
+    let dims = if parts[3] == "-" {
+        Vec::new()
+    } else {
+        parts[3]
+            .split(',')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<anyhow::Result<Vec<_>>>()?
+    };
+    Ok(TensorSpec { name: parts[1].to_string(), dtype: Dtype::parse(parts[2])?, dims })
+}
+
+impl ArtifactManifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {:?}/manifest.txt", dir))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (dir recorded for artifact file resolution).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Self> {
+        let mut artifacts = HashMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.is_empty() {
+                continue;
+            }
+            let ctx = || format!("manifest line {}: {line:?}", lineno + 1);
+            match parts[0] {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: artifact without end", ctx());
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: parts.get(1).ok_or_else(|| anyhow!(ctx()))?.to_string(),
+                        file: PathBuf::new(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                        meta: HashMap::new(),
+                    });
+                }
+                "file" => {
+                    cur.as_mut().ok_or_else(|| anyhow!(ctx()))?.file =
+                        dir.join(parts.get(1).ok_or_else(|| anyhow!(ctx()))?);
+                }
+                "in" => cur
+                    .as_mut()
+                    .ok_or_else(|| anyhow!(ctx()))?
+                    .inputs
+                    .push(parse_tensor_line(&parts).with_context(ctx)?),
+                "out" => cur
+                    .as_mut()
+                    .ok_or_else(|| anyhow!(ctx()))?
+                    .outputs
+                    .push(parse_tensor_line(&parts).with_context(ctx)?),
+                "meta" => {
+                    let c = cur.as_mut().ok_or_else(|| anyhow!(ctx()))?;
+                    c.meta.insert(
+                        parts.get(1).ok_or_else(|| anyhow!(ctx()))?.to_string(),
+                        parts.get(2).unwrap_or(&"").to_string(),
+                    );
+                }
+                "end" => {
+                    let c = cur.take().ok_or_else(|| anyhow!(ctx()))?;
+                    artifacts.insert(c.name.clone(), c);
+                }
+                other => bail!("{}: unknown directive {other:?}", ctx()),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest ended inside an artifact block");
+        }
+        Ok(ArtifactManifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact lasso_push
+file lasso_push.hlo.txt
+in x_sel float32 2048,64
+in r float32 2048
+in beta_sel float32 64
+out z float32 64
+meta u 64
+end
+artifact lasso_objective
+file lasso_objective.hlo.txt
+in r float32 2048
+in beta float32 1024
+in lam float32 -
+out obj float32 -
+end
+";
+
+    #[test]
+    fn parses_two_artifacts() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("lasso_push").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].dims, vec![2048, 64]);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.file, PathBuf::from("/a/lasso_push.hlo.txt"));
+        assert_eq!(a.meta_parse::<usize>("u"), Some(64));
+    }
+
+    #[test]
+    fn scalar_dims_are_empty() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        let o = m.get("lasso_objective").unwrap();
+        assert!(o.inputs[2].dims.is_empty());
+        assert_eq!(o.inputs[2].n_elems(), 1);
+        assert!(o.outputs[0].dims.is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_block() {
+        let bad = "artifact x\nfile x.hlo.txt\n";
+        assert!(ArtifactManifest::parse(bad, PathBuf::from("/")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        let bad = "artifact x\nbogus y\nend\n";
+        assert!(ArtifactManifest::parse(bad, PathBuf::from("/")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = "artifact x\nin a float64 3\nend\n";
+        assert!(ArtifactManifest::parse(bad, PathBuf::from("/")).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//!
+//! This is the only place the crate touches XLA; python never runs here.
+//! The flow (mirroring /opt/xla-example/load_hlo):
+//!
+//! ```text
+//! manifest.txt ──> ArtifactManifest
+//! *.hlo.txt    ──> HloModuleProto::from_text_file
+//!                   └─> XlaComputation::from_proto ──> client.compile
+//! Engine::call(name, inputs) ──> executable.execute ──> tuple of Literals
+//! ```
+//!
+//! Executables are compiled once and cached ([`Engine`]); per-call overhead
+//! is literal staging only.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactManifest, ArtifactSpec, Dtype, TensorSpec};
+pub use tensor::Tensor;

@@ -1,0 +1,199 @@
+//! Host tensor: the crate's staging type between app state and XLA
+//! literals.  Only f32/i32 appear in the artifact set.
+
+use super::manifest::{Dtype, TensorSpec};
+use anyhow::{bail, Context};
+use xla::Literal;
+
+/// A host-side dense tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::F32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::I32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Tensor::F32 { dims: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        Tensor::I32 { dims: vec![], data: vec![x] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32 { .. } => Dtype::F32,
+            Tensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Payload bytes (network modelling).
+    pub fn bytes(&self) -> usize {
+        self.n_elems() * 4
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> anyhow::Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_i32(self) -> anyhow::Result<Vec<i32>> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Validate against a manifest spec.
+    pub fn check_spec(&self, spec: &TensorSpec) -> anyhow::Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "param {}: dtype mismatch (got {:?}, want {:?})",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        if self.dims() != spec.dims.as_slice() {
+            bail!(
+                "param {}: shape mismatch (got {:?}, want {:?})",
+                spec.name,
+                self.dims(),
+                spec.dims
+            );
+        }
+        Ok(())
+    }
+
+    /// Stage into an XLA literal.
+    pub fn to_literal(&self) -> anyhow::Result<Literal> {
+        let dims_i64: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { dims, data } => {
+                if dims.is_empty() {
+                    Literal::scalar(data[0])
+                } else {
+                    Literal::vec1(data).reshape(&dims_i64).context("reshape f32")?
+                }
+            }
+            Tensor::I32 { dims, data } => {
+                if dims.is_empty() {
+                    Literal::scalar(data[0])
+                } else {
+                    Literal::vec1(data).reshape(&dims_i64).context("reshape i32")?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal using the manifest output spec for
+    /// shape/dtype (literals do not carry our dim convention for scalars).
+    pub fn from_literal(lit: &Literal, spec: &TensorSpec) -> anyhow::Result<Self> {
+        match spec.dtype {
+            Dtype::F32 => {
+                let data = lit.to_vec::<f32>().context("literal to f32 vec")?;
+                if data.len() != spec.n_elems() {
+                    bail!(
+                        "output {}: element count {} != spec {}",
+                        spec.name,
+                        data.len(),
+                        spec.n_elems()
+                    );
+                }
+                Ok(Tensor::F32 { dims: spec.dims.clone(), data })
+            }
+            Dtype::I32 => {
+                let data = lit.to_vec::<i32>().context("literal to i32 vec")?;
+                if data.len() != spec.n_elems() {
+                    bail!(
+                        "output {}: element count {} != spec {}",
+                        spec.name,
+                        data.len(),
+                        spec.n_elems()
+                    );
+                }
+                Ok(Tensor::I32 { dims: spec.dims.clone(), data })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_len() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.n_elems(), 6);
+        assert_eq!(t.bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn construction_rejects_bad_len() {
+        Tensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            dtype: Dtype::F32,
+            dims: vec![4],
+        };
+        assert!(Tensor::f32(&[4], vec![0.0; 4]).check_spec(&spec).is_ok());
+        assert!(Tensor::f32(&[5], vec![0.0; 5]).check_spec(&spec).is_err());
+        assert!(Tensor::i32(&[4], vec![0; 4]).check_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        let t = Tensor::scalar_f32(2.5);
+        assert!(t.dims().is_empty());
+        assert_eq!(t.as_f32().unwrap(), &[2.5]);
+        assert_eq!(Tensor::scalar_i32(7).as_i32().unwrap(), &[7]);
+    }
+}

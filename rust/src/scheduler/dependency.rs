@@ -1,0 +1,132 @@
+//! Pairwise-dependency filter (paper §3.3): given candidate coefficients C,
+//! select a subset B ⊆ C with |x_j^T x_k| < ρ for all j,k ∈ B.
+//!
+//! Bradley et al. showed parallel CD diverges when correlated coordinates
+//! update together; this filter is what lets STRADS Lasso run |B| = U
+//! concurrent updates safely.  Cost is |C|² = U′² sparse dot products,
+//! *not* J² (the paper's complexity argument).
+
+use crate::sparse::CscMatrix;
+
+/// Correlation oracle: exact sparse column dots against the design matrix.
+pub struct DependencyChecker<'a> {
+    x: &'a CscMatrix,
+    rho: f32,
+    /// Dot products evaluated since construction (perf accounting).
+    checks: u64,
+}
+
+impl<'a> DependencyChecker<'a> {
+    pub fn new(x: &'a CscMatrix, rho: f32) -> Self {
+        assert!(rho > 0.0, "rho must be in (0, 1]");
+        DependencyChecker { x, rho, checks: 0 }
+    }
+
+    /// |x_j^T x_k| (columns assumed standardized, so this is the
+    /// correlation).
+    pub fn correlation(&mut self, j: usize, k: usize) -> f32 {
+        self.checks += 1;
+        self.x.col_dot_col(j, k).abs()
+    }
+
+    /// Greedy filter: scan candidates in order, keep those compatible with
+    /// everything already kept (paper's f_2).  Always keeps the first
+    /// candidate — the highest-priority one under priority sampling.
+    pub fn filter(&mut self, candidates: &[usize], max_keep: usize) -> Vec<usize> {
+        let mut kept: Vec<usize> = Vec::with_capacity(max_keep);
+        'outer: for &j in candidates {
+            if kept.len() >= max_keep {
+                break;
+            }
+            if kept.contains(&j) {
+                continue;
+            }
+            for &k in &kept {
+                if self.correlation(j, k) >= self.rho {
+                    continue 'outer;
+                }
+            }
+            kept.push(j);
+        }
+        kept
+    }
+
+    pub fn checks(&self) -> u64 {
+        self.checks
+    }
+
+    pub fn rho(&self) -> f32 {
+        self.rho
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CscMatrix;
+
+    /// Matrix with two identical columns (0,1) and two orthogonal (2,3).
+    fn fixture() -> CscMatrix {
+        CscMatrix::from_triplets(
+            4,
+            4,
+            &[
+                (0, 0, 1.0),
+                (0, 1, 1.0), // col1 == col0  (correlation 1)
+                (1, 2, 1.0),
+                (2, 3, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn filter_drops_correlated_candidates() {
+        let x = fixture();
+        let mut c = DependencyChecker::new(&x, 0.5);
+        let kept = c.filter(&[0, 1, 2, 3], 4);
+        assert_eq!(kept, vec![0, 2, 3]); // 1 conflicts with 0
+    }
+
+    #[test]
+    fn filter_respects_max_keep() {
+        let x = fixture();
+        let mut c = DependencyChecker::new(&x, 0.5);
+        assert_eq!(c.filter(&[2, 3, 0], 2), vec![2, 3]);
+    }
+
+    #[test]
+    fn filter_keeps_first_candidate() {
+        let x = fixture();
+        let mut c = DependencyChecker::new(&x, 0.01);
+        // even with a tiny rho the head of the list survives
+        assert_eq!(c.filter(&[1, 0], 4), vec![1]);
+    }
+
+    #[test]
+    fn filter_dedupes() {
+        let x = fixture();
+        let mut c = DependencyChecker::new(&x, 0.5);
+        assert_eq!(c.filter(&[2, 2, 2, 3], 4), vec![2, 3]);
+    }
+
+    #[test]
+    fn pairwise_invariant_holds_on_output() {
+        let x = fixture();
+        let mut c = DependencyChecker::new(&x, 0.5);
+        let kept = c.filter(&[0, 1, 2, 3], 4);
+        for i in 0..kept.len() {
+            for j in (i + 1)..kept.len() {
+                assert!(c.correlation(kept[i], kept[j]) < 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn check_count_is_quadratic_in_candidates_not_features() {
+        let x = fixture();
+        let mut c = DependencyChecker::new(&x, 0.5);
+        c.filter(&[0, 2, 3], 3);
+        // at most C(3,2)*... <= 3+2+1 checks, far below any J² notion
+        assert!(c.checks() <= 6, "{}", c.checks());
+    }
+}

@@ -1,0 +1,25 @@
+//! The **schedule** primitive (paper §2): strategies that pick which model
+//! variables each worker updates next.
+//!
+//! * [`rotation`] — LDA's word-rotation schedule: U disjoint word subsets
+//!   rotate among U workers, every worker touches every subset once per U
+//!   rounds (paper §3.1, Fig 4).
+//! * [`round_robin`] — MF's block round-robin over factor rows (paper §3.2).
+//! * [`priority`] — Lasso's dynamic schedule: sample U′ candidates from
+//!   c_j ∝ |δβ_j| + η, then dependency-filter to a set with pairwise
+//!   |x_j^T x_k| < ρ (paper §3.3).
+//! * [`random`] — uniform random U coefficients (the Shotgun-imitating
+//!   Lasso-RR baseline).
+//! * [`dependency`] — the pairwise-correlation filter used by `priority`.
+
+pub mod dependency;
+pub mod priority;
+pub mod random;
+pub mod rotation;
+pub mod round_robin;
+
+pub use dependency::DependencyChecker;
+pub use priority::PriorityScheduler;
+pub use random::RandomScheduler;
+pub use rotation::RotationScheduler;
+pub use round_robin::RoundRobinScheduler;

@@ -1,0 +1,250 @@
+//! Dynamic priority scheduling for Lasso (paper §3.3).
+//!
+//! Maintains the sampling distribution  c_j ∝ |β_j^(t-1) − β_j^(t-2)| + η
+//! over coefficients, draws U′ candidates from it, then dependency-filters
+//! them down to at most U concurrently-safe coefficients.  The two
+//! ingredients — *prioritization* (focus on fast-moving coefficients) and
+//! *dependency avoidance* — are independently toggleable for the ablation
+//! benches.
+
+use super::dependency::DependencyChecker;
+use crate::sparse::CscMatrix;
+use crate::util::{FenwickTree, Rng};
+
+/// Configuration for the dynamic Lasso scheduler.
+#[derive(Debug, Clone)]
+pub struct PriorityConfig {
+    /// Concurrent update set size U (= number of workers in the paper).
+    pub u: usize,
+    /// Candidate pool size U′ ≥ U.
+    pub u_prime: usize,
+    /// Dependency threshold ρ ∈ (0, 1].
+    pub rho: f32,
+    /// Exploration constant η > 0.
+    pub eta: f64,
+    /// Ablation toggles.
+    pub use_priority: bool,
+    pub use_dependency_filter: bool,
+}
+
+impl PriorityConfig {
+    pub fn paper_defaults(u: usize) -> Self {
+        PriorityConfig {
+            u,
+            u_prime: u * 4,
+            rho: 0.1,
+            eta: 1e-6,
+            use_priority: true,
+            use_dependency_filter: true,
+        }
+    }
+}
+
+/// Stateful dynamic scheduler.
+///
+/// Priority weights live in a [`FenwickTree`]: the c distribution changes
+/// every pull, and the tree gives O(log J) draws + updates instead of the
+/// O(J) inverse-CDF scan (the coordinator's former top hot spot — see
+/// EXPERIMENTS.md §Perf).
+pub struct PriorityScheduler {
+    cfg: PriorityConfig,
+    /// Priority weights c_j (unnormalized) in a sampling tree.
+    weights: FenwickTree,
+    rng: Rng,
+    /// Cumulative scheduler-side work (candidate draws + filter checks).
+    filter_checks: u64,
+}
+
+impl PriorityScheduler {
+    pub fn new(n_features: usize, cfg: PriorityConfig, seed: u64) -> Self {
+        assert!(cfg.u >= 1 && cfg.u_prime >= cfg.u);
+        // start uniform: every coefficient equally likely before we have
+        // any delta history
+        PriorityScheduler {
+            weights: FenwickTree::new(&vec![1.0; n_features]),
+            cfg,
+            rng: Rng::new(seed),
+            filter_checks: 0,
+        }
+    }
+
+    pub fn config(&self) -> &PriorityConfig {
+        &self.cfg
+    }
+
+    /// Update priorities after a pull: c_j gets |δβ_j| + η.
+    pub fn update_priority(&mut self, j: usize, delta_abs: f64) {
+        self.weights.set(j, delta_abs + self.cfg.eta);
+    }
+
+    /// Draw the next concurrent update set B (paper: sample U′ from c,
+    /// filter to U with pairwise correlation < ρ).
+    pub fn next_set(&mut self, x: &CscMatrix) -> Vec<usize> {
+        let candidates = if self.cfg.use_priority {
+            self.sample_candidates()
+        } else {
+            self.rng.sample_indices(self.weights.len(), self.cfg.u_prime)
+        };
+        if !self.cfg.use_dependency_filter {
+            let mut out = candidates;
+            out.truncate(self.cfg.u);
+            return out;
+        }
+        let mut checker = DependencyChecker::new(x, self.cfg.rho);
+        let kept = checker.filter(&candidates, self.cfg.u);
+        self.filter_checks += checker.checks();
+        kept
+    }
+
+    /// Weighted sampling of U′ distinct candidates from c: draw without
+    /// replacement by zeroing drawn weights in the tree, then restore.
+    /// O(U′ log J) total.
+    fn sample_candidates(&mut self) -> Vec<usize> {
+        let n = self.weights.len();
+        let want = self.cfg.u_prime.min(n);
+        let mut out = Vec::with_capacity(want);
+        let mut saved: Vec<(usize, f64)> = Vec::with_capacity(want);
+        while out.len() < want {
+            let total = self.weights.total();
+            if total <= 0.0 {
+                // degenerate: fill uniformly from undrawn indices
+                let j = self.rng.below(n);
+                if !saved.iter().any(|&(i, _)| i == j) {
+                    saved.push((j, self.weights.get(j)));
+                    self.weights.set(j, 0.0);
+                    out.push(j);
+                }
+                continue;
+            }
+            let j = self.weights.sample(self.rng.next_f64() * total);
+            saved.push((j, self.weights.get(j)));
+            self.weights.set(j, 0.0); // without replacement
+            out.push(j);
+        }
+        for (j, w) in saved {
+            self.weights.set(j, w);
+        }
+        out
+    }
+
+    pub fn filter_checks(&self) -> u64 {
+        self.filter_checks
+    }
+
+    /// Current weight of coefficient j (tests/diagnostics).
+    pub fn weight(&self, j: usize) -> f64 {
+        self.weights.get(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{prop_check, Prop};
+
+    fn orthogonal_x(n_features: usize) -> CscMatrix {
+        // identity-ish: each column has a single distinct nonzero row
+        let trips: Vec<(u32, u32, f32)> = (0..n_features)
+            .map(|j| (j as u32, j as u32, 1.0))
+            .collect();
+        CscMatrix::from_triplets(n_features, n_features, &trips)
+    }
+
+    fn cfg(u: usize, u_prime: usize) -> PriorityConfig {
+        PriorityConfig {
+            u,
+            u_prime,
+            rho: 0.5,
+            eta: 1e-6,
+            use_priority: true,
+            use_dependency_filter: true,
+        }
+    }
+
+    #[test]
+    fn returns_at_most_u_distinct_indices() {
+        let x = orthogonal_x(50);
+        let mut s = PriorityScheduler::new(50, cfg(8, 32), 1);
+        let set = s.next_set(&x);
+        assert!(set.len() <= 8 && !set.is_empty());
+        let mut d = set.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), set.len());
+    }
+
+    #[test]
+    fn priorities_bias_selection() {
+        let x = orthogonal_x(100);
+        let mut s = PriorityScheduler::new(100, cfg(4, 16), 2);
+        // make coefficient 7 dominate
+        for j in 0..100 {
+            s.update_priority(j, if j == 7 { 100.0 } else { 0.0 });
+        }
+        let mut hits = 0;
+        for _ in 0..50 {
+            if s.next_set(&x).contains(&7) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 48, "hits={hits}");
+    }
+
+    #[test]
+    fn correlated_pair_never_coscheduled() {
+        // two identical columns 0 and 1
+        let x = CscMatrix::from_triplets(
+            4,
+            4,
+            &[(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)],
+        );
+        let mut s = PriorityScheduler::new(4, cfg(4, 4), 3);
+        for _ in 0..100 {
+            let set = s.next_set(&x);
+            assert!(
+                !(set.contains(&0) && set.contains(&1)),
+                "co-scheduled correlated pair: {set:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn ablation_disable_filter_allows_conflicts_eventually() {
+        let x = CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 1, 1.0)]);
+        let mut c = cfg(2, 2);
+        c.use_dependency_filter = false;
+        let mut s = PriorityScheduler::new(2, c, 4);
+        let mut saw_conflict = false;
+        for _ in 0..50 {
+            let set = s.next_set(&x);
+            if set.contains(&0) && set.contains(&1) {
+                saw_conflict = true;
+            }
+        }
+        assert!(saw_conflict);
+    }
+
+    #[test]
+    fn prop_sets_are_pairwise_uncorrelated() {
+        prop_check("priority pairwise safety", 30, |g| {
+            let n = g.usize_in(4, 40);
+            let x = orthogonal_x(n);
+            let u = g.usize_in(1, n.min(8));
+            let mut s = PriorityScheduler::new(
+                n,
+                cfg(u, (u * 3).min(n)),
+                g.seed(),
+            );
+            let set = s.next_set(&x);
+            let mut checker = DependencyChecker::new(&x, 0.5);
+            for i in 0..set.len() {
+                for j in (i + 1)..set.len() {
+                    if checker.correlation(set[i], set[j]) >= 0.5 {
+                        return Prop::Fail(format!("pair {set:?}"));
+                    }
+                }
+            }
+            Prop::Ok
+        });
+    }
+}

@@ -1,0 +1,72 @@
+//! Uniform-random parallel scheduling — the **Lasso-RR** baseline.
+//!
+//! "Lasso-RR imitates the random scheduling scheme proposed by [the]
+//! Shotgun algorithm on STRADS" (paper §4): draw U coefficients uniformly
+//! at random with no priorities and no dependency filtering.
+
+use crate::util::Rng;
+
+/// Stateless-per-round uniform scheduler.
+pub struct RandomScheduler {
+    n_features: usize,
+    u: usize,
+    rng: Rng,
+}
+
+impl RandomScheduler {
+    pub fn new(n_features: usize, u: usize, seed: u64) -> Self {
+        assert!(u >= 1 && n_features >= 1);
+        RandomScheduler { n_features, u: u.min(n_features), rng: Rng::new(seed) }
+    }
+
+    /// Next concurrent update set: U distinct uniform indices.
+    pub fn next_set(&mut self) -> Vec<usize> {
+        self.rng.sample_indices(self.n_features, self.u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{ensure, prop_check};
+
+    #[test]
+    fn draws_u_distinct() {
+        let mut s = RandomScheduler::new(100, 10, 1);
+        let set = s.next_set();
+        assert_eq!(set.len(), 10);
+        let mut d = set.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 10);
+    }
+
+    #[test]
+    fn u_clamped_to_n() {
+        let mut s = RandomScheduler::new(3, 10, 1);
+        assert_eq!(s.next_set().len(), 3);
+    }
+
+    #[test]
+    fn covers_the_space_over_time() {
+        let mut s = RandomScheduler::new(50, 5, 2);
+        let mut seen = vec![false; 50];
+        for _ in 0..200 {
+            for j in s.next_set() {
+                seen[j] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn prop_indices_in_range() {
+        prop_check("random scheduler range", 100, |g| {
+            let n = g.usize_in(1, 1000);
+            let u = g.usize_in(1, 32);
+            let mut s = RandomScheduler::new(n, u, g.seed());
+            let set = s.next_set();
+            ensure(set.iter().all(|&j| j < n), format!("{set:?} n={n}"))
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Word-rotation scheduling (paper §3.1, pseudocode Fig 4).
+//!
+//! The V words are split into U subsets V_1..V_U.  In round C, worker a is
+//! assigned subset ((a + C - 1) mod U) + 1 (1-indexed in the paper; we use
+//! 0-indexed `(a + c) % u`).  Every subset is held by exactly one worker
+//! per round (disjointness ⇒ near-conditional-independence of the parallel
+//! Gibbs updates), and after U rounds every worker has seen every subset.
+
+/// Stateful rotation scheduler over `n_slices` partitions and an equal
+/// number of workers.
+#[derive(Debug, Clone)]
+pub struct RotationScheduler {
+    n_slices: usize,
+    /// Rotation counter C (a "global model variable" in the paper).
+    counter: u64,
+}
+
+impl RotationScheduler {
+    pub fn new(n_slices: usize) -> Self {
+        assert!(n_slices > 0);
+        RotationScheduler { n_slices, counter: 0 }
+    }
+
+    /// Slice assigned to `worker` this round.
+    pub fn slice_for(&self, worker: usize) -> usize {
+        (worker + self.counter as usize) % self.n_slices
+    }
+
+    /// Assignments for all workers this round, then advance the counter.
+    pub fn next_round(&mut self) -> Vec<usize> {
+        let out = (0..self.n_slices).map(|w| self.slice_for(w)).collect();
+        self.counter += 1;
+        out
+    }
+
+    pub fn round(&self) -> u64 {
+        self.counter
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.n_slices
+    }
+
+    /// Partition vocabulary ids [0, v) into `u` balanced slices; returns
+    /// slice id per word.  Words are strided across slices so Zipf-heavy
+    /// low ids spread evenly (load balance, same intent as the paper's
+    /// frequency-aware split).
+    pub fn partition_words(v: usize, u: usize) -> Vec<usize> {
+        (0..v).map(|w| w % u).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{ensure, prop_check, Prop};
+
+    #[test]
+    fn each_round_is_a_permutation() {
+        let mut s = RotationScheduler::new(8);
+        for _ in 0..20 {
+            let mut assign = s.next_round();
+            assign.sort_unstable();
+            assert_eq!(assign, (0..8).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn every_worker_sees_every_slice_in_u_rounds() {
+        let u = 6;
+        let mut s = RotationScheduler::new(u);
+        let mut seen = vec![vec![false; u]; u];
+        for _ in 0..u {
+            for (w, slice) in s.next_round().into_iter().enumerate() {
+                seen[w][slice] = true;
+            }
+        }
+        assert!(seen.iter().all(|row| row.iter().all(|&b| b)));
+    }
+
+    #[test]
+    fn matches_paper_formula() {
+        // paper: idx = ((a + C - 1) mod U) + 1 with 1-indexed a, C
+        let mut s = RotationScheduler::new(4);
+        s.next_round(); // C becomes 1
+        // our round C=1: worker a0 -> slice 1
+        assert_eq!(s.slice_for(0), 1);
+        assert_eq!(s.slice_for(3), 0);
+    }
+
+    #[test]
+    fn word_partition_is_balanced() {
+        let part = RotationScheduler::partition_words(103, 4);
+        let mut counts = [0usize; 4];
+        for &s in &part {
+            counts[s] += 1;
+        }
+        let (mn, mx) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert!(mx - mn <= 1, "{counts:?}");
+    }
+
+    #[test]
+    fn prop_rotation_disjoint_every_round() {
+        prop_check("rotation disjointness", 100, |g| {
+            let u = g.usize_in(1, 64);
+            let rounds = g.usize_in(1, 20);
+            let mut s = RotationScheduler::new(u);
+            for _ in 0..rounds {
+                let mut a = s.next_round();
+                a.sort_unstable();
+                a.dedup();
+                if a.len() != u {
+                    return Prop::Fail(format!("collision with u={u}"));
+                }
+            }
+            Prop::Ok
+        });
+    }
+
+    #[test]
+    fn prop_full_coverage_after_u_rounds() {
+        prop_check("rotation coverage", 50, |g| {
+            let u = g.usize_in(1, 32);
+            let mut s = RotationScheduler::new(u);
+            let mut cover = vec![0usize; u];
+            for _ in 0..u {
+                cover[s.slice_for(g.usize_in(0, u - 1))] += 0; // no-op read
+                for (w, slice) in s.next_round().into_iter().enumerate() {
+                    if w == 0 {
+                        cover[slice] += 1;
+                    }
+                }
+            }
+            ensure(
+                cover.iter().all(|&c| c == 1),
+                format!("worker 0 coverage {cover:?}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,105 @@
+//! Round-robin block scheduling for MF (paper §3.2, pseudocode Fig 6).
+//!
+//! CCD alternates between the two factor matrices, cycling the rank index:
+//! the global `counter` walks (W, k=0), (H, k=0), (W, k=1), (H, k=1), …
+//! Within a phase, the W/H columns are implicitly partitioned by the data
+//! sharding (workers hold row/column shards), so the schedule only needs to
+//! emit which factor and which rank row is updated next.
+
+/// Which factor matrix a round updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Factor {
+    W,
+    H,
+}
+
+/// One scheduled MF round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MfRound {
+    pub factor: Factor,
+    /// Rank index k ∈ [0, rank).
+    pub k: usize,
+}
+
+/// Stateful round-robin scheduler over rank indices.
+#[derive(Debug, Clone)]
+pub struct RoundRobinScheduler {
+    rank: usize,
+    counter: u64,
+}
+
+impl RoundRobinScheduler {
+    pub fn new(rank: usize) -> Self {
+        assert!(rank > 0);
+        RoundRobinScheduler { rank, counter: 0 }
+    }
+
+    /// Next (factor, k) pair; advances the counter.
+    pub fn next_round(&mut self) -> MfRound {
+        let c = self.counter as usize;
+        self.counter += 1;
+        let k = (c / 2) % self.rank;
+        let factor = if c % 2 == 0 { Factor::W } else { Factor::H };
+        MfRound { factor, k }
+    }
+
+    /// Rounds for one full CCD sweep (both factors, all ranks).
+    pub fn rounds_per_sweep(&self) -> usize {
+        2 * self.rank
+    }
+
+    pub fn round(&self) -> u64 {
+        self.counter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{ensure, prop_check};
+
+    #[test]
+    fn alternates_factors_and_cycles_ranks() {
+        let mut s = RoundRobinScheduler::new(3);
+        let seq: Vec<MfRound> = (0..6).map(|_| s.next_round()).collect();
+        assert_eq!(seq[0], MfRound { factor: Factor::W, k: 0 });
+        assert_eq!(seq[1], MfRound { factor: Factor::H, k: 0 });
+        assert_eq!(seq[2], MfRound { factor: Factor::W, k: 1 });
+        assert_eq!(seq[5], MfRound { factor: Factor::H, k: 2 });
+    }
+
+    #[test]
+    fn sweep_covers_every_rank_twice() {
+        let rank = 5;
+        let mut s = RoundRobinScheduler::new(rank);
+        let mut w_seen = vec![0; rank];
+        let mut h_seen = vec![0; rank];
+        for _ in 0..s.rounds_per_sweep() {
+            let r = s.next_round();
+            match r.factor {
+                Factor::W => w_seen[r.k] += 1,
+                Factor::H => h_seen[r.k] += 1,
+            }
+        }
+        assert!(w_seen.iter().all(|&c| c == 1), "{w_seen:?}");
+        assert!(h_seen.iter().all(|&c| c == 1), "{h_seen:?}");
+    }
+
+    #[test]
+    fn prop_k_always_in_range() {
+        prop_check("round robin k range", 100, |g| {
+            let rank = g.usize_in(1, 256);
+            let mut s = RoundRobinScheduler::new(rank);
+            for _ in 0..g.usize_in(1, 100) {
+                let r = s.next_round();
+                if r.k >= rank {
+                    return crate::testing::Prop::Fail(format!(
+                        "k={} rank={rank}",
+                        r.k
+                    ));
+                }
+            }
+            ensure(true, "")
+        });
+    }
+}

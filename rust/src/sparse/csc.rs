@@ -1,0 +1,312 @@
+//! Compressed Sparse Column matrix — the Lasso workhorse (column access:
+//! x_j^T r dot products, residual updates, pairwise column correlations).
+
+/// CSC matrix with f32 values and u32 row indices (halves memory vs usize —
+/// matters at the paper's 100M-feature scale).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    /// col_ptr[j]..col_ptr[j+1] indexes into row_idx/values for column j.
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    values: Vec<f32>,
+}
+
+/// Incremental builder: push columns in order.
+pub struct CscBuilder {
+    rows: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CscBuilder {
+    pub fn new(rows: usize) -> Self {
+        CscBuilder { rows, col_ptr: vec![0], row_idx: Vec::new(), values: Vec::new() }
+    }
+
+    /// Append one column given (row, value) pairs; rows must be strictly
+    /// increasing and in range.
+    pub fn push_col(&mut self, entries: &[(u32, f32)]) {
+        let mut last: i64 = -1;
+        for &(r, v) in entries {
+            assert!((r as usize) < self.rows, "row {r} out of range");
+            assert!((r as i64) > last, "rows must be strictly increasing");
+            last = r as i64;
+            self.row_idx.push(r);
+            self.values.push(v);
+        }
+        self.col_ptr.push(self.row_idx.len());
+    }
+
+    pub fn finish(self) -> CscMatrix {
+        CscMatrix {
+            rows: self.rows,
+            cols: self.col_ptr.len() - 1,
+            col_ptr: self.col_ptr,
+            row_idx: self.row_idx,
+            values: self.values,
+        }
+    }
+}
+
+impl CscMatrix {
+    /// Build from (row, col, value) triplets (need not be sorted).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(u32, u32, f32)],
+    ) -> Self {
+        let mut per_col: Vec<Vec<(u32, f32)>> = vec![Vec::new(); cols];
+        for &(r, c, v) in triplets {
+            per_col[c as usize].push((r, v));
+        }
+        let mut b = CscBuilder::new(rows);
+        for col in per_col.iter_mut() {
+            col.sort_unstable_by_key(|&(r, _)| r);
+            b.push_col(col);
+        }
+        b.finish()
+    }
+
+    /// Dense (row-major) conversion — small matrices / tests only.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for j in 0..self.cols {
+            for (r, v) in self.col_iter(j) {
+                out[r as usize * self.cols + j] = v;
+            }
+        }
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Number of non-zeros in column j.
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Iterate (row, value) over column j.
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        self.row_idx[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Raw slices for column j: (row indices, values).
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        (&self.row_idx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// x_j^T v for a dense vector v over this matrix's rows.
+    #[inline]
+    pub fn col_dot_dense(&self, j: usize, v: &[f32]) -> f32 {
+        debug_assert_eq!(v.len(), self.rows);
+        let (idx, vals) = self.col(j);
+        let mut s = 0.0f32;
+        for (r, x) in idx.iter().zip(vals.iter()) {
+            s += x * unsafe { *v.get_unchecked(*r as usize) };
+        }
+        s
+    }
+
+    /// v += alpha * x_j (scatter into a dense vector).
+    #[inline]
+    pub fn col_axpy_dense(&self, j: usize, alpha: f32, v: &mut [f32]) {
+        debug_assert_eq!(v.len(), self.rows);
+        let (idx, vals) = self.col(j);
+        for (r, x) in idx.iter().zip(vals.iter()) {
+            unsafe {
+                *v.get_unchecked_mut(*r as usize) += alpha * x;
+            }
+        }
+    }
+
+    /// Squared l2 norm of column j.
+    pub fn col_norm_sq(&self, j: usize) -> f32 {
+        let (_, vals) = self.col(j);
+        vals.iter().map(|x| x * x).sum()
+    }
+
+    /// Exact sparse dot product x_j^T x_k (sorted-merge intersection).
+    pub fn col_dot_col(&self, j: usize, k: usize) -> f32 {
+        let (ij, vj) = self.col(j);
+        let (ik, vk) = self.col(k);
+        let (mut a, mut b, mut s) = (0usize, 0usize, 0.0f32);
+        while a < ij.len() && b < ik.len() {
+            match ij[a].cmp(&ik[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    s += vj[a] * vk[b];
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// y = A beta (dense result over rows).
+    pub fn matvec(&self, beta: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(beta.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for (j, &bj) in beta.iter().enumerate() {
+            if bj != 0.0 {
+                self.col_axpy_dense(j, bj, &mut y);
+            }
+        }
+        y
+    }
+
+    /// Restrict to a contiguous row range [lo, hi): the data-partitioning
+    /// primitive (each worker holds a row shard, paper §2 push).
+    pub fn row_slice(&self, lo: usize, hi: usize) -> CscMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        let mut b = CscBuilder::new(hi - lo);
+        let mut buf = Vec::new();
+        for j in 0..self.cols {
+            buf.clear();
+            for (r, v) in self.col_iter(j) {
+                let r = r as usize;
+                if r >= lo && r < hi {
+                    buf.push(((r - lo) as u32, v));
+                }
+            }
+            b.push_col(&buf);
+        }
+        b.finish()
+    }
+
+    /// Gather selected columns into a dense row-major (rows × sel.len())
+    /// block — feeds the fixed-shape XLA artifacts.
+    pub fn gather_cols_dense(&self, sel: &[usize]) -> Vec<f32> {
+        let u = sel.len();
+        let mut out = vec![0.0f32; self.rows * u];
+        for (c, &j) in sel.iter().enumerate() {
+            for (r, v) in self.col_iter(j) {
+                out[r as usize * u + c] = v;
+            }
+        }
+        out
+    }
+
+    /// Model+data bytes resident for this matrix (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.col_ptr.len() * std::mem::size_of::<usize>()
+            + self.row_idx.len() * 4
+            + self.values.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        CscMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0), (0, 2, 2.0), (2, 2, 5.0)],
+        )
+    }
+
+    #[test]
+    fn build_and_dims() {
+        let m = sample();
+        assert_eq!((m.rows(), m.cols(), m.nnz()), (3, 3, 5));
+        assert_eq!(m.col_nnz(0), 2);
+        assert_eq!(m.col_nnz(1), 1);
+    }
+
+    #[test]
+    fn to_dense_roundtrip() {
+        let m = sample();
+        assert_eq!(
+            m.to_dense(),
+            vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 0.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn col_dot_dense_matches_dense() {
+        let m = sample();
+        let v = [1.0, 2.0, 3.0];
+        assert_eq!(m.col_dot_dense(0, &v), 1.0 + 12.0);
+        assert_eq!(m.col_dot_dense(1, &v), 6.0);
+        assert_eq!(m.col_dot_dense(2, &v), 2.0 + 15.0);
+    }
+
+    #[test]
+    fn col_axpy_scatters() {
+        let m = sample();
+        let mut v = vec![0.0; 3];
+        m.col_axpy_dense(2, 2.0, &mut v);
+        assert_eq!(v, vec![4.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn col_dot_col_intersects() {
+        let m = sample();
+        assert_eq!(m.col_dot_col(0, 2), 1.0 * 2.0 + 4.0 * 5.0);
+        assert_eq!(m.col_dot_col(0, 1), 0.0);
+        assert_eq!(m.col_dot_col(1, 1), 9.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let y = m.matvec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![1.0 + 6.0, 6.0, 4.0 + 15.0]);
+    }
+
+    #[test]
+    fn row_slice_partitions() {
+        let m = sample();
+        let top = m.row_slice(0, 2);
+        assert_eq!(top.to_dense(), vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        let bot = m.row_slice(2, 3);
+        assert_eq!(bot.to_dense(), vec![4.0, 0.0, 5.0]);
+        // shards tile the matrix exactly
+        assert_eq!(top.nnz() + bot.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn gather_cols_dense_layout() {
+        let m = sample();
+        let g = m.gather_cols_dense(&[2, 0]);
+        // row-major (3 x 2): [[2,1],[0,0],[5,4]]
+        assert_eq!(g, vec![2.0, 1.0, 0.0, 0.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn builder_rejects_unsorted_rows() {
+        let mut b = CscBuilder::new(3);
+        b.push_col(&[(2, 1.0), (1, 2.0)]);
+    }
+
+    #[test]
+    fn col_norm_sq_sums_squares() {
+        let m = sample();
+        assert_eq!(m.col_norm_sq(0), 17.0);
+    }
+}

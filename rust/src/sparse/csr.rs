@@ -1,0 +1,180 @@
+//! Compressed Sparse Row matrix — the MF workhorse (per-user rating rows)
+//! and LDA doc-token access pattern.
+
+/// CSR matrix with f32 values and u32 column indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from (row, col, value) triplets (need not be sorted).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(u32, u32, f32)],
+    ) -> Self {
+        let mut per_row: Vec<Vec<(u32, f32)>> = vec![Vec::new(); rows];
+        for &(r, c, v) in triplets {
+            assert!((r as usize) < rows && (c as usize) < cols);
+            per_row[r as usize].push((c, v));
+        }
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for row in per_row.iter_mut() {
+            row.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in row.iter() {
+                col_idx.push(c);
+                values.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Iterate (col, value) over row i.
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        self.col_idx[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Raw slices for row i: (col indices, values).
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        (&self.col_idx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Mutable values of row i (residual maintenance in MF CD).
+    pub fn row_values_mut(&mut self, i: usize) -> &mut [f32] {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        &mut self.values[lo..hi]
+    }
+
+    /// Restrict to row range [lo, hi) — worker data partitioning.
+    pub fn row_slice(&self, lo: usize, hi: usize) -> CsrMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        let base = self.row_ptr[lo];
+        CsrMatrix {
+            rows: hi - lo,
+            cols: self.cols,
+            row_ptr: self.row_ptr[lo..=hi].iter().map(|p| p - base).collect(),
+            col_idx: self.col_idx[self.row_ptr[lo]..self.row_ptr[hi]].to_vec(),
+            values: self.values[self.row_ptr[lo]..self.row_ptr[hi]].to_vec(),
+        }
+    }
+
+    /// Transpose to CSC-like CSR (cols become rows).
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut trips = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            for (c, v) in self.row_iter(i) {
+                trips.push((c, i as u32, v));
+            }
+        }
+        CsrMatrix::from_triplets(self.cols, self.rows, &trips)
+    }
+
+    /// Dense row-major conversion (tests / XLA staging only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for i in 0..self.rows {
+            for (c, v) in self.row_iter(i) {
+                out[i * self.cols + c as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// 0/1 observation mask, dense row-major (XLA staging).
+    pub fn to_dense_mask(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for i in 0..self.rows {
+            for (c, _) in self.row_iter(i) {
+                out[i * self.cols + c as usize] = 1.0;
+            }
+        }
+        out
+    }
+
+    /// Resident bytes (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * 4
+            + self.values.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0]]
+        CsrMatrix::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)])
+    }
+
+    #[test]
+    fn dims_and_nnz() {
+        let m = sample();
+        assert_eq!((m.rows(), m.cols(), m.nnz()), (2, 3, 3));
+        assert_eq!(m.row_nnz(0), 2);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        assert_eq!(sample().to_dense(), vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        assert_eq!(
+            sample().to_dense_mask(),
+            vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.to_dense(), vec![1.0, 0.0, 0.0, 3.0, 2.0, 0.0]);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn row_slice_shards() {
+        let m = sample();
+        let bottom = m.row_slice(1, 2);
+        assert_eq!(bottom.to_dense(), vec![0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn row_values_mut_edits_in_place() {
+        let mut m = sample();
+        m.row_values_mut(0)[1] = 9.0;
+        assert_eq!(m.to_dense(), vec![1.0, 0.0, 9.0, 0.0, 3.0, 0.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Sparse matrix substrate (CSC/CSR, f32) for the Lasso and MF workloads.
+//!
+//! The paper's Lasso design matrix has 25 non-zeros per column out of 50K
+//! rows (§4.1), and the Netflix rating matrix is ~1.2% dense; both demand a
+//! sparse representation to reach the paper's model sizes.  The native
+//! compute backend operates directly on these structures.
+
+pub mod csc;
+pub mod csr;
+pub mod ops;
+
+pub use csc::{CscBuilder, CscMatrix};
+pub use csr::CsrMatrix;

@@ -1,0 +1,77 @@
+//! Cross-representation sparse helpers used by apps and tests.
+
+use super::{CscMatrix, CsrMatrix};
+
+/// Dense-vector squared l2 norm.
+pub fn norm_sq(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// Standardize CSC columns to unit l2 norm in place semantics (returns a new
+/// matrix plus the applied scales).  The paper assumes standardized X for
+/// the Lasso CD update (eq. 5).
+pub fn standardize_columns(m: &CscMatrix) -> (CscMatrix, Vec<f32>) {
+    let mut trips = Vec::with_capacity(m.nnz());
+    let mut scales = Vec::with_capacity(m.cols());
+    for j in 0..m.cols() {
+        let norm = m.col_norm_sq(j).sqrt();
+        let scale = if norm > 0.0 { 1.0 / norm } else { 0.0 };
+        scales.push(scale);
+        for (r, v) in m.col_iter(j) {
+            trips.push((r, j as u32, v * scale));
+        }
+    }
+    (CscMatrix::from_triplets(m.rows(), m.cols(), &trips), scales)
+}
+
+/// CSC → CSR conversion.
+pub fn csc_to_csr(m: &CscMatrix) -> CsrMatrix {
+    let mut trips = Vec::with_capacity(m.nnz());
+    for j in 0..m.cols() {
+        for (r, v) in m.col_iter(j) {
+            trips.push((r, j as u32, v));
+        }
+    }
+    CsrMatrix::from_triplets(m.rows(), m.cols(), &trips)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardize_gives_unit_columns() {
+        let m = CscMatrix::from_triplets(
+            4,
+            2,
+            &[(0, 0, 3.0), (1, 0, 4.0), (2, 1, 2.0)],
+        );
+        let (s, scales) = standardize_columns(&m);
+        assert!((s.col_norm_sq(0) - 1.0).abs() < 1e-6);
+        assert!((s.col_norm_sq(1) - 1.0).abs() < 1e-6);
+        assert!((scales[0] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn standardize_handles_empty_column() {
+        let m = CscMatrix::from_triplets(2, 2, &[(0, 0, 5.0)]);
+        let (s, scales) = standardize_columns(&m);
+        assert_eq!(scales[1], 0.0);
+        assert_eq!(s.col_nnz(1), 0);
+    }
+
+    #[test]
+    fn csc_csr_roundtrip_dense() {
+        let m = CscMatrix::from_triplets(
+            3,
+            2,
+            &[(0, 0, 1.0), (2, 0, 2.0), (1, 1, 3.0)],
+        );
+        assert_eq!(csc_to_csr(&m).to_dense(), m.to_dense());
+    }
+
+    #[test]
+    fn norm_sq_accumulates_f64() {
+        assert!((norm_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,168 @@
+//! Minimal property-testing framework (proptest is unavailable offline).
+//!
+//! `prop_check` runs a property over `n` seeded random cases; on failure it
+//! re-runs with progressively simpler generator sizes to report a smaller
+//! counterexample seed, then panics with the failing seed so the case can
+//! be replayed deterministically:
+//!
+//! ```ignore
+//! prop_check("rotation covers all slices", 200, |g| {
+//!     let u = g.usize_in(1, 32);
+//!     ...
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Generator handle passed to properties: seeded random primitives plus a
+/// size knob used for shrinking.
+pub struct Gen {
+    rng: Rng,
+    /// Scale factor in (0, 1]; shrink passes lower it.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// Integer in [lo, hi], scaled toward lo as `size` shrinks.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).ceil() as usize;
+        lo + self.rng.below(span.max(1).min(hi - lo + 1))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_std(&mut self) -> f32 {
+        self.rng.normal_f32()
+    }
+
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    pub fn seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Vector of f32 normals with length in [lo, hi] (size-scaled).
+    pub fn vec_f32(&mut self, lo: usize, hi: usize) -> Vec<f32> {
+        let n = self.usize_in(lo, hi);
+        (0..n).map(|_| self.rng.normal_f32()).collect()
+    }
+
+    /// Borrow the underlying RNG for custom draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a single property case.
+pub enum Prop {
+    Ok,
+    /// Failed with a message describing the violation.
+    Fail(String),
+    /// Case rejected (precondition unmet) — does not count toward n.
+    Discard,
+}
+
+/// Convenience: turn a bool + message into a Prop.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Prop {
+    if cond {
+        Prop::Ok
+    } else {
+        Prop::Fail(msg.into())
+    }
+}
+
+/// Run `prop` over `n` seeded cases (master seed fixed for repeatability —
+/// override with STRADS_PROP_SEED).  On failure, tries smaller sizes to
+/// find a simpler counterexample, then panics with seed + message.
+pub fn prop_check<F: FnMut(&mut Gen) -> Prop>(name: &str, n: usize, mut prop: F) {
+    let master: u64 = std::env::var("STRADS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5712AD5);
+    let mut meta = Rng::new(master);
+    let mut executed = 0usize;
+    let mut attempts = 0usize;
+    while executed < n && attempts < n * 10 {
+        attempts += 1;
+        let seed = meta.next_u64();
+        match prop(&mut Gen::new(seed, 1.0)) {
+            Prop::Ok => executed += 1,
+            Prop::Discard => {}
+            Prop::Fail(msg) => {
+                // shrink: retry the same seed at smaller sizes and report
+                // the smallest size that still fails
+                let mut worst = (1.0, msg);
+                for &size in &[0.5, 0.25, 0.1, 0.02] {
+                    if let Prop::Fail(m) = prop(&mut Gen::new(seed, size)) {
+                        worst = (size, m);
+                    }
+                }
+                panic!(
+                    "property {name:?} failed (seed={seed:#x}, size={}): {}",
+                    worst.0, worst.1
+                );
+            }
+        }
+    }
+    assert!(
+        executed >= n / 2,
+        "property {name:?}: too many discards ({executed}/{n} executed)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("tautology", 50, |g| {
+            count += 1;
+            let x = g.usize_in(0, 100);
+            ensure(x <= 100, "in range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check("always false", 10, |g| {
+            let _ = g.usize_in(0, 10);
+            ensure(false, "nope")
+        });
+    }
+
+    #[test]
+    fn discards_do_not_count() {
+        let mut ok_cases = 0;
+        prop_check("half discarded", 20, |g| {
+            if g.bool_with(0.5) {
+                return Prop::Discard;
+            }
+            ok_cases += 1;
+            Prop::Ok
+        });
+        assert!(ok_cases >= 20);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        prop_check("usize_in bounds", 100, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let x = g.usize_in(lo, hi);
+            ensure(x >= lo && x <= hi, format!("{x} in [{lo},{hi}]"))
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Typed getters parse on demand and report readable errors.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    flags.insert(body.to_string(), v);
+                } else {
+                    flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Raw string flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag with default; panics with a readable message on a
+    /// malformed value (CLI boundary, so panicking is the right behavior).
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|e| {
+                panic!("--{key}: cannot parse {v:?}: {e}")
+            }),
+        }
+    }
+
+    /// Boolean flag: present (or `=true`) means true.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse().unwrap_or_else(|e| {
+                        panic!("--{key}: bad element {s:?}: {e}")
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = args(&["--workers", "8", "--app=lasso"]);
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get("app"), Some("lasso"));
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = args(&["train", "--verbose", "--n", "10", "extra"]);
+        assert_eq!(a.positional(), &["train", "extra"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.parse_or("n", 0usize), 10);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = args(&[]);
+        assert_eq!(a.parse_or("rho", 0.1f64), 0.1);
+        assert_eq!(a.str_or("out", "results"), "results");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args(&["--sizes", "10,20,30"]);
+        assert_eq!(a.list_or::<usize>("sizes", &[]), vec![10, 20, 30]);
+        assert_eq!(a.list_or("other", &[1usize]), vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_value_panics() {
+        args(&["--n", "abc"]).parse_or("n", 0usize);
+    }
+}

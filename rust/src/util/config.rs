@@ -1,0 +1,177 @@
+//! Experiment configuration files: a TOML-subset parser (serde/toml are
+//! unavailable offline) supporting `[sections]`, `key = value` with
+//! strings, numbers, booleans and comma lists, plus `#` comments.
+//!
+//! Used by the CLI's `--config` flag; configs/*.toml ship the canonical
+//! experiment setups recorded in EXPERIMENTS.md.
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+
+/// Parsed configuration: section → key → raw value string.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut sections = BTreeMap::new();
+        let mut current = String::new();
+        sections.insert(String::new(), BTreeMap::new());
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("config line {}: {raw:?}", lineno + 1);
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body.strip_suffix(']').with_context(ctx)?.trim();
+                current = name.to_string();
+                sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let value = v.trim().trim_matches('"').to_string();
+                sections
+                    .get_mut(&current)
+                    .unwrap()
+                    .insert(k.trim().to_string(), value);
+            } else {
+                bail!("{}: expected `key = value` or `[section]`", ctx());
+            }
+        }
+        Ok(Config { sections })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::parse(&text)
+    }
+
+    /// Section names (the unnamed root section is "").
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn parse_or<T: std::str::FromStr>(
+        &self,
+        section: &str,
+        key: &str,
+        default: T,
+    ) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|e| {
+                panic!("config [{section}] {key}: cannot parse {v:?}: {e}")
+            }),
+        }
+    }
+
+    /// Boolean lookup.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("config [{section}] {key}: bad bool {v:?}"),
+        }
+    }
+
+    /// Comma-list lookup.
+    pub fn list_or<T: std::str::FromStr>(
+        &self,
+        section: &str,
+        key: &str,
+        default: &[T],
+    ) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim())
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse().unwrap_or_else(|e| {
+                        panic!("config [{section}] {key}: bad item {s:?}: {e}")
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment setup
+app = "lasso"
+
+[lasso]
+features = 100000
+lambda = 0.05
+priority = true
+sizes = 10, 20, 30
+
+[cluster]
+workers = 8
+net = "40g"
+"#;
+
+    #[test]
+    fn parses_sections_and_root() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("", "app"), Some("lasso"));
+        assert_eq!(c.get("lasso", "features"), Some("100000"));
+        assert_eq!(c.get("cluster", "net"), Some("40g"));
+        assert_eq!(c.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn typed_lookups() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.parse_or("lasso", "features", 0usize), 100_000);
+        assert_eq!(c.parse_or("lasso", "lambda", 0.0f32), 0.05);
+        assert!(c.bool_or("lasso", "priority", false));
+        assert_eq!(c.parse_or("lasso", "missing", 7u32), 7);
+        assert_eq!(
+            c.list_or::<usize>("lasso", "sizes", &[]),
+            vec![10, 20, 30]
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = Config::parse("# only comments\n\n  \n").unwrap();
+        assert_eq!(c.sections().count(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("[unclosed").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_typed_value_panics() {
+        let c = Config::parse("x = abc").unwrap();
+        c.parse_or("", "x", 0usize);
+    }
+}

@@ -1,0 +1,193 @@
+//! Fenwick (binary indexed) tree over non-negative weights with O(log n)
+//! point updates and O(log n) weighted sampling by prefix-sum search.
+//!
+//! This is the data structure behind the dynamic Lasso scheduler: the
+//! paper's c_j ∝ |δβ_j| + η distribution changes at every pull, and the
+//! naive O(J) inverse-CDF draw was the coordinator's top hot spot at
+//! J = 10⁴–10⁸ (see EXPERIMENTS.md §Perf).
+
+/// Fenwick tree storing f64 weights, 0-indexed externally.
+#[derive(Debug, Clone)]
+pub struct FenwickTree {
+    tree: Vec<f64>,
+    values: Vec<f64>,
+    /// Smallest power of two ≥ len (for the descend-search).
+    top: usize,
+}
+
+impl FenwickTree {
+    /// Build from initial weights (O(n)).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        let mut tree = vec![0.0; n + 1];
+        for (i, &w) in weights.iter().enumerate() {
+            debug_assert!(w >= 0.0);
+            tree[i + 1] += w;
+            let parent = (i + 1) + ((i + 1) & (i + 1).wrapping_neg());
+            if parent <= n {
+                let v = tree[i + 1];
+                tree[parent] += v;
+            }
+        }
+        let mut top = 1;
+        while top * 2 <= n {
+            top *= 2;
+        }
+        FenwickTree { tree, values: weights.to_vec(), top }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Current weight of index i.
+    pub fn get(&self, i: usize) -> f64 {
+        self.values[i]
+    }
+
+    /// Set index i to weight w (O(log n)).
+    pub fn set(&mut self, i: usize, w: f64) {
+        debug_assert!(w >= 0.0);
+        let delta = w - self.values[i];
+        self.values[i] = w;
+        let mut idx = i + 1;
+        while idx < self.tree.len() {
+            self.tree[idx] += delta;
+            idx += idx & idx.wrapping_neg();
+        }
+    }
+
+    /// Total weight (O(1)).
+    pub fn total(&self) -> f64 {
+        self.prefix_sum(self.len())
+    }
+
+    /// Sum of weights [0, i) (O(log n)).
+    pub fn prefix_sum(&self, i: usize) -> f64 {
+        let mut idx = i.min(self.len());
+        let mut sum = 0.0;
+        while idx > 0 {
+            sum += self.tree[idx];
+            idx -= idx & idx.wrapping_neg();
+        }
+        sum
+    }
+
+    /// Find the smallest index i with prefix_sum(i+1) > target — i.e. draw
+    /// from the categorical distribution when `target ∈ [0, total)`.
+    /// O(log n) descend.
+    pub fn sample(&self, target: f64) -> usize {
+        let mut idx = 0usize; // 1-based cursor into tree
+        let mut remaining = target;
+        let mut mask = self.top;
+        while mask > 0 {
+            let next = idx + mask;
+            if next < self.tree.len() && self.tree[next] <= remaining {
+                remaining -= self.tree[next];
+                idx = next;
+            }
+            mask >>= 1;
+        }
+        idx.min(self.len() - 1) // idx is 0-based result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn prefix_sums_match_naive() {
+        let w = [1.0, 2.0, 0.0, 4.0, 0.5, 3.0, 1.5];
+        let t = FenwickTree::new(&w);
+        let mut acc = 0.0;
+        for i in 0..=w.len() {
+            assert!((t.prefix_sum(i) - acc).abs() < 1e-12, "prefix {i}");
+            if i < w.len() {
+                acc += w[i];
+            }
+        }
+        assert!((t.total() - acc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_updates_sums() {
+        let mut t = FenwickTree::new(&[1.0; 8]);
+        t.set(3, 5.0);
+        t.set(0, 0.0);
+        // [0,1,1,5,1,1,1,1] sums to 11
+        assert!((t.total() - 11.0).abs() < 1e-12);
+        assert!((t.prefix_sum(4) - 7.0).abs() < 1e-12);
+        assert_eq!(t.get(3), 5.0);
+    }
+
+    #[test]
+    fn sample_hits_correct_bucket() {
+        let t = FenwickTree::new(&[1.0, 2.0, 3.0]);
+        assert_eq!(t.sample(0.0), 0);
+        assert_eq!(t.sample(0.99), 0);
+        assert_eq!(t.sample(1.0), 1);
+        assert_eq!(t.sample(2.99), 1);
+        assert_eq!(t.sample(3.0), 2);
+        assert_eq!(t.sample(5.99), 2);
+    }
+
+    #[test]
+    fn sample_skips_zero_weight_buckets() {
+        let t = FenwickTree::new(&[0.0, 0.0, 1.0, 0.0]);
+        for target in [0.0, 0.5, 0.999] {
+            assert_eq!(t.sample(target), 2);
+        }
+    }
+
+    #[test]
+    fn sample_distribution_matches_weights() {
+        let w = [1.0, 4.0, 0.0, 5.0];
+        let t = FenwickTree::new(&w);
+        let mut rng = Rng::new(7);
+        let n = 40_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[t.sample(rng.next_f64() * t.total())] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        for (i, &wi) in w.iter().enumerate() {
+            let want = wi / 10.0;
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - want).abs() < 0.02, "bucket {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_sizes() {
+        for n in [1usize, 2, 3, 5, 17, 100, 1023] {
+            let w: Vec<f64> = (0..n).map(|i| (i % 7) as f64 + 0.5).collect();
+            let t = FenwickTree::new(&w);
+            let total = t.total();
+            let naive: f64 = w.iter().sum();
+            assert!((total - naive).abs() < 1e-9, "n={n}");
+            // last bucket reachable
+            assert_eq!(t.sample(total - 1e-9), n - 1);
+        }
+    }
+
+    #[test]
+    fn matches_linear_weighted_sampling() {
+        // same RNG stream, same draws as Rng::weighted
+        let w: Vec<f64> = (0..257).map(|i| ((i * 31) % 11) as f64).collect();
+        let t = FenwickTree::new(&w);
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let target = rng.next_f64() * t.total();
+            let idx = t.sample(target);
+            // verify bracketing
+            assert!(t.prefix_sum(idx) <= target + 1e-9);
+            assert!(t.prefix_sum(idx + 1) > target - 1e-9);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal JSON value + writer (serde is unavailable offline).
+//!
+//! Used by the metrics recorders and figure harnesses to emit structured
+//! results that downstream tooling (or a human) can consume.  Writing only —
+//! the one structured input we parse (the artifact manifest) uses a simpler
+//! line format handled in [`crate::runtime::manifest`].
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value (ordered maps for deterministic output).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    /// Object builder entry point.
+    pub fn obj() -> JsonObjBuilder {
+        JsonObjBuilder(BTreeMap::new())
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => {
+                out.push_str(if *b { "true" } else { "false" })
+            }
+            JsonValue::Num(x) => {
+                if x.is_finite() {
+                    if *x == x.trunc() && x.abs() < 1e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            JsonValue::Str(s) => Self::write_escaped(s, out),
+            JsonValue::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn write_escaped(s: &str, out: &mut String) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+}
+
+impl From<f64> for JsonValue {
+    fn from(x: f64) -> Self {
+        JsonValue::Num(x)
+    }
+}
+impl From<usize> for JsonValue {
+    fn from(x: usize) -> Self {
+        JsonValue::Num(x as f64)
+    }
+}
+impl From<u64> for JsonValue {
+    fn from(x: u64) -> Self {
+        JsonValue::Num(x as f64)
+    }
+}
+impl From<i64> for JsonValue {
+    fn from(x: i64) -> Self {
+        JsonValue::Num(x as f64)
+    }
+}
+impl From<bool> for JsonValue {
+    fn from(x: bool) -> Self {
+        JsonValue::Bool(x)
+    }
+}
+impl From<&str> for JsonValue {
+    fn from(x: &str) -> Self {
+        JsonValue::Str(x.to_string())
+    }
+}
+impl From<String> for JsonValue {
+    fn from(x: String) -> Self {
+        JsonValue::Str(x)
+    }
+}
+impl<T: Into<JsonValue>> From<Vec<T>> for JsonValue {
+    fn from(xs: Vec<T>) -> Self {
+        JsonValue::Arr(xs.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Fluent object builder: `JsonValue::obj().field("a", 1).build()`.
+pub struct JsonObjBuilder(BTreeMap<String, JsonValue>);
+
+impl JsonObjBuilder {
+    pub fn field<V: Into<JsonValue>>(mut self, key: &str, v: V) -> Self {
+        self.0.insert(key.to_string(), v.into());
+        self
+    }
+
+    pub fn build(self) -> JsonValue {
+        JsonValue::Obj(self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(JsonValue::Num(3.0).to_json(), "3");
+        assert_eq!(JsonValue::Num(3.5).to_json(), "3.5");
+        assert_eq!(JsonValue::Bool(true).to_json(), "true");
+        assert_eq!(JsonValue::Null.to_json(), "null");
+        assert_eq!(JsonValue::Num(f64::NAN).to_json(), "null");
+    }
+
+    #[test]
+    fn strings_escape() {
+        assert_eq!(
+            JsonValue::Str("a\"b\\c\nd".into()).to_json(),
+            r#""a\"b\\c\nd""#
+        );
+    }
+
+    #[test]
+    fn nested_object() {
+        let v = JsonValue::obj()
+            .field("name", "fig8")
+            .field("sizes", vec![10usize, 20])
+            .field(
+                "inner",
+                JsonValue::obj().field("ok", true).build(),
+            )
+            .build();
+        assert_eq!(
+            v.to_json(),
+            r#"{"inner":{"ok":true},"name":"fig8","sizes":[10,20]}"#
+        );
+    }
+}

@@ -1,0 +1,162 @@
+//! Small dense linear algebra: column-major matrices, Cholesky solve.
+//!
+//! Needed by the GraphLab-ALS baseline (each ALS update solves a K×K
+//! normal-equations system per row/column) — the O(K²)–O(K³) cost that
+//! makes ALS collapse at large rank in the paper's Figure 8 (center).
+
+/// Solve (A + lam I) x = b for symmetric positive-definite A (K×K,
+/// row-major), in place via Cholesky.  Returns None if not SPD.
+pub fn cholesky_solve(a: &[f64], lam: f64, b: &[f64]) -> Option<Vec<f64>> {
+    let k = b.len();
+    debug_assert_eq!(a.len(), k * k);
+    // factor L L^T = A + lam I  (lower triangular, row-major)
+    let mut l = vec![0.0f64; k * k];
+    for i in 0..k {
+        for j in 0..=i {
+            let mut sum = a[i * k + j] + if i == j { lam } else { 0.0 };
+            for p in 0..j {
+                sum -= l[i * k + p] * l[j * k + p];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * k + j] = sum.sqrt();
+            } else {
+                l[i * k + j] = sum / l[j * k + j];
+            }
+        }
+    }
+    // forward solve L y = b
+    let mut y = vec![0.0f64; k];
+    for i in 0..k {
+        let mut sum = b[i];
+        for p in 0..i {
+            sum -= l[i * k + p] * y[p];
+        }
+        y[i] = sum / l[i * k + i];
+    }
+    // back solve L^T x = y
+    let mut x = vec![0.0f64; k];
+    for i in (0..k).rev() {
+        let mut sum = y[i];
+        for p in (i + 1)..k {
+            sum -= l[p * k + i] * x[p];
+        }
+        x[i] = sum / l[i * k + i];
+    }
+    Some(x)
+}
+
+/// Rank-1 accumulate: A += w w^T (row-major K×K).
+pub fn syr(a: &mut [f64], w: &[f64]) {
+    let k = w.len();
+    debug_assert_eq!(a.len(), k * k);
+    for i in 0..k {
+        let wi = w[i];
+        if wi == 0.0 {
+            continue;
+        }
+        let row = &mut a[i * k..(i + 1) * k];
+        for (j, &wj) in w.iter().enumerate() {
+            row[j] += wi * wj;
+        }
+    }
+}
+
+/// Dense dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: better ILP and deterministic order.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let x = cholesky_solve(&a, 0.0, &[3.0, 4.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = M^T M + I for random-ish M is SPD
+        let m = [1.0, 2.0, 0.5, -1.0, 0.3, 2.0, 1.5, 0.2, -0.7];
+        let k = 3;
+        let mut a = vec![0.0; 9];
+        for i in 0..k {
+            for j in 0..k {
+                for p in 0..k {
+                    a[i * k + j] += m[p * k + i] * m[p * k + j];
+                }
+            }
+        }
+        let x_true = [1.0, -2.0, 0.5];
+        let mut b = vec![0.0; 3];
+        for i in 0..k {
+            for j in 0..k {
+                b[i] += (a[i * k + j] + if i == j { 0.1 } else { 0.0 })
+                    * x_true[j];
+            }
+        }
+        let x = cholesky_solve(&a, 0.1, &b).unwrap();
+        for (xi, ti) in x.iter().zip(x_true.iter()) {
+            assert!((xi - ti).abs() < 1e-9, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![0.0, 2.0, 2.0, 0.0]; // indefinite
+        assert!(cholesky_solve(&a, 0.0, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn syr_accumulates_outer_product() {
+        let mut a = vec![0.0; 4];
+        syr(&mut a, &[2.0, 3.0]);
+        assert_eq!(a, vec![4.0, 6.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let y: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 0.25).collect();
+        let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn axpy_updates() {
+        let mut y = vec![1.0f32, 2.0, 3.0];
+        axpy(2.0, &[1.0, 0.0, -1.0], &mut y);
+        assert_eq!(y, vec![3.0, 2.0, 1.0]);
+    }
+}

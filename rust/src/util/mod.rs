@@ -1,0 +1,17 @@
+//! Offline-environment substrates: PRNG, CLI parsing, JSON emit, stats,
+//! and a small dense-linalg kit.  These replace `rand`, `clap`, `serde`,
+//! and `nalgebra`, which are unavailable in this build environment.
+
+pub mod args;
+pub mod config;
+pub mod fenwick;
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+
+pub use args::Args;
+pub use config::Config;
+pub use fenwick::FenwickTree;
+pub use json::JsonValue;
+pub use rng::Rng;

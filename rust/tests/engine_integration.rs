@@ -1,0 +1,201 @@
+//! Integration tests: the full schedule→push→pull→sync engine across apps,
+//! schedulers, baselines, and the cluster instrumentation.
+
+use strads::baselines::{AlsConfig, AlsMf, YahooLda, YahooLdaConfig};
+use strads::cluster::NetworkConfig;
+use strads::coordinator::RunConfig;
+use strads::datagen::mf_ratings::{self, MfGenConfig};
+use strads::figures::common::{
+    figure_corpus, lasso_engine, lasso_engine_corr, lda_engine, mf_engine,
+};
+
+#[test]
+fn lasso_engine_full_run_improves_and_sparsifies() {
+    let cfg = RunConfig {
+        max_rounds: 250,
+        eval_every: 25,
+        network: NetworkConfig::gbps40(),
+        label: "it-lasso".into(),
+        ..Default::default()
+    };
+    let (mut e, _) = lasso_engine(256, 4_096, 4, 16, true, 0.05, 9, &cfg);
+    let res = e.run(&cfg);
+    let first = res.recorder.points()[0].objective;
+    assert!(res.final_objective < 0.5 * first);
+    assert!(res.total_network_bytes > 0);
+    assert!(res.virtual_secs > 0.0);
+    let nnz = e.app().nnz();
+    assert!(nnz > 0 && nnz < 2_000, "nnz={nnz}");
+}
+
+#[test]
+fn lasso_worker_count_does_not_change_the_math() {
+    // 1, 2 and 4 workers with the same scheduler seed must produce the
+    // same coefficient sequence (BSP push/pull is exact).
+    let cfg = RunConfig::default();
+    let mut betas = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let (mut e, _) =
+            lasso_engine(256, 1_024, workers, 8, true, 0.05, 31, &cfg);
+        for r in 0..80 {
+            e.round(r);
+        }
+        betas.push(e.app().beta.clone());
+    }
+    for other in &betas[1..] {
+        let max_diff = betas[0]
+            .iter()
+            .zip(other.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 5e-4, "divergence across worker counts: {max_diff}");
+    }
+}
+
+#[test]
+fn mf_strads_and_als_reach_comparable_optima() {
+    let users = 300;
+    let items = 120;
+    let rank = 6;
+    let lambda = 0.05f32;
+    // CCD needs more sweeps than ALS's closed-form full solves to reach
+    // the same neighbourhood; 40 CCD sweeps vs 10 ALS iterations.
+    let cfg = RunConfig {
+        max_rounds: 40 * 2 * rank as u64,
+        eval_every: 2 * rank as u64,
+        label: "it-mf".into(),
+        ..Default::default()
+    };
+    let mut strads = mf_engine(users, items, rank, 3, lambda, 17, &cfg);
+    let res = strads.run(&cfg);
+
+    let data = mf_ratings::generate(&MfGenConfig {
+        n_users: users,
+        n_items: items,
+        density: 0.012,
+        true_rank: 6,
+        seed: 17,
+        ..Default::default()
+    });
+    let mut als = AlsMf::new(
+        &data.a,
+        AlsConfig { rank, lambda, n_workers: 3, seed: 17 },
+        NetworkConfig::ideal(),
+        None,
+    );
+    let (arec, _) = als.run(10, "it-als");
+
+    // two different algorithms, same objective: optima within 25%
+    let s = res.final_objective;
+    let a = arec.last_objective().unwrap();
+    assert!(
+        (s - a).abs() / s.max(a) < 0.25,
+        "CCD {s} vs ALS {a} should be comparable"
+    );
+}
+
+#[test]
+fn lda_strads_tracks_or_beats_data_parallel_baseline() {
+    let corpus = figure_corpus(3_000, 400, 23);
+    let k = 16;
+    let workers = 4;
+    let sweeps = 8u64;
+    let cfg = RunConfig {
+        max_rounds: sweeps * workers as u64,
+        eval_every: workers as u64,
+        network: NetworkConfig::ideal(),
+        label: "it-lda".into(),
+        ..Default::default()
+    };
+    let mut strads = lda_engine(&corpus, k, workers, 23, &cfg);
+    let sres = strads.run(&cfg);
+
+    let mut yahoo = YahooLda::new(
+        &corpus,
+        YahooLdaConfig {
+            n_topics: k,
+            alpha: 0.1,
+            gamma: 0.01,
+            n_workers: workers,
+            seed: 23,
+        },
+        NetworkConfig::ideal(),
+        None,
+    );
+    let (yrec, _) = yahoo.run(sweeps, "it-yahoo");
+
+    let s = sres.final_objective;
+    let y = yrec.last_objective().unwrap();
+    // same sweep budget: STRADS should be in the same band or better
+    // (lower parallelization error); allow 5% slack for sampler noise
+    assert!(s > y + 0.05 * y.abs() * -1.0, "STRADS {s} vs Yahoo {y}");
+}
+
+#[test]
+fn network_model_distinguishes_fabrics() {
+    let corpus = figure_corpus(3_000, 400, 29);
+    let mk = |net: NetworkConfig| {
+        let cfg = RunConfig {
+            max_rounds: 8,
+            eval_every: 8,
+            network: net,
+            label: "it-net".into(),
+            ..Default::default()
+        };
+        let mut e = lda_engine(&corpus, 16, 4, 29, &cfg);
+        e.run(&cfg).virtual_secs
+    };
+    let slow = mk(NetworkConfig::gbps1());
+    let fast = mk(NetworkConfig::gbps40());
+    let ideal = mk(NetworkConfig::ideal());
+    assert!(slow > fast, "1G ({slow}) must be slower than 40G ({fast})");
+    assert!(fast > ideal, "40G ({fast}) must be slower than ideal ({ideal})");
+}
+
+#[test]
+fn memory_capacity_kills_runs_cleanly() {
+    let cfg = RunConfig {
+        max_rounds: 50,
+        eval_every: 5,
+        mem_capacity: Some(16), // absurdly small
+        label: "it-oom".into(),
+        ..Default::default()
+    };
+    let (mut e, _) = lasso_engine(128, 512, 2, 8, true, 0.05, 3, &cfg);
+    let res = e.run(&cfg);
+    assert!(res.oom.is_some());
+    assert!(res.rounds_run < 50);
+}
+
+#[test]
+fn random_scheduler_diverges_where_filtered_does_not() {
+    // the paper's §3.3 claim as an integration-level assertion
+    let cfg = RunConfig::default();
+    let (mut safe, _) =
+        lasso_engine_corr(128, 2_048, 2, 16, true, 0.08, 0.9, 7, &cfg);
+    let (mut unsafe_, _) =
+        lasso_engine_corr(128, 2_048, 2, 16, false, 0.08, 0.9, 7, &cfg);
+    for r in 0..200 {
+        safe.round(r);
+        unsafe_.round(r);
+    }
+    let (s, u) = (safe.evaluate(), unsafe_.evaluate());
+    assert!(s.is_finite());
+    assert!(u.is_nan() || s < u * 0.5, "safe {s} vs unsafe {u}");
+}
+
+#[test]
+fn recorders_emit_csv_and_json() {
+    let cfg = RunConfig {
+        max_rounds: 20,
+        eval_every: 5,
+        label: "it-rec".into(),
+        ..Default::default()
+    };
+    let (mut e, _) = lasso_engine(128, 512, 2, 8, true, 0.05, 5, &cfg);
+    let res = e.run(&cfg);
+    let csv = res.recorder.to_csv();
+    assert!(csv.lines().count() >= 5);
+    let json = res.recorder.to_json().to_json();
+    assert!(json.contains("\"points\""));
+}

@@ -1,0 +1,121 @@
+//! Cross-module property tests: coordinator/scheduler/kvstore invariants
+//! under randomized configurations (the paper's correctness arguments as
+//! executable properties).
+
+use strads::coordinator::RunConfig;
+use strads::figures::common::{figure_corpus, lasso_engine, lda_engine};
+use strads::kvstore::SliceStore;
+use strads::scheduler::{RandomScheduler, RotationScheduler};
+use strads::testing::{ensure, prop_check, Prop};
+
+#[test]
+fn prop_rotation_never_double_leases() {
+    // rotation assignments drive SliceStore checkouts: no panic = no
+    // double lease, the LDA disjointness invariant
+    prop_check("rotation x slicestore", 50, |g| {
+        let u = g.usize_in(1, 24);
+        let rounds = g.usize_in(1, 3 * u);
+        let mut store = SliceStore::new(vec![0u8; u]);
+        let mut sched = RotationScheduler::new(u);
+        for _ in 0..rounds {
+            let assign = sched.next_round();
+            let leases: Vec<_> =
+                assign.iter().map(|&a| store.checkout(a)).collect();
+            for lease in leases {
+                store.checkin(lease);
+            }
+        }
+        ensure(
+            (0..u).all(|a| store.version(a) == rounds as u64),
+            "every slice checked in exactly once per round",
+        )
+    });
+}
+
+#[test]
+fn prop_random_scheduler_distinct_in_range() {
+    prop_check("random scheduler output", 100, |g| {
+        let n = g.usize_in(1, 5_000);
+        let u = g.usize_in(1, 64);
+        let mut s = RandomScheduler::new(n, u, g.seed());
+        let set = s.next_set();
+        let mut d = set.clone();
+        d.sort_unstable();
+        d.dedup();
+        if d.len() != set.len() {
+            return Prop::Fail("duplicates".into());
+        }
+        ensure(set.iter().all(|&j| j < n), "in range")
+    });
+}
+
+#[test]
+fn prop_lasso_objective_never_increases_under_priority() {
+    // the paper's safe-scheduling claim: filtered concurrent CD descends
+    prop_check("lasso monotone descent", 6, |g| {
+        let n = 128;
+        let j = g.usize_in(256, 1_024);
+        let workers = 1 + g.usize_in(0, 3);
+        let u = 1 + g.usize_in(0, 7);
+        let cfg = RunConfig::default();
+        let (mut e, _) =
+            lasso_engine(n, j, workers, u, true, 0.05, g.seed(), &cfg);
+        let mut prev = e.evaluate();
+        for r in 0..40 {
+            e.round(r);
+            let obj = e.evaluate();
+            if obj > prev + 1e-3 {
+                return Prop::Fail(format!(
+                    "objective rose {prev} -> {obj} (j={j}, u={u})"
+                ));
+            }
+            prev = obj;
+        }
+        Prop::Ok
+    });
+}
+
+#[test]
+fn prop_lda_tokens_conserved_any_config() {
+    prop_check("lda conservation", 6, |g| {
+        let workers = 1 + g.usize_in(0, 5);
+        let k = 2 + g.usize_in(0, 14);
+        let corpus = figure_corpus(500 + g.usize_in(0, 1_500), 100, g.seed());
+        let cfg = RunConfig::default();
+        let mut e = lda_engine(&corpus, k, workers, g.seed(), &cfg);
+        let before: f32 = e.app().s.iter().sum();
+        for r in 0..(2 * workers as u64) {
+            e.round(r);
+        }
+        let after: f32 = e.app().s.iter().sum();
+        if (before - after).abs() > 1e-2 {
+            return Prop::Fail(format!("{before} -> {after}"));
+        }
+        // s-error always within the paper's [0, 2] bound
+        ensure(
+            e.app()
+                .s_error_history
+                .iter()
+                .all(|&d| (0.0..=2.0).contains(&d)),
+            "Δ_t in [0,2]",
+        )
+    });
+}
+
+#[test]
+fn prop_engine_deterministic_given_seed() {
+    prop_check("engine determinism", 4, |g| {
+        let seed = g.seed();
+        let cfg = RunConfig::default();
+        let run = |seed| {
+            let (mut e, _) =
+                lasso_engine(128, 512, 2, 8, true, 0.05, seed, &cfg);
+            for r in 0..30 {
+                e.round(r);
+            }
+            e.evaluate()
+        };
+        let (a, b) = (run(seed), run(seed));
+        ensure((a - b).abs() < 1e-12, format!("{a} vs {b}"))
+    });
+}
