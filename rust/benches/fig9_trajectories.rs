@@ -31,5 +31,23 @@ fn main() {
         "STRADS Lasso objective must fall"
     );
 
+    // ---- BSP vs SSP under a rotating 4x straggler skew ----------------
+    // Ssp { staleness: 2 } must beat BSP on virtual-time-to-objective for
+    // both Lasso and MF: the pipeline overlaps the straggler's compute
+    // that a BSP barrier would charge to every round.
+    for c in fig9::run_mode_comparison(&cfg, 2, 4.0) {
+        fig9::print_mode_comparison(&c);
+        assert!(c.max_staleness <= 2, "{}: staleness bound violated", c.app);
+        let bsp = c.bsp_secs_to_target.expect("BSP reaches shared target");
+        let ssp = c.ssp_secs_to_target.expect("SSP reaches shared target");
+        assert!(
+            ssp < bsp,
+            "{}: SSP ({ssp:.4}s) must beat BSP ({bsp:.4}s) to objective \
+             {:.6} under a 4x rotating straggler",
+            c.app,
+            c.target
+        );
+    }
+
     println!("\nfig9 bench completed in {:.2}s", t.elapsed().as_secs_f64());
 }

@@ -8,7 +8,6 @@ use strads::backend::native::{NativeLassoShard, NativeLdaShard, Token};
 use strads::backend::{LassoShard, LdaShard};
 use strads::datagen::lasso_synth::{self, LassoGenConfig};
 use strads::kvstore::SliceStore;
-use strads::runtime::{Engine, Tensor};
 use strads::scheduler::priority::{PriorityConfig, PriorityScheduler};
 use strads::scheduler::RotationScheduler;
 use strads::util::stats::{median, time_it};
@@ -99,6 +98,23 @@ fn main() {
     report("LDA Gibbs sweep (8192 tokens, K=64)", "tokens/s", 8_192.0, &runs);
 
     // ---- XLA artifact call latency (optional) ---------------------------
+    xla_call_bench();
+
+    println!("{:-<100}", "");
+    println!("micro bench done");
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_call_bench() {
+    println!(
+        "{:<44} skipped (build with --features xla + `make artifacts`)",
+        "xla lasso_push call"
+    );
+}
+
+#[cfg(feature = "xla")]
+fn xla_call_bench() {
+    use strads::runtime::{Engine, Tensor};
     match Engine::load("artifacts") {
         Err(_) => println!(
             "{:<44} skipped (run `make artifacts` first)",
@@ -133,7 +149,4 @@ fn main() {
             );
         }
     }
-
-    println!("{:-<100}", "");
-    println!("micro bench done");
 }

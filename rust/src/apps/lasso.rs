@@ -12,6 +12,7 @@ use crate::backend::LassoShard;
 use crate::coordinator::StradsApp;
 use crate::scheduler::{PriorityScheduler, RandomScheduler};
 use crate::sparse::CscMatrix;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Scheduling policy for the Lasso app.
@@ -51,8 +52,9 @@ pub struct LassoApp {
     /// Scheduler's view of the design matrix (for dependency checks; the
     /// paper grants `schedule` access to all data D).
     x_cols: Arc<CscMatrix>,
-    /// Set scheduled in the current round (consumed by pull).
-    in_flight: Option<Vec<usize>>,
+    /// Sets scheduled but not yet pulled, keyed by round: under SSP
+    /// several rounds are in flight at once (BSP holds at most one entry).
+    in_flight: HashMap<u64, Vec<usize>>,
     /// Running count of committed coefficient updates.
     pub updates_committed: u64,
 }
@@ -70,7 +72,7 @@ impl LassoApp {
             n_workers: cfg.n_workers,
             sched,
             x_cols,
-            in_flight: None,
+            in_flight: HashMap::new(),
             updates_committed: 0,
         }
     }
@@ -101,13 +103,17 @@ impl StradsApp for LassoApp {
     type SyncMsg = LassoSync;
     type WorkerState = Box<dyn LassoShard>;
 
-    fn schedule(&mut self, _round: u64) -> Vec<LassoTask> {
+    fn schedule(&mut self, round: u64) -> Vec<LassoTask> {
         let sel = match &mut self.sched {
             LassoSched::Priority(p) => p.next_set(&self.x_cols),
             LassoSched::Random(r) => r.next_set(),
         };
+        // beta_sel ships the coordinator's current coefficients.  Under
+        // SSP a coefficient redrawn while still in flight makes the z
+        // partial mix a fresh beta_j with a staler residual — that error
+        // is exactly what the bounded-staleness window limits.
         let beta_sel: Vec<f32> = sel.iter().map(|&j| self.beta[j]).collect();
-        self.in_flight = Some(sel.clone());
+        self.in_flight.insert(round, sel.clone());
         (0..self.n_workers)
             .map(|_| LassoTask { sel: sel.clone(), beta_sel: beta_sel.clone() })
             .collect()
@@ -117,8 +123,8 @@ impl StradsApp for LassoApp {
         ws.partials(&task.sel, &task.beta_sel)
     }
 
-    fn pull(&mut self, _round: u64, partials: Vec<Vec<f32>>) -> Option<LassoSync> {
-        let sel = self.in_flight.take().expect("pull without schedule");
+    fn pull(&mut self, round: u64, partials: Vec<Vec<f32>>) -> Option<LassoSync> {
+        let sel = self.in_flight.remove(&round).expect("pull without schedule");
         let u = sel.len();
         let mut z = vec![0.0f32; u];
         for p in &partials {

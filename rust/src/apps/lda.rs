@@ -264,6 +264,13 @@ impl StradsApp for LdaApp {
         // (the paper's star topology carries schedule metadata, not data)
         true
     }
+
+    fn supports_ssp() -> bool {
+        // rotation leases each word-topic slice to exactly one worker per
+        // round; pipelining round t+1 before round t checks its slices
+        // back in would double-lease.  The engine falls back to BSP.
+        false
+    }
 }
 
 /// Helpers to build the initial partitioned state from a corpus.

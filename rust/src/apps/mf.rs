@@ -11,6 +11,7 @@
 use crate::backend::MfShard;
 use crate::coordinator::StradsApp;
 use crate::scheduler::round_robin::{Factor, MfRound, RoundRobinScheduler};
+use std::collections::HashMap;
 
 /// Coordinator-side configuration.
 pub struct MfConfig {
@@ -52,7 +53,9 @@ pub struct MfApp {
     lambda: f32,
     n_workers: usize,
     sched: RoundRobinScheduler,
-    in_flight: Option<MfRound>,
+    /// Scheduled-but-unpulled rounds, keyed by engine round index (SSP
+    /// keeps several in flight; BSP at most one).
+    in_flight: HashMap<u64, MfRound>,
 }
 
 impl MfApp {
@@ -65,7 +68,7 @@ impl MfApp {
             lambda: cfg.lambda,
             n_workers: cfg.n_workers,
             sched: RoundRobinScheduler::new(cfg.rank),
-            in_flight: None,
+            in_flight: HashMap::new(),
         }
     }
 
@@ -85,9 +88,9 @@ impl StradsApp for MfApp {
     type SyncMsg = MfSync;
     type WorkerState = Box<dyn MfShard>;
 
-    fn schedule(&mut self, _round: u64) -> Vec<MfTask> {
+    fn schedule(&mut self, round: u64) -> Vec<MfTask> {
         let r = self.sched.next_round();
-        self.in_flight = Some(r);
+        self.in_flight.insert(round, r);
         (0..self.n_workers)
             .map(|_| MfTask { round: r, lambda: self.lambda })
             .collect()
@@ -106,8 +109,8 @@ impl StradsApp for MfApp {
         }
     }
 
-    fn pull(&mut self, _round: u64, partials: Vec<MfPartial>) -> Option<MfSync> {
-        let round = self.in_flight.take().expect("pull without schedule");
+    fn pull(&mut self, round: u64, partials: Vec<MfPartial>) -> Option<MfSync> {
+        let round = self.in_flight.remove(&round).expect("pull without schedule");
         match round.factor {
             Factor::W => None, // W rows are shard-local; nothing to commit
             Factor::H => {

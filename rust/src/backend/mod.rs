@@ -8,6 +8,8 @@
 //!   examples and cross-checked against `native` in integration tests.
 
 pub mod native;
+/// AOT PJRT path — requires the `xla` crate (cargo feature `xla`).
+#[cfg(feature = "xla")]
 pub mod xla;
 
 /// Lasso shard compute (one worker's row shard).

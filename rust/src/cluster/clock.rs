@@ -5,6 +5,56 @@
 //! cluster even when this build machine executes them on fewer cores.  All
 //! figure harnesses report this clock (plus wall-clock for reference).
 
+/// Models compute-speed skew across the simulated machines: measured
+/// per-worker compute seconds are scaled before they are charged to the
+/// virtual clock.  This is how the straggler experiments (fig9 BSP-vs-SSP
+/// arm) inject slow machines deterministically.
+#[derive(Debug, Clone, Default)]
+pub enum StragglerModel {
+    /// Homogeneous cluster — measured times pass through untouched
+    /// (bit-identical to the pre-straggler engine behaviour).
+    #[default]
+    None,
+    /// Static per-worker multipliers (index = worker id; missing entries
+    /// default to 1.0).  `Fixed(vec![4.0, 1.0, 1.0, 1.0])` is a persistent
+    /// 4x straggler on worker 0.
+    Fixed(Vec<f64>),
+    /// One worker is `factor`x slow each round, rotating round-robin:
+    /// worker `round % n_workers` lags in round `round`.  The i.i.d.-ish
+    /// skew where SSP's pipeline shines (every worker is sometimes the
+    /// straggler, so bounded lag lets the fast ones run ahead).
+    Rotating { factor: f64 },
+}
+
+impl StragglerModel {
+    /// Multiplier for `worker` in `round` on an `n_workers` cluster.
+    pub fn multiplier(&self, worker: usize, round: u64, n_workers: usize) -> f64 {
+        match self {
+            StragglerModel::None => 1.0,
+            StragglerModel::Fixed(m) => m.get(worker).copied().unwrap_or(1.0),
+            StragglerModel::Rotating { factor } => {
+                if n_workers > 0 && round % n_workers as u64 == worker as u64 {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Scale measured per-worker seconds in place.  `None` is a strict
+    /// no-op so default runs stay bit-identical.
+    pub fn scale(&self, secs: &mut [f64], round: u64) {
+        if matches!(self, StragglerModel::None) {
+            return;
+        }
+        let n = secs.len();
+        for (p, s) in secs.iter_mut().enumerate() {
+            *s *= self.multiplier(p, round, n);
+        }
+    }
+}
+
 /// Accumulates simulated elapsed time for one experiment run.
 #[derive(Debug, Default, Clone)]
 pub struct VirtualClock {
@@ -35,6 +85,15 @@ impl VirtualClock {
         self.elapsed_s += secs;
     }
 
+    /// Advance one *pipelined* round (SSP mode): the caller has already
+    /// resolved per-worker start times against the dispatch window, so the
+    /// clock simply jumps to the supplied absolute timestamp (monotone —
+    /// a timestamp in the past is ignored) and counts the round.
+    pub fn advance_round_to(&mut self, timestamp_s: f64) {
+        self.elapsed_s = self.elapsed_s.max(timestamp_s);
+        self.rounds += 1;
+    }
+
     pub fn seconds(&self) -> f64 {
         self.elapsed_s
     }
@@ -62,6 +121,32 @@ mod tests {
         c.advance_round(&[0.2], 0.0, 0.0);
         c.advance(1.0);
         assert!((c.seconds() - 1.3).abs() < 1e-12);
+        assert_eq!(c.rounds(), 2);
+    }
+
+    #[test]
+    fn straggler_models_scale_compute() {
+        let mut s = [1.0, 1.0, 1.0];
+        StragglerModel::None.scale(&mut s, 7);
+        assert_eq!(s, [1.0, 1.0, 1.0]);
+
+        StragglerModel::Fixed(vec![4.0]).scale(&mut s, 0);
+        assert_eq!(s, [4.0, 1.0, 1.0]); // missing entries default to 1.0
+
+        let rot = StragglerModel::Rotating { factor: 4.0 };
+        let mut a = [1.0, 1.0, 1.0];
+        rot.scale(&mut a, 1);
+        assert_eq!(a, [1.0, 4.0, 1.0]);
+        assert_eq!(rot.multiplier(1, 4, 3), 4.0); // 4 % 3 == 1
+        assert_eq!(rot.multiplier(0, 4, 3), 1.0);
+    }
+
+    #[test]
+    fn advance_round_to_is_monotone_and_counts() {
+        let mut c = VirtualClock::new();
+        c.advance_round_to(2.5);
+        c.advance_round_to(1.0); // stale timestamp: time must not go back
+        assert!((c.seconds() - 2.5).abs() < 1e-12);
         assert_eq!(c.rounds(), 2);
     }
 

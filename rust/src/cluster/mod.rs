@@ -17,7 +17,7 @@ pub mod memory;
 pub mod network;
 pub mod pool;
 
-pub use clock::VirtualClock;
+pub use clock::{StragglerModel, VirtualClock};
 pub use memory::MemoryTracker;
 pub use network::{NetworkConfig, NetworkModel};
-pub use pool::WorkerPool;
+pub use pool::{PendingRound, WorkerPool};

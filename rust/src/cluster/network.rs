@@ -93,10 +93,19 @@ impl NetworkModel {
 
     /// Record a worker↔worker transfer (e.g. LDA's rotating word-topic
     /// slices, or a worker's KV-shard fetch served by a peer).  These run
-    /// on the point links in parallel and bypass the hub.
-    pub fn send_p2p(&mut self, worker: usize, bytes: usize) {
-        self.p2p_bytes[worker] += bytes as u64;
-        self.total_bytes += bytes as u64;
+    /// on the point links in parallel and bypass the hub, but the payload
+    /// occupies *both* endpoints' links: the sender serializes it out and
+    /// the receiver serializes it in.  (Charging only one side — the old
+    /// behaviour — underestimated rotation-round comm time whenever the
+    /// uncharged endpoint was otherwise idle.)  A self-transfer (`from ==
+    /// to`) is a local move and costs nothing.
+    pub fn send_p2p(&mut self, from: usize, to: usize, bytes: usize) {
+        if from == to {
+            return;
+        }
+        self.p2p_bytes[from] += bytes as u64;
+        self.p2p_bytes[to] += bytes as u64;
+        self.total_bytes += bytes as u64; // one payload on the wire
         self.total_msgs += 1;
     }
 
@@ -174,6 +183,43 @@ mod tests {
         }
         let t = n.round_time_and_reset();
         assert!((t - 4.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn p2p_charges_both_endpoints_but_not_the_hub() {
+        // 1MB peer transfer on 1MB/s links: either endpoint alone would be
+        // busy 1s.  Loading the *receiver* with another 1MB of hub traffic
+        // must make its link the 2s bottleneck — under one-sided charging
+        // the receiver's link looked empty and the round cost only 1s.
+        let cfg = NetworkConfig {
+            latency_s: 0.0,
+            bandwidth_bps: 1e6,
+            hub_bandwidth_bps: f64::INFINITY,
+        };
+        let mut n = NetworkModel::new(cfg, 3);
+        n.send_p2p(0, 1, 1_000_000);
+        n.send_down(1, 1_000_000);
+        let t = n.round_time_and_reset();
+        assert!((t - 2.0).abs() < 1e-9, "t={t}");
+        // the payload itself is counted once
+        assert_eq!(n.total_bytes(), 2_000_000);
+
+        // hub-bound check: p2p bytes never serialize through the hub
+        let mut n = NetworkModel::new(
+            NetworkConfig { latency_s: 0.0, bandwidth_bps: 1e6, hub_bandwidth_bps: 1e6 },
+            3,
+        );
+        n.send_p2p(0, 1, 1_000_000);
+        let t = n.round_time_and_reset();
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn p2p_self_transfer_is_free() {
+        let mut n = NetworkModel::new(NetworkConfig::gbps1(), 1);
+        n.send_p2p(0, 0, 123_456);
+        assert_eq!(n.round_time_and_reset(), 0.0);
+        assert_eq!(n.total_bytes(), 0);
     }
 
     #[test]

@@ -13,6 +13,24 @@ use std::thread::JoinHandle;
 
 type Job<S> = Box<dyn FnOnce(&mut S) + Send>;
 
+/// Raw `clock_gettime` binding (the `libc` crate is unavailable offline;
+/// the symbol itself is always present in the platform C library).
+#[cfg(unix)]
+mod sys {
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    /// Linux value of CLOCK_THREAD_CPUTIME_ID (the build/CI target).
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+
+    extern "C" {
+        pub fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+}
+
 /// Per-thread CPU seconds (CLOCK_THREAD_CPUTIME_ID).
 ///
 /// The virtual cluster clock needs each worker's *own* compute time: on a
@@ -20,13 +38,25 @@ type Job<S> = Box<dyn FnOnce(&mut S) + Send>;
 /// measurements would include preemption by sibling workers and destroy
 /// the scaling curves (paper Fig 10).  Thread CPU time is
 /// oversubscription-immune.
+#[cfg(unix)]
 pub fn thread_cpu_secs() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
     // SAFETY: ts is a valid out-pointer; the clock id is a constant.
     unsafe {
-        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+        sys::clock_gettime(sys::CLOCK_THREAD_CPUTIME_ID, &mut ts);
     }
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Non-unix fallback: monotonic wall clock anchored at first use
+/// (oversubscription-sensitive, but elapsed differences never go
+/// negative the way a steppable system clock could).
+#[cfg(not(unix))]
+pub fn thread_cpu_secs() -> f64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// Pool of worker threads, one per simulated machine.
@@ -69,6 +99,20 @@ impl<S: Send + 'static> WorkerPool<S> {
         F: FnOnce(&mut S) -> R + Send + 'static,
         G: Fn(usize) -> F,
     {
+        self.dispatch(make_job).collect()
+    }
+
+    /// Enqueue `make_job(p)`'s closure on every worker *without waiting*:
+    /// the returned handle collects the replies later.  This is the
+    /// non-blocking half of the SSP pipeline — the coordinator can dispatch
+    /// round t+1 while round t is still computing, and FIFO mailboxes keep
+    /// per-worker ordering intact.
+    pub fn dispatch<R, F, G>(&self, make_job: G) -> PendingRound<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut S) -> R + Send + 'static,
+        G: Fn(usize) -> F,
+    {
         let (rtx, rrx) = mpsc::channel::<(usize, R, f64)>();
         for (p, sender) in self.senders.iter().enumerate() {
             let job = make_job(p);
@@ -82,14 +126,7 @@ impl<S: Send + 'static> WorkerPool<S> {
             });
             sender.send(wrapped).expect("worker thread alive");
         }
-        drop(rtx);
-        let mut slots: Vec<Option<(R, f64)>> =
-            (0..self.senders.len()).map(|_| None).collect();
-        for _ in 0..self.senders.len() {
-            let (p, r, secs) = rrx.recv().expect("worker reply");
-            slots[p] = Some((r, secs));
-        }
-        slots.into_iter().map(|s| s.expect("all replied")).collect()
+        PendingRound { rrx, n_workers: self.senders.len() }
     }
 
     /// Run a job on a single worker and wait for its result.
@@ -120,6 +157,34 @@ impl<S: Send + 'static> WorkerPool<S> {
             let wrapped: Job<S> = Box::new(move |state: &mut S| job(state));
             sender.send(wrapped).expect("worker thread alive");
         }
+    }
+}
+
+/// In-flight results of one [`WorkerPool::dispatch`] call.
+///
+/// Holding several `PendingRound`s at once is what pipelines rounds: each
+/// carries its own reply channel, so collects can happen strictly in
+/// dispatch order (the engine's SSP window) without blocking dispatches.
+pub struct PendingRound<R> {
+    rrx: mpsc::Receiver<(usize, R, f64)>,
+    n_workers: usize,
+}
+
+impl<R> PendingRound<R> {
+    /// Block until every worker has replied; results in worker order with
+    /// per-worker on-thread seconds.
+    pub fn collect(self) -> Vec<(R, f64)> {
+        let mut slots: Vec<Option<(R, f64)>> =
+            (0..self.n_workers).map(|_| None).collect();
+        for _ in 0..self.n_workers {
+            let (p, r, secs) = self.rrx.recv().expect("worker reply");
+            slots[p] = Some((r, secs));
+        }
+        slots.into_iter().map(|s| s.expect("all replied")).collect()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
     }
 }
 
@@ -178,5 +243,45 @@ mod tests {
     fn pool_drop_joins_threads() {
         let pool = WorkerPool::new(vec![(); 8]);
         drop(pool); // must not deadlock
+    }
+
+    #[test]
+    fn dispatch_pipelines_two_rounds_in_fifo_order() {
+        // two dispatches before any collect: each worker must run job A
+        // then job B (FIFO), and each handle must see its own round.
+        let pool = WorkerPool::new(vec![Vec::<u32>::new(); 3]);
+        let a = pool.dispatch(|_| {
+            |s: &mut Vec<u32>| {
+                s.push(1);
+                s.clone()
+            }
+        });
+        let b = pool.dispatch(|_| {
+            |s: &mut Vec<u32>| {
+                s.push(2);
+                s.clone()
+            }
+        });
+        let ra = a.collect();
+        let rb = b.collect();
+        assert!(ra.iter().all(|(v, _)| v == &vec![1]));
+        assert!(rb.iter().all(|(v, _)| v == &vec![1, 2]));
+    }
+
+    #[test]
+    fn dispatch_interleaves_with_broadcast_in_order() {
+        // dispatch(push t) ; broadcast(sync t) ; dispatch(push t+1):
+        // the sync must land between the two pushes on every worker.
+        let pool = WorkerPool::new(vec![Vec::<u32>::new(); 4]);
+        let t0 = pool.dispatch(|_| {
+            |s: &mut Vec<u32>| {
+                s.push(10);
+            }
+        });
+        pool.broadcast(|_| |s: &mut Vec<u32>| s.push(99));
+        let t1 = pool.dispatch(|_| |s: &mut Vec<u32>| s.clone());
+        t0.collect();
+        let out = t1.collect();
+        assert!(out.iter().all(|(v, _)| v == &vec![10, 99]));
     }
 }

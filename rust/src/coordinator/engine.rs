@@ -7,17 +7,37 @@
 //! 3. workers compute partials over their data shards (measured on-thread);
 //! 4. partials return to the coordinator (bytes charged);
 //! 5. coordinator `pull()` aggregates and commits the variable update;
-//! 6. the resulting sync message is broadcast (**sync**, BSP): FIFO worker
+//! 6. the resulting sync message is broadcast (**sync**): FIFO worker
 //!    mailboxes guarantee every worker applies it before its next push.
 //!
-//! The engine owns the virtual cluster clock: each round advances it by
-//! `max_p(compute_p) + comm + coordinator_time`, making reported scaling
+//! Two execution modes ([`ExecutionMode`]):
+//!
+//! * **BSP** (default, the paper's semantics): the coordinator barriers on
+//!   every round — the virtual clock advances by
+//!   `max_p(compute_p) + comm + coordinator_time`, so one slow worker
+//!   stalls the whole cluster.
+//! * **SSP** (`Ssp { staleness: s }`): the round loop is split into a
+//!   dispatch half and a collect half; the coordinator keeps up to `s`
+//!   rounds in flight, dispatching round `t+1` while workers still compute
+//!   round `t`.  Workers apply sync broadcasts lazily from their FIFO
+//!   mailboxes, so a push for round `r` always sees every commit up to
+//!   `r - 1 - s` — the bounded-staleness invariant, enforced at every
+//!   collect through a [`VersionVector`].  Straggler compute time is
+//!   overlapped instead of barriered; [`SspStats`] records the observed
+//!   staleness and the barrier wait the pipeline hid.
+//!
+//! The engine owns the virtual cluster clock, making reported scaling
 //! behaviour independent of the physical core count of the build machine.
 
-use crate::cluster::{MemoryTracker, NetworkConfig, NetworkModel, VirtualClock, WorkerPool};
-use crate::metrics::Recorder;
+use crate::cluster::{
+    MemoryTracker, NetworkConfig, NetworkModel, PendingRound, StragglerModel,
+    VirtualClock, WorkerPool,
+};
+use crate::kvstore::VersionVector;
+use crate::metrics::{Recorder, SspStats};
 use crate::util::stats::Stopwatch;
 use std::cell::RefCell;
+use std::collections::VecDeque;
 
 /// A STRADS application: the user-defined primitives (paper Fig 2).
 ///
@@ -76,6 +96,28 @@ pub trait StradsApp {
     /// Worker model-state residency in bytes (paper Fig 3); data shards are
     /// excluded by convention (identical across systems).
     fn model_bytes(ws: &Self::WorkerState) -> u64;
+
+    /// Whether the app tolerates the SSP execution mode.  Apps whose
+    /// schedule hands out *exclusive* state (LDA's rotation leases a slice
+    /// to exactly one worker per round) must stay BSP: pipelining rounds
+    /// would require checking a slice out twice.  The engine silently falls
+    /// back to BSP when this returns false.
+    fn supports_ssp() -> bool {
+        true
+    }
+}
+
+/// How the round loop synchronizes (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutionMode {
+    /// Strict bulk-synchronous rounds (the paper's semantics; default).
+    #[default]
+    Bsp,
+    /// Stale-synchronous pipelining: up to `staleness` rounds in flight;
+    /// every push sees all commits up to `round - 1 - staleness`.
+    /// `staleness: 0` runs the pipelined machinery with BSP-equivalent
+    /// ordering (useful for differential testing).
+    Ssp { staleness: u64 },
 }
 
 /// Engine run parameters.
@@ -92,6 +134,11 @@ pub struct RunConfig {
     pub mem_capacity: Option<u64>,
     /// Label for the recorder.
     pub label: String,
+    /// BSP barriers (default) or SSP pipelining.
+    pub mode: ExecutionMode,
+    /// Compute-speed skew injected into the virtual clock (default: none;
+    /// measured times pass through bit-identically).
+    pub straggler: StragglerModel,
 }
 
 impl Default for RunConfig {
@@ -103,6 +150,8 @@ impl Default for RunConfig {
             network: NetworkConfig::ideal(),
             mem_capacity: None,
             label: "run".to_string(),
+            mode: ExecutionMode::Bsp,
+            straggler: StragglerModel::None,
         }
     }
 }
@@ -119,6 +168,28 @@ pub struct RunResult {
     pub total_network_bytes: u64,
     /// Set if a worker exceeded the modelled memory capacity.
     pub oom: Option<String>,
+    /// SSP accounting (observed staleness, straggler wait hidden); None
+    /// for BSP runs.
+    pub ssp: Option<SspStats>,
+}
+
+/// One dispatched-but-uncollected round in the SSP window.
+struct InFlight<P> {
+    round: u64,
+    /// Virtual timestamp of the dispatch (tasks cannot start earlier).
+    dispatched_at: f64,
+    /// Commits visible to this round's pushes (FIFO mailboxes guarantee
+    /// every sync enqueued before the dispatch is applied first).
+    version_at_dispatch: u64,
+    pending: PendingRound<P>,
+}
+
+/// Mutable virtual-time state threaded through the SSP collect half.
+struct SspClockState {
+    /// Coordinator's absolute virtual time.
+    coord_now: f64,
+    /// Per-worker availability timestamps.
+    worker_free: Vec<f64>,
 }
 
 /// The coordinator: owns the app, the worker pool, and all accounting.
@@ -128,6 +199,7 @@ pub struct Engine<A: StradsApp> {
     network: NetworkModel,
     clock: VirtualClock,
     memory: MemoryTracker,
+    straggler: StragglerModel,
 }
 
 impl<A: StradsApp> Engine<A> {
@@ -139,6 +211,7 @@ impl<A: StradsApp> Engine<A> {
             network: NetworkModel::new(cfg.network, n),
             clock: VirtualClock::new(),
             memory: MemoryTracker::new(n, cfg.mem_capacity),
+            straggler: cfg.straggler.clone(),
         }
     }
 
@@ -158,48 +231,79 @@ impl<A: StradsApp> Engine<A> {
         &self.clock
     }
 
-    /// Execute one schedule→push→pull→sync round.  Returns the measured
-    /// coordinator-side seconds (schedule+pull).
-    pub fn round(&mut self, round_idx: u64) -> f64 {
-        let coord = Stopwatch::start();
+    /// Charge one round's task payloads to the network model.  Rotation
+    /// (p2p) payloads travel the worker ring: the slice worker `p` receives
+    /// was held by its right neighbour `(p+1) % n` last round, so both
+    /// endpoints' links are charged.
+    fn charge_task_bytes(&mut self, tasks: &[A::Task]) {
+        let n = self.pool.n_workers();
+        for (p, t) in tasks.iter().enumerate() {
+            if A::p2p_payloads() {
+                self.network.send_p2p((p + 1) % n, p, A::task_bytes(t));
+            } else {
+                self.network.send_down(p, A::task_bytes(t));
+            }
+        }
+    }
+
+    /// Charge one worker's partial payload (p2p partials pass ring-wise to
+    /// the left neighbour — the slice's next holder).
+    fn charge_partial_bytes(&mut self, p: usize, partial: &A::Partial) {
+        let n = self.pool.n_workers();
+        if A::p2p_payloads() {
+            self.network.send_p2p(p, (p + n - 1) % n, A::partial_bytes(partial));
+        } else {
+            self.network.send_up(p, A::partial_bytes(partial));
+        }
+    }
+
+    /// Schedule a round and enqueue its push jobs without waiting (the
+    /// dispatch half of the pipeline).  Returns the pending handle and the
+    /// measured schedule seconds.
+    fn dispatch_round(&mut self, round_idx: u64) -> (PendingRound<A::Partial>, f64) {
+        let sw = Stopwatch::start();
         let tasks = self.app.schedule(round_idx);
         assert_eq!(
             tasks.len(),
             self.pool.n_workers(),
             "schedule must emit one task per worker"
         );
-        for (p, t) in tasks.iter().enumerate() {
-            if A::p2p_payloads() {
-                self.network.send_p2p(p, A::task_bytes(t));
-            } else {
-                self.network.send_down(p, A::task_bytes(t));
-            }
-        }
-        let schedule_secs = coord.secs();
+        self.charge_task_bytes(&tasks);
+        let schedule_secs = sw.secs();
 
         // dispatch push: tasks move into per-worker closures
         let slots = RefCell::new(tasks.into_iter().map(Some).collect::<Vec<_>>());
-        let results = self.pool.run(|p| {
+        let pending = self.pool.dispatch(|p| {
             let task = slots.borrow_mut()[p].take().expect("one task per worker");
             move |ws: &mut A::WorkerState| A::push(ws, task)
         });
+        (pending, schedule_secs)
+    }
 
+    /// Wait for a dispatched round, aggregate (`pull`) and broadcast the
+    /// sync (the collect half).  Returns the straggler-scaled per-worker
+    /// compute seconds, whether a sync was committed, and the measured
+    /// pull seconds.
+    fn collect_round(
+        &mut self,
+        round_idx: u64,
+        pending: PendingRound<A::Partial>,
+    ) -> (Vec<f64>, bool, f64) {
+        let results = pending.collect();
         let mut partials = Vec::with_capacity(results.len());
         let mut compute_secs = Vec::with_capacity(results.len());
         for (p, (partial, secs)) in results.into_iter().enumerate() {
-            if A::p2p_payloads() {
-                self.network.send_p2p(p, A::partial_bytes(&partial));
-            } else {
-                self.network.send_up(p, A::partial_bytes(&partial));
-            }
+            self.charge_partial_bytes(p, &partial);
             partials.push(partial);
             compute_secs.push(secs);
         }
+        self.straggler.scale(&mut compute_secs, round_idx);
 
         let pull_sw = Stopwatch::start();
         let sync_msg = self.app.pull(round_idx, partials);
         let pull_secs = pull_sw.secs();
 
+        let committed = sync_msg.is_some();
         if let Some(msg) = sync_msg {
             for p in 0..self.pool.n_workers() {
                 self.network.send_down(p, A::sync_bytes(&msg));
@@ -209,7 +313,14 @@ impl<A: StradsApp> Engine<A> {
                 move |ws: &mut A::WorkerState| A::sync(ws, &msg)
             });
         }
+        (compute_secs, committed, pull_secs)
+    }
 
+    /// Execute one schedule→push→pull→sync round with a BSP barrier.
+    /// Returns the measured coordinator-side seconds (schedule+pull).
+    pub fn round(&mut self, round_idx: u64) -> f64 {
+        let (pending, schedule_secs) = self.dispatch_round(round_idx);
+        let (compute_secs, _, pull_secs) = self.collect_round(round_idx, pending);
         let comm = self.network.round_time_and_reset();
         let coord_secs = schedule_secs + pull_secs;
         self.clock.advance_round(&compute_secs, comm, coord_secs);
@@ -247,8 +358,21 @@ impl<A: StradsApp> Engine<A> {
     }
 
     /// Run a full experiment loop with periodic evaluation and optional
-    /// early stop.
+    /// early stop.  `cfg.mode` picks BSP barriers (default) or the SSP
+    /// pipeline; apps that cannot tolerate staleness (see
+    /// [`StradsApp::supports_ssp`]) silently fall back to BSP.
     pub fn run(&mut self, cfg: &RunConfig) -> RunResult {
+        match cfg.mode {
+            ExecutionMode::Ssp { staleness } if A::supports_ssp() => {
+                self.run_ssp(cfg, staleness)
+            }
+            _ => self.run_bsp(cfg),
+        }
+    }
+
+    /// The strict BSP loop — unchanged from the original single-mode
+    /// engine, so default trajectories are bit-identical.
+    fn run_bsp(&mut self, cfg: &RunConfig) -> RunResult {
         let wall = Stopwatch::start();
         let mut recorder = Recorder::new(&cfg.label);
         let mut last_obj = self.evaluate();
@@ -286,7 +410,163 @@ impl<A: StradsApp> Engine<A> {
             total_network_bytes: self.network.total_bytes(),
             recorder,
             oom,
+            ssp: None,
         }
+    }
+
+    /// The SSP pipeline: dispatch runs ahead of collect by at most
+    /// `staleness` rounds.
+    ///
+    /// Virtual-time model: each worker owns an availability timestamp.  A
+    /// dispatched task starts at `max(worker_free, dispatch_time)` and runs
+    /// for its (straggler-scaled) measured compute seconds, so fast workers
+    /// stream through queued rounds while a straggler lags — the barrier
+    /// wait BSP would have charged is recorded as `wait_saved`.  Network
+    /// time is resolved per collect over the bytes charged since the
+    /// previous collect (the pipeline's comm window).  Evaluation points
+    /// drain the window first, so recorded objectives always reflect fully
+    /// committed rounds.
+    fn run_ssp(&mut self, cfg: &RunConfig, staleness: u64) -> RunResult {
+        let wall = Stopwatch::start();
+        let n = self.pool.n_workers();
+        let mut recorder = Recorder::new(&cfg.label);
+        let mut stats = SspStats::new();
+        let mut vv = VersionVector::new(n);
+        let mut last_obj = self.evaluate();
+        recorder.record_with(
+            0,
+            self.clock.seconds(),
+            wall.secs(),
+            last_obj,
+            vec![("staleness".into(), 0.0), ("wait_saved_secs".into(), 0.0)],
+        );
+        let mut oom = None;
+
+        let mut window: VecDeque<InFlight<A::Partial>> = VecDeque::new();
+        let mut clk = SspClockState {
+            coord_now: self.clock.seconds(),
+            worker_free: vec![self.clock.seconds(); n],
+        };
+
+        let mut rounds_run = 0;
+        'rounds: for r in 0..cfg.max_rounds {
+            while window.len() > staleness as usize {
+                self.ssp_collect_oldest(
+                    &mut window, &mut clk, &mut vv, &mut stats, staleness,
+                );
+            }
+            let (pending, schedule_secs) = self.dispatch_round(r);
+            clk.coord_now += schedule_secs;
+            window.push_back(InFlight {
+                round: r,
+                dispatched_at: clk.coord_now,
+                version_at_dispatch: vv.committed(),
+                pending,
+            });
+            rounds_run = r + 1;
+
+            if (r + 1) % cfg.eval_every == 0 || r + 1 == cfg.max_rounds {
+                // drain the pipeline so the evaluation sees committed state
+                while !window.is_empty() {
+                    self.ssp_collect_oldest(
+                        &mut window, &mut clk, &mut vv, &mut stats, staleness,
+                    );
+                }
+                let obj = self.evaluate();
+                recorder.record_with(
+                    r + 1,
+                    self.clock.seconds(),
+                    wall.secs(),
+                    obj,
+                    vec![
+                        ("staleness".into(), stats.mean_staleness()),
+                        ("wait_saved_secs".into(), stats.wait_saved_secs),
+                    ],
+                );
+                if let Err(e) = self.memory_census() {
+                    oom = Some(e);
+                    break 'rounds;
+                }
+                if let Some(tol) = cfg.rel_tol {
+                    let denom = last_obj.abs().max(1e-12);
+                    if ((last_obj - obj).abs() / denom) < tol {
+                        last_obj = obj;
+                        break 'rounds;
+                    }
+                }
+                last_obj = obj;
+            }
+        }
+        // drain anything left in flight (early break paths)
+        while !window.is_empty() {
+            self.ssp_collect_oldest(
+                &mut window, &mut clk, &mut vv, &mut stats, staleness,
+            );
+        }
+
+        RunResult {
+            rounds_run,
+            virtual_secs: self.clock.seconds(),
+            wall_secs: wall.secs(),
+            final_objective: last_obj,
+            max_model_bytes_per_machine: self.memory.max_per_machine(),
+            total_network_bytes: self.network.total_bytes(),
+            recorder,
+            oom,
+            ssp: Some(stats),
+        }
+    }
+
+    /// Collect the oldest in-flight round: verify the staleness bound,
+    /// pull+commit, resolve virtual time against the per-worker
+    /// availability model, and record the barrier wait the pipeline hid.
+    fn ssp_collect_oldest(
+        &mut self,
+        window: &mut VecDeque<InFlight<A::Partial>>,
+        clk: &mut SspClockState,
+        vv: &mut VersionVector,
+        stats: &mut SspStats,
+        staleness: u64,
+    ) {
+        let inflight = window.pop_front().expect("window not empty");
+        // record what this round's pushes actually saw: the oldest
+        // in-flight round ran with the commits visible at its dispatch
+        // (FIFO mailboxes applied exactly those syncs first)
+        for p in 0..clk.worker_free.len() {
+            vv.apply(p, inflight.version_at_dispatch);
+        }
+        // bounded-staleness invariant: every commit these pushes missed
+        // fits inside the window
+        let observed = vv.max_staleness();
+        if let Err(e) = vv.check_bound(staleness) {
+            panic!(
+                "SSP invariant violated collecting round {}: {e}",
+                inflight.round
+            );
+        }
+        let (compute_secs, committed, pull_secs) =
+            self.collect_round(inflight.round, inflight.pending);
+        if committed {
+            vv.commit();
+        }
+        // resolve virtual time: a worker started this round as soon as
+        // both it and the dispatch were ready
+        let mut finish_max = 0.0f64;
+        let mut compute_max = 0.0f64;
+        for (p, &secs) in compute_secs.iter().enumerate() {
+            let start = clk.worker_free[p].max(inflight.dispatched_at);
+            let finish = start + secs;
+            clk.worker_free[p] = finish;
+            finish_max = finish_max.max(finish);
+            compute_max = compute_max.max(secs);
+        }
+        let comm = self.network.round_time_and_reset();
+        let before = clk.coord_now;
+        clk.coord_now = clk.coord_now.max(finish_max + comm) + pull_secs;
+        // what a BSP barrier would have added on top of the pipeline
+        let bsp_increment = compute_max + comm + pull_secs;
+        stats.record(observed, bsp_increment - (clk.coord_now - before));
+        self.clock.advance_round_to(clk.coord_now);
     }
 }
 
@@ -407,5 +687,149 @@ mod tests {
         let mut e = Engine::new(app, vec![5.0, 5.0], &cfg);
         let res = e.run(&cfg);
         assert!(res.rounds_run <= 2, "stopped at {}", res.rounds_run);
+    }
+
+    #[test]
+    fn ssp_mode_runs_and_respects_staleness_bound() {
+        let app = Consensus { n_workers: 4, committed: 0.0 };
+        let cfg = RunConfig {
+            max_rounds: 12,
+            eval_every: 4,
+            network: NetworkConfig::gbps1(),
+            mode: ExecutionMode::Ssp { staleness: 2 },
+            label: "ssp-consensus".into(),
+            ..Default::default()
+        };
+        let mut e = Engine::new(app, vec![1.0, 2.0, 3.0, 6.0], &cfg);
+        let res = e.run(&cfg);
+        assert_eq!(res.rounds_run, 12);
+        let stats = res.ssp.expect("SSP run must report stats");
+        assert_eq!(stats.rounds(), 12);
+        assert!(
+            stats.max_staleness() <= 2,
+            "observed staleness {} > bound",
+            stats.max_staleness()
+        );
+        // consensus still reached: sum preserved, all equal to the mean
+        assert_eq!(res.final_objective, 12.0);
+        assert!(res.virtual_secs > 0.0);
+    }
+
+    #[test]
+    fn ssp_staleness_zero_matches_bsp_objective_sequence() {
+        let run = |mode: ExecutionMode| {
+            let app = Consensus { n_workers: 3, committed: 0.0 };
+            let cfg = RunConfig {
+                max_rounds: 6,
+                eval_every: 1,
+                mode,
+                label: "mode-diff".into(),
+                ..Default::default()
+            };
+            let mut e = Engine::new(app, vec![0.0, 3.0, 9.0], &cfg);
+            let res = e.run(&cfg);
+            res.recorder
+                .points()
+                .iter()
+                .map(|p| p.objective)
+                .collect::<Vec<_>>()
+        };
+        let bsp = run(ExecutionMode::Bsp);
+        let ssp0 = run(ExecutionMode::Ssp { staleness: 0 });
+        assert_eq!(bsp, ssp0, "staleness 0 must reproduce BSP objectives");
+    }
+
+    /// Consensus with a compute-heavy push so measured per-worker seconds
+    /// dominate timing noise (the straggler multipliers then produce a
+    /// stable skew for the pipeline tests).
+    struct BusyConsensus {
+        n_workers: usize,
+    }
+
+    impl StradsApp for BusyConsensus {
+        type Task = u64;
+        type Partial = f64;
+        type SyncMsg = f64;
+        type WorkerState = f64;
+
+        fn schedule(&mut self, round: u64) -> Vec<u64> {
+            vec![round; self.n_workers]
+        }
+
+        fn push(ws: &mut f64, _task: u64) -> f64 {
+            // ~hundreds of microseconds of real arithmetic
+            let mut acc = *ws;
+            for i in 1..40_000u64 {
+                acc += 1.0 / (i as f64 + acc.abs());
+            }
+            std::hint::black_box(acc);
+            *ws
+        }
+
+        fn pull(&mut self, _round: u64, partials: Vec<f64>) -> Option<f64> {
+            Some(partials.iter().sum::<f64>() / partials.len() as f64)
+        }
+
+        fn sync(ws: &mut f64, msg: &f64) {
+            *ws = *msg;
+        }
+
+        fn eval(ws: &mut f64) -> f64 {
+            *ws
+        }
+
+        fn objective_from(&self, shard_sum: f64) -> f64 {
+            shard_sum
+        }
+
+        fn task_bytes(_: &u64) -> usize {
+            8
+        }
+        fn partial_bytes(_: &f64) -> usize {
+            8
+        }
+        fn sync_bytes(_: &f64) -> usize {
+            8
+        }
+        fn model_bytes(_: &f64) -> u64 {
+            8
+        }
+    }
+
+    #[test]
+    fn ssp_hides_a_rotating_straggler() {
+        // under a rotating 50x straggler, BSP pays the slow worker's time
+        // every round while an SSP window of 2 lets the fast workers run
+        // ahead — virtual time to the same round count must shrink.
+        let run = |mode: ExecutionMode| {
+            let cfg = RunConfig {
+                max_rounds: 24,
+                eval_every: 24,
+                mode,
+                straggler: crate::cluster::StragglerModel::Rotating {
+                    factor: 50.0,
+                },
+                label: "straggler".into(),
+                ..Default::default()
+            };
+            let mut e = Engine::new(
+                BusyConsensus { n_workers: 4 },
+                vec![1.0, 2.0, 3.0, 6.0],
+                &cfg,
+            );
+            e.run(&cfg)
+        };
+        let bsp_res = run(ExecutionMode::Bsp);
+        let ssp_res = run(ExecutionMode::Ssp { staleness: 2 });
+
+        assert!(
+            ssp_res.virtual_secs < bsp_res.virtual_secs,
+            "SSP {} should undercut BSP {} with a rotating straggler",
+            ssp_res.virtual_secs,
+            bsp_res.virtual_secs
+        );
+        let stats = ssp_res.ssp.unwrap();
+        assert!(stats.wait_saved_secs > 0.0);
+        assert!(stats.max_staleness() <= 2);
     }
 }

@@ -1,7 +1,10 @@
 //! The STRADS round engine: executes user-defined **schedule**, **push**,
-//! **pull** primitives in order, with automatic BSP **sync** (paper §2,
-//! Fig 1), over the simulated cluster.
+//! **pull** primitives in order, with automatic **sync** (paper §2,
+//! Fig 1), over the simulated cluster.  Sync is strict BSP by default;
+//! [`ExecutionMode::Ssp`] pipelines rounds under bounded staleness.
 
 pub mod engine;
 
-pub use engine::{Engine as StradsEngine, RunConfig, RunResult, StradsApp};
+pub use engine::{
+    Engine as StradsEngine, ExecutionMode, RunConfig, RunResult, StradsApp,
+};

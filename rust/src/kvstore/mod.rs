@@ -9,10 +9,12 @@
 //!   slice per round, enforced at runtime).
 //! * [`VersionedParams`] — a BSP-versioned dense parameter block (Lasso's
 //!   beta, MF's H): `commit` bumps the version, `snapshot` hands out the
-//!   committed value.  Staleness tracking supports the SSP extension.
+//!   committed value.  Its [`VersionVector`] companion tracks every
+//!   worker's applied version and enforces the bounded-staleness invariant
+//!   of the SSP execution mode (see `coordinator::ExecutionMode`).
 
 pub mod slices;
 pub mod versioned;
 
 pub use slices::{SliceLease, SliceStore};
-pub use versioned::VersionedParams;
+pub use versioned::{VersionVector, VersionedParams};

@@ -1,9 +1,12 @@
-//! BSP-versioned parameter block.
+//! BSP/SSP-versioned parameter block.
 //!
 //! The coordinator commits pull results here; workers are brought up to
 //! date by sync broadcasts.  Versions let us implement BSP strictly (the
-//! default, as in the paper) and support the SSP extension: a reader
-//! declares its version and the store reports the staleness gap.
+//! default, as in the paper) and the SSP execution mode: a reader declares
+//! its version and the store reports the staleness gap, while
+//! [`VersionVector`] tracks every worker's applied version and *enforces*
+//! the bounded-staleness invariant — no worker ever reads a snapshot older
+//! than `committed_version - staleness`.
 
 /// A dense parameter vector with a monotone version counter.
 #[derive(Debug, Clone)]
@@ -49,6 +52,97 @@ impl<T: Clone> VersionedParams<T> {
     pub fn staleness(&self, reader_version: u64) -> u64 {
         self.version.saturating_sub(reader_version)
     }
+
+    /// Pair this block with a per-worker [`VersionVector`] (SSP mode).
+    pub fn version_vector(&self, n_workers: usize) -> VersionVector {
+        let mut vv = VersionVector::new(n_workers);
+        vv.committed = self.version;
+        vv.applied = vec![self.version; n_workers];
+        vv
+    }
+}
+
+/// Per-worker applied-version accounting for the SSP execution mode.
+///
+/// The coordinator bumps `committed` at every pull commit; a worker's
+/// entry records the newest version its in-flight reads are known to
+/// have seen (the engine advances it when collecting a round, to that
+/// round's dispatch-time version — FIFO mailboxes guarantee the worker
+/// had applied exactly those syncs first).  [`VersionVector::check_bound`]
+/// is the bounded-staleness invariant from the SSP literature (Ho et al.,
+/// Xing et al. 2016): every read sees all commits up to `committed - s`.
+#[derive(Debug, Clone)]
+pub struct VersionVector {
+    committed: u64,
+    applied: Vec<u64>,
+}
+
+impl VersionVector {
+    pub fn new(n_workers: usize) -> Self {
+        VersionVector { committed: 0, applied: vec![0; n_workers] }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.applied.len()
+    }
+
+    /// Record a coordinator-side commit; returns the new committed version.
+    pub fn commit(&mut self) -> u64 {
+        self.committed += 1;
+        self.committed
+    }
+
+    pub fn committed(&self) -> u64 {
+        self.committed
+    }
+
+    /// Record that `worker` has applied the sync for `version`.  Versions
+    /// apply in FIFO order, so this only ever moves forward.
+    pub fn apply(&mut self, worker: usize, version: u64) {
+        debug_assert!(version <= self.committed, "applying unseen version");
+        if version > self.applied[worker] {
+            self.applied[worker] = version;
+        }
+    }
+
+    pub fn applied(&self, worker: usize) -> u64 {
+        self.applied[worker]
+    }
+
+    /// Current staleness of one worker's view.
+    pub fn staleness(&self, worker: usize) -> u64 {
+        self.committed - self.applied[worker]
+    }
+
+    /// Worst staleness across the cluster.
+    pub fn max_staleness(&self) -> u64 {
+        self.applied
+            .iter()
+            .map(|&a| self.committed - a)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Oldest applied version across workers.
+    pub fn min_applied(&self) -> u64 {
+        self.applied.iter().copied().min().unwrap_or(self.committed)
+    }
+
+    /// Enforce the bounded-staleness invariant: every worker's applied
+    /// version must be within `bound` of the committed version.
+    pub fn check_bound(&self, bound: u64) -> Result<(), String> {
+        for (p, &a) in self.applied.iter().enumerate() {
+            let gap = self.committed - a;
+            if gap > bound {
+                return Err(format!(
+                    "worker {p} is {gap} versions stale (bound {bound}, \
+                     committed {}, applied {a})",
+                    self.committed
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -89,5 +183,44 @@ mod tests {
         assert_eq!(p.staleness(4), 0);
         assert_eq!(p.staleness(1), 3);
         assert_eq!(p.staleness(9), 0); // future reader clamps to 0
+    }
+
+    #[test]
+    fn version_vector_tracks_per_worker_staleness() {
+        let mut vv = VersionVector::new(3);
+        assert_eq!(vv.max_staleness(), 0);
+        vv.commit();
+        vv.commit();
+        assert_eq!(vv.committed(), 2);
+        vv.apply(0, 2);
+        vv.apply(1, 1);
+        assert_eq!(vv.staleness(0), 0);
+        assert_eq!(vv.staleness(1), 1);
+        assert_eq!(vv.staleness(2), 2);
+        assert_eq!(vv.max_staleness(), 2);
+        assert_eq!(vv.min_applied(), 0);
+        assert!(vv.check_bound(2).is_ok());
+        assert!(vv.check_bound(1).is_err());
+    }
+
+    #[test]
+    fn version_vector_apply_is_monotone() {
+        let mut vv = VersionVector::new(1);
+        vv.commit();
+        vv.commit();
+        vv.apply(0, 2);
+        vv.apply(0, 1); // stale re-apply must not move the vector back
+        assert_eq!(vv.applied(0), 2);
+    }
+
+    #[test]
+    fn version_vector_from_params_starts_fresh() {
+        let mut p = VersionedParams::new(0u8);
+        p.commit(1);
+        p.commit(2);
+        let vv = p.version_vector(4);
+        assert_eq!(vv.committed(), 2);
+        assert_eq!(vv.max_staleness(), 0);
+        assert!(vv.check_bound(0).is_ok());
     }
 }

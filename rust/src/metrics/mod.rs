@@ -1,7 +1,10 @@
-//! Convergence metrics, the paper's s-error (eq. 1), and run recorders.
+//! Convergence metrics, the paper's s-error (eq. 1), SSP staleness
+//! accounting, and run recorders.
 
 pub mod recorder;
 pub mod serror;
+pub mod ssp;
 
 pub use recorder::{Recorder, TrajectoryPoint};
 pub use serror::s_error;
+pub use ssp::SspStats;

@@ -1,0 +1,67 @@
+//! SSP execution-mode metrics: per-round observed staleness and the
+//! straggler wait time the pipeline hid relative to a BSP barrier.
+
+/// Accumulated over one SSP run by the coordinator's collect half.
+#[derive(Debug, Clone, Default)]
+pub struct SspStats {
+    /// Staleness observed at each collected round: committed version at
+    /// collect time minus the version the round's workers had applied at
+    /// dispatch time.  Bounded by the configured staleness.
+    pub per_round_staleness: Vec<u64>,
+    /// Virtual seconds a strict BSP barrier would have added on top of the
+    /// pipeline's actual critical path (straggler wait hidden by SSP).
+    pub wait_saved_secs: f64,
+}
+
+impl SspStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one collected round.
+    pub fn record(&mut self, staleness: u64, wait_saved_secs: f64) {
+        self.per_round_staleness.push(staleness);
+        self.wait_saved_secs += wait_saved_secs.max(0.0);
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.per_round_staleness.len()
+    }
+
+    pub fn max_staleness(&self) -> u64 {
+        self.per_round_staleness.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean_staleness(&self) -> f64 {
+        if self.per_round_staleness.is_empty() {
+            return 0.0;
+        }
+        self.per_round_staleness.iter().sum::<u64>() as f64
+            / self.per_round_staleness.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut s = SspStats::new();
+        s.record(0, 0.5);
+        s.record(2, 1.5);
+        s.record(1, -0.1); // negative savings clamp to zero
+        assert_eq!(s.rounds(), 3);
+        assert_eq!(s.max_staleness(), 2);
+        assert!((s.mean_staleness() - 1.0).abs() < 1e-12);
+        assert!((s.wait_saved_secs - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = SspStats::new();
+        assert_eq!(s.max_staleness(), 0);
+        assert_eq!(s.mean_staleness(), 0.0);
+        assert_eq!(s.rounds(), 0);
+    }
+}

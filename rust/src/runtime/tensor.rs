@@ -2,7 +2,10 @@
 //! literals.  Only f32/i32 appear in the artifact set.
 
 use super::manifest::{Dtype, TensorSpec};
-use anyhow::{bail, Context};
+use anyhow::bail;
+#[cfg(feature = "xla")]
+use anyhow::Context;
+#[cfg(feature = "xla")]
 use xla::Literal;
 
 /// A host-side dense tensor (row-major).
@@ -106,6 +109,7 @@ impl Tensor {
     }
 
     /// Stage into an XLA literal.
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> anyhow::Result<Literal> {
         let dims_i64: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -129,6 +133,7 @@ impl Tensor {
 
     /// Read back from an XLA literal using the manifest output spec for
     /// shape/dtype (literals do not carry our dim convention for scalars).
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &Literal, spec: &TensorSpec) -> anyhow::Result<Self> {
         match spec.dtype {
             Dtype::F32 => {

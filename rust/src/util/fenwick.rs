@@ -80,6 +80,13 @@ impl FenwickTree {
     /// Find the smallest index i with prefix_sum(i+1) > target — i.e. draw
     /// from the categorical distribution when `target ∈ [0, total)`.
     /// O(log n) descend.
+    ///
+    /// A `target >= total` (possible upstream via f64 rounding in
+    /// `rng.next_f64() * total`, especially after a without-replacement
+    /// draw has zeroed weights) lands past the end; instead of blindly
+    /// clamping to `len()-1` — which may be a zero-weight bucket and, in
+    /// the scheduler, an already-drawn candidate — we walk back to the
+    /// nearest positive-weight index.  With all weights zero, returns 0.
     pub fn sample(&self, target: f64) -> usize {
         let mut idx = 0usize; // 1-based cursor into tree
         let mut remaining = target;
@@ -92,7 +99,11 @@ impl FenwickTree {
             }
             mask >>= 1;
         }
-        idx.min(self.len() - 1) // idx is 0-based result
+        let mut i = idx.min(self.len() - 1); // idx is 0-based result
+        while i > 0 && self.values[i] <= 0.0 {
+            i -= 1;
+        }
+        i
     }
 }
 
@@ -143,6 +154,26 @@ mod tests {
         for target in [0.0, 0.5, 0.999] {
             assert_eq!(t.sample(target), 2);
         }
+    }
+
+    #[test]
+    fn sample_overshoot_lands_on_positive_weight() {
+        // regression: after without-replacement draws zero some weights,
+        // target == total (f64 rounding upper edge) used to clamp to the
+        // last index even when that bucket had zero weight — returning an
+        // already-drawn candidate.
+        let mut t = FenwickTree::new(&[2.0, 3.0, 4.0, 1.0]);
+        t.set(3, 0.0); // "drawn" candidate
+        let total = t.total();
+        assert_eq!(t.sample(total), 2, "must walk back past the zero bucket");
+        assert_eq!(t.sample(total + 1.0), 2);
+        // trailing run of zeros
+        let t = FenwickTree::new(&[0.0, 5.0, 0.0, 0.0]);
+        assert_eq!(t.sample(t.total()), 1);
+        // all-zero tree: degenerate draw pins to 0 instead of len-1
+        let t = FenwickTree::new(&[0.0; 4]);
+        assert_eq!(t.sample(0.0), 0);
+        assert_eq!(t.sample(1.0), 0);
     }
 
     #[test]

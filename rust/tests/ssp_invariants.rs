@@ -1,0 +1,149 @@
+//! Execution-mode invariants: BSP determinism and the SSP
+//! bounded-staleness guarantee under randomized straggler skews.
+
+use strads::cluster::StragglerModel;
+use strads::coordinator::{ExecutionMode, RunConfig};
+use strads::figures::common::{figure_corpus, lasso_engine, lda_engine, mf_engine};
+use strads::testing::{ensure, prop_check, Prop};
+
+/// Same seed ⇒ identical BSP objective trajectory (bit-exact: the engine
+/// introduces no hidden nondeterminism on top of the seeded app RNGs).
+#[test]
+fn bsp_trajectory_is_deterministic_given_seed() {
+    let run = || {
+        let cfg = RunConfig {
+            max_rounds: 60,
+            eval_every: 10,
+            label: "det-bsp".into(),
+            ..Default::default()
+        };
+        let (mut e, _) = lasso_engine(128, 768, 3, 8, true, 0.05, 11, &cfg);
+        let res = e.run(&cfg);
+        res.recorder
+            .points()
+            .iter()
+            .map(|p| p.objective)
+            .collect::<Vec<f64>>()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a, b, "BSP objective trajectories must be bit-identical");
+}
+
+/// SSP with the same seed is deterministic too (the pipeline's op order is
+/// fixed; only virtual timestamps depend on measured compute).
+#[test]
+fn ssp_trajectory_is_deterministic_given_seed() {
+    let run = || {
+        let cfg = RunConfig {
+            max_rounds: 60,
+            eval_every: 10,
+            mode: ExecutionMode::Ssp { staleness: 2 },
+            label: "det-ssp".into(),
+            ..Default::default()
+        };
+        let (mut e, _) = lasso_engine(128, 768, 3, 8, true, 0.05, 11, &cfg);
+        let res = e.run(&cfg);
+        res.recorder
+            .points()
+            .iter()
+            .map(|p| p.objective)
+            .collect::<Vec<f64>>()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a, b, "SSP objective trajectories must be bit-identical");
+}
+
+/// The bounded-staleness invariant, property-tested over random staleness
+/// bounds and random straggler skews: no worker ever applies a snapshot
+/// more than `s` versions stale (the engine asserts per collect; the run
+/// reports the observed maximum).
+#[test]
+fn prop_ssp_staleness_never_exceeds_bound() {
+    prop_check("ssp bounded staleness", 8, |g| {
+        let s = g.usize_in(0, 4) as u64;
+        let workers = 2 + g.usize_in(0, 2);
+        let skew: Vec<f64> =
+            (0..workers).map(|_| 1.0 + g.f64_in(0.0, 8.0)).collect();
+        let cfg = RunConfig {
+            max_rounds: 30,
+            eval_every: 10,
+            mode: ExecutionMode::Ssp { staleness: s },
+            straggler: StragglerModel::Fixed(skew),
+            label: "prop-ssp".into(),
+            ..Default::default()
+        };
+        let (mut e, _) =
+            lasso_engine(96, 384, workers, 4, true, 0.05, g.seed(), &cfg);
+        let res = e.run(&cfg);
+        let stats = match res.ssp {
+            Some(st) => st,
+            None => return Prop::Fail("SSP run reported no stats".into()),
+        };
+        if stats.rounds() != 30 {
+            return Prop::Fail(format!("collected {} of 30", stats.rounds()));
+        }
+        ensure(
+            stats.max_staleness() <= s,
+            format!("observed {} > bound {s}", stats.max_staleness()),
+        )
+    });
+}
+
+/// SSP still optimizes: bounded staleness may slow per-round progress but
+/// must not break convergence.
+#[test]
+fn ssp_lasso_and_mf_still_converge() {
+    let cfg = RunConfig {
+        max_rounds: 200,
+        eval_every: 50,
+        mode: ExecutionMode::Ssp { staleness: 2 },
+        label: "ssp-lasso".into(),
+        ..Default::default()
+    };
+    let (mut e, _) = lasso_engine(192, 1_024, 4, 8, true, 0.05, 17, &cfg);
+    let res = e.run(&cfg);
+    let first = res.recorder.points()[0].objective;
+    assert!(
+        res.final_objective.is_finite() && res.final_objective < 0.7 * first,
+        "SSP lasso objective {first} -> {}",
+        res.final_objective
+    );
+
+    let rank = 4u64;
+    let cfg = RunConfig {
+        max_rounds: 8 * 2 * rank,
+        eval_every: 2 * rank,
+        mode: ExecutionMode::Ssp { staleness: 2 },
+        label: "ssp-mf".into(),
+        ..Default::default()
+    };
+    let mut e = mf_engine(120, 80, rank as usize, 3, 0.05, 5, &cfg);
+    let res = e.run(&cfg);
+    let first = res.recorder.points()[0].objective;
+    assert!(
+        res.final_objective.is_finite() && res.final_objective < first,
+        "SSP MF objective {first} -> {}",
+        res.final_objective
+    );
+    let stats = res.ssp.expect("ssp stats");
+    assert!(stats.max_staleness() <= 2);
+}
+
+/// LDA's rotation schedule leases slices exclusively: requesting SSP must
+/// fall back to BSP (no double-lease panic, no stats).
+#[test]
+fn lda_requesting_ssp_falls_back_to_bsp() {
+    let corpus = figure_corpus(600, 80, 9);
+    let cfg = RunConfig {
+        max_rounds: 8,
+        eval_every: 4,
+        mode: ExecutionMode::Ssp { staleness: 3 },
+        label: "lda-ssp-fallback".into(),
+        ..Default::default()
+    };
+    let mut e = lda_engine(&corpus, 6, 4, 9, &cfg);
+    let res = e.run(&cfg);
+    assert!(res.ssp.is_none(), "LDA must run BSP");
+    assert_eq!(res.rounds_run, 8);
+    assert!(res.final_objective.is_finite());
+}

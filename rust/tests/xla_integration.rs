@@ -4,6 +4,9 @@
 //!
 //! These tests require `make artifacts`; they are skipped (not failed)
 //! when artifacts/ is absent so `cargo test` works on a fresh checkout.
+//! The whole suite additionally needs the `xla` cargo feature (the PJRT
+//! bindings are not vendorable in the offline build).
+#![cfg(feature = "xla")]
 
 use std::sync::Arc;
 use strads::backend::native::{NativeLassoShard, NativeMfShard, Token};

@@ -1,0 +1,228 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so the real `anyhow` is
+//! replaced by this shim covering exactly the surface the workspace uses:
+//!
+//! * [`Error`] / [`Result`] — a flattened string error (the chain is
+//!   rendered eagerly; `{}` and `{:#}` both print the full chain),
+//! * `?` conversions from any `std::error::Error` type,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` (both
+//!   std errors and `anyhow::Error`) and on `Option`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Mirrors upstream's coherence trick: `Error` intentionally does **not**
+//! implement `std::error::Error`, which is what lets the blanket
+//! `From<E: std::error::Error>` impl coexist with `From<Error> for Error`.
+
+use std::fmt;
+
+/// A flattened error: the full context/source chain rendered into one
+/// string, outermost context first.
+pub struct Error {
+    msg: String,
+}
+
+/// `Result<T, anyhow::Error>` with an overridable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context layer (outermost first, as upstream renders it).
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        // render the source chain eagerly: "outer: cause: root"
+        let mut msg = err.to_string();
+        let mut source = err.source();
+        while let Some(cause) = source {
+            msg.push_str(": ");
+            msg.push_str(&cause.to_string());
+            source = cause.source();
+        }
+        Error { msg }
+    }
+}
+
+mod ext {
+    /// Sealed conversion used by [`super::Context`]: both std errors and
+    /// `anyhow::Error` itself flatten into `Error`.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            self.into()
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (or to `None`).
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::Error::msg(
+                ::std::concat!("condition failed: `", ::std::stringify!($cond), "`"),
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse().context("not a number")?;
+        ensure!(n < 100, "{n} too large");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not a number"), "{e}");
+    }
+
+    #[test]
+    fn ensure_formats_message() {
+        let e = parse("500").unwrap_err();
+        assert_eq!(e.to_string(), "500 too large");
+    }
+
+    #[test]
+    fn ensure_without_message_stringifies_condition() {
+        fn check(x: i32) -> Result<()> {
+            ensure!(x > 0);
+            Ok(())
+        }
+        let e = check(-1).unwrap_err();
+        assert!(e.to_string().contains("x > 0"), "{e}");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn bail_and_expr_form() {
+        fn f(flag: bool) -> Result<i32> {
+            if flag {
+                bail!("flagged {}", 1);
+            }
+            Err(anyhow!(String::from("owned message")))
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 1");
+        assert_eq!(f(false).unwrap_err().to_string(), "owned message");
+    }
+}
