@@ -56,7 +56,7 @@ fn main() {
     for a in 0..workers {
         if let Some(slice) = app_slice(app, a) {
             for w_local in 0..slice.n_words {
-                let global_word = w_local * workers + a;
+                let global_word = app.global_word(a, w_local);
                 for (kk, topic_list) in per_topic.iter_mut().enumerate() {
                     let c = slice.counts[w_local * k + kk];
                     if c > 0.0 {

@@ -1,11 +1,61 @@
 //! Bench: regenerate paper Figure 9 (convergence trajectories, all three
-//! panels) at bench scale.  `cargo bench --bench fig9_trajectories`
+//! panels) at bench scale, plus the BSP-vs-SSP and rotation-pipelining
+//! arms.  `cargo bench --bench fig9_trajectories`
+//!
+//! Knobs (CI smoke uses these): `STRADS_BENCH_SCALE` (default 0.25),
+//! `STRADS_BENCH_WORKERS` (default 4), `STRADS_BENCH_DIR` (default
+//! `target/bench`) — the run writes `BENCH_fig9.json` there so the perf
+//! trajectory can be archived per-PR.
 
-use strads::figures::fig9;
+use strads::figures::fig9::{self, ModeComparison, Panel};
+use strads::metrics::Recorder;
+use strads::util::JsonValue;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn opt_num(x: Option<f64>) -> JsonValue {
+    x.map(JsonValue::Num).unwrap_or(JsonValue::Null)
+}
+
+fn recorder_json(rec: &Recorder) -> JsonValue {
+    rec.to_json()
+}
+
+fn panel_json(p: &Panel) -> JsonValue {
+    JsonValue::obj()
+        .field("title", p.title.as_str())
+        .field("strads", recorder_json(&p.strads))
+        .field("baseline", recorder_json(&p.baseline))
+        .build()
+}
+
+fn arm_json(c: &ModeComparison) -> JsonValue {
+    JsonValue::obj()
+        .field("app", c.app.as_str())
+        .field("target", c.target)
+        .field("bsp_secs_to_target", opt_num(c.bsp_secs_to_target))
+        .field("pipelined_secs_to_target", opt_num(c.ssp_secs_to_target))
+        .field("mean_staleness", c.mean_staleness)
+        .field("max_staleness", c.max_staleness)
+        .field("wait_saved_secs", c.wait_saved_secs)
+        .field("bsp", recorder_json(&c.bsp))
+        .field("pipelined", recorder_json(&c.ssp))
+        .build()
+}
 
 fn main() {
     let t = std::time::Instant::now();
-    let cfg = fig9::Fig9Config { scale: 0.25, n_workers: 4, seed: 42 };
+    let cfg = fig9::Fig9Config {
+        scale: env_f64("STRADS_BENCH_SCALE", 0.25),
+        n_workers: env_usize("STRADS_BENCH_WORKERS", 4),
+        seed: 42,
+    };
 
     let lda = fig9::run_lda(&cfg);
     fig9::print_panel(&lda);
@@ -35,8 +85,9 @@ fn main() {
     // Ssp { staleness: 2 } must beat BSP on virtual-time-to-objective for
     // both Lasso and MF: the pipeline overlaps the straggler's compute
     // that a BSP barrier would charge to every round.
-    for c in fig9::run_mode_comparison(&cfg, 2, 4.0) {
-        fig9::print_mode_comparison(&c);
+    let arms = fig9::run_mode_comparison(&cfg, 2, 4.0);
+    for c in &arms {
+        fig9::print_mode_comparison(c);
         assert!(c.max_staleness <= 2, "{}: staleness bound violated", c.app);
         let bsp = c.bsp_secs_to_target.expect("BSP reaches shared target");
         let ssp = c.ssp_secs_to_target.expect("SSP reaches shared target");
@@ -49,5 +100,52 @@ fn main() {
         );
     }
 
-    println!("\nfig9 bench completed in {:.2}s", t.elapsed().as_secs_f64());
+    // ---- pipelined rotation vs BSP rotation (LDA) ---------------------
+    // Rotation { depth: 3 } hands slices worker→worker through the router
+    // ring; under the same rotating 4x skew it must beat the per-round
+    // checkout/checkin barrier on virtual-time-to-objective.
+    let rot = fig9::run_rotation_comparison(&cfg, 3, 4.0);
+    fig9::print_mode_comparison(&rot);
+    assert!(
+        rot.max_staleness <= 2,
+        "rotation: depth-3 pipeline staleness bound violated"
+    );
+    let rot_bsp = rot
+        .bsp_secs_to_target
+        .expect("BSP rotation reaches shared target");
+    let rot_piped = rot
+        .ssp_secs_to_target
+        .expect("pipelined rotation reaches shared target");
+    assert!(
+        rot_piped < rot_bsp,
+        "pipelined rotation ({rot_piped:.4}s) must beat BSP rotation \
+         ({rot_bsp:.4}s) to LL {:.6} under a 4x rotating straggler",
+        rot.target
+    );
+
+    // ---- BENCH_fig9.json ---------------------------------------------
+    let json = JsonValue::obj()
+        .field("figure", "fig9")
+        .field("scale", cfg.scale)
+        .field("n_workers", cfg.n_workers)
+        .field(
+            "panels",
+            JsonValue::Arr(vec![
+                panel_json(&lda),
+                panel_json(&mf),
+                panel_json(&lasso),
+            ]),
+        )
+        .field("ssp_arms", JsonValue::Arr(arms.iter().map(arm_json).collect()))
+        .field("rotation_arm", arm_json(&rot))
+        .field("wall_secs", t.elapsed().as_secs_f64())
+        .build();
+    let dir = std::env::var("STRADS_BENCH_DIR")
+        .unwrap_or_else(|_| "target/bench".to_string());
+    std::fs::create_dir_all(&dir).expect("create bench output dir");
+    let path = format!("{dir}/BENCH_fig9.json");
+    std::fs::write(&path, json.to_json()).expect("write bench json");
+    println!("\nwrote {path}");
+
+    println!("fig9 bench completed in {:.2}s", t.elapsed().as_secs_f64());
 }

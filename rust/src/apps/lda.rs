@@ -10,12 +10,21 @@
 //!           per-worker deltas; the s-error Δ (eq. 1) is measured here.
 //! sync:     the fresh s ships with the next round's tasks (the paper syncs
 //!           s at the end of every pull).
+//!
+//! Under `ExecutionMode::Rotation { depth }` the checkout/checkin cycle is
+//! replaced by the async p2p path: slices live in a shared
+//! [`SliceRouter`], each push takes its versioned lease from the ring
+//! predecessor and forwards the swept slice directly to the successor, and
+//! `pull` only settles lease tokens against a [`LeaseLedger`] — rotation
+//! pipelines like SSP while slice disjointness stays runtime-enforced.
 
 use crate::backend::LdaShard;
 use crate::coordinator::StradsApp;
-use crate::kvstore::SliceStore;
+use crate::kvstore::{LeaseLedger, LeaseToken, SliceRouter, SliceStore};
 use crate::metrics::s_error;
 use crate::scheduler::RotationScheduler;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Coordinator-side configuration.
 pub struct LdaConfig {
@@ -33,20 +42,38 @@ pub struct BSlice {
     pub n_words: usize,
 }
 
-/// Task for one worker: its slice assignment plus the slice data and the
-/// freshly synced topic sums.
+/// Task for one worker: its slice assignment plus the freshly synced topic
+/// sums, and the slice payload (BSP) or its routed lease (rotation).
 pub struct LdaTask {
     pub slice_id: usize,
-    pub b_slice: BSlice,
+    /// BSP path: the checked-out slice ships with the task.
+    pub b_slice: Option<BSlice>,
     pub s: Vec<f32>,
+    /// Rotation-pipelined path: take/forward the slice through the router
+    /// instead.
+    pub route: Option<LdaRoute>,
 }
 
-/// Worker partial: the mutated slice, the worker's local s̃ (for the
-/// s-error metric), the token count swept, and the number of distinct B
-/// rows touched (KV-store traffic accounting).
+/// Rotation leg of a task: where to receive the slice from the ring
+/// predecessor and the version this lease consumes (the worker forwards
+/// `version + 1` to the successor).
+pub struct LdaRoute {
+    pub router: Arc<SliceRouter<BSlice>>,
+    pub version: u64,
+}
+
+/// Worker partial: the worker's local s̃ (for the s-error metric), the
+/// token count swept, the number of distinct B rows touched (KV-store
+/// traffic accounting), and either the mutated slice (BSP) or the consumed
+/// lease token plus the p2p bytes forwarded (rotation).
 pub struct LdaPartial {
     pub slice_id: usize,
-    pub b_slice: BSlice,
+    /// BSP path: the mutated slice returns through the coordinator.
+    pub b_slice: Option<BSlice>,
+    /// Rotation path: the lease this sweep consumed (fork detection).
+    pub lease: Option<LeaseToken>,
+    /// Rotation path: slice bytes forwarded to the ring successor.
+    pub handoff_bytes: usize,
     pub s_local: Vec<f32>,
     pub n_sampled: usize,
     pub touched_words: usize,
@@ -56,6 +83,19 @@ pub struct LdaPartial {
 /// Coordinator state.
 pub struct LdaApp {
     slices: SliceStore<BSlice>,
+    /// Rotation-pipelined mode: the worker→worker handoff ring (None under
+    /// BSP, where slices move through `slices` instead).
+    router: Option<Arc<SliceRouter<BSlice>>>,
+    /// Per-slice lease version chains (grant at schedule, settle at pull;
+    /// panics on fork).
+    ledger: LeaseLedger,
+    /// s snapshots keyed by dispatch round: pipelined pulls must baseline
+    /// worker deltas against the snapshot that round actually shipped, not
+    /// the latest one.
+    inflight_s: HashMap<u64, Vec<f32>>,
+    /// Per-slice global word ids (slice-local row → corpus word id);
+    /// empty when the striped `w = local·U + a` layout is in use.
+    word_map: Vec<Vec<u32>>,
     /// True topic column sums s (K).
     pub s: Vec<f32>,
     sched: RotationScheduler,
@@ -77,9 +117,12 @@ pub struct LdaApp {
 }
 
 impl LdaApp {
-    /// `slices` are the initial word-topic blocks (one per worker; slice a
-    /// holds words w with w % U == a, local index w / U); `s` their column
-    /// sums; `n_tokens` the corpus token count (for Δ_t normalization).
+    /// `slices` are the initial word-topic blocks (one per worker; the
+    /// word→slice map is the builder's concern — [`setup::build`] uses the
+    /// frequency-aware split and installs it via
+    /// [`LdaApp::set_word_map`], the striped `w % U` layout needs none);
+    /// `s` their column sums; `n_tokens` the corpus token count (for Δ_t
+    /// normalization).
     pub fn new(
         cfg: LdaConfig,
         slices: Vec<BSlice>,
@@ -91,6 +134,10 @@ impl LdaApp {
         LdaApp {
             sched: RotationScheduler::new(cfg.n_workers),
             slices: SliceStore::new(slices),
+            router: None,
+            ledger: LeaseLedger::new(cfg.n_workers),
+            inflight_s: HashMap::new(),
+            word_map: Vec::new(),
             s_snapshot: s.clone(),
             s,
             n_topics: cfg.n_topics,
@@ -113,26 +160,41 @@ impl LdaApp {
         self.s_staleness = staleness;
     }
 
-    /// Word-topic log-likelihood term computed from the checked-in slices.
-    fn word_loglik(&self) -> f64 {
+    /// One slice's contribution to the word-topic log-likelihood.
+    fn slice_loglik(&self, slice: &BSlice) -> f64 {
         let k = self.n_topics;
         let vg = self.vocab as f64 * self.gamma as f64;
         let mut ll = 0.0f64;
-        for a in 0..self.slices.n_slices() {
-            let slice = self
-                .slices
-                .peek(a)
-                .expect("all slices checked in at eval time");
-            for w in 0..slice.n_words {
-                for kk in 0..k {
-                    let c = slice.counts[w * k + kk] as f64;
-                    if c > 0.0 {
-                        let phi = (c + self.gamma as f64)
-                            / (self.s[kk] as f64 + vg);
-                        ll += c * phi.ln();
-                    }
+        for w in 0..slice.n_words {
+            for kk in 0..k {
+                let c = slice.counts[w * k + kk] as f64;
+                if c > 0.0 {
+                    let phi =
+                        (c + self.gamma as f64) / (self.s[kk] as f64 + vg);
+                    ll += c * phi.ln();
                 }
             }
+        }
+        ll
+    }
+
+    /// Word-topic log-likelihood term computed from the parked slices
+    /// (checked in under BSP; drained into the router under rotation).
+    fn word_loglik(&self) -> f64 {
+        let mut ll = 0.0f64;
+        for a in 0..self.slices.n_slices() {
+            ll += match &self.router {
+                Some(router) => router.with_slice(a, |slice| {
+                    self.slice_loglik(
+                        slice.expect("slice parked in the router at eval time"),
+                    )
+                }),
+                None => self.slice_loglik(
+                    self.slices
+                        .peek(a)
+                        .expect("all slices checked in at eval time"),
+                ),
+            };
         }
         ll
     }
@@ -154,6 +216,24 @@ impl LdaApp {
     pub fn alpha(&self) -> f32 {
         self.alpha
     }
+
+    /// Install the slice-local→global word map produced by a non-striped
+    /// partitioner (see
+    /// [`crate::scheduler::RotationScheduler::partition_words_by_freq`]).
+    pub fn set_word_map(&mut self, map: Vec<Vec<u32>>) {
+        assert_eq!(map.len(), self.slices.n_slices());
+        self.word_map = map;
+    }
+
+    /// Corpus word id for a slice-local row.  Falls back to the striped
+    /// `w = local·U + a` layout when no explicit map was installed.
+    pub fn global_word(&self, slice_id: usize, local: usize) -> usize {
+        self.word_map
+            .get(slice_id)
+            .and_then(|m| m.get(local))
+            .map(|&w| w as usize)
+            .unwrap_or(local * self.n_workers + slice_id)
+    }
 }
 
 impl StradsApp for LdaApp {
@@ -162,56 +242,128 @@ impl StradsApp for LdaApp {
     type SyncMsg = Vec<f32>; // unused: s travels with tasks
     type WorkerState = Box<dyn LdaShard>;
 
-    fn schedule(&mut self, _round: u64) -> Vec<LdaTask> {
+    fn schedule(&mut self, round: u64) -> Vec<LdaTask> {
         let assignment = self.sched.next_round();
-        assignment
-            .into_iter()
-            .map(|slice_id| {
-                let lease = self.slices.checkout(slice_id);
-                LdaTask {
+        if let Some(router) = &self.router {
+            // pipelined rotation: grant versioned leases; the slices move
+            // worker→worker, only metadata + the synced s ship from here
+            let mut seen = vec![false; assignment.len()];
+            let mut tasks = Vec::with_capacity(assignment.len());
+            for slice_id in assignment {
+                assert!(
+                    !seen[slice_id],
+                    "slice {slice_id} assigned twice in one round"
+                );
+                seen[slice_id] = true;
+                let version = self.ledger.grant(slice_id);
+                tasks.push(LdaTask {
                     slice_id,
-                    b_slice: lease.data,
+                    b_slice: None,
                     s: self.s_snapshot.clone(),
-                }
-            })
-            .collect()
-    }
-
-    fn push(ws: &mut Self::WorkerState, mut task: LdaTask) -> LdaPartial {
-        let n_topics = task.s.len();
-        let (s_local, n_sampled, touched_words) = ws.gibbs_slice(
-            task.slice_id,
-            &mut task.b_slice.counts,
-            &task.s,
-        );
-        LdaPartial {
-            slice_id: task.slice_id,
-            b_slice: task.b_slice,
-            s_local,
-            n_sampled,
-            touched_words,
-            n_topics,
+                    route: Some(LdaRoute { router: Arc::clone(router), version }),
+                });
+            }
+            self.inflight_s.insert(round, self.s_snapshot.clone());
+            tasks
+        } else {
+            assignment
+                .into_iter()
+                .map(|slice_id| {
+                    let lease = self.slices.checkout(slice_id);
+                    LdaTask {
+                        slice_id,
+                        b_slice: Some(lease.data),
+                        s: self.s_snapshot.clone(),
+                        route: None,
+                    }
+                })
+                .collect()
         }
     }
 
-    fn pull(&mut self, _round: u64, partials: Vec<LdaPartial>) -> Option<Vec<f32>> {
+    fn push(ws: &mut Self::WorkerState, task: LdaTask) -> LdaPartial {
+        let LdaTask { slice_id, b_slice, s, route } = task;
+        let n_topics = s.len();
+        match route {
+            Some(LdaRoute { router, version }) => {
+                // receive the slice from the ring predecessor (blocks
+                // until exactly this version was forwarded), sweep, then
+                // hand it straight on to the successor.  The reported
+                // lease carries the version the *router* handed over, so
+                // the engine's collect-time cross-check against the
+                // granted token spans both layers.
+                let (mut data, consumed) = router.take(slice_id, version);
+                let (s_local, n_sampled, touched_words) =
+                    ws.gibbs_slice(slice_id, &mut data.counts, &s);
+                let handoff_bytes = data.counts.len() * 4;
+                router.forward(slice_id, data, consumed + 1);
+                LdaPartial {
+                    slice_id,
+                    b_slice: None,
+                    lease: Some(LeaseToken { slice_id, version: consumed }),
+                    handoff_bytes,
+                    s_local,
+                    n_sampled,
+                    touched_words,
+                    n_topics,
+                }
+            }
+            None => {
+                let mut data = b_slice.expect("BSP task carries its slice");
+                let (s_local, n_sampled, touched_words) =
+                    ws.gibbs_slice(slice_id, &mut data.counts, &s);
+                LdaPartial {
+                    slice_id,
+                    b_slice: Some(data),
+                    lease: None,
+                    handoff_bytes: 0,
+                    s_local,
+                    n_sampled,
+                    touched_words,
+                    n_topics,
+                }
+            }
+        }
+    }
+
+    fn pull(&mut self, round: u64, partials: Vec<LdaPartial>) -> Option<Vec<f32>> {
         // rebuild the true s from per-worker deltas (slices are disjoint,
         // so deltas add); collect the stale local copies for Δ_t.  Deltas
-        // are relative to the snapshot the workers were handed.
+        // are relative to the snapshot the workers were handed — under
+        // pipelined rotation that is the snapshot captured at *dispatch*,
+        // which later pulls may already have superseded.  A routed pull
+        // with no recorded snapshot is a protocol bug: baselining against
+        // a refreshed snapshot would silently drift token mass.
+        let baseline = match self.inflight_s.remove(&round) {
+            Some(snapshot) => snapshot,
+            None if self.router.is_some() => {
+                panic!("rotation pull for round {round} has no dispatch snapshot")
+            }
+            None => self.s_snapshot.clone(),
+        };
         let mut s_new = self.s.clone();
         let mut local_copies = Vec::with_capacity(partials.len());
         for part in partials {
+            let LdaPartial { slice_id, b_slice, lease, s_local, .. } = part;
             for k in 0..self.n_topics {
-                s_new[k] += part.s_local[k] - self.s_snapshot[k];
+                s_new[k] += s_local[k] - baseline[k];
             }
-            local_copies.push(part.s_local.clone());
-            // checkin: rebuild a lease-shaped return
-            let lease = crate::kvstore::SliceLease {
-                slice_id: part.slice_id,
-                data: part.b_slice,
-                version: self.slices.version(part.slice_id),
-            };
-            self.slices.checkin(lease);
+            match (b_slice, lease) {
+                (Some(data), _) => {
+                    // BSP checkin: rebuild a lease-shaped return
+                    let lease = crate::kvstore::SliceLease {
+                        slice_id,
+                        data,
+                        version: self.slices.version(slice_id),
+                    };
+                    self.slices.checkin(lease);
+                }
+                (None, Some(token)) => self.ledger.settle(&token),
+                (None, None) => {
+                    panic!("partial carries neither a slice nor a lease")
+                }
+            }
+            local_copies.push(s_local);
         }
         self.last_s_error = s_error(&local_copies, &s_new, self.n_tokens);
         self.s_error_history.push(self.last_s_error);
@@ -245,9 +397,16 @@ impl StradsApp for LdaApp {
     }
 
     fn partial_bytes(p: &LdaPartial) -> usize {
-        // KV-store traffic for the round: each distinct word row touched is
-        // fetched once and written back once (2×K×4 bytes), plus s̃.
-        p.touched_words * p.n_topics * 4 * 2 + p.s_local.len() * 4 + 16
+        if p.b_slice.is_some() {
+            // BSP KV-store traffic for the round: each distinct word row
+            // touched is fetched once and written back once (2×K×4
+            // bytes), plus s̃.
+            p.touched_words * p.n_topics * 4 * 2 + p.s_local.len() * 4 + 16
+        } else {
+            // rotation: only the doc stats + lease token ride the hub; the
+            // slice bytes are charged as the p2p handoff (handoff_bytes)
+            p.s_local.len() * 4 + 32
+        }
     }
 
     fn sync_bytes(m: &Vec<f32>) -> usize {
@@ -267,9 +426,49 @@ impl StradsApp for LdaApp {
 
     fn supports_ssp() -> bool {
         // rotation leases each word-topic slice to exactly one worker per
-        // round; pipelining round t+1 before round t checks its slices
-        // back in would double-lease.  The engine falls back to BSP.
+        // round: SSP's shared-state stale reads do not apply.  Pipelining
+        // happens through the rotation path below instead, so an SSP
+        // request degrades to pipelined rotation, not to a barrier.
         false
+    }
+
+    fn supports_rotation() -> bool {
+        true
+    }
+
+    fn begin_rotation(&mut self, _depth: u64) {
+        assert!(self.router.is_none(), "rotation mode already active");
+        let router = Arc::new(SliceRouter::new(self.slices.n_slices()));
+        for a in 0..self.slices.n_slices() {
+            let lease = self.slices.checkout(a);
+            self.ledger.seed(a, lease.version);
+            router.seed(a, lease.data, lease.version);
+        }
+        self.router = Some(router);
+    }
+
+    fn end_rotation(&mut self) {
+        if let Some(router) = self.router.take() {
+            for a in 0..router.n_slices() {
+                let (data, version) = router.reclaim(a);
+                self.slices.restore(a, data, version);
+            }
+        }
+        self.inflight_s.clear();
+    }
+
+    fn task_lease(t: &LdaTask) -> Option<LeaseToken> {
+        t.route
+            .as_ref()
+            .map(|r| LeaseToken { slice_id: t.slice_id, version: r.version })
+    }
+
+    fn partial_lease(p: &LdaPartial) -> Option<LeaseToken> {
+        p.lease
+    }
+
+    fn handoff_bytes(p: &LdaPartial) -> usize {
+        p.handoff_bytes
     }
 }
 
@@ -287,8 +486,11 @@ pub mod setup {
     }
 
     /// Build slices + worker shards from a corpus: documents are striped
-    /// over workers, words are partitioned into U rotation slices
-    /// (w % U), and initial topics are drawn uniformly.
+    /// over workers, words are partitioned into U rotation slices by the
+    /// frequency-weighted split
+    /// ([`crate::scheduler::RotationScheduler::partition_words_by_freq`]
+    /// — per-round compute tracks a slice's token mass, so the Zipf head
+    /// must spread across slices), and initial topics are drawn uniformly.
     pub fn build(
         corpus: &Corpus,
         k: usize,
@@ -299,14 +501,31 @@ pub mod setup {
     ) -> LdaSetup {
         let u = n_workers;
         let v = corpus.vocab;
-        let slice_words = |a: usize| (v + u - 1 - a) / u; // words w: w%u==a
+        assert!(v >= u, "vocab smaller than the slice count");
         let mut rng = Rng::new(seed);
 
+        // frequency-aware word→slice map, plus slice-local indices
+        let mut freqs = vec![0u64; v];
+        for doc in &corpus.docs {
+            for &w in doc {
+                freqs[w as usize] += 1;
+            }
+        }
+        let slice_of = RotationScheduler::partition_words_by_freq(&freqs, u);
+        let mut local_of = vec![0u32; v];
+        let mut word_map: Vec<Vec<u32>> = vec![Vec::new(); u];
+        for w in 0..v {
+            let a = slice_of[w];
+            local_of[w] = word_map[a].len() as u32;
+            word_map[a].push(w as u32);
+        }
+
         // word-topic slices
-        let mut slices: Vec<BSlice> = (0..u)
-            .map(|a| BSlice {
-                counts: vec![0.0; slice_words(a) * k],
-                n_words: slice_words(a),
+        let mut slices: Vec<BSlice> = word_map
+            .iter()
+            .map(|words| BSlice {
+                counts: vec![0.0; words.len() * k],
+                n_words: words.len(),
             })
             .collect();
         let mut s = vec![0.0f32; k];
@@ -321,21 +540,21 @@ pub mod setup {
             per_worker_docs[p] += 1;
             for &w in doc {
                 let w = w as usize;
-                let slice = w % u;
-                let word_local = w / u;
+                let slice = slice_of[w];
+                let word_local = local_of[w];
                 let z = rng.below(k) as u32;
-                slices[slice].counts[word_local * k + z as usize] += 1.0;
+                slices[slice].counts[word_local as usize * k + z as usize] += 1.0;
                 s[z as usize] += 1.0;
                 per_worker_tokens[p][slice].push(Token {
                     doc: local_doc as u32,
-                    word_local: word_local as u32,
+                    word_local,
                     z,
                 });
             }
         }
 
         let n_tokens = corpus.n_tokens();
-        let app = LdaApp::new(
+        let mut app = LdaApp::new(
             LdaConfig {
                 n_topics: k,
                 vocab: v,
@@ -347,6 +566,7 @@ pub mod setup {
             s,
             n_tokens,
         );
+        app.set_word_map(word_map);
         let shards: Vec<Box<dyn LdaShard>> = per_worker_tokens
             .into_iter()
             .enumerate()
@@ -453,6 +673,68 @@ mod tests {
         let total: f32 = ssp.app().s.iter().sum();
         let total_bsp: f32 = bsp.app().s.iter().sum();
         assert!((total - total_bsp).abs() < 1e-2);
+    }
+
+    #[test]
+    fn pipelined_rotation_runs_and_conserves_counts() {
+        let corpus = lda_corpus::generate(&CorpusConfig {
+            n_docs: 120,
+            vocab: 400,
+            doc_len_mean: 30,
+            n_topics: 5,
+            seed: 8,
+            ..Default::default()
+        });
+        let s = setup::build(&corpus, 8, 4, 0.1, 0.01, 8);
+        let cfg = RunConfig {
+            max_rounds: 16,
+            eval_every: 4,
+            mode: crate::coordinator::ExecutionMode::Rotation { depth: 3 },
+            label: "lda-rot".into(),
+            ..Default::default()
+        };
+        let mut e = StradsEngine::new(s.app, s.shards, &cfg);
+        let total0: f32 = e.app().s.iter().sum();
+        let res = e.run(&cfg);
+        assert_eq!(res.rounds_run, 16);
+        let stats = res.ssp.expect("rotation run reports pipeline stats");
+        assert!(stats.max_staleness() <= 2, "depth-3 bound");
+        assert!(res.total_p2p_bytes > 0, "handoffs must ride p2p links");
+        // slices are back in the store with advanced version chains
+        let app = e.app();
+        for a in 0..app.slices.n_slices() {
+            assert!(app.slices.peek(a).is_some());
+            assert_eq!(app.slices.version(a), 16);
+        }
+        let total1: f32 = app.s.iter().sum();
+        assert!((total0 - total1).abs() < 1e-2);
+        // the run must actually learn
+        let first = res.recorder.points()[0].objective;
+        assert!(res.final_objective > first);
+    }
+
+    #[test]
+    fn global_word_roundtrips_the_frequency_partition() {
+        let corpus = lda_corpus::generate(&CorpusConfig {
+            n_docs: 80,
+            vocab: 300,
+            doc_len_mean: 25,
+            n_topics: 4,
+            seed: 5,
+            ..Default::default()
+        });
+        let s = setup::build(&corpus, 4, 3, 0.1, 0.01, 5);
+        // every corpus word appears exactly once across the slice maps
+        let mut seen = vec![false; corpus.vocab];
+        for a in 0..s.app.n_workers() {
+            let n_words = s.app.peek_slice(a).unwrap().n_words;
+            for local in 0..n_words {
+                let w = s.app.global_word(a, local);
+                assert!(!seen[w], "word {w} mapped twice");
+                seen[w] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
     }
 
     #[test]

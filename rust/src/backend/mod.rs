@@ -3,9 +3,10 @@
 //!
 //! * [`native`] — sparse rust implementations (used for the model-size
 //!   sweeps where shapes vary over orders of magnitude).
-//! * [`xla`] — the AOT three-layer path: fixed-shape HLO artifacts
-//!   (JAX L2 + Pallas L1) executed via PJRT.  Used by the end-to-end
-//!   examples and cross-checked against `native` in integration tests.
+//! * `xla` (cargo feature `xla`) — the AOT three-layer path: fixed-shape
+//!   HLO artifacts (JAX L2 + Pallas L1) executed via PJRT.  Used by the
+//!   end-to-end examples and cross-checked against `native` in
+//!   integration tests.
 
 pub mod native;
 /// AOT PJRT path — requires the `xla` crate (cargo feature `xla`).

@@ -20,4 +20,4 @@ pub mod pool;
 pub use clock::{StragglerModel, VirtualClock};
 pub use memory::MemoryTracker;
 pub use network::{NetworkConfig, NetworkModel};
-pub use pool::{PendingRound, WorkerPool};
+pub use pool::{ForwardQueue, PendingRound, WorkerPool};

@@ -39,7 +39,11 @@ impl NetworkConfig {
 
     /// Zero-cost network (ablation: isolate compute scaling).
     pub fn ideal() -> Self {
-        NetworkConfig { latency_s: 0.0, bandwidth_bps: f64::INFINITY, hub_bandwidth_bps: f64::INFINITY }
+        NetworkConfig {
+            latency_s: 0.0,
+            bandwidth_bps: f64::INFINITY,
+            hub_bandwidth_bps: f64::INFINITY,
+        }
     }
 }
 
@@ -58,6 +62,10 @@ pub struct NetworkModel {
     /// Lifetime counters.
     total_bytes: u64,
     total_msgs: u64,
+    /// Lifetime bytes that moved worker↔worker (subset of `total_bytes`):
+    /// rotation slice handoffs and KV-shard serving, which never cross
+    /// the coordinator hub.
+    total_p2p_bytes: u64,
 }
 
 impl NetworkModel {
@@ -70,6 +78,7 @@ impl NetworkModel {
             p2p_bytes: vec![0; n_workers],
             total_bytes: 0,
             total_msgs: 0,
+            total_p2p_bytes: 0,
         }
     }
 
@@ -106,6 +115,7 @@ impl NetworkModel {
         self.p2p_bytes[from] += bytes as u64;
         self.p2p_bytes[to] += bytes as u64;
         self.total_bytes += bytes as u64; // one payload on the wire
+        self.total_p2p_bytes += bytes as u64;
         self.total_msgs += 1;
     }
 
@@ -141,6 +151,10 @@ impl NetworkModel {
     }
     pub fn total_msgs(&self) -> u64 {
         self.total_msgs
+    }
+    /// Lifetime worker↔worker bytes (hub-bypassing traffic).
+    pub fn total_p2p_bytes(&self) -> u64 {
+        self.total_p2p_bytes
     }
 }
 
@@ -201,8 +215,9 @@ mod tests {
         n.send_down(1, 1_000_000);
         let t = n.round_time_and_reset();
         assert!((t - 2.0).abs() < 1e-9, "t={t}");
-        // the payload itself is counted once
+        // the payload itself is counted once, and tracked as p2p traffic
         assert_eq!(n.total_bytes(), 2_000_000);
+        assert_eq!(n.total_p2p_bytes(), 1_000_000);
 
         // hub-bound check: p2p bytes never serialize through the hub
         let mut n = NetworkModel::new(

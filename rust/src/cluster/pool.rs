@@ -8,8 +8,11 @@
 //! is always applied first — this ordering is what makes the engine's BSP
 //! barrier correct (see coordinator::engine).
 
+use crate::kvstore::LeaseToken;
 use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 type Job<S> = Box<dyn FnOnce(&mut S) + Send>;
 
@@ -57,6 +60,94 @@ pub fn thread_cpu_secs() -> f64 {
     use std::time::Instant;
     static START: OnceLock<Instant> = OnceLock::new();
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Slot-keyed, versioned, blocking handoff mailbox — the async forward
+/// queue under worker→worker state migration (pipelined rotation,
+/// [`crate::coordinator::ExecutionMode::Rotation`]).
+///
+/// Each slot holds at most one `(item, version)` pair.  A consumer
+/// [`ForwardQueue::take`]s a *specific* version, blocking until the
+/// producer (its ring predecessor) deposits it; depositing over an
+/// unconsumed item panics, as does finding an unexpected version — both
+/// are ordering violations in the handoff protocol, not recoverable
+/// conditions.  Waits carry a generous timeout so a protocol deadlock
+/// fails a test run loudly instead of hanging it.
+#[derive(Debug)]
+pub struct ForwardQueue<T> {
+    slots: Mutex<Vec<Option<(T, u64)>>>,
+    ready: Condvar,
+    n_slots: usize,
+}
+
+impl<T> ForwardQueue<T> {
+    pub fn new(n_slots: usize) -> Self {
+        ForwardQueue {
+            slots: Mutex::new((0..n_slots).map(|_| None).collect()),
+            ready: Condvar::new(),
+            n_slots,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Deposit `(item, version)` into `slot`.  Panics if the slot is
+    /// occupied (the previous handoff was never consumed).
+    pub fn deposit(&self, slot: usize, item: T, version: u64) {
+        let mut slots = self.slots.lock().expect("forward queue poisoned");
+        assert!(
+            slots[slot].is_none(),
+            "forward queue slot {slot} occupied (unconsumed handoff)"
+        );
+        slots[slot] = Some((item, version));
+        self.ready.notify_all();
+    }
+
+    /// Block until `slot` holds exactly `version`, then take it.  Returns
+    /// the item together with the version the *producer* deposited (the
+    /// consumer's independent evidence of what it consumed).  Panics on a
+    /// version mismatch or if the handoff never arrives within the
+    /// (generous, wall-clock) deadlock guard.
+    pub fn take(&self, slot: usize, version: u64) -> (T, u64) {
+        let mut slots = self.slots.lock().expect("forward queue poisoned");
+        let mut timed_out_once = false;
+        loop {
+            let held = slots[slot].as_ref().map(|(_, v)| *v);
+            if let Some(v) = held {
+                assert!(
+                    v == version,
+                    "forward queue slot {slot}: expected version {version}, found {v}"
+                );
+                return slots[slot].take().expect("slot occupied");
+            }
+            // a timed-out wait re-checks the slot above before giving up:
+            // the deposit may have landed while the wait was expiring
+            if timed_out_once {
+                panic!(
+                    "forward queue slot {slot}: version {version} never \
+                     arrived (handoff deadlock?)"
+                );
+            }
+            let (guard, timeout) = self
+                .ready
+                .wait_timeout(slots, Duration::from_secs(300))
+                .expect("forward queue poisoned");
+            slots = guard;
+            timed_out_once = timeout.timed_out();
+        }
+    }
+
+    /// Non-blocking removal of whatever the slot currently holds.
+    pub fn reclaim(&self, slot: usize) -> Option<(T, u64)> {
+        self.slots.lock().expect("forward queue poisoned")[slot].take()
+    }
+
+    /// Inspect a slot without consuming it.
+    pub fn with_slot<R>(&self, slot: usize, f: impl FnOnce(Option<&(T, u64)>) -> R) -> R {
+        f(self.slots.lock().expect("forward queue poisoned")[slot].as_ref())
+    }
 }
 
 /// Pool of worker threads, one per simulated machine.
@@ -126,7 +217,7 @@ impl<S: Send + 'static> WorkerPool<S> {
             });
             sender.send(wrapped).expect("worker thread alive");
         }
-        PendingRound { rrx, n_workers: self.senders.len() }
+        PendingRound { rrx, n_workers: self.senders.len(), leases: Vec::new() }
     }
 
     /// Run a job on a single worker and wait for its result.
@@ -168,9 +259,23 @@ impl<S: Send + 'static> WorkerPool<S> {
 pub struct PendingRound<R> {
     rrx: mpsc::Receiver<(usize, R, f64)>,
     n_workers: usize,
+    /// Rotation mode: the lease each worker's in-flight task consumes
+    /// (index-aligned with workers; empty outside rotation).  The engine
+    /// cross-checks these against the leases the collected partials report.
+    leases: Vec<LeaseToken>,
 }
 
 impl<R> PendingRound<R> {
+    /// Attach the in-flight lease tokens (one per worker, index-aligned).
+    pub fn set_leases(&mut self, leases: Vec<LeaseToken>) {
+        self.leases = leases;
+    }
+
+    /// The in-flight lease tokens recorded at dispatch.
+    pub fn leases(&self) -> &[LeaseToken] {
+        &self.leases
+    }
+
     /// Block until every worker has replied; results in worker order with
     /// per-worker on-thread seconds.
     pub fn collect(self) -> Vec<(R, f64)> {
@@ -266,6 +371,35 @@ mod tests {
         let rb = b.collect();
         assert!(ra.iter().all(|(v, _)| v == &vec![1]));
         assert!(rb.iter().all(|(v, _)| v == &vec![1, 2]));
+    }
+
+    #[test]
+    fn forward_queue_blocks_until_the_version_arrives() {
+        use std::sync::Arc;
+        let q = Arc::new(ForwardQueue::new(2));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.take(1, 4));
+        std::thread::sleep(Duration::from_millis(20));
+        q.deposit(1, "slice".to_string(), 4);
+        let (item, v) = h.join().expect("taker thread");
+        assert_eq!((item.as_str(), v), ("slice", 4));
+        assert!(q.reclaim(1).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "occupied")]
+    fn forward_queue_double_deposit_panics() {
+        let q = ForwardQueue::new(1);
+        q.deposit(0, 1u8, 0);
+        q.deposit(0, 2u8, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected version")]
+    fn forward_queue_version_mismatch_panics() {
+        let q = ForwardQueue::new(1);
+        q.deposit(0, 1u8, 3);
+        let _ = q.take(0, 2);
     }
 
     #[test]

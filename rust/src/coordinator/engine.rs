@@ -10,7 +10,7 @@
 //! 6. the resulting sync message is broadcast (**sync**): FIFO worker
 //!    mailboxes guarantee every worker applies it before its next push.
 //!
-//! Two execution modes ([`ExecutionMode`]):
+//! Three execution modes ([`ExecutionMode`]):
 //!
 //! * **BSP** (default, the paper's semantics): the coordinator barriers on
 //!   every round — the virtual clock advances by
@@ -25,6 +25,16 @@
 //!   collect through a [`VersionVector`].  Straggler compute time is
 //!   overlapped instead of barriered; [`SspStats`] records the observed
 //!   staleness and the barrier wait the pipeline hid.
+//! * **Rotation** (`Rotation { depth: d }`): the same dispatch/collect
+//!   split generalized from *stale reads of shared state* to *migrating
+//!   exclusive state*.  Apps whose schedule rotates exclusively-leased
+//!   slices (LDA's word-topic table) opt in via
+//!   [`StradsApp::supports_rotation`]: slices hand off worker→worker
+//!   through a [`crate::kvstore::SliceRouter`] ring, the coordinator
+//!   tracks only lease tokens, and up to `d` rounds pipeline.  The
+//!   exclusive-lease invariant survives without a barrier — the router's
+//!   per-slice version chain panics on any fork, and every collect
+//!   cross-checks the consumed leases against the dispatched ones.
 //!
 //! The engine owns the virtual cluster clock, making reported scaling
 //! behaviour independent of the physical core count of the build machine.
@@ -33,7 +43,7 @@ use crate::cluster::{
     MemoryTracker, NetworkConfig, NetworkModel, PendingRound, StragglerModel,
     VirtualClock, WorkerPool,
 };
-use crate::kvstore::VersionVector;
+use crate::kvstore::{LeaseToken, VersionVector};
 use crate::metrics::{Recorder, SspStats};
 use crate::util::stats::Stopwatch;
 use std::cell::RefCell;
@@ -99,11 +109,68 @@ pub trait StradsApp {
 
     /// Whether the app tolerates the SSP execution mode.  Apps whose
     /// schedule hands out *exclusive* state (LDA's rotation leases a slice
-    /// to exactly one worker per round) must stay BSP: pipelining rounds
-    /// would require checking a slice out twice.  The engine silently falls
-    /// back to BSP when this returns false.
+    /// to exactly one worker per round) cannot pipeline through shared
+    /// stale reads: SSP requests fall back (to pipelined rotation when
+    /// [`StradsApp::supports_rotation`] holds, else to BSP).
     fn supports_ssp() -> bool {
         true
+    }
+
+    // ---- pipelined-rotation hooks (ExecutionMode::Rotation) ----
+
+    /// Whether the app's schedule rotates *exclusive* state that can be
+    /// handed worker→worker (LDA's word-topic slices).  Opting in makes
+    /// [`ExecutionMode::Rotation`] pipeline rounds: the engine brackets
+    /// the run with [`StradsApp::begin_rotation`] /
+    /// [`StradsApp::end_rotation`] and verifies at every collect that each
+    /// worker consumed exactly the lease its task granted.
+    fn supports_rotation() -> bool {
+        false
+    }
+
+    /// Enter rotation-pipelined mode: move leased state into a
+    /// [`crate::kvstore::SliceRouter`] so workers can hand slices directly
+    /// to the ring successor.
+    fn begin_rotation(&mut self, _depth: u64) {}
+
+    /// Leave rotation-pipelined mode: reclaim all slices from the router
+    /// (the pipeline is already drained when this is called).
+    fn end_rotation(&mut self) {}
+
+    /// Rotation mode: the lease this task grants (None otherwise).
+    fn task_lease(_task: &Self::Task) -> Option<LeaseToken> {
+        None
+    }
+
+    /// Rotation mode: the lease this partial's worker consumed (None
+    /// otherwise).
+    fn partial_lease(_partial: &Self::Partial) -> Option<LeaseToken> {
+        None
+    }
+
+    /// Bytes this partial's worker forwarded to the ring successor on
+    /// finishing its task (the rotation slice handoff; 0 outside rotation
+    /// mode).  Charged to both endpoints' links, never the hub.
+    fn handoff_bytes(_partial: &Self::Partial) -> usize {
+        0
+    }
+
+    /// Rotation mode: the worker that receives `worker`'s slice next round
+    /// — where the engine charges the handoff bytes.  The default is
+    /// `RotationScheduler`'s orientation
+    /// ([`crate::scheduler::rotation::ring_successor`]); an app rotating
+    /// the other way must override this *and*
+    /// [`StradsApp::handoff_source`] together.
+    fn handoff_successor(worker: usize, n_workers: usize) -> usize {
+        crate::scheduler::rotation::ring_successor(worker, n_workers)
+    }
+
+    /// Rotation mode: the worker whose previous-round finish gates
+    /// `worker`'s next start (the slice arrives from there).  Must be the
+    /// inverse permutation of [`StradsApp::handoff_successor`]
+    /// (default: [`crate::scheduler::rotation::ring_source`]).
+    fn handoff_source(worker: usize, n_workers: usize) -> usize {
+        crate::scheduler::rotation::ring_source(worker, n_workers)
     }
 }
 
@@ -118,6 +185,16 @@ pub enum ExecutionMode {
     /// `staleness: 0` runs the pipelined machinery with BSP-equivalent
     /// ordering (useful for differential testing).
     Ssp { staleness: u64 },
+    /// Pipelined rotation: up to `depth` rounds in flight, with exclusive
+    /// model slices handed worker→worker along the schedule's ring (a
+    /// `kvstore::SliceRouter`) instead of barriering through the
+    /// coordinator each round.  `depth: 1` serializes the router path and
+    /// reproduces BSP ordering exactly (differential testing).  Apps that
+    /// do not rotate exclusive state (see
+    /// [`StradsApp::supports_rotation`]) degrade to
+    /// `Ssp { staleness: depth - 1 }` when they tolerate staleness, else
+    /// to BSP.
+    Rotation { depth: u64 },
 }
 
 /// Engine run parameters.
@@ -166,10 +243,13 @@ pub struct RunResult {
     pub final_objective: f64,
     pub max_model_bytes_per_machine: u64,
     pub total_network_bytes: u64,
+    /// Bytes that moved worker↔worker (hub-bypassing: rotation handoffs,
+    /// KV-shard serving) — a subset of `total_network_bytes`.
+    pub total_p2p_bytes: u64,
     /// Set if a worker exceeded the modelled memory capacity.
     pub oom: Option<String>,
-    /// SSP accounting (observed staleness, straggler wait hidden); None
-    /// for BSP runs.
+    /// Pipeline accounting (observed staleness, straggler wait hidden) for
+    /// SSP *and* rotation-pipelined runs; None for BSP runs.
     pub ssp: Option<SspStats>,
 }
 
@@ -190,6 +270,18 @@ struct SspClockState {
     coord_now: f64,
     /// Per-worker availability timestamps.
     worker_free: Vec<f64>,
+}
+
+/// Mutable virtual-time state for the rotation pipeline: like
+/// [`SspClockState`] plus the previous round's per-worker finish times,
+/// which gate when the ring handoff makes a slice available downstream.
+struct RotClockState {
+    coord_now: f64,
+    worker_free: Vec<f64>,
+    /// Finish times of the most recently collected round (worker-indexed):
+    /// worker `p`'s next task cannot start before its ring source
+    /// (`StradsApp::handoff_source`) forwarded the slice.
+    prev_finish: Vec<f64>,
 }
 
 /// The coordinator: owns the app, the worker pool, and all accounting.
@@ -261,6 +353,18 @@ impl<A: StradsApp> Engine<A> {
     /// dispatch half of the pipeline).  Returns the pending handle and the
     /// measured schedule seconds.
     fn dispatch_round(&mut self, round_idx: u64) -> (PendingRound<A::Partial>, f64) {
+        self.dispatch_round_inner(round_idx, false)
+    }
+
+    /// `routed`: rotation mode — tasks carry only scheduling metadata plus
+    /// synced state (hub traffic; the slice payload moves worker→worker at
+    /// handoff time), and each task's lease token is recorded on the
+    /// pending round for collect-time verification.
+    fn dispatch_round_inner(
+        &mut self,
+        round_idx: u64,
+        routed: bool,
+    ) -> (PendingRound<A::Partial>, f64) {
         let sw = Stopwatch::start();
         let tasks = self.app.schedule(round_idx);
         assert_eq!(
@@ -268,15 +372,26 @@ impl<A: StradsApp> Engine<A> {
             self.pool.n_workers(),
             "schedule must emit one task per worker"
         );
-        self.charge_task_bytes(&tasks);
+        let mut leases = Vec::new();
+        if routed {
+            for (p, t) in tasks.iter().enumerate() {
+                self.network.send_down(p, A::task_bytes(t));
+                leases.push(
+                    A::task_lease(t).expect("rotation task must carry a lease"),
+                );
+            }
+        } else {
+            self.charge_task_bytes(&tasks);
+        }
         let schedule_secs = sw.secs();
 
         // dispatch push: tasks move into per-worker closures
         let slots = RefCell::new(tasks.into_iter().map(Some).collect::<Vec<_>>());
-        let pending = self.pool.dispatch(|p| {
+        let mut pending = self.pool.dispatch(|p| {
             let task = slots.borrow_mut()[p].take().expect("one task per worker");
             move |ws: &mut A::WorkerState| A::push(ws, task)
         });
+        pending.set_leases(leases);
         (pending, schedule_secs)
     }
 
@@ -358,13 +473,24 @@ impl<A: StradsApp> Engine<A> {
     }
 
     /// Run a full experiment loop with periodic evaluation and optional
-    /// early stop.  `cfg.mode` picks BSP barriers (default) or the SSP
-    /// pipeline; apps that cannot tolerate staleness (see
-    /// [`StradsApp::supports_ssp`]) silently fall back to BSP.
+    /// early stop.  `cfg.mode` picks BSP barriers (default), the SSP
+    /// pipeline, or the rotation pipeline.  Requests an app cannot honour
+    /// degrade: SSP on an exclusive-lease app falls through to rotation
+    /// (when supported) or BSP; Rotation on a non-rotating app runs as
+    /// `Ssp { staleness: depth - 1 }` (when tolerated) or BSP.
     pub fn run(&mut self, cfg: &RunConfig) -> RunResult {
         match cfg.mode {
             ExecutionMode::Ssp { staleness } if A::supports_ssp() => {
                 self.run_ssp(cfg, staleness)
+            }
+            ExecutionMode::Ssp { staleness } if A::supports_rotation() => {
+                self.run_rotation(cfg, staleness + 1)
+            }
+            ExecutionMode::Rotation { depth } if A::supports_rotation() => {
+                self.run_rotation(cfg, depth.max(1))
+            }
+            ExecutionMode::Rotation { depth } if A::supports_ssp() => {
+                self.run_ssp(cfg, depth.max(1) - 1)
             }
             _ => self.run_bsp(cfg),
         }
@@ -408,6 +534,7 @@ impl<A: StradsApp> Engine<A> {
             final_objective: last_obj,
             max_model_bytes_per_machine: self.memory.max_per_machine(),
             total_network_bytes: self.network.total_bytes(),
+            total_p2p_bytes: self.network.total_p2p_bytes(),
             recorder,
             oom,
             ssp: None,
@@ -511,6 +638,7 @@ impl<A: StradsApp> Engine<A> {
             final_objective: last_obj,
             max_model_bytes_per_machine: self.memory.max_per_machine(),
             total_network_bytes: self.network.total_bytes(),
+            total_p2p_bytes: self.network.total_p2p_bytes(),
             recorder,
             oom,
             ssp: Some(stats),
@@ -564,6 +692,210 @@ impl<A: StradsApp> Engine<A> {
         let before = clk.coord_now;
         clk.coord_now = clk.coord_now.max(finish_max + comm) + pull_secs;
         // what a BSP barrier would have added on top of the pipeline
+        let bsp_increment = compute_max + comm + pull_secs;
+        stats.record(observed, bsp_increment - (clk.coord_now - before));
+        self.clock.advance_round_to(clk.coord_now);
+    }
+
+    /// Collect half of the rotation pipeline: partials' doc stats ride the
+    /// hub, the slice itself was already forwarded p2p to the ring
+    /// successor when the worker finished, and every consumed lease must
+    /// be exactly the one its task granted.
+    fn rot_collect_round(
+        &mut self,
+        round_idx: u64,
+        pending: PendingRound<A::Partial>,
+    ) -> (Vec<f64>, f64) {
+        let n = self.pool.n_workers();
+        let leases = pending.leases().to_vec();
+        assert_eq!(leases.len(), n, "rotation round must track one lease per worker");
+        let results = pending.collect();
+        let mut partials = Vec::with_capacity(results.len());
+        let mut compute_secs = Vec::with_capacity(results.len());
+        for (p, (partial, secs)) in results.into_iter().enumerate() {
+            self.network.send_up(p, A::partial_bytes(&partial));
+            let hb = A::handoff_bytes(&partial);
+            if hb > 0 {
+                // the swept slice moved to the next holder in the ring
+                self.network.send_p2p(p, A::handoff_successor(p, n), hb);
+            }
+            let consumed = A::partial_lease(&partial)
+                .expect("rotation partial must report its lease");
+            assert_eq!(
+                consumed, leases[p],
+                "worker {p} consumed a lease it was not granted (round {round_idx})"
+            );
+            partials.push(partial);
+            compute_secs.push(secs);
+        }
+        self.straggler.scale(&mut compute_secs, round_idx);
+
+        let pull_sw = Stopwatch::start();
+        let sync_msg = self.app.pull(round_idx, partials);
+        let pull_secs = pull_sw.secs();
+        if let Some(msg) = sync_msg {
+            for p in 0..n {
+                self.network.send_down(p, A::sync_bytes(&msg));
+            }
+            self.pool.broadcast(|_| {
+                let msg = msg.clone();
+                move |ws: &mut A::WorkerState| A::sync(ws, &msg)
+            });
+        }
+        (compute_secs, pull_secs)
+    }
+
+    /// The rotation pipeline: up to `depth` rounds in flight, slices
+    /// migrating worker→worker.
+    ///
+    /// Virtual-time model: on top of the SSP availability model, worker
+    /// `p`'s round cannot start before its ring source `(p + 1) % n`
+    /// finished the *previous* round — that is when the slice handoff
+    /// leaves the source.  A straggler therefore delays only the chain its
+    /// slice flows along while the rest of the ring keeps moving, which is
+    /// exactly the wavefront the BSP barrier destroys.  `depth: 1`
+    /// serializes collects behind dispatches and reproduces BSP ordering
+    /// (and objectives) exactly.
+    fn run_rotation(&mut self, cfg: &RunConfig, depth: u64) -> RunResult {
+        let wall = Stopwatch::start();
+        let n = self.pool.n_workers();
+        let mut recorder = Recorder::new(&cfg.label);
+        let mut stats = SspStats::new();
+        let mut vv = VersionVector::new(n);
+        self.app.begin_rotation(depth);
+        let mut last_obj = self.evaluate();
+        recorder.record_with(
+            0,
+            self.clock.seconds(),
+            wall.secs(),
+            last_obj,
+            vec![("staleness".into(), 0.0), ("wait_saved_secs".into(), 0.0)],
+        );
+        let mut oom = None;
+
+        let mut window: VecDeque<InFlight<A::Partial>> = VecDeque::new();
+        let mut clk = RotClockState {
+            coord_now: self.clock.seconds(),
+            worker_free: vec![self.clock.seconds(); n],
+            prev_finish: vec![self.clock.seconds(); n],
+        };
+
+        let mut rounds_run = 0;
+        'rounds: for r in 0..cfg.max_rounds {
+            while window.len() >= depth as usize {
+                self.rot_collect_oldest(
+                    &mut window, &mut clk, &mut vv, &mut stats, depth,
+                );
+            }
+            let (pending, schedule_secs) = self.dispatch_round_inner(r, true);
+            clk.coord_now += schedule_secs;
+            window.push_back(InFlight {
+                round: r,
+                dispatched_at: clk.coord_now,
+                version_at_dispatch: vv.committed(),
+                pending,
+            });
+            rounds_run = r + 1;
+
+            if (r + 1) % cfg.eval_every == 0 || r + 1 == cfg.max_rounds {
+                // drain the ring so every slice is parked and every lease
+                // settled before the objective reads them
+                while !window.is_empty() {
+                    self.rot_collect_oldest(
+                        &mut window, &mut clk, &mut vv, &mut stats, depth,
+                    );
+                }
+                let obj = self.evaluate();
+                recorder.record_with(
+                    r + 1,
+                    self.clock.seconds(),
+                    wall.secs(),
+                    obj,
+                    vec![
+                        ("staleness".into(), stats.mean_staleness()),
+                        ("wait_saved_secs".into(), stats.wait_saved_secs),
+                    ],
+                );
+                if let Err(e) = self.memory_census() {
+                    oom = Some(e);
+                    break 'rounds;
+                }
+                if let Some(tol) = cfg.rel_tol {
+                    let denom = last_obj.abs().max(1e-12);
+                    if ((last_obj - obj).abs() / denom) < tol {
+                        last_obj = obj;
+                        break 'rounds;
+                    }
+                }
+                last_obj = obj;
+            }
+        }
+        // drain anything left in flight (early break paths)
+        while !window.is_empty() {
+            self.rot_collect_oldest(&mut window, &mut clk, &mut vv, &mut stats, depth);
+        }
+        self.app.end_rotation();
+
+        RunResult {
+            rounds_run,
+            virtual_secs: self.clock.seconds(),
+            wall_secs: wall.secs(),
+            final_objective: last_obj,
+            max_model_bytes_per_machine: self.memory.max_per_machine(),
+            total_network_bytes: self.network.total_bytes(),
+            total_p2p_bytes: self.network.total_p2p_bytes(),
+            recorder,
+            oom,
+            ssp: Some(stats),
+        }
+    }
+
+    /// Collect the oldest in-flight rotation round: verify the pipeline
+    /// bound, pull+settle, and resolve virtual time against both the
+    /// worker availability model and the ring handoff gates.
+    fn rot_collect_oldest(
+        &mut self,
+        window: &mut VecDeque<InFlight<A::Partial>>,
+        clk: &mut RotClockState,
+        vv: &mut VersionVector,
+        stats: &mut SspStats,
+        depth: u64,
+    ) {
+        let inflight = window.pop_front().expect("window not empty");
+        for p in 0..clk.worker_free.len() {
+            vv.apply(p, inflight.version_at_dispatch);
+        }
+        let observed = vv.max_staleness();
+        if let Err(e) = vv.check_bound(depth - 1) {
+            panic!(
+                "rotation pipeline invariant violated collecting round {}: {e}",
+                inflight.round
+            );
+        }
+        let (compute_secs, pull_secs) =
+            self.rot_collect_round(inflight.round, inflight.pending);
+        // every rotation pull commits coordinator state (settled leases +
+        // refreshed sums) even without a sync broadcast
+        vv.commit();
+
+        let n = clk.worker_free.len();
+        let mut finish = vec![0.0f64; n];
+        let mut finish_max = 0.0f64;
+        let mut compute_max = 0.0f64;
+        for (p, &secs) in compute_secs.iter().enumerate() {
+            // ready when: the worker is free, the task was dispatched, and
+            // the ring source forwarded the slice (finished last round)
+            let gate = clk.prev_finish[A::handoff_source(p, n)];
+            let start = clk.worker_free[p].max(gate).max(inflight.dispatched_at);
+            finish[p] = start + secs;
+            clk.worker_free[p] = finish[p];
+            finish_max = finish_max.max(finish[p]);
+            compute_max = compute_max.max(secs);
+        }
+        clk.prev_finish = finish;
+        let comm = self.network.round_time_and_reset();
+        let before = clk.coord_now;
+        clk.coord_now = clk.coord_now.max(finish_max + comm) + pull_secs;
         let bsp_increment = compute_max + comm + pull_secs;
         stats.record(observed, bsp_increment - (clk.coord_now - before));
         self.clock.advance_round_to(clk.coord_now);
@@ -713,6 +1045,25 @@ mod tests {
         // consensus still reached: sum preserved, all equal to the mean
         assert_eq!(res.final_objective, 12.0);
         assert!(res.virtual_secs > 0.0);
+    }
+
+    #[test]
+    fn rotation_mode_on_non_rotating_app_degrades_to_ssp() {
+        let app = Consensus { n_workers: 3, committed: 0.0 };
+        let cfg = RunConfig {
+            max_rounds: 9,
+            eval_every: 3,
+            mode: ExecutionMode::Rotation { depth: 3 },
+            label: "rot-degrade".into(),
+            ..Default::default()
+        };
+        let mut e = Engine::new(app, vec![0.0, 6.0, 12.0], &cfg);
+        let res = e.run(&cfg);
+        assert_eq!(res.rounds_run, 9);
+        // Consensus rotates nothing: Rotation { 3 } runs as Ssp { 2 }
+        let stats = res.ssp.expect("degraded run reports pipeline stats");
+        assert!(stats.max_staleness() <= 2);
+        assert_eq!(res.final_objective, 18.0);
     }
 
     #[test]

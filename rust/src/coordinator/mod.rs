@@ -1,7 +1,9 @@
 //! The STRADS round engine: executes user-defined **schedule**, **push**,
 //! **pull** primitives in order, with automatic **sync** (paper §2,
 //! Fig 1), over the simulated cluster.  Sync is strict BSP by default;
-//! [`ExecutionMode::Ssp`] pipelines rounds under bounded staleness.
+//! [`ExecutionMode::Ssp`] pipelines rounds under bounded staleness, and
+//! [`ExecutionMode::Rotation`] pipelines exclusive-slice rotation through
+//! worker→worker handoffs (`kvstore::SliceRouter`).
 
 pub mod engine;
 

@@ -165,8 +165,8 @@ pub struct ModeComparison {
 }
 
 /// Lasso + MF arms of the BSP-vs-SSP comparison under a rotating
-/// `straggler_factor`x compute skew.  (LDA is rotation-scheduled and
-/// stays BSP-only — see `LdaApp::supports_ssp`.)
+/// `straggler_factor`x compute skew.  (LDA rotates exclusive slices and
+/// pipelines through [`run_rotation_comparison`] instead.)
 pub fn run_mode_comparison(
     cfg: &Fig9Config,
     staleness: u64,
@@ -232,14 +232,60 @@ pub fn run_mode_comparison(
     out
 }
 
+/// LDA rotation arm: BSP rotation (per-round checkout/checkin barrier)
+/// vs the pipelined router path (`ExecutionMode::Rotation { depth }`)
+/// under a rotating `straggler_factor`x compute skew.  The pipelined run
+/// lands in the comparison's `ssp` slot.
+pub fn run_rotation_comparison(
+    cfg: &Fig9Config,
+    depth: u64,
+    straggler_factor: f64,
+) -> ModeComparison {
+    let corpus =
+        figure_corpus(sc(6_000, cfg.scale), sc(600, cfg.scale), cfg.seed);
+    let k = sc(32, cfg.scale);
+    let sweeps = 8u64;
+    let straggler = StragglerModel::Rotating { factor: straggler_factor };
+    let run = |mode: ExecutionMode, label: &str| {
+        let run_cfg = RunConfig {
+            max_rounds: sweeps * cfg.n_workers as u64,
+            eval_every: cfg.n_workers as u64,
+            network: NetworkConfig::ideal(), // isolate the compute skew
+            label: label.into(),
+            mode,
+            straggler: straggler.clone(),
+            ..Default::default()
+        };
+        let mut e = lda_engine(&corpus, k, cfg.n_workers, cfg.seed, &run_cfg);
+        e.run(&run_cfg)
+    };
+    let bsp = run(ExecutionMode::Bsp, "LDA-BSP-rotation");
+    let piped =
+        run(ExecutionMode::Rotation { depth }, "LDA-pipelined-rotation");
+    comparison_with("LDA-rotation", bsp, piped, false)
+}
+
 fn comparison(
     app: &str,
     bsp: crate::coordinator::RunResult,
     ssp: crate::coordinator::RunResult,
 ) -> ModeComparison {
-    // the easier (larger, both apps minimize) of the two final objectives:
-    // a target both trajectories reach
-    let target = bsp.final_objective.max(ssp.final_objective);
+    comparison_with(app, bsp, ssp, true)
+}
+
+fn comparison_with(
+    app: &str,
+    bsp: crate::coordinator::RunResult,
+    ssp: crate::coordinator::RunResult,
+    minimizing: bool,
+) -> ModeComparison {
+    // the easier of the two final objectives (larger when minimizing,
+    // smaller when maximizing): a target both trajectories reach
+    let target = if minimizing {
+        bsp.final_objective.max(ssp.final_objective)
+    } else {
+        bsp.final_objective.min(ssp.final_objective)
+    };
     let (mean_staleness, max_staleness, wait_saved_secs) = ssp
         .ssp
         .as_ref()
@@ -247,8 +293,8 @@ fn comparison(
         .unwrap_or((0.0, 0, 0.0));
     ModeComparison {
         app: app.to_string(),
-        bsp_secs_to_target: bsp.recorder.time_to_target(target, true),
-        ssp_secs_to_target: ssp.recorder.time_to_target(target, true),
+        bsp_secs_to_target: bsp.recorder.time_to_target(target, minimizing),
+        ssp_secs_to_target: ssp.recorder.time_to_target(target, minimizing),
         target,
         bsp: bsp.recorder,
         ssp: ssp.recorder,
@@ -334,6 +380,31 @@ mod tests {
         let s0 = p.strads.points()[0].objective;
         let s1 = p.strads.last_objective().unwrap();
         assert!(s1 < 0.7 * s0, "lasso objective {s0} -> {s1}");
+    }
+
+    #[test]
+    fn rotation_comparison_converges_and_bounds_staleness() {
+        let c = run_rotation_comparison(&tiny(), 2, 4.0);
+        assert!(
+            c.max_staleness <= 1,
+            "depth-2 pipeline observed staleness {}",
+            c.max_staleness
+        );
+        // both trajectories improve the log-likelihood...
+        for rec in [&c.bsp, &c.ssp] {
+            let first = rec.points()[0].objective;
+            let last = rec.last_objective().unwrap();
+            assert!(
+                last.is_finite() && last > first,
+                "{}: {first} -> {last}",
+                rec.label
+            );
+        }
+        // ...and both reach the shared target.  No timing-ratio assert at
+        // tiny scale (see mode_comparison_converges_and_bounds_staleness);
+        // the strict pipelined-beats-BSP assert lives in the fig9 bench.
+        assert!(c.bsp_secs_to_target.is_some(), "bsp reaches target");
+        assert!(c.ssp_secs_to_target.is_some(), "pipelined reaches target");
     }
 
     #[test]

@@ -12,9 +12,15 @@
 //!   committed value.  Its [`VersionVector`] companion tracks every
 //!   worker's applied version and enforces the bounded-staleness invariant
 //!   of the SSP execution mode (see `coordinator::ExecutionMode`).
+//! * [`SliceRouter`] / [`LeaseLedger`] — the pipelined-rotation path:
+//!   slices are served worker→worker through a versioned handoff ring and
+//!   the coordinator tracks only lease tokens, so LDA's rotation pipelines
+//!   without the per-round checkout/checkin barrier.
 
+pub mod router;
 pub mod slices;
 pub mod versioned;
 
+pub use router::{LeaseLedger, LeaseToken, SliceRouter};
 pub use slices::{SliceLease, SliceStore};
 pub use versioned::{VersionVector, VersionedParams};

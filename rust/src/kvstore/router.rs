@@ -1,0 +1,272 @@
+//! Async worker→worker slice serving for pipelined rotation.
+//!
+//! The BSP rotation path funnels every slice through the coordinator each
+//! round: `schedule` checks it out of [`crate::kvstore::SliceStore`],
+//! `pull` checks it back in — a global barrier per round.  The paper's
+//! rotation schedule (§3.1, Fig 4) only requires *disjointness per round*,
+//! so the checkout/checkin cycle can be replaced by a ring of direct
+//! handoffs: a worker finishing slice `a` forwards it straight to the ring
+//! successor, and the coordinator only tracks lease *tokens*.
+//!
+//! Three pieces:
+//!
+//! * [`SliceRouter`] — the worker-side data plane: a slot-per-slice
+//!   [`crate::cluster::ForwardQueue`] plus a per-slice **version chain**.
+//!   `take(a, v)` blocks until the predecessor has forwarded exactly
+//!   version `v`; `forward(a, data, v+1)` hands the swept slice on.  The
+//!   chain head only ever advances by one, so forwarding a second child of
+//!   the same parent version panics — the exclusive-lease invariant of
+//!   [`crate::kvstore::SliceStore`] preserved without a barrier.
+//! * [`LeaseToken`] — `(slice, version)`, the coordinator-visible name of
+//!   one lease in the chain.
+//! * [`LeaseLedger`] — the coordinator-side control plane: `grant` hands
+//!   out strictly sequential versions at schedule time, `settle` retires
+//!   them strictly in order at pull time.  Every version `v+1` therefore
+//!   has exactly one parent `v`; any skip, replay, or fork panics.
+
+use crate::cluster::ForwardQueue;
+use std::sync::Mutex;
+
+/// One lease in a slice's version chain: the worker holding this token may
+/// consume exactly version `version` of slice `slice_id` (and forwards
+/// `version + 1`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaseToken {
+    pub slice_id: usize,
+    pub version: u64,
+}
+
+/// Worker-side slice handoff ring: versioned slices move peer→peer through
+/// a blocking per-slice mailbox, never through the coordinator.
+///
+/// Shared by `Arc` between the coordinator (seeding, eval-time peeks,
+/// teardown) and every worker's in-flight push closures.
+#[derive(Debug)]
+pub struct SliceRouter<T> {
+    queue: ForwardQueue<T>,
+    /// Highest version ever deposited per slice — the forward-only guard
+    /// that detects a forked chain.
+    heads: Mutex<Vec<u64>>,
+}
+
+impl<T: Send> SliceRouter<T> {
+    pub fn new(n_slices: usize) -> Self {
+        SliceRouter {
+            queue: ForwardQueue::new(n_slices),
+            heads: Mutex::new(vec![0; n_slices]),
+        }
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.queue.n_slots()
+    }
+
+    /// Install a slice's initial contents at `version` (coordinator-side,
+    /// entering rotation mode).  Panics if the slot already holds data.
+    pub fn seed(&self, slice_id: usize, data: T, version: u64) {
+        self.heads.lock().expect("router heads poisoned")[slice_id] = version;
+        self.queue.deposit(slice_id, data, version);
+    }
+
+    /// Worker-side receive: block until exactly `version` of the slice has
+    /// been forwarded, then take ownership.  Returns the slice together
+    /// with the version the predecessor actually deposited — the holder's
+    /// independent evidence of which lease it consumed (the coordinator
+    /// cross-checks it against the granted token at collect time).  Panics
+    /// if a *different* version is found (an ordering violation upstream).
+    pub fn take(&self, slice_id: usize, version: u64) -> (T, u64) {
+        self.queue.take(slice_id, version)
+    }
+
+    /// Worker-side handoff to the ring successor: deposit the swept slice
+    /// as `version`.  Panics unless `version` extends the chain head by
+    /// exactly one — forwarding a second child of the same parent is a
+    /// **version fork** (two workers held the slice at once).
+    pub fn forward(&self, slice_id: usize, data: T, version: u64) {
+        {
+            let mut heads = self.heads.lock().expect("router heads poisoned");
+            assert!(
+                version == heads[slice_id] + 1,
+                "slice {} version fork: forwarding v{} but the chain head is v{}",
+                slice_id,
+                version,
+                heads[slice_id]
+            );
+            heads[slice_id] = version;
+        }
+        self.queue.deposit(slice_id, data, version);
+    }
+
+    /// Current chain head (highest version deposited).
+    pub fn version(&self, slice_id: usize) -> u64 {
+        self.heads.lock().expect("router heads poisoned")[slice_id]
+    }
+
+    /// Non-blocking removal of whatever the slot holds (pipeline
+    /// teardown).  Panics if the slice is still in flight.
+    pub fn reclaim(&self, slice_id: usize) -> (T, u64) {
+        self.queue
+            .reclaim(slice_id)
+            .unwrap_or_else(|| panic!("slice {slice_id} still in flight at teardown"))
+    }
+
+    /// Inspect a parked slice without consuming it (eval-time reads; the
+    /// engine drains the pipeline first, so `None` means a protocol bug).
+    pub fn with_slice<R>(&self, slice_id: usize, f: impl FnOnce(Option<&T>) -> R) -> R {
+        self.queue.with_slot(slice_id, |slot| f(slot.map(|(data, _)| data)))
+    }
+}
+
+/// Coordinator-side lease accounting for the rotation pipeline: a
+/// per-slice version chain advanced by `grant` (schedule time) and
+/// `settle` (pull time), panicking on any fork.
+#[derive(Debug, Clone)]
+pub struct LeaseLedger {
+    /// Next version to grant per slice.
+    granted: Vec<u64>,
+    /// Next version to settle per slice (≤ granted; the gap is in flight).
+    settled: Vec<u64>,
+}
+
+impl LeaseLedger {
+    pub fn new(n_slices: usize) -> Self {
+        LeaseLedger { granted: vec![0; n_slices], settled: vec![0; n_slices] }
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.granted.len()
+    }
+
+    /// Re-base one slice's chain (entering rotation mode with a store
+    /// whose versions already advanced).  Panics if leases are in flight.
+    pub fn seed(&mut self, slice_id: usize, version: u64) {
+        assert!(
+            self.granted[slice_id] == self.settled[slice_id],
+            "slice {slice_id} has in-flight leases"
+        );
+        self.granted[slice_id] = version;
+        self.settled[slice_id] = version;
+    }
+
+    /// Grant the next lease of the slice's chain; returns the version the
+    /// holder must consume.  Strictly sequential: a scheduler bug that
+    /// grants the same round twice shows up as settle-time forks.
+    pub fn grant(&mut self, slice_id: usize) -> u64 {
+        let v = self.granted[slice_id];
+        self.granted[slice_id] += 1;
+        v
+    }
+
+    /// Retire a consumed lease.  Panics unless it is exactly the oldest
+    /// outstanding version — a skip or replay means the chain forked
+    /// (version `v+1` with zero or two parents `v`).
+    pub fn settle(&mut self, token: &LeaseToken) {
+        assert!(
+            token.version < self.granted[token.slice_id],
+            "lease fork: slice {} settling ungranted v{}",
+            token.slice_id,
+            token.version
+        );
+        assert!(
+            token.version == self.settled[token.slice_id],
+            "lease fork: slice {} settling v{} but the chain expects v{}",
+            token.slice_id,
+            token.version,
+            self.settled[token.slice_id]
+        );
+        self.settled[token.slice_id] += 1;
+    }
+
+    /// Leases granted but not yet settled for one slice.
+    pub fn outstanding(&self, slice_id: usize) -> u64 {
+        self.granted[slice_id] - self.settled[slice_id]
+    }
+
+    /// Worst outstanding depth across slices (the pipeline depth actually
+    /// reached).
+    pub fn max_outstanding(&self) -> u64 {
+        (0..self.n_slices()).map(|a| self.outstanding(a)).max().unwrap_or(0)
+    }
+
+    /// Fully settled chain head for one slice.
+    pub fn settled_head(&self, slice_id: usize) -> u64 {
+        self.settled[slice_id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_handoff_roundtrip() {
+        let r = SliceRouter::new(2);
+        r.seed(0, vec![1.0f32], 3);
+        r.seed(1, vec![2.0f32], 0);
+        assert_eq!(r.version(0), 3);
+        let (d, consumed) = r.take(0, 3);
+        assert_eq!(d, vec![1.0]);
+        assert_eq!(consumed, 3);
+        r.forward(0, d, consumed + 1);
+        assert_eq!(r.version(0), 4);
+        r.with_slice(0, |s| assert_eq!(s, Some(&vec![1.0f32])));
+        let (d, v) = r.reclaim(0);
+        assert_eq!((d, v), (vec![1.0f32], 4));
+        r.with_slice(0, |s| assert!(s.is_none()));
+    }
+
+    #[test]
+    #[should_panic(expected = "version fork")]
+    fn second_child_of_same_parent_panics() {
+        let r = SliceRouter::new(1);
+        r.seed(0, 7u8, 0);
+        let (d, _) = r.take(0, 0);
+        r.forward(0, d, 1);
+        let (d, _) = r.take(0, 1);
+        // chain head is already v1: a second v1 (two children of v0 in
+        // spirit) must panic rather than silently rewind
+        r.forward(0, d, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "still in flight")]
+    fn reclaiming_an_in_flight_slice_panics() {
+        let r = SliceRouter::new(1);
+        r.seed(0, 7u8, 0);
+        let _held = r.take(0, 0);
+        let _ = r.reclaim(0);
+    }
+
+    #[test]
+    fn ledger_grants_and_settles_in_order() {
+        let mut l = LeaseLedger::new(2);
+        l.seed(1, 5);
+        assert_eq!(l.grant(0), 0);
+        assert_eq!(l.grant(0), 1);
+        assert_eq!(l.grant(1), 5);
+        assert_eq!(l.outstanding(0), 2);
+        assert_eq!(l.max_outstanding(), 2);
+        l.settle(&LeaseToken { slice_id: 0, version: 0 });
+        l.settle(&LeaseToken { slice_id: 0, version: 1 });
+        l.settle(&LeaseToken { slice_id: 1, version: 5 });
+        assert_eq!(l.max_outstanding(), 0);
+        assert_eq!(l.settled_head(0), 2);
+        assert_eq!(l.settled_head(1), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "lease fork")]
+    fn settling_out_of_order_panics() {
+        let mut l = LeaseLedger::new(1);
+        let _v0 = l.grant(0);
+        let _v1 = l.grant(0);
+        l.settle(&LeaseToken { slice_id: 0, version: 1 }); // skips v0
+    }
+
+    #[test]
+    #[should_panic(expected = "lease fork")]
+    fn settling_an_ungranted_lease_panics() {
+        let mut l = LeaseLedger::new(1);
+        l.settle(&LeaseToken { slice_id: 0, version: 0 });
+    }
+}

@@ -54,6 +54,25 @@ impl<T> SliceStore<T> {
         self.slots[lease.slice_id] = Some(lease.data);
     }
 
+    /// Re-install a slice that was moved out via [`SliceStore::checkout`]
+    /// after its version chain advanced elsewhere — the pipelined-rotation
+    /// path, where sweeps bump versions through the
+    /// [`crate::kvstore::SliceRouter`] rather than through `checkin`.
+    /// The version may only move forward.
+    pub fn restore(&mut self, slice_id: usize, data: T, version: u64) {
+        assert!(
+            self.slots[slice_id].is_none(),
+            "slice {slice_id} already present"
+        );
+        assert!(
+            version >= self.versions[slice_id],
+            "slice {slice_id} version went backwards: {} -> {version}",
+            self.versions[slice_id]
+        );
+        self.versions[slice_id] = version;
+        self.slots[slice_id] = Some(data);
+    }
+
     /// Is the slice currently leased out?
     pub fn is_leased(&self, slice_id: usize) -> bool {
         self.slots[slice_id].is_none()
@@ -102,6 +121,17 @@ mod tests {
         assert_eq!(s.peek(0), None);
         s.checkin(lease);
         assert_eq!(s.peek(0), Some(&7));
+    }
+
+    #[test]
+    fn restore_reinstalls_with_advanced_version() {
+        let mut s = SliceStore::new(vec![vec![1u8]]);
+        let lease = s.checkout(0);
+        // the rotation router swept the slice 5 times elsewhere
+        s.restore(0, lease.data, lease.version + 5);
+        assert!(!s.is_leased(0));
+        assert_eq!(s.version(0), 5);
+        assert_eq!(s.peek(0), Some(&vec![1u8]));
     }
 
     #[test]

@@ -71,6 +71,12 @@ impl<T: Clone> VersionedParams<T> {
 /// had applied exactly those syncs first).  [`VersionVector::check_bound`]
 /// is the bounded-staleness invariant from the SSP literature (Ho et al.,
 /// Xing et al. 2016): every read sees all commits up to `committed - s`.
+///
+/// The rotation pipeline reuses the same accounting with pulls as the
+/// commit events: a `Rotation { depth }` run bounds every dispatched
+/// round's snapshot lag by `depth - 1` (the engine panics otherwise), so
+/// the s-snapshot a slice sweep reads is never more than `depth - 1`
+/// pulls behind.
 #[derive(Debug, Clone)]
 pub struct VersionVector {
     committed: u64,

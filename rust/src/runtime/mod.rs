@@ -11,14 +11,14 @@
 //! Engine::call(name, inputs) ──> executable.execute ──> tuple of Literals
 //! ```
 //!
-//! Executables are compiled once and cached ([`Engine`]); per-call overhead
+//! Executables are compiled once and cached (`Engine`); per-call overhead
 //! is literal staging only.
 
-//! The PJRT execution path ([`engine`]) needs the `xla` crate, which is
-//! not vendorable in the offline build; it is gated behind the `xla`
-//! cargo feature.  The manifest and host [`Tensor`] types are pure rust
-//! and always available (the CLI's `artifacts` command and the network
-//! byte accounting use them without XLA).
+//! The PJRT execution path (the `engine` submodule) needs the `xla`
+//! crate, which is not vendorable in the offline build; it is gated
+//! behind the `xla` cargo feature.  The manifest and host [`Tensor`]
+//! types are pure rust and always available (the CLI's `artifacts`
+//! command and the network byte accounting use them without XLA).
 #[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;

@@ -6,6 +6,22 @@
 //! per round (disjointness ⇒ near-conditional-independence of the parallel
 //! Gibbs updates), and after U rounds every worker has seen every subset.
 
+/// The worker that holds `worker`'s current slice *next* round on a
+/// `u`-worker ring — the single source of truth for the rotation's
+/// orientation.  Worker `w` holds slice `(w + C) % U` in round `C`; that
+/// slice is held by `(w - 1) % U` in round `C + 1`.  Used by both
+/// [`RotationScheduler::handoff_successor`] and the engine's
+/// `StradsApp::handoff_successor` default.
+pub fn ring_successor(worker: usize, u: usize) -> usize {
+    (worker + u - 1) % u
+}
+
+/// Inverse of [`ring_successor`]: the worker whose previous-round slice
+/// `worker` receives this round.
+pub fn ring_source(worker: usize, u: usize) -> usize {
+    (worker + 1) % u
+}
+
 /// Stateful rotation scheduler over `n_slices` partitions and an equal
 /// number of workers.
 #[derive(Debug, Clone)]
@@ -41,12 +57,57 @@ impl RotationScheduler {
         self.n_slices
     }
 
-    /// Partition vocabulary ids [0, v) into `u` balanced slices; returns
-    /// slice id per word.  Words are strided across slices so Zipf-heavy
-    /// low ids spread evenly (load balance, same intent as the paper's
-    /// frequency-aware split).
+    /// The worker that holds `worker`'s current slice *next* round — the
+    /// ring successor a pipelined rotation forwards the slice to (see
+    /// [`ring_successor`]).
+    pub fn handoff_successor(&self, worker: usize) -> usize {
+        ring_successor(worker, self.n_slices)
+    }
+
+    /// The worker whose previous-round slice `worker` receives this round
+    /// — the ring source a pipelined rotation waits on.  Inverse of
+    /// [`RotationScheduler::handoff_successor`] (see [`ring_source`]).
+    pub fn handoff_source(&self, worker: usize) -> usize {
+        ring_source(worker, self.n_slices)
+    }
+
+    /// Partition vocabulary ids [0, v) into `u` slices by striding the
+    /// **id** space (`w % u`).  This balances word *counts* only — it is
+    /// frequency-blind, so a corpus whose heavy words cluster in id space
+    /// (e.g. the topic-banded generator in `datagen::lda_corpus`) can
+    /// still overload one slice.  Use
+    /// [`RotationScheduler::partition_words_by_freq`] when corpus
+    /// frequencies are known.
     pub fn partition_words(v: usize, u: usize) -> Vec<usize> {
         (0..v).map(|w| w % u).collect()
+    }
+
+    /// Frequency-weighted split: words are ranked by corpus frequency and
+    /// greedily assigned, heaviest first, to the currently lightest slice
+    /// (ties broken toward the slice with fewer words), so Zipf-heavy
+    /// heads spread across slices instead of piling into one.  This is the
+    /// paper's frequency-aware load balance for rotation rounds: per-round
+    /// compute is proportional to a slice's *token mass*, not its word
+    /// count.  Returns the slice id per word.
+    pub fn partition_words_by_freq(freqs: &[u64], u: usize) -> Vec<usize> {
+        assert!(u > 0);
+        let mut order: Vec<usize> = (0..freqs.len()).collect();
+        order.sort_by(|&a, &b| freqs[b].cmp(&freqs[a]).then(a.cmp(&b)));
+        let mut load = vec![0u64; u];
+        let mut count = vec![0usize; u];
+        let mut out = vec![0usize; freqs.len()];
+        for w in order {
+            let mut best = 0usize;
+            for a in 1..u {
+                if (load[a], count[a]) < (load[best], count[best]) {
+                    best = a;
+                }
+            }
+            out[w] = best;
+            load[best] += freqs[w];
+            count[best] += 1;
+        }
+        out
     }
 }
 
@@ -86,6 +147,76 @@ mod tests {
         // our round C=1: worker a0 -> slice 1
         assert_eq!(s.slice_for(0), 1);
         assert_eq!(s.slice_for(3), 0);
+    }
+
+    #[test]
+    fn handoff_order_matches_the_rotation() {
+        // forwarding every slice to its successor must reproduce the next
+        // round's assignment exactly
+        let u = 7;
+        let mut s = RotationScheduler::new(u);
+        for _ in 0..2 * u {
+            let now = s.next_round();
+            let next = (0..u).map(|w| s.slice_for(w)).collect::<Vec<_>>();
+            for (w, &slice) in now.iter().enumerate() {
+                let succ = s.handoff_successor(w);
+                assert_eq!(next[succ], slice, "worker {w} -> {succ}");
+                assert_eq!(s.handoff_source(succ), w);
+            }
+        }
+    }
+
+    #[test]
+    fn freq_partition_balances_token_mass_on_a_zipf_corpus() {
+        use crate::datagen::lda_corpus::{self, CorpusConfig};
+        let corpus = lda_corpus::generate(&CorpusConfig {
+            n_docs: 400,
+            vocab: 1200,
+            n_topics: 6,
+            ..Default::default()
+        });
+        let mut freqs = vec![0u64; corpus.vocab];
+        for doc in &corpus.docs {
+            for &w in doc {
+                freqs[w as usize] += 1;
+            }
+        }
+        let u = 8;
+        let mass = |part: &[usize]| {
+            let mut m = vec![0u64; u];
+            for (w, &a) in part.iter().enumerate() {
+                m[a] += freqs[w];
+            }
+            m
+        };
+        let by_freq = mass(&RotationScheduler::partition_words_by_freq(&freqs, u));
+        let (mn, mx) = (
+            *by_freq.iter().min().unwrap() as f64,
+            *by_freq.iter().max().unwrap() as f64,
+        );
+        assert!(
+            mx <= 1.1 * mn,
+            "freq-aware split imbalanced: {by_freq:?}"
+        );
+        // ...and it must not do worse than the frequency-blind id stride
+        let by_id = mass(&RotationScheduler::partition_words(corpus.vocab, u));
+        let (id_mn, id_mx) = (
+            *by_id.iter().min().unwrap() as f64,
+            *by_id.iter().max().unwrap() as f64,
+        );
+        assert!(mx / mn <= id_mx / id_mn.max(1.0) + 1e-9);
+    }
+
+    #[test]
+    fn freq_partition_spreads_zero_freq_words_too() {
+        // all-zero frequencies degenerate to a word-count round-robin
+        let part = RotationScheduler::partition_words_by_freq(&[0; 10], 3);
+        let mut counts = [0usize; 3];
+        for &a in &part {
+            counts[a] += 1;
+        }
+        let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(mx - mn <= 1, "{counts:?}");
     }
 
     #[test]

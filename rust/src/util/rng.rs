@@ -118,7 +118,7 @@ impl Rng {
 
     /// Weighted index sample: draws from the (unnormalized, non-negative)
     /// weight vector by inverse CDF.  O(n); callers with tight loops should
-    /// use [`crate::scheduler::priority::AliasSampler`] instead.
+    /// keep their weights in a [`crate::util::FenwickTree`] instead.
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
         debug_assert!(total > 0.0);

@@ -1,0 +1,196 @@
+//! Pipelined-rotation invariants: the worker→worker handoff chain never
+//! forks a slice version, depth-1 pipelining reproduces BSP exactly, and
+//! deeper pipelines stay bounded and conserve counts under straggler skew.
+
+use strads::cluster::StragglerModel;
+use strads::coordinator::{ExecutionMode, RunConfig};
+use strads::figures::common::{figure_corpus, lda_engine};
+use strads::kvstore::{LeaseLedger, LeaseToken, SliceRouter};
+use strads::scheduler::RotationScheduler;
+use strads::testing::{ensure, prop_check, Prop};
+
+/// Drive the full grant→take→forward→settle protocol single-threaded over
+/// random ring sizes and round counts: every slice's version chain must
+/// advance by exactly one per round (every version v+1 has exactly one
+/// parent v), with no forks and no leases left outstanding.
+#[test]
+fn prop_handoff_chain_never_forks() {
+    prop_check("handoff chain versions", 50, |g| {
+        let u = g.usize_in(1, 12);
+        let rounds = g.usize_in(1, 24) as u64;
+        let router: SliceRouter<Vec<u32>> = SliceRouter::new(u);
+        let mut ledger = LeaseLedger::new(u);
+        for a in 0..u {
+            router.seed(a, vec![a as u32], 0);
+            ledger.seed(a, 0);
+        }
+        let mut sched = RotationScheduler::new(u);
+        for _ in 0..rounds {
+            for slice_id in sched.next_round() {
+                let version = ledger.grant(slice_id);
+                let (data, consumed) = router.take(slice_id, version);
+                if consumed != version {
+                    return Prop::Fail(format!(
+                        "slice {slice_id}: granted v{version}, router \
+                         handed over v{consumed}"
+                    ));
+                }
+                router.forward(slice_id, data, consumed + 1);
+                ledger.settle(&LeaseToken { slice_id, version: consumed });
+            }
+        }
+        if ledger.max_outstanding() != 0 {
+            return Prop::Fail(format!(
+                "{} leases left outstanding",
+                ledger.max_outstanding()
+            ));
+        }
+        for a in 0..u {
+            if router.version(a) != rounds {
+                return Prop::Fail(format!(
+                    "slice {a}: chain head {} after {rounds} rounds",
+                    router.version(a)
+                ));
+            }
+        }
+        Prop::Ok
+    });
+}
+
+/// A forked chain — two children of the same parent version — must panic
+/// in the router, whichever worker forwards second.
+#[test]
+#[should_panic(expected = "version fork")]
+fn forked_version_chain_panics() {
+    let router: SliceRouter<u8> = SliceRouter::new(1);
+    router.seed(0, 9, 0);
+    let (d, _) = router.take(0, 0);
+    router.forward(0, d, 1);
+    let (d, _) = router.take(0, 1);
+    router.forward(0, d, 1); // second child of v0
+}
+
+/// A coordinator that settles leases out of chain order (a skipped parent)
+/// must panic in the ledger.
+#[test]
+#[should_panic(expected = "lease fork")]
+fn out_of_order_settle_panics() {
+    let mut ledger = LeaseLedger::new(1);
+    let _v0 = ledger.grant(0);
+    let _v1 = ledger.grant(0);
+    ledger.settle(&LeaseToken { slice_id: 0, version: 1 });
+}
+
+/// Re-seeding a slice that was never consumed deposits over an occupied
+/// queue slot — the data plane rejects it.  (The distinct double-grant /
+/// forward-fork scenario is covered by `forked_version_chain_panics`.)
+#[test]
+#[should_panic(expected = "occupied")]
+fn double_seed_panics() {
+    let router: SliceRouter<u8> = SliceRouter::new(1);
+    router.seed(0, 1, 0);
+    router.seed(0, 2, 0);
+}
+
+/// depth=1 serializes the router path: identical task order, identical s
+/// snapshots, identical shard RNG streams — the objective trajectory and
+/// the final topic sums must match BSP *bit-exactly*.
+#[test]
+fn rotation_depth1_matches_bsp_exactly() {
+    let run = |mode: ExecutionMode| {
+        let corpus = figure_corpus(800, 100, 21);
+        let cfg = RunConfig {
+            max_rounds: 12,
+            eval_every: 4,
+            mode,
+            label: "rot-eq".into(),
+            ..Default::default()
+        };
+        let mut e = lda_engine(&corpus, 8, 4, 21, &cfg);
+        let res = e.run(&cfg);
+        let objs: Vec<f64> =
+            res.recorder.points().iter().map(|p| p.objective).collect();
+        (objs, e.app().s.clone())
+    };
+    let (bsp_obj, bsp_s) = run(ExecutionMode::Bsp);
+    let (rot_obj, rot_s) = run(ExecutionMode::Rotation { depth: 1 });
+    assert_eq!(
+        bsp_obj, rot_obj,
+        "depth-1 pipelined rotation must reproduce BSP log-likelihoods"
+    );
+    assert_eq!(bsp_s, rot_s, "final topic sums must match bit-exactly");
+}
+
+/// Random depths and straggler skews: the pipeline's observed staleness
+/// stays under `depth - 1`, token counts are conserved, and the run still
+/// learns.
+#[test]
+fn prop_pipelined_rotation_bounded_and_conservative() {
+    prop_check("pipelined rotation invariants", 8, |g| {
+        let workers = g.usize_in(2, 5);
+        let depth = g.usize_in(1, 4) as u64;
+        let factor = g.f64_in(1.0, 6.0);
+        let seed = g.seed();
+        let corpus = figure_corpus(400, 60, seed);
+        let cfg = RunConfig {
+            max_rounds: 3 * workers as u64,
+            eval_every: workers as u64,
+            mode: ExecutionMode::Rotation { depth },
+            straggler: StragglerModel::Rotating { factor },
+            label: "rot-prop".into(),
+            ..Default::default()
+        };
+        let mut e = lda_engine(&corpus, 6, workers, seed, &cfg);
+        let total0: f32 = e.app().s.iter().sum();
+        let res = e.run(&cfg);
+        let stats = match res.ssp {
+            Some(s) => s,
+            None => return Prop::Fail("rotation run must report stats".into()),
+        };
+        if stats.max_staleness() > depth.saturating_sub(1) {
+            return Prop::Fail(format!(
+                "staleness {} over depth-{depth} bound",
+                stats.max_staleness()
+            ));
+        }
+        let total1: f32 = e.app().s.iter().sum();
+        ensure(
+            (total0 - total1).abs() < 1e-2,
+            format!("token mass drifted: {total0} -> {total1}"),
+        )
+    });
+}
+
+/// Under a heavy rotating straggler the handoff ring lets fast workers
+/// stream ahead (a straggler only delays the chain its slice flows
+/// along), while the BSP barrier charges the slow worker to every round:
+/// pipelined rotation must finish the same rounds in less virtual time.
+#[test]
+fn pipelined_rotation_hides_a_rotating_straggler() {
+    let run = |mode: ExecutionMode| {
+        let corpus = figure_corpus(1500, 200, 7);
+        let cfg = RunConfig {
+            max_rounds: 16,
+            eval_every: 16,
+            mode,
+            straggler: StragglerModel::Rotating { factor: 50.0 },
+            label: "rot-straggler".into(),
+            ..Default::default()
+        };
+        let mut e = lda_engine(&corpus, 12, 4, 7, &cfg);
+        e.run(&cfg)
+    };
+    let bsp = run(ExecutionMode::Bsp);
+    let piped = run(ExecutionMode::Rotation { depth: 3 });
+    assert!(
+        piped.virtual_secs < bsp.virtual_secs,
+        "pipelined rotation {} should undercut BSP rotation {} under a \
+         rotating straggler",
+        piped.virtual_secs,
+        bsp.virtual_secs
+    );
+    let stats = piped.ssp.expect("pipeline stats");
+    assert!(stats.wait_saved_secs > 0.0);
+    assert!(stats.max_staleness() <= 2);
+    assert!(piped.total_p2p_bytes > 0, "handoffs must ride p2p links");
+}
