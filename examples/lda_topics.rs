@@ -53,7 +53,7 @@ fn main() {
     println!("\nTop words per topic (word ids; corpus topics are vocabulary bands):");
     let app = engine.app();
     let mut per_topic: Vec<Vec<(f32, usize)>> = vec![Vec::new(); k];
-    for a in 0..workers {
+    for a in 0..app.n_slices() {
         if let Some(slice) = app_slice(app, a) {
             for w_local in 0..slice.n_words {
                 let global_word = app.global_word(a, w_local);

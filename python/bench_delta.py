@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Print the delta between a committed fig9 bench baseline and a fresh run.
+
+Usage: bench_delta.py BASELINE.json CURRENT.json
+
+Compares the time-to-objective and p2p-traffic metrics of every
+comparison arm (ssp_arms[], rotation_arm, multislice_arm) plus wall_secs.
+A baseline metric of null (the pre-refresh placeholder) or a missing arm
+prints the current value with no delta, and never fails the job: this is
+a trend report, not a gate — the hard perf asserts live inside the bench
+binary itself.
+
+Exit code is always 0 unless the CURRENT file is unreadable (a missing or
+corrupt bench output *should* fail CI).
+"""
+
+import json
+import sys
+
+METRICS = [
+    "bsp_secs_to_target",
+    "pipelined_secs_to_target",
+    "bsp_p2p_bytes",
+    "pipelined_p2p_bytes",
+    "bsp_handoffs",
+    "pipelined_handoffs",
+]
+
+
+def fmt(x):
+    if x is None:
+        return "n/a"
+    if isinstance(x, float) and not x.is_integer():
+        return f"{x:.6g}"
+    return str(int(x))
+
+
+def delta_str(base, cur):
+    if base is None or cur is None:
+        return ""
+    if base == 0:
+        return "(new)" if cur else "(=)"
+    pct = 100.0 * (cur - base) / abs(base)
+    return f"({pct:+.1f}%)"
+
+
+def arms(doc):
+    """Yield (name, arm-dict) for every comparison arm in a bench doc."""
+    if not isinstance(doc, dict):
+        return
+    for arm in doc.get("ssp_arms") or []:
+        yield arm.get("app", "ssp-arm"), arm
+    for key in ("rotation_arm", "multislice_arm"):
+        arm = doc.get(key)
+        if isinstance(arm, dict):
+            yield arm.get("app", key), arm
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    try:
+        with open(sys.argv[1]) as f:
+            base = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"no usable baseline ({e}); printing current values only")
+        base = {}
+    with open(sys.argv[2]) as f:  # unreadable current run must fail CI
+        cur = json.load(f)
+
+    base_arms = dict(arms(base))
+    print(f"== fig9 bench delta: {sys.argv[2]} vs baseline {sys.argv[1]} ==")
+    scale = cur.get("scale"), cur.get("n_workers")
+    bscale = base.get("scale"), base.get("n_workers")
+    if None not in bscale and bscale != scale:
+        print(f"!! scale mismatch: baseline {bscale} vs current {scale} — "
+              "deltas are not comparable")
+    for name, arm in arms(cur):
+        print(f"-- {name}")
+        barm = base_arms.get(name, {})
+        for m in METRICS:
+            b, c = barm.get(m), arm.get(m)
+            if b is None and c is None:
+                continue
+            print(f"   {m:<26} {fmt(b):>14} -> {fmt(c):>14} {delta_str(b, c)}")
+    b, c = base.get("wall_secs"), cur.get("wall_secs")
+    print(f"-- wall_secs: {fmt(b)} -> {fmt(c)} {delta_str(b, c)}")
+
+
+if __name__ == "__main__":
+    main()

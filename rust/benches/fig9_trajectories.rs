@@ -44,6 +44,10 @@ fn arm_json(c: &ModeComparison) -> JsonValue {
         .field("mean_staleness", c.mean_staleness)
         .field("max_staleness", c.max_staleness)
         .field("wait_saved_secs", c.wait_saved_secs)
+        .field("bsp_p2p_bytes", c.bsp_p2p_bytes)
+        .field("pipelined_p2p_bytes", c.ssp_p2p_bytes)
+        .field("bsp_handoffs", c.bsp_handoffs)
+        .field("pipelined_handoffs", c.ssp_handoffs)
         .field("bsp", recorder_json(&c.bsp))
         .field("pipelined", recorder_json(&c.ssp))
         .build()
@@ -123,6 +127,41 @@ fn main() {
         rot.target
     );
 
+    // ---- multi-slice rotation: U = 2P vs U = P (LDA) ------------------
+    // Over-decomposing the vocabulary into twice as many slices as
+    // workers lets each worker sweep one queued slice while the other is
+    // still in flight: under the same rotating 4x skew, U = 2P must reach
+    // the shared LL target in strictly less virtual time than U = P at
+    // equal pipeline depth (and it moves more, smaller handoffs).
+    let ms = fig9::run_multislice_comparison(&cfg, 3, 4.0);
+    fig9::print_mode_comparison(&ms);
+    let ms_single = ms
+        .bsp_secs_to_target
+        .expect("U = P rotation reaches shared target");
+    let ms_multi = ms
+        .ssp_secs_to_target
+        .expect("U = 2P rotation reaches shared target");
+    assert!(
+        ms_multi < ms_single,
+        "multi-slice rotation U=2P ({ms_multi:.4}s) must beat U=P \
+         ({ms_single:.4}s) to LL {:.6} under a 4x rotating straggler",
+        ms.target
+    );
+    // ...and at equal rounds the finer per-slice gating must finish the
+    // whole run in strictly less virtual time (pure pipeline speed,
+    // independent of where the LL target lands)
+    let ms_single_vs = ms.bsp.points().last().unwrap().virtual_secs;
+    let ms_multi_vs = ms.ssp.points().last().unwrap().virtual_secs;
+    assert!(
+        ms_multi_vs < ms_single_vs,
+        "U=2P virtual time {ms_multi_vs:.4}s must undercut U=P \
+         {ms_single_vs:.4}s at equal rounds"
+    );
+    assert!(
+        ms.ssp_handoffs > ms.bsp_handoffs,
+        "U=2P must record more (smaller) handoffs"
+    );
+
     // ---- BENCH_fig9.json ---------------------------------------------
     let json = JsonValue::obj()
         .field("figure", "fig9")
@@ -138,6 +177,7 @@ fn main() {
         )
         .field("ssp_arms", JsonValue::Arr(arms.iter().map(arm_json).collect()))
         .field("rotation_arm", arm_json(&rot))
+        .field("multislice_arm", arm_json(&ms))
         .field("wall_secs", t.elapsed().as_secs_f64())
         .build();
     let dir = std::env::var("STRADS_BENCH_DIR")

@@ -7,7 +7,7 @@
 use strads::backend::native::{NativeLassoShard, NativeLdaShard, Token};
 use strads::backend::{LassoShard, LdaShard};
 use strads::datagen::lasso_synth::{self, LassoGenConfig};
-use strads::kvstore::SliceStore;
+use strads::kvstore::{SliceRouter, SliceStore};
 use strads::scheduler::priority::{PriorityConfig, PriorityScheduler};
 use strads::scheduler::RotationScheduler;
 use strads::util::stats::{median, time_it};
@@ -61,6 +61,34 @@ fn main() {
         }
     });
     report("kvstore checkout+checkin (16 slices)", "ops/s", 32.0, &runs);
+
+    // ---- kvstore: SliceRouter handoff ring ----------------------------
+    // take→forward round-trip per slice (the pipelined-rotation data
+    // plane) vs mailbox depth: one full ring rotation per iteration,
+    // slices sized like a 64-word × 128-topic block.  Deposits and takes
+    // are uncontended here, so this measures the protocol overhead floor
+    // (lock + version checks + slot bookkeeping), and how it scales with
+    // the ring size U.
+    for u in [4usize, 16, 64] {
+        let router = SliceRouter::new(u);
+        for a in 0..u {
+            router.seed(a, vec![0.0f32; 64 * 128], 0);
+        }
+        let mut next = vec![0u64; u];
+        let runs = time_it(10, 200, || {
+            for a in 0..u {
+                let (data, v) = router.take(a, next[a]);
+                router.forward(a, data, v + 1);
+                next[a] = v + 1;
+            }
+        });
+        report(
+            &format!("router take+forward ({u}-slot mailbox)"),
+            "handoffs/s",
+            u as f64,
+            &runs,
+        );
+    }
 
     // ---- sparse: column dot over residual ------------------------------
     let mut shard = NativeLassoShard::new(prob.x.clone(), vec![1.0; 1024]);

@@ -1,11 +1,14 @@
 //! STRADS LDA (paper §3.1, pseudocode Fig 4).
 //!
-//! schedule: the rotation scheduler assigns each worker one word slice per
-//!           round; the slice's word-topic block B_a is checked out of the
-//!           kvstore and shipped with the task (its bytes dominate the
-//!           round's traffic, exactly as in the paper's star topology).
-//! push:     the worker Gibbs-sweeps its tokens whose words lie in the
-//!           slice, mutating B_a and a *local* copy s̃ of the topic sums.
+//! schedule: the rotation scheduler assigns each worker a *queue* of word
+//!           slices per round (one when U = P, ⌈U/P⌉ when the vocabulary
+//!           is over-decomposed into U > P slices); under BSP each leg's
+//!           word-topic block B_a is checked out of the kvstore and
+//!           shipped with the task (its bytes dominate the round's
+//!           traffic, exactly as in the paper's star topology).
+//! push:     the worker Gibbs-sweeps its tokens slice by slice in queue
+//!           order, mutating each B_a and a *local* copy s̃ of the topic
+//!           sums that threads through the whole queue.
 //! pull:     B slices are checked back in; the true s is rebuilt from the
 //!           per-worker deltas; the s-error Δ (eq. 1) is measured here.
 //! sync:     the fresh s ships with the next round's tasks (the paper syncs
@@ -13,16 +16,19 @@
 //!
 //! Under `ExecutionMode::Rotation { depth }` the checkout/checkin cycle is
 //! replaced by the async p2p path: slices live in a shared
-//! [`SliceRouter`], each push takes its versioned lease from the ring
-//! predecessor and forwards the swept slice directly to the successor, and
-//! `pull` only settles lease tokens against a [`LeaseLedger`] — rotation
-//! pipelines like SSP while slice disjointness stays runtime-enforced.
+//! [`SliceRouter`], each leg takes its versioned lease from the slice's
+//! previous holder and forwards the swept slice directly to the next one,
+//! and `pull` only settles lease tokens against a [`LeaseLedger`] —
+//! rotation pipelines like SSP while slice disjointness stays
+//! runtime-enforced.  With U > P the queue is what hides the handoff gap:
+//! a worker sweeps one parked slice while another is still in flight (the
+//! engine's per-slice virtual-time model scores exactly that overlap).
 
 use crate::backend::LdaShard;
-use crate::coordinator::StradsApp;
+use crate::coordinator::{HandoffLeg, StradsApp};
 use crate::kvstore::{LeaseLedger, LeaseToken, SliceRouter, SliceStore};
 use crate::metrics::s_error;
-use crate::scheduler::RotationScheduler;
+use crate::scheduler::rotation::{self, RotationScheduler};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -42,40 +48,49 @@ pub struct BSlice {
     pub n_words: usize,
 }
 
-/// Task for one worker: its slice assignment plus the freshly synced topic
-/// sums, and the slice payload (BSP) or its routed lease (rotation).
-pub struct LdaTask {
+/// One leg of a worker's round: a single slice assignment from its queue.
+pub struct LdaTaskLeg {
     pub slice_id: usize,
     /// BSP path: the checked-out slice ships with the task.
     pub b_slice: Option<BSlice>,
+    /// Rotation-pipelined path: the version this lease consumes (the
+    /// worker takes it from the router and forwards `version + 1`).
+    pub version: Option<u64>,
+    /// Worker that holds this slice next round (handoff destination).
+    pub dest_worker: usize,
+}
+
+/// Task for one worker: its slice queue (sweep order) plus the freshly
+/// synced topic sums, and — in rotation mode — the shared handoff router.
+pub struct LdaTask {
+    pub legs: Vec<LdaTaskLeg>,
     pub s: Vec<f32>,
-    /// Rotation-pipelined path: take/forward the slice through the router
-    /// instead.
-    pub route: Option<LdaRoute>,
+    /// Rotation-pipelined path: take/forward each leg's slice through the
+    /// router instead of shipping payloads.
+    pub router: Option<Arc<SliceRouter<BSlice>>>,
 }
 
-/// Rotation leg of a task: where to receive the slice from the ring
-/// predecessor and the version this lease consumes (the worker forwards
-/// `version + 1` to the successor).
-pub struct LdaRoute {
-    pub router: Arc<SliceRouter<BSlice>>,
-    pub version: u64,
-}
-
-/// Worker partial: the worker's local s̃ (for the s-error metric), the
-/// token count swept, the number of distinct B rows touched (KV-store
-/// traffic accounting), and either the mutated slice (BSP) or the consumed
-/// lease token plus the p2p bytes forwarded (rotation).
-pub struct LdaPartial {
+/// One leg of a worker partial: mirrors [`LdaTaskLeg`] after the sweep.
+pub struct LdaPartialLeg {
     pub slice_id: usize,
     /// BSP path: the mutated slice returns through the coordinator.
     pub b_slice: Option<BSlice>,
     /// Rotation path: the lease this sweep consumed (fork detection).
     pub lease: Option<LeaseToken>,
-    /// Rotation path: slice bytes forwarded to the ring successor.
+    /// Rotation path: slice bytes forwarded to the next holder.
     pub handoff_bytes: usize,
-    pub s_local: Vec<f32>,
+    /// Worker the slice was forwarded to.
+    pub dest_worker: usize,
+    /// Tokens sampled in this leg (the engine's per-leg compute weight).
     pub n_sampled: usize,
+}
+
+/// Worker partial: the per-leg results in sweep order, the worker's final
+/// local s̃ (for the s-error metric; threaded through all legs), and the
+/// number of distinct B rows touched (KV-store traffic accounting).
+pub struct LdaPartial {
+    pub legs: Vec<LdaPartialLeg>,
+    pub s_local: Vec<f32>,
     pub touched_words: usize,
     pub n_topics: usize,
 }
@@ -102,6 +117,8 @@ pub struct LdaApp {
     n_topics: usize,
     vocab: usize,
     n_workers: usize,
+    /// Rotation slice count U (≥ `n_workers`).
+    n_slices: usize,
     alpha: f32,
     gamma: f32,
     n_tokens: usize,
@@ -117,25 +134,30 @@ pub struct LdaApp {
 }
 
 impl LdaApp {
-    /// `slices` are the initial word-topic blocks (one per worker; the
-    /// word→slice map is the builder's concern — [`setup::build`] uses the
-    /// frequency-aware split and installs it via
-    /// [`LdaApp::set_word_map`], the striped `w % U` layout needs none);
-    /// `s` their column sums; `n_tokens` the corpus token count (for Δ_t
-    /// normalization).
+    /// `slices` are the initial word-topic blocks — one per rotation slice,
+    /// U ≥ `cfg.n_workers` of them (the word→slice map is the builder's
+    /// concern — [`setup::build_sliced`] uses the frequency-aware split and
+    /// installs it via [`LdaApp::set_word_map`], the striped `w % U` layout
+    /// needs none); `s` their column sums; `n_tokens` the corpus token
+    /// count (for Δ_t normalization).
     pub fn new(
         cfg: LdaConfig,
         slices: Vec<BSlice>,
         s: Vec<f32>,
         n_tokens: usize,
     ) -> Self {
-        assert_eq!(slices.len(), cfg.n_workers);
+        let n_slices = slices.len();
+        assert!(
+            n_slices >= cfg.n_workers,
+            "need at least one slice per worker ({n_slices} < {})",
+            cfg.n_workers
+        );
         assert_eq!(s.len(), cfg.n_topics);
         LdaApp {
-            sched: RotationScheduler::new(cfg.n_workers),
+            sched: RotationScheduler::with_workers(n_slices, cfg.n_workers),
             slices: SliceStore::new(slices),
             router: None,
-            ledger: LeaseLedger::new(cfg.n_workers),
+            ledger: LeaseLedger::new(n_slices),
             inflight_s: HashMap::new(),
             word_map: Vec::new(),
             s_snapshot: s.clone(),
@@ -143,6 +165,7 @@ impl LdaApp {
             n_topics: cfg.n_topics,
             vocab: cfg.vocab,
             n_workers: cfg.n_workers,
+            n_slices,
             alpha: cfg.alpha,
             gamma: cfg.gamma,
             n_tokens,
@@ -158,6 +181,14 @@ impl LdaApp {
     pub fn set_s_staleness(&mut self, staleness: u64) {
         assert!(staleness >= 1);
         self.s_staleness = staleness;
+    }
+
+    /// Install a skew-aware ring placement (see
+    /// [`crate::scheduler::rotation::skew_aware_placement`]): a
+    /// permutation of the slice ids deciding which slice starts at which
+    /// virtual ring position.  Must be called before the first round.
+    pub fn set_ring_placement(&mut self, placement: Vec<usize>) {
+        self.sched.set_placement(placement);
     }
 
     /// One slice's contribution to the word-topic log-likelihood.
@@ -213,6 +244,11 @@ impl LdaApp {
         self.n_workers
     }
 
+    /// Rotation slice count U (≥ [`LdaApp::n_workers`]).
+    pub fn n_slices(&self) -> usize {
+        self.n_slices
+    }
+
     pub fn alpha(&self) -> f32 {
         self.alpha
     }
@@ -232,7 +268,7 @@ impl LdaApp {
             .get(slice_id)
             .and_then(|m| m.get(local))
             .map(|&w| w as usize)
-            .unwrap_or(local * self.n_workers + slice_id)
+            .unwrap_or(local * self.n_slices + slice_id)
     }
 }
 
@@ -243,87 +279,97 @@ impl StradsApp for LdaApp {
     type WorkerState = Box<dyn LdaShard>;
 
     fn schedule(&mut self, round: u64) -> Vec<LdaTask> {
-        let assignment = self.sched.next_round();
-        if let Some(router) = &self.router {
-            // pipelined rotation: grant versioned leases; the slices move
-            // worker→worker, only metadata + the synced s ship from here
-            let mut seen = vec![false; assignment.len()];
-            let mut tasks = Vec::with_capacity(assignment.len());
-            for slice_id in assignment {
+        let u = self.n_slices;
+        let p_workers = self.n_workers;
+        let queues = self.sched.next_round_queues();
+        // per-round disjointness is what licenses parallel sweeps
+        let mut seen = vec![false; u];
+        let mut tasks = Vec::with_capacity(queues.len());
+        for (p, queue) in queues.into_iter().enumerate() {
+            let mut legs = Vec::with_capacity(queue.len());
+            for (j, slice_id) in queue.into_iter().enumerate() {
                 assert!(
                     !seen[slice_id],
                     "slice {slice_id} assigned twice in one round"
                 );
                 seen[slice_id] = true;
-                let version = self.ledger.grant(slice_id);
-                tasks.push(LdaTask {
-                    slice_id,
-                    b_slice: None,
-                    s: self.s_snapshot.clone(),
-                    route: Some(LdaRoute { router: Arc::clone(router), version }),
-                });
+                // the leg occupies virtual ring position p + j·P this
+                // round; the slice lands on that position's ring successor
+                let dest_worker = self.sched.next_holder(p + j * p_workers);
+                let (b_slice, version) = match &self.router {
+                    // pipelined rotation: grant a versioned lease; the
+                    // slice moves worker→worker, only metadata + the
+                    // synced s ship from here
+                    Some(_) => (None, Some(self.ledger.grant(slice_id))),
+                    None => (Some(self.slices.checkout(slice_id).data), None),
+                };
+                legs.push(LdaTaskLeg { slice_id, b_slice, version, dest_worker });
             }
-            self.inflight_s.insert(round, self.s_snapshot.clone());
-            tasks
-        } else {
-            assignment
-                .into_iter()
-                .map(|slice_id| {
-                    let lease = self.slices.checkout(slice_id);
-                    LdaTask {
-                        slice_id,
-                        b_slice: Some(lease.data),
-                        s: self.s_snapshot.clone(),
-                        route: None,
-                    }
-                })
-                .collect()
+            tasks.push(LdaTask {
+                legs,
+                s: self.s_snapshot.clone(),
+                router: self.router.as_ref().map(Arc::clone),
+            });
         }
+        if self.router.is_some() {
+            self.inflight_s.insert(round, self.s_snapshot.clone());
+        }
+        tasks
     }
 
     fn push(ws: &mut Self::WorkerState, task: LdaTask) -> LdaPartial {
-        let LdaTask { slice_id, b_slice, s, route } = task;
+        let LdaTask { legs, s, router } = task;
         let n_topics = s.len();
-        match route {
-            Some(LdaRoute { router, version }) => {
-                // receive the slice from the ring predecessor (blocks
-                // until exactly this version was forwarded), sweep, then
-                // hand it straight on to the successor.  The reported
-                // lease carries the version the *router* handed over, so
-                // the engine's collect-time cross-check against the
-                // granted token spans both layers.
-                let (mut data, consumed) = router.take(slice_id, version);
-                let (s_local, n_sampled, touched_words) =
-                    ws.gibbs_slice(slice_id, &mut data.counts, &s);
-                let handoff_bytes = data.counts.len() * 4;
-                router.forward(slice_id, data, consumed + 1);
-                LdaPartial {
-                    slice_id,
-                    b_slice: None,
-                    lease: Some(LeaseToken { slice_id, version: consumed }),
-                    handoff_bytes,
-                    s_local,
-                    n_sampled,
-                    touched_words,
-                    n_topics,
+        // the worker's local s̃ threads through the queue: leg j+1 samples
+        // against the sums leg j left behind
+        let mut s_running = s;
+        let mut out_legs = Vec::with_capacity(legs.len());
+        let mut touched_words = 0usize;
+        for leg in legs {
+            let LdaTaskLeg { slice_id, b_slice, version, dest_worker } = leg;
+            match (&router, version, b_slice) {
+                (Some(router), Some(version), None) => {
+                    // receive the slice from its previous holder (blocks
+                    // until exactly this version was forwarded), sweep,
+                    // then hand it straight on to the next holder.  The
+                    // reported lease carries the version the *router*
+                    // handed over, so the engine's collect-time
+                    // cross-check against the granted token spans both
+                    // layers.
+                    let (mut data, consumed) = router.take(slice_id, version);
+                    let (s_local, n_sampled, touched) =
+                        ws.gibbs_slice(slice_id, &mut data.counts, &s_running);
+                    let handoff_bytes = data.counts.len() * 4;
+                    router.forward(slice_id, data, consumed + 1);
+                    s_running = s_local;
+                    touched_words += touched;
+                    out_legs.push(LdaPartialLeg {
+                        slice_id,
+                        b_slice: None,
+                        lease: Some(LeaseToken { slice_id, version: consumed }),
+                        handoff_bytes,
+                        dest_worker,
+                        n_sampled,
+                    });
                 }
-            }
-            None => {
-                let mut data = b_slice.expect("BSP task carries its slice");
-                let (s_local, n_sampled, touched_words) =
-                    ws.gibbs_slice(slice_id, &mut data.counts, &s);
-                LdaPartial {
-                    slice_id,
-                    b_slice: Some(data),
-                    lease: None,
-                    handoff_bytes: 0,
-                    s_local,
-                    n_sampled,
-                    touched_words,
-                    n_topics,
+                (None, None, Some(mut data)) => {
+                    let (s_local, n_sampled, touched) =
+                        ws.gibbs_slice(slice_id, &mut data.counts, &s_running);
+                    s_running = s_local;
+                    touched_words += touched;
+                    out_legs.push(LdaPartialLeg {
+                        slice_id,
+                        b_slice: Some(data),
+                        lease: None,
+                        handoff_bytes: 0,
+                        dest_worker,
+                        n_sampled,
+                    });
                 }
+                _ => panic!("task leg mixes the BSP and routed forms"),
             }
         }
+        LdaPartial { legs: out_legs, s_local: s_running, touched_words, n_topics }
     }
 
     fn pull(&mut self, round: u64, partials: Vec<LdaPartial>) -> Option<Vec<f32>> {
@@ -344,23 +390,25 @@ impl StradsApp for LdaApp {
         let mut s_new = self.s.clone();
         let mut local_copies = Vec::with_capacity(partials.len());
         for part in partials {
-            let LdaPartial { slice_id, b_slice, lease, s_local, .. } = part;
+            let LdaPartial { legs, s_local, .. } = part;
             for k in 0..self.n_topics {
                 s_new[k] += s_local[k] - baseline[k];
             }
-            match (b_slice, lease) {
-                (Some(data), _) => {
-                    // BSP checkin: rebuild a lease-shaped return
-                    let lease = crate::kvstore::SliceLease {
-                        slice_id,
-                        data,
-                        version: self.slices.version(slice_id),
-                    };
-                    self.slices.checkin(lease);
-                }
-                (None, Some(token)) => self.ledger.settle(&token),
-                (None, None) => {
-                    panic!("partial carries neither a slice nor a lease")
+            for leg in legs {
+                match (leg.b_slice, leg.lease) {
+                    (Some(data), _) => {
+                        // BSP checkin: rebuild a lease-shaped return
+                        let lease = crate::kvstore::SliceLease {
+                            slice_id: leg.slice_id,
+                            data,
+                            version: self.slices.version(leg.slice_id),
+                        };
+                        self.slices.checkin(lease);
+                    }
+                    (None, Some(token)) => self.ledger.settle(&token),
+                    (None, None) => {
+                        panic!("partial leg carries neither a slice nor a lease")
+                    }
                 }
             }
             local_copies.push(s_local);
@@ -392,20 +440,20 @@ impl StradsApp for LdaApp {
     fn task_bytes(t: &LdaTask) -> usize {
         // B rows are fetched lazily from the partitioned KV store as the
         // worker samples (charged in partial_bytes); the scheduled task
-        // itself carries only the slice id and the synced s.
-        t.s.len() * 4 + 8
+        // itself carries only the slice queue and the synced s.
+        t.s.len() * 4 + 8 * t.legs.len().max(1)
     }
 
     fn partial_bytes(p: &LdaPartial) -> usize {
-        if p.b_slice.is_some() {
+        if p.legs.iter().any(|l| l.b_slice.is_some()) {
             // BSP KV-store traffic for the round: each distinct word row
             // touched is fetched once and written back once (2×K×4
             // bytes), plus s̃.
             p.touched_words * p.n_topics * 4 * 2 + p.s_local.len() * 4 + 16
         } else {
-            // rotation: only the doc stats + lease token ride the hub; the
-            // slice bytes are charged as the p2p handoff (handoff_bytes)
-            p.s_local.len() * 4 + 32
+            // rotation: only the doc stats + lease tokens ride the hub;
+            // the slice bytes are charged as the p2p handoffs
+            p.s_local.len() * 4 + 32 * p.legs.len().max(1)
         }
     }
 
@@ -436,6 +484,10 @@ impl StradsApp for LdaApp {
         true
     }
 
+    fn n_rotation_slices(&self) -> usize {
+        self.n_slices
+    }
+
     fn begin_rotation(&mut self, _depth: u64) {
         assert!(self.router.is_none(), "rotation mode already active");
         let router = Arc::new(SliceRouter::new(self.slices.n_slices()));
@@ -457,18 +509,30 @@ impl StradsApp for LdaApp {
         self.inflight_s.clear();
     }
 
-    fn task_lease(t: &LdaTask) -> Option<LeaseToken> {
-        t.route
-            .as_ref()
-            .map(|r| LeaseToken { slice_id: t.slice_id, version: r.version })
+    fn task_leases(t: &LdaTask) -> Vec<LeaseToken> {
+        t.legs
+            .iter()
+            .filter_map(|l| {
+                l.version.map(|version| LeaseToken {
+                    slice_id: l.slice_id,
+                    version,
+                })
+            })
+            .collect()
     }
 
-    fn partial_lease(p: &LdaPartial) -> Option<LeaseToken> {
-        p.lease
-    }
-
-    fn handoff_bytes(p: &LdaPartial) -> usize {
-        p.handoff_bytes
+    fn partial_legs(p: &LdaPartial) -> Vec<HandoffLeg> {
+        p.legs
+            .iter()
+            .filter_map(|l| {
+                l.lease.map(|token| HandoffLeg {
+                    token,
+                    dest_worker: l.dest_worker,
+                    bytes: l.handoff_bytes,
+                    weight: l.n_sampled as f64,
+                })
+            })
+            .collect()
     }
 }
 
@@ -485,12 +549,9 @@ pub mod setup {
         pub shards: Vec<Box<dyn LdaShard>>,
     }
 
-    /// Build slices + worker shards from a corpus: documents are striped
-    /// over workers, words are partitioned into U rotation slices by the
-    /// frequency-weighted split
-    /// ([`crate::scheduler::RotationScheduler::partition_words_by_freq`]
-    /// — per-round compute tracks a slice's token mass, so the Zipf head
-    /// must spread across slices), and initial topics are drawn uniformly.
+    /// Build slices + worker shards from a corpus with U = `n_workers`
+    /// rotation slices (the paper's one-slice-per-worker layout); see
+    /// [`build_sliced`] for the over-decomposed U > P form.
     pub fn build(
         corpus: &Corpus,
         k: usize,
@@ -499,8 +560,33 @@ pub mod setup {
         gamma: f32,
         seed: u64,
     ) -> LdaSetup {
-        let u = n_workers;
+        build_sliced(corpus, k, n_workers, n_workers, None, alpha, gamma, seed)
+    }
+
+    /// Build slices + worker shards from a corpus: documents are striped
+    /// over workers, words are partitioned into `n_slices` ≥ `n_workers`
+    /// rotation slices by the frequency-weighted split
+    /// ([`crate::scheduler::RotationScheduler::partition_words_by_freq`]
+    /// — per-round compute tracks a slice's token mass, so the Zipf head
+    /// must spread across slices), and initial topics are drawn uniformly.
+    /// When `worker_speeds` is given (relative speeds, higher = faster —
+    /// see `StragglerModel::mean_speeds`), the ring placement is
+    /// skew-aware: cohort masses balanced, heavy slices starting on fast
+    /// workers ([`crate::scheduler::rotation::skew_aware_placement`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_sliced(
+        corpus: &Corpus,
+        k: usize,
+        n_workers: usize,
+        n_slices: usize,
+        worker_speeds: Option<&[f64]>,
+        alpha: f32,
+        gamma: f32,
+        seed: u64,
+    ) -> LdaSetup {
+        let u = n_slices;
         let v = corpus.vocab;
+        assert!(u >= n_workers, "fewer slices than workers");
         assert!(v >= u, "vocab smaller than the slice count");
         let mut rng = Rng::new(seed);
 
@@ -567,6 +653,16 @@ pub mod setup {
             n_tokens,
         );
         app.set_word_map(word_map);
+        if let Some(speeds) = worker_speeds {
+            // slice token masses drive the skew-aware ring order
+            let mut masses = vec![0u64; u];
+            for (w, &f) in freqs.iter().enumerate() {
+                masses[slice_of[w]] += f;
+            }
+            app.set_ring_placement(rotation::skew_aware_placement(
+                &masses, speeds,
+            ));
+        }
         let shards: Vec<Box<dyn LdaShard>> = per_worker_tokens
             .into_iter()
             .enumerate()
@@ -714,6 +810,102 @@ mod tests {
     }
 
     #[test]
+    fn multislice_rotation_runs_and_conserves_counts() {
+        // U = 2P: every worker sweeps a two-slice queue each round; the
+        // handoff ring carries 8 slices over 4 workers.  One handoff per
+        // slice per round must hit the p2p accounting, token mass is
+        // conserved, and each slice's version chain advances once per
+        // round.
+        let corpus = lda_corpus::generate(&CorpusConfig {
+            n_docs: 120,
+            vocab: 400,
+            doc_len_mean: 30,
+            n_topics: 5,
+            seed: 9,
+            ..Default::default()
+        });
+        let (workers, u) = (4usize, 8usize);
+        let rounds = 16u64;
+        let s = setup::build_sliced(
+            &corpus, 8, workers, u, Some(&[1.0; 4]), 0.1, 0.01, 9,
+        );
+        assert_eq!(s.app.n_slices(), u);
+        let cfg = RunConfig {
+            max_rounds: rounds,
+            eval_every: 4,
+            mode: crate::coordinator::ExecutionMode::Rotation { depth: 3 },
+            label: "lda-rot-u2p".into(),
+            ..Default::default()
+        };
+        let mut e = StradsEngine::new(s.app, s.shards, &cfg);
+        let total0: f32 = e.app().s.iter().sum();
+        let res = e.run(&cfg);
+        assert_eq!(res.rounds_run, rounds);
+        assert!(res.total_p2p_bytes > 0);
+        // every slice is forwarded once per round (U handoffs per round),
+        // minus the self-transfers the network model skips; with U = 2P
+        // each round has at least U - P distinct-endpoint handoffs
+        assert!(
+            res.total_p2p_msgs >= rounds * (u - workers) as u64,
+            "only {} handoffs recorded",
+            res.total_p2p_msgs
+        );
+        let app = e.app();
+        for a in 0..app.slices.n_slices() {
+            assert!(app.slices.peek(a).is_some());
+            assert_eq!(app.slices.version(a), rounds);
+        }
+        let total1: f32 = app.s.iter().sum();
+        assert!((total0 - total1).abs() < 1e-2);
+        let first = res.recorder.points()[0].objective;
+        assert!(res.final_objective > first);
+    }
+
+    #[test]
+    fn u_equals_p_schedule_is_the_single_slice_stream() {
+        // the app-level half of the "U = P is bit-identical to the PR-2
+        // single-slice rotation" regression (the scheduler-level half
+        // lives in scheduler::rotation): with U = P every task must be a
+        // single-leg checkout following the paper's `(a + C) % U`
+        // assignment, with the same s snapshot the old path shipped —
+        // push/pull then see inputs identical to the one-slice code, so
+        // trajectories are reproduced bit-exactly (locked end-to-end by
+        // rotation_depth1_matches_bsp_exactly in tests/).
+        let corpus = lda_corpus::generate(&CorpusConfig {
+            n_docs: 80,
+            vocab: 300,
+            doc_len_mean: 25,
+            n_topics: 4,
+            seed: 24,
+            ..Default::default()
+        });
+        let mut s = setup::build(&corpus, 6, 4, 0.1, 0.01, 24);
+        let u = s.app.n_slices();
+        assert_eq!(u, s.app.n_workers());
+        for c in 0..3 * u as u64 {
+            let tasks = s.app.schedule(c);
+            for (w, task) in tasks.iter().enumerate() {
+                assert_eq!(task.legs.len(), 1, "U = P tasks are single-leg");
+                assert_eq!(task.legs[0].slice_id, (w + c as usize) % u);
+                assert!(task.legs[0].b_slice.is_some(), "BSP leg ships B");
+                assert_eq!(task.s, s.app.s_snapshot);
+            }
+            // return the checked-out slices so the next round can lease
+            // them again (pull's checkin path, minus the delta bookkeeping)
+            for task in tasks {
+                for leg in task.legs {
+                    let lease = crate::kvstore::SliceLease {
+                        slice_id: leg.slice_id,
+                        data: leg.b_slice.expect("BSP leg ships its slice"),
+                        version: s.app.slices.version(leg.slice_id),
+                    };
+                    s.app.slices.checkin(lease);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn global_word_roundtrips_the_frequency_partition() {
         let corpus = lda_corpus::generate(&CorpusConfig {
             n_docs: 80,
@@ -726,7 +918,7 @@ mod tests {
         let s = setup::build(&corpus, 4, 3, 0.1, 0.01, 5);
         // every corpus word appears exactly once across the slice maps
         let mut seen = vec![false; corpus.vocab];
-        for a in 0..s.app.n_workers() {
+        for a in 0..s.app.n_slices() {
             let n_words = s.app.peek_slice(a).unwrap().n_words;
             for local in 0..n_words {
                 let w = s.app.global_word(a, local);

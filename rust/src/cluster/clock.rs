@@ -42,6 +42,23 @@ impl StragglerModel {
         }
     }
 
+    /// Mean relative speed per worker over the first `horizon` rounds
+    /// (1 / mean multiplier; higher = faster) — the skew-aware ring
+    /// placement's summary view of the cluster
+    /// ([`crate::scheduler::rotation::skew_aware_placement`]).  `None` is
+    /// all-ones; `Rotating` averages out to uniform over a full period;
+    /// `Fixed` reports the persistent skew the placement can exploit.
+    pub fn mean_speeds(&self, n_workers: usize, horizon: u64) -> Vec<f64> {
+        let h = horizon.max(1);
+        (0..n_workers)
+            .map(|p| {
+                let total: f64 =
+                    (0..h).map(|r| self.multiplier(p, r, n_workers)).sum();
+                h as f64 / total
+            })
+            .collect()
+    }
+
     /// Scale measured per-worker seconds in place.  `None` is a strict
     /// no-op so default runs stay bit-identical.
     pub fn scale(&self, secs: &mut [f64], round: u64) {
@@ -139,6 +156,18 @@ mod tests {
         assert_eq!(a, [1.0, 4.0, 1.0]);
         assert_eq!(rot.multiplier(1, 4, 3), 4.0); // 4 % 3 == 1
         assert_eq!(rot.multiplier(0, 4, 3), 1.0);
+    }
+
+    #[test]
+    fn mean_speeds_summarize_the_skew() {
+        assert_eq!(StragglerModel::None.mean_speeds(3, 8), vec![1.0; 3]);
+        let fixed = StragglerModel::Fixed(vec![4.0, 1.0]);
+        assert_eq!(fixed.mean_speeds(2, 5), vec![0.25, 1.0]);
+        // a rotating straggler is uniform over a full period
+        let rot = StragglerModel::Rotating { factor: 4.0 };
+        let s = rot.mean_speeds(2, 2);
+        assert!((s[0] - s[1]).abs() < 1e-12);
+        assert!((s[0] - 2.0 / 5.0).abs() < 1e-12); // 2 / (1 + 4)
     }
 
     #[test]

@@ -66,6 +66,10 @@ pub struct NetworkModel {
     /// rotation slice handoffs and KV-shard serving, which never cross
     /// the coordinator hub.
     total_p2p_bytes: u64,
+    /// Lifetime count of worker↔worker transfers (rotation slice
+    /// handoffs): one per [`NetworkModel::send_p2p`] between distinct
+    /// endpoints.
+    total_p2p_msgs: u64,
 }
 
 impl NetworkModel {
@@ -79,6 +83,7 @@ impl NetworkModel {
             total_bytes: 0,
             total_msgs: 0,
             total_p2p_bytes: 0,
+            total_p2p_msgs: 0,
         }
     }
 
@@ -117,6 +122,7 @@ impl NetworkModel {
         self.total_bytes += bytes as u64; // one payload on the wire
         self.total_p2p_bytes += bytes as u64;
         self.total_msgs += 1;
+        self.total_p2p_msgs += 1;
     }
 
     /// Modelled communication time for the round, then reset round
@@ -155,6 +161,10 @@ impl NetworkModel {
     /// Lifetime worker↔worker bytes (hub-bypassing traffic).
     pub fn total_p2p_bytes(&self) -> u64 {
         self.total_p2p_bytes
+    }
+    /// Lifetime worker↔worker transfer count (rotation slice handoffs).
+    pub fn total_p2p_msgs(&self) -> u64 {
+        self.total_p2p_msgs
     }
 }
 
@@ -218,6 +228,7 @@ mod tests {
         // the payload itself is counted once, and tracked as p2p traffic
         assert_eq!(n.total_bytes(), 2_000_000);
         assert_eq!(n.total_p2p_bytes(), 1_000_000);
+        assert_eq!(n.total_p2p_msgs(), 1);
 
         // hub-bound check: p2p bytes never serialize through the hub
         let mut n = NetworkModel::new(
@@ -235,6 +246,7 @@ mod tests {
         n.send_p2p(0, 0, 123_456);
         assert_eq!(n.round_time_and_reset(), 0.0);
         assert_eq!(n.total_bytes(), 0);
+        assert_eq!(n.total_p2p_msgs(), 0);
     }
 
     #[test]

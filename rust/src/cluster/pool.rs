@@ -259,20 +259,23 @@ impl<S: Send + 'static> WorkerPool<S> {
 pub struct PendingRound<R> {
     rrx: mpsc::Receiver<(usize, R, f64)>,
     n_workers: usize,
-    /// Rotation mode: the lease each worker's in-flight task consumes
-    /// (index-aligned with workers; empty outside rotation).  The engine
-    /// cross-checks these against the leases the collected partials report.
-    leases: Vec<LeaseToken>,
+    /// Rotation mode: the leases each worker's in-flight task consumes, in
+    /// sweep order (index-aligned with workers; one lease per slice of the
+    /// worker's queue — several when U > P slices rotate over P workers;
+    /// empty outside rotation).  The engine cross-checks these against the
+    /// legs the collected partials report.
+    leases: Vec<Vec<LeaseToken>>,
 }
 
 impl<R> PendingRound<R> {
-    /// Attach the in-flight lease tokens (one per worker, index-aligned).
-    pub fn set_leases(&mut self, leases: Vec<LeaseToken>) {
+    /// Attach the in-flight lease tokens (one queue per worker,
+    /// index-aligned, sweep order).
+    pub fn set_leases(&mut self, leases: Vec<Vec<LeaseToken>>) {
         self.leases = leases;
     }
 
     /// The in-flight lease tokens recorded at dispatch.
-    pub fn leases(&self) -> &[LeaseToken] {
+    pub fn leases(&self) -> &[Vec<LeaseToken>] {
         &self.leases
     }
 

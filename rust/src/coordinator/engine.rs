@@ -31,10 +31,16 @@
 //!   slices (LDA's word-topic table) opt in via
 //!   [`StradsApp::supports_rotation`]: slices hand off worker→worker
 //!   through a [`crate::kvstore::SliceRouter`] ring, the coordinator
-//!   tracks only lease tokens, and up to `d` rounds pipeline.  The
-//!   exclusive-lease invariant survives without a barrier — the router's
-//!   per-slice version chain panics on any fork, and every collect
-//!   cross-checks the consumed leases against the dispatched ones.
+//!   tracks only lease tokens, and up to `d` rounds pipeline.  The ring
+//!   may carry **U ≥ P slices over P workers** (slice over-decomposition):
+//!   each worker's task then covers a *queue* of slices, swept in order,
+//!   and the virtual-time model gates each slice's sweep on **that
+//!   slice's** previous holder — so a worker samples one queued slice
+//!   while another is still in flight, hiding the handoff gap entirely.
+//!   The exclusive-lease invariant survives without a barrier — the
+//!   router's per-slice version chain panics on any fork, and every
+//!   collect cross-checks the consumed leases against the dispatched
+//!   ones.
 //!
 //! The engine owns the virtual cluster clock, making reported scaling
 //! behaviour independent of the physical core count of the build machine.
@@ -48,6 +54,28 @@ use crate::metrics::{Recorder, SspStats};
 use crate::util::stats::Stopwatch;
 use std::cell::RefCell;
 use std::collections::VecDeque;
+
+/// One rotation handoff reported by a collected partial: the lease the
+/// worker consumed for one slice of its queue, where the swept slice went,
+/// and the leg's share of the worker's measured compute.  Legs are
+/// reported in sweep order; the engine cross-checks their tokens against
+/// the leases granted at dispatch and replays them through the per-slice
+/// virtual-time model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HandoffLeg {
+    /// The lease this leg consumed (slice id + version).
+    pub token: LeaseToken,
+    /// Worker that receives the forwarded slice (the slice's holder next
+    /// round).
+    pub dest_worker: usize,
+    /// Slice bytes forwarded p2p to `dest_worker` (charged to both
+    /// endpoints' links, never the hub).
+    pub bytes: usize,
+    /// Relative compute weight of this leg within its worker's round
+    /// (e.g. tokens sampled); the engine normalizes weights per worker to
+    /// apportion the measured seconds across the queue.
+    pub weight: f64,
+}
 
 /// A STRADS application: the user-defined primitives (paper Fig 2).
 ///
@@ -137,37 +165,39 @@ pub trait StradsApp {
     /// (the pipeline is already drained when this is called).
     fn end_rotation(&mut self) {}
 
-    /// Rotation mode: the lease this task grants (None otherwise).
-    fn task_lease(_task: &Self::Task) -> Option<LeaseToken> {
-        None
-    }
-
-    /// Rotation mode: the lease this partial's worker consumed (None
-    /// otherwise).
-    fn partial_lease(_partial: &Self::Partial) -> Option<LeaseToken> {
-        None
-    }
-
-    /// Bytes this partial's worker forwarded to the ring successor on
-    /// finishing its task (the rotation slice handoff; 0 outside rotation
-    /// mode).  Charged to both endpoints' links, never the hub.
-    fn handoff_bytes(_partial: &Self::Partial) -> usize {
+    /// Rotation mode: the number of slices on the handoff ring (U ≥
+    /// workers).  The engine sizes its per-slice availability timeline
+    /// with it; rotation-supporting apps must override.
+    fn n_rotation_slices(&self) -> usize {
         0
     }
 
-    /// Rotation mode: the worker that receives `worker`'s slice next round
-    /// — where the engine charges the handoff bytes.  The default is
-    /// `RotationScheduler`'s orientation
-    /// ([`crate::scheduler::rotation::ring_successor`]); an app rotating
-    /// the other way must override this *and*
-    /// [`StradsApp::handoff_source`] together.
+    /// Rotation mode: the leases this task grants, one per slice of the
+    /// worker's queue in sweep order (empty otherwise).
+    fn task_leases(_task: &Self::Task) -> Vec<LeaseToken> {
+        Vec::new()
+    }
+
+    /// Rotation mode: the handoff legs this partial's worker performed, in
+    /// sweep order (empty otherwise).  Tokens must match
+    /// [`StradsApp::task_leases`] exactly — any mismatch is a fork.
+    fn partial_legs(_partial: &Self::Partial) -> Vec<HandoffLeg> {
+        Vec::new()
+    }
+
+    /// Generic p2p payloads ([`StradsApp::p2p_payloads`]): the worker that
+    /// receives `worker`'s payload ring-wise.  The single source of truth
+    /// for the orientation is
+    /// [`crate::scheduler::rotation::ring_successor`] — an app rotating
+    /// the other way must override this *and* [`StradsApp::handoff_source`]
+    /// together.  (Rotation-pipelined handoffs carry their destination per
+    /// leg instead; see [`HandoffLeg::dest_worker`].)
     fn handoff_successor(worker: usize, n_workers: usize) -> usize {
         crate::scheduler::rotation::ring_successor(worker, n_workers)
     }
 
-    /// Rotation mode: the worker whose previous-round finish gates
-    /// `worker`'s next start (the slice arrives from there).  Must be the
-    /// inverse permutation of [`StradsApp::handoff_successor`]
+    /// Inverse permutation of [`StradsApp::handoff_successor`]: the worker
+    /// whose payload `worker` receives
     /// (default: [`crate::scheduler::rotation::ring_source`]).
     fn handoff_source(worker: usize, n_workers: usize) -> usize {
         crate::scheduler::rotation::ring_source(worker, n_workers)
@@ -246,6 +276,8 @@ pub struct RunResult {
     /// Bytes that moved worker↔worker (hub-bypassing: rotation handoffs,
     /// KV-shard serving) — a subset of `total_network_bytes`.
     pub total_p2p_bytes: u64,
+    /// Count of worker↔worker transfers (one per rotation slice handoff).
+    pub total_p2p_msgs: u64,
     /// Set if a worker exceeded the modelled memory capacity.
     pub oom: Option<String>,
     /// Pipeline accounting (observed staleness, straggler wait hidden) for
@@ -273,15 +305,17 @@ struct SspClockState {
 }
 
 /// Mutable virtual-time state for the rotation pipeline: like
-/// [`SspClockState`] plus the previous round's per-worker finish times,
-/// which gate when the ring handoff makes a slice available downstream.
+/// [`SspClockState`] plus a **per-slice** availability timeline, which
+/// gates when each slice's ring handoff lands downstream.
 struct RotClockState {
     coord_now: f64,
     worker_free: Vec<f64>,
-    /// Finish times of the most recently collected round (worker-indexed):
-    /// worker `p`'s next task cannot start before its ring source
-    /// (`StradsApp::handoff_source`) forwarded the slice.
-    prev_finish: Vec<f64>,
+    /// Per-slice availability (slice-indexed): when the slice's most
+    /// recent sweep finished — i.e. when its holder forwarded it.  A
+    /// worker's sweep of slice `a` cannot start before `slice_ready[a]`;
+    /// other slices of the same queue are *not* gated on it, which is what
+    /// lets a U > P worker sample one slice while another is in flight.
+    slice_ready: Vec<f64>,
 }
 
 /// The coordinator: owns the app, the worker pool, and all accounting.
@@ -324,14 +358,17 @@ impl<A: StradsApp> Engine<A> {
     }
 
     /// Charge one round's task payloads to the network model.  Rotation
-    /// (p2p) payloads travel the worker ring: the slice worker `p` receives
-    /// was held by its right neighbour `(p+1) % n` last round, so both
-    /// endpoints' links are charged.
+    /// (p2p) payloads travel the worker ring: the payload worker `p`
+    /// receives was held by its ring source last round, so both endpoints'
+    /// links are charged.  The orientation comes from the app's
+    /// [`StradsApp::handoff_source`] (default:
+    /// [`crate::scheduler::rotation::ring_source`] — one source of truth).
     fn charge_task_bytes(&mut self, tasks: &[A::Task]) {
         let n = self.pool.n_workers();
         for (p, t) in tasks.iter().enumerate() {
             if A::p2p_payloads() {
-                self.network.send_p2p((p + 1) % n, p, A::task_bytes(t));
+                self.network
+                    .send_p2p(A::handoff_source(p, n), p, A::task_bytes(t));
             } else {
                 self.network.send_down(p, A::task_bytes(t));
             }
@@ -339,11 +376,15 @@ impl<A: StradsApp> Engine<A> {
     }
 
     /// Charge one worker's partial payload (p2p partials pass ring-wise to
-    /// the left neighbour — the slice's next holder).
+    /// [`StradsApp::handoff_successor`] — the payload's next holder).
     fn charge_partial_bytes(&mut self, p: usize, partial: &A::Partial) {
         let n = self.pool.n_workers();
         if A::p2p_payloads() {
-            self.network.send_p2p(p, (p + n - 1) % n, A::partial_bytes(partial));
+            self.network.send_p2p(
+                p,
+                A::handoff_successor(p, n),
+                A::partial_bytes(partial),
+            );
         } else {
             self.network.send_up(p, A::partial_bytes(partial));
         }
@@ -357,8 +398,8 @@ impl<A: StradsApp> Engine<A> {
     }
 
     /// `routed`: rotation mode — tasks carry only scheduling metadata plus
-    /// synced state (hub traffic; the slice payload moves worker→worker at
-    /// handoff time), and each task's lease token is recorded on the
+    /// synced state (hub traffic; the slice payloads move worker→worker at
+    /// handoff time), and each task's lease tokens are recorded on the
     /// pending round for collect-time verification.
     fn dispatch_round_inner(
         &mut self,
@@ -376,9 +417,12 @@ impl<A: StradsApp> Engine<A> {
         if routed {
             for (p, t) in tasks.iter().enumerate() {
                 self.network.send_down(p, A::task_bytes(t));
-                leases.push(
-                    A::task_lease(t).expect("rotation task must carry a lease"),
+                let granted = A::task_leases(t);
+                assert!(
+                    !granted.is_empty(),
+                    "rotation task must carry at least one lease"
                 );
+                leases.push(granted);
             }
         } else {
             self.charge_task_bytes(&tasks);
@@ -535,6 +579,7 @@ impl<A: StradsApp> Engine<A> {
             max_model_bytes_per_machine: self.memory.max_per_machine(),
             total_network_bytes: self.network.total_bytes(),
             total_p2p_bytes: self.network.total_p2p_bytes(),
+            total_p2p_msgs: self.network.total_p2p_msgs(),
             recorder,
             oom,
             ssp: None,
@@ -639,6 +684,7 @@ impl<A: StradsApp> Engine<A> {
             max_model_bytes_per_machine: self.memory.max_per_machine(),
             total_network_bytes: self.network.total_bytes(),
             total_p2p_bytes: self.network.total_p2p_bytes(),
+            total_p2p_msgs: self.network.total_p2p_msgs(),
             recorder,
             oom,
             ssp: Some(stats),
@@ -698,37 +744,81 @@ impl<A: StradsApp> Engine<A> {
     }
 
     /// Collect half of the rotation pipeline: partials' doc stats ride the
-    /// hub, the slice itself was already forwarded p2p to the ring
-    /// successor when the worker finished, and every consumed lease must
-    /// be exactly the one its task granted.
+    /// hub, each swept slice was already forwarded p2p to its next holder
+    /// when its leg finished, and every consumed lease must be exactly the
+    /// one its task granted (per leg, in sweep order).  Returns each
+    /// worker's legs as `(slice_id, seconds)` — the worker's
+    /// straggler-scaled measured seconds apportioned across its queue by
+    /// the legs' reported weights — plus the measured pull seconds.
     fn rot_collect_round(
         &mut self,
         round_idx: u64,
         pending: PendingRound<A::Partial>,
-    ) -> (Vec<f64>, f64) {
+    ) -> (Vec<Vec<(usize, f64)>>, f64) {
         let n = self.pool.n_workers();
-        let leases = pending.leases().to_vec();
-        assert_eq!(leases.len(), n, "rotation round must track one lease per worker");
+        let granted = pending.leases().to_vec();
+        assert_eq!(
+            granted.len(),
+            n,
+            "rotation round must track one lease queue per worker"
+        );
         let results = pending.collect();
         let mut partials = Vec::with_capacity(results.len());
         let mut compute_secs = Vec::with_capacity(results.len());
+        let mut legs_by_worker = Vec::with_capacity(results.len());
         for (p, (partial, secs)) in results.into_iter().enumerate() {
             self.network.send_up(p, A::partial_bytes(&partial));
-            let hb = A::handoff_bytes(&partial);
-            if hb > 0 {
-                // the swept slice moved to the next holder in the ring
-                self.network.send_p2p(p, A::handoff_successor(p, n), hb);
-            }
-            let consumed = A::partial_lease(&partial)
-                .expect("rotation partial must report its lease");
+            let legs = A::partial_legs(&partial);
+            let consumed: Vec<LeaseToken> =
+                legs.iter().map(|l| l.token).collect();
             assert_eq!(
-                consumed, leases[p],
-                "worker {p} consumed a lease it was not granted (round {round_idx})"
+                consumed, granted[p],
+                "worker {p} consumed leases it was not granted (round {round_idx})"
             );
+            for leg in &legs {
+                // the destination is app-reported (only the app knows its
+                // ring); a worker id out of range is a protocol bug.  A
+                // self-transfer (dest == p) is legitimate — with U not a
+                // multiple of P the ring wrap hands a slice back to the
+                // same worker — and costs nothing in the network model.
+                assert!(
+                    leg.dest_worker < n,
+                    "worker {p} forwarded slice {} to nonexistent worker {} \
+                     (round {round_idx})",
+                    leg.token.slice_id,
+                    leg.dest_worker
+                );
+                if leg.bytes > 0 {
+                    // the swept slice moved to its next holder in the ring
+                    self.network.send_p2p(p, leg.dest_worker, leg.bytes);
+                }
+            }
+            legs_by_worker.push(legs);
             partials.push(partial);
             compute_secs.push(secs);
         }
         self.straggler.scale(&mut compute_secs, round_idx);
+        // apportion each worker's scaled seconds across its queue: weights
+        // (e.g. tokens sampled) proxy per-slice compute; a weightless
+        // round splits evenly
+        let timed_legs: Vec<Vec<(usize, f64)>> = legs_by_worker
+            .into_iter()
+            .enumerate()
+            .map(|(p, legs)| {
+                let total: f64 = legs.iter().map(|l| l.weight.max(0.0)).sum();
+                let even = 1.0 / legs.len().max(1) as f64;
+                legs.into_iter()
+                    .map(|l| {
+                        let share = if total > 0.0 {
+                            l.weight.max(0.0) / total
+                        } else {
+                            even
+                        };
+                        (l.token.slice_id, compute_secs[p] * share)
+                    })
+                    .collect()
+            })
+            .collect();
 
         let pull_sw = Stopwatch::start();
         let sync_msg = self.app.pull(round_idx, partials);
@@ -742,20 +832,23 @@ impl<A: StradsApp> Engine<A> {
                 move |ws: &mut A::WorkerState| A::sync(ws, &msg)
             });
         }
-        (compute_secs, pull_secs)
+        (timed_legs, pull_secs)
     }
 
     /// The rotation pipeline: up to `depth` rounds in flight, slices
     /// migrating worker→worker.
     ///
-    /// Virtual-time model: on top of the SSP availability model, worker
-    /// `p`'s round cannot start before its ring source `(p + 1) % n`
-    /// finished the *previous* round — that is when the slice handoff
-    /// leaves the source.  A straggler therefore delays only the chain its
-    /// slice flows along while the rest of the ring keeps moving, which is
-    /// exactly the wavefront the BSP barrier destroys.  `depth: 1`
-    /// serializes collects behind dispatches and reproduces BSP ordering
-    /// (and objectives) exactly.
+    /// Virtual-time model: on top of the SSP availability model, each
+    /// sweep of slice `a` cannot start before slice `a`'s *previous*
+    /// holder finished sweeping it — that is when the handoff leaves the
+    /// holder.  Gating is per **slice**, not per worker: with U > P slices
+    /// a worker steps through its queue in sweep order, and only the slice
+    /// it is about to sweep must have landed — the rest of the queue
+    /// overlaps the in-flight handoffs.  A straggler therefore delays only
+    /// the chains its slices flow along while the rest of the ring keeps
+    /// moving, which is exactly the wavefront the BSP barrier destroys.
+    /// `depth: 1` serializes collects behind dispatches and reproduces BSP
+    /// ordering (and objectives) exactly.
     fn run_rotation(&mut self, cfg: &RunConfig, depth: u64) -> RunResult {
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
@@ -763,6 +856,12 @@ impl<A: StradsApp> Engine<A> {
         let mut stats = SspStats::new();
         let mut vv = VersionVector::new(n);
         self.app.begin_rotation(depth);
+        let n_slices = self.app.n_rotation_slices();
+        assert!(
+            n_slices >= n,
+            "rotation app must report its ring size (n_rotation_slices \
+             {n_slices} < {n} workers)"
+        );
         let mut last_obj = self.evaluate();
         recorder.record_with(
             0,
@@ -777,7 +876,7 @@ impl<A: StradsApp> Engine<A> {
         let mut clk = RotClockState {
             coord_now: self.clock.seconds(),
             worker_free: vec![self.clock.seconds(); n],
-            prev_finish: vec![self.clock.seconds(); n],
+            slice_ready: vec![self.clock.seconds(); n_slices],
         };
 
         let mut rounds_run = 0;
@@ -844,6 +943,7 @@ impl<A: StradsApp> Engine<A> {
             max_model_bytes_per_machine: self.memory.max_per_machine(),
             total_network_bytes: self.network.total_bytes(),
             total_p2p_bytes: self.network.total_p2p_bytes(),
+            total_p2p_msgs: self.network.total_p2p_msgs(),
             recorder,
             oom,
             ssp: Some(stats),
@@ -872,27 +972,34 @@ impl<A: StradsApp> Engine<A> {
                 inflight.round
             );
         }
-        let (compute_secs, pull_secs) =
+        let (timed_legs, pull_secs) =
             self.rot_collect_round(inflight.round, inflight.pending);
         // every rotation pull commits coordinator state (settled leases +
         // refreshed sums) even without a sync broadcast
         vv.commit();
 
-        let n = clk.worker_free.len();
-        let mut finish = vec![0.0f64; n];
+        // replay each worker's queue against the per-slice availability
+        // timeline: a leg starts when the worker reaches it AND the
+        // slice's previous holder has forwarded it.  All gates read the
+        // previous round's timeline (every slice moves every round), so
+        // updates land in a fresh copy.
+        let mut next_ready = clk.slice_ready.clone();
         let mut finish_max = 0.0f64;
         let mut compute_max = 0.0f64;
-        for (p, &secs) in compute_secs.iter().enumerate() {
-            // ready when: the worker is free, the task was dispatched, and
-            // the ring source forwarded the slice (finished last round)
-            let gate = clk.prev_finish[A::handoff_source(p, n)];
-            let start = clk.worker_free[p].max(gate).max(inflight.dispatched_at);
-            finish[p] = start + secs;
-            clk.worker_free[p] = finish[p];
-            finish_max = finish_max.max(finish[p]);
-            compute_max = compute_max.max(secs);
+        for (p, legs) in timed_legs.iter().enumerate() {
+            let mut t = clk.worker_free[p].max(inflight.dispatched_at);
+            let mut total = 0.0f64;
+            for &(slice, secs) in legs {
+                let start = t.max(clk.slice_ready[slice]);
+                t = start + secs;
+                next_ready[slice] = t;
+                total += secs;
+            }
+            clk.worker_free[p] = t;
+            finish_max = finish_max.max(t);
+            compute_max = compute_max.max(total);
         }
-        clk.prev_finish = finish;
+        clk.slice_ready = next_ready;
         let comm = self.network.round_time_and_reset();
         let before = clk.coord_now;
         clk.coord_now = clk.coord_now.max(finish_max + comm) + pull_secs;

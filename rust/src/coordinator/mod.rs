@@ -8,5 +8,6 @@
 pub mod engine;
 
 pub use engine::{
-    Engine as StradsEngine, ExecutionMode, RunConfig, RunResult, StradsApp,
+    Engine as StradsEngine, ExecutionMode, HandoffLeg, RunConfig, RunResult,
+    StradsApp,
 };

@@ -28,7 +28,8 @@ pub fn figure_corpus(vocab: usize, n_docs: usize, seed: u64) -> Corpus {
     })
 }
 
-/// Build a STRADS LDA engine over a corpus.
+/// Build a STRADS LDA engine over a corpus (U = `workers` slices, the
+/// paper's layout).
 pub fn lda_engine(
     corpus: &Corpus,
     k: usize,
@@ -37,6 +38,31 @@ pub fn lda_engine(
     cfg: &RunConfig,
 ) -> StradsEngine<LdaApp> {
     let s = lda_setup::build(corpus, k, workers, 0.1, 0.01, seed);
+    StradsEngine::new(s.app, s.shards, cfg)
+}
+
+/// Build a STRADS LDA engine with `n_slices` ≥ `workers` rotation slices
+/// (slice over-decomposition) and a skew-aware ring placement derived from
+/// the run config's straggler model.
+pub fn lda_engine_sliced(
+    corpus: &Corpus,
+    k: usize,
+    workers: usize,
+    n_slices: usize,
+    seed: u64,
+    cfg: &RunConfig,
+) -> StradsEngine<LdaApp> {
+    let speeds = cfg.straggler.mean_speeds(workers, workers as u64);
+    let s = lda_setup::build_sliced(
+        corpus,
+        k,
+        workers,
+        n_slices,
+        Some(&speeds),
+        0.1,
+        0.01,
+        seed,
+    );
     StradsEngine::new(s.app, s.shards, cfg)
 }
 

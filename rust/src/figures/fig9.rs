@@ -10,7 +10,7 @@ use crate::cluster::{NetworkConfig, StragglerModel};
 use crate::coordinator::{ExecutionMode, RunConfig};
 use crate::datagen::mf_ratings::{self, MfGenConfig};
 use crate::figures::common::{
-    figure_corpus, lasso_engine_corr, lda_engine, mf_engine,
+    figure_corpus, lasso_engine_corr, lda_engine, lda_engine_sliced, mf_engine,
 };
 use crate::metrics::Recorder;
 
@@ -162,6 +162,13 @@ pub struct ModeComparison {
     pub mean_staleness: f64,
     pub max_staleness: u64,
     pub wait_saved_secs: f64,
+    /// Worker↔worker traffic per arm (hub-bypassing bytes + handoff
+    /// counts), so bench trajectories track network cost, not just
+    /// time-to-objective.
+    pub bsp_p2p_bytes: u64,
+    pub ssp_p2p_bytes: u64,
+    pub bsp_handoffs: u64,
+    pub ssp_handoffs: u64,
 }
 
 /// Lasso + MF arms of the BSP-vs-SSP comparison under a rotating
@@ -265,6 +272,61 @@ pub fn run_rotation_comparison(
     comparison_with("LDA-rotation", bsp, piped, false)
 }
 
+/// Multi-slice rotation arm: pipelined rotation with U = P slices vs
+/// U = 2P (slice over-decomposition) at equal depth and identical corpus,
+/// under a rotating `straggler_factor`x compute skew.  With U = 2P a
+/// worker sweeps a two-slice queue: one slice samples while the other's
+/// handoff is still in flight, so the straggler's lateness propagates in
+/// half-round grains instead of stalling each successor a full round.
+/// Both runs cover every slice every round (equal sweep work per round);
+/// the U = 2P run lands in the `ssp` slot.
+///
+/// Two measurement choices keep the comparison about *pipeline speed*
+/// rather than evaluation noise: objectives are evaluated every **two**
+/// sweeps (each eval drains the pipeline — per-sweep drains would erase
+/// the wavefront the finer gating buys), and the shared target is the
+/// 90%-improvement point of the easier trajectory, which both runs cross
+/// in the steep phase of the LL curve (an endpoint target would sit on
+/// the plateau, where partition noise decides who crosses first).  The
+/// two initial objectives agree to summation order — both builds draw
+/// the same topic-assignment stream — so the improvement fractions are
+/// comparable.
+pub fn run_multislice_comparison(
+    cfg: &Fig9Config,
+    depth: u64,
+    straggler_factor: f64,
+) -> ModeComparison {
+    let corpus =
+        figure_corpus(sc(6_000, cfg.scale), sc(600, cfg.scale), cfg.seed);
+    let k = sc(32, cfg.scale);
+    let sweeps = 8u64;
+    let straggler = StragglerModel::Rotating { factor: straggler_factor };
+    let run = |n_slices: usize, label: &str| {
+        let run_cfg = RunConfig {
+            max_rounds: sweeps * cfg.n_workers as u64,
+            eval_every: 2 * cfg.n_workers as u64,
+            network: NetworkConfig::ideal(), // isolate the compute skew
+            label: label.into(),
+            mode: ExecutionMode::Rotation { depth },
+            straggler: straggler.clone(),
+            ..Default::default()
+        };
+        let mut e = lda_engine_sliced(
+            &corpus, k, cfg.n_workers, n_slices, cfg.seed, &run_cfg,
+        );
+        e.run(&run_cfg)
+    };
+    let single = run(cfg.n_workers, "LDA-rotation-U=P");
+    let multi = run(2 * cfg.n_workers, "LDA-rotation-U=2P");
+    let mut cmp = comparison_with("LDA-multislice", single, multi, false);
+    let first = cmp.bsp.points()[0].objective;
+    let target = first + 0.9 * (cmp.target - first);
+    cmp.bsp_secs_to_target = cmp.bsp.time_to_target(target, false);
+    cmp.ssp_secs_to_target = cmp.ssp.time_to_target(target, false);
+    cmp.target = target;
+    cmp
+}
+
 fn comparison(
     app: &str,
     bsp: crate::coordinator::RunResult,
@@ -296,6 +358,10 @@ fn comparison_with(
         bsp_secs_to_target: bsp.recorder.time_to_target(target, minimizing),
         ssp_secs_to_target: ssp.recorder.time_to_target(target, minimizing),
         target,
+        bsp_p2p_bytes: bsp.total_p2p_bytes,
+        ssp_p2p_bytes: ssp.total_p2p_bytes,
+        bsp_handoffs: bsp.total_p2p_msgs,
+        ssp_handoffs: ssp.total_p2p_msgs,
         bsp: bsp.recorder,
         ssp: ssp.recorder,
         mean_staleness,
@@ -329,6 +395,10 @@ pub fn print_mode_comparison(c: &ModeComparison) {
         c.mean_staleness,
         c.max_staleness,
         c.wait_saved_secs
+    );
+    println!(
+        "  p2p traffic: {} bytes / {} handoffs vs {} bytes / {} handoffs",
+        c.bsp_p2p_bytes, c.bsp_handoffs, c.ssp_p2p_bytes, c.ssp_handoffs
     );
 }
 
@@ -405,6 +475,35 @@ mod tests {
         // the strict pipelined-beats-BSP assert lives in the fig9 bench.
         assert!(c.bsp_secs_to_target.is_some(), "bsp reaches target");
         assert!(c.ssp_secs_to_target.is_some(), "pipelined reaches target");
+    }
+
+    #[test]
+    fn multislice_comparison_converges_and_tracks_traffic() {
+        let c = run_multislice_comparison(&tiny(), 2, 4.0);
+        assert!(c.max_staleness <= 1, "depth-2 bound");
+        // both trajectories learn and reach the shared target; the strict
+        // U=2P-beats-U=P timing assert lives in the fig9 bench (tiny-scale
+        // virtual times ride on microsecond compute and would flake here)
+        for rec in [&c.bsp, &c.ssp] {
+            let first = rec.points()[0].objective;
+            let last = rec.last_objective().unwrap();
+            assert!(
+                last.is_finite() && last > first,
+                "{}: {first} -> {last}",
+                rec.label
+            );
+        }
+        assert!(c.bsp_secs_to_target.is_some(), "U=P reaches target");
+        assert!(c.ssp_secs_to_target.is_some(), "U=2P reaches target");
+        // handoffs ride the p2p links in both arms; the U=2P ring moves
+        // twice as many (smaller) slices per round
+        assert!(c.bsp_p2p_bytes > 0 && c.ssp_p2p_bytes > 0);
+        assert!(
+            c.ssp_handoffs > c.bsp_handoffs,
+            "U=2P must record more handoffs ({} vs {})",
+            c.ssp_handoffs,
+            c.bsp_handoffs
+        );
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //!   version `v`; `forward(a, data, v+1)` hands the swept slice on.  The
 //!   chain head only ever advances by one, so forwarding a second child of
 //!   the same parent version panics — the exclusive-lease invariant of
-//!   [`crate::kvstore::SliceStore`] preserved without a barrier.
+//!   [`crate::kvstore::SliceStore`] preserved without a barrier.  Slots
+//!   are keyed by **slice**, not worker, so the ring carries U ≥ P slices
+//!   over P workers unchanged (multi-slice rotation: a worker takes and
+//!   forwards each slice of its queue independently).
 //! * [`LeaseToken`] — `(slice, version)`, the coordinator-visible name of
 //!   one lease in the chain.
 //! * [`LeaseLedger`] — the coordinator-side control plane: `grant` hands

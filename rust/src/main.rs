@@ -41,6 +41,9 @@ USAGE:
       lasso: --features J --samples N --u U --lambda L --random (RR baseline)
       mf:    --users N --items M --rank K --lambda L
       lda:   --vocab V --docs D --topics K
+             --slices U   rotation slices (default = workers; U > workers
+                          over-decomposes with skew-aware ring placement)
+             --depth D    pipelined rotation depth (default 0 = BSP)
 
   strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
       regenerate a paper figure's rows/series (scaled-down by default)
@@ -130,8 +133,24 @@ fn cmd_train(args: &Args) {
             let vocab = args.parse_or("vocab", 20_000usize);
             let docs = args.parse_or("docs", 2_000usize);
             let k = args.parse_or("topics", 100usize);
+            let n_slices = args.parse_or("slices", workers);
+            let depth = args.parse_or("depth", 0u64);
+            let mut run_cfg = run_cfg.clone();
+            if depth > 0 {
+                run_cfg.mode =
+                    strads::coordinator::ExecutionMode::Rotation { depth };
+            }
             let corpus = common::figure_corpus(vocab, docs, seed);
-            let mut e = common::lda_engine(&corpus, k, workers, seed, &run_cfg);
+            // n_slices == workers keeps the paper's identity layout; any
+            // other value goes through build_sliced, whose U ≥ P assert
+            // rejects an undersized ring loudly
+            let mut e = if n_slices == workers {
+                common::lda_engine(&corpus, k, workers, seed, &run_cfg)
+            } else {
+                common::lda_engine_sliced(
+                    &corpus, k, workers, n_slices, seed, &run_cfg,
+                )
+            };
             let res = e.run(&run_cfg);
             report(&res.recorder, res.virtual_secs, res.wall_secs);
             println!(

@@ -1,9 +1,11 @@
 //! The **schedule** primitive (paper §2): strategies that pick which model
 //! variables each worker updates next.
 //!
-//! * [`rotation`] — LDA's word-rotation schedule: U disjoint word subsets
-//!   rotate among U workers, every worker touches every subset once per U
-//!   rounds (paper §3.1, Fig 4).
+//! * [`rotation`] — LDA's word-rotation schedule: U ≥ P disjoint word
+//!   subsets rotate among P workers (⌈U/P⌉-slice queues per worker per
+//!   round), every worker touching every subset within U rounds (paper
+//!   §3.1, Fig 4; over-decomposition + skew-aware ring placement per
+//!   Zheng et al. and Lee et al.).
 //! * [`round_robin`] — MF's block round-robin over factor rows (paper §3.2).
 //! * [`priority`] — Lasso's dynamic schedule: sample U′ candidates from
 //!   c_j ∝ |δβ_j| + η, then dependency-filter to a set with pairwise

@@ -1,50 +1,215 @@
-//! Word-rotation scheduling (paper §3.1, pseudocode Fig 4).
+//! Word-rotation scheduling (paper §3.1, pseudocode Fig 4), generalized
+//! from "P slices on P workers" to **U ≥ P slices rotating over P
+//! workers** (slice over-decomposition à la Zheng et al., "Model-Parallel
+//! Inference for Big Topic Models").
 //!
-//! The V words are split into U subsets V_1..V_U.  In round C, worker a is
-//! assigned subset ((a + C - 1) mod U) + 1 (1-indexed in the paper; we use
-//! 0-indexed `(a + c) % u`).  Every subset is held by exactly one worker
-//! per round (disjointness ⇒ near-conditional-independence of the parallel
-//! Gibbs updates), and after U rounds every worker has seen every subset.
+//! The V words are split into U subsets V_1..V_U arranged on a **virtual
+//! ring** of U positions.  Worker `p` owns positions `{p, p+P, p+2P, …}`,
+//! so each round it holds ⌈U/P⌉ (or ⌊U/P⌋) slices — its *slice queue* —
+//! and sweeps them in position order.  Each round the whole ring shifts by
+//! one position, so every subset is held by exactly one worker per round
+//! (disjointness ⇒ near-conditional-independence of the parallel Gibbs
+//! updates) and every worker sees every subset within U rounds.  With
+//! U = P and the identity placement this reduces bit-exactly to the
+//! paper's formula: worker `a` holds subset `(a + C) % U` in round `C`.
+//!
+//! Why over-decompose?  Under pipelined rotation
+//! ([`crate::coordinator::ExecutionMode::Rotation`]) a worker's next slice
+//! arrives from its previous holder as an async handoff.  With U = P the
+//! worker has exactly one slice per round and stalls for the full handoff
+//! gap; with U > P it samples one queued slice while another is still in
+//! flight, hiding the gap (see the engine's per-slice virtual-time model).
+//!
+//! The *placement* — which slice starts at which virtual position — is a
+//! free knob.  Positions `{c, c+P, …}` always belong to one worker and
+//! travel the ring together (a **cohort**), so placement decides (a) how
+//! balanced each worker's per-round token mass is and (b) which cohorts
+//! start on which workers.  [`skew_aware_placement`] balances cohort
+//! masses LPT-style and starts heavy cohorts on fast workers (Lee et al.,
+//! "Structure-Aware Dynamic Scheduler").
 
-/// The worker that holds `worker`'s current slice *next* round on a
-/// `u`-worker ring — the single source of truth for the rotation's
-/// orientation.  Worker `w` holds slice `(w + C) % U` in round `C`; that
-/// slice is held by `(w - 1) % U` in round `C + 1`.  Used by both
-/// [`RotationScheduler::handoff_successor`] and the engine's
-/// `StradsApp::handoff_successor` default.
-pub fn ring_successor(worker: usize, u: usize) -> usize {
-    (worker + u - 1) % u
+/// The virtual ring position that holds `position`'s current slice *next*
+/// round on a `u`-position ring — the single source of truth for the
+/// rotation's orientation.  Position `v` holds slice `(v + C) % U` in
+/// round `C`; that slice is held by `(v - 1) % U` in round `C + 1`.  With
+/// U = P positions are workers and this is the worker-ring successor used
+/// by `StradsApp::handoff_successor`'s default.
+pub fn ring_successor(position: usize, u: usize) -> usize {
+    (position + u - 1) % u
 }
 
-/// Inverse of [`ring_successor`]: the worker whose previous-round slice
-/// `worker` receives this round.
-pub fn ring_source(worker: usize, u: usize) -> usize {
-    (worker + 1) % u
+/// Inverse of [`ring_successor`]: the position whose previous-round slice
+/// `position` receives this round.
+pub fn ring_source(position: usize, u: usize) -> usize {
+    (position + 1) % u
 }
 
-/// Stateful rotation scheduler over `n_slices` partitions and an equal
-/// number of workers.
+/// The worker that owns virtual ring position `position` on a `p`-worker
+/// cluster (positions stride the worker set).
+pub fn position_owner(position: usize, n_workers: usize) -> usize {
+    position % n_workers
+}
+
+/// Skew-aware ring placement: order `masses.len()` slices on the virtual
+/// ring so that (a) each worker's per-round token mass is balanced and
+/// (b) heavy slices start on fast workers.
+///
+/// Positions `{c, c+P, …}` form a *cohort*: one worker holds all of them
+/// each round and the cohort travels the ring as a unit, so cohort
+/// composition fully determines the per-round load split.  Greedy
+/// construction, heaviest first:
+///
+/// 1. workers are ranked by `speeds` (relative speed, higher = faster);
+/// 2. each slice goes to the cohort with the smallest *time* load
+///    (mass ÷ owner speed) that still has free positions;
+/// 3. within a cohort, heavier slices take earlier positions — they are
+///    swept first, releasing their handoff to the next holder earliest.
+///
+/// Returns `placement[position] = slice_id`, a permutation of
+/// `0..masses.len()`; feed it to [`RotationScheduler::set_placement`].
+pub fn skew_aware_placement(masses: &[u64], speeds: &[f64]) -> Vec<usize> {
+    let u = masses.len();
+    let p = speeds.len();
+    assert!(p > 0, "placement needs at least one worker");
+    assert!(u >= p, "fewer slices than workers");
+    // rank workers fastest-first (ties broken by id for determinism)
+    let mut worker_rank: Vec<usize> = (0..p).collect();
+    worker_rank.sort_by(|&a, &b| {
+        speeds[b].partial_cmp(&speeds[a]).unwrap().then(a.cmp(&b))
+    });
+    // cohort g is anchored at residue worker_rank[g]; its capacity is the
+    // number of ring positions with that residue
+    let capacity: Vec<usize> =
+        worker_rank.iter().map(|&w| (u - w).div_ceil(p)).collect();
+    // LPT into cohorts, weighted by the owning worker's speed
+    let mut order: Vec<usize> = (0..u).collect();
+    order.sort_by(|&a, &b| masses[b].cmp(&masses[a]).then(a.cmp(&b)));
+    let mut cohort_slices: Vec<Vec<usize>> = vec![Vec::new(); p];
+    let mut cohort_load = vec![0.0f64; p];
+    for slice in order {
+        let mut best: Option<usize> = None;
+        for g in 0..p {
+            if cohort_slices[g].len() >= capacity[g] {
+                continue;
+            }
+            let t = cohort_load[g] / speeds[worker_rank[g]].max(1e-12);
+            let better = match best {
+                None => true,
+                Some(bg) => {
+                    let bt =
+                        cohort_load[bg] / speeds[worker_rank[bg]].max(1e-12);
+                    t < bt
+                }
+            };
+            if better {
+                best = Some(g);
+            }
+        }
+        let g = best.expect("cohort capacities sum to the slice count");
+        cohort_slices[g].push(slice); // heaviest first: earliest position
+        cohort_load[g] += masses[slice] as f64;
+    }
+    let mut placement = vec![usize::MAX; u];
+    for (g, slices) in cohort_slices.iter().enumerate() {
+        let w = worker_rank[g];
+        for (j, &slice) in slices.iter().enumerate() {
+            placement[w + j * p] = slice;
+        }
+    }
+    debug_assert!(placement.iter().all(|&s| s < u));
+    placement
+}
+
+/// Stateful rotation scheduler over `n_slices` (U) partitions and
+/// `n_workers` (P ≤ U) workers.
 #[derive(Debug, Clone)]
 pub struct RotationScheduler {
     n_slices: usize,
+    n_workers: usize,
+    /// `placement[v]` = slice initially at virtual ring position `v`.
+    placement: Vec<usize>,
     /// Rotation counter C (a "global model variable" in the paper).
     counter: u64,
 }
 
 impl RotationScheduler {
+    /// One slice per worker (U = P), identity placement — the paper's
+    /// original schedule.
     pub fn new(n_slices: usize) -> Self {
-        assert!(n_slices > 0);
-        RotationScheduler { n_slices, counter: 0 }
+        Self::with_workers(n_slices, n_slices)
     }
 
-    /// Slice assigned to `worker` this round.
+    /// U ≥ P slices over P workers, identity placement.
+    pub fn with_workers(n_slices: usize, n_workers: usize) -> Self {
+        assert!(n_workers > 0, "need at least one worker");
+        assert!(
+            n_slices >= n_workers,
+            "fewer slices ({n_slices}) than workers ({n_workers})"
+        );
+        RotationScheduler {
+            n_slices,
+            n_workers,
+            placement: (0..n_slices).collect(),
+            counter: 0,
+        }
+    }
+
+    /// Install a ring placement (e.g. from [`skew_aware_placement`]).
+    /// Must be a permutation of the slice ids, set before the first round
+    /// — re-ordering a ring with slices already in flight would fork the
+    /// handoff chains.
+    pub fn set_placement(&mut self, placement: Vec<usize>) {
+        assert_eq!(self.counter, 0, "placement must be set before round 0");
+        assert_eq!(placement.len(), self.n_slices);
+        let mut seen = vec![false; self.n_slices];
+        for &s in &placement {
+            assert!(s < self.n_slices && !seen[s], "placement not a permutation");
+            seen[s] = true;
+        }
+        self.placement = placement;
+    }
+
+    /// Slice at virtual ring position `v` this round.
+    pub fn slice_at(&self, v: usize) -> usize {
+        self.placement[(v + self.counter as usize) % self.n_slices]
+    }
+
+    /// First slice of `worker`'s queue this round (its only slice when
+    /// U = P, where this matches the paper's `(a + C) % U`).
     pub fn slice_for(&self, worker: usize) -> usize {
-        (worker + self.counter as usize) % self.n_slices
+        self.slice_at(worker)
     }
 
-    /// Assignments for all workers this round, then advance the counter.
+    /// This round's slice queue per worker (position order `p, p+P, …`),
+    /// without advancing the counter.  Queues are disjoint and jointly
+    /// cover all U slices.
+    pub fn queues(&self) -> Vec<Vec<usize>> {
+        (0..self.n_workers)
+            .map(|p| {
+                (p..self.n_slices)
+                    .step_by(self.n_workers)
+                    .map(|v| self.slice_at(v))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Assignments for all workers this round (single-slice U = P form),
+    /// then advance the counter.
     pub fn next_round(&mut self) -> Vec<usize> {
-        let out = (0..self.n_slices).map(|w| self.slice_for(w)).collect();
+        assert_eq!(
+            self.n_slices, self.n_workers,
+            "next_round is the U = P form; use next_round_queues"
+        );
+        self.next_round_queues()
+            .into_iter()
+            .map(|q| q[0])
+            .collect()
+    }
+
+    /// Slice queues for all workers this round, then advance the counter.
+    pub fn next_round_queues(&mut self) -> Vec<Vec<usize>> {
+        let out = self.queues();
         self.counter += 1;
         out
     }
@@ -57,15 +222,24 @@ impl RotationScheduler {
         self.n_slices
     }
 
-    /// The worker that holds `worker`'s current slice *next* round — the
-    /// ring successor a pipelined rotation forwards the slice to (see
-    /// [`ring_successor`]).
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// The worker holding the slice at position `v` *next* round — where a
+    /// pipelined rotation forwards that slice (see [`ring_successor`]).
+    pub fn next_holder(&self, v: usize) -> usize {
+        position_owner(ring_successor(v, self.n_slices), self.n_workers)
+    }
+
+    /// U = P form: the worker that holds `worker`'s current slice next
+    /// round (see [`ring_successor`]).
     pub fn handoff_successor(&self, worker: usize) -> usize {
         ring_successor(worker, self.n_slices)
     }
 
-    /// The worker whose previous-round slice `worker` receives this round
-    /// — the ring source a pipelined rotation waits on.  Inverse of
+    /// U = P form: the worker whose previous-round slice `worker` receives
+    /// this round — the inverse of
     /// [`RotationScheduler::handoff_successor`] (see [`ring_source`]).
     pub fn handoff_source(&self, worker: usize) -> usize {
         ring_source(worker, self.n_slices)
@@ -162,6 +336,45 @@ mod tests {
                 let succ = s.handoff_successor(w);
                 assert_eq!(next[succ], slice, "worker {w} -> {succ}");
                 assert_eq!(s.handoff_source(succ), w);
+            }
+        }
+    }
+
+    #[test]
+    fn multislice_queues_match_next_holder() {
+        // U = 2P ring: the slice at position v this round must be in the
+        // queue of next_holder(v)'s worker next round.
+        let (u, p) = (8, 4);
+        let mut s = RotationScheduler::with_workers(u, p);
+        for _ in 0..3 * u {
+            let dest: Vec<usize> = (0..u).map(|v| s.next_holder(v)).collect();
+            let now = s.next_round_queues();
+            let next = s.queues();
+            for w in 0..p {
+                for (j, &slice) in now[w].iter().enumerate() {
+                    let v = w + j * p;
+                    assert!(
+                        next[dest[v]].contains(&slice),
+                        "slice {slice} at pos {v} must move to worker {}",
+                        dest[v]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn u_equals_p_queues_reproduce_the_single_slice_schedule() {
+        // the generalized queue path with U = P must emit exactly the
+        // paper's `(a + C) % U` assignment, one slice per worker — the
+        // schedule-level half of the "U = P is bit-identical to the
+        // single-slice rotation" regression (the app-level half lives in
+        // tests/rotation_handoff.rs).
+        let u = 5;
+        let mut s = RotationScheduler::with_workers(u, u);
+        for c in 0..3 * u as u64 {
+            for (w, q) in s.next_round_queues().into_iter().enumerate() {
+                assert_eq!(q, vec![(w + c as usize) % u]);
             }
         }
     }
@@ -270,5 +483,112 @@ mod tests {
                 format!("worker 0 coverage {cover:?}"),
             )
         });
+    }
+
+    #[test]
+    fn prop_multislice_rounds_disjoint_and_cover() {
+        // random U ≥ P rings (random placements too): every round's queues
+        // are disjoint and jointly cover all U slices, queue sizes differ
+        // by at most one, and every worker sees every slice within U
+        // rounds.
+        prop_check("multi-slice rotation", 60, |g| {
+            let p = g.usize_in(1, 8);
+            let u = p * g.usize_in(1, 4) + g.usize_in(0, p - 1);
+            let mut s = RotationScheduler::with_workers(u, p);
+            // random permutation placement via sort-by-random-key
+            let mut keyed: Vec<(u64, usize)> =
+                (0..u).map(|a| (g.seed(), a)).collect();
+            keyed.sort_unstable();
+            s.set_placement(keyed.into_iter().map(|(_, a)| a).collect());
+            let mut seen = vec![vec![false; u]; p];
+            for _ in 0..u {
+                let queues = s.next_round_queues();
+                let mut all: Vec<usize> =
+                    queues.iter().flatten().copied().collect();
+                all.sort_unstable();
+                if all != (0..u).collect::<Vec<_>>() {
+                    return Prop::Fail(format!(
+                        "round not a partition of slices (u={u}, p={p})"
+                    ));
+                }
+                let (qmin, qmax) = (
+                    queues.iter().map(|q| q.len()).min().unwrap(),
+                    queues.iter().map(|q| q.len()).max().unwrap(),
+                );
+                if qmax - qmin > 1 {
+                    return Prop::Fail(format!(
+                        "queue sizes unbalanced: {qmin}..{qmax}"
+                    ));
+                }
+                for (w, q) in queues.iter().enumerate() {
+                    for &a in q {
+                        seen[w][a] = true;
+                    }
+                }
+            }
+            ensure(
+                seen.iter().all(|row| row.iter().all(|&b| b)),
+                format!("coverage hole after {u} rounds (p={p})"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_skew_placement_is_permutation() {
+        prop_check("skew-aware placement", 80, |g| {
+            let p = g.usize_in(1, 6);
+            let u = p * g.usize_in(1, 5);
+            let masses: Vec<u64> =
+                (0..u).map(|_| g.usize_in(0, 10_000) as u64).collect();
+            let speeds: Vec<f64> = (0..p).map(|_| g.f64_in(0.1, 8.0)).collect();
+            let placement = skew_aware_placement(&masses, &speeds);
+            let mut sorted = placement.clone();
+            sorted.sort_unstable();
+            ensure(
+                sorted == (0..u).collect::<Vec<_>>(),
+                format!("not a permutation: {placement:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn skew_placement_balances_cohorts_and_favors_fast_workers() {
+        // 4 slices, 2 workers, worker 1 twice as fast: the heaviest slice
+        // must start on worker 1's residue, and cohort time loads
+        // (mass / speed) must be no worse than the heaviest single slice.
+        let masses = vec![100u64, 10, 60, 50];
+        let speeds = vec![1.0, 2.0];
+        let placement = skew_aware_placement(&masses, &speeds);
+        // cohort of worker w = positions {w, w+2}
+        let cohort = |w: usize| vec![placement[w], placement[w + 2]];
+        let mass =
+            |c: &[usize]| c.iter().map(|&a| masses[a]).sum::<u64>() as f64;
+        let (c0, c1) = (cohort(0), cohort(1));
+        // heaviest slice (id 0) lands on the fast worker's cohort
+        assert!(c1.contains(&0), "heavy slice on slow worker: {placement:?}");
+        // time loads balanced within the heaviest slice's time
+        let (t0, t1) = (mass(&c0) / 1.0, mass(&c1) / 2.0);
+        assert!(
+            (t0 - t1).abs() <= 100.0,
+            "time imbalance {t0} vs {t1}: {placement:?}"
+        );
+    }
+
+    #[test]
+    fn skew_placement_handles_uneven_slice_counts() {
+        // U = 5, P = 2: residue 0 owns 3 positions, residue 1 owns 2
+        let masses = vec![5u64, 4, 3, 2, 1];
+        let speeds = vec![1.0, 1.0];
+        let placement = skew_aware_placement(&masses, &speeds);
+        let mut sorted = placement.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation")]
+    fn bad_placement_panics() {
+        let mut s = RotationScheduler::with_workers(4, 2);
+        s.set_placement(vec![0, 1, 2, 2]);
     }
 }

@@ -1,10 +1,12 @@
 //! Pipelined-rotation invariants: the worker→worker handoff chain never
-//! forks a slice version, depth-1 pipelining reproduces BSP exactly, and
-//! deeper pipelines stay bounded and conserve counts under straggler skew.
+//! forks a slice version, depth-1 pipelining reproduces BSP exactly (for
+//! single-slice *and* over-decomposed U > P rings), and deeper pipelines
+//! stay bounded and conserve counts under straggler skew.
 
+use strads::apps::lda::setup as lda_setup;
 use strads::cluster::StragglerModel;
-use strads::coordinator::{ExecutionMode, RunConfig};
-use strads::figures::common::{figure_corpus, lda_engine};
+use strads::coordinator::{ExecutionMode, RunConfig, StradsEngine};
+use strads::figures::common::{figure_corpus, lda_engine, lda_engine_sliced};
 use strads::kvstore::{LeaseLedger, LeaseToken, SliceRouter};
 use strads::scheduler::RotationScheduler;
 use strads::testing::{ensure, prop_check, Prop};
@@ -37,6 +39,56 @@ fn prop_handoff_chain_never_forks() {
                 }
                 router.forward(slice_id, data, consumed + 1);
                 ledger.settle(&LeaseToken { slice_id, version: consumed });
+            }
+        }
+        if ledger.max_outstanding() != 0 {
+            return Prop::Fail(format!(
+                "{} leases left outstanding",
+                ledger.max_outstanding()
+            ));
+        }
+        for a in 0..u {
+            if router.version(a) != rounds {
+                return Prop::Fail(format!(
+                    "slice {a}: chain head {} after {rounds} rounds",
+                    router.version(a)
+                ));
+            }
+        }
+        Prop::Ok
+    });
+}
+
+/// The same protocol over U > P rings with random placements: queues of
+/// ⌈U/P⌉ slices per worker, swept in order, must advance every chain by
+/// exactly one per round with no forks and no leases outstanding.
+#[test]
+fn prop_multislice_handoff_chain_never_forks() {
+    prop_check("multi-slice handoff chains", 40, |g| {
+        let p = g.usize_in(1, 6);
+        let u = p * g.usize_in(1, 3) + g.usize_in(0, p - 1);
+        let rounds = g.usize_in(1, 16) as u64;
+        let router: SliceRouter<Vec<u32>> = SliceRouter::new(u);
+        let mut ledger = LeaseLedger::new(u);
+        for a in 0..u {
+            router.seed(a, vec![a as u32], 0);
+            ledger.seed(a, 0);
+        }
+        let mut sched = RotationScheduler::with_workers(u, p);
+        for _ in 0..rounds {
+            for queue in sched.next_round_queues() {
+                for slice_id in queue {
+                    let version = ledger.grant(slice_id);
+                    let (data, consumed) = router.take(slice_id, version);
+                    if consumed != version {
+                        return Prop::Fail(format!(
+                            "slice {slice_id}: granted v{version}, router \
+                             handed over v{consumed}"
+                        ));
+                    }
+                    router.forward(slice_id, data, consumed + 1);
+                    ledger.settle(&LeaseToken { slice_id, version: consumed });
+                }
             }
         }
         if ledger.max_outstanding() != 0 {
@@ -121,6 +173,46 @@ fn rotation_depth1_matches_bsp_exactly() {
     assert_eq!(bsp_s, rot_s, "final topic sums must match bit-exactly");
 }
 
+/// U = 2P over-decomposition, depth 1: sweep order (per-worker queues in
+/// virtual-position order, s̃ threading leg to leg) is identical to the
+/// BSP checkout/checkin path, so objectives and final topic sums must
+/// match bit-exactly.
+#[test]
+fn multislice_depth1_matches_bsp_exactly() {
+    let run = |mode: ExecutionMode| {
+        let corpus = figure_corpus(800, 100, 22);
+        let cfg = RunConfig {
+            max_rounds: 12,
+            eval_every: 4,
+            mode,
+            label: "ms-eq".into(),
+            ..Default::default()
+        };
+        let s = lda_setup::build_sliced(
+            &corpus,
+            8,
+            3,
+            6,
+            Some(&[1.0; 3]),
+            0.1,
+            0.01,
+            22,
+        );
+        let mut e = StradsEngine::new(s.app, s.shards, &cfg);
+        let res = e.run(&cfg);
+        let objs: Vec<f64> =
+            res.recorder.points().iter().map(|p| p.objective).collect();
+        (objs, e.app().s.clone())
+    };
+    let (bsp_obj, bsp_s) = run(ExecutionMode::Bsp);
+    let (rot_obj, rot_s) = run(ExecutionMode::Rotation { depth: 1 });
+    assert_eq!(
+        bsp_obj, rot_obj,
+        "depth-1 multi-slice rotation must reproduce BSP log-likelihoods"
+    );
+    assert_eq!(bsp_s, rot_s, "final topic sums must match bit-exactly");
+}
+
 /// Random depths and straggler skews: the pipeline's observed staleness
 /// stays under `depth - 1`, token counts are conserved, and the run still
 /// learns.
@@ -141,6 +233,48 @@ fn prop_pipelined_rotation_bounded_and_conservative() {
             ..Default::default()
         };
         let mut e = lda_engine(&corpus, 6, workers, seed, &cfg);
+        let total0: f32 = e.app().s.iter().sum();
+        let res = e.run(&cfg);
+        let stats = match res.ssp {
+            Some(s) => s,
+            None => return Prop::Fail("rotation run must report stats".into()),
+        };
+        if stats.max_staleness() > depth.saturating_sub(1) {
+            return Prop::Fail(format!(
+                "staleness {} over depth-{depth} bound",
+                stats.max_staleness()
+            ));
+        }
+        let total1: f32 = e.app().s.iter().sum();
+        ensure(
+            (total0 - total1).abs() < 1e-2,
+            format!("token mass drifted: {total0} -> {total1}"),
+        )
+    });
+}
+
+/// Random worker counts, over-decomposition factors, depths, and skews:
+/// multi-slice pipelines stay inside the staleness bound, conserve token
+/// mass, and leave every slice's chain fully settled.
+#[test]
+fn prop_multislice_rotation_bounded_and_conservative() {
+    prop_check("multi-slice rotation invariants", 6, |g| {
+        let workers = g.usize_in(2, 4);
+        let n_slices = workers * g.usize_in(1, 3);
+        let depth = g.usize_in(1, 4) as u64;
+        let factor = g.f64_in(1.0, 6.0);
+        let seed = g.seed();
+        let corpus = figure_corpus(400, 60, seed);
+        let cfg = RunConfig {
+            max_rounds: 3 * workers as u64,
+            eval_every: workers as u64,
+            mode: ExecutionMode::Rotation { depth },
+            straggler: StragglerModel::Rotating { factor },
+            label: "ms-prop".into(),
+            ..Default::default()
+        };
+        let mut e =
+            lda_engine_sliced(&corpus, 6, workers, n_slices, seed, &cfg);
         let total0: f32 = e.app().s.iter().sum();
         let res = e.run(&cfg);
         let stats = match res.ssp {
@@ -193,4 +327,36 @@ fn pipelined_rotation_hides_a_rotating_straggler() {
     assert!(stats.wait_saved_secs > 0.0);
     assert!(stats.max_staleness() <= 2);
     assert!(piped.total_p2p_bytes > 0, "handoffs must ride p2p links");
+}
+
+/// The same straggler scenario with a U = 2P ring: per-slice gating must
+/// still beat the BSP barrier (the strict U=2P-vs-U=P timing assert lives
+/// in the fig9 bench, where scale makes it stable).
+#[test]
+fn multislice_rotation_hides_a_rotating_straggler() {
+    let run = |mode: ExecutionMode| {
+        let corpus = figure_corpus(1500, 200, 7);
+        let cfg = RunConfig {
+            max_rounds: 16,
+            eval_every: 16,
+            mode,
+            straggler: StragglerModel::Rotating { factor: 50.0 },
+            label: "ms-straggler".into(),
+            ..Default::default()
+        };
+        let mut e = lda_engine_sliced(&corpus, 12, 4, 8, 7, &cfg);
+        e.run(&cfg)
+    };
+    let bsp = run(ExecutionMode::Bsp);
+    let piped = run(ExecutionMode::Rotation { depth: 3 });
+    assert!(
+        piped.virtual_secs < bsp.virtual_secs,
+        "multi-slice pipelined rotation {} should undercut BSP {} under a \
+         rotating straggler",
+        piped.virtual_secs,
+        bsp.virtual_secs
+    );
+    // one handoff per slice per round rides the p2p links
+    assert!(piped.total_p2p_msgs >= 16 * 8, "{}", piped.total_p2p_msgs);
+    assert!(piped.ssp.expect("pipeline stats").max_staleness() <= 2);
 }
