@@ -24,19 +24,28 @@ METRICS = [
     "pipelined_p2p_bytes",
     "bsp_handoffs",
     "pipelined_handoffs",
+    "bsp_handoff_wait_secs",
+    "pipelined_handoff_wait_secs",
 ]
 
 
 def fmt(x):
     if x is None:
         return "n/a"
+    if isinstance(x, bool):
+        return str(x)
     if isinstance(x, float) and not x.is_integer():
         return f"{x:.6g}"
-    return str(int(x))
+    if isinstance(x, (int, float)):
+        return str(int(x))
+    return str(x)  # unknown future type: print, never crash
 
 
 def delta_str(base, cur):
-    if base is None or cur is None:
+    # deltas only make sense between two numbers of a known sign
+    if not isinstance(base, (int, float)) or not isinstance(cur, (int, float)):
+        return ""
+    if isinstance(base, bool) or isinstance(cur, bool):
         return ""
     if base == 0:
         return "(new)" if cur else "(=)"
@@ -45,15 +54,22 @@ def delta_str(base, cur):
 
 
 def arms(doc):
-    """Yield (name, arm-dict) for every comparison arm in a bench doc."""
+    """Yield (name, arm-dict) for every comparison arm in a bench doc.
+
+    Discovery is structural, not a hard-coded key list: every entry of
+    `ssp_arms` plus every top-level `*_arm` dict counts, so new arms added
+    by later PRs flow through the delta report without touching this
+    script (and an arm missing from either side just prints one-sided).
+    """
     if not isinstance(doc, dict):
         return
     for arm in doc.get("ssp_arms") or []:
-        yield arm.get("app", "ssp-arm"), arm
-    for key in ("rotation_arm", "multislice_arm"):
-        arm = doc.get(key)
         if isinstance(arm, dict):
-            yield arm.get("app", key), arm
+            yield str(arm.get("app", "ssp-arm")), arm
+    for key in sorted(doc):
+        arm = doc[key]
+        if key.endswith("_arm") and isinstance(arm, dict):
+            yield str(arm.get("app", key)), arm
 
 
 def main():

@@ -25,12 +25,14 @@
 //! engine's per-slice virtual-time model scores exactly that overlap).
 
 use crate::backend::LdaShard;
+use crate::cluster::router_spin_ms;
 use crate::coordinator::{HandoffLeg, StradsApp};
 use crate::kvstore::{LeaseLedger, LeaseToken, SliceRouter, SliceStore};
 use crate::metrics::s_error;
-use crate::scheduler::rotation::{self, RotationScheduler};
+use crate::scheduler::rotation::{self, QueueOrder, RotationScheduler};
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Coordinator-side configuration.
 pub struct LdaConfig {
@@ -68,6 +70,11 @@ pub struct LdaTask {
     /// Rotation-pipelined path: take/forward each leg's slice through the
     /// router instead of shipping payloads.
     pub router: Option<Arc<SliceRouter<BSlice>>>,
+    /// Within-queue service discipline: `Strict` blocks on each leg in
+    /// queue order; `Availability` polls the router and sweeps whichever
+    /// granted slice landed first (routed legs only — BSP legs carry
+    /// their slice and have nothing to wait on).
+    pub order: QueueOrder,
 }
 
 /// One leg of a worker partial: mirrors [`LdaTaskLeg`] after the sweep.
@@ -309,6 +316,7 @@ impl StradsApp for LdaApp {
                 legs,
                 s: self.s_snapshot.clone(),
                 router: self.router.as_ref().map(Arc::clone),
+                order: self.sched.queue_order(),
             });
         }
         if self.router.is_some() {
@@ -318,39 +326,99 @@ impl StradsApp for LdaApp {
     }
 
     fn push(ws: &mut Self::WorkerState, task: LdaTask) -> LdaPartial {
-        let LdaTask { legs, s, router } = task;
+        /// One routed leg once its slice is in hand: sweep, forward to the
+        /// next holder, report the consumed lease.  The reported lease
+        /// carries the version the *router* handed over, so the engine's
+        /// collect-time cross-check against the granted token spans both
+        /// layers.
+        fn routed_leg(
+            ws: &mut Box<dyn LdaShard>,
+            router: &SliceRouter<BSlice>,
+            slice_id: usize,
+            dest_worker: usize,
+            mut data: BSlice,
+            consumed: u64,
+            s_running: &[f32],
+        ) -> (Vec<f32>, usize, LdaPartialLeg) {
+            let (s_local, n_sampled, touched) =
+                ws.gibbs_slice(slice_id, &mut data.counts, s_running);
+            let handoff_bytes = data.counts.len() * 4;
+            router.forward(slice_id, data, consumed + 1);
+            let leg = LdaPartialLeg {
+                slice_id,
+                b_slice: None,
+                lease: Some(LeaseToken { slice_id, version: consumed }),
+                handoff_bytes,
+                dest_worker,
+                n_sampled,
+            };
+            (s_local, touched, leg)
+        }
+
+        let LdaTask { legs, s, router, order } = task;
         let n_topics = s.len();
-        // the worker's local s̃ threads through the queue: leg j+1 samples
-        // against the sums leg j left behind
+        // the worker's local s̃ threads through the queue: the next swept
+        // leg samples against the sums the previous one left behind
         let mut s_running = s;
         let mut out_legs = Vec::with_capacity(legs.len());
         let mut touched_words = 0usize;
+
+        // availability-ordered sweep applies to routed legs only (BSP legs
+        // carry their slices — there is nothing to wait on): sweep
+        // whichever granted slice landed first instead of stalling on ring
+        // order ([`SliceRouter::take_earliest`] is the shared discipline).
+        if order == QueueOrder::Availability && router.is_some() {
+            let router = router.as_ref().expect("checked is_some");
+            let mut remaining = legs;
+            let spin = Duration::from_millis(router_spin_ms());
+            while !remaining.is_empty() {
+                let grants: Vec<(usize, u64)> = remaining
+                    .iter()
+                    .map(|l| {
+                        let version =
+                            l.version.expect("availability legs are routed");
+                        (l.slice_id, version)
+                    })
+                    .collect();
+                let (pick, data, consumed) =
+                    router.take_earliest(&grants, spin);
+                let leg = remaining.remove(pick);
+                let (s_local, touched, out) = routed_leg(
+                    ws,
+                    router,
+                    leg.slice_id,
+                    leg.dest_worker,
+                    data,
+                    consumed,
+                    &s_running,
+                );
+                s_running = s_local;
+                touched_words += touched;
+                out_legs.push(out);
+            }
+            return LdaPartial {
+                legs: out_legs,
+                s_local: s_running,
+                touched_words,
+                n_topics,
+            };
+        }
+
         for leg in legs {
             let LdaTaskLeg { slice_id, b_slice, version, dest_worker } = leg;
             match (&router, version, b_slice) {
                 (Some(router), Some(version), None) => {
                     // receive the slice from its previous holder (blocks
                     // until exactly this version was forwarded), sweep,
-                    // then hand it straight on to the next holder.  The
-                    // reported lease carries the version the *router*
-                    // handed over, so the engine's collect-time
-                    // cross-check against the granted token spans both
-                    // layers.
-                    let (mut data, consumed) = router.take(slice_id, version);
-                    let (s_local, n_sampled, touched) =
-                        ws.gibbs_slice(slice_id, &mut data.counts, &s_running);
-                    let handoff_bytes = data.counts.len() * 4;
-                    router.forward(slice_id, data, consumed + 1);
+                    // then hand it straight on to the next holder
+                    let (data, consumed) = router.take(slice_id, version);
+                    let (s_local, touched, out) = routed_leg(
+                        ws, router, slice_id, dest_worker, data, consumed,
+                        &s_running,
+                    );
                     s_running = s_local;
                     touched_words += touched;
-                    out_legs.push(LdaPartialLeg {
-                        slice_id,
-                        b_slice: None,
-                        lease: Some(LeaseToken { slice_id, version: consumed }),
-                        handoff_bytes,
-                        dest_worker,
-                        n_sampled,
-                    });
+                    out_legs.push(out);
                 }
                 (None, None, Some(mut data)) => {
                     let (s_local, n_sampled, touched) =
@@ -482,6 +550,17 @@ impl StradsApp for LdaApp {
 
     fn supports_rotation() -> bool {
         true
+    }
+
+    fn supports_queue_reorder() -> bool {
+        // the Gibbs sweep threads s̃ leg to leg but is otherwise
+        // order-free: any within-queue permutation leaves disjointness,
+        // the version chains, and token conservation intact
+        true
+    }
+
+    fn set_queue_order(&mut self, order: QueueOrder) {
+        self.sched.set_queue_order(order);
     }
 
     fn n_rotation_slices(&self) -> usize {
@@ -859,6 +938,59 @@ mod tests {
         assert!((total0 - total1).abs() < 1e-2);
         let first = res.recorder.points()[0].objective;
         assert!(res.final_objective > first);
+    }
+
+    #[test]
+    fn availability_order_runs_and_conserves_counts() {
+        // U = 2P availability-ordered rotation under jittered handoff
+        // latencies: workers sweep whichever queued slice lands first
+        // (any within-queue permutation), yet every invariant holds —
+        // token mass conserved, each chain advances once per round, the
+        // run learns, and the engine reports the handoff wait it modelled.
+        let corpus = lda_corpus::generate(&CorpusConfig {
+            n_docs: 120,
+            vocab: 400,
+            doc_len_mean: 30,
+            n_topics: 5,
+            seed: 11,
+            ..Default::default()
+        });
+        let (workers, u) = (4usize, 8usize);
+        let rounds = 16u64;
+        let s = setup::build_sliced(
+            &corpus, 8, workers, u, Some(&[1.0; 4]), 0.1, 0.01, 11,
+        );
+        let cfg = RunConfig {
+            max_rounds: rounds,
+            eval_every: 4,
+            mode: crate::coordinator::ExecutionMode::Rotation { depth: 3 },
+            queue_order: QueueOrder::Availability,
+            handoff_jitter: crate::cluster::HandoffJitter::Jittered {
+                base_frac: 0.2,
+                jitter_frac: 1.5,
+                seed: 11,
+            },
+            label: "lda-avail".into(),
+            ..Default::default()
+        };
+        let mut e = StradsEngine::new(s.app, s.shards, &cfg);
+        let total0: f32 = e.app().s.iter().sum();
+        let res = e.run(&cfg);
+        assert_eq!(res.rounds_run, rounds);
+        assert!(res.total_p2p_bytes > 0);
+        assert!(
+            res.total_handoff_wait_secs >= 0.0,
+            "handoff wait is accounted"
+        );
+        let app = e.app();
+        for a in 0..app.slices.n_slices() {
+            assert!(app.slices.peek(a).is_some());
+            assert_eq!(app.slices.version(a), rounds);
+        }
+        let total1: f32 = app.s.iter().sum();
+        assert!((total0 - total1).abs() < 1e-2);
+        let first = res.recorder.points()[0].objective;
+        assert!(res.final_objective > first, "the run must learn");
     }
 
     #[test]

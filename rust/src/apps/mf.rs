@@ -7,11 +7,29 @@
 //!           the data shard, exactly the paper's q_p partitioning).
 //! pull:     H rounds — h_kj ← Σ_p a / (λ + Σ_p b) (g_3); broadcast row.
 //! sync:     workers refresh their H copy + residuals.
+//!
+//! A second MF workload, [`MfBlockApp`], expresses the *block-rotation*
+//! schedule (Gemulla et al.'s DSGD blocking on the same virtual ring as
+//! LDA's word rotation): the item columns are over-decomposed into U ≥ P
+//! disjoint [`HBlock`]s that rotate worker→worker, and each worker runs
+//! SGD sweeps of its user-row shard against the blocks it currently
+//! holds.  It reuses the rotation machinery wholesale —
+//! [`crate::scheduler::RotationScheduler`] queues,
+//! [`crate::kvstore::SliceRouter`] handoffs, [`LeaseLedger`] version
+//! chains, [`crate::coordinator::HandoffLeg`] accounting — so the second
+//! paper workload exercises the same multi-slice pipeline (and the
+//! availability-ordered queue discipline) as LDA.
 
 use crate::backend::MfShard;
-use crate::coordinator::StradsApp;
+use crate::cluster::router_spin_ms;
+use crate::coordinator::{HandoffLeg, StradsApp};
+use crate::kvstore::{LeaseLedger, LeaseToken, SliceRouter, SliceStore};
+use crate::scheduler::rotation::{self, QueueOrder, RotationScheduler};
 use crate::scheduler::round_robin::{Factor, MfRound, RoundRobinScheduler};
+use crate::sparse::CsrMatrix;
 use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Coordinator-side configuration.
 pub struct MfConfig {
@@ -169,12 +187,722 @@ impl StradsApp for MfApp {
     }
 }
 
+// ---------------------------------------------------------------------
+// Block-rotation MF: U ≥ P item blocks on the LDA-style virtual ring
+// ---------------------------------------------------------------------
+
+/// One rotating block of the item-factor matrix H: the factor vectors of a
+/// disjoint set of item columns, leased to exactly one worker per round.
+#[derive(Clone, Debug)]
+pub struct HBlock {
+    /// Global item ids of this block's columns.
+    pub cols: Vec<u32>,
+    /// Factors, `cols.len() × rank` row-major (local column-major layout:
+    /// the factor vector of `cols[c]` is `h[c*rank .. (c+1)*rank]`).
+    pub h: Vec<f32>,
+}
+
+impl HBlock {
+    /// Payload bytes a handoff of this block moves.
+    pub fn bytes(&self) -> usize {
+        self.cols.len() * 4 + self.h.len() * 4
+    }
+}
+
+/// Coordinator-side configuration for [`MfBlockApp`].
+pub struct MfBlockConfig {
+    pub rank: usize,
+    pub n_items: usize,
+    pub n_workers: usize,
+    pub lambda: f32,
+    /// Initial SGD step size.
+    pub eta0: f32,
+    /// Step decay: round `t` uses `eta0 / (1 + eta_decay·t)`.
+    pub eta_decay: f32,
+}
+
+/// One leg of a worker's block-rotation round.
+pub struct MfBlockTaskLeg {
+    pub block_id: usize,
+    /// BSP path: the checked-out block ships with the task.
+    pub h_block: Option<HBlock>,
+    /// Rotation-pipelined path: the lease version this leg consumes.
+    pub version: Option<u64>,
+    /// Worker that holds this block next round.
+    pub dest_worker: usize,
+}
+
+/// Task for one worker: its block queue plus this round's SGD step.
+pub struct MfBlockTask {
+    pub legs: Vec<MfBlockTaskLeg>,
+    pub eta: f32,
+    pub router: Option<Arc<SliceRouter<HBlock>>>,
+    /// Within-queue service discipline (see [`crate::apps::lda::LdaTask`]).
+    pub order: QueueOrder,
+}
+
+/// One leg of a worker partial: mirrors [`MfBlockTaskLeg`] after the
+/// sweep.
+pub struct MfBlockPartialLeg {
+    pub block_id: usize,
+    pub h_block: Option<HBlock>,
+    pub lease: Option<LeaseToken>,
+    pub handoff_bytes: usize,
+    pub dest_worker: usize,
+    /// Rating updates applied in this leg (compute weight).
+    pub n_updates: usize,
+}
+
+/// Worker partial: per-leg results in sweep order.
+pub struct MfBlockPartial {
+    pub legs: Vec<MfBlockPartialLeg>,
+}
+
+/// One worker's state for block-rotation MF: its user-row ratings shard,
+/// its W rows (shard-local, exactly the paper's q_p partitioning), and a
+/// full **H mirror** used only for objective evaluation.
+///
+/// Updates never read the mirror: SGD runs against the authoritative
+/// routed block.  After sweeping a block the worker refreshes the
+/// mirror's columns, so a mirror entry is at most U−1 rounds stale — an
+/// SSP-style approximation that only touches the *reported* objective
+/// (and vanishes as the factors converge), never the optimization path.
+pub struct MfBlockShard {
+    a: CsrMatrix,
+    /// Local W rows (n_local × rank), row-major.
+    pub w: Vec<f32>,
+    /// Eval-only H mirror (n_items × rank, row per item).
+    h_mirror: Vec<f32>,
+    /// Global per-item rating counts (spreads the λ‖h_j‖ pull across the
+    /// updates that touch column j, wherever they run).
+    col_count: Vec<f32>,
+    /// Per-local-row rating counts (same for the λ‖w_i‖ pull).
+    row_count: Vec<f32>,
+    rank: usize,
+    lambda: f32,
+    /// SGD passes over the shard×block ratings per leg.
+    inner_sweeps: usize,
+    /// Reusable global-item → block-local column map (`u32::MAX` =
+    /// not in the current block).  Filled and reset per leg in
+    /// O(block columns) — block composition is fixed for the run, so
+    /// only the touched entries ever change.
+    local_scratch: Vec<u32>,
+}
+
+impl MfBlockShard {
+    pub fn new(
+        a: CsrMatrix,
+        w: Vec<f32>,
+        h_mirror: Vec<f32>,
+        col_count: Vec<f32>,
+        rank: usize,
+        lambda: f32,
+        inner_sweeps: usize,
+    ) -> Self {
+        assert_eq!(w.len(), a.rows() * rank);
+        assert_eq!(h_mirror.len(), a.cols() * rank);
+        assert_eq!(col_count.len(), a.cols());
+        assert!(inner_sweeps >= 1);
+        let row_count: Vec<f32> =
+            (0..a.rows()).map(|i| a.row_nnz(i).max(1) as f32).collect();
+        let local_scratch = vec![u32::MAX; a.cols()];
+        MfBlockShard {
+            a,
+            w,
+            h_mirror,
+            col_count,
+            row_count,
+            rank,
+            lambda,
+            inner_sweeps,
+            local_scratch,
+        }
+    }
+
+    /// SGD-sweep this shard's ratings whose items fall in `block`,
+    /// mutating the block's factors and the local W rows in place, then
+    /// refresh the eval mirror's columns.  Returns the number of rating
+    /// updates applied (the leg's compute weight).
+    pub fn sgd_block(&mut self, block: &mut HBlock, eta: f32) -> usize {
+        let k = self.rank;
+        // mark the block's columns in the persistent scratch map (reset
+        // below, so fill + reset cost O(block columns), not O(items))
+        for (c, &j) in block.cols.iter().enumerate() {
+            self.local_scratch[j as usize] = c as u32;
+        }
+        let mut updates = 0usize;
+        let mut wi_old = vec![0.0f32; k];
+        for _ in 0..self.inner_sweeps {
+            for i in 0..self.a.rows() {
+                let (cols, vals) = self.a.row(i);
+                for (&j, &aij) in cols.iter().zip(vals.iter()) {
+                    let j = j as usize;
+                    let c = self.local_scratch[j];
+                    if c == u32::MAX {
+                        continue;
+                    }
+                    let hj = c as usize * k;
+                    let wi = i * k;
+                    let mut pred = 0.0f32;
+                    for r in 0..k {
+                        pred += self.w[wi + r] * block.h[hj + r];
+                    }
+                    let e = aij - pred;
+                    wi_old.copy_from_slice(&self.w[wi..wi + k]);
+                    let wreg = self.lambda / self.row_count[i];
+                    let hreg = self.lambda / self.col_count[j].max(1.0);
+                    for r in 0..k {
+                        self.w[wi + r] +=
+                            eta * (e * block.h[hj + r] - wreg * wi_old[r]);
+                        block.h[hj + r] +=
+                            eta * (e * wi_old[r] - hreg * block.h[hj + r]);
+                    }
+                    updates += 1;
+                }
+            }
+        }
+        for (c, &j) in block.cols.iter().enumerate() {
+            self.h_mirror[j as usize * k..(j as usize + 1) * k]
+                .copy_from_slice(&block.h[c * k..(c + 1) * k]);
+            self.local_scratch[j as usize] = u32::MAX; // reset for next leg
+        }
+        updates
+    }
+
+    /// Shard loss Σ (a_ij − w_i·h̃_j)² + λ‖W_shard‖² against the eval
+    /// mirror.
+    pub fn loss(&self) -> f64 {
+        let k = self.rank;
+        let mut sq = 0.0f64;
+        for i in 0..self.a.rows() {
+            for (j, aij) in self.a.row_iter(i) {
+                let j = j as usize;
+                let mut pred = 0.0f32;
+                for r in 0..k {
+                    pred += self.w[i * k + r] * self.h_mirror[j * k + r];
+                }
+                let e = (aij - pred) as f64;
+                sq += e * e;
+            }
+        }
+        let wreg: f64 =
+            self.w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        sq + self.lambda as f64 * wreg
+    }
+}
+
+/// Coordinator state for block-rotation MF: the H blocks (leased via
+/// [`SliceStore`] under BSP, a [`SliceRouter`] ring under pipelined
+/// rotation), the rotation schedule, and the SGD step schedule.
+pub struct MfBlockApp {
+    blocks: SliceStore<HBlock>,
+    router: Option<Arc<SliceRouter<HBlock>>>,
+    ledger: LeaseLedger,
+    sched: RotationScheduler,
+    rank: usize,
+    n_items: usize,
+    n_workers: usize,
+    n_blocks: usize,
+    lambda: f32,
+    eta0: f32,
+    eta_decay: f32,
+}
+
+impl MfBlockApp {
+    /// `blocks` are the initial H blocks, U ≥ `cfg.n_workers` of them,
+    /// jointly covering every item column exactly once.
+    pub fn new(cfg: MfBlockConfig, blocks: Vec<HBlock>) -> Self {
+        let n_blocks = blocks.len();
+        assert!(
+            n_blocks >= cfg.n_workers,
+            "need at least one block per worker ({n_blocks} < {})",
+            cfg.n_workers
+        );
+        let mut seen = vec![false; cfg.n_items];
+        for b in &blocks {
+            assert_eq!(b.h.len(), b.cols.len() * cfg.rank);
+            for &j in &b.cols {
+                assert!(!seen[j as usize], "item {j} in two blocks");
+                seen[j as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "blocks must cover every item");
+        MfBlockApp {
+            sched: RotationScheduler::with_workers(n_blocks, cfg.n_workers),
+            blocks: SliceStore::new(blocks),
+            router: None,
+            ledger: LeaseLedger::new(n_blocks),
+            rank: cfg.rank,
+            n_items: cfg.n_items,
+            n_workers: cfg.n_workers,
+            n_blocks,
+            lambda: cfg.lambda,
+            eta0: cfg.eta0,
+            eta_decay: cfg.eta_decay,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Read-only access to a checked-in block (tests, eval).
+    pub fn peek_block(&self, block_id: usize) -> Option<&HBlock> {
+        self.blocks.peek(block_id)
+    }
+
+    /// Install a skew-aware ring placement
+    /// ([`rotation::skew_aware_placement`]); must precede round 0.
+    pub fn set_ring_placement(&mut self, placement: Vec<usize>) {
+        self.sched.set_placement(placement);
+    }
+
+    /// λ‖H‖² over the parked blocks (checked in under BSP, parked in the
+    /// router between rotation rounds — the engine drains before eval).
+    fn h_reg(&self) -> f64 {
+        let mut reg = 0.0f64;
+        for b in 0..self.n_blocks {
+            let sum = |blk: &HBlock| -> f64 {
+                blk.h.iter().map(|&x| (x as f64) * (x as f64)).sum()
+            };
+            reg += match &self.router {
+                Some(router) => router.with_slice(b, |blk| {
+                    sum(blk.expect("block parked in the router at eval time"))
+                }),
+                None => sum(self
+                    .blocks
+                    .peek(b)
+                    .expect("all blocks checked in at eval time")),
+            };
+        }
+        self.lambda as f64 * reg
+    }
+}
+
+impl StradsApp for MfBlockApp {
+    type Task = MfBlockTask;
+    type Partial = MfBlockPartial;
+    type SyncMsg = ();
+    type WorkerState = MfBlockShard;
+
+    fn schedule(&mut self, round: u64) -> Vec<MfBlockTask> {
+        let u = self.n_blocks;
+        let p_workers = self.n_workers;
+        let eta = self.eta0 / (1.0 + self.eta_decay * round as f32);
+        let queues = self.sched.next_round_queues();
+        let mut seen = vec![false; u];
+        let mut tasks = Vec::with_capacity(queues.len());
+        for (p, queue) in queues.into_iter().enumerate() {
+            let mut legs = Vec::with_capacity(queue.len());
+            for (j, block_id) in queue.into_iter().enumerate() {
+                assert!(
+                    !seen[block_id],
+                    "block {block_id} assigned twice in one round"
+                );
+                seen[block_id] = true;
+                let dest_worker = self.sched.next_holder(p + j * p_workers);
+                let (h_block, version) = match &self.router {
+                    Some(_) => (None, Some(self.ledger.grant(block_id))),
+                    None => {
+                        (Some(self.blocks.checkout(block_id).data), None)
+                    }
+                };
+                legs.push(MfBlockTaskLeg {
+                    block_id,
+                    h_block,
+                    version,
+                    dest_worker,
+                });
+            }
+            tasks.push(MfBlockTask {
+                legs,
+                eta,
+                router: self.router.as_ref().map(Arc::clone),
+                order: self.sched.queue_order(),
+            });
+        }
+        tasks
+    }
+
+    fn push(ws: &mut MfBlockShard, task: MfBlockTask) -> MfBlockPartial {
+        /// One routed leg once its block is in hand: sweep, forward,
+        /// report the consumed lease.
+        fn routed_leg(
+            ws: &mut MfBlockShard,
+            router: &SliceRouter<HBlock>,
+            block_id: usize,
+            dest_worker: usize,
+            mut data: HBlock,
+            consumed: u64,
+            eta: f32,
+        ) -> MfBlockPartialLeg {
+            let n_updates = ws.sgd_block(&mut data, eta);
+            let handoff_bytes = data.bytes();
+            router.forward(block_id, data, consumed + 1);
+            MfBlockPartialLeg {
+                block_id,
+                h_block: None,
+                lease: Some(LeaseToken { slice_id: block_id, version: consumed }),
+                handoff_bytes,
+                dest_worker,
+                n_updates,
+            }
+        }
+
+        let MfBlockTask { legs, eta, router, order } = task;
+        let mut out_legs = Vec::with_capacity(legs.len());
+
+        // routed legs only (BSP legs carry their blocks): sweep whichever
+        // granted block landed first ([`SliceRouter::take_earliest`] is
+        // the shared discipline; see the LDA push path for its contract)
+        if order == QueueOrder::Availability && router.is_some() {
+            let router = router.as_ref().expect("checked is_some");
+            let mut remaining = legs;
+            let spin = Duration::from_millis(router_spin_ms());
+            while !remaining.is_empty() {
+                let grants: Vec<(usize, u64)> = remaining
+                    .iter()
+                    .map(|l| {
+                        let version =
+                            l.version.expect("availability legs are routed");
+                        (l.block_id, version)
+                    })
+                    .collect();
+                let (pick, data, consumed) =
+                    router.take_earliest(&grants, spin);
+                let leg = remaining.remove(pick);
+                out_legs.push(routed_leg(
+                    ws,
+                    router,
+                    leg.block_id,
+                    leg.dest_worker,
+                    data,
+                    consumed,
+                    eta,
+                ));
+            }
+            return MfBlockPartial { legs: out_legs };
+        }
+
+        for leg in legs {
+            let MfBlockTaskLeg { block_id, h_block, version, dest_worker } =
+                leg;
+            match (&router, version, h_block) {
+                (Some(router), Some(version), None) => {
+                    let (data, consumed) = router.take(block_id, version);
+                    out_legs.push(routed_leg(
+                        ws, router, block_id, dest_worker, data, consumed,
+                        eta,
+                    ));
+                }
+                (None, None, Some(mut data)) => {
+                    let n_updates = ws.sgd_block(&mut data, eta);
+                    out_legs.push(MfBlockPartialLeg {
+                        block_id,
+                        h_block: Some(data),
+                        lease: None,
+                        handoff_bytes: 0,
+                        dest_worker,
+                        n_updates,
+                    });
+                }
+                _ => panic!("task leg mixes the BSP and routed forms"),
+            }
+        }
+        MfBlockPartial { legs: out_legs }
+    }
+
+    fn pull(
+        &mut self,
+        _round: u64,
+        partials: Vec<MfBlockPartial>,
+    ) -> Option<()> {
+        for part in partials {
+            for leg in part.legs {
+                match (leg.h_block, leg.lease) {
+                    (Some(data), _) => {
+                        let lease = crate::kvstore::SliceLease {
+                            slice_id: leg.block_id,
+                            data,
+                            version: self.blocks.version(leg.block_id),
+                        };
+                        self.blocks.checkin(lease);
+                    }
+                    (None, Some(token)) => self.ledger.settle(&token),
+                    (None, None) => {
+                        panic!("partial leg carries neither a block nor a lease")
+                    }
+                }
+            }
+        }
+        None // H lives in the rotating blocks; nothing to broadcast
+    }
+
+    fn sync(_ws: &mut MfBlockShard, _msg: &()) {}
+
+    fn eval(ws: &mut MfBlockShard) -> f64 {
+        ws.loss()
+    }
+
+    fn objective_from(&self, shard_sum: f64) -> f64 {
+        shard_sum + self.h_reg()
+    }
+
+    fn task_bytes(t: &MfBlockTask) -> usize {
+        // BSP block payloads are charged on the partial side (one fetch +
+        // one writeback per leg, like LDA's KV traffic); the task itself
+        // carries scheduling metadata + the step size
+        4 + 16 * t.legs.len().max(1)
+    }
+
+    fn partial_bytes(p: &MfBlockPartial) -> usize {
+        let blocks: usize =
+            p.legs.iter().filter_map(|l| l.h_block.as_ref()).map(HBlock::bytes).sum();
+        if blocks > 0 {
+            2 * blocks + 16
+        } else {
+            // rotation: only lease tokens ride the hub; block bytes are
+            // charged as the p2p handoffs
+            32 * p.legs.len().max(1)
+        }
+    }
+
+    fn sync_bytes(_m: &()) -> usize {
+        0
+    }
+
+    fn model_bytes(ws: &MfBlockShard) -> u64 {
+        ((ws.w.len() + ws.h_mirror.len()) * 4) as u64
+    }
+
+    fn p2p_payloads() -> bool {
+        // H blocks rotate between workers, never through the scheduler
+        true
+    }
+
+    fn supports_ssp() -> bool {
+        // blocks are exclusively leased: stale shared reads do not apply
+        false
+    }
+
+    fn supports_rotation() -> bool {
+        true
+    }
+
+    fn supports_queue_reorder() -> bool {
+        // the shard's W rows DO thread leg to leg (each sweep reads the
+        // updates earlier legs made), but any within-queue permutation is
+        // still a valid sequential SGD order — reordering is legal;
+        // sweeping legs concurrently within a worker would not be
+        true
+    }
+
+    fn set_queue_order(&mut self, order: QueueOrder) {
+        self.sched.set_queue_order(order);
+    }
+
+    fn n_rotation_slices(&self) -> usize {
+        self.n_blocks
+    }
+
+    fn begin_rotation(&mut self, _depth: u64) {
+        assert!(self.router.is_none(), "rotation mode already active");
+        let router = Arc::new(SliceRouter::new(self.n_blocks));
+        for b in 0..self.n_blocks {
+            let lease = self.blocks.checkout(b);
+            self.ledger.seed(b, lease.version);
+            router.seed(b, lease.data, lease.version);
+        }
+        self.router = Some(router);
+    }
+
+    fn end_rotation(&mut self) {
+        if let Some(router) = self.router.take() {
+            for b in 0..router.n_slices() {
+                let (data, version) = router.reclaim(b);
+                self.blocks.restore(b, data, version);
+            }
+        }
+    }
+
+    fn task_leases(t: &MfBlockTask) -> Vec<LeaseToken> {
+        t.legs
+            .iter()
+            .filter_map(|l| {
+                l.version.map(|version| LeaseToken {
+                    slice_id: l.block_id,
+                    version,
+                })
+            })
+            .collect()
+    }
+
+    fn partial_legs(p: &MfBlockPartial) -> Vec<HandoffLeg> {
+        p.legs
+            .iter()
+            .filter_map(|l| {
+                l.lease.map(|token| HandoffLeg {
+                    token,
+                    dest_worker: l.dest_worker,
+                    bytes: l.handoff_bytes,
+                    weight: l.n_updates as f64,
+                })
+            })
+            .collect()
+    }
+}
+
+/// Builders for the block-rotation MF problem.
+pub mod block_setup {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Knobs with the defaults the fig9 MF-rotation arm uses (validated
+    /// against CCD convergence at bench scales).
+    pub struct BlockSgdConfig {
+        pub lambda: f32,
+        pub eta0: f32,
+        pub eta_decay: f32,
+        pub inner_sweeps: usize,
+    }
+
+    impl Default for BlockSgdConfig {
+        fn default() -> Self {
+            BlockSgdConfig {
+                lambda: 0.05,
+                eta0: 0.3,
+                eta_decay: 0.05,
+                inner_sweeps: 3,
+            }
+        }
+    }
+
+    /// Block-rotation MF problem ready for the engine.
+    pub struct MfBlockSetup {
+        pub app: MfBlockApp,
+        pub shards: Vec<MfBlockShard>,
+    }
+
+    /// Build U = `n_blocks` ≥ `n_workers` item blocks (nnz-balanced via
+    /// the frequency-weighted split — per-leg compute tracks a block's
+    /// rating mass) and per-worker user-row shards from a ratings matrix.
+    /// Factor init mirrors the CCD builder's recipe (`seed ^ 0xF00D`,
+    /// 1/√rank-scaled normals, H then per-shard W) so the two MF apps
+    /// start from comparable objectives on the same data.  When
+    /// `worker_speeds` is given, the ring placement is skew-aware on
+    /// block rating mass.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_blocked(
+        a: &CsrMatrix,
+        rank: usize,
+        n_workers: usize,
+        n_blocks: usize,
+        worker_speeds: Option<&[f64]>,
+        sgd: &BlockSgdConfig,
+        seed: u64,
+    ) -> MfBlockSetup {
+        let (users, m) = (a.rows(), a.cols());
+        assert!(n_blocks >= n_workers, "fewer blocks than workers");
+        assert!(m >= n_blocks, "fewer items than blocks");
+
+        // per-item rating counts drive the nnz-balanced block split
+        let mut col_nnz = vec![0u64; m];
+        for i in 0..users {
+            for (j, _) in a.row_iter(i) {
+                col_nnz[j as usize] += 1;
+            }
+        }
+        let block_of =
+            RotationScheduler::partition_words_by_freq(&col_nnz, n_blocks);
+        let mut cols_by_block: Vec<Vec<u32>> = vec![Vec::new(); n_blocks];
+        for (j, &b) in block_of.iter().enumerate() {
+            cols_by_block[b].push(j as u32);
+        }
+
+        // factor init, CCD-recipe order: H first, then per-shard W
+        let mut rng = Rng::new(seed ^ 0xF00D);
+        let scale = 1.0 / (rank as f32).sqrt();
+        let h0: Vec<f32> =
+            (0..rank * m).map(|_| rng.normal_f32() * scale).collect();
+        let blocks: Vec<HBlock> = cols_by_block
+            .iter()
+            .map(|cols| {
+                let mut h = Vec::with_capacity(cols.len() * rank);
+                for &j in cols {
+                    for r in 0..rank {
+                        h.push(h0[r * m + j as usize]);
+                    }
+                }
+                HBlock { cols: cols.clone(), h }
+            })
+            .collect();
+        let mut mirror0 = vec![0.0f32; m * rank];
+        for j in 0..m {
+            for r in 0..rank {
+                mirror0[j * rank + r] = h0[r * m + j];
+            }
+        }
+
+        let mut app = MfBlockApp::new(
+            MfBlockConfig {
+                rank,
+                n_items: m,
+                n_workers,
+                lambda: sgd.lambda,
+                eta0: sgd.eta0,
+                eta_decay: sgd.eta_decay,
+            },
+            blocks,
+        );
+        if let Some(speeds) = worker_speeds {
+            let mut masses = vec![0u64; n_blocks];
+            for (j, &b) in block_of.iter().enumerate() {
+                masses[b] += col_nnz[j];
+            }
+            app.set_ring_placement(rotation::skew_aware_placement(
+                &masses, speeds,
+            ));
+        }
+
+        let col_count: Vec<f32> =
+            col_nnz.iter().map(|&c| c.max(1) as f32).collect();
+        let per = users / n_workers;
+        let mut shards = Vec::with_capacity(n_workers);
+        for p in 0..n_workers {
+            let lo = p * per;
+            let hi = if p == n_workers - 1 { users } else { lo + per };
+            let shard = a.row_slice(lo, hi);
+            let w0: Vec<f32> = (0..shard.rows() * rank)
+                .map(|_| rng.normal_f32() * scale)
+                .collect();
+            shards.push(MfBlockShard::new(
+                shard,
+                w0,
+                mirror0.clone(),
+                col_count.clone(),
+                rank,
+                sgd.lambda,
+                sgd.inner_sweeps,
+            ));
+        }
+        MfBlockSetup { app, shards }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::native::NativeMfShard;
     use crate::backend::MfShard;
-    use crate::coordinator::{RunConfig, StradsEngine};
+    use crate::coordinator::{ExecutionMode, RunConfig, StradsEngine};
     use crate::datagen::mf_ratings::{self, MfGenConfig};
     use crate::util::Rng;
 
@@ -307,5 +1035,200 @@ mod tests {
         assert_eq!(&e.app().h, &h_before, "W round must not touch H");
         e.round(1);
         assert_ne!(&e.app().h, &h_before, "H round must update a row");
+    }
+
+    // ---- block-rotation MF -------------------------------------------
+
+    fn block_engine(
+        users: usize,
+        items: usize,
+        rank: usize,
+        workers: usize,
+        blocks: usize,
+        seed: u64,
+        cfg: &RunConfig,
+    ) -> StradsEngine<MfBlockApp> {
+        let data = mf_ratings::generate(&MfGenConfig {
+            n_users: users,
+            n_items: items,
+            density: 0.08,
+            true_rank: 4,
+            seed,
+            ..Default::default()
+        });
+        let speeds = vec![1.0; workers];
+        let s = block_setup::build_blocked(
+            &data.a,
+            rank,
+            workers,
+            blocks,
+            Some(&speeds),
+            &block_setup::BlockSgdConfig::default(),
+            seed,
+        );
+        StradsEngine::new(s.app, s.shards, cfg)
+    }
+
+    /// Every block's H, concatenated in block order (bit-exact state
+    /// comparison across modes).
+    fn all_block_factors(app: &MfBlockApp) -> Vec<f32> {
+        (0..app.n_blocks())
+            .flat_map(|b| {
+                app.peek_block(b).expect("checked in").h.iter().copied()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn block_sgd_reduces_objective_under_bsp() {
+        let cfg = RunConfig {
+            max_rounds: 36,
+            eval_every: 12,
+            label: "mf-block-bsp".into(),
+            ..Default::default()
+        };
+        let mut e = block_engine(90, 60, 4, 3, 6, 7, &cfg);
+        let res = e.run(&cfg);
+        let first = res.recorder.points()[0].objective;
+        assert!(
+            res.final_objective < 0.5 * first,
+            "block SGD must cut the objective: {first} -> {}",
+            res.final_objective
+        );
+    }
+
+    #[test]
+    fn block_rotation_depth1_matches_bsp_exactly() {
+        // the SGD sweep is deterministic and the depth-1 router path
+        // serializes into the same block order as the checkout/checkin
+        // barrier, so objectives and the factor state must match
+        // bit-exactly (the MF analog of the LDA depth-1 regression).
+        let run = |mode: ExecutionMode| {
+            let cfg = RunConfig {
+                max_rounds: 12,
+                eval_every: 4,
+                mode,
+                label: "mf-block-eq".into(),
+                ..Default::default()
+            };
+            let mut e = block_engine(60, 40, 4, 2, 4, 17, &cfg);
+            let res = e.run(&cfg);
+            let objs: Vec<f64> = res
+                .recorder
+                .points()
+                .iter()
+                .map(|p| p.objective)
+                .collect();
+            (objs, all_block_factors(e.app()))
+        };
+        let (bsp_obj, bsp_h) = run(ExecutionMode::Bsp);
+        let (rot_obj, rot_h) = run(ExecutionMode::Rotation { depth: 1 });
+        assert_eq!(bsp_obj, rot_obj, "depth-1 must reproduce BSP objectives");
+        assert_eq!(bsp_h, rot_h, "factor state must match bit-exactly");
+    }
+
+    #[test]
+    fn block_rotation_pipelines_and_settles_chains() {
+        let (workers, blocks) = (3usize, 6usize);
+        let rounds = 18u64;
+        let cfg = RunConfig {
+            max_rounds: rounds,
+            eval_every: 6,
+            mode: ExecutionMode::Rotation { depth: 3 },
+            straggler: crate::cluster::StragglerModel::Rotating {
+                factor: 4.0,
+            },
+            label: "mf-block-rot".into(),
+            ..Default::default()
+        };
+        let mut e = block_engine(90, 60, 4, workers, blocks, 23, &cfg);
+        let res = e.run(&cfg);
+        assert_eq!(res.rounds_run, rounds);
+        let stats = res.ssp.expect("rotation run reports pipeline stats");
+        assert!(stats.max_staleness() <= 2, "depth-3 bound");
+        assert!(res.total_p2p_bytes > 0, "handoffs ride the p2p links");
+        // every block forwarded once per round, minus free self-transfers
+        assert!(
+            res.total_p2p_msgs >= rounds * (blocks - workers) as u64,
+            "only {} handoffs recorded",
+            res.total_p2p_msgs
+        );
+        let app = e.app();
+        for b in 0..app.n_blocks() {
+            assert!(app.peek_block(b).is_some());
+        }
+        let first = res.recorder.points()[0].objective;
+        assert!(res.final_objective < first, "the run must learn");
+    }
+
+    #[test]
+    fn block_rotation_availability_order_runs_and_learns() {
+        let cfg = RunConfig {
+            max_rounds: 18,
+            eval_every: 6,
+            mode: ExecutionMode::Rotation { depth: 3 },
+            queue_order: crate::coordinator::QueueOrder::Availability,
+            handoff_jitter: crate::cluster::HandoffJitter::Jittered {
+                base_frac: 0.2,
+                jitter_frac: 1.5,
+                seed: 5,
+            },
+            label: "mf-block-avail".into(),
+            ..Default::default()
+        };
+        let mut e = block_engine(90, 60, 4, 3, 6, 29, &cfg);
+        let res = e.run(&cfg);
+        assert_eq!(res.rounds_run, 18);
+        assert!(res.total_handoff_wait_secs >= 0.0);
+        let first = res.recorder.points()[0].objective;
+        assert!(res.final_objective < first, "the run must learn");
+    }
+
+    #[test]
+    fn blocked_builder_covers_items_and_balances_nnz() {
+        let data = mf_ratings::generate(&MfGenConfig {
+            n_users: 120,
+            n_items: 80,
+            density: 0.1,
+            true_rank: 4,
+            seed: 3,
+            ..Default::default()
+        });
+        let s = block_setup::build_blocked(
+            &data.a,
+            4,
+            3,
+            6,
+            None,
+            &block_setup::BlockSgdConfig::default(),
+            3,
+        );
+        // blocks partition the item set
+        let mut seen = vec![false; 80];
+        let mut nnz = vec![0usize; 6];
+        let mut col_nnz = vec![0usize; 80];
+        for i in 0..data.a.rows() {
+            for (j, _) in data.a.row_iter(i) {
+                col_nnz[j as usize] += 1;
+            }
+        }
+        for b in 0..s.app.n_blocks() {
+            let blk = s.app.peek_block(b).unwrap();
+            assert_eq!(blk.h.len(), blk.cols.len() * 4);
+            for &j in &blk.cols {
+                assert!(!seen[j as usize], "item {j} in two blocks");
+                seen[j as usize] = true;
+                nnz[b] += col_nnz[j as usize];
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "blocks must cover every item");
+        // the nnz-weighted split keeps block rating masses balanced
+        let (mn, mx) =
+            (*nnz.iter().min().unwrap(), *nnz.iter().max().unwrap());
+        assert!(
+            (mx as f64) <= 1.3 * (mn as f64).max(1.0),
+            "block nnz imbalanced: {nnz:?}"
+        );
+        assert_eq!(s.shards.len(), 3);
     }
 }

@@ -5,6 +5,7 @@
 //! |-------|-----------------------------|----------------------------|
 //! | LDA   | word-rotation               | collapsed Gibbs sampling   |
 //! | MF    | round-robin over rank rows  | coordinate descent (CCD)   |
+//! | MF (blocked) | item-block rotation (U ≥ P ring) | SGD block sweeps |
 //! | Lasso | dynamic priority + dep. filter | coordinate descent      |
 
 pub mod lasso;
@@ -13,4 +14,4 @@ pub mod mf;
 
 pub use lasso::{LassoApp, LassoConfig};
 pub use lda::{LdaApp, LdaConfig};
-pub use mf::{MfApp, MfConfig};
+pub use mf::{MfApp, MfBlockApp, MfBlockConfig, MfConfig};

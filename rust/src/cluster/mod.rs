@@ -19,5 +19,5 @@ pub mod pool;
 
 pub use clock::{StragglerModel, VirtualClock};
 pub use memory::MemoryTracker;
-pub use network::{NetworkConfig, NetworkModel};
-pub use pool::{ForwardQueue, PendingRound, WorkerPool};
+pub use network::{HandoffJitter, NetworkConfig, NetworkModel};
+pub use pool::{router_spin_ms, ForwardQueue, PendingRound, WorkerPool};

@@ -47,6 +47,65 @@ impl NetworkConfig {
     }
 }
 
+/// Per-handoff latency model for the rotation pipeline's virtual-time
+/// gates: the delay between a holder *finishing* a slice's sweep and the
+/// slice becoming available at its next holder.
+///
+/// Latencies are expressed as a **fraction of the forwarding sweep's
+/// compute seconds** — slice transfer bytes and sweep work both scale
+/// with the slice's token mass, and a relative knob stays meaningful
+/// across corpus scales and build-machine speeds (absolute seconds would
+/// dwarf or vanish against the measured compute depending on both).
+/// `None` is the PR-3 behaviour: handoffs land the instant the sweep
+/// finishes (bit-identical timelines).  `Jittered` draws a deterministic
+/// per-(slice, round) uniform variate, so two runs over the same schedule
+/// see the same latency field — arrival-order inversions included, which
+/// is exactly what [`crate::scheduler::rotation::QueueOrder::Availability`]
+/// exploits.
+#[derive(Debug, Clone, Default)]
+pub enum HandoffJitter {
+    /// Handoffs are instantaneous (default; pre-jitter behaviour).
+    #[default]
+    None,
+    /// Every handoff takes `frac` × the forwarding sweep's seconds.
+    Uniform { frac: f64 },
+    /// Handoff takes `(base_frac + jitter_frac · u)` × sweep seconds,
+    /// with `u ∈ [0, 1)` hashed deterministically from (slice, round,
+    /// seed).
+    Jittered { base_frac: f64, jitter_frac: f64, seed: u64 },
+}
+
+impl HandoffJitter {
+    /// Deterministic u ∈ [0, 1) per (slice, round, seed) — splitmix64
+    /// finalizer over the mixed key.
+    fn u01(slice: usize, round: u64, seed: u64) -> f64 {
+        let mut x = (slice as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(round.wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add(seed);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D049BB133111EB);
+        x ^= x >> 31;
+        (x >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Latency (virtual seconds) for the handoff of `slice` forwarded in
+    /// `round` by a sweep that took `sweep_secs`.  `None` returns exactly
+    /// 0.0, keeping default timelines bit-identical.
+    pub fn latency(&self, slice: usize, round: u64, sweep_secs: f64) -> f64 {
+        match self {
+            HandoffJitter::None => 0.0,
+            HandoffJitter::Uniform { frac } => frac * sweep_secs,
+            HandoffJitter::Jittered { base_frac, jitter_frac, seed } => {
+                (base_frac + jitter_frac * Self::u01(slice, round, *seed))
+                    * sweep_secs
+            }
+        }
+    }
+}
+
 /// Per-round traffic accounting and time modelling.
 #[derive(Debug)]
 pub struct NetworkModel {
@@ -254,6 +313,25 @@ mod tests {
         let mut n = NetworkModel::new(NetworkConfig::ideal(), 3);
         n.send_down(1, 123456);
         assert_eq!(n.round_time_and_reset(), 0.0);
+    }
+
+    #[test]
+    fn handoff_jitter_is_deterministic_scaled_and_bounded() {
+        assert_eq!(HandoffJitter::None.latency(3, 7, 0.5), 0.0);
+        let u = HandoffJitter::Uniform { frac: 0.5 };
+        assert!((u.latency(3, 7, 0.4) - 0.2).abs() < 1e-15);
+        let j = HandoffJitter::Jittered {
+            base_frac: 0.2,
+            jitter_frac: 1.5,
+            seed: 9,
+        };
+        let a = j.latency(3, 7, 1.0);
+        assert_eq!(a, j.latency(3, 7, 1.0), "same key, same latency");
+        assert!((0.2..0.2 + 1.5).contains(&a), "latency {a} out of band");
+        assert_ne!(a, j.latency(4, 7, 1.0), "slice varies the draw");
+        assert_ne!(a, j.latency(3, 8, 1.0), "round varies the draw");
+        // scales linearly with the sweep
+        assert!((j.latency(3, 7, 2.0) - 2.0 * a).abs() < 1e-12);
     }
 
     #[test]

@@ -62,6 +62,22 @@ pub fn thread_cpu_secs() -> f64 {
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
+/// Bounded wait for a [`ForwardQueue::take`] before it gives up, in
+/// milliseconds.  Env-tunable (`STRADS_ROUTER_SPIN_MS`, parsed once) so a
+/// scheduling bug that loses a handoff fails CI loudly after a bounded
+/// spin instead of hanging the job; the default is generous enough for
+/// any legitimate predecessor sweep.
+pub fn router_spin_ms() -> u64 {
+    use std::sync::OnceLock;
+    static MS: OnceLock<u64> = OnceLock::new();
+    *MS.get_or_init(|| {
+        std::env::var("STRADS_ROUTER_SPIN_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(120_000)
+    })
+}
+
 /// Slot-keyed, versioned, blocking handoff mailbox — the async forward
 /// queue under worker→worker state migration (pipelined rotation,
 /// [`crate::coordinator::ExecutionMode::Rotation`]).
@@ -71,8 +87,10 @@ pub fn thread_cpu_secs() -> f64 {
 /// producer (its ring predecessor) deposits it; depositing over an
 /// unconsumed item panics, as does finding an unexpected version — both
 /// are ordering violations in the handoff protocol, not recoverable
-/// conditions.  Waits carry a generous timeout so a protocol deadlock
-/// fails a test run loudly instead of hanging it.
+/// conditions.  Waits are bounded by [`router_spin_ms`] so a protocol
+/// deadlock fails a test run loudly instead of hanging it;
+/// [`ForwardQueue::try_take`] is the non-blocking poll availability-ordered
+/// consumers use to sweep whichever slice landed first.
 #[derive(Debug)]
 pub struct ForwardQueue<T> {
     slots: Mutex<Vec<Option<(T, u64)>>>,
@@ -109,34 +127,96 @@ impl<T> ForwardQueue<T> {
     /// the item together with the version the *producer* deposited (the
     /// consumer's independent evidence of what it consumed).  Panics on a
     /// version mismatch or if the handoff never arrives within the
-    /// (generous, wall-clock) deadlock guard.
+    /// [`router_spin_ms`] deadlock guard.
     pub fn take(&self, slot: usize, version: u64) -> (T, u64) {
+        let ms = router_spin_ms();
+        self.take_for(slot, version, Duration::from_millis(ms))
+            .unwrap_or_else(|| {
+                panic!(
+                    "forward queue slot {slot}: version {version} never \
+                     arrived within {ms}ms (handoff deadlock? tune \
+                     STRADS_ROUTER_SPIN_MS)"
+                )
+            })
+    }
+
+    /// Like [`ForwardQueue::take`] with an explicit deadline: `None` after
+    /// `timeout` with no consumable deposit (callers add their own
+    /// protocol context before failing).
+    ///
+    /// Version discipline: a parked version **older** than the awaited one
+    /// is legitimate pipeline lag — its own consumer (a different, slower
+    /// worker) has not collected it yet, and this taker's version can only
+    /// be deposited after that happens, so the wait continues.  A parked
+    /// version **newer** than the awaited one means the awaited deposit
+    /// was consumed by someone else or skipped — an upstream ordering
+    /// violation, and it panics.  (The pre-availability code panicked on
+    /// *any* mismatch, which could fire spuriously when one worker ran a
+    /// full pipelined round ahead of a slice's lagging consumer.)
+    pub fn take_for(
+        &self,
+        slot: usize,
+        version: u64,
+        timeout: Duration,
+    ) -> Option<(T, u64)> {
+        let deadline = std::time::Instant::now() + timeout;
         let mut slots = self.slots.lock().expect("forward queue poisoned");
-        let mut timed_out_once = false;
         loop {
             let held = slots[slot].as_ref().map(|(_, v)| *v);
             if let Some(v) = held {
                 assert!(
-                    v == version,
+                    v <= version,
                     "forward queue slot {slot}: expected version {version}, found {v}"
                 );
-                return slots[slot].take().expect("slot occupied");
+                if v == version {
+                    return slots[slot].take();
+                }
+                // v < version: the older deposit's own consumer is still
+                // on its way; our deposit comes after — keep waiting
             }
-            // a timed-out wait re-checks the slot above before giving up:
-            // the deposit may have landed while the wait was expiring
-            if timed_out_once {
-                panic!(
-                    "forward queue slot {slot}: version {version} never \
-                     arrived (handoff deadlock?)"
-                );
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
             }
-            let (guard, timeout) = self
+            let (guard, _) = self
                 .ready
-                .wait_timeout(slots, Duration::from_secs(300))
+                .wait_timeout(slots, deadline - now)
                 .expect("forward queue poisoned");
             slots = guard;
-            timed_out_once = timeout.timed_out();
         }
+    }
+
+    /// Non-blocking poll: take the slot's deposit if (and only if) it
+    /// currently holds exactly `version`.  An empty slot — or one parking
+    /// an **older** version still awaiting its own consumer — returns
+    /// `None` (the handoff is in flight from this taker's point of view);
+    /// a **newer** parked version panics, exactly as [`ForwardQueue::take`]
+    /// would: the awaited deposit can no longer arrive.
+    pub fn try_take(&self, slot: usize, version: u64) -> Option<(T, u64)> {
+        let mut slots = self.slots.lock().expect("forward queue poisoned");
+        let held = slots[slot].as_ref().map(|(_, v)| *v);
+        match held {
+            Some(v) => {
+                assert!(
+                    v <= version,
+                    "forward queue slot {slot}: expected version {version}, found {v}"
+                );
+                if v == version {
+                    slots[slot].take()
+                } else {
+                    None
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Version of the slot's parked deposit, without consuming it
+    /// (`None` while the handoff is in flight).
+    pub fn parked_version(&self, slot: usize) -> Option<u64> {
+        self.slots.lock().expect("forward queue poisoned")[slot]
+            .as_ref()
+            .map(|(_, v)| *v)
     }
 
     /// Non-blocking removal of whatever the slot currently holds.
@@ -403,6 +483,56 @@ mod tests {
         let q = ForwardQueue::new(1);
         q.deposit(0, 1u8, 3);
         let _ = q.take(0, 2);
+    }
+
+    #[test]
+    fn forward_queue_try_take_polls_without_blocking() {
+        let q = ForwardQueue::new(2);
+        assert!(q.try_take(0, 0).is_none(), "empty slot polls None");
+        assert_eq!(q.parked_version(0), None);
+        q.deposit(0, 5u8, 3);
+        assert_eq!(q.parked_version(0), Some(3));
+        assert_eq!(q.try_take(0, 3), Some((5u8, 3)));
+        assert!(q.try_take(0, 3).is_none(), "second poll finds it gone");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected version")]
+    fn forward_queue_try_take_version_mismatch_panics() {
+        let q = ForwardQueue::new(1);
+        q.deposit(0, 1u8, 3);
+        let _ = q.try_take(0, 2);
+    }
+
+    #[test]
+    fn forward_queue_older_parked_version_keeps_taker_waiting() {
+        // a pipelined ring can run one consumer a full round ahead of a
+        // slice's lagging consumer: the old deposit sits unconsumed, and
+        // the future-round taker must WAIT (not panic) until the chain
+        // catches up.
+        let q = ForwardQueue::new(1);
+        q.deposit(0, 7u8, 2);
+        assert!(q.try_take(0, 3).is_none(), "older deposit is not ours");
+        assert!(
+            q.take_for(0, 3, Duration::from_millis(20)).is_none(),
+            "older deposit must keep the round-3 taker waiting"
+        );
+        // the lagging consumer catches up; the chain advances; our take
+        // now succeeds
+        assert_eq!(q.try_take(0, 2), Some((7u8, 2)));
+        q.deposit(0, 8u8, 3);
+        assert_eq!(q.take(0, 3), (8u8, 3));
+    }
+
+    #[test]
+    fn forward_queue_take_for_times_out_cleanly() {
+        let q: ForwardQueue<u8> = ForwardQueue::new(1);
+        let t0 = std::time::Instant::now();
+        assert!(q.take_for(0, 0, Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        // a deposit after the timeout is still takeable
+        q.deposit(0, 9, 0);
+        assert_eq!(q.take_for(0, 0, Duration::from_millis(20)), Some((9, 0)));
     }
 
     #[test]

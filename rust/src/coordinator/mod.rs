@@ -11,3 +11,4 @@ pub use engine::{
     Engine as StradsEngine, ExecutionMode, HandoffLeg, RunConfig, RunResult,
     StradsApp,
 };
+pub use crate::scheduler::rotation::QueueOrder;

@@ -2,7 +2,7 @@
 
 use crate::apps::lasso::{LassoApp, LassoConfig, LassoSched};
 use crate::apps::lda::{setup as lda_setup, LdaApp};
-use crate::apps::mf::{MfApp, MfConfig};
+use crate::apps::mf::{block_setup, MfApp, MfBlockApp, MfConfig};
 use crate::backend::native::{NativeLassoShard, NativeMfShard};
 use crate::backend::{LassoShard, MfShard};
 use crate::coordinator::{RunConfig, StradsEngine};
@@ -131,7 +131,8 @@ pub fn lasso_engine_corr(
     (StradsEngine::new(app, states, cfg), x)
 }
 
-/// Build a STRADS MF engine over generated ratings.
+/// Build a STRADS MF engine over generated ratings (the paper's Netflix
+/// density).
 pub fn mf_engine(
     users: usize,
     items: usize,
@@ -141,10 +142,27 @@ pub fn mf_engine(
     seed: u64,
     cfg: &RunConfig,
 ) -> StradsEngine<MfApp> {
+    mf_engine_dense(users, items, rank, workers, lambda, 0.012, seed, cfg)
+}
+
+/// Like [`mf_engine`] with a configurable observation density (the
+/// MF-rotation comparison runs denser ratings so each item block carries
+/// per-round SGD signal; the CCD baseline must see the same data).
+#[allow(clippy::too_many_arguments)]
+pub fn mf_engine_dense(
+    users: usize,
+    items: usize,
+    rank: usize,
+    workers: usize,
+    lambda: f32,
+    density: f64,
+    seed: u64,
+    cfg: &RunConfig,
+) -> StradsEngine<MfApp> {
     let data = mf_ratings::generate(&MfGenConfig {
         n_users: users,
         n_items: items,
-        density: 0.012,
+        density,
         true_rank: 8.min(rank),
         seed,
         ..Default::default()
@@ -170,6 +188,49 @@ pub fn mf_engine(
         )));
     }
     StradsEngine::new(app, states, cfg)
+}
+
+/// Build a **block-rotation** MF engine ([`MfBlockApp`]): `n_blocks` ≥
+/// `workers` nnz-balanced item blocks on the virtual ring, SGD block
+/// sweeps (default step schedule, the given `lambda`), skew-aware
+/// placement derived from the run config's straggler model.  Same
+/// generator/seed as [`mf_engine_dense`], so the two MF apps run the
+/// same data.
+#[allow(clippy::too_many_arguments)]
+pub fn mf_block_engine(
+    users: usize,
+    items: usize,
+    rank: usize,
+    workers: usize,
+    n_blocks: usize,
+    lambda: f32,
+    density: f64,
+    seed: u64,
+    cfg: &RunConfig,
+) -> StradsEngine<MfBlockApp> {
+    let data = mf_ratings::generate(&MfGenConfig {
+        n_users: users,
+        n_items: items,
+        density,
+        true_rank: 8.min(rank),
+        seed,
+        ..Default::default()
+    });
+    let speeds = cfg.straggler.mean_speeds(workers, workers as u64);
+    let sgd = block_setup::BlockSgdConfig {
+        lambda,
+        ..Default::default()
+    };
+    let s = block_setup::build_blocked(
+        &data.a,
+        rank,
+        workers,
+        n_blocks,
+        Some(&speeds),
+        &sgd,
+        seed,
+    );
+    StradsEngine::new(s.app, s.shards, cfg)
 }
 
 /// Pretty-print a results table (fixed-width columns).

@@ -6,11 +6,12 @@
 //! Lasso-RR crawls.
 
 use crate::baselines::{AlsConfig, AlsMf, YahooLda, YahooLdaConfig};
-use crate::cluster::{NetworkConfig, StragglerModel};
-use crate::coordinator::{ExecutionMode, RunConfig};
+use crate::cluster::{HandoffJitter, NetworkConfig, StragglerModel};
+use crate::coordinator::{ExecutionMode, QueueOrder, RunConfig};
 use crate::datagen::mf_ratings::{self, MfGenConfig};
 use crate::figures::common::{
-    figure_corpus, lasso_engine_corr, lda_engine, lda_engine_sliced, mf_engine,
+    figure_corpus, lasso_engine_corr, lda_engine, lda_engine_sliced,
+    mf_block_engine, mf_engine, mf_engine_dense,
 };
 use crate::metrics::Recorder;
 
@@ -169,6 +170,11 @@ pub struct ModeComparison {
     pub ssp_p2p_bytes: u64,
     pub bsp_handoffs: u64,
     pub ssp_handoffs: u64,
+    /// Virtual seconds workers idled waiting for queued slice handoffs
+    /// (rotation runs; 0.0 otherwise) — the slack availability ordering
+    /// reclaims, quantified per arm.
+    pub bsp_handoff_wait_secs: f64,
+    pub ssp_handoff_wait_secs: f64,
 }
 
 /// Lasso + MF arms of the BSP-vs-SSP comparison under a rotating
@@ -319,12 +325,142 @@ pub fn run_multislice_comparison(
     let single = run(cfg.n_workers, "LDA-rotation-U=P");
     let multi = run(2 * cfg.n_workers, "LDA-rotation-U=2P");
     let mut cmp = comparison_with("LDA-multislice", single, multi, false);
-    let first = cmp.bsp.points()[0].objective;
-    let target = first + 0.9 * (cmp.target - first);
-    cmp.bsp_secs_to_target = cmp.bsp.time_to_target(target, false);
-    cmp.ssp_secs_to_target = cmp.ssp.time_to_target(target, false);
-    cmp.target = target;
+    retarget_fraction(&mut cmp, 0.9, false);
     cmp
+}
+
+/// Re-aim a comparison at the `frac`-improvement point of the easier
+/// trajectory: both runs cross it in the steep phase of the curve, where
+/// timing dominates — an endpoint target sits on the plateau, where
+/// partition noise decides who crosses first.
+fn retarget_fraction(cmp: &mut ModeComparison, frac: f64, minimizing: bool) {
+    let first = cmp.bsp.points()[0].objective;
+    let target = first + frac * (cmp.target - first);
+    cmp.bsp_secs_to_target = cmp.bsp.time_to_target(target, minimizing);
+    cmp.ssp_secs_to_target = cmp.ssp.time_to_target(target, minimizing);
+    cmp.target = target;
+}
+
+/// Availability-ordered rotation arm: LDA at U = 2P and equal depth,
+/// [`QueueOrder::Strict`] vs [`QueueOrder::Availability`], under a
+/// rotating `straggler_factor`x compute skew and the given handoff
+/// latency model.  The strict run lands in the `bsp` slot, availability
+/// in `ssp`.
+///
+/// The rotation primitive only requires per-round disjointness of the
+/// leases, so which queued slice a worker sweeps first is free:
+/// earliest-landed-first (the engine's makespan-optimal per-worker
+/// discipline, `SliceRouter::try_take` on the data plane) reclaims the
+/// stall a strict ring order pays whenever a later-positioned slice
+/// arrives before an earlier one — which a straggler or latency jitter
+/// makes routine.
+pub fn run_availability_comparison(
+    cfg: &Fig9Config,
+    depth: u64,
+    straggler_factor: f64,
+    jitter: HandoffJitter,
+    tag: &str,
+) -> ModeComparison {
+    let corpus =
+        figure_corpus(sc(6_000, cfg.scale), sc(600, cfg.scale), cfg.seed);
+    let k = sc(32, cfg.scale);
+    let sweeps = 8u64;
+    let straggler = StragglerModel::Rotating { factor: straggler_factor };
+    let run = |order: QueueOrder, label: String| {
+        let run_cfg = RunConfig {
+            max_rounds: sweeps * cfg.n_workers as u64,
+            eval_every: 2 * cfg.n_workers as u64,
+            network: NetworkConfig::ideal(), // isolate compute + handoffs
+            label,
+            mode: ExecutionMode::Rotation { depth },
+            straggler: straggler.clone(),
+            queue_order: order,
+            handoff_jitter: jitter.clone(),
+            ..Default::default()
+        };
+        let mut e = lda_engine_sliced(
+            &corpus,
+            k,
+            cfg.n_workers,
+            2 * cfg.n_workers,
+            cfg.seed,
+            &run_cfg,
+        );
+        e.run(&run_cfg)
+    };
+    let strict = run(QueueOrder::Strict, format!("LDA-U2P-strict-{tag}"));
+    let avail = run(QueueOrder::Availability, format!("LDA-U2P-avail-{tag}"));
+    let mut cmp = comparison_with(
+        &format!("LDA-availability-{tag}"),
+        strict,
+        avail,
+        false,
+    );
+    retarget_fraction(&mut cmp, 0.9, false);
+    cmp
+}
+
+/// MF block-rotation arm: the CCD MF-BSP baseline vs
+/// [`crate::apps::MfBlockApp`]'s rotated SGD block sweeps on the same
+/// ratings (denser than the Netflix
+/// recipe so each block carries per-round signal), under the same
+/// rotating straggler.  The CCD run lands in the `bsp` slot, the rotated
+/// SGD run in `ssp`.  The bench asserts the two *converge to the same
+/// objective within tolerance* — the algorithms differ, so
+/// time-to-target is reported for the trend line, not gated.
+pub fn run_mf_block_comparison(
+    cfg: &Fig9Config,
+    depth: u64,
+    straggler_factor: f64,
+) -> ModeComparison {
+    let users = sc(600, cfg.scale);
+    let items = sc(400, cfg.scale);
+    let rank = sc(16, cfg.scale);
+    let lambda = 0.05f32;
+    let density = 0.08f64;
+    let straggler = StragglerModel::Rotating { factor: straggler_factor };
+
+    // CCD: 6 full sweeps (the SSP-arm recipe)
+    let ccd_sweeps = 6u64;
+    let ccd_cfg = RunConfig {
+        max_rounds: ccd_sweeps * 2 * rank as u64,
+        eval_every: 2 * rank as u64,
+        network: NetworkConfig::ideal(),
+        label: "MF-BSP".into(),
+        straggler: straggler.clone(),
+        ..Default::default()
+    };
+    let mut ccd_engine = mf_engine_dense(
+        users, items, rank, cfg.n_workers, lambda, density, cfg.seed,
+        &ccd_cfg,
+    );
+    let ccd = ccd_engine.run(&ccd_cfg);
+
+    // block rotation: ~24 data passes (each rating is swept once every P
+    // rounds on average), U = 2P blocks, pipelined handoffs
+    let sgd_sweeps = 24u64;
+    let sgd_cfg = RunConfig {
+        max_rounds: sgd_sweeps * cfg.n_workers as u64,
+        eval_every: 4 * cfg.n_workers as u64,
+        network: NetworkConfig::ideal(),
+        label: "MF-block-rotation".into(),
+        mode: ExecutionMode::Rotation { depth },
+        straggler,
+        ..Default::default()
+    };
+    let mut sgd_engine = mf_block_engine(
+        users,
+        items,
+        rank,
+        cfg.n_workers,
+        2 * cfg.n_workers,
+        lambda,
+        density,
+        cfg.seed,
+        &sgd_cfg,
+    );
+    let sgd = sgd_engine.run(&sgd_cfg);
+    comparison_with("MF-block-rotation", ccd, sgd, true)
 }
 
 fn comparison(
@@ -362,6 +498,8 @@ fn comparison_with(
         ssp_p2p_bytes: ssp.total_p2p_bytes,
         bsp_handoffs: bsp.total_p2p_msgs,
         ssp_handoffs: ssp.total_p2p_msgs,
+        bsp_handoff_wait_secs: bsp.total_handoff_wait_secs,
+        ssp_handoff_wait_secs: ssp.total_handoff_wait_secs,
         bsp: bsp.recorder,
         ssp: ssp.recorder,
         mean_staleness,
@@ -399,6 +537,10 @@ pub fn print_mode_comparison(c: &ModeComparison) {
     println!(
         "  p2p traffic: {} bytes / {} handoffs vs {} bytes / {} handoffs",
         c.bsp_p2p_bytes, c.bsp_handoffs, c.ssp_p2p_bytes, c.ssp_handoffs
+    );
+    println!(
+        "  handoff wait: {:.4}s vs {:.4}s",
+        c.bsp_handoff_wait_secs, c.ssp_handoff_wait_secs
     );
 }
 
@@ -504,6 +646,61 @@ mod tests {
             c.ssp_handoffs,
             c.bsp_handoffs
         );
+    }
+
+    #[test]
+    fn availability_comparison_converges_and_accounts_wait() {
+        let c = run_availability_comparison(
+            &tiny(),
+            2,
+            4.0,
+            HandoffJitter::Jittered {
+                base_frac: 0.2,
+                jitter_frac: 1.5,
+                seed: 3,
+            },
+            "jitter",
+        );
+        assert!(c.max_staleness <= 1, "depth-2 bound");
+        // both disciplines learn and reach the shared 90% target; the
+        // strict availability-beats-strict timing assert lives in the
+        // fig9 bench, where scale makes it stable
+        for rec in [&c.bsp, &c.ssp] {
+            let first = rec.points()[0].objective;
+            let last = rec.last_objective().unwrap();
+            assert!(
+                last.is_finite() && last > first,
+                "{}: {first} -> {last}",
+                rec.label
+            );
+        }
+        assert!(c.bsp_secs_to_target.is_some(), "strict reaches target");
+        assert!(c.ssp_secs_to_target.is_some(), "availability reaches target");
+        // with jittered latencies the strict run *must* stall somewhere
+        assert!(
+            c.bsp_handoff_wait_secs > 0.0,
+            "strict order under jitter records no handoff wait"
+        );
+        assert!(c.ssp_handoff_wait_secs >= 0.0);
+    }
+
+    #[test]
+    fn mf_block_comparison_both_converge() {
+        let c = run_mf_block_comparison(&tiny(), 2, 4.0);
+        for rec in [&c.bsp, &c.ssp] {
+            let first = rec.points()[0].objective;
+            let last = rec.last_objective().unwrap();
+            assert!(
+                last.is_finite() && last < first,
+                "{}: {first} -> {last}",
+                rec.label
+            );
+        }
+        // the rotated SGD arm moves its blocks p2p; CCD has no handoffs
+        assert!(c.ssp_p2p_bytes > 0 && c.ssp_handoffs > 0);
+        assert_eq!(c.bsp_handoffs, 0);
+        // the shared-objective tolerance assert lives in the fig9 bench,
+        // where the validated scales make it stable
     }
 
     #[test]

@@ -13,7 +13,12 @@
 //! * [`SliceRouter`] — the worker-side data plane: a slot-per-slice
 //!   [`crate::cluster::ForwardQueue`] plus a per-slice **version chain**.
 //!   `take(a, v)` blocks until the predecessor has forwarded exactly
-//!   version `v`; `forward(a, data, v+1)` hands the swept slice on.  The
+//!   version `v` (bounded by `STRADS_ROUTER_SPIN_MS`, then panics with the
+//!   lost lease's context); `try_take(a, v)` is the non-blocking poll —
+//!   paired with per-slice **arrival stamps**, it lets a multi-slice
+//!   worker sweep whichever of its queued slices landed first
+//!   (availability-ordered rotation) instead of stalling on ring order.
+//!   `forward(a, data, v+1)` hands the swept slice on.  The
 //!   chain head only ever advances by one, so forwarding a second child of
 //!   the same parent version panics — the exclusive-lease invariant of
 //!   [`crate::kvstore::SliceStore`] preserved without a barrier.  Slots
@@ -27,8 +32,10 @@
 //!   them strictly in order at pull time.  Every version `v+1` therefore
 //!   has exactly one parent `v`; any skip, replay, or fork panics.
 
-use crate::cluster::ForwardQueue;
+use crate::cluster::{router_spin_ms, ForwardQueue};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// One lease in a slice's version chain: the worker holding this token may
 /// consume exactly version `version` of slice `slice_id` (and forwards
@@ -50,6 +57,12 @@ pub struct SliceRouter<T> {
     /// Highest version ever deposited per slice — the forward-only guard
     /// that detects a forked chain.
     heads: Mutex<Vec<u64>>,
+    /// Per-slice arrival stamp of the most recent deposit: a global
+    /// deposit sequence number, so an availability-ordered consumer can
+    /// sweep its queued slices earliest-landed-first
+    /// ([`crate::scheduler::rotation::QueueOrder`]).
+    arrivals: Mutex<Vec<u64>>,
+    arrival_counter: AtomicU64,
 }
 
 impl<T: Send> SliceRouter<T> {
@@ -57,7 +70,17 @@ impl<T: Send> SliceRouter<T> {
         SliceRouter {
             queue: ForwardQueue::new(n_slices),
             heads: Mutex::new(vec![0; n_slices]),
+            arrivals: Mutex::new(vec![0; n_slices]),
+            arrival_counter: AtomicU64::new(0),
         }
+    }
+
+    /// Stamp `slice_id` with the next global deposit sequence number
+    /// (called just before the deposit, so a consumer that sees the parked
+    /// slice also sees its stamp).
+    fn stamp_arrival(&self, slice_id: usize) {
+        let seq = self.arrival_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        self.arrivals.lock().expect("router arrivals poisoned")[slice_id] = seq;
     }
 
     pub fn n_slices(&self) -> usize {
@@ -68,6 +91,7 @@ impl<T: Send> SliceRouter<T> {
     /// entering rotation mode).  Panics if the slot already holds data.
     pub fn seed(&self, slice_id: usize, data: T, version: u64) {
         self.heads.lock().expect("router heads poisoned")[slice_id] = version;
+        self.stamp_arrival(slice_id);
         self.queue.deposit(slice_id, data, version);
     }
 
@@ -75,10 +99,117 @@ impl<T: Send> SliceRouter<T> {
     /// been forwarded, then take ownership.  Returns the slice together
     /// with the version the predecessor actually deposited — the holder's
     /// independent evidence of which lease it consumed (the coordinator
-    /// cross-checks it against the granted token at collect time).  Panics
-    /// if a *different* version is found (an ordering violation upstream).
+    /// cross-checks it against the granted token at collect time).  An
+    /// *older* parked version is pipeline lag (its own consumer is still
+    /// on its way) and the wait continues; a *newer* one panics (the
+    /// awaited handoff can no longer arrive).  Panics — with
+    /// slice/version/chain-head context — when the handoff never lands
+    /// within the bounded [`crate::cluster::router_spin_ms`] spin: a lost
+    /// handoff is a scheduling bug that must fail CI loudly, not hang the
+    /// job.
     pub fn take(&self, slice_id: usize, version: u64) -> (T, u64) {
-        self.queue.take(slice_id, version)
+        self.take_for(slice_id, version, Duration::from_millis(router_spin_ms()))
+    }
+
+    /// [`SliceRouter::take`] with an explicit spin bound (tests drive the
+    /// lost-handoff panic without waiting out the process-wide default).
+    pub fn take_for(
+        &self,
+        slice_id: usize,
+        version: u64,
+        timeout: Duration,
+    ) -> (T, u64) {
+        match self.queue.take_for(slice_id, version, timeout) {
+            Some(got) => got,
+            None => panic!(
+                "slice {slice_id} handoff lost: awaited v{version} never \
+                 arrived within {ms}ms (chain head is v{head}: the holder \
+                 of v{version} never forwarded — tune STRADS_ROUTER_SPIN_MS)",
+                ms = timeout.as_millis(),
+                head = self.version(slice_id)
+            ),
+        }
+    }
+
+    /// Non-blocking poll of the slice's handoff: `Some((data, version))`
+    /// when exactly `version` is parked, `None` while it is in flight (or
+    /// an older deposit still awaits its own consumer).  A *newer* parked
+    /// version panics, exactly as [`SliceRouter::take`] would.  This is
+    /// the availability-ordered consumer's primitive: sweep whichever
+    /// queued slice landed first instead of stalling on a fixed ring
+    /// order.
+    pub fn try_take(&self, slice_id: usize, version: u64) -> Option<(T, u64)> {
+        self.queue.try_take(slice_id, version)
+    }
+
+    /// Version currently parked in the slice's slot (`None` while the
+    /// handoff is in flight) — the poll an availability-ordered consumer
+    /// uses to rank its queue before committing to a take.
+    pub fn parked_version(&self, slice_id: usize) -> Option<u64> {
+        self.queue.parked_version(slice_id)
+    }
+
+    /// Availability-ordered take: block until **any** of the granted
+    /// `(slice, version)` handoffs is parked, then take the one with the
+    /// earliest arrival stamp (ties cannot occur — stamps are unique).
+    /// Returns the index into `grants` of the picked entry together with
+    /// the slice and the consumed version.  This is the one shared
+    /// implementation of the earliest-landed-first discipline both
+    /// availability-ordered apps sweep with
+    /// ([`crate::scheduler::rotation::QueueOrder::Availability`]).
+    ///
+    /// Only the granted worker polls these `(slice, version)` pairs, so a
+    /// slice seen parked cannot be taken by anyone else between the poll
+    /// and the take.  Panics after `timeout` with every still-pending
+    /// grant listed — a stalled sweep is a lost-handoff scheduling bug,
+    /// not a recoverable condition.
+    pub fn take_earliest(
+        &self,
+        grants: &[(usize, u64)],
+        timeout: Duration,
+    ) -> (usize, T, u64) {
+        assert!(!grants.is_empty(), "take_earliest needs at least one grant");
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let mut best: Option<(usize, u64)> = None;
+            for (i, &(slice_id, version)) in grants.iter().enumerate() {
+                if self.parked_version(slice_id) == Some(version) {
+                    let arr = self.arrival_seq(slice_id);
+                    if best.is_none_or(|(_, b)| arr < b) {
+                        best = Some((i, arr));
+                    }
+                }
+            }
+            if let Some((i, _)) = best {
+                let (slice_id, version) = grants[i];
+                let (data, consumed) = self
+                    .try_take(slice_id, version)
+                    .expect("slice was parked when picked");
+                return (i, data, consumed);
+            }
+            if std::time::Instant::now() >= deadline {
+                let stalled: Vec<String> = grants
+                    .iter()
+                    .map(|&(a, v)| format!("slice {a} v{v}"))
+                    .collect();
+                panic!(
+                    "availability sweep stalled: none of the awaited \
+                     handoffs landed within {}ms (awaiting {}) — tune \
+                     STRADS_ROUTER_SPIN_MS",
+                    timeout.as_millis(),
+                    stalled.join(", ")
+                );
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+
+    /// Arrival stamp (global deposit sequence number) of the slice's most
+    /// recent deposit.  Consumers compare stamps across *parked* slices to
+    /// sweep earliest-landed-first; a stamp read while the slice is in
+    /// flight refers to the previous deposit and means nothing.
+    pub fn arrival_seq(&self, slice_id: usize) -> u64 {
+        self.arrivals.lock().expect("router arrivals poisoned")[slice_id]
     }
 
     /// Worker-side handoff to the ring successor: deposit the swept slice
@@ -97,6 +228,7 @@ impl<T: Send> SliceRouter<T> {
             );
             heads[slice_id] = version;
         }
+        self.stamp_arrival(slice_id);
         self.queue.deposit(slice_id, data, version);
     }
 
@@ -216,6 +348,66 @@ mod tests {
         let (d, v) = r.reclaim(0);
         assert_eq!((d, v), (vec![1.0f32], 4));
         r.with_slice(0, |s| assert!(s.is_none()));
+    }
+
+    #[test]
+    fn try_take_polls_and_arrival_stamps_order_deposits() {
+        let r = SliceRouter::new(3);
+        r.seed(2, 7u8, 0);
+        r.seed(0, 8u8, 0);
+        // slice 1 never seeded: in flight from the consumer's view
+        assert!(r.try_take(1, 0).is_none());
+        assert_eq!(r.parked_version(1), None);
+        // slice 2 was deposited before slice 0
+        assert_eq!(r.parked_version(2), Some(0));
+        assert!(r.arrival_seq(2) < r.arrival_seq(0));
+        let (d, v) = r.try_take(2, 0).expect("parked");
+        assert_eq!((d, v), (7u8, 0));
+        // forwarding re-stamps: slice 2 is now the latest arrival
+        r.forward(2, d, 1);
+        assert!(r.arrival_seq(2) > r.arrival_seq(0));
+        assert_eq!(r.parked_version(2), Some(1));
+    }
+
+    #[test]
+    fn take_earliest_picks_the_first_landed_grant() {
+        let r = SliceRouter::new(3);
+        r.seed(1, 11u8, 0); // lands first
+        r.seed(2, 22u8, 0);
+        // grants listed in ring order: slice 2 first, then 1; the earlier
+        // arrival (slice 1) must win regardless
+        let grants = [(2usize, 0u64), (1, 0)];
+        let (idx, data, consumed) =
+            r.take_earliest(&grants, Duration::from_millis(100));
+        assert_eq!((idx, data, consumed), (1, 11u8, 0));
+        // slice 2 is the only parked grant left
+        let (idx, data, _) =
+            r.take_earliest(&grants[..1], Duration::from_millis(100));
+        assert_eq!((idx, data), (0, 22u8));
+    }
+
+    #[test]
+    #[should_panic(expected = "availability sweep stalled")]
+    fn take_earliest_panics_listing_pending_grants_after_timeout() {
+        let r: SliceRouter<u8> = SliceRouter::new(2);
+        // nothing ever seeded: both grants stay pending
+        let _ = r.take_earliest(&[(0, 0), (1, 0)], Duration::from_millis(10));
+    }
+
+    #[test]
+    #[should_panic(expected = "handoff lost")]
+    fn take_panics_with_context_after_bounded_spin() {
+        // consume the whole chain, then await a version nobody ever
+        // forwards: the bounded spin must panic with the lost lease's
+        // context (slice, version, chain head) rather than hang.  The
+        // explicit-timeout form drives it; `take` uses the env-tunable
+        // STRADS_ROUTER_SPIN_MS default, which tests must not mutate.
+        let r: SliceRouter<u8> = SliceRouter::new(1);
+        r.seed(0, 1, 0);
+        let (d, v) = r.take(0, 0);
+        r.forward(0, d, v + 1);
+        let _held = r.take(0, 1);
+        let _ = r.take_for(0, 2, Duration::from_millis(10));
     }
 
     #[test]

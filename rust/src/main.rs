@@ -40,10 +40,15 @@ USAGE:
       --seed S
       lasso: --features J --samples N --u U --lambda L --random (RR baseline)
       mf:    --users N --items M --rank K --lambda L
+             --blocks U   item-block rotation (DSGD-style SGD sweeps over
+                          U >= workers blocks; default 0 = CCD round-robin)
+             --depth D    pipelined rotation depth for --blocks (default 1)
       lda:   --vocab V --docs D --topics K
              --slices U   rotation slices (default = workers; U > workers
                           over-decomposes with skew-aware ring placement)
              --depth D    pipelined rotation depth (default 0 = BSP)
+      lda/mf --order strict|avail   rotation queue service order (avail =
+                          sweep whichever slice handoff landed first)
 
   strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
       regenerate a paper figure's rows/series (scaled-down by default)
@@ -122,6 +127,28 @@ fn cmd_train(args: &Args) {
             let items = args.parse_or("items", 1_500usize);
             let rank = args.parse_or("rank", 32usize);
             let lambda = args.parse_or("lambda", 0.05f32);
+            let n_blocks = args.parse_or("blocks", 0usize);
+            if n_blocks > 0 {
+                // block-rotation MF: U >= workers item blocks on the ring
+                let depth = args.parse_or("depth", 1u64);
+                let mut run_cfg = run_cfg.clone();
+                run_cfg.mode =
+                    strads::coordinator::ExecutionMode::Rotation { depth };
+                run_cfg.queue_order = queue_order(args);
+                let mut e = common::mf_block_engine(
+                    users, items, rank, workers, n_blocks, lambda, 0.08,
+                    seed, &run_cfg,
+                );
+                let res = e.run(&run_cfg);
+                report(&res.recorder, res.virtual_secs, res.wall_secs);
+                println!(
+                    "final objective {:.6}, {} handoffs, handoff wait {:.3}s",
+                    res.final_objective,
+                    res.total_p2p_msgs,
+                    res.total_handoff_wait_secs
+                );
+                return;
+            }
             let mut e = common::mf_engine(
                 users, items, rank, workers, lambda, seed, &run_cfg,
             );
@@ -139,6 +166,7 @@ fn cmd_train(args: &Args) {
             if depth > 0 {
                 run_cfg.mode =
                     strads::coordinator::ExecutionMode::Rotation { depth };
+                run_cfg.queue_order = queue_order(args);
             }
             let corpus = common::figure_corpus(vocab, docs, seed);
             // n_slices == workers keeps the paper's identity layout; any
@@ -164,6 +192,16 @@ fn cmd_train(args: &Args) {
             eprintln!("unknown app {other:?}");
             std::process::exit(2);
         }
+    }
+}
+
+/// `--order strict|avail` → rotation queue service discipline.
+fn queue_order(args: &Args) -> strads::coordinator::QueueOrder {
+    match args.str_or("order", "strict").as_str() {
+        "avail" | "availability" => {
+            strads::coordinator::QueueOrder::Availability
+        }
+        _ => strads::coordinator::QueueOrder::Strict,
     }
 }
 

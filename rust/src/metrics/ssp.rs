@@ -1,5 +1,7 @@
-//! SSP execution-mode metrics: per-round observed staleness and the
-//! straggler wait time the pipeline hid relative to a BSP barrier.
+//! SSP execution-mode metrics: per-round observed staleness, the
+//! straggler wait time the pipeline hid relative to a BSP barrier, and —
+//! for rotation pipelines — the per-worker handoff wait (virtual seconds
+//! a worker idled for a queued slice's handoff to land).
 
 /// Accumulated over one SSP run by the coordinator's collect half.
 #[derive(Debug, Clone, Default)]
@@ -11,6 +13,13 @@ pub struct SspStats {
     /// Virtual seconds a strict BSP barrier would have added on top of the
     /// pipeline's actual critical path (straggler wait hidden by SSP).
     pub wait_saved_secs: f64,
+    /// Rotation pipelines: virtual seconds each worker spent stalled
+    /// waiting for a queued slice's handoff to land before it could start
+    /// that sweep (worker-indexed; empty for non-rotation runs).  This is
+    /// the slack availability-ordered queues recover — the
+    /// strict-vs-availability delta is quantified here, not just asserted
+    /// on end-to-end time.
+    pub handoff_wait_secs: Vec<f64>,
 }
 
 impl SspStats {
@@ -22,6 +31,21 @@ impl SspStats {
     pub fn record(&mut self, staleness: u64, wait_saved_secs: f64) {
         self.per_round_staleness.push(staleness);
         self.wait_saved_secs += wait_saved_secs.max(0.0);
+    }
+
+    /// Accumulate one worker's handoff wait for a collected rotation round
+    /// (virtual seconds it idled before a queued slice's sweep could
+    /// start).
+    pub fn record_handoff_wait(&mut self, worker: usize, secs: f64) {
+        if self.handoff_wait_secs.len() <= worker {
+            self.handoff_wait_secs.resize(worker + 1, 0.0);
+        }
+        self.handoff_wait_secs[worker] += secs.max(0.0);
+    }
+
+    /// Total handoff wait across workers (0.0 for non-rotation runs).
+    pub fn total_handoff_wait_secs(&self) -> f64 {
+        self.handoff_wait_secs.iter().sum()
     }
 
     pub fn rounds(&self) -> usize {
@@ -63,5 +87,17 @@ mod tests {
         assert_eq!(s.max_staleness(), 0);
         assert_eq!(s.mean_staleness(), 0.0);
         assert_eq!(s.rounds(), 0);
+        assert_eq!(s.total_handoff_wait_secs(), 0.0);
+    }
+
+    #[test]
+    fn handoff_wait_accumulates_per_worker() {
+        let mut s = SspStats::new();
+        s.record_handoff_wait(2, 0.5);
+        s.record_handoff_wait(0, 0.25);
+        s.record_handoff_wait(2, 0.5);
+        s.record_handoff_wait(1, -1.0); // negative waits clamp to zero
+        assert_eq!(s.handoff_wait_secs, vec![0.25, 0.0, 1.0]);
+        assert!((s.total_handoff_wait_secs() - 1.25).abs() < 1e-12);
     }
 }

@@ -23,5 +23,5 @@ pub mod round_robin;
 pub use dependency::DependencyChecker;
 pub use priority::PriorityScheduler;
 pub use random::RandomScheduler;
-pub use rotation::RotationScheduler;
+pub use rotation::{QueueOrder, RotationScheduler};
 pub use round_robin::RoundRobinScheduler;

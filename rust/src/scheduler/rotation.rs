@@ -28,6 +28,29 @@
 //! masses LPT-style and starts heavy cohorts on fast workers (Lee et al.,
 //! "Structure-Aware Dynamic Scheduler").
 
+/// How a worker services its per-round slice queue.
+///
+/// The rotation primitive only requires per-round *disjointness* of the
+/// slice leases, not a fixed service order — which slice of its queue a
+/// worker sweeps first is a free knob.  `Strict` is the PR-3 discipline
+/// (virtual-position order, bit-exact with the original stream);
+/// `Availability` sweeps whichever queued slice's handoff *landed first*
+/// (earliest-ready-first), so a worker never stalls on one in-flight
+/// handoff while another queued slice already sits parked.  The knob
+/// changes neither the queues' contents nor any invariant — disjointness,
+/// U-round coverage, and fork-free version chains are order-independent —
+/// only the within-queue sweep order (worker side, via
+/// [`crate::kvstore::SliceRouter::try_take`] + arrival stamps) and the
+/// engine's virtual-time replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueOrder {
+    /// Fixed virtual-position order (the paper's stream; default).
+    #[default]
+    Strict,
+    /// Earliest-ready-first over the worker's queued slices.
+    Availability,
+}
+
 /// The virtual ring position that holds `position`'s current slice *next*
 /// round on a `u`-position ring — the single source of truth for the
 /// rotation's orientation.  Position `v` holds slice `(v + C) % U` in
@@ -130,6 +153,8 @@ pub struct RotationScheduler {
     placement: Vec<usize>,
     /// Rotation counter C (a "global model variable" in the paper).
     counter: u64,
+    /// Within-queue service discipline (does not affect queue contents).
+    order: QueueOrder,
 }
 
 impl RotationScheduler {
@@ -151,7 +176,20 @@ impl RotationScheduler {
             n_workers,
             placement: (0..n_slices).collect(),
             counter: 0,
+            order: QueueOrder::Strict,
         }
+    }
+
+    /// Set the within-queue service discipline (see [`QueueOrder`]).  May
+    /// be flipped at any round boundary: the queues themselves are
+    /// unchanged, so no handoff chain forks.
+    pub fn set_queue_order(&mut self, order: QueueOrder) {
+        self.order = order;
+    }
+
+    /// The within-queue service discipline in effect.
+    pub fn queue_order(&self) -> QueueOrder {
+        self.order
     }
 
     /// Install a ring placement (e.g. from [`skew_aware_placement`]).
@@ -590,5 +628,22 @@ mod tests {
     fn bad_placement_panics() {
         let mut s = RotationScheduler::with_workers(4, 2);
         s.set_placement(vec![0, 1, 2, 2]);
+    }
+
+    #[test]
+    fn queue_order_knob_does_not_perturb_the_queues() {
+        // Availability reorders the *service* of a queue, never its
+        // contents: the emitted queue stream must be identical to Strict's
+        // (which itself is the PR-3 / paper stream, locked by
+        // u_equals_p_queues_reproduce_the_single_slice_schedule above).
+        let (u, p) = (10, 4);
+        let mut strict = RotationScheduler::with_workers(u, p);
+        let mut avail = RotationScheduler::with_workers(u, p);
+        avail.set_queue_order(QueueOrder::Availability);
+        assert_eq!(avail.queue_order(), QueueOrder::Availability);
+        assert_eq!(strict.queue_order(), QueueOrder::Strict);
+        for _ in 0..3 * u {
+            assert_eq!(strict.next_round_queues(), avail.next_round_queues());
+        }
     }
 }

@@ -1,0 +1,238 @@
+//! Availability-ordered rotation invariants: randomized within-queue
+//! service orders preserve per-round lease disjointness, full U-round
+//! coverage, and fork-free router version chains; `QueueOrder::Strict`
+//! still reproduces the PR-3 schedule stream bit-exactly; and the
+//! earliest-ready-first discipline beats the strict ring order end to end
+//! under jittered handoff latencies and a heavy rotating straggler.
+
+use strads::apps::lda::setup as lda_setup;
+use strads::cluster::{HandoffJitter, StragglerModel};
+use strads::coordinator::{ExecutionMode, QueueOrder, RunConfig};
+use strads::figures::common::{figure_corpus, lda_engine_sliced};
+use strads::kvstore::{LeaseLedger, LeaseToken, SliceRouter};
+use strads::scheduler::RotationScheduler;
+use strads::testing::{ensure, prop_check, Prop};
+
+/// Drive the full grant→try_take→forward→settle protocol over U ≥ P rings
+/// with **randomized within-round service orders**: each round, the
+/// (worker, leg) pairs are consumed in a random global order, each via the
+/// non-blocking `try_take` poll (a leg is serviceable only while its
+/// version is parked — exactly the availability-ordered worker's view).
+/// Every round's queues must stay disjoint and cover all U slices, every
+/// chain must advance by exactly one version per round with no forks, and
+/// no leases may be left outstanding.
+#[test]
+fn prop_availability_order_preserves_chains_and_coverage() {
+    prop_check("availability-ordered handoff chains", 40, |g| {
+        let p = g.usize_in(1, 6);
+        let u = p * g.usize_in(1, 3) + g.usize_in(0, p - 1);
+        // exactly U rounds: enough for the full-coverage check, and every
+        // chain must then sit at version U
+        let rounds = u as u64;
+        let router: SliceRouter<Vec<u32>> = SliceRouter::new(u);
+        let mut ledger = LeaseLedger::new(u);
+        for a in 0..u {
+            router.seed(a, vec![a as u32], 0);
+            ledger.seed(a, 0);
+        }
+        let mut sched = RotationScheduler::with_workers(u, p);
+        sched.set_queue_order(QueueOrder::Availability);
+        let mut seen = vec![vec![false; u]; p];
+        for _ in 0..rounds {
+            let queues = sched.next_round_queues();
+            // disjointness + coverage of this round's lease grants
+            let mut all: Vec<usize> =
+                queues.iter().flatten().copied().collect();
+            all.sort_unstable();
+            if all != (0..u).collect::<Vec<_>>() {
+                return Prop::Fail(format!(
+                    "round is not a partition of slices (u={u}, p={p})"
+                ));
+            }
+            for (w, q) in queues.iter().enumerate() {
+                for &a in q {
+                    seen[w][a] = true;
+                }
+            }
+            // grant every leg, then service the legs in a random global
+            // order through the non-blocking poll
+            let mut legs: Vec<(usize, u64)> = Vec::new();
+            for queue in &queues {
+                for &slice_id in queue {
+                    legs.push((slice_id, ledger.grant(slice_id)));
+                }
+            }
+            while !legs.is_empty() {
+                let pick = g.usize_in(0, legs.len() - 1);
+                let (slice_id, version) = legs.swap_remove(pick);
+                let (data, consumed) = match router.try_take(slice_id, version)
+                {
+                    Some(got) => got,
+                    None => {
+                        return Prop::Fail(format!(
+                            "slice {slice_id} v{version} not parked (every \
+                             slice is between rounds here)"
+                        ))
+                    }
+                };
+                if consumed != version {
+                    return Prop::Fail(format!(
+                        "slice {slice_id}: granted v{version}, router handed \
+                         over v{consumed}"
+                    ));
+                }
+                router.forward(slice_id, data, consumed + 1);
+                ledger.settle(&LeaseToken { slice_id, version: consumed });
+            }
+        }
+        if ledger.max_outstanding() != 0 {
+            return Prop::Fail(format!(
+                "{} leases left outstanding",
+                ledger.max_outstanding()
+            ));
+        }
+        for a in 0..u {
+            if router.version(a) != rounds {
+                return Prop::Fail(format!(
+                    "slice {a}: chain head {} after {rounds} rounds",
+                    router.version(a)
+                ));
+            }
+        }
+        // every worker saw every slice within U rounds
+        ensure(
+            seen.iter().all(|row| row.iter().all(|&b| b)),
+            format!("coverage hole after {u} rounds (p={p})"),
+        )
+    });
+}
+
+/// `QueueOrder::Strict` must emit exactly the PR-3 queue stream: with the
+/// identity placement, position `v` holds slice `(v + C) % U` in round
+/// `C`, and worker `p`'s queue walks positions `p, p+P, …` in order —
+/// whether or not the availability knob exists in the build.
+#[test]
+fn strict_queue_stream_matches_pr3_formula() {
+    let (u, p) = (10usize, 4usize);
+    let mut sched = RotationScheduler::with_workers(u, p);
+    sched.set_queue_order(QueueOrder::Strict);
+    for c in 0..3 * u as u64 {
+        for (w, queue) in sched.next_round_queues().into_iter().enumerate() {
+            let expect: Vec<usize> = (w..u)
+                .step_by(p)
+                .map(|v| (v + c as usize) % u)
+                .collect();
+            assert_eq!(queue, expect, "worker {w}, round {c}");
+        }
+    }
+}
+
+/// The app-level half of the Strict regression: an over-decomposed LDA
+/// schedule under the default Strict order emits legs in queue-position
+/// order with the PR-3 slice ids (identity placement) and strictly
+/// sequential lease versions, so push/pull see inputs identical to the
+/// PR-3 code and trajectories are reproduced bit-exactly (locked
+/// end-to-end by the depth-1 ≡ BSP tests in rotation_handoff.rs).
+/// Rotation mode grants leases without checkouts, so rounds can be
+/// scheduled back to back.
+#[test]
+fn strict_lda_schedule_reproduces_pr3_legs() {
+    let corpus = figure_corpus(800, 100, 31);
+    let (workers, u) = (3usize, 6usize);
+    // no worker_speeds: identity ring placement, the PR-3 layout
+    let mut s =
+        lda_setup::build_sliced(&corpus, 6, workers, u, None, 0.1, 0.01, 31);
+    strads::coordinator::StradsApp::begin_rotation(&mut s.app, 1);
+    for c in 0..2 * u as u64 {
+        let tasks = s.app.schedule(c);
+        for (w, task) in tasks.iter().enumerate() {
+            let expect: Vec<usize> = (w..u)
+                .step_by(workers)
+                .map(|v| (v + c as usize) % u)
+                .collect();
+            let got: Vec<usize> =
+                task.legs.iter().map(|l| l.slice_id).collect();
+            assert_eq!(got, expect, "worker {w}, round {c}");
+            assert_eq!(task.order, QueueOrder::Strict);
+            for leg in &task.legs {
+                assert_eq!(
+                    leg.version,
+                    Some(c),
+                    "round {c} grants each slice its round-{c} lease"
+                );
+                assert!(leg.b_slice.is_none(), "routed legs ship no payload");
+            }
+        }
+    }
+}
+
+/// Two identical Strict rotation runs must produce bit-identical
+/// objective sequences and final topic sums — Strict stays deterministic
+/// (and therefore bit-exact with the PR-3 stream, whose code path it is),
+/// while Availability is free to vary with physical arrival order.
+#[test]
+fn strict_rotation_run_is_bit_reproducible() {
+    let run = || {
+        let corpus = figure_corpus(800, 100, 33);
+        let cfg = RunConfig {
+            max_rounds: 12,
+            eval_every: 4,
+            mode: ExecutionMode::Rotation { depth: 3 },
+            queue_order: QueueOrder::Strict,
+            label: "strict-repro".into(),
+            ..Default::default()
+        };
+        let mut e = lda_engine_sliced(&corpus, 8, 3, 6, 33, &cfg);
+        let res = e.run(&cfg);
+        let objs: Vec<f64> =
+            res.recorder.points().iter().map(|p| p.objective).collect();
+        (objs, e.app().s.clone())
+    };
+    let (obj_a, s_a) = run();
+    let (obj_b, s_b) = run();
+    assert_eq!(obj_a, obj_b, "Strict objectives must be bit-reproducible");
+    assert_eq!(s_a, s_b, "Strict final topic sums must be bit-reproducible");
+}
+
+/// Availability order vs strict order end to end: U = 2P, depth 3, a
+/// rotating 50x straggler and jittered handoff latencies.  Sweeping
+/// whichever queued slice landed first must finish the same rounds in
+/// less virtual time — and the strict run must report the handoff wait
+/// the reordering exists to reclaim.
+#[test]
+fn availability_order_beats_strict_under_jittered_straggler() {
+    let run = |order: QueueOrder| {
+        let corpus = figure_corpus(1500, 200, 13);
+        let cfg = RunConfig {
+            max_rounds: 16,
+            eval_every: 16,
+            mode: ExecutionMode::Rotation { depth: 3 },
+            straggler: StragglerModel::Rotating { factor: 50.0 },
+            queue_order: order,
+            handoff_jitter: HandoffJitter::Jittered {
+                base_frac: 0.2,
+                jitter_frac: 1.5,
+                seed: 13,
+            },
+            label: "avail-vs-strict".into(),
+            ..Default::default()
+        };
+        let mut e = lda_engine_sliced(&corpus, 12, 4, 8, 13, &cfg);
+        e.run(&cfg)
+    };
+    let strict = run(QueueOrder::Strict);
+    let avail = run(QueueOrder::Availability);
+    assert!(
+        avail.virtual_secs < strict.virtual_secs,
+        "availability order {} should undercut strict {} under a rotating \
+         straggler with jittered handoffs",
+        avail.virtual_secs,
+        strict.virtual_secs
+    );
+    assert!(
+        strict.total_handoff_wait_secs > 0.0,
+        "strict order must record the handoff stalls it pays"
+    );
+    assert!(avail.total_p2p_msgs >= 16 * (8 - 4));
+    assert!(avail.ssp.expect("pipeline stats").max_staleness() <= 2);
+}
