@@ -4,14 +4,19 @@
 Usage: bench_delta.py BASELINE.json CURRENT.json
 
 Compares the time-to-objective and p2p-traffic metrics of every
-comparison arm (ssp_arms[], rotation_arm, multislice_arm) plus wall_secs.
-A baseline metric of null (the pre-refresh placeholder) or a missing arm
-prints the current value with no delta, and never fails the job: this is
-a trend report, not a gate — the hard perf asserts live inside the bench
-binary itself.
+comparison arm (ssp_arms[], rotation_arm, multislice_arm, ...) plus
+wall_secs.  A baseline metric of null (the pre-refresh placeholder) or an
+arm *added* since the baseline prints one-sided with no delta, and never
+fails the job: this is a trend report, not a gate — the hard perf asserts
+live inside the bench binary itself.
 
-Exit code is always 0 unless the CURRENT file is unreadable (a missing or
-corrupt bench output *should* fail CI).
+Two failure modes ARE gated, because they mean the trend itself broke:
+
+* the CURRENT file is unreadable (a missing or corrupt bench output
+  *should* fail CI), and
+* an arm present in the baseline is MISSING from the current run — a
+  silently dropped arm would otherwise read as a passing bench while its
+  asserts no longer execute.
 """
 
 import json
@@ -26,6 +31,10 @@ METRICS = [
     "pipelined_handoffs",
     "bsp_handoff_wait_secs",
     "pipelined_handoff_wait_secs",
+    "bsp_skipped_legs",
+    "pipelined_skipped_legs",
+    "bsp_max_coverage_debt",
+    "pipelined_max_coverage_debt",
 ]
 
 
@@ -60,16 +69,27 @@ def arms(doc):
     `ssp_arms` plus every top-level `*_arm` dict counts, so new arms added
     by later PRs flow through the delta report without touching this
     script (and an arm missing from either side just prints one-sided).
+
+    Names must be unique — the report and the removed-arm gate key arms
+    by name — so top-level arms use their JSON key (unique by
+    construction) and ssp_arms entries use their app label, suffixed
+    `#2`, `#3`, ... only on an actual collision (positional suffixes
+    would make the removed-arm gate fire on a mere insertion/reorder).
     """
     if not isinstance(doc, dict):
         return
+    seen = {}
     for arm in doc.get("ssp_arms") or []:
         if isinstance(arm, dict):
-            yield str(arm.get("app", "ssp-arm")), arm
+            name = str(arm.get("app", "ssp-arm"))
+            seen[name] = seen.get(name, 0) + 1
+            if seen[name] > 1:
+                name = f"{name}#{seen[name]}"
+            yield name, arm
     for key in sorted(doc):
         arm = doc[key]
         if key.endswith("_arm") and isinstance(arm, dict):
-            yield str(arm.get("app", key)), arm
+            yield key, arm
 
 
 def main():
@@ -85,13 +105,14 @@ def main():
         cur = json.load(f)
 
     base_arms = dict(arms(base))
+    cur_arms = dict(arms(cur))
     print(f"== fig9 bench delta: {sys.argv[2]} vs baseline {sys.argv[1]} ==")
     scale = cur.get("scale"), cur.get("n_workers")
     bscale = base.get("scale"), base.get("n_workers")
     if None not in bscale and bscale != scale:
         print(f"!! scale mismatch: baseline {bscale} vs current {scale} — "
               "deltas are not comparable")
-    for name, arm in arms(cur):
+    for name, arm in cur_arms.items():
         print(f"-- {name}")
         barm = base_arms.get(name, {})
         for m in METRICS:
@@ -101,6 +122,12 @@ def main():
             print(f"   {m:<26} {fmt(b):>14} -> {fmt(c):>14} {delta_str(b, c)}")
     b, c = base.get("wall_secs"), cur.get("wall_secs")
     print(f"-- wall_secs: {fmt(b)} -> {fmt(c)} {delta_str(b, c)}")
+    removed = sorted(n for n in base_arms if n not in cur_arms)
+    if removed:
+        print(f"!! arms removed since the baseline: {', '.join(removed)} — "
+              "their bench asserts no longer run; restore the arm or "
+              "refresh the committed baseline deliberately")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -7,9 +7,23 @@ import sys
 # root.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from hypothesis import settings
-
 # Pallas interpret-mode compiles are slow; keep example counts sane and
-# disable the per-example deadline globally.
-settings.register_profile("kernels", max_examples=20, deadline=None)
-settings.load_profile("kernels")
+# disable the per-example deadline globally.  Guarded: dependency-free
+# tests (e.g. test_bench_delta.py) must stay runnable in environments
+# without hypothesis, so when it is absent the hypothesis-dependent
+# modules (which import it unguarded at top level) are excluded from
+# collection instead of erroring the whole run.
+collect_ignore = []
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    collect_ignore = [
+        "test_lasso_kernel.py",
+        "test_lda_kernel.py",
+        "test_lda_shapes.py",
+        "test_mf_kernel.py",
+        "test_model_graphs.py",
+    ]
+else:
+    settings.register_profile("kernels", max_examples=20, deadline=None)
+    settings.load_profile("kernels")

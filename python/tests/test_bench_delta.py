@@ -1,0 +1,105 @@
+"""bench_delta.py: structural arm discovery and the removed-arm gate."""
+
+import json
+
+import pytest
+
+import bench_delta
+
+
+def _doc(arm_names, scale=0.1, workers=4, wall=1.0):
+    doc = {"figure": "fig9", "scale": scale, "n_workers": workers,
+           "wall_secs": wall, "ssp_arms": []}
+    for name in arm_names:
+        doc[f"{name}_arm"] = {
+            "app": name,
+            "bsp_secs_to_target": 2.0,
+            "pipelined_secs_to_target": 1.0,
+            "bsp_p2p_bytes": 100,
+            "pipelined_p2p_bytes": 200,
+        }
+    return doc
+
+
+def _run(tmp_path, base, cur, monkeypatch):
+    bp = tmp_path / "base.json"
+    cp = tmp_path / "cur.json"
+    bp.write_text(json.dumps(base))
+    cp.write_text(json.dumps(cur))
+    monkeypatch.setattr("sys.argv",
+                        ["bench_delta.py", str(bp), str(cp)])
+    bench_delta.main()
+
+
+def test_matching_arms_pass(tmp_path, monkeypatch, capsys):
+    doc = _doc(["rotation", "dynamic"])
+    _run(tmp_path, doc, doc, monkeypatch)
+    out = capsys.readouterr().out
+    assert "rotation" in out and "dynamic" in out
+    assert "arms removed" not in out
+
+
+def test_added_arm_prints_one_sided_and_passes(tmp_path, monkeypatch,
+                                               capsys):
+    # a NEW arm in the current run (the usual PR shape) must flow through
+    # without failing or needing a script change
+    _run(tmp_path, _doc(["rotation"]), _doc(["rotation", "dynamic"]),
+         monkeypatch)
+    out = capsys.readouterr().out
+    assert "-- dynamic" in out
+    assert "arms removed" not in out
+
+
+def test_removed_arm_fails_the_job(tmp_path, monkeypatch, capsys):
+    # an arm present in the baseline but MISSING from the current run must
+    # exit non-zero: its bench asserts silently stopped running
+    with pytest.raises(SystemExit) as exc:
+        _run(tmp_path, _doc(["rotation", "dynamic"]), _doc(["rotation"]),
+             monkeypatch)
+    assert exc.value.code == 1
+    assert "arms removed since the baseline: dynamic" in \
+        capsys.readouterr().out
+
+
+def test_missing_baseline_never_fails(tmp_path, monkeypatch, capsys):
+    cp = tmp_path / "cur.json"
+    cp.write_text(json.dumps(_doc(["rotation"])))
+    monkeypatch.setattr(
+        "sys.argv",
+        ["bench_delta.py", str(tmp_path / "absent.json"), str(cp)])
+    bench_delta.main()
+    assert "no usable baseline" in capsys.readouterr().out
+
+
+def test_corrupt_current_fails(tmp_path, monkeypatch):
+    bp = tmp_path / "base.json"
+    bp.write_text(json.dumps(_doc([])))
+    cp = tmp_path / "cur.json"
+    cp.write_text("{not json")
+    monkeypatch.setattr("sys.argv",
+                        ["bench_delta.py", str(bp), str(cp)])
+    with pytest.raises(json.JSONDecodeError):
+        bench_delta.main()
+
+
+def test_duplicate_app_labels_cannot_mask_a_removed_arm(tmp_path,
+                                                        monkeypatch,
+                                                        capsys):
+    # arms are keyed by their unique JSON key (and ssp_arms by position),
+    # so two arms sharing an "app" label stay distinct — deleting one
+    # must still trip the removed-arm gate rather than hide behind its
+    # same-named sibling
+    base = _doc(["rotation", "dynamic"])
+    base["dynamic_arm"]["app"] = "rotation"  # label collision
+    cur = _doc(["rotation"])
+    with pytest.raises(SystemExit) as exc:
+        _run(tmp_path, base, cur, monkeypatch)
+    assert exc.value.code == 1
+    assert "dynamic_arm" in capsys.readouterr().out
+
+
+def test_null_metrics_print_without_delta(tmp_path, monkeypatch, capsys):
+    base = _doc(["rotation"])
+    base["rotation_arm"]["bsp_secs_to_target"] = None
+    _run(tmp_path, base, _doc(["rotation"]), monkeypatch)
+    assert "n/a" in capsys.readouterr().out

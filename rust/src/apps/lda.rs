@@ -27,9 +27,11 @@
 use crate::backend::LdaShard;
 use crate::cluster::router_spin_ms;
 use crate::coordinator::{HandoffLeg, StradsApp};
-use crate::kvstore::{LeaseLedger, LeaseToken, SliceRouter, SliceStore};
+use crate::kvstore::{LeaseLedger, LeaseToken, SliceMass, SliceRouter, SliceStore};
 use crate::metrics::s_error;
-use crate::scheduler::rotation::{self, QueueOrder, RotationScheduler};
+use crate::scheduler::rotation::{
+    self, GrantLeg, QueueOrder, RotationScheduler, SkipPolicy,
+};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -48,6 +50,15 @@ pub struct LdaConfig {
 pub struct BSlice {
     pub counts: Vec<f32>,
     pub n_words: usize,
+}
+
+/// Token mass — the count total *is* the number of corpus tokens assigned
+/// to this slice's words, which is exactly what a sweep's compute scales
+/// with ([`QueueOrder::Dynamic`]'s score).
+impl SliceMass for BSlice {
+    fn mass(&self) -> f64 {
+        self.counts.iter().map(|&c| c as f64).sum()
+    }
 }
 
 /// One leg of a worker's round: a single slice assignment from its queue.
@@ -247,6 +258,12 @@ impl LdaApp {
         self.slices.peek(slice_id)
     }
 
+    /// A slice's committed version-chain head — the number of sweeps it
+    /// has absorbed (rounds, minus any `SkipPolicy::Defer` deferrals).
+    pub fn slice_version(&self, slice_id: usize) -> u64 {
+        self.slices.version(slice_id)
+    }
+
     pub fn n_workers(&self) -> usize {
         self.n_workers
     }
@@ -287,22 +304,32 @@ impl StradsApp for LdaApp {
 
     fn schedule(&mut self, round: u64) -> Vec<LdaTask> {
         let u = self.n_slices;
-        let p_workers = self.n_workers;
-        let queues = self.sched.next_round_queues();
+        // skip-capable scheduling polls the data plane (see
+        // kvstore::rotation_availability); under SkipPolicy::Never the
+        // signal would be ignored anyway, so the default path skips the
+        // per-slice router polls entirely and the grants are the PR-4
+        // stream bit-exact
+        let grants = match self.sched.skip_policy() {
+            SkipPolicy::Never => self.sched.next_round_grants(|_| true),
+            SkipPolicy::Defer { .. } => {
+                let avail = crate::kvstore::rotation_availability(
+                    self.router.as_deref(),
+                    &self.ledger,
+                );
+                self.sched.next_round_grants(|a| avail[a])
+            }
+        };
         // per-round disjointness is what licenses parallel sweeps
         let mut seen = vec![false; u];
-        let mut tasks = Vec::with_capacity(queues.len());
-        for (p, queue) in queues.into_iter().enumerate() {
+        let mut tasks = Vec::with_capacity(grants.len());
+        for queue in grants {
             let mut legs = Vec::with_capacity(queue.len());
-            for (j, slice_id) in queue.into_iter().enumerate() {
+            for GrantLeg { slice_id, dest_worker } in queue {
                 assert!(
                     !seen[slice_id],
                     "slice {slice_id} assigned twice in one round"
                 );
                 seen[slice_id] = true;
-                // the leg occupies virtual ring position p + j·P this
-                // round; the slice lands on that position's ring successor
-                let dest_worker = self.sched.next_holder(p + j * p_workers);
                 let (b_slice, version) = match &self.router {
                     // pipelined rotation: grant a versioned lease; the
                     // slice moves worker→worker, only metadata + the
@@ -363,11 +390,13 @@ impl StradsApp for LdaApp {
         let mut out_legs = Vec::with_capacity(legs.len());
         let mut touched_words = 0usize;
 
-        // availability-ordered sweep applies to routed legs only (BSP legs
-        // carry their slices — there is nothing to wait on): sweep
-        // whichever granted slice landed first instead of stalling on ring
-        // order ([`SliceRouter::take_earliest`] is the shared discipline).
-        if order == QueueOrder::Availability && router.is_some() {
+        // reordered sweeps apply to routed legs only (BSP legs carry
+        // their slices — there is nothing to wait on): sweep whichever
+        // granted slice landed first ([`SliceRouter::take_earliest`],
+        // Availability) or the heaviest parked one
+        // ([`SliceRouter::take_heaviest`], Dynamic) instead of stalling
+        // on ring order.
+        if order != QueueOrder::Strict && router.is_some() {
             let router = router.as_ref().expect("checked is_some");
             let mut remaining = legs;
             let spin = Duration::from_millis(router_spin_ms());
@@ -376,12 +405,14 @@ impl StradsApp for LdaApp {
                     .iter()
                     .map(|l| {
                         let version =
-                            l.version.expect("availability legs are routed");
+                            l.version.expect("reordered legs are routed");
                         (l.slice_id, version)
                     })
                     .collect();
-                let (pick, data, consumed) =
-                    router.take_earliest(&grants, spin);
+                let (pick, data, consumed) = match order {
+                    QueueOrder::Dynamic => router.take_heaviest(&grants, spin),
+                    _ => router.take_earliest(&grants, spin),
+                };
                 let leg = remaining.remove(pick);
                 let (s_local, touched, out) = routed_leg(
                     ws,
@@ -563,6 +594,18 @@ impl StradsApp for LdaApp {
         self.sched.set_queue_order(order);
     }
 
+    fn supports_skip() -> bool {
+        // the schedule already routes through next_round_grants with a
+        // live parked-version signal, and push/pull tolerate short (even
+        // empty) queues: a skipped slice simply contributes no sweep and
+        // no s̃ delta that round
+        true
+    }
+
+    fn set_skip_policy(&mut self, skip: SkipPolicy) {
+        self.sched.set_skip_policy(skip);
+    }
+
     fn n_rotation_slices(&self) -> usize {
         self.n_slices
     }
@@ -663,20 +706,55 @@ pub mod setup {
         gamma: f32,
         seed: u64,
     ) -> LdaSetup {
+        build_sliced_targets(
+            corpus, k, n_workers, n_slices, worker_speeds, None, alpha,
+            gamma, seed,
+        )
+    }
+
+    /// [`build_sliced`] with an optional **slice-mass profile**: when
+    /// `slice_mass_targets` is given, words are partitioned so slice `a`
+    /// holds ≈ `targets[a]` of the corpus token mass
+    /// ([`RotationScheduler::partition_words_to_targets`]) instead of the
+    /// default balanced split — the controlled skew (e.g. a Zipf profile)
+    /// the dynamic-order experiments sweep heaviest-first.  Skewed builds
+    /// use the identity ring placement unless `worker_speeds` asks for
+    /// the skew-aware one.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_sliced_targets(
+        corpus: &Corpus,
+        k: usize,
+        n_workers: usize,
+        n_slices: usize,
+        worker_speeds: Option<&[f64]>,
+        slice_mass_targets: Option<&[f64]>,
+        alpha: f32,
+        gamma: f32,
+        seed: u64,
+    ) -> LdaSetup {
         let u = n_slices;
         let v = corpus.vocab;
         assert!(u >= n_workers, "fewer slices than workers");
         assert!(v >= u, "vocab smaller than the slice count");
+        if let Some(t) = slice_mass_targets {
+            assert_eq!(t.len(), u, "one mass target per slice");
+        }
         let mut rng = Rng::new(seed);
 
-        // frequency-aware word→slice map, plus slice-local indices
+        // word→slice map (frequency-balanced by default, target-profiled
+        // when a mass profile is given), plus slice-local indices
         let mut freqs = vec![0u64; v];
         for doc in &corpus.docs {
             for &w in doc {
                 freqs[w as usize] += 1;
             }
         }
-        let slice_of = RotationScheduler::partition_words_by_freq(&freqs, u);
+        let slice_of = match slice_mass_targets {
+            Some(targets) => {
+                RotationScheduler::partition_words_to_targets(&freqs, targets)
+            }
+            None => RotationScheduler::partition_words_by_freq(&freqs, u),
+        };
         let mut local_of = vec![0u32; v];
         let mut word_map: Vec<Vec<u32>> = vec![Vec::new(); u];
         for w in 0..v {

@@ -23,8 +23,12 @@
 use crate::backend::MfShard;
 use crate::cluster::router_spin_ms;
 use crate::coordinator::{HandoffLeg, StradsApp};
-use crate::kvstore::{LeaseLedger, LeaseToken, SliceRouter, SliceStore};
-use crate::scheduler::rotation::{self, QueueOrder, RotationScheduler};
+use crate::kvstore::{
+    LeaseLedger, LeaseToken, SliceMass, SliceRouter, SliceStore,
+};
+use crate::scheduler::rotation::{
+    self, GrantLeg, QueueOrder, RotationScheduler, SkipPolicy,
+};
 use crate::scheduler::round_robin::{Factor, MfRound, RoundRobinScheduler};
 use crate::sparse::CsrMatrix;
 use std::collections::HashMap;
@@ -206,6 +210,16 @@ impl HBlock {
     /// Payload bytes a handoff of this block moves.
     pub fn bytes(&self) -> usize {
         self.cols.len() * 4 + self.h.len() * 4
+    }
+}
+
+/// Column count as the sweep-cost proxy: the builder's nnz-balanced split
+/// makes a block's rating mass track its column share, and the columns
+/// are what an SGD block sweep iterates ([`QueueOrder::Dynamic`]'s
+/// score).
+impl SliceMass for HBlock {
+    fn mass(&self) -> f64 {
+        self.cols.len() as f64
     }
 }
 
@@ -495,20 +509,29 @@ impl StradsApp for MfBlockApp {
 
     fn schedule(&mut self, round: u64) -> Vec<MfBlockTask> {
         let u = self.n_blocks;
-        let p_workers = self.n_workers;
         let eta = self.eta0 / (1.0 + self.eta_decay * round as f32);
-        let queues = self.sched.next_round_queues();
+        // shared skip-capable availability signal; the default Never
+        // path never reads it, so it skips the router polls entirely
+        let grants = match self.sched.skip_policy() {
+            SkipPolicy::Never => self.sched.next_round_grants(|_| true),
+            SkipPolicy::Defer { .. } => {
+                let avail = crate::kvstore::rotation_availability(
+                    self.router.as_deref(),
+                    &self.ledger,
+                );
+                self.sched.next_round_grants(|b| avail[b])
+            }
+        };
         let mut seen = vec![false; u];
-        let mut tasks = Vec::with_capacity(queues.len());
-        for (p, queue) in queues.into_iter().enumerate() {
+        let mut tasks = Vec::with_capacity(grants.len());
+        for queue in grants {
             let mut legs = Vec::with_capacity(queue.len());
-            for (j, block_id) in queue.into_iter().enumerate() {
+            for GrantLeg { slice_id: block_id, dest_worker } in queue {
                 assert!(
                     !seen[block_id],
                     "block {block_id} assigned twice in one round"
                 );
                 seen[block_id] = true;
-                let dest_worker = self.sched.next_holder(p + j * p_workers);
                 let (h_block, version) = match &self.router {
                     Some(_) => (None, Some(self.ledger.grant(block_id))),
                     None => {
@@ -561,9 +584,11 @@ impl StradsApp for MfBlockApp {
         let mut out_legs = Vec::with_capacity(legs.len());
 
         // routed legs only (BSP legs carry their blocks): sweep whichever
-        // granted block landed first ([`SliceRouter::take_earliest`] is
-        // the shared discipline; see the LDA push path for its contract)
-        if order == QueueOrder::Availability && router.is_some() {
+        // granted block landed first ([`SliceRouter::take_earliest`],
+        // Availability) or the heaviest parked one
+        // ([`SliceRouter::take_heaviest`], Dynamic); see the LDA push
+        // path for the shared contract
+        if order != QueueOrder::Strict && router.is_some() {
             let router = router.as_ref().expect("checked is_some");
             let mut remaining = legs;
             let spin = Duration::from_millis(router_spin_ms());
@@ -572,12 +597,14 @@ impl StradsApp for MfBlockApp {
                     .iter()
                     .map(|l| {
                         let version =
-                            l.version.expect("availability legs are routed");
+                            l.version.expect("reordered legs are routed");
                         (l.block_id, version)
                     })
                     .collect();
-                let (pick, data, consumed) =
-                    router.take_earliest(&grants, spin);
+                let (pick, data, consumed) = match order {
+                    QueueOrder::Dynamic => router.take_heaviest(&grants, spin),
+                    _ => router.take_earliest(&grants, spin),
+                };
                 let leg = remaining.remove(pick);
                 out_legs.push(routed_leg(
                     ws,
@@ -707,6 +734,18 @@ impl StradsApp for MfBlockApp {
 
     fn set_queue_order(&mut self, order: QueueOrder) {
         self.sched.set_queue_order(order);
+    }
+
+    fn supports_skip() -> bool {
+        // grants route through next_round_grants with a live
+        // parked-version signal, and a short (even empty) queue is just a
+        // round with fewer SGD sweeps — W rows and the eval mirror need
+        // no per-round completeness
+        true
+    }
+
+    fn set_skip_policy(&mut self, skip: SkipPolicy) {
+        self.sched.set_skip_policy(skip);
     }
 
     fn n_rotation_slices(&self) -> usize {

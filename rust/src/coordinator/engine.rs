@@ -60,7 +60,7 @@ use crate::cluster::{
 };
 use crate::kvstore::{LeaseToken, VersionVector};
 use crate::metrics::{Recorder, SspStats};
-use crate::scheduler::rotation::QueueOrder;
+use crate::scheduler::rotation::{QueueOrder, SkipPolicy};
 use crate::util::stats::Stopwatch;
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -214,6 +214,25 @@ pub trait StradsApp {
     /// (Strict-only apps).
     fn set_queue_order(&mut self, _order: QueueOrder) {}
 
+    /// Whether the app's schedule can *skip* a round's still-in-flight
+    /// slice entirely and lease it later
+    /// ([`crate::scheduler::rotation::SkipPolicy::Defer`]): its scheduler
+    /// must route grants through
+    /// [`crate::scheduler::RotationScheduler::next_round_grants`] with a
+    /// live availability signal, and its push/pull paths must tolerate
+    /// rounds where a worker's queue is short (or empty).  Apps that
+    /// cannot do this leave it false, and a Defer request degrades to
+    /// `Never` (see the README's mode-degradation table).
+    fn supports_skip() -> bool {
+        false
+    }
+
+    /// Rotation mode: the effective skip policy for the run, announced
+    /// before [`StradsApp::begin_rotation`] (after
+    /// [`StradsApp::set_queue_order`]).  The default ignores it
+    /// (never-skip apps).
+    fn set_skip_policy(&mut self, _skip: SkipPolicy) {}
+
     /// Generic p2p payloads ([`StradsApp::p2p_payloads`]): the worker that
     /// receives `worker`'s payload ring-wise.  The single source of truth
     /// for the orientation is
@@ -276,11 +295,17 @@ pub struct RunConfig {
     /// measured times pass through bit-identically).
     pub straggler: StragglerModel,
     /// Rotation mode: within-queue service discipline.  `Availability`
-    /// takes effect only on apps that
+    /// and `Dynamic` take effect only on apps that
     /// [`StradsApp::supports_queue_reorder`]; everything else runs
     /// `Strict` (default: Strict, bit-identical to the fixed-order
     /// engine).
     pub queue_order: QueueOrder,
+    /// Rotation mode: whether a round may skip a still-in-flight slice
+    /// and lease it later ([`SkipPolicy::Defer`]).  Takes effect only on
+    /// apps that [`StradsApp::supports_skip`]; everything else runs
+    /// `Never` (default: Never, bit-identical to the always-grant
+    /// schedule).
+    pub skip_policy: SkipPolicy,
     /// Rotation mode: per-handoff latency model for the virtual-time
     /// gates (default: none; handoffs land instantly, bit-identical
     /// timelines).
@@ -299,6 +324,7 @@ impl Default for RunConfig {
             mode: ExecutionMode::Bsp,
             straggler: StragglerModel::None,
             queue_order: QueueOrder::Strict,
+            skip_policy: SkipPolicy::Never,
             handoff_jitter: HandoffJitter::None,
         }
     }
@@ -323,6 +349,12 @@ pub struct RunResult {
     /// handoff to land (rotation pipelines; 0.0 otherwise).  Per-worker
     /// breakdown in [`RunResult::ssp`]'s `handoff_wait_secs`.
     pub total_handoff_wait_secs: f64,
+    /// Rotation slice-legs skipped over the run ([`SkipPolicy::Defer`];
+    /// 0 elsewhere).
+    pub total_skipped_legs: u64,
+    /// Worst per-slice coverage debt observed (collected rounds minus
+    /// grants of the laggiest slice; 0 when nothing skips).
+    pub max_coverage_debt: u64,
     /// Set if a worker exceeded the modelled memory capacity.
     pub oom: Option<String>,
     /// Pipeline accounting (observed staleness, straggler wait hidden) for
@@ -361,6 +393,12 @@ struct RotClockState {
     /// other slices of the same queue are *not* gated on it, which is what
     /// lets a U > P worker sample one slice while another is in flight.
     slice_ready: Vec<f64>,
+    /// Per-slice grant count over the collected rounds: `collected -
+    /// grants[a]` is slice `a`'s observed coverage debt
+    /// ([`SkipPolicy::Defer`] skips; identically zero under `Never`).
+    grants: Vec<u64>,
+    /// Rounds collected so far.
+    collected: u64,
 }
 
 /// The coordinator: owns the app, the worker pool, and all accounting.
@@ -439,17 +477,20 @@ impl<A: StradsApp> Engine<A> {
     /// dispatch half of the pipeline).  Returns the pending handle and the
     /// measured schedule seconds.
     fn dispatch_round(&mut self, round_idx: u64) -> (PendingRound<A::Partial>, f64) {
-        self.dispatch_round_inner(round_idx, false)
+        self.dispatch_round_inner(round_idx, false, false)
     }
 
     /// `routed`: rotation mode — tasks carry only scheduling metadata plus
     /// synced state (hub traffic; the slice payloads move worker→worker at
     /// handoff time), and each task's lease tokens are recorded on the
-    /// pending round for collect-time verification.
+    /// pending round for collect-time verification.  `may_skip`: the run's
+    /// effective [`SkipPolicy`] is `Defer`, so a worker's lease queue may
+    /// legitimately be empty this round (all its slices deferred).
     fn dispatch_round_inner(
         &mut self,
         round_idx: u64,
         routed: bool,
+        may_skip: bool,
     ) -> (PendingRound<A::Partial>, f64) {
         let sw = Stopwatch::start();
         let tasks = self.app.schedule(round_idx);
@@ -464,7 +505,7 @@ impl<A: StradsApp> Engine<A> {
                 self.network.send_down(p, A::task_bytes(t));
                 let granted = A::task_leases(t);
                 assert!(
-                    !granted.is_empty(),
+                    may_skip || !granted.is_empty(),
                     "rotation task must carry at least one lease"
                 );
                 leases.push(granted);
@@ -626,6 +667,8 @@ impl<A: StradsApp> Engine<A> {
             total_p2p_bytes: self.network.total_p2p_bytes(),
             total_p2p_msgs: self.network.total_p2p_msgs(),
             total_handoff_wait_secs: 0.0,
+            total_skipped_legs: 0,
+            max_coverage_debt: 0,
             recorder,
             oom,
             ssp: None,
@@ -732,6 +775,8 @@ impl<A: StradsApp> Engine<A> {
             total_p2p_bytes: self.network.total_p2p_bytes(),
             total_p2p_msgs: self.network.total_p2p_msgs(),
             total_handoff_wait_secs: 0.0, // SSP shares state; no handoffs
+            total_skipped_legs: 0,
+            max_coverage_debt: 0,
             recorder,
             oom,
             ssp: Some(stats),
@@ -795,8 +840,9 @@ impl<A: StradsApp> Engine<A> {
     /// when its leg finished, and every consumed lease must be exactly the
     /// one its task granted — leg for leg in sweep order under
     /// [`QueueOrder::Strict`], as an exact set under
-    /// [`QueueOrder::Availability`] (the worker swept
-    /// earliest-landed-first, a permutation of its queue; the legs are
+    /// [`QueueOrder::Availability`] and [`QueueOrder::Dynamic`] (the
+    /// worker swept a run-time-chosen permutation of its queue —
+    /// earliest-landed or heaviest-parked first; the legs are
     /// re-canonicalized into granted order so downstream accounting is
     /// deterministic).  Returns each worker's legs as `(slice_id,
     /// seconds)` — the worker's straggler-scaled measured seconds
@@ -832,7 +878,7 @@ impl<A: StradsApp> Engine<A> {
                          (round {round_idx})"
                     );
                 }
-                QueueOrder::Availability => {
+                QueueOrder::Availability | QueueOrder::Dynamic => {
                     // any within-queue permutation is legal; canonicalize
                     // back to granted (queue-position) order
                     let mut reordered = Vec::with_capacity(granted[p].len());
@@ -935,28 +981,44 @@ impl<A: StradsApp> Engine<A> {
     /// earliest-ready-first, which for a single worker's round is the
     /// makespan-optimal discipline for its release times — a worker never
     /// idles on one in-flight handoff while another queued slice sits
-    /// parked.  A straggler therefore delays only the chains its slices
-    /// flow along while the rest of the ring keeps moving, which is
-    /// exactly the wavefront the BSP barrier destroys.  `depth: 1` with
-    /// Strict order and no jitter serializes collects behind dispatches
-    /// and reproduces BSP ordering (and objectives) exactly.
+    /// parked; [`QueueOrder::Dynamic`] keeps that non-idling guarantee
+    /// and additionally sweeps the heaviest parked slice first, so the
+    /// sweep gating the most downstream compute releases its handoff
+    /// earliest.  [`crate::scheduler::rotation::SkipPolicy::Defer`] (apps
+    /// opting in via [`StradsApp::supports_skip`]) goes further: a slice
+    /// still in flight at schedule time is left out of the round entirely
+    /// and leased later, bounded by a per-slice
+    /// [`crate::scheduler::CoverageDebtLedger`] budget so coverage still
+    /// completes within `U + debt_limit` rounds (skip and debt counters
+    /// land in [`SspStats`] / [`RunResult`]).  A straggler therefore
+    /// delays only the chains its slices flow along while the rest of the
+    /// ring keeps moving, which is exactly the wavefront the BSP barrier
+    /// destroys.  `depth: 1` with Strict order, `SkipPolicy::Never`, and
+    /// no jitter serializes collects behind dispatches and reproduces BSP
+    /// ordering (and objectives) exactly.
     fn run_rotation(&mut self, cfg: &RunConfig, depth: u64) -> RunResult {
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
         let mut recorder = Recorder::new(&cfg.label);
         let mut stats = SspStats::new();
         let mut vv = VersionVector::new(n);
-        // Availability takes effect only when the app's push path can
-        // service its queue out of order; everything else degrades to the
-        // strict ring discipline (README: mode-degradation table).
-        let order = if cfg.queue_order == QueueOrder::Availability
-            && A::supports_queue_reorder()
-        {
-            QueueOrder::Availability
-        } else {
-            QueueOrder::Strict
+        // Availability/Dynamic take effect only when the app's push path
+        // can service its queue out of order, and Defer only when its
+        // schedule can leave a slice out of a round; everything else
+        // degrades to the strict ring discipline / the always-grant
+        // schedule (README: mode-degradation table).
+        let order = match cfg.queue_order {
+            QueueOrder::Strict => QueueOrder::Strict,
+            reorder if A::supports_queue_reorder() => reorder,
+            _ => QueueOrder::Strict,
         };
+        let skip = match cfg.skip_policy {
+            SkipPolicy::Defer { .. } if A::supports_skip() => cfg.skip_policy,
+            _ => SkipPolicy::Never,
+        };
+        let may_skip = skip != SkipPolicy::Never;
         self.app.set_queue_order(order);
+        self.app.set_skip_policy(skip);
         self.app.begin_rotation(depth);
         let n_slices = self.app.n_rotation_slices();
         assert!(
@@ -979,6 +1041,8 @@ impl<A: StradsApp> Engine<A> {
             coord_now: self.clock.seconds(),
             worker_free: vec![self.clock.seconds(); n],
             slice_ready: vec![self.clock.seconds(); n_slices],
+            grants: vec![0; n_slices],
+            collected: 0,
         };
 
         let mut rounds_run = 0;
@@ -989,7 +1053,8 @@ impl<A: StradsApp> Engine<A> {
                     &cfg.handoff_jitter,
                 );
             }
-            let (pending, schedule_secs) = self.dispatch_round_inner(r, true);
+            let (pending, schedule_secs) =
+                self.dispatch_round_inner(r, true, may_skip);
             clk.coord_now += schedule_secs;
             window.push_back(InFlight {
                 round: r,
@@ -1052,6 +1117,8 @@ impl<A: StradsApp> Engine<A> {
             total_p2p_bytes: self.network.total_p2p_bytes(),
             total_p2p_msgs: self.network.total_p2p_msgs(),
             total_handoff_wait_secs: stats.total_handoff_wait_secs(),
+            total_skipped_legs: stats.skipped_legs,
+            max_coverage_debt: stats.max_coverage_debt,
             recorder,
             oom,
             ssp: Some(stats),
@@ -1088,6 +1155,26 @@ impl<A: StradsApp> Engine<A> {
         // every rotation pull commits coordinator state (settled leases +
         // refreshed sums) even without a sync broadcast
         vv.commit();
+
+        // skip/debt accounting: a slice absent from every queue this round
+        // was deferred (SkipPolicy::Defer); its coverage debt is the gap
+        // between rounds collected and grants observed
+        clk.collected += 1;
+        let mut granted_legs = 0u64;
+        for legs in &timed_legs {
+            for &(slice, _) in legs {
+                clk.grants[slice] += 1;
+                granted_legs += 1;
+            }
+        }
+        stats.record_skips(clk.grants.len() as u64 - granted_legs);
+        let debt_now = clk
+            .grants
+            .iter()
+            .map(|&g| clk.collected - g)
+            .max()
+            .unwrap_or(0);
+        stats.note_coverage_debt(debt_now);
 
         // replay each worker's queue against the per-slice availability
         // timeline: a leg starts when the worker reaches it AND the
@@ -1127,7 +1214,9 @@ impl<A: StradsApp> Engine<A> {
 /// timeline for one round.  `legs` are `(slice_id, seconds)` in granted
 /// (ring-position) order; each leg starts at
 /// `max(worker time, slice_ready[slice])` and runs for its seconds, and
-/// its handoff lands downstream at `finish + jitter latency`.
+/// its handoff lands downstream at `finish + jitter latency`.  A queue
+/// emptied by [`SkipPolicy::Defer`] replays to `(start, 0, 0)` and leaves
+/// every skipped slice's readiness untouched.
 ///
 /// [`QueueOrder::Strict`] services the legs as given — arithmetic
 /// identical, term for term, to the fixed-order engine.
@@ -1137,11 +1226,25 @@ impl<A: StradsApp> Engine<A> {
 /// its makespan, so a worker's round never finishes later than under any
 /// fixed order — the opportunistic reordering is pure win in the model,
 /// exactly as `try_take` polling is on the data plane.
+/// [`QueueOrder::Dynamic`] services, among the legs whose slices have
+/// already landed, the one with the most compute first (seconds proxy
+/// token mass; ties toward the earlier release, then queue position),
+/// waiting only when nothing is ready.  Both reordering disciplines are
+/// *non-idling*, so a worker's round finishes at the same time under
+/// either — Dynamic changes only **when each slice's handoff releases**,
+/// front-loading the heavy slices so the sweeps that gate the most
+/// downstream compute land earliest (the mass × downstream-benefit
+/// score; property-tested against Availability's finish in
+/// `tests/rotation_properties.rs`).
+///
+/// Public so the regression/property suites can pin the model itself
+/// (golden replays, never-worse properties) without driving a full
+/// engine.
 ///
 /// Returns `(finish time, total compute seconds, handoff wait seconds)`;
 /// the wait is the idle time the worker spent blocked on not-yet-landed
-/// slices (the slack availability ordering exists to reclaim).
-fn replay_queue(
+/// slices (the slack the reordering disciplines exist to reclaim).
+pub fn replay_queue(
     order: QueueOrder,
     start: f64,
     legs: &[(usize, f64)],
@@ -1150,6 +1253,11 @@ fn replay_queue(
     round: u64,
     jitter: &HandoffJitter,
 ) -> (f64, f64, f64) {
+    if order == QueueOrder::Dynamic {
+        return replay_queue_dynamic(
+            start, legs, slice_ready, next_ready, round, jitter,
+        );
+    }
     let mut idx: Vec<usize> = (0..legs.len()).collect();
     if order == QueueOrder::Availability {
         idx.sort_by(|&a, &b| {
@@ -1167,6 +1275,62 @@ fn replay_queue(
         wait += (slice_ready[slice] - t).max(0.0);
         let leg_start = t.max(slice_ready[slice]);
         t = leg_start + secs;
+        next_ready[slice] = t + jitter.latency(slice, round, secs);
+        total += secs;
+    }
+    (t, total, wait)
+}
+
+/// The [`QueueOrder::Dynamic`] half of [`replay_queue`]: event-driven —
+/// the ready set depends on the worker's own progress, so the order
+/// cannot be fixed up front the way Availability's earliest-release sort
+/// can.
+fn replay_queue_dynamic(
+    start: f64,
+    legs: &[(usize, f64)],
+    slice_ready: &[f64],
+    next_ready: &mut [f64],
+    round: u64,
+    jitter: &HandoffJitter,
+) -> (f64, f64, f64) {
+    let mut remaining: Vec<usize> = (0..legs.len()).collect();
+    let mut t = start;
+    let mut total = 0.0f64;
+    let mut wait = 0.0f64;
+    while !remaining.is_empty() {
+        let ready_at = |i: usize| slice_ready[legs[i].0];
+        if remaining.iter().all(|&i| ready_at(i) > t) {
+            // nothing parked: wait for the earliest release
+            let tmin = remaining
+                .iter()
+                .map(|&i| ready_at(i))
+                .fold(f64::INFINITY, f64::min);
+            wait += tmin - t;
+            t = tmin;
+        }
+        // heaviest ready leg first; ties toward the earlier release, then
+        // queue position (mirrors SliceRouter::take_heaviest's data-plane
+        // tie-break: arrival stamp, then grant index)
+        let (at, _) = remaining
+            .iter()
+            .enumerate()
+            .filter(|&(_, &i)| ready_at(i) <= t)
+            .max_by(|&(_, &a), &(_, &b)| {
+                legs[a]
+                    .1
+                    .partial_cmp(&legs[b].1)
+                    .expect("leg seconds are never NaN")
+                    .then(
+                        ready_at(b)
+                            .partial_cmp(&ready_at(a))
+                            .expect("slice_ready is never NaN"),
+                    )
+                    .then(b.cmp(&a))
+            })
+            .expect("a leg is ready after waiting");
+        let i = remaining.swap_remove(at);
+        let (slice, secs) = legs[i];
+        t += secs;
         next_ready[slice] = t + jitter.latency(slice, round, secs);
         total += secs;
     }
@@ -1501,6 +1665,105 @@ mod tests {
             assert_eq!(st, at, "same total compute");
             assert!(aw >= 0.0);
         }
+    }
+
+    fn dynamic_replay(
+        start: f64,
+        legs: &[(usize, f64)],
+        ready: &[f64],
+    ) -> (f64, f64, f64) {
+        let mut next = ready.to_vec();
+        replay_queue(
+            QueueOrder::Dynamic,
+            start,
+            legs,
+            ready,
+            &mut next,
+            0,
+            &HandoffJitter::None,
+        )
+    }
+
+    #[test]
+    fn dynamic_replay_sweeps_the_heaviest_parked_slice_first() {
+        // both slices parked at t=0: dynamic sweeps the heavy one (3s)
+        // first so its handoff releases at 3, not 5 — availability
+        // (arrival order = queue order here) releases it only at 5
+        let legs = [(0usize, 2.0f64), (1, 3.0)];
+        let ready = [0.0, 0.0];
+        let mut next_d = ready.to_vec();
+        let (fd, ..) = replay_queue(
+            QueueOrder::Dynamic,
+            0.0,
+            &legs,
+            &ready,
+            &mut next_d,
+            0,
+            &HandoffJitter::None,
+        );
+        let mut next_a = ready.to_vec();
+        let (fa, ..) = replay_queue(
+            QueueOrder::Availability,
+            0.0,
+            &legs,
+            &ready,
+            &mut next_a,
+            0,
+            &HandoffJitter::None,
+        );
+        assert_eq!((fd, fa), (5.0, 5.0), "same finish: both non-idling");
+        assert_eq!(next_d, vec![5.0, 3.0], "heavy slice 1 released first");
+        assert_eq!(next_a, vec![2.0, 5.0], "availability releases in order");
+    }
+
+    #[test]
+    fn dynamic_replay_waits_only_when_nothing_is_parked() {
+        // slice 0 (heavy) lands at 10, slice 1 is parked: dynamic must
+        // sweep slice 1 during the stall rather than idle for the heavier
+        // leg — the non-idling half of the discipline
+        let legs = [(0usize, 5.0f64), (1, 1.0)];
+        let ready = [10.0, 0.0];
+        let (f, total, wait) = dynamic_replay(0.0, &legs, &ready);
+        assert_eq!((f, total, wait), (15.0, 6.0, 9.0));
+    }
+
+    #[test]
+    fn dynamic_replay_finish_matches_availability_exactly_case_free() {
+        // both disciplines are non-idling on a single machine, so the
+        // round's finish time and total compute agree on every instance —
+        // Dynamic can only permute *which* slice releases when.
+        // Deterministic pseudo-random instances, exact-value comparison
+        // modulo f64 summation order.
+        let mut x = 0x9E3779B9u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for case in 0..500 {
+            let n = 1 + case % 6;
+            let legs: Vec<(usize, f64)> =
+                (0..n).map(|s| (s, 0.1 + rnd())).collect();
+            let ready: Vec<f64> = (0..n).map(|_| 3.0 * rnd()).collect();
+            let start = rnd();
+            let (fa, ta, _) = avail_replay(start, &legs, &ready);
+            let (fd, td, wd) = dynamic_replay(start, &legs, &ready);
+            assert!(
+                (fa - fd).abs() <= 1e-9 * fa.abs().max(1.0),
+                "dynamic finish {fd} != availability {fa} (case {case})"
+            );
+            assert!((ta - td).abs() < 1e-12, "same total compute");
+            assert!(wd >= 0.0);
+        }
+    }
+
+    #[test]
+    fn dynamic_replay_on_empty_queue_is_a_noop() {
+        // a fully-deferred round (SkipPolicy::Defer): no legs, no time
+        let ready = [4.0, 7.0];
+        let (f, total, wait) = dynamic_replay(2.5, &[], &ready);
+        assert_eq!((f, total, wait), (2.5, 0.0, 0.0));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 pub mod engine;
 
 pub use engine::{
-    Engine as StradsEngine, ExecutionMode, HandoffLeg, RunConfig, RunResult,
-    StradsApp,
+    replay_queue, Engine as StradsEngine, ExecutionMode, HandoffLeg,
+    RunConfig, RunResult, StradsApp,
 };
-pub use crate::scheduler::rotation::QueueOrder;
+pub use crate::scheduler::rotation::{QueueOrder, SkipPolicy};

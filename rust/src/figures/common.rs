@@ -66,6 +66,34 @@ pub fn lda_engine_sliced(
     StradsEngine::new(s.app, s.shards, cfg)
 }
 
+/// Build a STRADS LDA engine with `n_slices` ≥ `workers` rotation slices
+/// whose token masses follow the given (relative) per-slice targets —
+/// the controlled skew the dynamic-order arms sweep heaviest-first (see
+/// [`crate::scheduler::RotationScheduler::partition_words_to_targets`]).
+/// Identity ring placement: the skew stays where the profile puts it.
+pub fn lda_engine_sliced_targets(
+    corpus: &Corpus,
+    k: usize,
+    workers: usize,
+    n_slices: usize,
+    mass_targets: &[f64],
+    seed: u64,
+    cfg: &RunConfig,
+) -> StradsEngine<LdaApp> {
+    let s = lda_setup::build_sliced_targets(
+        corpus,
+        k,
+        workers,
+        n_slices,
+        None,
+        Some(mass_targets),
+        0.1,
+        0.01,
+        seed,
+    );
+    StradsEngine::new(s.app, s.shards, cfg)
+}
+
 /// Build a STRADS Lasso engine (priority or random scheduling) on the
 /// paper-recipe data (0.9 independent-noise probability).
 pub fn lasso_engine(

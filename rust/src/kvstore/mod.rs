@@ -21,6 +21,8 @@ pub mod router;
 pub mod slices;
 pub mod versioned;
 
-pub use router::{LeaseLedger, LeaseToken, SliceRouter};
+pub use router::{
+    rotation_availability, LeaseLedger, LeaseToken, SliceMass, SliceRouter,
+};
 pub use slices::{SliceLease, SliceStore};
 pub use versioned::{VersionVector, VersionedParams};

@@ -46,6 +46,24 @@ pub struct LeaseToken {
     pub version: u64,
 }
 
+/// Sweep-cost mass of a routed payload — what the dynamic queue order
+/// ([`crate::scheduler::rotation::QueueOrder::Dynamic`]) scores parked
+/// slices by: per-leg compute is proportional to a slice's token mass, so
+/// the heaviest parked slice is the one whose sweep gates the most
+/// downstream work, and releasing its handoff first buys the most
+/// overlap.  Implementations return a non-negative, NaN-free score on the
+/// same relative scale across one router's slices.
+pub trait SliceMass {
+    fn mass(&self) -> f64;
+}
+
+/// Element count — the stand-in mass the protocol test payloads use.
+impl SliceMass for Vec<u32> {
+    fn mass(&self) -> f64 {
+        self.len() as f64
+    }
+}
+
 /// Worker-side slice handoff ring: versioned slices move peer→peer through
 /// a blocking per-slice mailbox, never through the coordinator.
 ///
@@ -168,19 +186,40 @@ impl<T: Send> SliceRouter<T> {
         grants: &[(usize, u64)],
         timeout: Duration,
     ) -> (usize, T, u64) {
-        assert!(!grants.is_empty(), "take_earliest needs at least one grant");
-        let deadline = std::time::Instant::now() + timeout;
-        loop {
+        self.spin_take(grants, timeout, "availability", |router, grants| {
             let mut best: Option<(usize, u64)> = None;
             for (i, &(slice_id, version)) in grants.iter().enumerate() {
-                if self.parked_version(slice_id) == Some(version) {
-                    let arr = self.arrival_seq(slice_id);
+                if router.parked_version(slice_id) == Some(version) {
+                    let arr = router.arrival_seq(slice_id);
                     if best.is_none_or(|(_, b)| arr < b) {
                         best = Some((i, arr));
                     }
                 }
             }
-            if let Some((i, _)) = best {
+            best.map(|(i, _)| i)
+        })
+    }
+
+    /// The shared poll/deadline/panic skeleton under both reordered-take
+    /// disciplines: spin until `pick_best` names a parked grant to take,
+    /// panic (listing every pending grant) when nothing lands within
+    /// `timeout`.  `pick_best` sees the router and the grant list and
+    /// returns the index of its chosen *parked* entry, or `None` while
+    /// everything is in flight.
+    fn spin_take(
+        &self,
+        grants: &[(usize, u64)],
+        timeout: Duration,
+        discipline: &str,
+        mut pick_best: impl FnMut(&Self, &[(usize, u64)]) -> Option<usize>,
+    ) -> (usize, T, u64) {
+        assert!(
+            !grants.is_empty(),
+            "{discipline} take needs at least one grant"
+        );
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(i) = pick_best(self, grants) {
                 let (slice_id, version) = grants[i];
                 let (data, consumed) = self
                     .try_take(slice_id, version)
@@ -193,7 +232,7 @@ impl<T: Send> SliceRouter<T> {
                     .map(|&(a, v)| format!("slice {a} v{v}"))
                     .collect();
                 panic!(
-                    "availability sweep stalled: none of the awaited \
+                    "{discipline} sweep stalled: none of the awaited \
                      handoffs landed within {}ms (awaiting {}) — tune \
                      STRADS_ROUTER_SPIN_MS",
                     timeout.as_millis(),
@@ -210,6 +249,71 @@ impl<T: Send> SliceRouter<T> {
     /// flight refers to the previous deposit and means nothing.
     pub fn arrival_seq(&self, slice_id: usize) -> u64 {
         self.arrivals.lock().expect("router arrivals poisoned")[slice_id]
+    }
+
+    /// Non-blocking peek of a parked slice's [`SliceMass`] score (`None`
+    /// while the handoff is in flight) — how a dynamic-ordered consumer
+    /// ranks its queue without taking anything.  Stable between the peek
+    /// and a take by the granted worker: depositing over an occupied slot
+    /// panics, so parked data cannot change under the poller.
+    pub fn peek_parked_mass(&self, slice_id: usize) -> Option<f64>
+    where
+        T: SliceMass,
+    {
+        self.queue
+            .with_slot(slice_id, |slot| slot.map(|(data, _)| data.mass()))
+    }
+
+    /// Dynamic-ordered take: block until **any** of the granted
+    /// `(slice, version)` handoffs is parked, then take the one with the
+    /// largest [`SliceMass`] score (ties broken toward the earlier
+    /// arrival stamp, then the lower grant index — the same tie-break the
+    /// engine's virtual-time replay uses).  Returns the index into
+    /// `grants` of the picked entry together with the slice and the
+    /// consumed version.  This is the one shared implementation of the
+    /// heaviest-parked-first discipline
+    /// ([`crate::scheduler::rotation::QueueOrder::Dynamic`]); see
+    /// [`SliceRouter::take_earliest`] for the earliest-landed-first
+    /// sibling and the race-freedom argument (only the granted worker
+    /// polls these pairs).  Panics after `timeout` with every
+    /// still-pending grant listed.
+    pub fn take_heaviest(
+        &self,
+        grants: &[(usize, u64)],
+        timeout: Duration,
+    ) -> (usize, T, u64)
+    where
+        T: SliceMass,
+    {
+        // a parked grant's payload is immutable until this (the granted)
+        // worker takes it, so its mass is measured once per grant and
+        // reused across the poll iterations — BSlice masses are O(words ×
+        // K) sums, far too hot for a 50 µs spin loop
+        let mut mass_memo: Vec<Option<f64>> = vec![None; grants.len()];
+        self.spin_take(grants, timeout, "dynamic", move |router, grants| {
+            // (mass, reverse arrival, reverse index) lexicographic max
+            let mut best: Option<(usize, f64, u64)> = None;
+            for (i, &(slice_id, version)) in grants.iter().enumerate() {
+                if router.parked_version(slice_id) == Some(version) {
+                    let mass = *mass_memo[i].get_or_insert_with(|| {
+                        router
+                            .peek_parked_mass(slice_id)
+                            .expect("slice was parked when polled")
+                    });
+                    let arr = router.arrival_seq(slice_id);
+                    let better = match best {
+                        None => true,
+                        Some((_, bm, ba)) => {
+                            mass > bm || (mass == bm && arr < ba)
+                        }
+                    };
+                    if better {
+                        best = Some((i, mass, arr));
+                    }
+                }
+            }
+            best.map(|(i, ..)| i)
+        })
     }
 
     /// Worker-side handoff to the ring successor: deposit the swept slice
@@ -252,6 +356,33 @@ impl<T: Send> SliceRouter<T> {
     }
 }
 
+/// The per-slice availability signal a skip-capable rotation schedule
+/// feeds [`crate::scheduler::RotationScheduler::next_round_grants`]:
+/// slice `a` is *available* when the version its next lease will consume
+/// ([`LeaseLedger::next_version`]) is already parked in the router —
+/// still in flight otherwise.  Without a router (BSP checkouts) every
+/// slice is in hand, so nothing ever skips.  One shared implementation
+/// for every rotation app, so the protocol cannot drift between them.
+///
+/// Note the signal reads the **live** data plane: under a pipelined run
+/// it depends on how far the in-flight rounds' workers have physically
+/// progressed, so `SkipPolicy::Defer` decisions are timing-dependent
+/// (the rotation invariants hold under every interleaving — that is what
+/// `tests/rotation_properties.rs` sweeps); only `SkipPolicy::Never` runs
+/// are deterministic-replay exact.
+pub fn rotation_availability<T: Send>(
+    router: Option<&SliceRouter<T>>,
+    ledger: &LeaseLedger,
+) -> Vec<bool> {
+    let u = ledger.n_slices();
+    match router {
+        Some(router) => (0..u)
+            .map(|a| router.parked_version(a) == Some(ledger.next_version(a)))
+            .collect(),
+        None => vec![true; u],
+    }
+}
+
 /// Coordinator-side lease accounting for the rotation pipeline: a
 /// per-slice version chain advanced by `grant` (schedule time) and
 /// `settle` (pull time), panicking on any fork.
@@ -290,6 +421,15 @@ impl LeaseLedger {
         let v = self.granted[slice_id];
         self.granted[slice_id] += 1;
         v
+    }
+
+    /// The version the *next* grant of this slice will hand out — what a
+    /// skip-capable scheduler compares against
+    /// [`SliceRouter::parked_version`] to decide whether the slice's
+    /// handoff has landed ("available") or is still in flight
+    /// ([`crate::scheduler::rotation::SkipPolicy::Defer`]).
+    pub fn next_version(&self, slice_id: usize) -> u64 {
+        self.granted[slice_id]
     }
 
     /// Retire a consumed lease.  Panics unless it is exactly the oldest
@@ -384,6 +524,55 @@ mod tests {
         let (idx, data, _) =
             r.take_earliest(&grants[..1], Duration::from_millis(100));
         assert_eq!((idx, data), (0, 22u8));
+    }
+
+    #[test]
+    fn peek_parked_mass_scores_without_consuming() {
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(2);
+        r.seed(0, vec![1, 2, 3], 0);
+        // slice 1 in flight: no score
+        assert_eq!(r.peek_parked_mass(1), None);
+        assert_eq!(r.peek_parked_mass(0), Some(3.0));
+        // peeking does not consume
+        let (d, v) = r.try_take(0, 0).expect("still parked");
+        assert_eq!((d, v), (vec![1, 2, 3], 0));
+        assert_eq!(r.peek_parked_mass(0), None);
+    }
+
+    #[test]
+    fn take_heaviest_picks_the_largest_parked_mass() {
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(3);
+        r.seed(0, vec![7], 0); // mass 1, earliest arrival
+        r.seed(1, vec![1, 2, 3], 0); // mass 3
+        // slice 2 never seeded: in flight, must be ignored
+        let grants = [(0usize, 0u64), (1, 0), (2, 0)];
+        let (idx, data, consumed) = r.take_heaviest(
+            &grants[..2],
+            Duration::from_millis(100),
+        );
+        assert_eq!((idx, data, consumed), (1, vec![1, 2, 3], 0));
+        // only the light slice remains parked
+        let (idx, data, _) =
+            r.take_heaviest(&grants[..1], Duration::from_millis(100));
+        assert_eq!((idx, data), (0, vec![7]));
+    }
+
+    #[test]
+    fn take_heaviest_breaks_mass_ties_by_earliest_arrival() {
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(2);
+        r.seed(1, vec![5, 6], 0); // lands first
+        r.seed(0, vec![7, 8], 0); // equal mass, lands second
+        let grants = [(0usize, 0u64), (1, 0)];
+        let (idx, data, _) =
+            r.take_heaviest(&grants, Duration::from_millis(100));
+        assert_eq!((idx, data), (1, vec![5, 6]));
+    }
+
+    #[test]
+    #[should_panic(expected = "dynamic sweep stalled")]
+    fn take_heaviest_panics_listing_pending_grants_after_timeout() {
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(2);
+        let _ = r.take_heaviest(&[(0, 0), (1, 0)], Duration::from_millis(10));
     }
 
     #[test]

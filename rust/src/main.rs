@@ -47,8 +47,14 @@ USAGE:
              --slices U   rotation slices (default = workers; U > workers
                           over-decomposes with skew-aware ring placement)
              --depth D    pipelined rotation depth (default 0 = BSP)
-      lda/mf --order strict|avail   rotation queue service order (avail =
-                          sweep whichever slice handoff landed first)
+      lda/mf --order strict|avail|dynamic   rotation queue service order
+                          (avail = sweep whichever slice handoff landed
+                          first; dynamic = sweep the heaviest parked
+                          slice first)
+             --skip-policy never|defer   let a round skip a still-in-flight
+                          slice and lease it later (defer), bounded by
+             --debt-limit N   per-slice deferral budget (default 2;
+                          coverage completes within U + N rounds)
 
   strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
       regenerate a paper figure's rows/series (scaled-down by default)
@@ -135,6 +141,7 @@ fn cmd_train(args: &Args) {
                 run_cfg.mode =
                     strads::coordinator::ExecutionMode::Rotation { depth };
                 run_cfg.queue_order = queue_order(args);
+                run_cfg.skip_policy = skip_policy(args);
                 let mut e = common::mf_block_engine(
                     users, items, rank, workers, n_blocks, lambda, 0.08,
                     seed, &run_cfg,
@@ -167,6 +174,7 @@ fn cmd_train(args: &Args) {
                 run_cfg.mode =
                     strads::coordinator::ExecutionMode::Rotation { depth };
                 run_cfg.queue_order = queue_order(args);
+                run_cfg.skip_policy = skip_policy(args);
             }
             let corpus = common::figure_corpus(vocab, docs, seed);
             // n_slices == workers keeps the paper's identity layout; any
@@ -195,13 +203,25 @@ fn cmd_train(args: &Args) {
     }
 }
 
-/// `--order strict|avail` → rotation queue service discipline.
+/// `--order strict|avail|dynamic` → rotation queue service discipline.
 fn queue_order(args: &Args) -> strads::coordinator::QueueOrder {
     match args.str_or("order", "strict").as_str() {
         "avail" | "availability" => {
             strads::coordinator::QueueOrder::Availability
         }
+        "dynamic" | "dyn" => strads::coordinator::QueueOrder::Dynamic,
         _ => strads::coordinator::QueueOrder::Strict,
+    }
+}
+
+/// `--skip-policy never|defer` (+ `--debt-limit N`) → rotation skip
+/// policy.
+fn skip_policy(args: &Args) -> strads::coordinator::SkipPolicy {
+    match args.str_or("skip-policy", "never").as_str() {
+        "defer" => strads::coordinator::SkipPolicy::Defer {
+            debt_limit: args.parse_or("debt-limit", 2u64),
+        },
+        _ => strads::coordinator::SkipPolicy::Never,
     }
 }
 

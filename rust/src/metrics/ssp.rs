@@ -20,6 +20,14 @@ pub struct SspStats {
     /// strict-vs-availability delta is quantified here, not just asserted
     /// on end-to-end time.
     pub handoff_wait_secs: Vec<f64>,
+    /// Rotation pipelines under `SkipPolicy::Defer`: slice-legs the
+    /// schedule skipped (slice in flight, leased in a later round instead
+    /// of stalling its holder); 0 under `Never`.
+    pub skipped_legs: u64,
+    /// Worst per-slice coverage debt observed at any collect (rounds
+    /// collected minus grants of the laggiest slice) — the engine-side
+    /// cross-check of the scheduler's `CoverageDebtLedger` budget.
+    pub max_coverage_debt: u64,
 }
 
 impl SspStats {
@@ -46,6 +54,18 @@ impl SspStats {
     /// Total handoff wait across workers (0.0 for non-rotation runs).
     pub fn total_handoff_wait_secs(&self) -> f64 {
         self.handoff_wait_secs.iter().sum()
+    }
+
+    /// Record one collected round's skipped slice-legs
+    /// (`SkipPolicy::Defer`; 0 every round under `Never`).
+    pub fn record_skips(&mut self, n: u64) {
+        self.skipped_legs += n;
+    }
+
+    /// Fold one collect's worst observed per-slice coverage debt into the
+    /// run-level maximum.
+    pub fn note_coverage_debt(&mut self, debt: u64) {
+        self.max_coverage_debt = self.max_coverage_debt.max(debt);
     }
 
     pub fn rounds(&self) -> usize {
@@ -88,6 +108,21 @@ mod tests {
         assert_eq!(s.mean_staleness(), 0.0);
         assert_eq!(s.rounds(), 0);
         assert_eq!(s.total_handoff_wait_secs(), 0.0);
+        assert_eq!(s.skipped_legs, 0);
+        assert_eq!(s.max_coverage_debt, 0);
+    }
+
+    #[test]
+    fn skip_and_debt_counters_accumulate() {
+        let mut s = SspStats::new();
+        s.record_skips(0);
+        s.record_skips(2);
+        s.record_skips(1);
+        s.note_coverage_debt(1);
+        s.note_coverage_debt(3);
+        s.note_coverage_debt(2); // max, not last
+        assert_eq!(s.skipped_legs, 3);
+        assert_eq!(s.max_coverage_debt, 3);
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Coverage-debt accounting for skip-capable rotation schedules.
+//!
+//! [`crate::scheduler::rotation::SkipPolicy::Defer`] lets the scheduler
+//! *skip* granting a slice whose handoff is still in flight (the worker
+//! sweeps the rest of its queue instead of stalling) and lease it in a
+//! later round.  Skipping relaxes the rotation's U-round coverage
+//! guarantee, so every skip must be accounted: the [`CoverageDebtLedger`]
+//! tracks each slice's **coverage debt** — the number of rounds the slice
+//! has been deferred — and refuses to defer past `debt_limit`.
+//!
+//! Debt semantics are a per-slice *deferral budget*, not a resettable
+//! counter: `debt[a] = rounds elapsed − rounds granted` is monotone, so
+//! after any `R` rounds slice `a` has been granted at least
+//! `R − debt_limit` times.  A granted slice advances exactly one virtual
+//! ring position, and any `U` consecutive positions cover every worker
+//! residue, which yields the bounded horizon the skip mode is sold on:
+//! **every worker holds every slice within `U + debt_limit` rounds** —
+//! the property `tests/rotation_properties.rs` pins for the full mode
+//! matrix.  (A resettable counter would only bound the horizon by
+//! `U·(1+debt_limit)`: each of the U steps could be deferred afresh.)
+//!
+//! `debt_limit = 0` therefore refuses every deferral — `Defer { 0 }`
+//! degrades to the plain availability-ordered rotation with no skips —
+//! and a slice stalled past its budget is *force-granted*, never starved:
+//! a scheduler that tries to defer anyway panics here with the slice,
+//! round, and debt context.
+
+/// Per-slice coverage-debt ledger (see the module docs for the budget
+/// semantics and the `U + debt_limit` coverage bound it buys).
+#[derive(Debug, Clone)]
+pub struct CoverageDebtLedger {
+    /// Rounds each slice has been deferred so far (monotone).
+    debt: Vec<u64>,
+    debt_limit: u64,
+    total_deferrals: u64,
+}
+
+impl CoverageDebtLedger {
+    pub fn new(n_slices: usize, debt_limit: u64) -> Self {
+        CoverageDebtLedger {
+            debt: vec![0; n_slices],
+            debt_limit,
+            total_deferrals: 0,
+        }
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.debt.len()
+    }
+
+    pub fn debt_limit(&self) -> u64 {
+        self.debt_limit
+    }
+
+    /// Whether the slice still has deferral budget.  `debt_limit = 0`
+    /// always answers no: the schedule degrades to its no-skip form.
+    pub fn may_defer(&self, slice_id: usize) -> bool {
+        self.debt[slice_id] < self.debt_limit
+    }
+
+    /// Record one deferred round for the slice.  Panics — with the slice,
+    /// round, and debt context — when the budget is exhausted: a
+    /// permanently-stalled slice must be force-granted (its taker then
+    /// fails loudly through the router's bounded spin), never silently
+    /// starved out of the rotation.
+    pub fn record_skip(&mut self, slice_id: usize, round: u64) {
+        assert!(
+            self.may_defer(slice_id),
+            "slice {slice_id} starved: deferring again at round {round} \
+             would push its coverage debt past debt_limit {} (debt {}) — \
+             the scheduler must force-grant an over-budget slice",
+            self.debt_limit,
+            self.debt[slice_id],
+        );
+        self.debt[slice_id] += 1;
+        self.total_deferrals += 1;
+    }
+
+    /// Record a grant.  Debt is a lifetime budget (module docs), so a
+    /// grant spends nothing back — it only marks the slice as having
+    /// moved this round.
+    pub fn record_grant(&mut self, _slice_id: usize) {}
+
+    /// Current coverage debt of one slice.
+    pub fn debt(&self, slice_id: usize) -> u64 {
+        self.debt[slice_id]
+    }
+
+    /// Worst coverage debt across slices.
+    pub fn max_debt(&self) -> u64 {
+        self.debt.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Total deferrals recorded over the run.
+    pub fn total_deferrals(&self) -> u64 {
+        self.total_deferrals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_spent_per_slice_and_never_refunded() {
+        let mut l = CoverageDebtLedger::new(2, 2);
+        assert!(l.may_defer(0));
+        l.record_skip(0, 0);
+        l.record_grant(0); // grants do not refund the budget
+        l.record_skip(0, 2);
+        assert!(!l.may_defer(0), "budget of 2 exhausted");
+        assert!(l.may_defer(1), "budgets are per slice");
+        assert_eq!(l.debt(0), 2);
+        assert_eq!(l.debt(1), 0);
+        assert_eq!(l.max_debt(), 2);
+        assert_eq!(l.total_deferrals(), 2);
+    }
+
+    #[test]
+    fn zero_limit_never_defers() {
+        let l = CoverageDebtLedger::new(3, 0);
+        for a in 0..3 {
+            assert!(!l.may_defer(a));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "slice 1 starved")]
+    fn over_budget_skip_panics_with_context() {
+        let mut l = CoverageDebtLedger::new(2, 1);
+        l.record_skip(1, 4);
+        l.record_skip(1, 5); // budget 1 already spent
+    }
+}

@@ -14,14 +14,16 @@
 //!   Lasso-RR baseline).
 //! * [`dependency`] — the pairwise-correlation filter used by `priority`.
 
+pub mod debt;
 pub mod dependency;
 pub mod priority;
 pub mod random;
 pub mod rotation;
 pub mod round_robin;
 
+pub use debt::CoverageDebtLedger;
 pub use dependency::DependencyChecker;
 pub use priority::PriorityScheduler;
 pub use random::RandomScheduler;
-pub use rotation::{QueueOrder, RotationScheduler};
+pub use rotation::{GrantLeg, QueueOrder, RotationScheduler, SkipPolicy};
 pub use round_robin::RoundRobinScheduler;

@@ -28,6 +28,8 @@
 //! masses LPT-style and starts heavy cohorts on fast workers (Lee et al.,
 //! "Structure-Aware Dynamic Scheduler").
 
+use crate::scheduler::debt::CoverageDebtLedger;
+
 /// How a worker services its per-round slice queue.
 ///
 /// The rotation primitive only requires per-round *disjointness* of the
@@ -36,12 +38,21 @@
 /// (virtual-position order, bit-exact with the original stream);
 /// `Availability` sweeps whichever queued slice's handoff *landed first*
 /// (earliest-ready-first), so a worker never stalls on one in-flight
-/// handoff while another queued slice already sits parked.  The knob
-/// changes neither the queues' contents nor any invariant — disjointness,
-/// U-round coverage, and fork-free version chains are order-independent —
-/// only the within-queue sweep order (worker side, via
-/// [`crate::kvstore::SliceRouter::try_take`] + arrival stamps) and the
-/// engine's virtual-time replay.
+/// handoff while another queued slice already sits parked; `Dynamic`
+/// additionally weighs slice **token mass** — among the parked slices it
+/// sweeps the heaviest first, so the sweep that gates the most downstream
+/// compute releases its handoff earliest (the prioritized scheduling of
+/// Lee et al., "Structure-Aware Dynamic Scheduler", applied to the
+/// within-queue order).  Both reordering modes are *work-conserving*: a
+/// worker's own round never finishes later than under any other
+/// non-idling order, so Dynamic can only shift *when* each slice's
+/// handoff lands downstream — which is exactly where skewed masses make
+/// heaviest-first pay.  The knob changes neither the queues' contents nor
+/// any invariant — disjointness, coverage, and fork-free version chains
+/// are order-independent — only the within-queue sweep order (worker
+/// side, via [`crate::kvstore::SliceRouter::try_take`] polls + arrival
+/// stamps / [`crate::kvstore::SliceMass`] scores) and the engine's
+/// virtual-time replay.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum QueueOrder {
     /// Fixed virtual-position order (the paper's stream; default).
@@ -49,6 +60,64 @@ pub enum QueueOrder {
     Strict,
     /// Earliest-ready-first over the worker's queued slices.
     Availability,
+    /// Heaviest-parked-first: among the queued slices whose handoffs have
+    /// landed, sweep the one with the largest token mass (ties broken
+    /// toward the earlier arrival, then queue position); wait only when
+    /// none is parked.
+    Dynamic,
+}
+
+/// Whether a round may *skip* a still-in-flight slice entirely.
+///
+/// Reordering ([`QueueOrder`]) changes only the within-queue sweep order;
+/// `Defer` goes further: a slice whose handoff has not landed at schedule
+/// time is left out of the round's grants altogether — its current holder
+/// keeps the lease slot open and the slice is leased in a later round —
+/// bounded by a per-slice [`CoverageDebtLedger`] budget so full coverage
+/// still holds within `U + debt_limit` rounds (see
+/// [`crate::scheduler::debt`]).  `Never` (default) grants every slice
+/// every round — the PR-4 schedule, bit-exact.
+///
+/// Two properties of `Defer` follow from its availability signal reading
+/// the **live** data plane ([`crate::kvstore::rotation_availability`]):
+/// it is a *pipelining-only* relaxation — at depth 1 every handoff has
+/// landed before the next schedule runs, so no round ever skips — and
+/// under depth ≥ 2 the skip decisions depend on how far the in-flight
+/// rounds' workers have physically progressed, so two identical runs may
+/// skip differently.  Every invariant (disjointness, the
+/// `U + debt_limit` coverage horizon, fork-free chains, conservation) is
+/// interleaving-independent — `tests/rotation_properties.rs` sweeps
+/// arbitrary availability patterns — but deterministic-replay
+/// bit-exactness is only promised for `Never` (and `Defer { 0 }`, which
+/// never skips).
+///
+/// Load-balance caveat: a deferral *permanently merges* ring positions —
+/// the slice behind the frozen one advances into its position, and from
+/// then on the two travel the ring together (one worker carries an extra
+/// leg each round while another carries one fewer).  The lifetime budget
+/// bounds the damage — at most `U × debt_limit` merge events per run —
+/// so small budgets absorb transient outages at a bounded, permanent
+/// balance cost; un-merging (re-spreading positions once the ring is
+/// healthy) is the debt-aware placement follow-on in the ROADMAP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SkipPolicy {
+    /// Grant every slice every round (the paper's schedule; default).
+    #[default]
+    Never,
+    /// Skip a round's unavailable slice and lease it later, deferring at
+    /// most `debt_limit` rounds per slice over the run.
+    Defer {
+        /// Per-slice deferral budget (0 degrades to `Never`).
+        debt_limit: u64,
+    },
+}
+
+/// One granted lease of a round: the slice and the worker that holds it
+/// next round (its handoff destination).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GrantLeg {
+    pub slice_id: usize,
+    pub dest_worker: usize,
 }
 
 /// The virtual ring position that holds `position`'s current slice *next*
@@ -155,6 +224,15 @@ pub struct RotationScheduler {
     counter: u64,
     /// Within-queue service discipline (does not affect queue contents).
     order: QueueOrder,
+    /// Whether rounds may defer unavailable slices (see [`SkipPolicy`]).
+    skip: SkipPolicy,
+    /// `Defer` mode only: each slice's current virtual ring position —
+    /// per-slice rotation progress, since a deferred slice stands still
+    /// while the rest of the ring advances.  Empty under `Never`, where
+    /// the pure `(v + C) % U` math needs no per-slice state.
+    pos_of: Vec<usize>,
+    /// `Defer` mode only: the per-slice deferral budget.
+    debt: Option<CoverageDebtLedger>,
 }
 
 impl RotationScheduler {
@@ -177,6 +255,9 @@ impl RotationScheduler {
             placement: (0..n_slices).collect(),
             counter: 0,
             order: QueueOrder::Strict,
+            skip: SkipPolicy::Never,
+            pos_of: Vec::new(),
+            debt: None,
         }
     }
 
@@ -192,6 +273,44 @@ impl RotationScheduler {
         self.order
     }
 
+    /// Set the skip policy (see [`SkipPolicy`]).  Must precede round 0:
+    /// `Defer` tracks per-slice ring positions, and adopting it mid-run
+    /// would fork the position bookkeeping from the rounds already
+    /// granted.
+    pub fn set_skip_policy(&mut self, skip: SkipPolicy) {
+        assert_eq!(self.counter, 0, "skip policy must be set before round 0");
+        self.skip = skip;
+        match skip {
+            SkipPolicy::Never => {
+                self.pos_of = Vec::new();
+                self.debt = None;
+            }
+            SkipPolicy::Defer { debt_limit } => {
+                self.rebuild_positions();
+                self.debt =
+                    Some(CoverageDebtLedger::new(self.n_slices, debt_limit));
+            }
+        }
+    }
+
+    /// The skip policy in effect.
+    pub fn skip_policy(&self) -> SkipPolicy {
+        self.skip
+    }
+
+    /// The deferral ledger (`Defer` mode only).
+    pub fn coverage_debt(&self) -> Option<&CoverageDebtLedger> {
+        self.debt.as_ref()
+    }
+
+    /// `pos_of[slice] = v` with `placement[v] = slice` (round-0 state).
+    fn rebuild_positions(&mut self) {
+        self.pos_of = vec![0; self.n_slices];
+        for (v, &a) in self.placement.iter().enumerate() {
+            self.pos_of[a] = v;
+        }
+    }
+
     /// Install a ring placement (e.g. from [`skew_aware_placement`]).
     /// Must be a permutation of the slice ids, set before the first round
     /// — re-ordering a ring with slices already in flight would fork the
@@ -205,6 +324,9 @@ impl RotationScheduler {
             seen[s] = true;
         }
         self.placement = placement;
+        if self.debt.is_some() {
+            self.rebuild_positions();
+        }
     }
 
     /// Slice at virtual ring position `v` this round.
@@ -250,6 +372,79 @@ impl RotationScheduler {
         let out = self.queues();
         self.counter += 1;
         out
+    }
+
+    /// This round's grants — one [`GrantLeg`] queue per worker, in sweep
+    /// (position) order — then advance the counter.  `available(a)`
+    /// answers whether slice `a`'s handoff has already landed (the data
+    /// plane's [`crate::kvstore::SliceRouter::parked_version`] poll; BSP
+    /// callers answer `true`).
+    ///
+    /// Under [`SkipPolicy::Never`] the signal is ignored and the grants
+    /// are exactly [`RotationScheduler::next_round_queues`] with each
+    /// leg's ring destination — the PR-4 stream, bit-exact.  Under
+    /// [`SkipPolicy::Defer`] an unavailable slice with remaining
+    /// [`CoverageDebtLedger`] budget is skipped — no lease granted, its
+    /// ring position frozen — and granted in a later round to whichever
+    /// worker its (then-advanced) position maps to; an over-budget slice
+    /// is force-granted so it can never starve.  Granted or skipped, every
+    /// slice is accounted every round: grants stay disjoint, and full
+    /// coverage holds within `U + debt_limit` rounds (see
+    /// [`crate::scheduler::debt`]).
+    pub fn next_round_grants(
+        &mut self,
+        mut available: impl FnMut(usize) -> bool,
+    ) -> Vec<Vec<GrantLeg>> {
+        let u = self.n_slices;
+        let p = self.n_workers;
+        match self.skip {
+            SkipPolicy::Never => {
+                let queues = self.next_round_queues();
+                queues
+                    .into_iter()
+                    .enumerate()
+                    .map(|(w, q)| {
+                        q.into_iter()
+                            .enumerate()
+                            .map(|(j, slice_id)| GrantLeg {
+                                slice_id,
+                                dest_worker: self.next_holder(w + j * p),
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+            SkipPolicy::Defer { .. } => {
+                let round = self.counter;
+                let debt = self.debt.as_mut().expect("Defer mode has a ledger");
+                // (position, slice) per worker; sorted below so a queue's
+                // sweep order is position order, exactly like Never mode
+                let mut grants: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p];
+                for a in 0..u {
+                    let v = self.pos_of[a];
+                    if !available(a) && debt.may_defer(a) {
+                        debt.record_skip(a, round);
+                        continue; // position frozen: leased next round
+                    }
+                    debt.record_grant(a);
+                    grants[position_owner(v, p)].push((v, a));
+                    self.pos_of[a] = ring_successor(v, u);
+                }
+                self.counter += 1;
+                grants
+                    .into_iter()
+                    .map(|mut q| {
+                        q.sort_unstable();
+                        q.into_iter()
+                            .map(|(v, slice_id)| GrantLeg {
+                                slice_id,
+                                dest_worker: position_owner(ring_successor(v, u), p),
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+        }
     }
 
     pub fn round(&self) -> u64 {
@@ -318,6 +513,66 @@ impl RotationScheduler {
             out[w] = best;
             load[best] += freqs[w];
             count[best] += 1;
+        }
+        out
+    }
+
+    /// Partition words into `targets.len()` slices whose token masses
+    /// approximate the given (relative) target shares — the controlled
+    /// *skewed* split the dynamic-order experiments need (a Zipf mass
+    /// profile across slices), where
+    /// [`RotationScheduler::partition_words_by_freq`] deliberately
+    /// flattens the masses.  Greedy, heaviest word first: each word goes
+    /// to the slice with the smallest resulting `load / target` ratio
+    /// (ties toward the lower slice id), so realized masses track the
+    /// targets as closely as the word granularity allows.  A final pass
+    /// hands one word to any slice the greedy left empty (stolen from the
+    /// most word-rich slice), so every slice is materializable.  Returns
+    /// the slice id per word.
+    pub fn partition_words_to_targets(
+        freqs: &[u64],
+        targets: &[f64],
+    ) -> Vec<usize> {
+        let u = targets.len();
+        assert!(u > 0 && freqs.len() >= u, "fewer words than slices");
+        assert!(
+            targets.iter().all(|&t| t > 0.0 && t.is_finite()),
+            "targets must be positive and finite"
+        );
+        let mut order: Vec<usize> = (0..freqs.len()).collect();
+        order.sort_by(|&a, &b| freqs[b].cmp(&freqs[a]).then(a.cmp(&b)));
+        let mut load = vec![0.0f64; u];
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); u];
+        let mut out = vec![0usize; freqs.len()];
+        for w in order {
+            let f = freqs[w] as f64;
+            let mut best = 0usize;
+            let mut best_ratio = f64::INFINITY;
+            for a in 0..u {
+                let ratio = (load[a] + f) / targets[a];
+                if ratio < best_ratio {
+                    best_ratio = ratio;
+                    best = a;
+                }
+            }
+            out[w] = best;
+            load[best] += f;
+            members[best].push(w);
+        }
+        // no slice may end up wordless: steal from the most populous
+        for a in 0..u {
+            if members[a].is_empty() {
+                let donor = (0..u)
+                    .max_by_key(|&d| members[d].len())
+                    .expect("u > 0");
+                assert!(
+                    members[donor].len() > 1,
+                    "cannot populate slice {a}: no donor has spare words"
+                );
+                let w = members[donor].pop().expect("donor non-empty");
+                members[a].push(w);
+                out[w] = a;
+            }
         }
         out
     }
@@ -628,6 +883,198 @@ mod tests {
     fn bad_placement_panics() {
         let mut s = RotationScheduler::with_workers(4, 2);
         s.set_placement(vec![0, 1, 2, 2]);
+    }
+
+    #[test]
+    fn never_grants_match_the_queue_stream_with_ring_dests() {
+        // next_round_grants under SkipPolicy::Never must be exactly the
+        // PR-4 queue stream with each leg's next_holder destination —
+        // the formula apps used before the grant API existed.
+        let (u, p) = (10usize, 4usize);
+        let mut a = RotationScheduler::with_workers(u, p);
+        let mut b = RotationScheduler::with_workers(u, p);
+        for _ in 0..2 * u {
+            let grants = a.next_round_grants(|_| false); // signal ignored
+            let queues = b.next_round_queues();
+            for (w, (gq, qq)) in grants.iter().zip(queues.iter()).enumerate() {
+                let slices: Vec<usize> =
+                    gq.iter().map(|l| l.slice_id).collect();
+                assert_eq!(&slices, qq, "worker {w}");
+                for (j, leg) in gq.iter().enumerate() {
+                    assert_eq!(leg.dest_worker, b.next_holder(w + j * p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn defer_zero_budget_matches_never_exactly() {
+        // debt_limit = 0 refuses every deferral: the grant stream must be
+        // identical to Never's under any availability signal.
+        let (u, p) = (9usize, 4usize);
+        let mut never = RotationScheduler::with_workers(u, p);
+        let mut defer = RotationScheduler::with_workers(u, p);
+        defer.set_skip_policy(SkipPolicy::Defer { debt_limit: 0 });
+        let mut x = 7u64;
+        for _ in 0..2 * u {
+            let n = never.next_round_grants(|_| true);
+            let d = defer.next_round_grants(|a| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(a as u64);
+                x & 1 == 0
+            });
+            assert_eq!(n, d);
+        }
+        assert_eq!(defer.coverage_debt().unwrap().total_deferrals(), 0);
+    }
+
+    #[test]
+    fn defer_skips_then_regrants_to_the_frozen_position_owner() {
+        // U = P = 2, identity placement.  Round 0: slice 1 (position 1,
+        // worker 1) is unavailable and gets deferred; slice 0 is granted
+        // to worker 0 and advances.  Round 1: slice 1 is still at
+        // position 1 — granted to worker 1 — while slice 0 has moved to
+        // position 1... both now compete; disjointness must hold and the
+        // deferred slice lands on its frozen position's owner.
+        let mut s = RotationScheduler::with_workers(2, 2);
+        s.set_skip_policy(SkipPolicy::Defer { debt_limit: 1 });
+        let r0 = s.next_round_grants(|a| a != 1);
+        assert_eq!(r0[0], vec![GrantLeg { slice_id: 0, dest_worker: 1 }]);
+        assert!(r0[1].is_empty(), "slice 1 deferred: worker 1 idles");
+        assert_eq!(s.coverage_debt().unwrap().debt(1), 1);
+        // round 1, everything available: slice 0 now at position 1,
+        // slice 1 still at position 1 — worker 1 sweeps both (position
+        // ties broken by slice id), worker 0 none
+        let r1 = s.next_round_grants(|_| true);
+        assert!(r1[0].is_empty());
+        assert_eq!(
+            r1[1],
+            vec![
+                GrantLeg { slice_id: 0, dest_worker: 0 },
+                GrantLeg { slice_id: 1, dest_worker: 0 },
+            ]
+        );
+        // budget exhausted for slice 1: a further outage force-grants it
+        let r2 = s.next_round_grants(|a| a != 1);
+        let granted: Vec<usize> = r2
+            .iter()
+            .flatten()
+            .map(|l| l.slice_id)
+            .collect();
+        assert!(granted.contains(&1), "over-budget slice must be granted");
+    }
+
+    #[test]
+    fn defer_grants_stay_disjoint_and_cover_within_horizon() {
+        // random availability outages: every round's grants are disjoint,
+        // granted + deferred account for every slice, and every worker
+        // holds every slice within U + debt_limit rounds.
+        prop_check("defer coverage horizon", 60, |g| {
+            let p = g.usize_in(1, 5);
+            let u = p * g.usize_in(1, 3) + g.usize_in(0, p - 1);
+            let debt_limit = g.usize_in(0, 3) as u64;
+            let mut s = RotationScheduler::with_workers(u, p);
+            s.set_skip_policy(SkipPolicy::Defer { debt_limit });
+            let mut seen = vec![vec![false; u]; p];
+            let rounds = u as u64 + debt_limit;
+            for _ in 0..rounds {
+                let avail: Vec<bool> =
+                    (0..u).map(|_| g.bool_with(0.7)).collect();
+                let grants = s.next_round_grants(|a| avail[a]);
+                let mut granted: Vec<usize> = grants
+                    .iter()
+                    .flatten()
+                    .map(|l| l.slice_id)
+                    .collect();
+                granted.sort_unstable();
+                let n_granted = granted.len();
+                granted.dedup();
+                if granted.len() != n_granted {
+                    return Prop::Fail(format!(
+                        "slice granted twice in one round (u={u}, p={p})"
+                    ));
+                }
+                for (w, q) in grants.iter().enumerate() {
+                    for leg in q {
+                        if leg.dest_worker >= p {
+                            return Prop::Fail(format!(
+                                "dest {} out of range",
+                                leg.dest_worker
+                            ));
+                        }
+                        seen[w][leg.slice_id] = true;
+                    }
+                }
+            }
+            let debt = s.coverage_debt().unwrap();
+            if debt.max_debt() > debt_limit {
+                return Prop::Fail(format!(
+                    "debt {} over limit {debt_limit}",
+                    debt.max_debt()
+                ));
+            }
+            ensure(
+                seen.iter().all(|row| row.iter().all(|&b| b)),
+                format!(
+                    "coverage hole after U + debt_limit = {rounds} rounds \
+                     (u={u}, p={p}, debt_limit={debt_limit})"
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn target_partition_tracks_a_zipf_profile() {
+        use crate::datagen::lda_corpus::{self, CorpusConfig};
+        let corpus = lda_corpus::generate(&CorpusConfig {
+            n_docs: 400,
+            vocab: 1200,
+            n_topics: 6,
+            ..Default::default()
+        });
+        let mut freqs = vec![0u64; corpus.vocab];
+        for doc in &corpus.docs {
+            for &w in doc {
+                freqs[w as usize] += 1;
+            }
+        }
+        let u = 8;
+        let targets: Vec<f64> =
+            (0..u).map(|a| 1.0 / (a + 1) as f64).collect();
+        let part =
+            RotationScheduler::partition_words_to_targets(&freqs, &targets);
+        let mut mass = vec![0u64; u];
+        for (w, &a) in part.iter().enumerate() {
+            mass[a] += freqs[w];
+        }
+        let total: u64 = mass.iter().sum();
+        let tsum: f64 = targets.iter().sum();
+        for a in 0..u {
+            let want = targets[a] / tsum;
+            let got = mass[a] as f64 / total as f64;
+            assert!(
+                (got - want).abs() < 0.25 * want + 0.01,
+                "slice {a}: share {got:.4} vs target {want:.4} ({mass:?})"
+            );
+        }
+        // the realized profile is genuinely skewed: head ≥ 2× tail
+        assert!(mass[0] as f64 >= 2.0 * mass[u - 1] as f64, "{mass:?}");
+    }
+
+    #[test]
+    fn target_partition_populates_every_slice() {
+        // one giant word plus tiny ones: the greedy must still hand every
+        // slice at least one word
+        let mut freqs = vec![1u64; 6];
+        freqs[0] = 1_000_000;
+        let part = RotationScheduler::partition_words_to_targets(
+            &freqs,
+            &[10.0, 1.0, 1.0],
+        );
+        let mut count = [0usize; 3];
+        for &a in &part {
+            count[a] += 1;
+        }
+        assert!(count.iter().all(|&c| c >= 1), "{count:?}");
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! });
 //! ```
 
+pub mod rotation;
+
 use crate::util::Rng;
 
 /// Generator handle passed to properties: seeded random primitives plus a

@@ -7,20 +7,20 @@
 
 use strads::apps::lda::setup as lda_setup;
 use strads::cluster::{HandoffJitter, StragglerModel};
-use strads::coordinator::{ExecutionMode, QueueOrder, RunConfig};
+use strads::coordinator::{ExecutionMode, QueueOrder, RunConfig, SkipPolicy};
 use strads::figures::common::{figure_corpus, lda_engine_sliced};
-use strads::kvstore::{LeaseLedger, LeaseToken, SliceRouter};
 use strads::scheduler::RotationScheduler;
+use strads::testing::rotation::drive_protocol;
 use strads::testing::{ensure, prop_check, Prop};
 
 /// Drive the full grant→try_take→forward→settle protocol over U ≥ P rings
-/// with **randomized within-round service orders**: each round, the
-/// (worker, leg) pairs are consumed in a random global order, each via the
-/// non-blocking `try_take` poll (a leg is serviceable only while its
-/// version is parked — exactly the availability-ordered worker's view).
-/// Every round's queues must stay disjoint and cover all U slices, every
-/// chain must advance by exactly one version per round with no forks, and
-/// no leases may be left outstanding.
+/// with **randomized within-round service orders** (the shared
+/// [`drive_protocol`] driver with a random `pick`): a leg is serviceable
+/// only while its version is parked — exactly the availability-ordered
+/// worker's view.  Every round's queues must stay disjoint and cover all
+/// U slices, every chain must advance by exactly one version per round
+/// with no forks, no leases may be left outstanding, and U rounds cover
+/// every worker × slice pair.
 #[test]
 fn prop_availability_order_preserves_chains_and_coverage() {
     prop_check("availability-ordered handoff chains", 40, |g| {
@@ -29,79 +29,27 @@ fn prop_availability_order_preserves_chains_and_coverage() {
         // exactly U rounds: enough for the full-coverage check, and every
         // chain must then sit at version U
         let rounds = u as u64;
-        let router: SliceRouter<Vec<u32>> = SliceRouter::new(u);
-        let mut ledger = LeaseLedger::new(u);
-        for a in 0..u {
-            router.seed(a, vec![a as u32], 0);
-            ledger.seed(a, 0);
-        }
-        let mut sched = RotationScheduler::with_workers(u, p);
-        sched.set_queue_order(QueueOrder::Availability);
-        let mut seen = vec![vec![false; u]; p];
-        for _ in 0..rounds {
-            let queues = sched.next_round_queues();
-            // disjointness + coverage of this round's lease grants
-            let mut all: Vec<usize> =
-                queues.iter().flatten().copied().collect();
-            all.sort_unstable();
-            if all != (0..u).collect::<Vec<_>>() {
-                return Prop::Fail(format!(
-                    "round is not a partition of slices (u={u}, p={p})"
-                ));
-            }
-            for (w, q) in queues.iter().enumerate() {
-                for &a in q {
-                    seen[w][a] = true;
-                }
-            }
-            // grant every leg, then service the legs in a random global
-            // order through the non-blocking poll
-            let mut legs: Vec<(usize, u64)> = Vec::new();
-            for queue in &queues {
-                for &slice_id in queue {
-                    legs.push((slice_id, ledger.grant(slice_id)));
-                }
-            }
-            while !legs.is_empty() {
-                let pick = g.usize_in(0, legs.len() - 1);
-                let (slice_id, version) = legs.swap_remove(pick);
-                let (data, consumed) = match router.try_take(slice_id, version)
-                {
-                    Some(got) => got,
-                    None => {
-                        return Prop::Fail(format!(
-                            "slice {slice_id} v{version} not parked (every \
-                             slice is between rounds here)"
-                        ))
-                    }
-                };
-                if consumed != version {
-                    return Prop::Fail(format!(
-                        "slice {slice_id}: granted v{version}, router handed \
-                         over v{consumed}"
-                    ));
-                }
-                router.forward(slice_id, data, consumed + 1);
-                ledger.settle(&LeaseToken { slice_id, version: consumed });
-            }
-        }
-        if ledger.max_outstanding() != 0 {
+        let mut picks: Vec<u64> =
+            (0..rounds * u as u64 + 4).map(|_| g.seed()).collect();
+        let out = match drive_protocol(
+            p,
+            u,
+            rounds,
+            SkipPolicy::Never,
+            |_, _| true,
+            |pending| (picks.pop().unwrap_or(0) as usize) % pending.len(),
+        ) {
+            Ok(out) => out,
+            Err(e) => return Prop::Fail(e),
+        };
+        if !out.grants.iter().all(|&gr| gr == rounds) {
             return Prop::Fail(format!(
-                "{} leases left outstanding",
-                ledger.max_outstanding()
+                "a chain did not advance once per round (u={u}, p={p})"
             ));
-        }
-        for a in 0..u {
-            if router.version(a) != rounds {
-                return Prop::Fail(format!(
-                    "slice {a}: chain head {} after {rounds} rounds",
-                    router.version(a)
-                ));
-            }
         }
         // every worker saw every slice within U rounds
         ensure(
-            seen.iter().all(|row| row.iter().all(|&b| b)),
+            out.full_coverage(),
             format!("coverage hole after {u} rounds (p={p})"),
         )
     });

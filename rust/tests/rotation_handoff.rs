@@ -5,107 +5,65 @@
 
 use strads::apps::lda::setup as lda_setup;
 use strads::cluster::StragglerModel;
-use strads::coordinator::{ExecutionMode, RunConfig, StradsEngine};
+use strads::coordinator::{ExecutionMode, RunConfig, SkipPolicy, StradsEngine};
 use strads::figures::common::{figure_corpus, lda_engine, lda_engine_sliced};
 use strads::kvstore::{LeaseLedger, LeaseToken, SliceRouter};
-use strads::scheduler::RotationScheduler;
+use strads::testing::rotation::drive_protocol;
 use strads::testing::{ensure, prop_check, Prop};
 
 /// Drive the full grant→take→forward→settle protocol single-threaded over
-/// random ring sizes and round counts: every slice's version chain must
-/// advance by exactly one per round (every version v+1 has exactly one
-/// parent v), with no forks and no leases left outstanding.
+/// random ring sizes and round counts (via the shared
+/// [`drive_protocol`] driver, sweep in grant order): every slice's
+/// version chain must advance by exactly one per round (every version
+/// v+1 has exactly one parent v), with no forks and no leases left
+/// outstanding.
 #[test]
 fn prop_handoff_chain_never_forks() {
     prop_check("handoff chain versions", 50, |g| {
         let u = g.usize_in(1, 12);
         let rounds = g.usize_in(1, 24) as u64;
-        let router: SliceRouter<Vec<u32>> = SliceRouter::new(u);
-        let mut ledger = LeaseLedger::new(u);
-        for a in 0..u {
-            router.seed(a, vec![a as u32], 0);
-            ledger.seed(a, 0);
-        }
-        let mut sched = RotationScheduler::new(u);
-        for _ in 0..rounds {
-            for slice_id in sched.next_round() {
-                let version = ledger.grant(slice_id);
-                let (data, consumed) = router.take(slice_id, version);
-                if consumed != version {
-                    return Prop::Fail(format!(
-                        "slice {slice_id}: granted v{version}, router \
-                         handed over v{consumed}"
-                    ));
-                }
-                router.forward(slice_id, data, consumed + 1);
-                ledger.settle(&LeaseToken { slice_id, version: consumed });
-            }
-        }
-        if ledger.max_outstanding() != 0 {
-            return Prop::Fail(format!(
-                "{} leases left outstanding",
-                ledger.max_outstanding()
-            ));
-        }
-        for a in 0..u {
-            if router.version(a) != rounds {
-                return Prop::Fail(format!(
-                    "slice {a}: chain head {} after {rounds} rounds",
-                    router.version(a)
-                ));
-            }
-        }
-        Prop::Ok
+        let out = match drive_protocol(
+            u,
+            u,
+            rounds,
+            SkipPolicy::Never,
+            |_, _| true,
+            |_| 0,
+        ) {
+            Ok(out) => out,
+            Err(e) => return Prop::Fail(e),
+        };
+        ensure(
+            out.grants.iter().all(|&gr| gr == rounds),
+            format!("chains did not advance once per round (u={u})"),
+        )
     });
 }
 
-/// The same protocol over U > P rings with random placements: queues of
-/// ⌈U/P⌉ slices per worker, swept in order, must advance every chain by
-/// exactly one per round with no forks and no leases outstanding.
+/// The same protocol over U > P rings: queues of ⌈U/P⌉ slices per worker,
+/// swept in order, must advance every chain by exactly one per round with
+/// no forks and no leases outstanding.
 #[test]
 fn prop_multislice_handoff_chain_never_forks() {
     prop_check("multi-slice handoff chains", 40, |g| {
         let p = g.usize_in(1, 6);
         let u = p * g.usize_in(1, 3) + g.usize_in(0, p - 1);
         let rounds = g.usize_in(1, 16) as u64;
-        let router: SliceRouter<Vec<u32>> = SliceRouter::new(u);
-        let mut ledger = LeaseLedger::new(u);
-        for a in 0..u {
-            router.seed(a, vec![a as u32], 0);
-            ledger.seed(a, 0);
-        }
-        let mut sched = RotationScheduler::with_workers(u, p);
-        for _ in 0..rounds {
-            for queue in sched.next_round_queues() {
-                for slice_id in queue {
-                    let version = ledger.grant(slice_id);
-                    let (data, consumed) = router.take(slice_id, version);
-                    if consumed != version {
-                        return Prop::Fail(format!(
-                            "slice {slice_id}: granted v{version}, router \
-                             handed over v{consumed}"
-                        ));
-                    }
-                    router.forward(slice_id, data, consumed + 1);
-                    ledger.settle(&LeaseToken { slice_id, version: consumed });
-                }
-            }
-        }
-        if ledger.max_outstanding() != 0 {
-            return Prop::Fail(format!(
-                "{} leases left outstanding",
-                ledger.max_outstanding()
-            ));
-        }
-        for a in 0..u {
-            if router.version(a) != rounds {
-                return Prop::Fail(format!(
-                    "slice {a}: chain head {} after {rounds} rounds",
-                    router.version(a)
-                ));
-            }
-        }
-        Prop::Ok
+        let out = match drive_protocol(
+            p,
+            u,
+            rounds,
+            SkipPolicy::Never,
+            |_, _| true,
+            |_| 0,
+        ) {
+            Ok(out) => out,
+            Err(e) => return Prop::Fail(e),
+        };
+        ensure(
+            out.grants.iter().all(|&gr| gr == rounds),
+            format!("chains did not advance once per round (u={u}, p={p})"),
+        )
     });
 }
 

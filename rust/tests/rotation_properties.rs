@@ -1,0 +1,477 @@
+//! Property-test harness for the rotation invariants, across the full
+//! mode matrix.
+//!
+//! Every rotation mode combination — {Strict, Availability, Dynamic}
+//! service order × {Never, Defer} skip policy × pipeline depth × slice
+//! over-decomposition — must preserve the same invariants:
+//!
+//! * **disjointness** — no slice leased to two workers in one round;
+//! * **coverage** — every worker holds every slice within `U +
+//!   debt_limit` rounds (`U` exactly under `Never`);
+//! * **version-chain integrity** — every chain advances by exactly one
+//!   per grant, no forks, no leases left outstanding;
+//! * **token conservation** — the app-level mass (LDA topic sums) is
+//!   unchanged by any reordering or skipping.
+//!
+//! The protocol-level drives go through the shared
+//! [`strads::testing::rotation::drive_protocol`] driver (the per-feature
+//! loops formerly copied across `rotation_handoff.rs` /
+//! `availability_rotation.rs`); the engine-level matrix runs real LDA
+//! pipelines.  Golden tests additionally pin the `Strict` and
+//! `Availability` virtual-time replays and schedule streams bit-exact to
+//! their pre-Dynamic (PR-4) arithmetic under `SkipPolicy::Never`, so the
+//! tentpole cannot silently perturb existing arms.
+//!
+//! Seeded via `STRADS_PROP_SEED` (see `src/testing`): a CI failure prints
+//! the failing seed, and re-running with that seed reproduces the case.
+
+use strads::cluster::HandoffJitter;
+use strads::coordinator::{
+    replay_queue, ExecutionMode, QueueOrder, RunConfig, SkipPolicy,
+};
+use strads::figures::common::{
+    figure_corpus, lda_engine_sliced, mf_block_engine,
+};
+use strads::scheduler::rotation::GrantLeg;
+use strads::scheduler::RotationScheduler;
+use strads::testing::rotation::{drive_protocol, mode_matrix};
+use strads::testing::{ensure, prop_check, Prop};
+
+// ---------------------------------------------------------------------
+// Protocol level: the grant→take→forward→settle loop over random rings,
+// availability patterns, and service orders.
+// ---------------------------------------------------------------------
+
+/// Random (P, U, skip policy, availability pattern, service order): the
+/// protocol invariants hold and coverage completes within `U +
+/// debt_limit` rounds.  The service order generator covers all three
+/// disciplines' shapes: grant order (Strict), random permutations
+/// (Availability under arbitrary arrival orders), and heaviest-first
+/// (Dynamic — slice payload masses are distinct by construction).
+#[test]
+fn prop_protocol_matrix_preserves_invariants_and_coverage() {
+    prop_check("rotation protocol mode matrix", 80, |g| {
+        let p = g.usize_in(1, 6);
+        let u = p * g.usize_in(1, 3) + g.usize_in(0, p - 1);
+        let debt_limit = g.usize_in(0, 3) as u64;
+        let skip = if g.bool_with(0.5) {
+            SkipPolicy::Defer { debt_limit }
+        } else {
+            SkipPolicy::Never
+        };
+        let horizon = u as u64
+            + match skip {
+                SkipPolicy::Defer { debt_limit } => debt_limit,
+                SkipPolicy::Never => 0,
+            };
+        let style = g.usize_in(0, 2); // 0 strict, 1 random, 2 heaviest
+        let mut picks: Vec<u64> = (0..horizon * u as u64 + 8)
+            .map(|_| g.seed())
+            .collect();
+        let mut avail_bits: Vec<bool> = (0..horizon * u as u64 + 8)
+            .map(|_| g.bool_with(0.6))
+            .collect();
+        let out = drive_protocol(
+            p,
+            u,
+            horizon,
+            skip,
+            |_, _| avail_bits.pop().unwrap_or(true),
+            |pending| match style {
+                0 => 0,
+                1 => (picks.pop().unwrap_or(0) as usize) % pending.len(),
+                _ => {
+                    // heaviest-first: payload mass is slice_id + 1
+                    let mut best = 0usize;
+                    for (i, &(a, _)) in pending.iter().enumerate() {
+                        if a > pending[best].0 {
+                            best = i;
+                        }
+                    }
+                    best
+                }
+            },
+        );
+        let out = match out {
+            Ok(out) => out,
+            Err(e) => return Prop::Fail(e),
+        };
+        if skip == SkipPolicy::Never && out.skipped != 0 {
+            return Prop::Fail(format!(
+                "{} skips under SkipPolicy::Never",
+                out.skipped
+            ));
+        }
+        for (a, &grants) in out.grants.iter().enumerate() {
+            let deficit = horizon - grants;
+            let limit = match skip {
+                SkipPolicy::Defer { debt_limit } => debt_limit,
+                SkipPolicy::Never => 0,
+            };
+            if deficit > limit {
+                return Prop::Fail(format!(
+                    "slice {a}: deficit {deficit} over debt_limit {limit}"
+                ));
+            }
+        }
+        ensure(
+            out.full_coverage(),
+            format!(
+                "coverage hole after U + debt_limit = {horizon} rounds \
+                 (u={u}, p={p}, skip={skip:?}, style={style})"
+            ),
+        )
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine level: real LDA pipelines across the full mode matrix.
+// ---------------------------------------------------------------------
+
+/// {Strict, Availability, Dynamic} × {Never, Defer{2}} × depth {1, 2} ×
+/// U ∈ {P, 2P}: every combination conserves token mass, respects the
+/// pipeline staleness bound, settles every chain, and keeps the observed
+/// coverage debt inside the configured budget.
+#[test]
+fn engine_mode_matrix_conserves_and_bounds() {
+    let workers = 2usize;
+    let debt_limit = 2u64;
+    for (order, skip) in mode_matrix(debt_limit) {
+        for depth in [1u64, 2] {
+            for u_factor in [1usize, 2] {
+                let label = format!(
+                    "matrix-{order:?}-{skip:?}-d{depth}-u{u_factor}"
+                );
+                let corpus = figure_corpus(300, 50, 17);
+                let cfg = RunConfig {
+                    max_rounds: 8,
+                    eval_every: 4,
+                    mode: ExecutionMode::Rotation { depth },
+                    queue_order: order,
+                    skip_policy: skip,
+                    handoff_jitter: HandoffJitter::Jittered {
+                        base_frac: 0.2,
+                        jitter_frac: 1.5,
+                        seed: 17,
+                    },
+                    label: label.clone(),
+                    ..Default::default()
+                };
+                let mut e = lda_engine_sliced(
+                    &corpus,
+                    6,
+                    workers,
+                    workers * u_factor,
+                    17,
+                    &cfg,
+                );
+                let total0: f32 = e.app().s.iter().sum();
+                let res = e.run(&cfg);
+                assert_eq!(res.rounds_run, 8, "{label}");
+                let stats = res.ssp.as_ref().expect("rotation stats");
+                assert!(
+                    stats.max_staleness() <= depth.saturating_sub(1),
+                    "{label}: staleness {} over bound",
+                    stats.max_staleness()
+                );
+                let total1: f32 = e.app().s.iter().sum();
+                assert!(
+                    (total0 - total1).abs() < 1e-2,
+                    "{label}: token mass drifted {total0} -> {total1}"
+                );
+                // every slice is back in the store with a settled chain:
+                // version == grants == rounds − per-slice skips
+                let app = e.app();
+                for a in 0..app.n_slices() {
+                    assert!(app.peek_slice(a).is_some(), "{label}");
+                    let v = app.slice_version(a);
+                    assert!(
+                        v <= 8 && 8 - v <= res.max_coverage_debt,
+                        "{label}: slice {a} chain at v{v} after 8 rounds \
+                         (max debt {})",
+                        res.max_coverage_debt
+                    );
+                }
+                match skip {
+                    SkipPolicy::Never => {
+                        assert_eq!(
+                            (res.total_skipped_legs, res.max_coverage_debt),
+                            (0, 0),
+                            "{label}: Never must not skip"
+                        );
+                    }
+                    SkipPolicy::Defer { debt_limit } => {
+                        assert!(
+                            res.max_coverage_debt <= debt_limit,
+                            "{label}: engine-observed debt {} over budget \
+                             {debt_limit}",
+                            res.max_coverage_debt
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance anchor: depth-1 `Strict`/`Never` is bit-exact with BSP
+/// for both U = P and U = 2P — the whole tentpole (Dynamic order, skip
+/// machinery, grant-based scheduling) must leave the default path's
+/// trajectories untouched to the last bit.
+#[test]
+fn depth1_strict_never_matches_bsp_bit_exactly() {
+    for u_factor in [1usize, 2] {
+        let run = |mode: ExecutionMode| {
+            let corpus = figure_corpus(800, 100, 23);
+            let cfg = RunConfig {
+                max_rounds: 12,
+                eval_every: 4,
+                mode,
+                label: "matrix-depth1-eq".into(),
+                ..Default::default()
+            };
+            let mut e =
+                lda_engine_sliced(&corpus, 8, 3, 3 * u_factor, 23, &cfg);
+            let res = e.run(&cfg);
+            let objs: Vec<f64> = res
+                .recorder
+                .points()
+                .iter()
+                .map(|p| p.objective)
+                .collect();
+            (objs, e.app().s.clone())
+        };
+        let (bsp_obj, bsp_s) = run(ExecutionMode::Bsp);
+        let (rot_obj, rot_s) = run(ExecutionMode::Rotation { depth: 1 });
+        assert_eq!(
+            bsp_obj, rot_obj,
+            "U = {u_factor}P: depth-1 Strict/Never must reproduce BSP \
+             objectives bit-exactly"
+        );
+        assert_eq!(bsp_s, rot_s, "U = {u_factor}P: final topic sums");
+    }
+}
+
+/// `Defer {{ debt_limit: 0 }}` refuses every deferral, so a Strict run
+/// under it is bit-identical to `Never` — the degradation half of the
+/// CoverageDebtLedger edge cases (its starvation panic lives in the
+/// scheduler's unit tests).
+#[test]
+fn defer_zero_budget_run_matches_never_bit_exactly() {
+    let run = |skip: SkipPolicy| {
+        let corpus = figure_corpus(800, 100, 29);
+        let cfg = RunConfig {
+            max_rounds: 12,
+            eval_every: 4,
+            mode: ExecutionMode::Rotation { depth: 2 },
+            queue_order: QueueOrder::Strict,
+            skip_policy: skip,
+            label: "defer0-eq".into(),
+            ..Default::default()
+        };
+        let mut e = lda_engine_sliced(&corpus, 8, 3, 6, 29, &cfg);
+        let res = e.run(&cfg);
+        let objs: Vec<f64> =
+            res.recorder.points().iter().map(|p| p.objective).collect();
+        (objs, e.app().s.clone(), res.total_skipped_legs)
+    };
+    let (never_obj, never_s, never_skips) = run(SkipPolicy::Never);
+    let (defer_obj, defer_s, defer_skips) =
+        run(SkipPolicy::Defer { debt_limit: 0 });
+    assert_eq!(never_obj, defer_obj, "Defer{{0}} must degrade to Never");
+    assert_eq!(never_s, defer_s);
+    assert_eq!((never_skips, defer_skips), (0, 0));
+}
+
+/// MF block rotation through the same matrix corner: Dynamic order with
+/// Defer skipping runs, learns, and keeps the debt bounded — the second
+/// rotation app threads the new knobs end to end.
+#[test]
+fn mf_block_dynamic_defer_runs_and_learns() {
+    let cfg = RunConfig {
+        max_rounds: 18,
+        eval_every: 6,
+        mode: ExecutionMode::Rotation { depth: 2 },
+        queue_order: QueueOrder::Dynamic,
+        skip_policy: SkipPolicy::Defer { debt_limit: 1 },
+        handoff_jitter: HandoffJitter::Jittered {
+            base_frac: 0.2,
+            jitter_frac: 1.5,
+            seed: 31,
+        },
+        label: "mf-dynamic-defer".into(),
+        ..Default::default()
+    };
+    let mut e = mf_block_engine(90, 60, 4, 3, 6, 0.05, 0.08, 31, &cfg);
+    let res = e.run(&cfg);
+    assert_eq!(res.rounds_run, 18);
+    assert!(res.max_coverage_debt <= 1, "debt {}", res.max_coverage_debt);
+    let first = res.recorder.points()[0].objective;
+    assert!(
+        res.final_objective < first,
+        "the run must learn: {first} -> {}",
+        res.final_objective
+    );
+    assert!(res.ssp.expect("pipeline stats").max_staleness() <= 1);
+}
+
+// ---------------------------------------------------------------------
+// Goldens: the Strict and Availability replays and schedule streams are
+// pinned bit-exact to their PR-4 arithmetic under SkipPolicy::Never.
+// ---------------------------------------------------------------------
+
+/// Strict replay golden: hand-computed PR-4 arithmetic, exact f64s (all
+/// values are small dyadic rationals, so the comparison is bit-exact).
+#[test]
+fn golden_strict_replay_is_pinned() {
+    let legs = [(0usize, 2.0f64), (1, 1.0), (2, 4.0)];
+    let ready = [3.0, 0.0, 8.0];
+    let mut next = ready.to_vec();
+    let out = replay_queue(
+        QueueOrder::Strict,
+        1.0,
+        &legs,
+        &ready,
+        &mut next,
+        0,
+        &HandoffJitter::None,
+    );
+    assert_eq!(out, (12.0, 7.0, 4.0));
+    assert_eq!(next, vec![5.0, 6.0, 12.0]);
+    // with a uniform 0.5× handoff latency the releases shift by half a
+    // sweep each — still exact halves
+    let mut next = ready.to_vec();
+    let out = replay_queue(
+        QueueOrder::Strict,
+        1.0,
+        &legs,
+        &ready,
+        &mut next,
+        0,
+        &HandoffJitter::Uniform { frac: 0.5 },
+    );
+    assert_eq!(out, (12.0, 7.0, 4.0));
+    assert_eq!(next, vec![6.0, 6.5, 14.0]);
+}
+
+/// Availability replay golden: earliest-ready-first on the same instance.
+#[test]
+fn golden_availability_replay_is_pinned() {
+    let legs = [(0usize, 2.0f64), (1, 1.0), (2, 4.0)];
+    let ready = [3.0, 0.0, 8.0];
+    let mut next = ready.to_vec();
+    let out = replay_queue(
+        QueueOrder::Availability,
+        1.0,
+        &legs,
+        &ready,
+        &mut next,
+        0,
+        &HandoffJitter::None,
+    );
+    // services leg 1 (ready 0), then 0 (ready 3), then 2 (ready 8)
+    assert_eq!(out, (12.0, 7.0, 4.0));
+    assert_eq!(next, vec![5.0, 2.0, 12.0]);
+}
+
+/// Schedule-stream golden: `next_round_grants` under `Never` emits the
+/// PR-3/PR-4 `(v + C) % U` stream with ring-successor destinations, for
+/// both Strict and Availability order knobs (the knob never perturbs the
+/// stream).  Literal expected values, U = 5 over P = 2.
+#[test]
+fn golden_never_grant_stream_is_pinned() {
+    let leg = |slice_id: usize, dest_worker: usize| GrantLeg {
+        slice_id,
+        dest_worker,
+    };
+    for order in [QueueOrder::Strict, QueueOrder::Availability] {
+        let mut s = RotationScheduler::with_workers(5, 2);
+        s.set_queue_order(order);
+        // round 0: w0 holds positions {0,2,4} → slices [0,2,4];
+        // dest of position v is owner((v+4)%5): 0→w0, 2→w1, 4→w1
+        assert_eq!(
+            s.next_round_grants(|_| true),
+            vec![
+                vec![leg(0, 0), leg(2, 1), leg(4, 1)],
+                vec![leg(1, 0), leg(3, 0)],
+            ]
+        );
+        // round 1: slices shift by one position
+        assert_eq!(
+            s.next_round_grants(|_| true),
+            vec![
+                vec![leg(1, 0), leg(3, 1), leg(0, 1)],
+                vec![leg(2, 0), leg(4, 0)],
+            ]
+        );
+        // round 2
+        assert_eq!(
+            s.next_round_grants(|_| true),
+            vec![
+                vec![leg(2, 0), leg(4, 1), leg(1, 1)],
+                vec![leg(3, 0), leg(0, 0)],
+            ]
+        );
+    }
+}
+
+/// Dynamic replay agrees with Availability on the worker's own finish
+/// time for every instance (both are non-idling single-machine
+/// schedules); it only re-times *which* slice releases when.  This is the
+/// model-level guarantee behind the fig9 dynamic arm's "never loses"
+/// band.
+#[test]
+fn prop_dynamic_replay_finish_matches_availability() {
+    prop_check("dynamic replay finish equality", 300, |g| {
+        let n = g.usize_in(1, 7);
+        let legs: Vec<(usize, f64)> =
+            (0..n).map(|s| (s, 0.05 + g.f64_in(0.0, 1.0))).collect();
+        let ready: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 4.0)).collect();
+        let start = g.f64_in(0.0, 1.0);
+        let jitter = HandoffJitter::Jittered {
+            base_frac: 0.2,
+            jitter_frac: 1.5,
+            seed: g.seed(),
+        };
+        let mut next_a = ready.clone();
+        let (fa, ta, wa) = replay_queue(
+            QueueOrder::Availability,
+            start,
+            &legs,
+            &ready,
+            &mut next_a,
+            3,
+            &jitter,
+        );
+        let mut next_d = ready.clone();
+        let (fd, td, wd) = replay_queue(
+            QueueOrder::Dynamic,
+            start,
+            &legs,
+            &ready,
+            &mut next_d,
+            3,
+            &jitter,
+        );
+        if (fa - fd).abs() > 1e-9 * fa.abs().max(1.0) {
+            return Prop::Fail(format!(
+                "finish mismatch: availability {fa} vs dynamic {fd}"
+            ));
+        }
+        if (ta - td).abs() > 1e-12 {
+            return Prop::Fail("total compute mismatch".into());
+        }
+        ensure(wa >= 0.0 && wd >= 0.0, "waits are non-negative")
+    });
+}
+
+/// Changing the skip policy after round 0 would fork the per-slice
+/// position bookkeeping from the rounds already granted — the scheduler
+/// refuses it.
+#[test]
+#[should_panic(expected = "skip policy must be set before round 0")]
+fn mid_run_skip_policy_change_panics() {
+    let mut s = RotationScheduler::with_workers(4, 2);
+    let _ = s.next_round_queues();
+    s.set_skip_policy(SkipPolicy::Defer { debt_limit: 1 });
+}
