@@ -35,6 +35,14 @@ METRICS = [
     "pipelined_skipped_legs",
     "bsp_max_coverage_debt",
     "pipelined_max_coverage_debt",
+    # data-plane blocking (measured; ~0 under the sim backend)
+    "bsp_router_block_secs",
+    "pipelined_router_block_secs",
+    # threads_arm: virtual-time prediction vs measured wall-clock
+    "sim_bsp_secs",
+    "sim_pipelined_secs",
+    "wall_bsp_secs",
+    "wall_pipelined_secs",
 ]
 
 

@@ -103,3 +103,42 @@ def test_null_metrics_print_without_delta(tmp_path, monkeypatch, capsys):
     base["rotation_arm"]["bsp_secs_to_target"] = None
     _run(tmp_path, base, _doc(["rotation"]), monkeypatch)
     assert "n/a" in capsys.readouterr().out
+
+
+def _threads_arm(wall_bsp=4.0, wall_piped=2.0):
+    return {
+        "app": "LDA-rotation-threads",
+        "n_workers": 4,
+        "sim_bsp_secs": 8.0,
+        "sim_pipelined_secs": 3.0,
+        "wall_bsp_secs": wall_bsp,
+        "wall_pipelined_secs": wall_piped,
+        "bsp_router_block_secs": 0.5,
+        "pipelined_router_block_secs": 0.25,
+    }
+
+
+def test_threads_arm_metrics_flow_through(tmp_path, monkeypatch, capsys):
+    # the threads arm carries wall-clock + sim-predicted keys instead of
+    # secs-to-target; the delta report must print them with percentages
+    base = _doc(["rotation"])
+    base["threads_arm"] = _threads_arm()
+    cur = _doc(["rotation"])
+    cur["threads_arm"] = _threads_arm(wall_bsp=5.0, wall_piped=2.0)
+    _run(tmp_path, base, cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "-- threads_arm" in out
+    assert "wall_bsp_secs" in out and "(+25.0%)" in out
+    assert "wall_pipelined_secs" in out
+    assert "sim_bsp_secs" in out
+    assert "pipelined_router_block_secs" in out
+    assert "arms removed" not in out
+
+
+def test_removed_threads_arm_fails_the_job(tmp_path, monkeypatch, capsys):
+    base = _doc(["rotation"])
+    base["threads_arm"] = _threads_arm()
+    with pytest.raises(SystemExit) as exc:
+        _run(tmp_path, base, _doc(["rotation"]), monkeypatch)
+    assert exc.value.code == 1
+    assert "threads_arm" in capsys.readouterr().out

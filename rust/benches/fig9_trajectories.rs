@@ -4,11 +4,12 @@
 //!
 //! Knobs (CI smoke uses these): `STRADS_BENCH_SCALE` (default 0.25),
 //! `STRADS_BENCH_WORKERS` (default 4), `STRADS_BENCH_DIR` (default
-//! `target/bench`) — the run writes `BENCH_fig9.json` there so the perf
-//! trajectory can be archived per-PR.
+//! `target/bench`), `STRADS_BENCH_PACE_MS` (default 3 — per-leg wall
+//! pace floor for the threaded arm) — the run writes `BENCH_fig9.json`
+//! there so the perf trajectory can be archived per-PR.
 
 use strads::cluster::HandoffJitter;
-use strads::figures::fig9::{self, ModeComparison, Panel};
+use strads::figures::fig9::{self, ModeComparison, Panel, ThreadsComparison};
 use strads::metrics::Recorder;
 use strads::util::JsonValue;
 
@@ -55,8 +56,27 @@ fn arm_json(c: &ModeComparison) -> JsonValue {
         .field("pipelined_skipped_legs", c.ssp_skipped_legs)
         .field("bsp_max_coverage_debt", c.bsp_max_coverage_debt)
         .field("pipelined_max_coverage_debt", c.ssp_max_coverage_debt)
+        .field("bsp_router_block_secs", c.bsp_router_block_secs)
+        .field("pipelined_router_block_secs", c.ssp_router_block_secs)
         .field("bsp", recorder_json(&c.bsp))
         .field("pipelined", recorder_json(&c.ssp))
+        .build()
+}
+
+fn threads_arm_json(c: &ThreadsComparison) -> JsonValue {
+    JsonValue::obj()
+        .field("app", c.app.as_str())
+        .field("n_workers", c.n_workers)
+        .field("sim_bsp_secs", c.sim_bsp_secs)
+        .field("sim_pipelined_secs", c.sim_pipelined_secs)
+        .field("wall_bsp_secs", c.wall_bsp_secs)
+        .field("wall_pipelined_secs", c.wall_pipelined_secs)
+        .field("sim_bsp_objective", c.sim_bsp_objective)
+        .field("sim_pipelined_objective", c.sim_pipelined_objective)
+        .field("bsp_objective", c.bsp_objective)
+        .field("pipelined_objective", c.pipelined_objective)
+        .field("bsp_router_block_secs", c.bsp_router_block_secs)
+        .field("pipelined_router_block_secs", c.pipelined_router_block_secs)
         .build()
 }
 
@@ -315,6 +335,41 @@ fn main() {
     );
     assert!(mf_rot.ssp_handoffs > 0, "blocks must move p2p");
 
+    // ---- threaded backend: wall-clock vs virtual-time -----------------
+    // Same LDA rotation workload on both execution backends.  The
+    // threaded runs pace every leg with a real sleep (floor below) so the
+    // rotating 4x skew is physically visible in wall-clock; the virtual
+    // clock's predicted arm ordering (pipelined < BSP rotation) must then
+    // hold in *measured* wall time, and — because the per-worker call
+    // sequence is backend-independent — the final objectives must match
+    // the sim runs bit-for-bit.
+    let pace = env_f64("STRADS_BENCH_PACE_MS", 3.0) / 1000.0;
+    let threads = fig9::run_threads_comparison(&cfg, 3, 4.0, pace);
+    fig9::print_threads_comparison(&threads);
+    assert_eq!(
+        threads.bsp_objective.to_bits(),
+        threads.sim_bsp_objective.to_bits(),
+        "threaded BSP rotation must be bit-identical to sim"
+    );
+    assert_eq!(
+        threads.pipelined_objective.to_bits(),
+        threads.sim_pipelined_objective.to_bits(),
+        "threaded pipelined rotation must be bit-identical to sim"
+    );
+    assert!(
+        threads.sim_pipelined_secs < threads.sim_bsp_secs,
+        "sim must predict pipelined ({:.4}s) < BSP ({:.4}s)",
+        threads.sim_pipelined_secs,
+        threads.sim_bsp_secs
+    );
+    assert!(
+        threads.wall_pipelined_secs < threads.wall_bsp_secs,
+        "sim-predicted ordering must hold in wall-clock: pipelined \
+         {:.4}s vs BSP {:.4}s",
+        threads.wall_pipelined_secs,
+        threads.wall_bsp_secs
+    );
+
     // ---- BENCH_fig9.json ---------------------------------------------
     let json = JsonValue::obj()
         .field("figure", "fig9")
@@ -336,6 +391,7 @@ fn main() {
         .field("dynamic_arm", arm_json(&dyn_zipf))
         .field("dynamic_uniform_arm", arm_json(&dyn_uni))
         .field("mf_rotation_arm", arm_json(&mf_rot))
+        .field("threads_arm", threads_arm_json(&threads))
         .field("wall_secs", t.elapsed().as_secs_f64())
         .build();
     let dir = std::env::var("STRADS_BENCH_DIR")

@@ -365,10 +365,13 @@ impl StradsApp for LdaApp {
             dest_worker: usize,
             mut data: BSlice,
             consumed: u64,
-            s_running: &[f32],
-        ) -> (Vec<f32>, usize, LdaPartialLeg) {
-            let (s_local, n_sampled, touched) =
-                ws.gibbs_slice(slice_id, &mut data.counts, s_running);
+            s_running: &mut Vec<f32>,
+        ) -> (usize, LdaPartialLeg) {
+            // in-place sweep: s̃ threads through the caller's buffer, so a
+            // multi-leg queue allocates nothing per leg (the threaded
+            // backend's hot path)
+            let (n_sampled, touched) =
+                ws.gibbs_slice_into(slice_id, &mut data.counts, s_running);
             let handoff_bytes = data.counts.len() * 4;
             router.forward(slice_id, data, consumed + 1);
             let leg = LdaPartialLeg {
@@ -379,7 +382,7 @@ impl StradsApp for LdaApp {
                 dest_worker,
                 n_sampled,
             };
-            (s_local, touched, leg)
+            (touched, leg)
         }
 
         let LdaTask { legs, s, router, order } = task;
@@ -414,16 +417,15 @@ impl StradsApp for LdaApp {
                     _ => router.take_earliest(&grants, spin),
                 };
                 let leg = remaining.remove(pick);
-                let (s_local, touched, out) = routed_leg(
+                let (touched, out) = routed_leg(
                     ws,
                     router,
                     leg.slice_id,
                     leg.dest_worker,
                     data,
                     consumed,
-                    &s_running,
+                    &mut s_running,
                 );
-                s_running = s_local;
                 touched_words += touched;
                 out_legs.push(out);
             }
@@ -443,18 +445,19 @@ impl StradsApp for LdaApp {
                     // until exactly this version was forwarded), sweep,
                     // then hand it straight on to the next holder
                     let (data, consumed) = router.take(slice_id, version);
-                    let (s_local, touched, out) = routed_leg(
+                    let (touched, out) = routed_leg(
                         ws, router, slice_id, dest_worker, data, consumed,
-                        &s_running,
+                        &mut s_running,
                     );
-                    s_running = s_local;
                     touched_words += touched;
                     out_legs.push(out);
                 }
                 (None, None, Some(mut data)) => {
-                    let (s_local, n_sampled, touched) =
-                        ws.gibbs_slice(slice_id, &mut data.counts, &s_running);
-                    s_running = s_local;
+                    let (n_sampled, touched) = ws.gibbs_slice_into(
+                        slice_id,
+                        &mut data.counts,
+                        &mut s_running,
+                    );
                     touched_words += touched;
                     out_legs.push(LdaPartialLeg {
                         slice_id,
@@ -608,6 +611,12 @@ impl StradsApp for LdaApp {
 
     fn n_rotation_slices(&self) -> usize {
         self.n_slices
+    }
+
+    fn data_plane_block_secs(&self) -> f64 {
+        // cumulative seconds workers physically parked on the handoff
+        // ring (0.0 under BSP, where there is no router)
+        self.router.as_ref().map(|r| r.block_secs()).unwrap_or(0.0)
     }
 
     fn begin_rotation(&mut self, _depth: u64) {

@@ -752,6 +752,12 @@ impl StradsApp for MfBlockApp {
         self.n_blocks
     }
 
+    fn data_plane_block_secs(&self) -> f64 {
+        // cumulative seconds workers physically parked on the handoff
+        // ring (0.0 under BSP, where there is no router)
+        self.router.as_ref().map(|r| r.block_secs()).unwrap_or(0.0)
+    }
+
     fn begin_rotation(&mut self, _depth: u64) {
         assert!(self.router.is_none(), "rotation mode already active");
         let router = Arc::new(SliceRouter::new(self.n_blocks));

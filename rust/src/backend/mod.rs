@@ -57,6 +57,25 @@ pub trait LdaShard: Send {
         b_slice: &mut [f32],
         s: &[f32],
     ) -> (Vec<f32>, usize, usize);
+    /// In-place variant of [`LdaShard::gibbs_slice`] for the rotation hot
+    /// path: `s_running` holds the worker's local topic sums on entry and
+    /// is updated in place, so a multi-leg sweep reuses one buffer instead
+    /// of allocating a fresh `Vec` per leg.  Returns (tokens sampled,
+    /// distinct B rows touched).  Must draw the **same RNG sequence** as
+    /// `gibbs_slice` — the sim-vs-threads bit-equality contract depends on
+    /// it.  The default delegates (correct but allocating); native shards
+    /// override allocation-free.
+    fn gibbs_slice_into(
+        &mut self,
+        slice_id: usize,
+        b_slice: &mut [f32],
+        s_running: &mut Vec<f32>,
+    ) -> (usize, usize) {
+        let (s_local, n, touched) =
+            self.gibbs_slice(slice_id, b_slice, s_running);
+        *s_running = s_local;
+        (n, touched)
+    }
     /// Document-side log-likelihood contribution.
     fn doc_loglik(&self) -> f64;
     /// Model bytes (doc-topic rows + local s copy).

@@ -312,18 +312,20 @@ impl NativeLdaShard {
     pub fn dims(&self) -> (usize, usize) {
         (self.n_docs, self.k)
     }
-}
 
-impl LdaShard for NativeLdaShard {
-    fn gibbs_slice(
+    /// The shared Gibbs-sweep core: samples every token of the slice
+    /// in place, maintaining `s_local` (the worker's running local topic
+    /// sums) directly in the caller's buffer.  Both `gibbs_slice` (which
+    /// copies `s` first) and the allocation-free `gibbs_slice_into` funnel
+    /// here, so the RNG sequence is identical by construction.
+    fn sweep_slice(
         &mut self,
         slice_id: usize,
         b_slice: &mut [f32],
-        s: &[f32],
-    ) -> (Vec<f32>, usize, usize) {
+        s_local: &mut [f32],
+    ) -> (usize, usize) {
         let k = self.k;
         let vgamma = self.v_global as f32 * self.gamma;
-        let mut s_local = s.to_vec();
         // tokens mutated in place; slice words tracked in a reusable bitmap
         // (HashSet insertion was ~30% of the sweep — EXPERIMENTS.md §Perf)
         let n_slice_words = b_slice.len() / k;
@@ -380,7 +382,30 @@ impl LdaShard for NativeLdaShard {
             self.touched_scratch[t.word_local as usize] = false;
         }
         self.tokens[slice_id] = bucket;
+        (n, n_touched)
+    }
+}
+
+impl LdaShard for NativeLdaShard {
+    fn gibbs_slice(
+        &mut self,
+        slice_id: usize,
+        b_slice: &mut [f32],
+        s: &[f32],
+    ) -> (Vec<f32>, usize, usize) {
+        let mut s_local = s.to_vec();
+        let (n, n_touched) =
+            self.sweep_slice(slice_id, b_slice, &mut s_local);
         (s_local, n, n_touched)
+    }
+
+    fn gibbs_slice_into(
+        &mut self,
+        slice_id: usize,
+        b_slice: &mut [f32],
+        s_running: &mut Vec<f32>,
+    ) -> (usize, usize) {
+        self.sweep_slice(slice_id, b_slice, s_running)
     }
 
     fn doc_loglik(&self) -> f64 {

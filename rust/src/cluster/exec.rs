@@ -1,0 +1,725 @@
+//! Pluggable execution backends: how one engine round loop turns measured
+//! worker compute into *run time*.
+//!
+//! The coordinator's round pipelines (BSP / SSP / rotation,
+//! `coordinator::engine`) are written once against [`ExecBackend`].  The
+//! backend decides two things:
+//!
+//! * **Physical realization** — whether a worker's push runs for its
+//!   natural CPU time ([`SimBackend`]) or is *physically* slowed down to
+//!   its straggler multiple by sleeping on the worker thread
+//!   ([`ThreadBackend`]): under threads a 4× straggler really does hold
+//!   its round 4× longer, so the blocking data plane
+//!   ([`crate::kvstore::SliceRouter`] / [`crate::cluster::ForwardQueue`])
+//!   experiences true contention and real condvar waits.
+//! * **Time resolution** — how the run clock advances per collected
+//!   round.  [`SimBackend`] replays the measured seconds through the
+//!   virtual-time model (per-worker availability, per-slice handoff
+//!   gates, [`replay_queue`]); [`ThreadBackend`] reads the wall clock —
+//!   the pipeline overlap is physically real, so no model is needed.
+//!
+//! **Equivalence contract** (README, execution-mode section): both
+//! backends drive the *same* app calls through the *same* grant → take →
+//! forward → settle protocol.  At `depth: 1` / `QueueOrder::Strict` /
+//! `SkipPolicy::Never` the call sequence is timing-independent, so a
+//! threaded run produces **bit-identical model state** to the simulated
+//! run on the same seed (asserted in `tests/threads_backend.rs`); deeper
+//! or reordered runs stay invariant-identical (disjointness, fork-free
+//! chains, token conservation) while their timing-dependent choices may
+//! legitimately differ.  Only the meaning of the reported times changes:
+//! `virtual_secs` is modelled under `Sim` and tracks `wall_secs` under
+//! `Threads`.
+//!
+//! Workers are real OS threads under *both* backends (see
+//! [`crate::cluster::WorkerPool`]); what `Sim` simulates is only the
+//! cluster's timing.  Compute is always measured as per-thread CPU time,
+//! so injected straggler sleeps never contaminate the measured seconds —
+//! the stats stay comparable across backends.
+
+use crate::cluster::{HandoffJitter, StragglerModel};
+use crate::scheduler::rotation::QueueOrder;
+
+/// Which execution backend a run uses (`RunConfig::backend`,
+/// CLI `--backend sim|threads`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Virtual-time simulator (default): timing is modelled, trajectories
+    /// are bit-identical to the pre-backend engine.
+    #[default]
+    Sim,
+    /// Real concurrency: stragglers are realized as worker-thread sleeps
+    /// and the run clock is the wall clock.
+    Threads,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "sim" => Ok(BackendKind::Sim),
+            "threads" => Ok(BackendKind::Threads),
+            other => Err(format!("unknown backend '{other}' (sim|threads)")),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendKind::Sim => write!(f, "sim"),
+            BackendKind::Threads => write!(f, "threads"),
+        }
+    }
+}
+
+/// What the engine observed collecting one SSP/BSP-shaped round.
+pub struct RoundObs<'a> {
+    pub round: u64,
+    /// Run-clock timestamp of the round's dispatch
+    /// ([`ExecBackend::on_dispatch`]'s return value).
+    pub dispatched_at: f64,
+    /// Per-worker compute seconds, already passed through
+    /// [`ExecBackend::account_compute`].
+    pub compute_secs: &'a [f64],
+    /// Network seconds charged since the previous collect.
+    pub comm_secs: f64,
+    /// Measured coordinator `pull` seconds.
+    pub pull_secs: f64,
+    /// Wall seconds since the run began (threaded resolution).
+    pub wall_now: f64,
+}
+
+/// What the engine observed collecting one rotation round: per-worker
+/// queues of `(slice_id, seconds)` legs in granted order, plus the
+/// discipline and jitter the virtual replay needs.
+pub struct RotObs<'a> {
+    pub round: u64,
+    pub dispatched_at: f64,
+    pub timed_legs: &'a [Vec<(usize, f64)>],
+    pub comm_secs: f64,
+    pub pull_secs: f64,
+    pub order: QueueOrder,
+    pub jitter: &'a HandoffJitter,
+    /// Wall seconds since the run began (threaded resolution).
+    pub wall_now: f64,
+}
+
+/// One resolved round: where the run clock lands and how much barrier
+/// wait the pipeline hid relative to BSP (recorded into
+/// [`crate::metrics::SspStats`]; negative values clamp there).
+pub struct RoundOutcome {
+    pub now: f64,
+    pub wait_saved_secs: f64,
+}
+
+/// One execution backend: physical realization of straggler skew on the
+/// worker threads plus per-round time resolution.  Constructed per run
+/// via [`make_backend`]; all state (the run clock, per-worker/per-slice
+/// availability) lives behind `&mut self`.
+///
+/// # Examples
+///
+/// The simulated backend replays the SSP availability model — a dispatch
+/// at 0.5s with workers computing 1s and 3s, 0.25s of comm and 0.25s of
+/// pull resolves to `0.5 + 3.0 + 0.25 + 0.25`:
+///
+/// ```
+/// use strads::cluster::exec::{make_backend, BackendKind, RoundObs};
+/// use strads::cluster::StragglerModel;
+///
+/// let mut b = make_backend(BackendKind::Sim, StragglerModel::None, 0.0);
+/// b.begin_run(0.0, 2, 0);
+/// let at = b.on_dispatch(0.5, 0.0);
+/// assert_eq!(at, 0.5);
+/// let out = b.resolve_round(&RoundObs {
+///     round: 0,
+///     dispatched_at: at,
+///     compute_secs: &[1.0, 3.0],
+///     comm_secs: 0.25,
+///     pull_secs: 0.25,
+///     wall_now: 0.0,
+/// });
+/// assert!((out.now - 4.0).abs() < 1e-12);
+/// // a BSP barrier would have charged exactly the same here, so the
+/// // pipeline hid nothing:
+/// assert!(out.wait_saved_secs.abs() < 1e-12);
+/// ```
+///
+/// The threaded backend realizes skew physically and resolves against the
+/// wall clock instead:
+///
+/// ```
+/// use strads::cluster::exec::{make_backend, BackendKind, RoundObs};
+/// use strads::cluster::StragglerModel;
+///
+/// let mut b = make_backend(
+///     BackendKind::Threads,
+///     StragglerModel::Fixed(vec![4.0, 1.0]),
+///     0.0,
+/// );
+/// b.begin_run(10.0, 2, 0);
+/// // worker 0's push really sleeps to 4x its measured time:
+/// assert_eq!(b.physical_slowdown(0, 0, 2), 4.0);
+/// let at = b.on_dispatch(0.0, 0.125);
+/// let out = b.resolve_round(&RoundObs {
+///     round: 0,
+///     dispatched_at: at,
+///     compute_secs: &[0.4, 0.1],
+///     comm_secs: 0.0,
+///     pull_secs: 0.0,
+///     wall_now: 0.5,
+/// });
+/// // the run clock continues from where the virtual clock stood and
+/// // advances by measured wall time:
+/// assert!((out.now - 10.5).abs() < 1e-12);
+/// ```
+pub trait ExecBackend {
+    fn kind(&self) -> BackendKind;
+
+    /// Reset the backend's clock state at the top of a run: `now` is the
+    /// engine's virtual-clock reading (runs accumulate), `n_workers` /
+    /// `n_slices` size the availability timelines (`n_slices` is 0 for
+    /// non-rotation runs).
+    fn begin_run(&mut self, now: f64, n_workers: usize, n_slices: usize);
+
+    /// Factor by which worker `worker`'s push is physically slowed this
+    /// round (the push sleeps until `measured × factor` has elapsed).
+    /// 1.0 under [`SimBackend`] — skew there is applied to the *accounted*
+    /// seconds only, never to the physical threads.
+    fn physical_slowdown(&self, worker: usize, round: u64, n_workers: usize) -> f64;
+
+    /// Minimum physical seconds one push occupies under the threaded
+    /// backend (0.0 = off).  Benches set this so wall-clock arm orderings
+    /// rest on hundreds of milliseconds of injected compute rather than
+    /// scheduler noise at smoke scale.
+    fn pace_floor_secs(&self) -> f64 {
+        0.0
+    }
+
+    /// Fold the straggler model into the *accounted* per-worker seconds
+    /// (both backends apply the same scaling, so stats stay comparable:
+    /// the simulator models the skew it never ran, the threaded backend
+    /// re-applies the skew its sleeps realized but its CPU-time
+    /// measurement deliberately excluded).
+    fn account_compute(&self, secs: &mut [f64], round: u64);
+
+    /// Advance the run clock over one dispatch (`schedule_secs` of
+    /// coordinator work) and return the timestamp the dispatched tasks
+    /// cannot start before.
+    fn on_dispatch(&mut self, schedule_secs: f64, wall_now: f64) -> f64;
+
+    /// Resolve one collected SSP-shaped round to a new run-clock time.
+    fn resolve_round(&mut self, obs: &RoundObs) -> RoundOutcome;
+
+    /// Resolve one collected rotation round.  Pushes each worker's
+    /// handoff-wait seconds (idle time on not-yet-landed slices) into
+    /// `handoff_waits`, worker-indexed — zeros under [`ThreadBackend`],
+    /// where blocking is measured on the data plane instead
+    /// ([`crate::kvstore::SliceRouter::block_secs`] →
+    /// `SspStats::router_block_secs`).
+    fn resolve_rot_round(
+        &mut self,
+        obs: &RotObs,
+        handoff_waits: &mut Vec<f64>,
+    ) -> RoundOutcome;
+
+    /// Current run-clock reading.
+    fn now(&self) -> f64;
+}
+
+/// Construct the backend for one run.  `pace_floor_secs` is the threaded
+/// pacing floor (ignored by `Sim`); the `STRADS_THREADS_PACE_MS` env var
+/// raises it for CLI runs.
+pub fn make_backend(
+    kind: BackendKind,
+    straggler: StragglerModel,
+    pace_floor_secs: f64,
+) -> Box<dyn ExecBackend> {
+    match kind {
+        BackendKind::Sim => Box::new(SimBackend::new(straggler)),
+        BackendKind::Threads => {
+            Box::new(ThreadBackend::new(straggler, pace_floor_secs))
+        }
+    }
+}
+
+/// The virtual-time simulator: the engine's original clock arithmetic,
+/// extracted verbatim — per-worker availability timestamps for SSP, plus
+/// the per-slice handoff timeline ([`replay_queue`]) for rotation.
+/// Trajectories and reported virtual times are bit-identical to the
+/// pre-backend engine.
+pub struct SimBackend {
+    straggler: StragglerModel,
+    /// Coordinator's absolute virtual time.
+    coord_now: f64,
+    /// Per-worker availability timestamps.
+    worker_free: Vec<f64>,
+    /// Per-slice availability (rotation): when the slice's most recent
+    /// sweep finished — i.e. when its holder forwarded it.  A worker's
+    /// sweep of slice `a` cannot start before `slice_ready[a]`; other
+    /// slices of the same queue are *not* gated on it, which is what lets
+    /// a U > P worker sample one slice while another is still in flight.
+    slice_ready: Vec<f64>,
+}
+
+impl SimBackend {
+    pub fn new(straggler: StragglerModel) -> Self {
+        SimBackend {
+            straggler,
+            coord_now: 0.0,
+            worker_free: Vec::new(),
+            slice_ready: Vec::new(),
+        }
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn begin_run(&mut self, now: f64, n_workers: usize, n_slices: usize) {
+        self.coord_now = now;
+        self.worker_free = vec![now; n_workers];
+        self.slice_ready = vec![now; n_slices];
+    }
+
+    fn physical_slowdown(&self, _worker: usize, _round: u64, _n: usize) -> f64 {
+        1.0
+    }
+
+    fn account_compute(&self, secs: &mut [f64], round: u64) {
+        self.straggler.scale(secs, round);
+    }
+
+    fn on_dispatch(&mut self, schedule_secs: f64, _wall_now: f64) -> f64 {
+        self.coord_now += schedule_secs;
+        self.coord_now
+    }
+
+    fn resolve_round(&mut self, obs: &RoundObs) -> RoundOutcome {
+        // a worker started this round as soon as both it and the dispatch
+        // were ready
+        let mut finish_max = 0.0f64;
+        let mut compute_max = 0.0f64;
+        for (p, &secs) in obs.compute_secs.iter().enumerate() {
+            let start = self.worker_free[p].max(obs.dispatched_at);
+            let finish = start + secs;
+            self.worker_free[p] = finish;
+            finish_max = finish_max.max(finish);
+            compute_max = compute_max.max(secs);
+        }
+        let before = self.coord_now;
+        self.coord_now = self.coord_now.max(finish_max + obs.comm_secs) + obs.pull_secs;
+        // what a BSP barrier would have added on top of the pipeline
+        let bsp_increment = compute_max + obs.comm_secs + obs.pull_secs;
+        RoundOutcome {
+            now: self.coord_now,
+            wait_saved_secs: bsp_increment - (self.coord_now - before),
+        }
+    }
+
+    fn resolve_rot_round(
+        &mut self,
+        obs: &RotObs,
+        handoff_waits: &mut Vec<f64>,
+    ) -> RoundOutcome {
+        // replay each worker's queue against the per-slice availability
+        // timeline: a leg starts when the worker reaches it AND the
+        // slice's previous holder's handoff has landed.  All gates read
+        // the previous round's timeline (every slice moves every round),
+        // so updates land in a fresh copy.
+        let mut next_ready = self.slice_ready.clone();
+        let mut finish_max = 0.0f64;
+        let mut compute_max = 0.0f64;
+        for (p, legs) in obs.timed_legs.iter().enumerate() {
+            let start = self.worker_free[p].max(obs.dispatched_at);
+            let (finish, total, wait) = replay_queue(
+                obs.order,
+                start,
+                legs,
+                &self.slice_ready,
+                &mut next_ready,
+                obs.round,
+                obs.jitter,
+            );
+            handoff_waits.push(wait);
+            self.worker_free[p] = finish;
+            finish_max = finish_max.max(finish);
+            compute_max = compute_max.max(total);
+        }
+        self.slice_ready = next_ready;
+        let before = self.coord_now;
+        self.coord_now = self.coord_now.max(finish_max + obs.comm_secs) + obs.pull_secs;
+        let bsp_increment = compute_max + obs.comm_secs + obs.pull_secs;
+        RoundOutcome {
+            now: self.coord_now,
+            wait_saved_secs: bsp_increment - (self.coord_now - before),
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.coord_now
+    }
+}
+
+/// Real-concurrency backend: P worker threads exchange slices through the
+/// blocking data plane, straggler skew is realized as on-thread sleeps
+/// (push runs to `max(measured, pace_floor) × multiplier` wall seconds),
+/// and the run clock is the wall clock offset by where the virtual clock
+/// stood when the run began — so `virtual_secs ≈ wall_secs` for threaded
+/// runs and cross-run accumulation still works.
+pub struct ThreadBackend {
+    straggler: StragglerModel,
+    /// Virtual-clock reading at `begin_run` (the run-clock origin).
+    base: f64,
+    coord_now: f64,
+    n_workers: usize,
+    pace_floor_secs: f64,
+}
+
+/// Env override for the threaded pacing floor, in milliseconds
+/// (`STRADS_THREADS_PACE_MS`; 0 = off).  Read per backend construction so
+/// benches can set it between runs.
+fn env_pace_floor_secs() -> f64 {
+    std::env::var("STRADS_THREADS_PACE_MS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|ms| ms.max(0.0) * 1e-3)
+        .unwrap_or(0.0)
+}
+
+impl ThreadBackend {
+    pub fn new(straggler: StragglerModel, pace_floor_secs: f64) -> Self {
+        ThreadBackend {
+            straggler,
+            base: 0.0,
+            coord_now: 0.0,
+            n_workers: 0,
+            pace_floor_secs: pace_floor_secs.max(env_pace_floor_secs()),
+        }
+    }
+
+    /// Pin the run clock to the wall clock (monotone: collects never move
+    /// it backwards past a later dispatch).
+    fn to_wall(&mut self, wall_now: f64) -> f64 {
+        self.coord_now = self.coord_now.max(self.base + wall_now);
+        self.coord_now
+    }
+}
+
+impl ExecBackend for ThreadBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Threads
+    }
+
+    fn begin_run(&mut self, now: f64, n_workers: usize, _n_slices: usize) {
+        self.base = now;
+        self.coord_now = now;
+        self.n_workers = n_workers;
+    }
+
+    fn physical_slowdown(&self, worker: usize, round: u64, n_workers: usize) -> f64 {
+        self.straggler.multiplier(worker, round, n_workers)
+    }
+
+    fn pace_floor_secs(&self) -> f64 {
+        self.pace_floor_secs
+    }
+
+    fn account_compute(&self, secs: &mut [f64], round: u64) {
+        // same scaling as Sim: the sleeps realized the skew physically,
+        // but the CPU-time measurement excludes them by design
+        self.straggler.scale(secs, round);
+    }
+
+    fn on_dispatch(&mut self, _schedule_secs: f64, wall_now: f64) -> f64 {
+        self.to_wall(wall_now)
+    }
+
+    fn resolve_round(&mut self, obs: &RoundObs) -> RoundOutcome {
+        let compute_max =
+            obs.compute_secs.iter().copied().fold(0.0f64, f64::max);
+        let before = self.coord_now;
+        let now = self.to_wall(obs.wall_now);
+        let bsp_increment = compute_max + obs.comm_secs + obs.pull_secs;
+        RoundOutcome {
+            now,
+            wait_saved_secs: bsp_increment - (now - before),
+        }
+    }
+
+    fn resolve_rot_round(
+        &mut self,
+        obs: &RotObs,
+        handoff_waits: &mut Vec<f64>,
+    ) -> RoundOutcome {
+        // blocking is physical here: the per-worker wait shows up in the
+        // router's block counter, not in a modelled timeline
+        handoff_waits.resize(obs.timed_legs.len(), 0.0);
+        let compute_max = obs
+            .timed_legs
+            .iter()
+            .map(|legs| legs.iter().map(|&(_, s)| s).sum::<f64>())
+            .fold(0.0f64, f64::max);
+        let before = self.coord_now;
+        let now = self.to_wall(obs.wall_now);
+        let bsp_increment = compute_max + obs.comm_secs + obs.pull_secs;
+        RoundOutcome {
+            now,
+            wait_saved_secs: bsp_increment - (now - before),
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.coord_now
+    }
+}
+
+/// Replay one worker's rotation queue against the per-slice availability
+/// timeline for one round.  `legs` are `(slice_id, seconds)` in granted
+/// (ring-position) order; each leg starts at
+/// `max(worker time, slice_ready[slice])` and runs for its seconds, and
+/// its handoff lands downstream at `finish + jitter latency`.  A queue
+/// emptied by [`crate::scheduler::rotation::SkipPolicy::Defer`] replays
+/// to `(start, 0, 0)` and leaves every skipped slice's readiness
+/// untouched.
+///
+/// [`QueueOrder::Strict`] services the legs as given — arithmetic
+/// identical, term for term, to the fixed-order engine.
+/// [`QueueOrder::Availability`] services them earliest-ready-first (ties
+/// broken by queue position): with per-leg durations independent of
+/// order, sequencing a single machine's jobs by release time minimizes
+/// its makespan, so a worker's round never finishes later than under any
+/// fixed order — the opportunistic reordering is pure win in the model,
+/// exactly as `try_take` polling is on the data plane.
+/// [`QueueOrder::Dynamic`] services, among the legs whose slices have
+/// already landed, the one with the most compute first (seconds proxy
+/// token mass; ties toward the earlier release, then queue position),
+/// waiting only when nothing is ready.  Both reordering disciplines are
+/// *non-idling*, so a worker's round finishes at the same time under
+/// either — Dynamic changes only **when each slice's handoff releases**,
+/// front-loading the heavy slices so the sweeps that gate the most
+/// downstream compute land earliest (the mass × downstream-benefit
+/// score; property-tested against Availability's finish in
+/// `tests/rotation_properties.rs`).
+///
+/// Public so the regression/property suites can pin the model itself
+/// (golden replays, never-worse properties) without driving a full
+/// engine.
+///
+/// Returns `(finish time, total compute seconds, handoff wait seconds)`;
+/// the wait is the idle time the worker spent blocked on not-yet-landed
+/// slices (the slack the reordering disciplines exist to reclaim).
+pub fn replay_queue(
+    order: QueueOrder,
+    start: f64,
+    legs: &[(usize, f64)],
+    slice_ready: &[f64],
+    next_ready: &mut [f64],
+    round: u64,
+    jitter: &HandoffJitter,
+) -> (f64, f64, f64) {
+    if order == QueueOrder::Dynamic {
+        return replay_queue_dynamic(
+            start, legs, slice_ready, next_ready, round, jitter,
+        );
+    }
+    let mut idx: Vec<usize> = (0..legs.len()).collect();
+    if order == QueueOrder::Availability {
+        idx.sort_by(|&a, &b| {
+            slice_ready[legs[a].0]
+                .partial_cmp(&slice_ready[legs[b].0])
+                .expect("slice_ready is never NaN")
+                .then(a.cmp(&b))
+        });
+    }
+    let mut t = start;
+    let mut total = 0.0f64;
+    let mut wait = 0.0f64;
+    for &i in &idx {
+        let (slice, secs) = legs[i];
+        wait += (slice_ready[slice] - t).max(0.0);
+        let leg_start = t.max(slice_ready[slice]);
+        t = leg_start + secs;
+        next_ready[slice] = t + jitter.latency(slice, round, secs);
+        total += secs;
+    }
+    (t, total, wait)
+}
+
+/// The [`QueueOrder::Dynamic`] half of [`replay_queue`]: event-driven —
+/// the ready set depends on the worker's own progress, so the order
+/// cannot be fixed up front the way Availability's earliest-release sort
+/// can.
+fn replay_queue_dynamic(
+    start: f64,
+    legs: &[(usize, f64)],
+    slice_ready: &[f64],
+    next_ready: &mut [f64],
+    round: u64,
+    jitter: &HandoffJitter,
+) -> (f64, f64, f64) {
+    let mut remaining: Vec<usize> = (0..legs.len()).collect();
+    let mut t = start;
+    let mut total = 0.0f64;
+    let mut wait = 0.0f64;
+    while !remaining.is_empty() {
+        let ready_at = |i: usize| slice_ready[legs[i].0];
+        if remaining.iter().all(|&i| ready_at(i) > t) {
+            // nothing parked: wait for the earliest release
+            let tmin = remaining
+                .iter()
+                .map(|&i| ready_at(i))
+                .fold(f64::INFINITY, f64::min);
+            wait += tmin - t;
+            t = tmin;
+        }
+        // heaviest ready leg first; ties toward the earlier release, then
+        // queue position (mirrors SliceRouter::take_heaviest's data-plane
+        // tie-break: arrival stamp, then grant index)
+        let (at, _) = remaining
+            .iter()
+            .enumerate()
+            .filter(|&(_, &i)| ready_at(i) <= t)
+            .max_by(|&(_, &a), &(_, &b)| {
+                legs[a]
+                    .1
+                    .partial_cmp(&legs[b].1)
+                    .expect("leg seconds are never NaN")
+                    .then(
+                        ready_at(b)
+                            .partial_cmp(&ready_at(a))
+                            .expect("slice_ready is never NaN"),
+                    )
+                    .then(b.cmp(&a))
+            })
+            .expect("a leg is ready after waiting");
+        let i = remaining.swap_remove(at);
+        let (slice, secs) = legs[i];
+        t += secs;
+        next_ready[slice] = t + jitter.latency(slice, round, secs);
+        total += secs;
+    }
+    (t, total, wait)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_and_displays() {
+        assert_eq!("sim".parse::<BackendKind>().unwrap(), BackendKind::Sim);
+        assert_eq!(
+            "threads".parse::<BackendKind>().unwrap(),
+            BackendKind::Threads
+        );
+        assert!("virtual".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::Threads.to_string(), "threads");
+        assert_eq!(BackendKind::default(), BackendKind::Sim);
+    }
+
+    #[test]
+    fn sim_backend_matches_the_ssp_clock_arithmetic() {
+        let mut b = SimBackend::new(StragglerModel::None);
+        b.begin_run(100.0, 2, 0);
+        let at = b.on_dispatch(1.0, 0.0);
+        assert_eq!(at, 101.0);
+        let out = b.resolve_round(&RoundObs {
+            round: 0,
+            dispatched_at: at,
+            compute_secs: &[2.0, 5.0],
+            comm_secs: 0.5,
+            pull_secs: 0.25,
+            wall_now: 0.0,
+        });
+        // coord = max(101, 101 + 5 + 0.5) + 0.25
+        assert!((out.now - 106.75).abs() < 1e-12);
+        assert!((b.now() - 106.75).abs() < 1e-12);
+        // BSP would charge 5 + 0.5 + 0.25 = 5.75, exactly what the
+        // just-dispatched pipeline paid: nothing hidden on round one
+        assert!(out.wait_saved_secs.abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_backend_rotation_gates_on_slice_readiness() {
+        let mut b = SimBackend::new(StragglerModel::None);
+        b.begin_run(0.0, 2, 2);
+        let at = b.on_dispatch(0.0, 0.0);
+        let legs = vec![vec![(0usize, 1.0f64)], vec![(1usize, 3.0f64)]];
+        let mut waits = Vec::new();
+        let out = b.resolve_rot_round(
+            &RotObs {
+                round: 0,
+                dispatched_at: at,
+                timed_legs: &legs,
+                comm_secs: 0.0,
+                pull_secs: 0.0,
+                order: QueueOrder::Strict,
+                jitter: &HandoffJitter::None,
+                wall_now: 0.0,
+            },
+            &mut waits,
+        );
+        assert_eq!(waits, vec![0.0, 0.0]);
+        assert!((out.now - 3.0).abs() < 1e-12);
+        // slice 0's next sweep is gated at 1.0, slice 1's at 3.0
+        assert_eq!(b.slice_ready, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn thread_backend_tracks_the_wall_clock_monotonically() {
+        let mut b = ThreadBackend::new(StragglerModel::None, 0.0);
+        b.begin_run(50.0, 3, 0);
+        assert_eq!(b.on_dispatch(123.0, 0.25), 50.25); // schedule secs ignored
+        let out = b.resolve_round(&RoundObs {
+            round: 0,
+            dispatched_at: 50.25,
+            compute_secs: &[0.1, 0.1, 0.1],
+            comm_secs: 0.0,
+            pull_secs: 0.0,
+            wall_now: 1.0,
+        });
+        assert!((out.now - 51.0).abs() < 1e-12);
+        // a stale (earlier) wall reading never rewinds the clock
+        assert_eq!(b.on_dispatch(0.0, 0.5), 51.0);
+    }
+
+    #[test]
+    fn thread_backend_realizes_straggler_skew_physically() {
+        let b = ThreadBackend::new(
+            StragglerModel::Fixed(vec![3.0, 1.0]),
+            0.002,
+        );
+        assert_eq!(b.physical_slowdown(0, 7, 2), 3.0);
+        assert_eq!(b.physical_slowdown(1, 7, 2), 1.0);
+        assert_eq!(b.pace_floor_secs(), 0.002);
+        let mut secs = vec![1.0, 1.0];
+        b.account_compute(&mut secs, 0);
+        assert_eq!(secs, vec![3.0, 1.0], "accounting mirrors the sleeps");
+    }
+
+    #[test]
+    fn thread_backend_rot_resolution_reports_zero_handoff_waits() {
+        let mut b = ThreadBackend::new(StragglerModel::None, 0.0);
+        b.begin_run(0.0, 2, 4);
+        let legs = vec![vec![(0usize, 0.5f64)], vec![(1usize, 0.25f64)]];
+        let mut waits = Vec::new();
+        let out = b.resolve_rot_round(
+            &RotObs {
+                round: 0,
+                dispatched_at: 0.0,
+                timed_legs: &legs,
+                comm_secs: 0.0,
+                pull_secs: 0.0,
+                order: QueueOrder::Strict,
+                jitter: &HandoffJitter::None,
+                wall_now: 0.75,
+            },
+            &mut waits,
+        );
+        assert_eq!(waits, vec![0.0, 0.0]);
+        assert!((out.now - 0.75).abs() < 1e-12);
+    }
+}

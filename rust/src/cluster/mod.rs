@@ -11,13 +11,21 @@
 //! max over workers of (measured compute time + modelled link time).  This
 //! makes the scalability curves (Fig 10) independent of how many physical
 //! cores this build machine happens to have.
+//!
+//! Timing is pluggable ([`exec::ExecBackend`]): the default
+//! [`exec::SimBackend`] models the cluster clock as above, while
+//! [`exec::ThreadBackend`] (`--backend threads`) realizes stragglers as
+//! real worker-thread sleeps and reports measured wall-clock instead —
+//! same protocol, same app calls, physically-real concurrency.
 
 pub mod clock;
+pub mod exec;
 pub mod memory;
 pub mod network;
 pub mod pool;
 
 pub use clock::{StragglerModel, VirtualClock};
+pub use exec::{make_backend, BackendKind, ExecBackend};
 pub use memory::MemoryTracker;
 pub use network::{HandoffJitter, NetworkConfig, NetworkModel};
 pub use pool::{router_spin_ms, ForwardQueue, PendingRound, WorkerPool};

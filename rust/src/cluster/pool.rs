@@ -9,6 +9,7 @@
 //! barrier correct (see coordinator::engine).
 
 use crate::kvstore::LeaseToken;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -65,8 +66,10 @@ pub fn thread_cpu_secs() -> f64 {
 /// Bounded wait for a [`ForwardQueue::take`] before it gives up, in
 /// milliseconds.  Env-tunable (`STRADS_ROUTER_SPIN_MS`, parsed once) so a
 /// scheduling bug that loses a handoff fails CI loudly after a bounded
-/// spin instead of hanging the job; the default is generous enough for
-/// any legitimate predecessor sweep.
+/// condvar-parked wait instead of hanging the job; the default is
+/// generous enough for any legitimate predecessor sweep.  (The name is
+/// historical: waits used to busy-spin; they now park on per-slot
+/// condvars and this is purely the deadline.)
 pub fn router_spin_ms() -> u64 {
     use std::sync::OnceLock;
     static MS: OnceLock<u64> = OnceLock::new();
@@ -91,18 +94,47 @@ pub fn router_spin_ms() -> u64 {
 /// deadlock fails a test run loudly instead of hanging it;
 /// [`ForwardQueue::try_take`] is the non-blocking poll availability-ordered
 /// consumers use to sweep whichever slice landed first.
+///
+/// Storage is **sharded per slot** — one mutex + condvar per slice — so
+/// under real concurrency (`--backend threads`) P workers touching P
+/// different slices never contend on a global lock.  Multi-slot sweeps
+/// ([`crate::kvstore::SliceRouter`]'s reordered disciplines) park on a
+/// queue-wide deposit **epoch** ([`ForwardQueue::epoch`] /
+/// [`ForwardQueue::wait_any_until`]) instead of polling: every deposit
+/// bumps the epoch, so "wait until anything lands" is one condvar wait,
+/// race-free as long as the epoch is read *before* scanning the slots.
+/// All time consumers spend parked is metered
+/// ([`ForwardQueue::blocked_secs`] → `SspStats::router_block_secs`).
+#[derive(Debug)]
+struct Shard<T> {
+    slot: Mutex<Option<(T, u64)>>,
+    ready: Condvar,
+}
+
 #[derive(Debug)]
 pub struct ForwardQueue<T> {
-    slots: Mutex<Vec<Option<(T, u64)>>>,
-    ready: Condvar,
+    shards: Vec<Shard<T>>,
+    /// Queue-wide deposit counter; bumped on every deposit.
+    epoch: Mutex<u64>,
+    /// Notified on every deposit: the park point for multi-slot sweeps.
+    any_ready: Condvar,
+    /// Nanoseconds consumers have spent parked on this queue's condvars.
+    blocked_nanos: AtomicU64,
     n_slots: usize,
 }
 
 impl<T> ForwardQueue<T> {
     pub fn new(n_slots: usize) -> Self {
         ForwardQueue {
-            slots: Mutex::new((0..n_slots).map(|_| None).collect()),
-            ready: Condvar::new(),
+            shards: (0..n_slots)
+                .map(|_| Shard {
+                    slot: Mutex::new(None),
+                    ready: Condvar::new(),
+                })
+                .collect(),
+            epoch: Mutex::new(0),
+            any_ready: Condvar::new(),
+            blocked_nanos: AtomicU64::new(0),
             n_slots,
         }
     }
@@ -111,16 +143,64 @@ impl<T> ForwardQueue<T> {
         self.n_slots
     }
 
+    fn note_blocked(&self, d: Duration) {
+        self.blocked_nanos
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Cumulative seconds consumers have spent parked on this queue
+    /// (slot takes and any-deposit sweeps).  ~0 in single-threaded
+    /// drivers; the measured handoff contention under `--backend
+    /// threads`.
+    pub fn blocked_secs(&self) -> f64 {
+        self.blocked_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Current deposit epoch.  Read it **before** scanning slots: a
+    /// deposit that lands between the scan and a
+    /// [`ForwardQueue::wait_any_until`] bumps the epoch, so the wait
+    /// returns immediately instead of missing the wakeup.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().expect("forward queue poisoned")
+    }
+
+    /// Park until any deposit lands (epoch moves past `seen`) or
+    /// `deadline` passes; returns the epoch at wakeup.  The condvar
+    /// analogue of one sweep-poll backoff.
+    pub fn wait_any_until(&self, seen: u64, deadline: std::time::Instant) -> u64 {
+        let mut e = self.epoch.lock().expect("forward queue poisoned");
+        while *e == seen {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self
+                .any_ready
+                .wait_timeout(e, deadline - now)
+                .expect("forward queue poisoned");
+            self.note_blocked(now.elapsed());
+            e = guard;
+        }
+        *e
+    }
+
     /// Deposit `(item, version)` into `slot`.  Panics if the slot is
     /// occupied (the previous handoff was never consumed).
     pub fn deposit(&self, slot: usize, item: T, version: u64) {
-        let mut slots = self.slots.lock().expect("forward queue poisoned");
-        assert!(
-            slots[slot].is_none(),
-            "forward queue slot {slot} occupied (unconsumed handoff)"
-        );
-        slots[slot] = Some((item, version));
-        self.ready.notify_all();
+        {
+            let mut held =
+                self.shards[slot].slot.lock().expect("forward queue poisoned");
+            assert!(
+                held.is_none(),
+                "forward queue slot {slot} occupied (unconsumed handoff)"
+            );
+            *held = Some((item, version));
+            self.shards[slot].ready.notify_all();
+        }
+        // shard lock released before the epoch bump: no path holds both
+        let mut e = self.epoch.lock().expect("forward queue poisoned");
+        *e += 1;
+        self.any_ready.notify_all();
     }
 
     /// Block until `slot` holds exactly `version`, then take it.  Returns
@@ -160,16 +240,16 @@ impl<T> ForwardQueue<T> {
         timeout: Duration,
     ) -> Option<(T, u64)> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut slots = self.slots.lock().expect("forward queue poisoned");
+        let shard = &self.shards[slot];
+        let mut held = shard.slot.lock().expect("forward queue poisoned");
         loop {
-            let held = slots[slot].as_ref().map(|(_, v)| *v);
-            if let Some(v) = held {
+            if let Some(v) = held.as_ref().map(|(_, v)| *v) {
                 assert!(
                     v <= version,
                     "forward queue slot {slot}: expected version {version}, found {v}"
                 );
                 if v == version {
-                    return slots[slot].take();
+                    return held.take();
                 }
                 // v < version: the older deposit's own consumer is still
                 // on its way; our deposit comes after — keep waiting
@@ -178,11 +258,12 @@ impl<T> ForwardQueue<T> {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self
+            let (guard, _) = shard
                 .ready
-                .wait_timeout(slots, deadline - now)
+                .wait_timeout(held, deadline - now)
                 .expect("forward queue poisoned");
-            slots = guard;
+            self.note_blocked(now.elapsed());
+            held = guard;
         }
     }
 
@@ -193,16 +274,16 @@ impl<T> ForwardQueue<T> {
     /// a **newer** parked version panics, exactly as [`ForwardQueue::take`]
     /// would: the awaited deposit can no longer arrive.
     pub fn try_take(&self, slot: usize, version: u64) -> Option<(T, u64)> {
-        let mut slots = self.slots.lock().expect("forward queue poisoned");
-        let held = slots[slot].as_ref().map(|(_, v)| *v);
-        match held {
+        let mut held =
+            self.shards[slot].slot.lock().expect("forward queue poisoned");
+        match held.as_ref().map(|(_, v)| *v) {
             Some(v) => {
                 assert!(
                     v <= version,
                     "forward queue slot {slot}: expected version {version}, found {v}"
                 );
                 if v == version {
-                    slots[slot].take()
+                    held.take()
                 } else {
                     None
                 }
@@ -214,19 +295,30 @@ impl<T> ForwardQueue<T> {
     /// Version of the slot's parked deposit, without consuming it
     /// (`None` while the handoff is in flight).
     pub fn parked_version(&self, slot: usize) -> Option<u64> {
-        self.slots.lock().expect("forward queue poisoned")[slot]
+        self.shards[slot]
+            .slot
+            .lock()
+            .expect("forward queue poisoned")
             .as_ref()
             .map(|(_, v)| *v)
     }
 
     /// Non-blocking removal of whatever the slot currently holds.
     pub fn reclaim(&self, slot: usize) -> Option<(T, u64)> {
-        self.slots.lock().expect("forward queue poisoned")[slot].take()
+        self.shards[slot]
+            .slot
+            .lock()
+            .expect("forward queue poisoned")
+            .take()
     }
 
     /// Inspect a slot without consuming it.
     pub fn with_slot<R>(&self, slot: usize, f: impl FnOnce(Option<&(T, u64)>) -> R) -> R {
-        f(self.slots.lock().expect("forward queue poisoned")[slot].as_ref())
+        f(self.shards[slot]
+            .slot
+            .lock()
+            .expect("forward queue poisoned")
+            .as_ref())
     }
 }
 
@@ -533,6 +625,59 @@ mod tests {
         // a deposit after the timeout is still takeable
         q.deposit(0, 9, 0);
         assert_eq!(q.take_for(0, 0, Duration::from_millis(20)), Some((9, 0)));
+    }
+
+    #[test]
+    fn forward_queue_epoch_counts_deposits_and_wakes_waiters() {
+        use std::sync::Arc;
+        let q: Arc<ForwardQueue<u8>> = Arc::new(ForwardQueue::new(3));
+        assert_eq!(q.epoch(), 0);
+        q.deposit(0, 1, 0);
+        q.deposit(2, 2, 0);
+        assert_eq!(q.epoch(), 2);
+        // a waiter parked on the pre-deposit epoch wakes on the next one
+        let q2 = Arc::clone(&q);
+        let seen = q.epoch();
+        let h = std::thread::spawn(move || {
+            q2.wait_any_until(
+                seen,
+                std::time::Instant::now() + Duration::from_secs(5),
+            )
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.deposit(1, 3, 0);
+        assert_eq!(h.join().expect("waiter"), 3);
+    }
+
+    #[test]
+    fn forward_queue_wait_any_returns_immediately_on_missed_deposit() {
+        // the scan-then-park race: if a deposit landed after the caller
+        // read the epoch, the wait must not block at all
+        let q: ForwardQueue<u8> = ForwardQueue::new(1);
+        let seen = q.epoch();
+        q.deposit(0, 9, 0);
+        let t0 = std::time::Instant::now();
+        let e = q.wait_any_until(seen, t0 + Duration::from_secs(5));
+        assert_eq!(e, seen + 1);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not park");
+    }
+
+    #[test]
+    fn forward_queue_wait_any_times_out_at_the_deadline() {
+        let q: ForwardQueue<u8> = ForwardQueue::new(1);
+        let t0 = std::time::Instant::now();
+        let e = q.wait_any_until(q.epoch(), t0 + Duration::from_millis(20));
+        assert_eq!(e, 0, "no deposit ever landed");
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert!(q.blocked_secs() > 0.0, "parked time is metered");
+    }
+
+    #[test]
+    fn forward_queue_meters_blocked_time_on_slot_takes() {
+        let q: ForwardQueue<u8> = ForwardQueue::new(1);
+        assert_eq!(q.blocked_secs(), 0.0, "nothing parked yet");
+        let _ = q.take_for(0, 0, Duration::from_millis(25));
+        assert!(q.blocked_secs() >= 0.02, "the timed-out wait was parked");
     }
 
     #[test]

@@ -53,10 +53,21 @@
 //!
 //! The engine owns the virtual cluster clock, making reported scaling
 //! behaviour independent of the physical core count of the build machine.
+//!
+//! All three pipelines are written once against a pluggable
+//! [`ExecBackend`] ([`RunConfig::backend`], CLI `--backend sim|threads`):
+//! [`BackendKind::Sim`] (default) resolves round times through the
+//! virtual-time model above, bit-identical to the pre-backend engine,
+//! while [`BackendKind::Threads`] realizes straggler skew as real sleeps
+//! on the worker threads and resolves against the wall clock — same
+//! protocol, same app calls, physically-real concurrency (see
+//! `crate::cluster::exec` for the equivalence contract).
 
+use crate::cluster::exec::{RotObs, RoundObs};
 use crate::cluster::{
-    HandoffJitter, MemoryTracker, NetworkConfig, NetworkModel, PendingRound,
-    StragglerModel, VirtualClock, WorkerPool,
+    make_backend, BackendKind, ExecBackend, HandoffJitter, MemoryTracker,
+    NetworkConfig, NetworkModel, PendingRound, StragglerModel, VirtualClock,
+    WorkerPool,
 };
 use crate::kvstore::{LeaseToken, VersionVector};
 use crate::metrics::{Recorder, SspStats};
@@ -233,6 +244,19 @@ pub trait StradsApp {
     /// (never-skip apps).
     fn set_skip_policy(&mut self, _skip: SkipPolicy) {}
 
+    /// Cumulative seconds this app's workers have spent *physically
+    /// blocked* on the slice data plane (parked on
+    /// [`crate::kvstore::SliceRouter`] condvars waiting for a handoff to
+    /// land).  The engine differences it across each run into
+    /// `SspStats::router_block_secs` / [`RunResult::router_block_secs`].
+    /// Always ~0 under the sim backend (every slice is parked when a
+    /// single-threaded driver arrives); under `--backend threads` it is
+    /// the measured contention on the router.  Non-rotation apps keep the
+    /// default.
+    fn data_plane_block_secs(&self) -> f64 {
+        0.0
+    }
+
     /// Generic p2p payloads ([`StradsApp::p2p_payloads`]): the worker that
     /// receives `worker`'s payload ring-wise.  The single source of truth
     /// for the orientation is
@@ -310,6 +334,16 @@ pub struct RunConfig {
     /// gates (default: none; handoffs land instantly, bit-identical
     /// timelines).
     pub handoff_jitter: HandoffJitter,
+    /// Execution backend: `Sim` (default) models cluster time on the
+    /// virtual clock; `Threads` realizes straggler skew as real sleeps on
+    /// the worker threads and reports measured wall-clock (see
+    /// `crate::cluster::exec`).
+    pub backend: BackendKind,
+    /// `Threads` backend only: minimum physical seconds one push occupies
+    /// (0.0 = off).  Benches raise it so wall-clock arm orderings rest on
+    /// injected compute rather than scheduler noise at smoke scale; the
+    /// `STRADS_THREADS_PACE_MS` env var raises it further for CLI runs.
+    pub threads_pace_secs: f64,
 }
 
 impl Default for RunConfig {
@@ -326,6 +360,8 @@ impl Default for RunConfig {
             queue_order: QueueOrder::Strict,
             skip_policy: SkipPolicy::Never,
             handoff_jitter: HandoffJitter::None,
+            backend: BackendKind::Sim,
+            threads_pace_secs: 0.0,
         }
     }
 }
@@ -355,6 +391,11 @@ pub struct RunResult {
     /// Worst per-slice coverage debt observed (collected rounds minus
     /// grants of the laggiest slice; 0 when nothing skips).
     pub max_coverage_debt: u64,
+    /// Seconds workers spent *physically blocked* on the slice data plane
+    /// over this run ([`StradsApp::data_plane_block_secs`] delta).  ~0
+    /// under the sim backend; the measured router contention under
+    /// `--backend threads`.
+    pub router_block_secs: f64,
     /// Set if a worker exceeded the modelled memory capacity.
     pub oom: Option<String>,
     /// Pipeline accounting (observed staleness, straggler wait hidden) for
@@ -373,32 +414,26 @@ struct InFlight<P> {
     pending: PendingRound<P>,
 }
 
-/// Mutable virtual-time state threaded through the SSP collect half.
-struct SspClockState {
-    /// Coordinator's absolute virtual time.
-    coord_now: f64,
-    /// Per-worker availability timestamps.
-    worker_free: Vec<f64>,
-}
-
-/// Mutable virtual-time state for the rotation pipeline: like
-/// [`SspClockState`] plus a **per-slice** availability timeline, which
-/// gates when each slice's ring handoff lands downstream.
-struct RotClockState {
-    coord_now: f64,
-    worker_free: Vec<f64>,
-    /// Per-slice availability (slice-indexed): when the slice's most
-    /// recent sweep finished — i.e. when its holder forwarded it.  A
-    /// worker's sweep of slice `a` cannot start before `slice_ready[a]`;
-    /// other slices of the same queue are *not* gated on it, which is what
-    /// lets a U > P worker sample one slice while another is in flight.
-    slice_ready: Vec<f64>,
+/// Rotation-pipeline skip/debt bookkeeping (backend-independent — grant
+/// counts are protocol facts, not timing).
+struct RotProgress {
     /// Per-slice grant count over the collected rounds: `collected -
     /// grants[a]` is slice `a`'s observed coverage debt
     /// ([`SkipPolicy::Defer`] skips; identically zero under `Never`).
     grants: Vec<u64>,
     /// Rounds collected so far.
     collected: u64,
+}
+
+/// Per-worker physical slowdown factors for one round's dispatch (empty
+/// under the sim backend: skew there is accounted, never slept).
+fn round_slowdowns(backend: &dyn ExecBackend, round: u64, n: usize) -> Vec<f64> {
+    if backend.kind() == BackendKind::Sim {
+        return Vec::new();
+    }
+    (0..n)
+        .map(|p| backend.physical_slowdown(p, round, n))
+        .collect()
 }
 
 /// The coordinator: owns the app, the worker pool, and all accounting.
@@ -409,6 +444,8 @@ pub struct Engine<A: StradsApp> {
     clock: VirtualClock,
     memory: MemoryTracker,
     straggler: StragglerModel,
+    backend_kind: BackendKind,
+    threads_pace_secs: f64,
 }
 
 impl<A: StradsApp> Engine<A> {
@@ -421,11 +458,28 @@ impl<A: StradsApp> Engine<A> {
             clock: VirtualClock::new(),
             memory: MemoryTracker::new(n, cfg.mem_capacity),
             straggler: cfg.straggler.clone(),
+            backend_kind: cfg.backend,
+            threads_pace_secs: cfg.threads_pace_secs,
         }
     }
 
     pub fn n_workers(&self) -> usize {
         self.pool.n_workers()
+    }
+
+    /// The execution backend this engine's runs use.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend_kind
+    }
+
+    /// Fresh backend for one `run_*` loop (runs accumulate on the virtual
+    /// clock, so each run re-anchors via `begin_run`).
+    fn make_run_backend(&self) -> Box<dyn ExecBackend> {
+        make_backend(
+            self.backend_kind,
+            self.straggler.clone(),
+            self.threads_pace_secs,
+        )
     }
 
     pub fn app(&self) -> &A {
@@ -477,7 +531,7 @@ impl<A: StradsApp> Engine<A> {
     /// dispatch half of the pipeline).  Returns the pending handle and the
     /// measured schedule seconds.
     fn dispatch_round(&mut self, round_idx: u64) -> (PendingRound<A::Partial>, f64) {
-        self.dispatch_round_inner(round_idx, false, false)
+        self.dispatch_round_inner(round_idx, false, false, &[], 0.0)
     }
 
     /// `routed`: rotation mode — tasks carry only scheduling metadata plus
@@ -486,11 +540,19 @@ impl<A: StradsApp> Engine<A> {
     /// pending round for collect-time verification.  `may_skip`: the run's
     /// effective [`SkipPolicy`] is `Defer`, so a worker's lease queue may
     /// legitimately be empty this round (all its slices deferred).
+    /// `slowdowns` / `pace_floor`: the threaded backend's physical
+    /// straggler realization — worker `p`'s push sleeps until
+    /// `max(measured, pace_floor) × slowdowns[p]` wall seconds have
+    /// elapsed (empty slice / 0.0 = no pacing, the sim path, closure
+    /// unchanged).  Sleeps never contaminate the *measured* compute
+    /// seconds: the pool measures per-thread CPU time.
     fn dispatch_round_inner(
         &mut self,
         round_idx: u64,
         routed: bool,
         may_skip: bool,
+        slowdowns: &[f64],
+        pace_floor: f64,
     ) -> (PendingRound<A::Partial>, f64) {
         let sw = Stopwatch::start();
         let tasks = self.app.schedule(round_idx);
@@ -519,16 +581,35 @@ impl<A: StradsApp> Engine<A> {
         let slots = RefCell::new(tasks.into_iter().map(Some).collect::<Vec<_>>());
         let mut pending = self.pool.dispatch(|p| {
             let task = slots.borrow_mut()[p].take().expect("one task per worker");
-            move |ws: &mut A::WorkerState| A::push(ws, task)
+            let slow = slowdowns.get(p).copied().unwrap_or(1.0);
+            move |ws: &mut A::WorkerState| {
+                if slow > 1.0 || pace_floor > 0.0 {
+                    // threaded backend: realize this worker's straggler
+                    // multiple physically, on this thread's wall clock
+                    let sw = Stopwatch::start();
+                    let out = A::push(ws, task);
+                    let target = sw.secs().max(pace_floor) * slow;
+                    let remain = target - sw.secs();
+                    if remain > 0.0 {
+                        std::thread::sleep(
+                            std::time::Duration::from_secs_f64(remain),
+                        );
+                    }
+                    out
+                } else {
+                    A::push(ws, task)
+                }
+            }
         });
         pending.set_leases(leases);
         (pending, schedule_secs)
     }
 
     /// Wait for a dispatched round, aggregate (`pull`) and broadcast the
-    /// sync (the collect half).  Returns the straggler-scaled per-worker
-    /// compute seconds, whether a sync was committed, and the measured
-    /// pull seconds.
+    /// sync (the collect half).  Returns the raw measured per-worker
+    /// compute seconds (callers fold in the straggler model via
+    /// [`ExecBackend::account_compute`]), whether a sync was committed,
+    /// and the measured pull seconds.
     fn collect_round(
         &mut self,
         round_idx: u64,
@@ -542,7 +623,6 @@ impl<A: StradsApp> Engine<A> {
             partials.push(partial);
             compute_secs.push(secs);
         }
-        self.straggler.scale(&mut compute_secs, round_idx);
 
         let pull_sw = Stopwatch::start();
         let sync_msg = self.app.pull(round_idx, partials);
@@ -565,11 +645,44 @@ impl<A: StradsApp> Engine<A> {
     /// Returns the measured coordinator-side seconds (schedule+pull).
     pub fn round(&mut self, round_idx: u64) -> f64 {
         let (pending, schedule_secs) = self.dispatch_round(round_idx);
-        let (compute_secs, _, pull_secs) = self.collect_round(round_idx, pending);
+        let (mut compute_secs, _, pull_secs) = self.collect_round(round_idx, pending);
+        self.straggler.scale(&mut compute_secs, round_idx);
         let comm = self.network.round_time_and_reset();
         let coord_secs = schedule_secs + pull_secs;
         self.clock.advance_round(&compute_secs, comm, coord_secs);
         coord_secs
+    }
+
+    /// One BSP round under the threaded backend: physical straggler
+    /// sleeps at dispatch, wall-clock resolution at collect.  The sim
+    /// path keeps using [`Engine::round`], whose virtual-clock arithmetic
+    /// is untouched (bit-identical goldens).
+    fn round_with(
+        &mut self,
+        round_idx: u64,
+        backend: &mut dyn ExecBackend,
+        wall: &Stopwatch,
+    ) -> f64 {
+        let n = self.pool.n_workers();
+        let slow = round_slowdowns(backend, round_idx, n);
+        let pace = backend.pace_floor_secs();
+        let (pending, schedule_secs) =
+            self.dispatch_round_inner(round_idx, false, false, &slow, pace);
+        let dispatched_at = backend.on_dispatch(schedule_secs, wall.secs());
+        let (mut compute_secs, _, pull_secs) =
+            self.collect_round(round_idx, pending);
+        backend.account_compute(&mut compute_secs, round_idx);
+        let comm = self.network.round_time_and_reset();
+        let out = backend.resolve_round(&RoundObs {
+            round: round_idx,
+            dispatched_at,
+            compute_secs: &compute_secs,
+            comm_secs: comm,
+            pull_secs,
+            wall_now: wall.secs(),
+        });
+        self.clock.advance_round_to(out.now);
+        schedule_secs + pull_secs
     }
 
     /// Query the current global objective (not charged to the clock: the
@@ -630,6 +743,17 @@ impl<A: StradsApp> Engine<A> {
     /// engine, so default trajectories are bit-identical.
     fn run_bsp(&mut self, cfg: &RunConfig) -> RunResult {
         let wall = Stopwatch::start();
+        let block0 = self.app.data_plane_block_secs();
+        // the sim path stays on Engine::round (untouched virtual-clock
+        // arithmetic); only the threaded backend routes through round_with
+        let mut backend = match self.backend_kind {
+            BackendKind::Sim => None,
+            BackendKind::Threads => {
+                let mut b = self.make_run_backend();
+                b.begin_run(self.clock.seconds(), self.pool.n_workers(), 0);
+                Some(b)
+            }
+        };
         let mut recorder = Recorder::new(&cfg.label);
         let mut last_obj = self.evaluate();
         recorder.record(0, self.clock.seconds(), wall.secs(), last_obj);
@@ -637,7 +761,14 @@ impl<A: StradsApp> Engine<A> {
 
         let mut rounds_run = 0;
         for r in 0..cfg.max_rounds {
-            self.round(r);
+            match backend.as_deref_mut() {
+                Some(b) => {
+                    self.round_with(r, b, &wall);
+                }
+                None => {
+                    self.round(r);
+                }
+            }
             rounds_run = r + 1;
             if (r + 1) % cfg.eval_every == 0 || r + 1 == cfg.max_rounds {
                 let obj = self.evaluate();
@@ -669,6 +800,8 @@ impl<A: StradsApp> Engine<A> {
             total_handoff_wait_secs: 0.0,
             total_skipped_legs: 0,
             max_coverage_debt: 0,
+            router_block_secs: (self.app.data_plane_block_secs() - block0)
+                .max(0.0),
             recorder,
             oom,
             ssp: None,
@@ -690,6 +823,9 @@ impl<A: StradsApp> Engine<A> {
     fn run_ssp(&mut self, cfg: &RunConfig, staleness: u64) -> RunResult {
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
+        let block0 = self.app.data_plane_block_secs();
+        let mut backend = self.make_run_backend();
+        backend.begin_run(self.clock.seconds(), n, 0);
         let mut recorder = Recorder::new(&cfg.label);
         let mut stats = SspStats::new();
         let mut vv = VersionVector::new(n);
@@ -704,23 +840,27 @@ impl<A: StradsApp> Engine<A> {
         let mut oom = None;
 
         let mut window: VecDeque<InFlight<A::Partial>> = VecDeque::new();
-        let mut clk = SspClockState {
-            coord_now: self.clock.seconds(),
-            worker_free: vec![self.clock.seconds(); n],
-        };
 
         let mut rounds_run = 0;
         'rounds: for r in 0..cfg.max_rounds {
             while window.len() > staleness as usize {
                 self.ssp_collect_oldest(
-                    &mut window, &mut clk, &mut vv, &mut stats, staleness,
+                    &mut window,
+                    backend.as_mut(),
+                    &wall,
+                    &mut vv,
+                    &mut stats,
+                    staleness,
                 );
             }
-            let (pending, schedule_secs) = self.dispatch_round(r);
-            clk.coord_now += schedule_secs;
+            let slow = round_slowdowns(backend.as_ref(), r, n);
+            let pace = backend.pace_floor_secs();
+            let (pending, schedule_secs) =
+                self.dispatch_round_inner(r, false, false, &slow, pace);
+            let dispatched_at = backend.on_dispatch(schedule_secs, wall.secs());
             window.push_back(InFlight {
                 round: r,
-                dispatched_at: clk.coord_now,
+                dispatched_at,
                 version_at_dispatch: vv.committed(),
                 pending,
             });
@@ -730,7 +870,12 @@ impl<A: StradsApp> Engine<A> {
                 // drain the pipeline so the evaluation sees committed state
                 while !window.is_empty() {
                     self.ssp_collect_oldest(
-                        &mut window, &mut clk, &mut vv, &mut stats, staleness,
+                        &mut window,
+                        backend.as_mut(),
+                        &wall,
+                        &mut vv,
+                        &mut stats,
+                        staleness,
                     );
                 }
                 let obj = self.evaluate();
@@ -761,9 +906,17 @@ impl<A: StradsApp> Engine<A> {
         // drain anything left in flight (early break paths)
         while !window.is_empty() {
             self.ssp_collect_oldest(
-                &mut window, &mut clk, &mut vv, &mut stats, staleness,
+                &mut window,
+                backend.as_mut(),
+                &wall,
+                &mut vv,
+                &mut stats,
+                staleness,
             );
         }
+        let router_block =
+            (self.app.data_plane_block_secs() - block0).max(0.0);
+        stats.router_block_secs = router_block;
 
         RunResult {
             rounds_run,
@@ -777,6 +930,7 @@ impl<A: StradsApp> Engine<A> {
             total_handoff_wait_secs: 0.0, // SSP shares state; no handoffs
             total_skipped_legs: 0,
             max_coverage_debt: 0,
+            router_block_secs: router_block,
             recorder,
             oom,
             ssp: Some(stats),
@@ -784,12 +938,14 @@ impl<A: StradsApp> Engine<A> {
     }
 
     /// Collect the oldest in-flight round: verify the staleness bound,
-    /// pull+commit, resolve virtual time against the per-worker
-    /// availability model, and record the barrier wait the pipeline hid.
+    /// pull+commit, resolve run time through the backend (the sim backend
+    /// replays the per-worker availability model), and record the barrier
+    /// wait the pipeline hid.
     fn ssp_collect_oldest(
         &mut self,
         window: &mut VecDeque<InFlight<A::Partial>>,
-        clk: &mut SspClockState,
+        backend: &mut dyn ExecBackend,
+        wall: &Stopwatch,
         vv: &mut VersionVector,
         stats: &mut SspStats,
         staleness: u64,
@@ -798,7 +954,7 @@ impl<A: StradsApp> Engine<A> {
         // record what this round's pushes actually saw: the oldest
         // in-flight round ran with the commits visible at its dispatch
         // (FIFO mailboxes applied exactly those syncs first)
-        for p in 0..clk.worker_free.len() {
+        for p in 0..self.pool.n_workers() {
             vv.apply(p, inflight.version_at_dispatch);
         }
         // bounded-staleness invariant: every commit these pushes missed
@@ -810,29 +966,23 @@ impl<A: StradsApp> Engine<A> {
                 inflight.round
             );
         }
-        let (compute_secs, committed, pull_secs) =
+        let (mut compute_secs, committed, pull_secs) =
             self.collect_round(inflight.round, inflight.pending);
         if committed {
             vv.commit();
         }
-        // resolve virtual time: a worker started this round as soon as
-        // both it and the dispatch were ready
-        let mut finish_max = 0.0f64;
-        let mut compute_max = 0.0f64;
-        for (p, &secs) in compute_secs.iter().enumerate() {
-            let start = clk.worker_free[p].max(inflight.dispatched_at);
-            let finish = start + secs;
-            clk.worker_free[p] = finish;
-            finish_max = finish_max.max(finish);
-            compute_max = compute_max.max(secs);
-        }
+        backend.account_compute(&mut compute_secs, inflight.round);
         let comm = self.network.round_time_and_reset();
-        let before = clk.coord_now;
-        clk.coord_now = clk.coord_now.max(finish_max + comm) + pull_secs;
-        // what a BSP barrier would have added on top of the pipeline
-        let bsp_increment = compute_max + comm + pull_secs;
-        stats.record(observed, bsp_increment - (clk.coord_now - before));
-        self.clock.advance_round_to(clk.coord_now);
+        let out = backend.resolve_round(&RoundObs {
+            round: inflight.round,
+            dispatched_at: inflight.dispatched_at,
+            compute_secs: &compute_secs,
+            comm_secs: comm,
+            pull_secs,
+            wall_now: wall.secs(),
+        });
+        stats.record(observed, out.wait_saved_secs);
+        self.clock.advance_round_to(out.now);
     }
 
     /// Collect half of the rotation pipeline: partials' doc stats ride the
@@ -853,6 +1003,7 @@ impl<A: StradsApp> Engine<A> {
         round_idx: u64,
         pending: PendingRound<A::Partial>,
         order: QueueOrder,
+        backend: &dyn ExecBackend,
     ) -> (Vec<Vec<(usize, f64)>>, f64) {
         let n = self.pool.n_workers();
         let granted = pending.leases().to_vec();
@@ -926,7 +1077,7 @@ impl<A: StradsApp> Engine<A> {
             partials.push(partial);
             compute_secs.push(secs);
         }
-        self.straggler.scale(&mut compute_secs, round_idx);
+        backend.account_compute(&mut compute_secs, round_idx);
         // apportion each worker's scaled seconds across its queue: weights
         // (e.g. tokens sampled) proxy per-slice compute; a weightless
         // round splits evenly
@@ -999,6 +1150,7 @@ impl<A: StradsApp> Engine<A> {
     fn run_rotation(&mut self, cfg: &RunConfig, depth: u64) -> RunResult {
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
+        let block0 = self.app.data_plane_block_secs();
         let mut recorder = Recorder::new(&cfg.label);
         let mut stats = SspStats::new();
         let mut vv = VersionVector::new(n);
@@ -1037,10 +1189,9 @@ impl<A: StradsApp> Engine<A> {
         let mut oom = None;
 
         let mut window: VecDeque<InFlight<A::Partial>> = VecDeque::new();
-        let mut clk = RotClockState {
-            coord_now: self.clock.seconds(),
-            worker_free: vec![self.clock.seconds(); n],
-            slice_ready: vec![self.clock.seconds(); n_slices],
+        let mut backend = self.make_run_backend();
+        backend.begin_run(self.clock.seconds(), n, n_slices);
+        let mut prog = RotProgress {
             grants: vec![0; n_slices],
             collected: 0,
         };
@@ -1049,16 +1200,25 @@ impl<A: StradsApp> Engine<A> {
         'rounds: for r in 0..cfg.max_rounds {
             while window.len() >= depth as usize {
                 self.rot_collect_oldest(
-                    &mut window, &mut clk, &mut vv, &mut stats, depth, order,
+                    &mut window,
+                    backend.as_mut(),
+                    &wall,
+                    &mut prog,
+                    &mut vv,
+                    &mut stats,
+                    depth,
+                    order,
                     &cfg.handoff_jitter,
                 );
             }
+            let slow = round_slowdowns(backend.as_ref(), r, n);
+            let pace = backend.pace_floor_secs();
             let (pending, schedule_secs) =
-                self.dispatch_round_inner(r, true, may_skip);
-            clk.coord_now += schedule_secs;
+                self.dispatch_round_inner(r, true, may_skip, &slow, pace);
+            let dispatched_at = backend.on_dispatch(schedule_secs, wall.secs());
             window.push_back(InFlight {
                 round: r,
-                dispatched_at: clk.coord_now,
+                dispatched_at,
                 version_at_dispatch: vv.committed(),
                 pending,
             });
@@ -1069,8 +1229,15 @@ impl<A: StradsApp> Engine<A> {
                 // settled before the objective reads them
                 while !window.is_empty() {
                     self.rot_collect_oldest(
-                        &mut window, &mut clk, &mut vv, &mut stats, depth,
-                        order, &cfg.handoff_jitter,
+                        &mut window,
+                        backend.as_mut(),
+                        &wall,
+                        &mut prog,
+                        &mut vv,
+                        &mut stats,
+                        depth,
+                        order,
+                        &cfg.handoff_jitter,
                     );
                 }
                 let obj = self.evaluate();
@@ -1101,10 +1268,22 @@ impl<A: StradsApp> Engine<A> {
         // drain anything left in flight (early break paths)
         while !window.is_empty() {
             self.rot_collect_oldest(
-                &mut window, &mut clk, &mut vv, &mut stats, depth, order,
+                &mut window,
+                backend.as_mut(),
+                &wall,
+                &mut prog,
+                &mut vv,
+                &mut stats,
+                depth,
+                order,
                 &cfg.handoff_jitter,
             );
         }
+        // sample the data-plane block counter before end_rotation
+        // reclaims (and drops) the router
+        let router_block =
+            (self.app.data_plane_block_secs() - block0).max(0.0);
+        stats.router_block_secs = router_block;
         self.app.end_rotation();
 
         RunResult {
@@ -1119,6 +1298,7 @@ impl<A: StradsApp> Engine<A> {
             total_handoff_wait_secs: stats.total_handoff_wait_secs(),
             total_skipped_legs: stats.skipped_legs,
             max_coverage_debt: stats.max_coverage_debt,
+            router_block_secs: router_block,
             recorder,
             oom,
             ssp: Some(stats),
@@ -1126,13 +1306,16 @@ impl<A: StradsApp> Engine<A> {
     }
 
     /// Collect the oldest in-flight rotation round: verify the pipeline
-    /// bound, pull+settle, and resolve virtual time against both the
-    /// worker availability model and the ring handoff gates.
+    /// bound, pull+settle, and resolve run time through the backend (the
+    /// sim backend replays both the worker availability model and the
+    /// ring handoff gates).
     #[allow(clippy::too_many_arguments)]
     fn rot_collect_oldest(
         &mut self,
         window: &mut VecDeque<InFlight<A::Partial>>,
-        clk: &mut RotClockState,
+        backend: &mut dyn ExecBackend,
+        wall: &Stopwatch,
+        prog: &mut RotProgress,
         vv: &mut VersionVector,
         stats: &mut SspStats,
         depth: u64,
@@ -1140,7 +1323,7 @@ impl<A: StradsApp> Engine<A> {
         jitter: &HandoffJitter,
     ) {
         let inflight = window.pop_front().expect("window not empty");
-        for p in 0..clk.worker_free.len() {
+        for p in 0..self.pool.n_workers() {
             vv.apply(p, inflight.version_at_dispatch);
         }
         let observed = vv.max_staleness();
@@ -1150,8 +1333,12 @@ impl<A: StradsApp> Engine<A> {
                 inflight.round
             );
         }
-        let (timed_legs, pull_secs) =
-            self.rot_collect_round(inflight.round, inflight.pending, order);
+        let (timed_legs, pull_secs) = self.rot_collect_round(
+            inflight.round,
+            inflight.pending,
+            order,
+            &*backend,
+        );
         // every rotation pull commits coordinator state (settled leases +
         // refreshed sums) even without a sync broadcast
         vv.commit();
@@ -1159,183 +1346,51 @@ impl<A: StradsApp> Engine<A> {
         // skip/debt accounting: a slice absent from every queue this round
         // was deferred (SkipPolicy::Defer); its coverage debt is the gap
         // between rounds collected and grants observed
-        clk.collected += 1;
+        prog.collected += 1;
         let mut granted_legs = 0u64;
         for legs in &timed_legs {
             for &(slice, _) in legs {
-                clk.grants[slice] += 1;
+                prog.grants[slice] += 1;
                 granted_legs += 1;
             }
         }
-        stats.record_skips(clk.grants.len() as u64 - granted_legs);
-        let debt_now = clk
+        stats.record_skips(prog.grants.len() as u64 - granted_legs);
+        let debt_now = prog
             .grants
             .iter()
-            .map(|&g| clk.collected - g)
+            .map(|&g| prog.collected - g)
             .max()
             .unwrap_or(0);
         stats.note_coverage_debt(debt_now);
 
-        // replay each worker's queue against the per-slice availability
-        // timeline: a leg starts when the worker reaches it AND the
-        // slice's previous holder's handoff has landed.  All gates read
-        // the previous round's timeline (every slice moves every round),
-        // so updates land in a fresh copy.
-        let mut next_ready = clk.slice_ready.clone();
-        let mut finish_max = 0.0f64;
-        let mut compute_max = 0.0f64;
-        for (p, legs) in timed_legs.iter().enumerate() {
-            let start = clk.worker_free[p].max(inflight.dispatched_at);
-            let (finish, total, wait) = replay_queue(
-                order,
-                start,
-                legs,
-                &clk.slice_ready,
-                &mut next_ready,
-                inflight.round,
-                jitter,
-            );
-            stats.record_handoff_wait(p, wait);
-            clk.worker_free[p] = finish;
-            finish_max = finish_max.max(finish);
-            compute_max = compute_max.max(total);
-        }
-        clk.slice_ready = next_ready;
         let comm = self.network.round_time_and_reset();
-        let before = clk.coord_now;
-        clk.coord_now = clk.coord_now.max(finish_max + comm) + pull_secs;
-        let bsp_increment = compute_max + comm + pull_secs;
-        stats.record(observed, bsp_increment - (clk.coord_now - before));
-        self.clock.advance_round_to(clk.coord_now);
-    }
-}
-
-/// Replay one worker's rotation queue against the per-slice availability
-/// timeline for one round.  `legs` are `(slice_id, seconds)` in granted
-/// (ring-position) order; each leg starts at
-/// `max(worker time, slice_ready[slice])` and runs for its seconds, and
-/// its handoff lands downstream at `finish + jitter latency`.  A queue
-/// emptied by [`SkipPolicy::Defer`] replays to `(start, 0, 0)` and leaves
-/// every skipped slice's readiness untouched.
-///
-/// [`QueueOrder::Strict`] services the legs as given — arithmetic
-/// identical, term for term, to the fixed-order engine.
-/// [`QueueOrder::Availability`] services them earliest-ready-first (ties
-/// broken by queue position): with per-leg durations independent of
-/// order, sequencing a single machine's jobs by release time minimizes
-/// its makespan, so a worker's round never finishes later than under any
-/// fixed order — the opportunistic reordering is pure win in the model,
-/// exactly as `try_take` polling is on the data plane.
-/// [`QueueOrder::Dynamic`] services, among the legs whose slices have
-/// already landed, the one with the most compute first (seconds proxy
-/// token mass; ties toward the earlier release, then queue position),
-/// waiting only when nothing is ready.  Both reordering disciplines are
-/// *non-idling*, so a worker's round finishes at the same time under
-/// either — Dynamic changes only **when each slice's handoff releases**,
-/// front-loading the heavy slices so the sweeps that gate the most
-/// downstream compute land earliest (the mass × downstream-benefit
-/// score; property-tested against Availability's finish in
-/// `tests/rotation_properties.rs`).
-///
-/// Public so the regression/property suites can pin the model itself
-/// (golden replays, never-worse properties) without driving a full
-/// engine.
-///
-/// Returns `(finish time, total compute seconds, handoff wait seconds)`;
-/// the wait is the idle time the worker spent blocked on not-yet-landed
-/// slices (the slack the reordering disciplines exist to reclaim).
-pub fn replay_queue(
-    order: QueueOrder,
-    start: f64,
-    legs: &[(usize, f64)],
-    slice_ready: &[f64],
-    next_ready: &mut [f64],
-    round: u64,
-    jitter: &HandoffJitter,
-) -> (f64, f64, f64) {
-    if order == QueueOrder::Dynamic {
-        return replay_queue_dynamic(
-            start, legs, slice_ready, next_ready, round, jitter,
+        let mut waits = Vec::with_capacity(timed_legs.len());
+        let out = backend.resolve_rot_round(
+            &RotObs {
+                round: inflight.round,
+                dispatched_at: inflight.dispatched_at,
+                timed_legs: &timed_legs,
+                comm_secs: comm,
+                pull_secs,
+                order,
+                jitter,
+                wall_now: wall.secs(),
+            },
+            &mut waits,
         );
+        for (p, wait) in waits.into_iter().enumerate() {
+            stats.record_handoff_wait(p, wait);
+        }
+        stats.record(observed, out.wait_saved_secs);
+        self.clock.advance_round_to(out.now);
     }
-    let mut idx: Vec<usize> = (0..legs.len()).collect();
-    if order == QueueOrder::Availability {
-        idx.sort_by(|&a, &b| {
-            slice_ready[legs[a].0]
-                .partial_cmp(&slice_ready[legs[b].0])
-                .expect("slice_ready is never NaN")
-                .then(a.cmp(&b))
-        });
-    }
-    let mut t = start;
-    let mut total = 0.0f64;
-    let mut wait = 0.0f64;
-    for &i in &idx {
-        let (slice, secs) = legs[i];
-        wait += (slice_ready[slice] - t).max(0.0);
-        let leg_start = t.max(slice_ready[slice]);
-        t = leg_start + secs;
-        next_ready[slice] = t + jitter.latency(slice, round, secs);
-        total += secs;
-    }
-    (t, total, wait)
 }
 
-/// The [`QueueOrder::Dynamic`] half of [`replay_queue`]: event-driven —
-/// the ready set depends on the worker's own progress, so the order
-/// cannot be fixed up front the way Availability's earliest-release sort
-/// can.
-fn replay_queue_dynamic(
-    start: f64,
-    legs: &[(usize, f64)],
-    slice_ready: &[f64],
-    next_ready: &mut [f64],
-    round: u64,
-    jitter: &HandoffJitter,
-) -> (f64, f64, f64) {
-    let mut remaining: Vec<usize> = (0..legs.len()).collect();
-    let mut t = start;
-    let mut total = 0.0f64;
-    let mut wait = 0.0f64;
-    while !remaining.is_empty() {
-        let ready_at = |i: usize| slice_ready[legs[i].0];
-        if remaining.iter().all(|&i| ready_at(i) > t) {
-            // nothing parked: wait for the earliest release
-            let tmin = remaining
-                .iter()
-                .map(|&i| ready_at(i))
-                .fold(f64::INFINITY, f64::min);
-            wait += tmin - t;
-            t = tmin;
-        }
-        // heaviest ready leg first; ties toward the earlier release, then
-        // queue position (mirrors SliceRouter::take_heaviest's data-plane
-        // tie-break: arrival stamp, then grant index)
-        let (at, _) = remaining
-            .iter()
-            .enumerate()
-            .filter(|&(_, &i)| ready_at(i) <= t)
-            .max_by(|&(_, &a), &(_, &b)| {
-                legs[a]
-                    .1
-                    .partial_cmp(&legs[b].1)
-                    .expect("leg seconds are never NaN")
-                    .then(
-                        ready_at(b)
-                            .partial_cmp(&ready_at(a))
-                            .expect("slice_ready is never NaN"),
-                    )
-                    .then(b.cmp(&a))
-            })
-            .expect("a leg is ready after waiting");
-        let i = remaining.swap_remove(at);
-        let (slice, secs) = legs[i];
-        t += secs;
-        next_ready[slice] = t + jitter.latency(slice, round, secs);
-        total += secs;
-    }
-    (t, total, wait)
-}
+// The virtual-time queue-replay model lives with the backends now
+// (`SimBackend` is its only engine-side consumer); re-exported here so
+// `coordinator::replay_queue` and the property suites keep their import
+// path.
+pub use crate::cluster::exec::replay_queue;
 
 #[cfg(test)]
 mod tests {

@@ -11,4 +11,5 @@ pub use engine::{
     replay_queue, Engine as StradsEngine, ExecutionMode, HandoffLeg,
     RunConfig, RunResult, StradsApp,
 };
+pub use crate::cluster::BackendKind;
 pub use crate::scheduler::rotation::{QueueOrder, SkipPolicy};

@@ -7,7 +7,7 @@
 
 use crate::baselines::{AlsConfig, AlsMf, YahooLda, YahooLdaConfig};
 use crate::cluster::{HandoffJitter, NetworkConfig, StragglerModel};
-use crate::coordinator::{ExecutionMode, QueueOrder, RunConfig};
+use crate::coordinator::{BackendKind, ExecutionMode, QueueOrder, RunConfig};
 use crate::datagen::mf_ratings::{self, MfGenConfig};
 use crate::figures::common::{
     figure_corpus, lasso_engine_corr, lda_engine, lda_engine_sliced,
@@ -182,6 +182,11 @@ pub struct ModeComparison {
     pub ssp_skipped_legs: u64,
     pub bsp_max_coverage_debt: u64,
     pub ssp_max_coverage_debt: u64,
+    /// Seconds workers spent physically parked on the slice data plane
+    /// per arm (~0 under the sim backend; the measured router/ledger
+    /// contention under `--backend threads`).
+    pub bsp_router_block_secs: f64,
+    pub ssp_router_block_secs: f64,
 }
 
 /// Lasso + MF arms of the BSP-vs-SSP comparison under a rotating
@@ -536,6 +541,117 @@ pub fn run_mf_block_comparison(
     comparison_with("MF-block-rotation", ccd, sgd, true)
 }
 
+/// The wall-clock validation arm: the same LDA rotation workload run on
+/// **both** execution backends, BSP rotation vs pipelined rotation each
+/// time.  The virtual-time model predicts pipelined < BSP under a
+/// rotating straggler; the threaded runs realize the same straggler as
+/// real worker-thread sleeps, so the prediction must also hold in
+/// measured wall-clock — that cross-check is what the fig9 bench gates.
+pub struct ThreadsComparison {
+    pub app: String,
+    pub n_workers: usize,
+    /// Virtual seconds under the sim backend.
+    pub sim_bsp_secs: f64,
+    pub sim_pipelined_secs: f64,
+    /// Measured wall-clock seconds under `--backend threads`.
+    pub wall_bsp_secs: f64,
+    pub wall_pipelined_secs: f64,
+    /// Final objectives per backend: the depth-1-free Strict/Never
+    /// protocol is timing-independent, so each mode's threaded objective
+    /// must equal its sim objective bit-for-bit.
+    pub sim_bsp_objective: f64,
+    pub sim_pipelined_objective: f64,
+    pub bsp_objective: f64,
+    pub pipelined_objective: f64,
+    /// Measured seconds threaded workers parked on the slice data plane.
+    pub bsp_router_block_secs: f64,
+    pub pipelined_router_block_secs: f64,
+}
+
+/// Run the threads-vs-sim validation arm on the LDA rotation workload:
+/// four runs (BSP rotation and depth-`depth` pipelined rotation, each
+/// under [`BackendKind::Sim`] and [`BackendKind::Threads`]) with a
+/// rotating `straggler_factor`x skew.  `pace_secs` floors each threaded
+/// worker's per-leg compute so the physically-realized skew dominates
+/// scheduler noise at figure scale (the sim runs ignore it).
+pub fn run_threads_comparison(
+    cfg: &Fig9Config,
+    depth: u64,
+    straggler_factor: f64,
+    pace_secs: f64,
+) -> ThreadsComparison {
+    let corpus =
+        figure_corpus(sc(3_000, cfg.scale), sc(300, cfg.scale), cfg.seed);
+    let k = sc(16, cfg.scale);
+    let sweeps = 4u64;
+    let straggler = StragglerModel::Rotating { factor: straggler_factor };
+    let run = |mode: ExecutionMode, backend: BackendKind, label: &str| {
+        let run_cfg = RunConfig {
+            max_rounds: sweeps * cfg.n_workers as u64,
+            eval_every: 2 * cfg.n_workers as u64,
+            network: NetworkConfig::ideal(), // isolate the compute skew
+            label: label.into(),
+            mode,
+            straggler: straggler.clone(),
+            backend,
+            threads_pace_secs: match backend {
+                BackendKind::Threads => pace_secs,
+                BackendKind::Sim => 0.0,
+            },
+            ..Default::default()
+        };
+        let mut e = lda_engine(&corpus, k, cfg.n_workers, cfg.seed, &run_cfg);
+        e.run(&run_cfg)
+    };
+    let pipe = ExecutionMode::Rotation { depth };
+    let sim_bsp = run(ExecutionMode::Bsp, BackendKind::Sim, "LDA-BSP-sim");
+    let sim_pipe = run(pipe, BackendKind::Sim, "LDA-pipelined-sim");
+    let thr_bsp =
+        run(ExecutionMode::Bsp, BackendKind::Threads, "LDA-BSP-threads");
+    let thr_pipe = run(pipe, BackendKind::Threads, "LDA-pipelined-threads");
+    ThreadsComparison {
+        app: "LDA-rotation-threads".into(),
+        n_workers: cfg.n_workers,
+        sim_bsp_secs: sim_bsp.virtual_secs,
+        sim_pipelined_secs: sim_pipe.virtual_secs,
+        wall_bsp_secs: thr_bsp.wall_secs,
+        wall_pipelined_secs: thr_pipe.wall_secs,
+        sim_bsp_objective: sim_bsp.final_objective,
+        sim_pipelined_objective: sim_pipe.final_objective,
+        bsp_objective: thr_bsp.final_objective,
+        pipelined_objective: thr_pipe.final_objective,
+        bsp_router_block_secs: thr_bsp.router_block_secs,
+        pipelined_router_block_secs: thr_pipe.router_block_secs,
+    }
+}
+
+/// Print the threads-vs-sim validation arm.
+pub fn print_threads_comparison(c: &ThreadsComparison) {
+    println!(
+        "\n== Figure 9 (threads arm): {} on {} real worker threads ==",
+        c.app, c.n_workers
+    );
+    println!(
+        "  sim (virtual):  BSP {:.4}s vs pipelined {:.4}s",
+        c.sim_bsp_secs, c.sim_pipelined_secs
+    );
+    println!(
+        "  threads (wall): BSP {:.4}s vs pipelined {:.4}s",
+        c.wall_bsp_secs, c.wall_pipelined_secs
+    );
+    println!(
+        "  router block:   BSP {:.4}s vs pipelined {:.4}s",
+        c.bsp_router_block_secs, c.pipelined_router_block_secs
+    );
+    println!(
+        "  objectives:     BSP {:.6} (sim {:.6}), pipelined {:.6} (sim {:.6})",
+        c.bsp_objective,
+        c.sim_bsp_objective,
+        c.pipelined_objective,
+        c.sim_pipelined_objective
+    );
+}
+
 fn comparison(
     app: &str,
     bsp: crate::coordinator::RunResult,
@@ -577,6 +693,8 @@ fn comparison_with(
         ssp_skipped_legs: ssp.total_skipped_legs,
         bsp_max_coverage_debt: bsp.max_coverage_debt,
         ssp_max_coverage_debt: ssp.max_coverage_debt,
+        bsp_router_block_secs: bsp.router_block_secs,
+        ssp_router_block_secs: ssp.router_block_secs,
         bsp: bsp.recorder,
         ssp: ssp.recorder,
         mean_staleness,
@@ -625,6 +743,10 @@ pub fn print_mode_comparison(c: &ModeComparison) {
         c.bsp_max_coverage_debt,
         c.ssp_skipped_legs,
         c.ssp_max_coverage_debt
+    );
+    println!(
+        "  router block: {:.4}s vs {:.4}s",
+        c.bsp_router_block_secs, c.ssp_router_block_secs
     );
 }
 
@@ -822,6 +944,40 @@ mod tests {
         assert_eq!(c.bsp_handoffs, 0);
         // the shared-objective tolerance assert lives in the fig9 bench,
         // where the validated scales make it stable
+    }
+
+    #[test]
+    fn threads_comparison_matches_sim_objectives() {
+        // tiny scale, no pace floor: this test gates *state equivalence*
+        // (Strict/Never rotation is timing-independent, so each mode's
+        // threaded objective must equal its sim objective bit-for-bit);
+        // the wall-clock ordering assert lives in the fig9 bench, where
+        // the pace floor makes it stable
+        let c = run_threads_comparison(&tiny(), 2, 4.0, 0.0);
+        assert_eq!(
+            c.bsp_objective.to_bits(),
+            c.sim_bsp_objective.to_bits(),
+            "threaded BSP diverged from sim: {} vs {}",
+            c.bsp_objective,
+            c.sim_bsp_objective
+        );
+        assert_eq!(
+            c.pipelined_objective.to_bits(),
+            c.sim_pipelined_objective.to_bits(),
+            "threaded pipelined diverged from sim: {} vs {}",
+            c.pipelined_objective,
+            c.sim_pipelined_objective
+        );
+        // the virtual-time model's prediction at this scale
+        assert!(
+            c.sim_pipelined_secs < c.sim_bsp_secs,
+            "sim predicts pipelined < BSP ({} vs {})",
+            c.sim_pipelined_secs,
+            c.sim_bsp_secs
+        );
+        // wall-clock times are measured and positive
+        assert!(c.wall_bsp_secs > 0.0 && c.wall_pipelined_secs > 0.0);
+        assert!(c.bsp_router_block_secs >= 0.0);
     }
 
     #[test]

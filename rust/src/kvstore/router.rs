@@ -120,16 +120,17 @@ impl<T: Send> SliceRouter<T> {
     /// cross-checks it against the granted token at collect time).  An
     /// *older* parked version is pipeline lag (its own consumer is still
     /// on its way) and the wait continues; a *newer* one panics (the
-    /// awaited handoff can no longer arrive).  Panics — with
+    /// awaited handoff can no longer arrive).  The wait parks on the
+    /// slot's condvar (no busy-spin); it panics — with
     /// slice/version/chain-head context — when the handoff never lands
-    /// within the bounded [`crate::cluster::router_spin_ms`] spin: a lost
-    /// handoff is a scheduling bug that must fail CI loudly, not hang the
-    /// job.
+    /// within the bounded [`crate::cluster::router_spin_ms`] deadline: a
+    /// lost handoff is a scheduling bug that must fail CI loudly, not hang
+    /// the job.
     pub fn take(&self, slice_id: usize, version: u64) -> (T, u64) {
         self.take_for(slice_id, version, Duration::from_millis(router_spin_ms()))
     }
 
-    /// [`SliceRouter::take`] with an explicit spin bound (tests drive the
+    /// [`SliceRouter::take`] with an explicit deadline (tests drive the
     /// lost-handoff panic without waiting out the process-wide default).
     pub fn take_for(
         &self,
@@ -200,12 +201,18 @@ impl<T: Send> SliceRouter<T> {
         })
     }
 
-    /// The shared poll/deadline/panic skeleton under both reordered-take
-    /// disciplines: spin until `pick_best` names a parked grant to take,
+    /// The shared scan/park/panic skeleton under both reordered-take
+    /// disciplines: scan until `pick_best` names a parked grant to take,
     /// panic (listing every pending grant) when nothing lands within
     /// `timeout`.  `pick_best` sees the router and the grant list and
     /// returns the index of its chosen *parked* entry, or `None` while
     /// everything is in flight.
+    ///
+    /// Between scans the caller **parks** on the queue's deposit epoch
+    /// ([`crate::cluster::ForwardQueue::wait_any_until`]) rather than
+    /// busy-polling: the epoch is read *before* each scan, so a deposit
+    /// landing between the scan and the park bumps the epoch past the
+    /// snapshot and the park returns immediately — no missed wakeup.
     fn spin_take(
         &self,
         grants: &[(usize, u64)],
@@ -219,6 +226,9 @@ impl<T: Send> SliceRouter<T> {
         );
         let deadline = std::time::Instant::now() + timeout;
         loop {
+            // epoch snapshot BEFORE the scan: any deposit after this point
+            // makes the park below return at once
+            let seen = self.queue.epoch();
             if let Some(i) = pick_best(self, grants) {
                 let (slice_id, version) = grants[i];
                 let (data, consumed) = self
@@ -239,7 +249,7 @@ impl<T: Send> SliceRouter<T> {
                     stalled.join(", ")
                 );
             }
-            std::thread::sleep(Duration::from_micros(50));
+            self.queue.wait_any_until(seen, deadline);
         }
     }
 
@@ -354,7 +364,29 @@ impl<T: Send> SliceRouter<T> {
     pub fn with_slice<R>(&self, slice_id: usize, f: impl FnOnce(Option<&T>) -> R) -> R {
         self.queue.with_slot(slice_id, |slot| f(slot.map(|(data, _)| data)))
     }
+
+    /// Cumulative seconds consumers spent *physically blocked* on this
+    /// router's data plane (parked on slot condvars in
+    /// [`SliceRouter::take_for`], or on the deposit epoch in the
+    /// reordered-take sweeps).  ~0 under the single-threaded sim driver,
+    /// which only ever takes parked slices; under `--backend threads` it
+    /// is the measured handoff contention surfaced as
+    /// `SspStats::router_block_secs`.
+    pub fn block_secs(&self) -> f64 {
+        self.queue.blocked_secs()
+    }
 }
+
+// The threaded backend shares one router by `Arc` between the coordinator
+// and every worker thread, and ships `LeaseToken`s across worker mailboxes
+// — all three must stay `Send + Sync`.  Checked at compile time so a
+// future `Rc`/`Cell` regression fails the build, not a stress run.
+const _: () = {
+    const fn assert_send_sync<S: Send + Sync>() {}
+    assert_send_sync::<SliceRouter<Vec<u32>>>();
+    assert_send_sync::<LeaseLedger>();
+    assert_send_sync::<LeaseToken>();
+};
 
 /// The per-slice availability signal a skip-capable rotation schedule
 /// feeds [`crate::scheduler::RotationScheduler::next_round_grants`]:
@@ -566,6 +598,32 @@ mod tests {
         let (idx, data, _) =
             r.take_heaviest(&grants, Duration::from_millis(100));
         assert_eq!((idx, data), (1, vec![5, 6]));
+    }
+
+    #[test]
+    fn parked_sweep_wakes_on_a_cross_thread_deposit() {
+        use std::sync::Arc;
+        // a reordered-take sweep parked on the deposit epoch must wake
+        // when another thread forwards the awaited slice — and the park
+        // time must show up in the router's block counter
+        let r: Arc<SliceRouter<Vec<u32>>> = Arc::new(SliceRouter::new(2));
+        assert_eq!(r.block_secs(), 0.0);
+        let producer = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                r.seed(1, vec![4, 5, 6], 0);
+            })
+        };
+        let (idx, data, consumed) =
+            r.take_earliest(&[(0, 0), (1, 0)], Duration::from_secs(5));
+        producer.join().expect("producer thread panicked");
+        assert_eq!((idx, data, consumed), (1, vec![4, 5, 6], 0));
+        assert!(
+            r.block_secs() > 0.0,
+            "parked wait must be metered: got {}",
+            r.block_secs()
+        );
     }
 
     #[test]

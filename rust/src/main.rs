@@ -1,7 +1,7 @@
 //! STRADS command-line interface.
 //!
 //! ```text
-//! strads train --app lasso|mf|lda [--workers N] [--rounds R] ...
+//! strads train --app lasso|mf|lda [--workers N] [--rounds R] [--backend sim|threads] ...
 //! strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
 //! strads artifacts [--dir artifacts]          # inspect the AOT manifest
 //! strads datagen --kind lasso|mf|lda ...      # summarize a generated set
@@ -37,6 +37,10 @@ USAGE:
       --workers N     simulated machines (default 8)
       --rounds R      engine rounds (default 200)
       --net 1g|40g|ideal   network model (default 40g)
+      --backend sim|threads   execution backend (default sim: virtual-time
+                          clock model; threads: real OS-thread workers,
+                          stragglers realized as wall-clock sleeps —
+                          STRADS_THREADS_PACE_MS floors per-round compute)
       --seed S
       lasso: --features J --samples N --u U --lambda L --random (RR baseline)
       mf:    --users N --items M --rank K --lambda L
@@ -89,10 +93,20 @@ fn cmd_train(args: &Args) {
         "ideal" => NetworkConfig::ideal(),
         _ => NetworkConfig::gbps40(),
     };
+    let backend_name = args.str_or(
+        "backend",
+        &cfg_file.get("cluster", "backend").unwrap_or("sim").to_string(),
+    );
+    let backend: strads::coordinator::BackendKind =
+        backend_name.parse().unwrap_or_else(|e: String| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
     let run_cfg = RunConfig {
         max_rounds: rounds,
         eval_every: (rounds / 20).max(1),
         network,
+        backend,
         label: format!("{app}-train"),
         ..Default::default()
     };

@@ -28,6 +28,13 @@ pub struct SspStats {
     /// collected minus grants of the laggiest slice) — the engine-side
     /// cross-check of the scheduler's `CoverageDebtLedger` budget.
     pub max_coverage_debt: u64,
+    /// Seconds workers spent *physically blocked* on the slice data plane
+    /// (parked on router condvars waiting for a handoff).  ~0 under the
+    /// sim backend, where a single-threaded driver only ever takes parked
+    /// slices; under `--backend threads` it is the measured router/ledger
+    /// contention — the baseline future lock-granularity work is judged
+    /// against.
+    pub router_block_secs: f64,
 }
 
 impl SspStats {
@@ -110,6 +117,7 @@ mod tests {
         assert_eq!(s.total_handoff_wait_secs(), 0.0);
         assert_eq!(s.skipped_legs, 0);
         assert_eq!(s.max_coverage_debt, 0);
+        assert_eq!(s.router_block_secs, 0.0);
     }
 
     #[test]

@@ -12,10 +12,27 @@
 //! so `tests/rotation_properties.rs` can sweep the whole mode matrix and
 //! the per-feature files (`rotation_handoff.rs`,
 //! `availability_rotation.rs`) reduce to thin wrappers.
+//!
+//! **The availability signal is backend-supplied.**  In the engine the
+//! skip-capable schedule polls the *live* data plane
+//! ([`crate::kvstore::rotation_availability`]), so what "available" means
+//! depends on the execution backend
+//! ([`crate::cluster::exec::ExecBackend`]): under the sim backend the
+//! single-threaded driver services rounds between dispatches and the
+//! signal is a deterministic function of the replayed timeline, while
+//! under `--backend threads` it reflects how far real worker threads have
+//! physically progressed.  [`drive_protocol`] therefore takes the signal
+//! as a caller-supplied closure (any pattern is exercisable,
+//! deterministically), and [`drive_protocol_threaded`] reads the live
+//! router exactly as the threaded engine does — between them the property
+//! sweeps cover both regimes.
 
-use crate::kvstore::{LeaseLedger, LeaseToken, SliceRouter};
+use crate::kvstore::{rotation_availability, LeaseLedger, LeaseToken, SliceRouter};
 use crate::scheduler::rotation::{QueueOrder, SkipPolicy};
 use crate::scheduler::RotationScheduler;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// What a [`drive_protocol`] run observed (for callers to assert coverage
 /// or chain-depth properties beyond the built-in checks).
@@ -166,6 +183,243 @@ pub fn drive_protocol(
         skipped: skipped_total,
         rounds,
     })
+}
+
+/// The expected (never-mutated) payload of slice `a` — both protocol
+/// drivers seed `vec![a as u32; a + 1]` and the threaded driver re-checks
+/// it at every take: the handoff plane must move payloads, not transform
+/// them, so any corruption under real concurrency is token-mass loss.
+fn protocol_payload(a: usize) -> Vec<u32> {
+    vec![a as u32; a + 1]
+}
+
+/// [`drive_protocol`] with **real OS worker threads**: each round spawns
+/// one thread per granted worker, the threads exchange slices through the
+/// shared [`SliceRouter`] under the given service `order` (Strict blocks
+/// per leg in queue order via `take_for`; Availability/Dynamic sweep via
+/// `take_earliest`/`take_heaviest`), and up to `depth` rounds run
+/// concurrently (the oldest is joined + settled once the window fills) —
+/// the same grant→take→forward→settle windowing the threaded engine runs,
+/// minus the app math.
+///
+/// Checks, on top of [`drive_protocol`]'s invariants: every take hands
+/// over exactly the granted version (no version forks under any
+/// interleaving), every payload is bit-intact at every hop (token-mass
+/// conservation), and at the end no lease is outstanding and every chain
+/// head equals its grant count.  Under [`SkipPolicy::Defer`] the
+/// availability signal is the **live** router
+/// ([`rotation_availability`]), so skips are genuinely timing-dependent —
+/// the invariants must hold for whatever interleaving this host produces.
+///
+/// Returns `Err(message)` on the first violation, including a worker
+/// thread panic (joined and stringified).
+pub fn drive_protocol_threaded(
+    p: usize,
+    u: usize,
+    rounds: u64,
+    depth: u64,
+    skip: SkipPolicy,
+    order: QueueOrder,
+) -> Result<ProtocolOutcome, String> {
+    assert!(depth >= 1, "window depth must be at least 1");
+    let router: Arc<SliceRouter<Vec<u32>>> = Arc::new(SliceRouter::new(u));
+    let mut ledger = LeaseLedger::new(u);
+    for a in 0..u {
+        router.seed(a, protocol_payload(a), 0);
+        ledger.seed(a, 0);
+    }
+    let mut sched = RotationScheduler::with_workers(u, p);
+    sched.set_skip_policy(skip);
+    sched.set_queue_order(order);
+    let mut seen = vec![vec![false; u]; p];
+    let mut grants_per_slice = vec![0u64; u];
+    let mut skipped_total = 0u64;
+    // the per-leg take deadline: generous enough for a loaded CI host,
+    // bounded enough that a genuinely lost handoff fails, not hangs
+    let take_timeout = Duration::from_secs(30);
+
+    type RoundHandles =
+        Vec<std::thread::JoinHandle<Result<Vec<LeaseToken>, String>>>;
+    let mut window: VecDeque<RoundHandles> = VecDeque::new();
+
+    // join the oldest in-flight round's workers and settle their leases
+    fn collect_oldest(
+        window: &mut VecDeque<RoundHandles>,
+        ledger: &mut LeaseLedger,
+    ) -> Result<(), String> {
+        let handles = window.pop_front().expect("window not empty");
+        let mut errs = Vec::new();
+        let mut tokens = Vec::new();
+        for h in handles {
+            match h.join() {
+                Ok(Ok(t)) => tokens.extend(t),
+                Ok(Err(e)) => errs.push(e),
+                Err(panic) => errs.push(format!(
+                    "worker thread panicked: {:?}",
+                    panic
+                        .downcast_ref::<String>()
+                        .map(String::as_str)
+                        .or_else(|| panic.downcast_ref::<&str>().copied())
+                        .unwrap_or("<non-string payload>")
+                )),
+            }
+        }
+        if let Some(e) = errs.into_iter().next() {
+            return Err(e);
+        }
+        for token in tokens {
+            ledger.settle(&token);
+        }
+        Ok(())
+    }
+
+    for r in 0..rounds {
+        let avail = match skip {
+            SkipPolicy::Never => vec![true; u],
+            SkipPolicy::Defer { .. } => {
+                rotation_availability(Some(router.as_ref()), &ledger)
+            }
+        };
+        let grants = sched.next_round_grants(|a| avail[a]);
+        let mut granted: Vec<usize> =
+            grants.iter().flatten().map(|l| l.slice_id).collect();
+        let n_granted = granted.len();
+        granted.sort_unstable();
+        granted.dedup();
+        if granted.len() != n_granted {
+            return Err(format!(
+                "round {r}: a slice was granted twice (u={u}, p={p})"
+            ));
+        }
+        let skipped = u - n_granted;
+        skipped_total += skipped as u64;
+        if skip == SkipPolicy::Never && skipped != 0 {
+            return Err(format!(
+                "round {r}: {skipped} slices missing from a Never round"
+            ));
+        }
+        let mut handles: RoundHandles = Vec::with_capacity(p);
+        for (w, q) in grants.iter().enumerate() {
+            let mut legs: Vec<(usize, u64)> = Vec::with_capacity(q.len());
+            for leg in q {
+                if leg.dest_worker >= p {
+                    return Err(format!(
+                        "round {r}: slice {} forwarded to nonexistent \
+                         worker {}",
+                        leg.slice_id, leg.dest_worker
+                    ));
+                }
+                seen[w][leg.slice_id] = true;
+                grants_per_slice[leg.slice_id] += 1;
+                legs.push((leg.slice_id, ledger.grant(leg.slice_id)));
+            }
+            if legs.is_empty() {
+                continue;
+            }
+            let router = Arc::clone(&router);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("strads-prot-{w}"))
+                    .spawn(move || {
+                        worker_round(&router, legs, order, take_timeout)
+                    })
+                    .expect("spawn protocol worker"),
+            );
+        }
+        window.push_back(handles);
+        while window.len() as u64 >= depth {
+            collect_oldest(&mut window, &mut ledger)?;
+        }
+    }
+    while !window.is_empty() {
+        collect_oldest(&mut window, &mut ledger)?;
+    }
+
+    if ledger.max_outstanding() != 0 {
+        return Err(format!(
+            "{} leases left outstanding",
+            ledger.max_outstanding()
+        ));
+    }
+    for a in 0..u {
+        if router.version(a) != grants_per_slice[a] {
+            return Err(format!(
+                "slice {a}: chain head {} after {} grants",
+                router.version(a),
+                grants_per_slice[a]
+            ));
+        }
+        // final conservation check: the payload survived every hop intact
+        let ok = router.with_slice(a, |s| s == Some(&protocol_payload(a)));
+        if !ok {
+            return Err(format!(
+                "slice {a}: payload corrupted across {} handoffs",
+                grants_per_slice[a]
+            ));
+        }
+    }
+    Ok(ProtocolOutcome {
+        seen,
+        grants: grants_per_slice,
+        skipped: skipped_total,
+        rounds,
+    })
+}
+
+/// One worker thread's round under [`drive_protocol_threaded`]: take each
+/// granted leg per the service discipline, verify version + payload, and
+/// forward to the ring successor.  Returns the consumed lease tokens for
+/// the driver to settle at collect time.
+fn worker_round(
+    router: &SliceRouter<Vec<u32>>,
+    legs: Vec<(usize, u64)>,
+    order: QueueOrder,
+    take_timeout: Duration,
+) -> Result<Vec<LeaseToken>, String> {
+    let mut tokens = Vec::with_capacity(legs.len());
+    let mut serve = |slice_id: usize,
+                     data: Vec<u32>,
+                     consumed: u64,
+                     version: u64|
+     -> Result<(), String> {
+        if consumed != version {
+            return Err(format!(
+                "slice {slice_id}: granted v{version}, router handed over \
+                 v{consumed}"
+            ));
+        }
+        if data != protocol_payload(slice_id) {
+            return Err(format!(
+                "slice {slice_id} v{version}: payload corrupted in flight"
+            ));
+        }
+        router.forward(slice_id, data, consumed + 1);
+        tokens.push(LeaseToken { slice_id, version: consumed });
+        Ok(())
+    };
+    match order {
+        QueueOrder::Strict => {
+            for (slice_id, version) in legs {
+                let (data, consumed) =
+                    router.take_for(slice_id, version, take_timeout);
+                serve(slice_id, data, consumed, version)?;
+            }
+        }
+        QueueOrder::Availability | QueueOrder::Dynamic => {
+            let mut remaining = legs;
+            while !remaining.is_empty() {
+                let (pick, data, consumed) = match order {
+                    QueueOrder::Dynamic => {
+                        router.take_heaviest(&remaining, take_timeout)
+                    }
+                    _ => router.take_earliest(&remaining, take_timeout),
+                };
+                let (slice_id, version) = remaining.remove(pick);
+                serve(slice_id, data, consumed, version)?;
+            }
+        }
+    }
+    Ok(tokens)
 }
 
 /// The full {order} × {skip} mode matrix the acceptance criteria sweep.

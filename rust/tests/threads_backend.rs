@@ -1,0 +1,196 @@
+//! Integration tests for the threaded execution backend (`--backend
+//! threads`): the rotation data-plane protocol under real cross-thread
+//! interleavings, and the sim-vs-threads equivalence contract — because
+//! the per-worker call sequence is backend-independent, a threaded run
+//! must produce **bit-identical** model state to the sim run on the same
+//! seed; only the clocks differ.
+
+use strads::cluster::{NetworkConfig, StragglerModel};
+use strads::coordinator::{BackendKind, ExecutionMode, RunConfig};
+use strads::figures::common::{figure_corpus, lda_engine, mf_block_engine};
+use strads::scheduler::rotation::SkipPolicy;
+use strads::testing::rotation::{drive_protocol_threaded, mode_matrix};
+
+// ---- protocol stress: real threads through the SliceRouter ------------
+
+/// Sweep the full order × skip mode matrix across pipeline depths and
+/// ring shapes with every round's legs served from real worker threads.
+/// The driver asserts token-mass conservation (payload bit-intact at
+/// every hop), fork-free version chains, and a fully settled ledger; on
+/// top of that, `SkipPolicy::Never` rounds must never skip and must
+/// cover the whole worker × slice grid.
+#[test]
+fn threaded_protocol_survives_the_mode_matrix() {
+    let rounds = 12u64;
+    for (order, skip) in mode_matrix(2) {
+        for depth in [1u64, 2, 3] {
+            for (p, u) in [(3usize, 3usize), (2, 5), (4, 8)] {
+                let out =
+                    drive_protocol_threaded(p, u, rounds, depth, skip, order)
+                        .unwrap_or_else(|e| {
+                            panic!(
+                                "p={p} u={u} depth={depth} {order:?} \
+                                 {skip:?}: {e}"
+                            )
+                        });
+                assert_eq!(out.rounds, rounds);
+                if skip == SkipPolicy::Never {
+                    assert_eq!(
+                        out.skipped, 0,
+                        "p={p} u={u} depth={depth} {order:?}: Never skipped"
+                    );
+                    assert!(
+                        out.full_coverage(),
+                        "p={p} u={u} depth={depth} {order:?}: coverage hole"
+                    );
+                    for (a, &g) in out.grants.iter().enumerate() {
+                        assert_eq!(
+                            g, rounds,
+                            "slice {a}: {g} grants over {rounds} Never rounds"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---- sim-vs-threads equivalence ---------------------------------------
+
+fn lda_rotation_cfg(
+    workers: usize,
+    sweeps: u64,
+    depth: u64,
+    backend: BackendKind,
+    straggler: StragglerModel,
+    pace: f64,
+    label: &str,
+) -> RunConfig {
+    RunConfig {
+        max_rounds: sweeps * workers as u64,
+        eval_every: workers as u64,
+        network: NetworkConfig::ideal(),
+        mode: ExecutionMode::Rotation { depth },
+        backend,
+        straggler,
+        threads_pace_secs: pace,
+        label: label.into(),
+        ..Default::default()
+    }
+}
+
+/// Acceptance criterion: a depth-1 Strict/Never rotation run on the
+/// threaded backend is bit-identical to the sim backend on the same
+/// corpus and seed — same final objective, same per-eval trajectory,
+/// same p2p traffic — while reporting measured wall-clock.
+#[test]
+fn threaded_lda_rotation_is_bit_identical_to_sim() {
+    let corpus = figure_corpus(1_500, 200, 77);
+    let (workers, sweeps, k) = (4usize, 3u64, 8usize);
+    let run = |backend, label: &str| {
+        let cfg = lda_rotation_cfg(
+            workers,
+            sweeps,
+            1,
+            backend,
+            StragglerModel::None,
+            0.0,
+            label,
+        );
+        let mut e = lda_engine(&corpus, k, workers, 77, &cfg);
+        e.run(&cfg)
+    };
+    let sim = run(BackendKind::Sim, "thr-eq-sim");
+    let thr = run(BackendKind::Threads, "thr-eq-threads");
+
+    assert_eq!(sim.rounds_run, thr.rounds_run);
+    assert_eq!(
+        sim.final_objective.to_bits(),
+        thr.final_objective.to_bits(),
+        "threads diverged from sim: {} vs {}",
+        thr.final_objective,
+        sim.final_objective
+    );
+    assert_eq!(sim.recorder.points().len(), thr.recorder.points().len());
+    for (a, b) in sim.recorder.points().iter().zip(thr.recorder.points()) {
+        assert_eq!(
+            a.objective.to_bits(),
+            b.objective.to_bits(),
+            "trajectory fork: {} vs {}",
+            a.objective,
+            b.objective
+        );
+    }
+    assert_eq!(sim.total_p2p_bytes, thr.total_p2p_bytes);
+    assert_eq!(sim.total_p2p_msgs, thr.total_p2p_msgs);
+    assert!(thr.wall_secs > 0.0, "threads must report wall-clock");
+    assert!(thr.router_block_secs >= 0.0);
+}
+
+/// Physically injected skew (real sleeps on the worker threads) and a
+/// wall pace floor change *when* things run, never *what* they compute:
+/// a deeper pipeline under a rotating 4x straggler still matches the sim
+/// backend bit-for-bit on the same seed.
+#[test]
+fn straggler_sleeps_and_pace_do_not_perturb_model_state() {
+    let corpus = figure_corpus(1_000, 150, 91);
+    let (workers, sweeps, k) = (4usize, 2u64, 8usize);
+    let straggler = StragglerModel::Rotating { factor: 4.0 };
+    let run = |backend, pace| {
+        let cfg = lda_rotation_cfg(
+            workers,
+            sweeps,
+            2,
+            backend,
+            straggler.clone(),
+            pace,
+            "thr-skew",
+        );
+        let mut e = lda_engine(&corpus, k, workers, 91, &cfg);
+        e.run(&cfg)
+    };
+    let sim = run(BackendKind::Sim, 0.0);
+    let thr = run(BackendKind::Threads, 0.001);
+    assert_eq!(
+        sim.final_objective.to_bits(),
+        thr.final_objective.to_bits(),
+        "skewed threads diverged from sim: {} vs {}",
+        thr.final_objective,
+        sim.final_objective
+    );
+    // the pace floor guarantees a wall-clock lower bound the sim never
+    // pays: at least one paced leg per round on the slowest worker
+    assert!(thr.wall_secs >= 0.001 * sweeps as f64);
+}
+
+/// The second rotation workload end-to-end on real threads: MF block
+/// rotation (U = 2P item blocks) with 4 worker threads converges and
+/// moves blocks worker→worker.
+#[test]
+fn threaded_mf_block_rotation_runs_end_to_end() {
+    let workers = 4usize;
+    let rounds = 6 * workers as u64;
+    let cfg = RunConfig {
+        max_rounds: rounds,
+        eval_every: workers as u64,
+        network: NetworkConfig::ideal(),
+        mode: ExecutionMode::Rotation { depth: 2 },
+        backend: BackendKind::Threads,
+        label: "thr-mf".into(),
+        ..Default::default()
+    };
+    let mut e =
+        mf_block_engine(150, 80, 4, workers, 2 * workers, 0.05, 0.05, 13, &cfg);
+    let res = e.run(&cfg);
+    assert_eq!(res.rounds_run, rounds);
+    assert!(res.total_p2p_msgs > 0, "blocks must move p2p");
+    assert!(res.final_objective.is_finite());
+    let first = res.recorder.points()[0].objective;
+    assert!(
+        res.final_objective < first,
+        "MF objective must fall: {first} -> {}",
+        res.final_objective
+    );
+    assert!(res.wall_secs > 0.0);
+    assert!(res.router_block_secs >= 0.0);
+}
