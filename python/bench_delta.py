@@ -43,6 +43,11 @@ METRICS = [
     "sim_pipelined_secs",
     "wall_bsp_secs",
     "wall_pipelined_secs",
+    # threads_arm: trace fingerprints (hex strings — printed, never
+    # delta'd) and the measured cost of recording
+    "sim_fingerprint",
+    "wall_fingerprint",
+    "trace_overhead_secs",
 ]
 
 
@@ -128,6 +133,11 @@ def main():
             if b is None and c is None:
                 continue
             print(f"   {m:<26} {fmt(b):>14} -> {fmt(c):>14} {delta_str(b, c)}")
+        sim_fp, wall_fp = arm.get("sim_fingerprint"), arm.get("wall_fingerprint")
+        if sim_fp is not None and wall_fp is not None and sim_fp != wall_fp:
+            # informational only: the bench binary gates this equality
+            print(f"!! {name}: sim/threads fingerprints differ "
+                  f"({sim_fp} vs {wall_fp})")
     b, c = base.get("wall_secs"), cur.get("wall_secs")
     print(f"-- wall_secs: {fmt(b)} -> {fmt(c)} {delta_str(b, c)}")
     removed = sorted(n for n in base_arms if n not in cur_arms)

@@ -105,7 +105,7 @@ def test_null_metrics_print_without_delta(tmp_path, monkeypatch, capsys):
     assert "n/a" in capsys.readouterr().out
 
 
-def _threads_arm(wall_bsp=4.0, wall_piped=2.0):
+def _threads_arm(wall_bsp=4.0, wall_piped=2.0, sim_fp="00ff", wall_fp="00ff"):
     return {
         "app": "LDA-rotation-threads",
         "n_workers": 4,
@@ -115,6 +115,9 @@ def _threads_arm(wall_bsp=4.0, wall_piped=2.0):
         "wall_pipelined_secs": wall_piped,
         "bsp_router_block_secs": 0.5,
         "pipelined_router_block_secs": 0.25,
+        "sim_fingerprint": sim_fp,
+        "wall_fingerprint": wall_fp,
+        "trace_overhead_secs": 0.01,
     }
 
 
@@ -142,3 +145,34 @@ def test_removed_threads_arm_fails_the_job(tmp_path, monkeypatch, capsys):
         _run(tmp_path, base, _doc(["rotation"]), monkeypatch)
     assert exc.value.code == 1
     assert "threads_arm" in capsys.readouterr().out
+
+
+def test_fingerprint_keys_print_without_deltas(tmp_path, monkeypatch,
+                                               capsys):
+    # fingerprints are hex strings: printed verbatim, never percent-delta'd,
+    # and a null baseline (the pre-tracing placeholder) prints one-sided
+    base = _doc(["rotation"])
+    base["threads_arm"] = _threads_arm(sim_fp=None, wall_fp=None)
+    base["threads_arm"]["trace_overhead_secs"] = None
+    cur = _doc(["rotation"])
+    cur["threads_arm"] = _threads_arm(sim_fp="deadbeef01", wall_fp="deadbeef01")
+    _run(tmp_path, base, cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "sim_fingerprint" in out and "deadbeef01" in out
+    assert "trace_overhead_secs" in out
+    assert "fingerprints differ" not in out
+    # a string metric never grows a percentage suffix
+    for line in out.splitlines():
+        if "fingerprint" in line and "deadbeef01" in line:
+            assert "%" not in line
+
+
+def test_fingerprint_mismatch_warns_but_never_fails(tmp_path, monkeypatch,
+                                                    capsys):
+    # the bench binary gates sim == threads; the delta report only flags it
+    cur = _doc(["rotation"])
+    cur["threads_arm"] = _threads_arm(sim_fp="aaaa", wall_fp="bbbb")
+    _run(tmp_path, _doc(["rotation"]), cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "fingerprints differ" in out
+    assert "aaaa" in out and "bbbb" in out

@@ -77,6 +77,17 @@ fn threads_arm_json(c: &ThreadsComparison) -> JsonValue {
         .field("pipelined_objective", c.pipelined_objective)
         .field("bsp_router_block_secs", c.bsp_router_block_secs)
         .field("pipelined_router_block_secs", c.pipelined_router_block_secs)
+        // fingerprints as hex strings: u64 would lose bits through JSON's
+        // f64 number model
+        .field(
+            "sim_fingerprint",
+            format!("{:016x}", c.sim_fingerprint).as_str(),
+        )
+        .field(
+            "wall_fingerprint",
+            format!("{:016x}", c.wall_fingerprint).as_str(),
+        )
+        .field("trace_overhead_secs", c.trace_overhead_secs)
         .build()
 }
 
@@ -368,6 +379,12 @@ fn main() {
          {:.4}s vs BSP {:.4}s",
         threads.wall_pipelined_secs,
         threads.wall_bsp_secs
+    );
+    assert_eq!(
+        threads.sim_fingerprint, threads.wall_fingerprint,
+        "traced pipelined runs must fingerprint identically on both \
+         backends ({:016x} vs {:016x})",
+        threads.sim_fingerprint, threads.wall_fingerprint
     );
 
     // ---- BENCH_fig9.json ---------------------------------------------

@@ -26,12 +26,15 @@
 
 use crate::backend::LdaShard;
 use crate::cluster::router_spin_ms;
-use crate::coordinator::{HandoffLeg, StradsApp};
+use crate::coordinator::{
+    EffectiveConfig, HandoffLeg, RotationCaps, RunConfig, StradsApp,
+};
 use crate::kvstore::{LeaseLedger, LeaseToken, SliceMass, SliceRouter, SliceStore};
 use crate::metrics::s_error;
 use crate::scheduler::rotation::{
     self, GrantLeg, QueueOrder, RotationScheduler, SkipPolicy,
 };
+use crate::trace::{TracePlumbing, TraceReplayer};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -101,6 +104,10 @@ pub struct LdaPartialLeg {
     pub dest_worker: usize,
     /// Tokens sampled in this leg (the engine's per-leg compute weight).
     pub n_sampled: usize,
+    /// Rotation path: the router arrival stamp of the handoff this leg
+    /// consumed, read *before* the forward re-stamps the slot (0 under
+    /// BSP).  Trace metadata only — excluded from fingerprints.
+    pub arrival_seq: u64,
 }
 
 /// Worker partial: the per-leg results in sweep order, the worker's final
@@ -149,6 +156,10 @@ pub struct LdaApp {
     s_staleness: u64,
     s_snapshot: Vec<f32>,
     pulls: u64,
+    /// Replay source: when set, `schedule` re-drives each worker's queue
+    /// in the recorded sweep order and services it strictly (see
+    /// [`TraceReplayer::reorder_legs`]).
+    replay: Option<Arc<TraceReplayer>>,
 }
 
 impl LdaApp {
@@ -191,6 +202,7 @@ impl LdaApp {
             s_error_history: Vec::new(),
             s_staleness: 1,
             pulls: 0,
+            replay: None,
         }
     }
 
@@ -322,7 +334,7 @@ impl StradsApp for LdaApp {
         // per-round disjointness is what licenses parallel sweeps
         let mut seen = vec![false; u];
         let mut tasks = Vec::with_capacity(grants.len());
-        for queue in grants {
+        for (w, queue) in grants.into_iter().enumerate() {
             let mut legs = Vec::with_capacity(queue.len());
             for GrantLeg { slice_id, dest_worker } in queue {
                 assert!(
@@ -339,11 +351,23 @@ impl StradsApp for LdaApp {
                 };
                 legs.push(LdaTaskLeg { slice_id, b_slice, version, dest_worker });
             }
+            // replaying a recorded run: re-drive this queue in the
+            // recorded sweep order and service it strictly, so the
+            // original take sequence — and hence the math — reproduces
+            // bit-exactly (the recorded order happened, so strict
+            // blocking service cannot deadlock)
+            let order = match &self.replay {
+                Some(rep) if self.router.is_some() => {
+                    legs = rep.reorder_legs(round, w, legs, |l| l.slice_id);
+                    QueueOrder::Strict
+                }
+                _ => self.sched.queue_order(),
+            };
             tasks.push(LdaTask {
                 legs,
                 s: self.s_snapshot.clone(),
                 router: self.router.as_ref().map(Arc::clone),
-                order: self.sched.queue_order(),
+                order,
             });
         }
         if self.router.is_some() {
@@ -373,6 +397,10 @@ impl StradsApp for LdaApp {
             let (n_sampled, touched) =
                 ws.gibbs_slice_into(slice_id, &mut data.counts, s_running);
             let handoff_bytes = data.counts.len() * 4;
+            // the arrival stamp of the handoff this leg consumed — read
+            // before the forward re-stamps the slot (the holder is the
+            // slot's sole depositor, so the read cannot race)
+            let arrival_seq = router.arrival_seq(slice_id);
             router.forward(slice_id, data, consumed + 1);
             let leg = LdaPartialLeg {
                 slice_id,
@@ -381,6 +409,7 @@ impl StradsApp for LdaApp {
                 handoff_bytes,
                 dest_worker,
                 n_sampled,
+                arrival_seq,
             };
             (touched, leg)
         }
@@ -466,6 +495,7 @@ impl StradsApp for LdaApp {
                         handoff_bytes: 0,
                         dest_worker,
                         n_sampled,
+                        arrival_seq: 0,
                     });
                 }
                 _ => panic!("task leg mixes the BSP and routed forms"),
@@ -586,27 +616,27 @@ impl StradsApp for LdaApp {
         true
     }
 
-    fn supports_queue_reorder() -> bool {
-        // the Gibbs sweep threads s̃ leg to leg but is otherwise
-        // order-free: any within-queue permutation leaves disjointness,
-        // the version chains, and token conservation intact
-        true
+    fn rotation_caps() -> RotationCaps {
+        // reorder: the Gibbs sweep threads s̃ leg to leg but is otherwise
+        // order-free — any within-queue permutation leaves disjointness,
+        // the version chains, and token conservation intact.
+        // skip: the schedule already routes through next_round_grants
+        // with a live parked-version signal, and push/pull tolerate short
+        // (even empty) queues — a skipped slice simply contributes no
+        // sweep and no s̃ delta that round.
+        RotationCaps { queue_reorder: true, skip: true }
     }
 
-    fn set_queue_order(&mut self, order: QueueOrder) {
-        self.sched.set_queue_order(order);
+    fn negotiate(&mut self, cfg: &RunConfig) -> EffectiveConfig {
+        let eff = EffectiveConfig::negotiate(cfg, Self::rotation_caps());
+        self.sched.set_queue_order(eff.queue_order);
+        self.sched.set_skip_policy(eff.skip_policy);
+        eff
     }
 
-    fn supports_skip() -> bool {
-        // the schedule already routes through next_round_grants with a
-        // live parked-version signal, and push/pull tolerate short (even
-        // empty) queues: a skipped slice simply contributes no sweep and
-        // no s̃ delta that round
-        true
-    }
-
-    fn set_skip_policy(&mut self, skip: SkipPolicy) {
-        self.sched.set_skip_policy(skip);
+    fn install_trace(&mut self, plumbing: TracePlumbing) {
+        self.replay = plumbing.replayer.clone();
+        self.sched.install_trace(&plumbing);
     }
 
     fn n_rotation_slices(&self) -> usize {
@@ -661,6 +691,7 @@ impl StradsApp for LdaApp {
                     dest_worker: l.dest_worker,
                     bytes: l.handoff_bytes,
                     weight: l.n_sampled as f64,
+                    arrival_seq: l.arrival_seq,
                 })
             })
             .collect()

@@ -22,13 +22,16 @@
 
 use crate::backend::MfShard;
 use crate::cluster::router_spin_ms;
-use crate::coordinator::{HandoffLeg, StradsApp};
+use crate::coordinator::{
+    EffectiveConfig, HandoffLeg, RotationCaps, RunConfig, StradsApp,
+};
 use crate::kvstore::{
     LeaseLedger, LeaseToken, SliceMass, SliceRouter, SliceStore,
 };
 use crate::scheduler::rotation::{
     self, GrantLeg, QueueOrder, RotationScheduler, SkipPolicy,
 };
+use crate::trace::{TracePlumbing, TraceReplayer};
 use crate::scheduler::round_robin::{Factor, MfRound, RoundRobinScheduler};
 use crate::sparse::CsrMatrix;
 use std::collections::HashMap;
@@ -265,6 +268,10 @@ pub struct MfBlockPartialLeg {
     pub dest_worker: usize,
     /// Rating updates applied in this leg (compute weight).
     pub n_updates: usize,
+    /// Rotation path: the router arrival stamp of the handoff this leg
+    /// consumed, read *before* the forward re-stamps the slot (0 under
+    /// BSP).  Trace metadata only — excluded from fingerprints.
+    pub arrival_seq: u64,
 }
 
 /// Worker partial: per-leg results in sweep order.
@@ -420,6 +427,10 @@ pub struct MfBlockApp {
     lambda: f32,
     eta0: f32,
     eta_decay: f32,
+    /// Replay source: when set, `schedule` re-drives each worker's queue
+    /// in the recorded sweep order and services it strictly (see
+    /// [`TraceReplayer::reorder_legs`]).
+    replay: Option<Arc<TraceReplayer>>,
 }
 
 impl MfBlockApp {
@@ -453,6 +464,7 @@ impl MfBlockApp {
             lambda: cfg.lambda,
             eta0: cfg.eta0,
             eta_decay: cfg.eta_decay,
+            replay: None,
         }
     }
 
@@ -524,7 +536,7 @@ impl StradsApp for MfBlockApp {
         };
         let mut seen = vec![false; u];
         let mut tasks = Vec::with_capacity(grants.len());
-        for queue in grants {
+        for (w, queue) in grants.into_iter().enumerate() {
             let mut legs = Vec::with_capacity(queue.len());
             for GrantLeg { slice_id: block_id, dest_worker } in queue {
                 assert!(
@@ -545,11 +557,21 @@ impl StradsApp for MfBlockApp {
                     dest_worker,
                 });
             }
+            // replaying a recorded run: re-drive this queue in the
+            // recorded sweep order and service it strictly, reproducing
+            // the original take sequence bit-exactly
+            let order = match &self.replay {
+                Some(rep) if self.router.is_some() => {
+                    legs = rep.reorder_legs(round, w, legs, |l| l.block_id);
+                    QueueOrder::Strict
+                }
+                _ => self.sched.queue_order(),
+            };
             tasks.push(MfBlockTask {
                 legs,
                 eta,
                 router: self.router.as_ref().map(Arc::clone),
-                order: self.sched.queue_order(),
+                order,
             });
         }
         tasks
@@ -569,6 +591,9 @@ impl StradsApp for MfBlockApp {
         ) -> MfBlockPartialLeg {
             let n_updates = ws.sgd_block(&mut data, eta);
             let handoff_bytes = data.bytes();
+            // arrival stamp of the consumed handoff, read before the
+            // forward re-stamps the slot
+            let arrival_seq = router.arrival_seq(block_id);
             router.forward(block_id, data, consumed + 1);
             MfBlockPartialLeg {
                 block_id,
@@ -577,6 +602,7 @@ impl StradsApp for MfBlockApp {
                 handoff_bytes,
                 dest_worker,
                 n_updates,
+                arrival_seq,
             }
         }
 
@@ -639,6 +665,7 @@ impl StradsApp for MfBlockApp {
                         handoff_bytes: 0,
                         dest_worker,
                         n_updates,
+                        arrival_seq: 0,
                     });
                 }
                 _ => panic!("task leg mixes the BSP and routed forms"),
@@ -724,28 +751,28 @@ impl StradsApp for MfBlockApp {
         true
     }
 
-    fn supports_queue_reorder() -> bool {
-        // the shard's W rows DO thread leg to leg (each sweep reads the
-        // updates earlier legs made), but any within-queue permutation is
-        // still a valid sequential SGD order — reordering is legal;
-        // sweeping legs concurrently within a worker would not be
-        true
-    }
-
-    fn set_queue_order(&mut self, order: QueueOrder) {
-        self.sched.set_queue_order(order);
-    }
-
-    fn supports_skip() -> bool {
-        // grants route through next_round_grants with a live
+    fn rotation_caps() -> RotationCaps {
+        // reorder: the shard's W rows DO thread leg to leg (each sweep
+        // reads the updates earlier legs made), but any within-queue
+        // permutation is still a valid sequential SGD order — reordering
+        // is legal; sweeping legs concurrently within a worker would not
+        // be.  skip: grants route through next_round_grants with a live
         // parked-version signal, and a short (even empty) queue is just a
         // round with fewer SGD sweeps — W rows and the eval mirror need
-        // no per-round completeness
-        true
+        // no per-round completeness.
+        RotationCaps { queue_reorder: true, skip: true }
     }
 
-    fn set_skip_policy(&mut self, skip: SkipPolicy) {
-        self.sched.set_skip_policy(skip);
+    fn negotiate(&mut self, cfg: &RunConfig) -> EffectiveConfig {
+        let eff = EffectiveConfig::negotiate(cfg, Self::rotation_caps());
+        self.sched.set_queue_order(eff.queue_order);
+        self.sched.set_skip_policy(eff.skip_policy);
+        eff
+    }
+
+    fn install_trace(&mut self, plumbing: TracePlumbing) {
+        self.replay = plumbing.replayer.clone();
+        self.sched.install_trace(&plumbing);
     }
 
     fn n_rotation_slices(&self) -> usize {
@@ -799,6 +826,7 @@ impl StradsApp for MfBlockApp {
                     dest_worker: l.dest_worker,
                     bytes: l.handoff_bytes,
                     weight: l.n_updates as f64,
+                    arrival_seq: l.arrival_seq,
                 })
             })
             .collect()

@@ -38,6 +38,8 @@
 
 use crate::cluster::{HandoffJitter, StragglerModel};
 use crate::scheduler::rotation::QueueOrder;
+use crate::trace::{Event, TraceBuffer};
+use std::sync::Arc;
 
 /// Which execution backend a run uses (`RunConfig::backend`,
 /// CLI `--backend sim|threads`).
@@ -225,6 +227,13 @@ pub trait ExecBackend {
 
     /// Current run-clock reading.
     fn now(&self) -> f64;
+
+    /// Install a trace sink for this run: each resolved round then emits a
+    /// [`Event::Resolve`] with the backend's clock reading.  Resolve
+    /// events are timing diagnostics — excluded from fingerprints (wall
+    /// time is never bit-reproducible) and never replayed.  Default: drop
+    /// the sink (backends without clock-trace support).
+    fn install_trace(&mut self, _sink: Arc<TraceBuffer>) {}
 }
 
 /// Construct the backend for one run.  `pace_floor_secs` is the threaded
@@ -260,6 +269,8 @@ pub struct SimBackend {
     /// slices of the same queue are *not* gated on it, which is what lets
     /// a U > P worker sample one slice while another is still in flight.
     slice_ready: Vec<f64>,
+    /// Trace sink for per-round `Resolve` events (None = tracing off).
+    trace: Option<Arc<TraceBuffer>>,
 }
 
 impl SimBackend {
@@ -269,6 +280,7 @@ impl SimBackend {
             coord_now: 0.0,
             worker_free: Vec::new(),
             slice_ready: Vec::new(),
+            trace: None,
         }
     }
 }
@@ -311,6 +323,12 @@ impl ExecBackend for SimBackend {
         }
         let before = self.coord_now;
         self.coord_now = self.coord_now.max(finish_max + obs.comm_secs) + obs.pull_secs;
+        if let Some(sink) = &self.trace {
+            sink.push(Event::Resolve {
+                round: obs.round,
+                now_bits: self.coord_now.to_bits(),
+            });
+        }
         // what a BSP barrier would have added on top of the pipeline
         let bsp_increment = compute_max + obs.comm_secs + obs.pull_secs;
         RoundOutcome {
@@ -351,6 +369,12 @@ impl ExecBackend for SimBackend {
         self.slice_ready = next_ready;
         let before = self.coord_now;
         self.coord_now = self.coord_now.max(finish_max + obs.comm_secs) + obs.pull_secs;
+        if let Some(sink) = &self.trace {
+            sink.push(Event::Resolve {
+                round: obs.round,
+                now_bits: self.coord_now.to_bits(),
+            });
+        }
         let bsp_increment = compute_max + obs.comm_secs + obs.pull_secs;
         RoundOutcome {
             now: self.coord_now,
@@ -360,6 +384,10 @@ impl ExecBackend for SimBackend {
 
     fn now(&self) -> f64 {
         self.coord_now
+    }
+
+    fn install_trace(&mut self, sink: Arc<TraceBuffer>) {
+        self.trace = Some(sink);
     }
 }
 
@@ -376,6 +404,8 @@ pub struct ThreadBackend {
     coord_now: f64,
     n_workers: usize,
     pace_floor_secs: f64,
+    /// Trace sink for per-round `Resolve` events (None = tracing off).
+    trace: Option<Arc<TraceBuffer>>,
 }
 
 /// Env override for the threaded pacing floor, in milliseconds
@@ -397,6 +427,7 @@ impl ThreadBackend {
             coord_now: 0.0,
             n_workers: 0,
             pace_floor_secs: pace_floor_secs.max(env_pace_floor_secs()),
+            trace: None,
         }
     }
 
@@ -442,6 +473,12 @@ impl ExecBackend for ThreadBackend {
             obs.compute_secs.iter().copied().fold(0.0f64, f64::max);
         let before = self.coord_now;
         let now = self.to_wall(obs.wall_now);
+        if let Some(sink) = &self.trace {
+            sink.push(Event::Resolve {
+                round: obs.round,
+                now_bits: now.to_bits(),
+            });
+        }
         let bsp_increment = compute_max + obs.comm_secs + obs.pull_secs;
         RoundOutcome {
             now,
@@ -464,6 +501,12 @@ impl ExecBackend for ThreadBackend {
             .fold(0.0f64, f64::max);
         let before = self.coord_now;
         let now = self.to_wall(obs.wall_now);
+        if let Some(sink) = &self.trace {
+            sink.push(Event::Resolve {
+                round: obs.round,
+                now_bits: now.to_bits(),
+            });
+        }
         let bsp_increment = compute_max + obs.comm_secs + obs.pull_secs;
         RoundOutcome {
             now,
@@ -473,6 +516,10 @@ impl ExecBackend for ThreadBackend {
 
     fn now(&self) -> f64 {
         self.coord_now
+    }
+
+    fn install_trace(&mut self, sink: Arc<TraceBuffer>) {
+        self.trace = Some(sink);
     }
 }
 

@@ -72,6 +72,7 @@ use crate::cluster::{
 use crate::kvstore::{LeaseToken, VersionVector};
 use crate::metrics::{Recorder, SspStats};
 use crate::scheduler::rotation::{QueueOrder, SkipPolicy};
+use crate::trace::{Event, Trace, TraceMode, TracePlumbing};
 use crate::util::stats::Stopwatch;
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -96,6 +97,11 @@ pub struct HandoffLeg {
     /// (e.g. tokens sampled); the engine normalizes weights per worker to
     /// apportion the measured seconds across the queue.
     pub weight: f64,
+    /// The global router deposit stamp the slice's mailbox carried when
+    /// this leg took it (read *before* the forward re-stamps the slot).
+    /// Recorded into trace `Take` events for arrival diagnosis; excluded
+    /// from fingerprints (the stamp counter is raced by worker threads).
+    pub arrival_seq: u64,
 }
 
 /// A STRADS application: the user-defined primitives (paper Fig 2).
@@ -209,40 +215,47 @@ pub trait StradsApp {
         Vec::new()
     }
 
-    /// Whether the app's workers can service their rotation slice queues
-    /// out of ring order ([`QueueOrder::Availability`]): the push path
-    /// must poll [`crate::kvstore::SliceRouter::try_take`] and tolerate
-    /// any within-queue permutation.  Apps that only support
-    /// [`QueueOrder::Strict`] leave this false and an Availability request
-    /// degrades to Strict (see the README's mode-degradation table).
-    fn supports_queue_reorder() -> bool {
-        false
+    /// The app's rotation scheduling capabilities ([`RotationCaps`]):
+    ///
+    /// * `queue_reorder` — its workers can service their slice queues out
+    ///   of ring order ([`QueueOrder::Availability`] /
+    ///   [`QueueOrder::Dynamic`]): the push path polls
+    ///   [`crate::kvstore::SliceRouter::try_take`] and tolerates any
+    ///   within-queue permutation;
+    /// * `skip` — its schedule can leave a still-in-flight slice out of a
+    ///   round entirely and lease it later
+    ///   ([`crate::scheduler::rotation::SkipPolicy::Defer`]): grants route
+    ///   through
+    ///   [`crate::scheduler::RotationScheduler::next_round_grants`] with a
+    ///   live availability signal, and push/pull tolerate short (or empty)
+    ///   queues.
+    ///
+    /// Requests the app cannot honour degrade — Availability/Dynamic to
+    /// `Strict`, `Defer` to `Never` — through the one code path
+    /// [`EffectiveConfig::negotiate`] (the README's mode-degradation table
+    /// is computed from it).
+    fn rotation_caps() -> RotationCaps {
+        RotationCaps::default()
     }
 
-    /// Rotation mode: the effective queue order for the run, announced
-    /// before [`StradsApp::begin_rotation`].  Apps that support reordering
-    /// thread it into their scheduler/tasks; the default ignores it
-    /// (Strict-only apps).
-    fn set_queue_order(&mut self, _order: QueueOrder) {}
-
-    /// Whether the app's schedule can *skip* a round's still-in-flight
-    /// slice entirely and lease it later
-    /// ([`crate::scheduler::rotation::SkipPolicy::Defer`]): its scheduler
-    /// must route grants through
-    /// [`crate::scheduler::RotationScheduler::next_round_grants`] with a
-    /// live availability signal, and its push/pull paths must tolerate
-    /// rounds where a worker's queue is short (or empty).  Apps that
-    /// cannot do this leave it false, and a Defer request degrades to
-    /// `Never` (see the README's mode-degradation table).
-    fn supports_skip() -> bool {
-        false
+    /// Negotiate the run's rotation settings: degrade the requested
+    /// [`RunConfig::queue_order`] / [`RunConfig::skip_policy`] against
+    /// [`StradsApp::rotation_caps`] and *accept* the result (apps with a
+    /// rotation scheduler thread the effective settings into it before
+    /// returning).  Called once per rotation run, before
+    /// [`StradsApp::install_trace`] and [`StradsApp::begin_rotation`].
+    /// The default accepts the degraded settings without further wiring.
+    fn negotiate(&mut self, cfg: &RunConfig) -> EffectiveConfig {
+        EffectiveConfig::negotiate(cfg, Self::rotation_caps())
     }
 
-    /// Rotation mode: the effective skip policy for the run, announced
-    /// before [`StradsApp::begin_rotation`] (after
-    /// [`StradsApp::set_queue_order`]).  The default ignores it
-    /// (never-skip apps).
-    fn set_skip_policy(&mut self, _skip: SkipPolicy) {}
+    /// Hand the run's trace wiring ([`TracePlumbing`]) to the app so its
+    /// scheduler can emit `Skip`/`DebtCharge` events and answer `Defer`'s
+    /// availability poll from a replayed trace.  Called after
+    /// [`StradsApp::negotiate`] (the skip policy's debt ledger exists by
+    /// then) and before [`StradsApp::begin_rotation`].  The default drops
+    /// it (non-rotating apps have nothing scheduler-side to record).
+    fn install_trace(&mut self, _plumbing: TracePlumbing) {}
 
     /// Cumulative seconds this app's workers have spent *physically
     /// blocked* on the slice data plane (parked on
@@ -273,6 +286,46 @@ pub trait StradsApp {
     /// (default: [`crate::scheduler::rotation::ring_source`]).
     fn handoff_source(worker: usize, n_workers: usize) -> usize {
         crate::scheduler::rotation::ring_source(worker, n_workers)
+    }
+}
+
+/// What a [`StradsApp`] can do with its rotation slice queues (see
+/// [`StradsApp::rotation_caps`]).  The default — no reordering, no
+/// skipping — is the strict paper discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RotationCaps {
+    /// Workers can service their queues out of ring order
+    /// ([`QueueOrder::Availability`] / [`QueueOrder::Dynamic`]).
+    pub queue_reorder: bool,
+    /// The schedule can defer a still-in-flight slice
+    /// ([`SkipPolicy::Defer`]).
+    pub skip: bool,
+}
+
+/// The rotation settings a run actually executes with, after degrading
+/// the requested [`RunConfig`] against the app's [`RotationCaps`] — the
+/// single code path behind the README's mode-degradation table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EffectiveConfig {
+    pub queue_order: QueueOrder,
+    pub skip_policy: SkipPolicy,
+}
+
+impl EffectiveConfig {
+    /// Degrade: a non-`Strict` queue order on an app without
+    /// `queue_reorder` falls back to `Strict`; a `Defer` skip policy on an
+    /// app without `skip` falls back to `Never`.
+    pub fn negotiate(cfg: &RunConfig, caps: RotationCaps) -> EffectiveConfig {
+        let queue_order = match cfg.queue_order {
+            QueueOrder::Strict => QueueOrder::Strict,
+            reorder if caps.queue_reorder => reorder,
+            _ => QueueOrder::Strict,
+        };
+        let skip_policy = match cfg.skip_policy {
+            SkipPolicy::Defer { .. } if caps.skip => cfg.skip_policy,
+            _ => SkipPolicy::Never,
+        };
+        EffectiveConfig { queue_order, skip_policy }
     }
 }
 
@@ -319,16 +372,16 @@ pub struct RunConfig {
     /// measured times pass through bit-identically).
     pub straggler: StragglerModel,
     /// Rotation mode: within-queue service discipline.  `Availability`
-    /// and `Dynamic` take effect only on apps that
-    /// [`StradsApp::supports_queue_reorder`]; everything else runs
-    /// `Strict` (default: Strict, bit-identical to the fixed-order
-    /// engine).
+    /// and `Dynamic` take effect only on apps whose
+    /// [`StradsApp::rotation_caps`] report `queue_reorder`; everything
+    /// else runs `Strict` (default: Strict, bit-identical to the
+    /// fixed-order engine) — see [`EffectiveConfig::negotiate`].
     pub queue_order: QueueOrder,
     /// Rotation mode: whether a round may skip a still-in-flight slice
     /// and lease it later ([`SkipPolicy::Defer`]).  Takes effect only on
-    /// apps that [`StradsApp::supports_skip`]; everything else runs
-    /// `Never` (default: Never, bit-identical to the always-grant
-    /// schedule).
+    /// apps whose [`StradsApp::rotation_caps`] report `skip`; everything
+    /// else runs `Never` (default: Never, bit-identical to the
+    /// always-grant schedule) — see [`EffectiveConfig::negotiate`].
     pub skip_policy: SkipPolicy,
     /// Rotation mode: per-handoff latency model for the virtual-time
     /// gates (default: none; handoffs land instantly, bit-identical
@@ -344,6 +397,11 @@ pub struct RunConfig {
     /// injected compute rather than scheduler noise at smoke scale; the
     /// `STRADS_THREADS_PACE_MS` env var raises it further for CLI runs.
     pub threads_pace_secs: f64,
+    /// Event tracing: `Off` (default, zero-cost), `Record` (the run's
+    /// [`Trace`] + fingerprint land in [`RunResult`]), or
+    /// `Replay(trace)` (re-drive skip decisions and queue service order
+    /// from a recorded trace, bit-exact; requires `BackendKind::Sim`).
+    pub trace: TraceMode,
 }
 
 impl Default for RunConfig {
@@ -362,7 +420,194 @@ impl Default for RunConfig {
             handoff_jitter: HandoffJitter::None,
             backend: BackendKind::Sim,
             threads_pace_secs: 0.0,
+            trace: TraceMode::Off,
         }
+    }
+}
+
+impl RunConfig {
+    /// A validating fluent builder ([`RunConfigBuilder`]): rejects
+    /// incoherent combinations (e.g. `SkipPolicy::Defer` outside
+    /// `Rotation` mode) at construction instead of silently ignoring
+    /// them at run time.  The plain struct stays public — struct-literal
+    /// construction remains valid where a test *wants* an incoherent
+    /// combination (e.g. to exercise degradation).
+    pub fn builder() -> RunConfigBuilder {
+        RunConfigBuilder { cfg: RunConfig::default() }
+    }
+}
+
+/// Fluent, validating constructor for [`RunConfig`] — see
+/// [`RunConfig::builder`].
+///
+/// ```
+/// use strads::coordinator::{ExecutionMode, QueueOrder, RunConfig};
+/// let cfg = RunConfig::builder()
+///     .max_rounds(24)
+///     .eval_every(6)
+///     .mode(ExecutionMode::Rotation { depth: 2 })
+///     .queue_order(QueueOrder::Availability)
+///     .build()
+///     .unwrap();
+/// assert_eq!(cfg.queue_order, QueueOrder::Availability);
+/// // a reorder request outside rotation mode is incoherent:
+/// assert!(RunConfig::builder()
+///     .queue_order(QueueOrder::Dynamic)
+///     .build()
+///     .is_err());
+/// ```
+#[derive(Debug, Clone)]
+pub struct RunConfigBuilder {
+    cfg: RunConfig,
+}
+
+impl RunConfigBuilder {
+    pub fn max_rounds(mut self, v: u64) -> Self {
+        self.cfg.max_rounds = v;
+        self
+    }
+
+    pub fn eval_every(mut self, v: u64) -> Self {
+        self.cfg.eval_every = v;
+        self
+    }
+
+    pub fn rel_tol(mut self, v: Option<f64>) -> Self {
+        self.cfg.rel_tol = v;
+        self
+    }
+
+    pub fn network(mut self, v: NetworkConfig) -> Self {
+        self.cfg.network = v;
+        self
+    }
+
+    pub fn mem_capacity(mut self, v: Option<u64>) -> Self {
+        self.cfg.mem_capacity = v;
+        self
+    }
+
+    pub fn label(mut self, v: impl Into<String>) -> Self {
+        self.cfg.label = v.into();
+        self
+    }
+
+    pub fn mode(mut self, v: ExecutionMode) -> Self {
+        self.cfg.mode = v;
+        self
+    }
+
+    pub fn straggler(mut self, v: StragglerModel) -> Self {
+        self.cfg.straggler = v;
+        self
+    }
+
+    pub fn queue_order(mut self, v: QueueOrder) -> Self {
+        self.cfg.queue_order = v;
+        self
+    }
+
+    pub fn skip_policy(mut self, v: SkipPolicy) -> Self {
+        self.cfg.skip_policy = v;
+        self
+    }
+
+    pub fn handoff_jitter(mut self, v: HandoffJitter) -> Self {
+        self.cfg.handoff_jitter = v;
+        self
+    }
+
+    pub fn backend(mut self, v: BackendKind) -> Self {
+        self.cfg.backend = v;
+        self
+    }
+
+    pub fn threads_pace_secs(mut self, v: f64) -> Self {
+        self.cfg.threads_pace_secs = v;
+        self
+    }
+
+    pub fn trace(mut self, v: TraceMode) -> Self {
+        self.cfg.trace = v;
+        self
+    }
+
+    /// Validate coherence and return the config.
+    ///
+    /// Rejected combinations:
+    /// * zero `max_rounds` / `eval_every`;
+    /// * a non-`Strict` queue order, a `Defer` skip policy, or handoff
+    ///   jitter outside `Rotation` mode (they would be silently inert);
+    /// * `threads_pace_secs > 0` on the `Sim` backend;
+    /// * `TraceMode::Replay` on the `Threads` backend (replay re-drives
+    ///   recorded decisions through the deterministic sim).
+    pub fn build(self) -> Result<RunConfig, String> {
+        let cfg = self.cfg;
+        if cfg.max_rounds == 0 {
+            return Err("max_rounds must be positive".into());
+        }
+        if cfg.eval_every == 0 {
+            return Err("eval_every must be positive".into());
+        }
+        let rotation = matches!(cfg.mode, ExecutionMode::Rotation { .. });
+        if !rotation {
+            if cfg.queue_order != QueueOrder::Strict {
+                return Err(format!(
+                    "queue_order {:?} requires ExecutionMode::Rotation",
+                    cfg.queue_order
+                ));
+            }
+            if cfg.skip_policy != SkipPolicy::Never {
+                return Err(format!(
+                    "skip_policy {:?} requires ExecutionMode::Rotation",
+                    cfg.skip_policy
+                ));
+            }
+            if !matches!(cfg.handoff_jitter, HandoffJitter::None) {
+                return Err(
+                    "handoff_jitter requires ExecutionMode::Rotation".into()
+                );
+            }
+        }
+        if cfg.threads_pace_secs > 0.0 && cfg.backend != BackendKind::Threads {
+            return Err(
+                "threads_pace_secs requires BackendKind::Threads".into()
+            );
+        }
+        if matches!(cfg.trace, TraceMode::Replay(_))
+            && cfg.backend != BackendKind::Sim
+        {
+            return Err(
+                "TraceMode::Replay requires BackendKind::Sim (replay \
+                 re-drives recorded decisions deterministically)"
+                    .into(),
+            );
+        }
+        Ok(cfg)
+    }
+
+    /// Like [`RunConfigBuilder::build`], additionally checked against a
+    /// specific app's [`StradsApp::rotation_caps`]: a queue-order or
+    /// skip-policy request the app would degrade is rejected up front
+    /// (callers that *want* degradation use `build()` or the plain
+    /// struct).
+    pub fn build_for<A: StradsApp>(self) -> Result<RunConfig, String> {
+        let caps = A::rotation_caps();
+        if self.cfg.queue_order != QueueOrder::Strict && !caps.queue_reorder {
+            return Err(format!(
+                "queue_order {:?} requested but the app cannot reorder its \
+                 queues (RotationCaps::queue_reorder is false)",
+                self.cfg.queue_order
+            ));
+        }
+        if self.cfg.skip_policy != SkipPolicy::Never && !caps.skip {
+            return Err(format!(
+                "skip_policy {:?} requested but the app cannot skip slices \
+                 (RotationCaps::skip is false)",
+                self.cfg.skip_policy
+            ));
+        }
+        self.build()
     }
 }
 
@@ -401,6 +646,13 @@ pub struct RunResult {
     /// Pipeline accounting (observed staleness, straggler wait hidden) for
     /// SSP *and* rotation-pipelined runs; None for BSP runs.
     pub ssp: Option<SspStats>,
+    /// The run's trace fingerprint ([`crate::trace::fingerprint`]) when
+    /// tracing was on (`Record` or `Replay`); None when off.  A replayed
+    /// run's fingerprint equals the original's, and a threaded run's
+    /// equals its sim twin's on the same seed.
+    pub fingerprint: Option<u64>,
+    /// The recorded event trace when tracing was on; None when off.
+    pub trace: Option<Trace>,
 }
 
 /// One dispatched-but-uncollected round in the SSP window.
@@ -434,6 +686,25 @@ fn round_slowdowns(backend: &dyn ExecBackend, round: u64, n: usize) -> Vec<f64> 
     (0..n)
         .map(|p| backend.physical_slowdown(p, round, n))
         .collect()
+}
+
+/// Close out a run's trace: snapshot the ring buffer into a [`Trace`]
+/// and fingerprint it (`(None, None)` when tracing was off).
+fn finish_trace(
+    plumbing: &TracePlumbing,
+    backend: BackendKind,
+) -> (Option<u64>, Option<Trace>) {
+    match &plumbing.sink {
+        Some(sink) => {
+            let t = Trace {
+                backend: backend.to_string(),
+                events: sink.snapshot(),
+            };
+            let fp = t.fingerprint();
+            (Some(fp), Some(t))
+        }
+        None => (None, None),
+    }
 }
 
 /// The coordinator: owns the app, the worker pool, and all accounting.
@@ -531,7 +802,14 @@ impl<A: StradsApp> Engine<A> {
     /// dispatch half of the pipeline).  Returns the pending handle and the
     /// measured schedule seconds.
     fn dispatch_round(&mut self, round_idx: u64) -> (PendingRound<A::Partial>, f64) {
-        self.dispatch_round_inner(round_idx, false, false, &[], 0.0)
+        self.dispatch_round_inner(
+            round_idx,
+            false,
+            false,
+            &[],
+            0.0,
+            &TracePlumbing::default(),
+        )
     }
 
     /// `routed`: rotation mode — tasks carry only scheduling metadata plus
@@ -553,6 +831,7 @@ impl<A: StradsApp> Engine<A> {
         may_skip: bool,
         slowdowns: &[f64],
         pace_floor: f64,
+        plumbing: &TracePlumbing,
     ) -> (PendingRound<A::Partial>, f64) {
         let sw = Stopwatch::start();
         let tasks = self.app.schedule(round_idx);
@@ -570,6 +849,24 @@ impl<A: StradsApp> Engine<A> {
                     may_skip || !granted.is_empty(),
                     "rotation task must carry at least one lease"
                 );
+                for tok in &granted {
+                    plumbing.record(Event::Grant {
+                        round: round_idx,
+                        worker: p,
+                        slice: tok.slice_id,
+                        version: tok.version,
+                    });
+                    // replay cross-check: the re-driven schedule must
+                    // grant exactly what the recorded run granted
+                    if let Some(rep) = &plumbing.replayer {
+                        assert!(
+                            rep.granted(round_idx, p, tok.slice_id),
+                            "replay diverged: round {round_idx} granted \
+                             slice {} to worker {p}, absent from the trace",
+                            tok.slice_id
+                        );
+                    }
+                }
                 leases.push(granted);
             }
         } else {
@@ -666,8 +963,14 @@ impl<A: StradsApp> Engine<A> {
         let n = self.pool.n_workers();
         let slow = round_slowdowns(backend, round_idx, n);
         let pace = backend.pace_floor_secs();
-        let (pending, schedule_secs) =
-            self.dispatch_round_inner(round_idx, false, false, &slow, pace);
+        let (pending, schedule_secs) = self.dispatch_round_inner(
+            round_idx,
+            false,
+            false,
+            &slow,
+            pace,
+            &TracePlumbing::default(),
+        );
         let dispatched_at = backend.on_dispatch(schedule_secs, wall.secs());
         let (mut compute_secs, _, pull_secs) =
             self.collect_round(round_idx, pending);
@@ -722,6 +1025,12 @@ impl<A: StradsApp> Engine<A> {
     /// (when supported) or BSP; Rotation on a non-rotating app runs as
     /// `Ssp { staleness: depth - 1 }` (when tolerated) or BSP.
     pub fn run(&mut self, cfg: &RunConfig) -> RunResult {
+        assert!(
+            !matches!(cfg.trace, TraceMode::Replay(_))
+                || cfg.backend == BackendKind::Sim,
+            "TraceMode::Replay requires BackendKind::Sim (replay re-drives \
+             recorded decisions deterministically)"
+        );
         match cfg.mode {
             ExecutionMode::Ssp { staleness } if A::supports_ssp() => {
                 self.run_ssp(cfg, staleness)
@@ -744,6 +1053,7 @@ impl<A: StradsApp> Engine<A> {
     fn run_bsp(&mut self, cfg: &RunConfig) -> RunResult {
         let wall = Stopwatch::start();
         let block0 = self.app.data_plane_block_secs();
+        let plumbing = TracePlumbing::from_mode(&cfg.trace);
         // the sim path stays on Engine::round (untouched virtual-clock
         // arithmetic); only the threaded backend routes through round_with
         let mut backend = match self.backend_kind {
@@ -751,12 +1061,19 @@ impl<A: StradsApp> Engine<A> {
             BackendKind::Threads => {
                 let mut b = self.make_run_backend();
                 b.begin_run(self.clock.seconds(), self.pool.n_workers(), 0);
+                if let Some(sink) = &plumbing.sink {
+                    b.install_trace(sink.clone());
+                }
                 Some(b)
             }
         };
         let mut recorder = Recorder::new(&cfg.label);
         let mut last_obj = self.evaluate();
         recorder.record(0, self.clock.seconds(), wall.secs(), last_obj);
+        plumbing.record(Event::Eval {
+            round: 0,
+            objective_bits: last_obj.to_bits(),
+        });
         let mut oom = None;
 
         let mut rounds_run = 0;
@@ -773,6 +1090,10 @@ impl<A: StradsApp> Engine<A> {
             if (r + 1) % cfg.eval_every == 0 || r + 1 == cfg.max_rounds {
                 let obj = self.evaluate();
                 recorder.record(r + 1, self.clock.seconds(), wall.secs(), obj);
+                plumbing.record(Event::Eval {
+                    round: r + 1,
+                    objective_bits: obj.to_bits(),
+                });
                 if let Err(e) = self.memory_census() {
                     oom = Some(e);
                     break;
@@ -788,6 +1109,7 @@ impl<A: StradsApp> Engine<A> {
             }
         }
 
+        let (fingerprint, trace) = finish_trace(&plumbing, self.backend_kind);
         RunResult {
             rounds_run,
             virtual_secs: self.clock.seconds(),
@@ -805,6 +1127,8 @@ impl<A: StradsApp> Engine<A> {
             recorder,
             oom,
             ssp: None,
+            fingerprint,
+            trace,
         }
     }
 
@@ -824,8 +1148,12 @@ impl<A: StradsApp> Engine<A> {
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
         let block0 = self.app.data_plane_block_secs();
+        let plumbing = TracePlumbing::from_mode(&cfg.trace);
         let mut backend = self.make_run_backend();
         backend.begin_run(self.clock.seconds(), n, 0);
+        if let Some(sink) = &plumbing.sink {
+            backend.install_trace(sink.clone());
+        }
         let mut recorder = Recorder::new(&cfg.label);
         let mut stats = SspStats::new();
         let mut vv = VersionVector::new(n);
@@ -837,6 +1165,10 @@ impl<A: StradsApp> Engine<A> {
             last_obj,
             vec![("staleness".into(), 0.0), ("wait_saved_secs".into(), 0.0)],
         );
+        plumbing.record(Event::Eval {
+            round: 0,
+            objective_bits: last_obj.to_bits(),
+        });
         let mut oom = None;
 
         let mut window: VecDeque<InFlight<A::Partial>> = VecDeque::new();
@@ -855,8 +1187,8 @@ impl<A: StradsApp> Engine<A> {
             }
             let slow = round_slowdowns(backend.as_ref(), r, n);
             let pace = backend.pace_floor_secs();
-            let (pending, schedule_secs) =
-                self.dispatch_round_inner(r, false, false, &slow, pace);
+            let (pending, schedule_secs) = self
+                .dispatch_round_inner(r, false, false, &slow, pace, &plumbing);
             let dispatched_at = backend.on_dispatch(schedule_secs, wall.secs());
             window.push_back(InFlight {
                 round: r,
@@ -889,6 +1221,10 @@ impl<A: StradsApp> Engine<A> {
                         ("wait_saved_secs".into(), stats.wait_saved_secs),
                     ],
                 );
+                plumbing.record(Event::Eval {
+                    round: r + 1,
+                    objective_bits: obj.to_bits(),
+                });
                 if let Err(e) = self.memory_census() {
                     oom = Some(e);
                     break 'rounds;
@@ -918,6 +1254,7 @@ impl<A: StradsApp> Engine<A> {
             (self.app.data_plane_block_secs() - block0).max(0.0);
         stats.router_block_secs = router_block;
 
+        let (fingerprint, trace) = finish_trace(&plumbing, self.backend_kind);
         RunResult {
             rounds_run,
             virtual_secs: self.clock.seconds(),
@@ -934,6 +1271,8 @@ impl<A: StradsApp> Engine<A> {
             recorder,
             oom,
             ssp: Some(stats),
+            fingerprint,
+            trace,
         }
     }
 
@@ -1004,6 +1343,7 @@ impl<A: StradsApp> Engine<A> {
         pending: PendingRound<A::Partial>,
         order: QueueOrder,
         backend: &dyn ExecBackend,
+        plumbing: &TracePlumbing,
     ) -> (Vec<Vec<(usize, f64)>>, f64) {
         let n = self.pool.n_workers();
         let granted = pending.leases().to_vec();
@@ -1019,6 +1359,35 @@ impl<A: StradsApp> Engine<A> {
         for (p, (partial, secs)) in results.into_iter().enumerate() {
             self.network.send_up(p, A::partial_bytes(&partial));
             let mut legs = A::partial_legs(&partial);
+            // record the *true sweep order* (before canonicalization):
+            // Take's service_index is the round's scheduling decision
+            // under Availability/Dynamic; the subsequent pull settles
+            // every consumed lease, so Settle is recorded here too
+            if plumbing.is_active() {
+                for (i, leg) in legs.iter().enumerate() {
+                    plumbing.record(Event::Take {
+                        round: round_idx,
+                        worker: p,
+                        slice: leg.token.slice_id,
+                        version: leg.token.version,
+                        service_index: i,
+                        arrival_seq: leg.arrival_seq,
+                    });
+                    plumbing.record(Event::Forward {
+                        round: round_idx,
+                        worker: p,
+                        slice: leg.token.slice_id,
+                        version: leg.token.version,
+                        dest: leg.dest_worker,
+                        bytes: leg.bytes,
+                    });
+                    plumbing.record(Event::Settle {
+                        round: round_idx,
+                        slice: leg.token.slice_id,
+                        version: leg.token.version,
+                    });
+                }
+            }
             match order {
                 QueueOrder::Strict => {
                     let consumed: Vec<LeaseToken> =
@@ -1128,7 +1497,7 @@ impl<A: StradsApp> Engine<A> {
     /// the in-flight handoffs.  Under [`QueueOrder::Strict`] the queue is
     /// serviced in ring-position order; under
     /// [`QueueOrder::Availability`] (apps opting in via
-    /// [`StradsApp::supports_queue_reorder`]) it is serviced
+    /// [`StradsApp::rotation_caps`]) it is serviced
     /// earliest-ready-first, which for a single worker's round is the
     /// makespan-optimal discipline for its release times — a worker never
     /// idles on one in-flight handoff while another queued slice sits
@@ -1136,7 +1505,7 @@ impl<A: StradsApp> Engine<A> {
     /// and additionally sweeps the heaviest parked slice first, so the
     /// sweep gating the most downstream compute releases its handoff
     /// earliest.  [`crate::scheduler::rotation::SkipPolicy::Defer`] (apps
-    /// opting in via [`StradsApp::supports_skip`]) goes further: a slice
+    /// opting in via [`StradsApp::rotation_caps`]) goes further: a slice
     /// still in flight at schedule time is left out of the round entirely
     /// and leased later, bounded by a per-slice
     /// [`crate::scheduler::CoverageDebtLedger`] budget so coverage still
@@ -1151,6 +1520,7 @@ impl<A: StradsApp> Engine<A> {
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
         let block0 = self.app.data_plane_block_secs();
+        let plumbing = TracePlumbing::from_mode(&cfg.trace);
         let mut recorder = Recorder::new(&cfg.label);
         let mut stats = SspStats::new();
         let mut vv = VersionVector::new(n);
@@ -1158,19 +1528,14 @@ impl<A: StradsApp> Engine<A> {
         // can service its queue out of order, and Defer only when its
         // schedule can leave a slice out of a round; everything else
         // degrades to the strict ring discipline / the always-grant
-        // schedule (README: mode-degradation table).
-        let order = match cfg.queue_order {
-            QueueOrder::Strict => QueueOrder::Strict,
-            reorder if A::supports_queue_reorder() => reorder,
-            _ => QueueOrder::Strict,
-        };
-        let skip = match cfg.skip_policy {
-            SkipPolicy::Defer { .. } if A::supports_skip() => cfg.skip_policy,
-            _ => SkipPolicy::Never,
-        };
-        let may_skip = skip != SkipPolicy::Never;
-        self.app.set_queue_order(order);
-        self.app.set_skip_policy(skip);
+        // schedule — one code path, EffectiveConfig::negotiate (README:
+        // mode-degradation table).  install_trace follows negotiate (the
+        // skip policy's debt ledger exists by then) and precedes
+        // begin_rotation.
+        let eff = self.app.negotiate(cfg);
+        let order = eff.queue_order;
+        let may_skip = eff.skip_policy != SkipPolicy::Never;
+        self.app.install_trace(plumbing.clone());
         self.app.begin_rotation(depth);
         let n_slices = self.app.n_rotation_slices();
         assert!(
@@ -1186,11 +1551,18 @@ impl<A: StradsApp> Engine<A> {
             last_obj,
             vec![("staleness".into(), 0.0), ("wait_saved_secs".into(), 0.0)],
         );
+        plumbing.record(Event::Eval {
+            round: 0,
+            objective_bits: last_obj.to_bits(),
+        });
         let mut oom = None;
 
         let mut window: VecDeque<InFlight<A::Partial>> = VecDeque::new();
         let mut backend = self.make_run_backend();
         backend.begin_run(self.clock.seconds(), n, n_slices);
+        if let Some(sink) = &plumbing.sink {
+            backend.install_trace(sink.clone());
+        }
         let mut prog = RotProgress {
             grants: vec![0; n_slices],
             collected: 0,
@@ -1209,12 +1581,13 @@ impl<A: StradsApp> Engine<A> {
                     depth,
                     order,
                     &cfg.handoff_jitter,
+                    &plumbing,
                 );
             }
             let slow = round_slowdowns(backend.as_ref(), r, n);
             let pace = backend.pace_floor_secs();
-            let (pending, schedule_secs) =
-                self.dispatch_round_inner(r, true, may_skip, &slow, pace);
+            let (pending, schedule_secs) = self
+                .dispatch_round_inner(r, true, may_skip, &slow, pace, &plumbing);
             let dispatched_at = backend.on_dispatch(schedule_secs, wall.secs());
             window.push_back(InFlight {
                 round: r,
@@ -1238,6 +1611,7 @@ impl<A: StradsApp> Engine<A> {
                         depth,
                         order,
                         &cfg.handoff_jitter,
+                        &plumbing,
                     );
                 }
                 let obj = self.evaluate();
@@ -1251,6 +1625,10 @@ impl<A: StradsApp> Engine<A> {
                         ("wait_saved_secs".into(), stats.wait_saved_secs),
                     ],
                 );
+                plumbing.record(Event::Eval {
+                    round: r + 1,
+                    objective_bits: obj.to_bits(),
+                });
                 if let Err(e) = self.memory_census() {
                     oom = Some(e);
                     break 'rounds;
@@ -1277,6 +1655,7 @@ impl<A: StradsApp> Engine<A> {
                 depth,
                 order,
                 &cfg.handoff_jitter,
+                &plumbing,
             );
         }
         // sample the data-plane block counter before end_rotation
@@ -1286,6 +1665,7 @@ impl<A: StradsApp> Engine<A> {
         stats.router_block_secs = router_block;
         self.app.end_rotation();
 
+        let (fingerprint, trace) = finish_trace(&plumbing, self.backend_kind);
         RunResult {
             rounds_run,
             virtual_secs: self.clock.seconds(),
@@ -1302,6 +1682,8 @@ impl<A: StradsApp> Engine<A> {
             recorder,
             oom,
             ssp: Some(stats),
+            fingerprint,
+            trace,
         }
     }
 
@@ -1321,6 +1703,7 @@ impl<A: StradsApp> Engine<A> {
         depth: u64,
         order: QueueOrder,
         jitter: &HandoffJitter,
+        plumbing: &TracePlumbing,
     ) {
         let inflight = window.pop_front().expect("window not empty");
         for p in 0..self.pool.n_workers() {
@@ -1338,6 +1721,7 @@ impl<A: StradsApp> Engine<A> {
             inflight.pending,
             order,
             &*backend,
+            plumbing,
         );
         // every rotation pull commits coordinator state (settled leases +
         // refreshed sums) even without a sync broadcast

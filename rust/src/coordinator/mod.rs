@@ -8,8 +8,10 @@
 pub mod engine;
 
 pub use engine::{
-    replay_queue, Engine as StradsEngine, ExecutionMode, HandoffLeg,
-    RunConfig, RunResult, StradsApp,
+    replay_queue, EffectiveConfig, Engine as StradsEngine, ExecutionMode,
+    HandoffLeg, RotationCaps, RunConfig, RunConfigBuilder, RunResult,
+    StradsApp,
 };
 pub use crate::cluster::BackendKind;
 pub use crate::scheduler::rotation::{QueueOrder, SkipPolicy};
+pub use crate::trace::{Trace, TraceMode};

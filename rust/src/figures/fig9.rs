@@ -7,7 +7,9 @@
 
 use crate::baselines::{AlsConfig, AlsMf, YahooLda, YahooLdaConfig};
 use crate::cluster::{HandoffJitter, NetworkConfig, StragglerModel};
-use crate::coordinator::{BackendKind, ExecutionMode, QueueOrder, RunConfig};
+use crate::coordinator::{
+    BackendKind, ExecutionMode, QueueOrder, RunConfig, TraceMode,
+};
 use crate::datagen::mf_ratings::{self, MfGenConfig};
 use crate::figures::common::{
     figure_corpus, lasso_engine_corr, lda_engine, lda_engine_sliced,
@@ -46,13 +48,13 @@ pub fn run_lda(cfg: &Fig9Config) -> Panel {
         figure_corpus(sc(10_000, cfg.scale), sc(1_000, cfg.scale), cfg.seed);
     let k = sc(64, cfg.scale);
     let sweeps = 20u64;
-    let run_cfg = RunConfig {
-        max_rounds: sweeps * cfg.n_workers as u64,
-        eval_every: cfg.n_workers as u64,
-        network: NetworkConfig::gbps1(),
-        label: "STRADS-LDA".into(),
-        ..Default::default()
-    };
+    let run_cfg = RunConfig::builder()
+        .max_rounds(sweeps * cfg.n_workers as u64)
+        .eval_every(cfg.n_workers as u64)
+        .network(NetworkConfig::gbps1())
+        .label("STRADS-LDA")
+        .build()
+        .expect("static fig9 config");
     let mut strads = lda_engine(&corpus, k, cfg.n_workers, cfg.seed, &run_cfg);
     let strads_rec = strads.run(&run_cfg).recorder;
 
@@ -83,13 +85,13 @@ pub fn run_mf(cfg: &Fig9Config) -> Panel {
     let rank = sc(32, cfg.scale);
     let lambda = 0.05f32;
     let sweeps = 10u64;
-    let run_cfg = RunConfig {
-        max_rounds: sweeps * 2 * rank as u64,
-        eval_every: 2 * rank as u64,
-        network: NetworkConfig::gbps40(),
-        label: "STRADS-MF".into(),
-        ..Default::default()
-    };
+    let run_cfg = RunConfig::builder()
+        .max_rounds(sweeps * 2 * rank as u64)
+        .eval_every(2 * rank as u64)
+        .network(NetworkConfig::gbps40())
+        .label("STRADS-MF")
+        .build()
+        .expect("static fig9 config");
     let mut strads = mf_engine(
         users, items, rank, cfg.n_workers, lambda, cfg.seed, &run_cfg,
     );
@@ -126,19 +128,22 @@ pub fn run_lasso(cfg: &Fig9Config) -> Panel {
     let j = sc(16_384, cfg.scale);
     let u = 32;
     let rounds = 500u64;
-    let run_cfg = RunConfig {
-        max_rounds: rounds,
-        eval_every: rounds / 25,
-        network: NetworkConfig::gbps40(),
-        label: "STRADS-Lasso".into(),
-        ..Default::default()
+    let mk = |label: &str| {
+        RunConfig::builder()
+            .max_rounds(rounds)
+            .eval_every(rounds / 25)
+            .network(NetworkConfig::gbps40())
+            .label(label)
+            .build()
+            .expect("static fig9 config")
     };
+    let run_cfg = mk("STRADS-Lasso");
     let (mut strads, _) = lasso_engine_corr(
         n, j, cfg.n_workers, u, true, 0.08, 0.9, cfg.seed, &run_cfg,
     );
     let strads_rec = strads.run(&run_cfg).recorder;
 
-    let rr_cfg = RunConfig { label: "Lasso-RR".into(), ..run_cfg.clone() };
+    let rr_cfg = mk("Lasso-RR");
     let (mut rr, _) = lasso_engine_corr(
         n, j, cfg.n_workers, u, false, 0.08, 0.9, cfg.seed, &rr_cfg,
     );
@@ -210,15 +215,15 @@ pub fn run_mode_comparison(
             // ideal fabric: the arm isolates the straggler *compute* skew
             // (at figure scale, per-message latency would otherwise dwarf
             // the microsecond-level push compute in both modes)
-            let run_cfg = RunConfig {
-                max_rounds: rounds,
-                eval_every: rounds / 10,
-                network: NetworkConfig::ideal(),
-                label: label.into(),
-                mode,
-                straggler: straggler.clone(),
-                ..Default::default()
-            };
+            let run_cfg = RunConfig::builder()
+                .max_rounds(rounds)
+                .eval_every(rounds / 10)
+                .network(NetworkConfig::ideal())
+                .label(label)
+                .mode(mode)
+                .straggler(straggler.clone())
+                .build()
+                .expect("static fig9 config");
             let (mut e, _) = lasso_engine_corr(
                 n, j, cfg.n_workers, u, true, 0.05, 0.9, cfg.seed, &run_cfg,
             );
@@ -236,15 +241,15 @@ pub fn run_mode_comparison(
         let rank = sc(16, cfg.scale);
         let sweeps = 6u64;
         let run = |mode: ExecutionMode, label: &str| {
-            let run_cfg = RunConfig {
-                max_rounds: sweeps * 2 * rank as u64,
-                eval_every: 2 * rank as u64,
-                network: NetworkConfig::ideal(), // isolate the compute skew
-                label: label.into(),
-                mode,
-                straggler: straggler.clone(),
-                ..Default::default()
-            };
+            let run_cfg = RunConfig::builder()
+                .max_rounds(sweeps * 2 * rank as u64)
+                .eval_every(2 * rank as u64)
+                .network(NetworkConfig::ideal()) // isolate the compute skew
+                .label(label)
+                .mode(mode)
+                .straggler(straggler.clone())
+                .build()
+                .expect("static fig9 config");
             let mut e = mf_engine(
                 users, items, rank, cfg.n_workers, 0.05, cfg.seed, &run_cfg,
             );
@@ -272,15 +277,15 @@ pub fn run_rotation_comparison(
     let sweeps = 8u64;
     let straggler = StragglerModel::Rotating { factor: straggler_factor };
     let run = |mode: ExecutionMode, label: &str| {
-        let run_cfg = RunConfig {
-            max_rounds: sweeps * cfg.n_workers as u64,
-            eval_every: cfg.n_workers as u64,
-            network: NetworkConfig::ideal(), // isolate the compute skew
-            label: label.into(),
-            mode,
-            straggler: straggler.clone(),
-            ..Default::default()
-        };
+        let run_cfg = RunConfig::builder()
+            .max_rounds(sweeps * cfg.n_workers as u64)
+            .eval_every(cfg.n_workers as u64)
+            .network(NetworkConfig::ideal()) // isolate the compute skew
+            .label(label)
+            .mode(mode)
+            .straggler(straggler.clone())
+            .build()
+            .expect("static fig9 config");
         let mut e = lda_engine(&corpus, k, cfg.n_workers, cfg.seed, &run_cfg);
         e.run(&run_cfg)
     };
@@ -320,15 +325,15 @@ pub fn run_multislice_comparison(
     let sweeps = 8u64;
     let straggler = StragglerModel::Rotating { factor: straggler_factor };
     let run = |n_slices: usize, label: &str| {
-        let run_cfg = RunConfig {
-            max_rounds: sweeps * cfg.n_workers as u64,
-            eval_every: 2 * cfg.n_workers as u64,
-            network: NetworkConfig::ideal(), // isolate the compute skew
-            label: label.into(),
-            mode: ExecutionMode::Rotation { depth },
-            straggler: straggler.clone(),
-            ..Default::default()
-        };
+        let run_cfg = RunConfig::builder()
+            .max_rounds(sweeps * cfg.n_workers as u64)
+            .eval_every(2 * cfg.n_workers as u64)
+            .network(NetworkConfig::ideal()) // isolate the compute skew
+            .label(label)
+            .mode(ExecutionMode::Rotation { depth })
+            .straggler(straggler.clone())
+            .build()
+            .expect("static fig9 config");
         let mut e = lda_engine_sliced(
             &corpus, k, cfg.n_workers, n_slices, cfg.seed, &run_cfg,
         );
@@ -379,17 +384,17 @@ pub fn run_availability_comparison(
     let sweeps = 8u64;
     let straggler = StragglerModel::Rotating { factor: straggler_factor };
     let run = |order: QueueOrder, label: String| {
-        let run_cfg = RunConfig {
-            max_rounds: sweeps * cfg.n_workers as u64,
-            eval_every: 2 * cfg.n_workers as u64,
-            network: NetworkConfig::ideal(), // isolate compute + handoffs
-            label,
-            mode: ExecutionMode::Rotation { depth },
-            straggler: straggler.clone(),
-            queue_order: order,
-            handoff_jitter: jitter.clone(),
-            ..Default::default()
-        };
+        let run_cfg = RunConfig::builder()
+            .max_rounds(sweeps * cfg.n_workers as u64)
+            .eval_every(2 * cfg.n_workers as u64)
+            .network(NetworkConfig::ideal()) // isolate compute + handoffs
+            .label(label)
+            .mode(ExecutionMode::Rotation { depth })
+            .straggler(straggler.clone())
+            .queue_order(order)
+            .handoff_jitter(jitter.clone())
+            .build()
+            .expect("static fig9 config");
         let mut e = lda_engine_sliced(
             &corpus,
             k,
@@ -448,17 +453,17 @@ pub fn run_dynamic_comparison(
         .collect();
     let straggler = StragglerModel::Rotating { factor: straggler_factor };
     let run = |order: QueueOrder, label: String| {
-        let run_cfg = RunConfig {
-            max_rounds: sweeps * cfg.n_workers as u64,
-            eval_every: 2 * cfg.n_workers as u64,
-            network: NetworkConfig::ideal(), // isolate compute + handoffs
-            label,
-            mode: ExecutionMode::Rotation { depth },
-            straggler: straggler.clone(),
-            queue_order: order,
-            handoff_jitter: jitter.clone(),
-            ..Default::default()
-        };
+        let run_cfg = RunConfig::builder()
+            .max_rounds(sweeps * cfg.n_workers as u64)
+            .eval_every(2 * cfg.n_workers as u64)
+            .network(NetworkConfig::ideal()) // isolate compute + handoffs
+            .label(label)
+            .mode(ExecutionMode::Rotation { depth })
+            .straggler(straggler.clone())
+            .queue_order(order)
+            .handoff_jitter(jitter.clone())
+            .build()
+            .expect("static fig9 config");
         let mut e = lda_engine_sliced_targets(
             &corpus, k, cfg.n_workers, u, &targets, cfg.seed, &run_cfg,
         );
@@ -500,14 +505,14 @@ pub fn run_mf_block_comparison(
 
     // CCD: 6 full sweeps (the SSP-arm recipe)
     let ccd_sweeps = 6u64;
-    let ccd_cfg = RunConfig {
-        max_rounds: ccd_sweeps * 2 * rank as u64,
-        eval_every: 2 * rank as u64,
-        network: NetworkConfig::ideal(),
-        label: "MF-BSP".into(),
-        straggler: straggler.clone(),
-        ..Default::default()
-    };
+    let ccd_cfg = RunConfig::builder()
+        .max_rounds(ccd_sweeps * 2 * rank as u64)
+        .eval_every(2 * rank as u64)
+        .network(NetworkConfig::ideal())
+        .label("MF-BSP")
+        .straggler(straggler.clone())
+        .build()
+        .expect("static fig9 config");
     let mut ccd_engine = mf_engine_dense(
         users, items, rank, cfg.n_workers, lambda, density, cfg.seed,
         &ccd_cfg,
@@ -517,15 +522,15 @@ pub fn run_mf_block_comparison(
     // block rotation: ~24 data passes (each rating is swept once every P
     // rounds on average), U = 2P blocks, pipelined handoffs
     let sgd_sweeps = 24u64;
-    let sgd_cfg = RunConfig {
-        max_rounds: sgd_sweeps * cfg.n_workers as u64,
-        eval_every: 4 * cfg.n_workers as u64,
-        network: NetworkConfig::ideal(),
-        label: "MF-block-rotation".into(),
-        mode: ExecutionMode::Rotation { depth },
-        straggler,
-        ..Default::default()
-    };
+    let sgd_cfg = RunConfig::builder()
+        .max_rounds(sgd_sweeps * cfg.n_workers as u64)
+        .eval_every(4 * cfg.n_workers as u64)
+        .network(NetworkConfig::ideal())
+        .label("MF-block-rotation")
+        .mode(ExecutionMode::Rotation { depth })
+        .straggler(straggler)
+        .build()
+        .expect("static fig9 config");
     let mut sgd_engine = mf_block_engine(
         users,
         items,
@@ -566,6 +571,16 @@ pub struct ThreadsComparison {
     /// Measured seconds threaded workers parked on the slice data plane.
     pub bsp_router_block_secs: f64,
     pub pipelined_router_block_secs: f64,
+    /// Trace fingerprints of the pipelined run under each backend.  The
+    /// Strict/Never protocol emits the same grant/take/forward/settle/eval
+    /// event set regardless of timing, so the two must be equal — the
+    /// cross-backend determinism gate in hash form.
+    pub sim_fingerprint: u64,
+    pub wall_fingerprint: u64,
+    /// Wall seconds the traced threaded pipelined run cost over the
+    /// untraced one (noise can drive it negative at figure scale) — the
+    /// measured price of `TraceMode::Record`.
+    pub trace_overhead_secs: f64,
 }
 
 /// Run the threads-vs-sim validation arm on the LDA rotation workload:
@@ -585,30 +600,63 @@ pub fn run_threads_comparison(
     let k = sc(16, cfg.scale);
     let sweeps = 4u64;
     let straggler = StragglerModel::Rotating { factor: straggler_factor };
-    let run = |mode: ExecutionMode, backend: BackendKind, label: &str| {
-        let run_cfg = RunConfig {
-            max_rounds: sweeps * cfg.n_workers as u64,
-            eval_every: 2 * cfg.n_workers as u64,
-            network: NetworkConfig::ideal(), // isolate the compute skew
-            label: label.into(),
-            mode,
-            straggler: straggler.clone(),
-            backend,
-            threads_pace_secs: match backend {
+    let run = |mode: ExecutionMode,
+               backend: BackendKind,
+               trace: TraceMode,
+               label: &str| {
+        let run_cfg = RunConfig::builder()
+            .max_rounds(sweeps * cfg.n_workers as u64)
+            .eval_every(2 * cfg.n_workers as u64)
+            .network(NetworkConfig::ideal()) // isolate the compute skew
+            .label(label)
+            .mode(mode)
+            .straggler(straggler.clone())
+            .backend(backend)
+            .threads_pace_secs(match backend {
                 BackendKind::Threads => pace_secs,
                 BackendKind::Sim => 0.0,
-            },
-            ..Default::default()
-        };
+            })
+            .trace(trace)
+            .build()
+            .expect("static fig9 config");
         let mut e = lda_engine(&corpus, k, cfg.n_workers, cfg.seed, &run_cfg);
         e.run(&run_cfg)
     };
     let pipe = ExecutionMode::Rotation { depth };
-    let sim_bsp = run(ExecutionMode::Bsp, BackendKind::Sim, "LDA-BSP-sim");
-    let sim_pipe = run(pipe, BackendKind::Sim, "LDA-pipelined-sim");
-    let thr_bsp =
-        run(ExecutionMode::Bsp, BackendKind::Threads, "LDA-BSP-threads");
-    let thr_pipe = run(pipe, BackendKind::Threads, "LDA-pipelined-threads");
+    let sim_bsp = run(
+        ExecutionMode::Bsp,
+        BackendKind::Sim,
+        TraceMode::Off,
+        "LDA-BSP-sim",
+    );
+    // record the pipelined run on BOTH backends: the fingerprints gate
+    // cross-backend event-stream equality, not just final objectives
+    let sim_pipe = run(
+        pipe,
+        BackendKind::Sim,
+        TraceMode::Record,
+        "LDA-pipelined-sim",
+    );
+    let thr_bsp = run(
+        ExecutionMode::Bsp,
+        BackendKind::Threads,
+        TraceMode::Off,
+        "LDA-BSP-threads",
+    );
+    // untraced threaded pipelined run carries the wall-clock gate; the
+    // traced rerun carries the fingerprint and prices the recorder
+    let thr_pipe = run(
+        pipe,
+        BackendKind::Threads,
+        TraceMode::Off,
+        "LDA-pipelined-threads",
+    );
+    let thr_pipe_traced = run(
+        pipe,
+        BackendKind::Threads,
+        TraceMode::Record,
+        "LDA-pipelined-threads-traced",
+    );
     ThreadsComparison {
         app: "LDA-rotation-threads".into(),
         n_workers: cfg.n_workers,
@@ -622,6 +670,13 @@ pub fn run_threads_comparison(
         pipelined_objective: thr_pipe.final_objective,
         bsp_router_block_secs: thr_bsp.router_block_secs,
         pipelined_router_block_secs: thr_pipe.router_block_secs,
+        sim_fingerprint: sim_pipe
+            .fingerprint
+            .expect("recording sim run fingerprints"),
+        wall_fingerprint: thr_pipe_traced
+            .fingerprint
+            .expect("recording threaded run fingerprints"),
+        trace_overhead_secs: thr_pipe_traced.wall_secs - thr_pipe.wall_secs,
     }
 }
 
@@ -649,6 +704,10 @@ pub fn print_threads_comparison(c: &ThreadsComparison) {
         c.sim_bsp_objective,
         c.pipelined_objective,
         c.sim_pipelined_objective
+    );
+    println!(
+        "  fingerprints:   sim {:016x} vs threads {:016x} (trace overhead {:+.4}s)",
+        c.sim_fingerprint, c.wall_fingerprint, c.trace_overhead_secs
     );
 }
 
@@ -978,6 +1037,14 @@ mod tests {
         // wall-clock times are measured and positive
         assert!(c.wall_bsp_secs > 0.0 && c.wall_pipelined_secs > 0.0);
         assert!(c.bsp_router_block_secs >= 0.0);
+        // the traced pipelined runs emit the same event set on both
+        // backends — fingerprints are the determinism gate in hash form
+        assert_eq!(
+            c.sim_fingerprint, c.wall_fingerprint,
+            "sim and threads pipelined fingerprints diverged: \
+             {:016x} vs {:016x}",
+            c.sim_fingerprint, c.wall_fingerprint
+        );
     }
 
     #[test]

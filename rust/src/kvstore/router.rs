@@ -257,6 +257,14 @@ impl<T: Send> SliceRouter<T> {
     /// recent deposit.  Consumers compare stamps across *parked* slices to
     /// sweep earliest-landed-first; a stamp read while the slice is in
     /// flight refers to the previous deposit and means nothing.
+    ///
+    /// Trace contract: a holder reading the stamp of the handoff it just
+    /// consumed must do so **before** its own [`SliceRouter::forward`],
+    /// which re-stamps the slot.  The read cannot race — the holder is
+    /// the slot's sole depositor until it forwards.  The stamp lands in
+    /// [`crate::trace::Event::Take`] as metadata only and is excluded
+    /// from fingerprints (it counts *global* deposits, so it is
+    /// timing-dependent across workers).
     pub fn arrival_seq(&self, slice_id: usize) -> u64 {
         self.arrivals.lock().expect("router arrivals poisoned")[slice_id]
     }

@@ -29,6 +29,7 @@
 //! * [`runtime`] — PJRT client, artifact manifest, executable cache
 //! * [`metrics`] — objectives, s-error (paper eq. 1), recorders
 //! * [`figures`] — one harness per paper figure (3, 5, 8, 9, 10)
+//! * [`trace`] — structured event traces, bit-exact replay, fingerprints
 //! * [`testing`] — minimal property-testing framework (offline substrate)
 
 pub mod apps;
@@ -44,6 +45,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sparse;
 pub mod testing;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result alias.

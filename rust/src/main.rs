@@ -10,8 +10,12 @@
 //! (clap is unavailable in this offline build; `util::Args` provides the
 //! parsing.)
 
+use std::sync::Arc;
 use strads::cluster::NetworkConfig;
-use strads::coordinator::RunConfig;
+use strads::coordinator::{
+    BackendKind, ExecutionMode, QueueOrder, RunConfig, RunResult, SkipPolicy,
+    Trace, TraceMode,
+};
 use strads::figures::{common, fig10, fig3, fig5, fig8, fig9};
 use strads::runtime::ArtifactManifest;
 use strads::util::Args;
@@ -59,6 +63,11 @@ USAGE:
                           slice and lease it later (defer), bounded by
              --debt-limit N   per-slice deferral budget (default 2;
                           coverage completes within U + N rounds)
+      --trace PATH    record the run's event trace to PATH (canonical
+                          text form) and print its fingerprint
+      --replay PATH   re-drive a recorded trace bit-exact under the sim
+                          backend (same flags as the recording run);
+                          exits 1 if the fingerprints diverge
 
   strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
       regenerate a paper figure's rows/series (scaled-down by default)
@@ -97,19 +106,42 @@ fn cmd_train(args: &Args) {
         "backend",
         &cfg_file.get("cluster", "backend").unwrap_or("sim").to_string(),
     );
-    let backend: strads::coordinator::BackendKind =
+    let backend: BackendKind =
         backend_name.parse().unwrap_or_else(|e: String| {
             eprintln!("{e}");
             std::process::exit(2);
         });
-    let run_cfg = RunConfig {
-        max_rounds: rounds,
-        eval_every: (rounds / 20).max(1),
-        network,
-        backend,
-        label: format!("{app}-train"),
-        ..Default::default()
+    let trace_out = args.get("trace").map(str::to_string);
+    let (trace, replay_src_fp) = trace_mode(args);
+    // replay re-drives the recorded schedule under the deterministic sim
+    // backend regardless of the recording backend
+    let backend = if matches!(trace, TraceMode::Replay(_)) {
+        BackendKind::Sim
+    } else {
+        backend
     };
+    let build_cfg = |mode: ExecutionMode,
+                     order: QueueOrder,
+                     skip: SkipPolicy|
+     -> RunConfig {
+        RunConfig::builder()
+            .max_rounds(rounds)
+            .eval_every((rounds / 20).max(1))
+            .network(network.clone())
+            .backend(backend)
+            .mode(mode)
+            .queue_order(order)
+            .skip_policy(skip)
+            .trace(trace.clone())
+            .label(format!("{app}-train"))
+            .build()
+            .unwrap_or_else(|e| {
+                eprintln!("invalid run configuration: {e}");
+                std::process::exit(2);
+            })
+    };
+    let run_cfg =
+        build_cfg(ExecutionMode::Bsp, QueueOrder::Strict, SkipPolicy::Never);
     match app.as_str() {
         "lasso" => {
             let j = args.parse_or(
@@ -141,6 +173,7 @@ fn cmd_train(args: &Args) {
                 res.final_objective,
                 e.app().nnz()
             );
+            trace_report(&res, trace_out.as_deref(), replay_src_fp);
         }
         "mf" => {
             let users = args.parse_or("users", 2_000usize);
@@ -151,11 +184,11 @@ fn cmd_train(args: &Args) {
             if n_blocks > 0 {
                 // block-rotation MF: U >= workers item blocks on the ring
                 let depth = args.parse_or("depth", 1u64);
-                let mut run_cfg = run_cfg.clone();
-                run_cfg.mode =
-                    strads::coordinator::ExecutionMode::Rotation { depth };
-                run_cfg.queue_order = queue_order(args);
-                run_cfg.skip_policy = skip_policy(args);
+                let run_cfg = build_cfg(
+                    ExecutionMode::Rotation { depth },
+                    queue_order(args),
+                    skip_policy(args),
+                );
                 let mut e = common::mf_block_engine(
                     users, items, rank, workers, n_blocks, lambda, 0.08,
                     seed, &run_cfg,
@@ -168,6 +201,7 @@ fn cmd_train(args: &Args) {
                     res.total_p2p_msgs,
                     res.total_handoff_wait_secs
                 );
+                trace_report(&res, trace_out.as_deref(), replay_src_fp);
                 return;
             }
             let mut e = common::mf_engine(
@@ -176,6 +210,7 @@ fn cmd_train(args: &Args) {
             let res = e.run(&run_cfg);
             report(&res.recorder, res.virtual_secs, res.wall_secs);
             println!("final objective {:.6}", res.final_objective);
+            trace_report(&res, trace_out.as_deref(), replay_src_fp);
         }
         "lda" => {
             let vocab = args.parse_or("vocab", 20_000usize);
@@ -183,13 +218,15 @@ fn cmd_train(args: &Args) {
             let k = args.parse_or("topics", 100usize);
             let n_slices = args.parse_or("slices", workers);
             let depth = args.parse_or("depth", 0u64);
-            let mut run_cfg = run_cfg.clone();
-            if depth > 0 {
-                run_cfg.mode =
-                    strads::coordinator::ExecutionMode::Rotation { depth };
-                run_cfg.queue_order = queue_order(args);
-                run_cfg.skip_policy = skip_policy(args);
-            }
+            let run_cfg = if depth > 0 {
+                build_cfg(
+                    ExecutionMode::Rotation { depth },
+                    queue_order(args),
+                    skip_policy(args),
+                )
+            } else {
+                run_cfg
+            };
             let corpus = common::figure_corpus(vocab, docs, seed);
             // n_slices == workers keeps the paper's identity layout; any
             // other value goes through build_sliced, whose U ≥ P assert
@@ -209,6 +246,7 @@ fn cmd_train(args: &Args) {
                 e.app().s_error_history.iter().sum::<f64>()
                     / e.app().s_error_history.len().max(1) as f64
             );
+            trace_report(&res, trace_out.as_deref(), replay_src_fp);
         }
         other => {
             eprintln!("unknown app {other:?}");
@@ -236,6 +274,54 @@ fn skip_policy(args: &Args) -> strads::coordinator::SkipPolicy {
             debt_limit: args.parse_or("debt-limit", 2u64),
         },
         _ => strads::coordinator::SkipPolicy::Never,
+    }
+}
+
+/// `--trace PATH` / `--replay PATH` → the run's trace mode, plus — under
+/// replay — the source trace's fingerprint to compare against.
+fn trace_mode(args: &Args) -> (TraceMode, Option<u64>) {
+    if let Some(path) = args.get("replay") {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read trace {path}: {e}");
+            std::process::exit(2);
+        });
+        let trace = Trace::parse(&text).unwrap_or_else(|e| {
+            eprintln!("cannot parse trace {path}: {e}");
+            std::process::exit(2);
+        });
+        let fp = trace.fingerprint();
+        (TraceMode::Replay(Arc::new(trace)), Some(fp))
+    } else if args.get("trace").is_some() {
+        (TraceMode::Record, None)
+    } else {
+        (TraceMode::Off, None)
+    }
+}
+
+/// Post-run trace handling: print the fingerprint, write the recorded
+/// trace when `--trace` asked for it, and — under `--replay` — compare
+/// the replayed fingerprint to the source's, exiting 1 on divergence.
+fn trace_report(res: &RunResult, out: Option<&str>, source_fp: Option<u64>) {
+    if let Some(fp) = res.fingerprint {
+        println!("trace fingerprint {fp:016x}");
+    }
+    if let (Some(path), Some(trace)) = (out, res.trace.as_ref()) {
+        std::fs::write(path, trace.to_text()).unwrap_or_else(|e| {
+            eprintln!("cannot write trace {path}: {e}");
+            std::process::exit(1);
+        });
+        println!("trace written to {path} ({} events)", trace.events.len());
+    }
+    if let Some(src) = source_fp {
+        let got = res.fingerprint.expect("a replayed run always records");
+        if got != src {
+            eprintln!(
+                "replay fingerprint mismatch: recorded {src:016x}, \
+                 replayed {got:016x}"
+            );
+            std::process::exit(1);
+        }
+        println!("replay fingerprint matches ({src:016x})");
     }
 }
 

@@ -25,6 +25,9 @@
 //! a scheduler that tries to defer anyway panics here with the slice,
 //! round, and debt context.
 
+use crate::trace::{Event, TraceBuffer};
+use std::sync::Arc;
+
 /// Per-slice coverage-debt ledger (see the module docs for the budget
 /// semantics and the `U + debt_limit` coverage bound it buys).
 #[derive(Debug, Clone)]
@@ -33,6 +36,8 @@ pub struct CoverageDebtLedger {
     debt: Vec<u64>,
     debt_limit: u64,
     total_deferrals: u64,
+    /// Trace sink for `DebtCharge` events (None = tracing off).
+    trace: Option<Arc<TraceBuffer>>,
 }
 
 impl CoverageDebtLedger {
@@ -41,7 +46,15 @@ impl CoverageDebtLedger {
             debt: vec![0; n_slices],
             debt_limit,
             total_deferrals: 0,
+            trace: None,
         }
+    }
+
+    /// Attach (or detach) a trace sink: every subsequent
+    /// [`CoverageDebtLedger::record_skip`] emits an [`Event::DebtCharge`]
+    /// carrying the post-charge debt.
+    pub fn install_trace(&mut self, sink: Option<Arc<TraceBuffer>>) {
+        self.trace = sink;
     }
 
     pub fn n_slices(&self) -> usize {
@@ -74,6 +87,13 @@ impl CoverageDebtLedger {
         );
         self.debt[slice_id] += 1;
         self.total_deferrals += 1;
+        if let Some(sink) = &self.trace {
+            sink.push(Event::DebtCharge {
+                round,
+                slice: slice_id,
+                debt: self.debt[slice_id],
+            });
+        }
     }
 
     /// Record a grant.  Debt is a lifetime budget (module docs), so a

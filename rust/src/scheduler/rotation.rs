@@ -29,6 +29,8 @@
 //! "Structure-Aware Dynamic Scheduler").
 
 use crate::scheduler::debt::CoverageDebtLedger;
+use crate::trace::{Event, TraceBuffer, TracePlumbing, TraceReplayer};
+use std::sync::Arc;
 
 /// How a worker services its per-round slice queue.
 ///
@@ -233,6 +235,12 @@ pub struct RotationScheduler {
     pos_of: Vec<usize>,
     /// `Defer` mode only: the per-slice deferral budget.
     debt: Option<CoverageDebtLedger>,
+    /// Trace sink for `Skip` events (None = tracing off).
+    trace: Option<Arc<TraceBuffer>>,
+    /// Replay source: when set, `Defer`'s availability poll is answered by
+    /// the recorded skip set instead of the live signal, so a replayed run
+    /// reproduces the original schedule exactly.
+    replay: Option<Arc<TraceReplayer>>,
 }
 
 impl RotationScheduler {
@@ -258,6 +266,22 @@ impl RotationScheduler {
             skip: SkipPolicy::Never,
             pos_of: Vec::new(),
             debt: None,
+            trace: None,
+            replay: None,
+        }
+    }
+
+    /// Wire this scheduler into a run's trace plumbing: the sink receives
+    /// `Skip` events (and is forwarded into the debt ledger for
+    /// `DebtCharge` events), and a replayer — when present — overrides the
+    /// live availability signal in [`RotationScheduler::next_round_grants`].
+    /// Call after [`RotationScheduler::set_skip_policy`]; installing on a
+    /// `Never`-mode scheduler is a harmless no-op beyond storing the sink.
+    pub fn install_trace(&mut self, plumbing: &TracePlumbing) {
+        self.trace = plumbing.sink.clone();
+        self.replay = plumbing.replayer.clone();
+        if let Some(debt) = &mut self.debt {
+            debt.install_trace(self.trace.clone());
         }
     }
 
@@ -287,8 +311,10 @@ impl RotationScheduler {
             }
             SkipPolicy::Defer { debt_limit } => {
                 self.rebuild_positions();
-                self.debt =
-                    Some(CoverageDebtLedger::new(self.n_slices, debt_limit));
+                let mut ledger =
+                    CoverageDebtLedger::new(self.n_slices, debt_limit);
+                ledger.install_trace(self.trace.clone());
+                self.debt = Some(ledger);
             }
         }
     }
@@ -416,14 +442,30 @@ impl RotationScheduler {
             }
             SkipPolicy::Defer { .. } => {
                 let round = self.counter;
+                let trace = self.trace.clone();
+                let replay = self.replay.clone();
                 let debt = self.debt.as_mut().expect("Defer mode has a ledger");
                 // (position, slice) per worker; sorted below so a queue's
                 // sweep order is position order, exactly like Never mode
                 let mut grants: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p];
                 for a in 0..u {
                     let v = self.pos_of[a];
-                    if !available(a) && debt.may_defer(a) {
+                    // under replay the recorded skip set *is* the
+                    // availability signal: the debt ledger then evolves
+                    // identically to the recorded run's
+                    let avail = match &replay {
+                        Some(rep) => !rep.skipped(round, a),
+                        None => available(a),
+                    };
+                    if !avail && debt.may_defer(a) {
                         debt.record_skip(a, round);
+                        if let Some(sink) = &trace {
+                            sink.push(Event::Skip {
+                                round,
+                                slice: a,
+                                debt: debt.debt(a),
+                            });
+                        }
                         continue; // position frozen: leased next round
                     }
                     debt.record_grant(a);

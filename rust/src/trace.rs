@@ -1,0 +1,791 @@
+//! Structured event tracing, bit-exact replay, and run fingerprinting.
+//!
+//! Every scheduling decision the engine makes — lease grants, queue takes
+//! (with arrival stamp and chosen service order), forwards, settles, skips,
+//! and coverage-debt charges — can be recorded as a compact typed [`Event`]
+//! into a per-run ring-buffered [`TraceBuffer`].  Recording is zero-cost
+//! when disabled: every site holds an `Option<Arc<TraceBuffer>>` and the
+//! disabled path is a `None` check.
+//!
+//! A completed [`Trace`] serializes to a canonical line-oriented text form
+//! (`strads-trace v1`), hashes to a single [`fingerprint`] (FNV-1a,
+//! order-insensitive *within* a round, order-sensitive *across* rounds),
+//! and can re-drive a run bit-exact through a [`TraceReplayer`]:
+//!
+//! * `SkipPolicy::Defer`'s live availability signal is replaced by the
+//!   recorded skip set — the debt ledger then evolves identically, closing
+//!   the speculative-replay gap PR 5 documented;
+//! * `QueueOrder::{Availability, Dynamic}`'s racy service order is replaced
+//!   by the recorded per-(round, worker) sweep order, serviced strictly.
+//!
+//! Why the fingerprint is order-insensitive within a round: a replayed run
+//! emits the same *set* of events per round but may emit them in a
+//! different order (e.g. grant legs are re-queued into recorded service
+//! order before dispatch), so per-round event hashes are combined with a
+//! commutative `wrapping_add` and only the round sequence is chained.
+//! Order *information* is still fingerprinted — `Take::service_index` is
+//! part of the event content.  Two fields are deliberately excluded from
+//! hashing: `Take::arrival_seq` (a global deposit counter stamped by racing
+//! worker threads — diagnostic, not schedule identity) and all
+//! [`Event::Resolve`] events (clock readings; wall time is never
+//! bit-reproducible).
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// One scheduling decision, as recorded by the engine / scheduler / ledger.
+///
+/// `round` is the engine round index for engine-recorded events
+/// (`Grant`/`Take`/`Forward`/`Settle`/`Eval`/`Resolve`) and the scheduler
+/// round counter for scheduler-recorded events (`Skip`/`DebtCharge`); the
+/// two advance in lock-step for rotation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Slice `slice` leased at chain version `version` to worker `worker`.
+    Grant { round: u64, worker: usize, slice: usize, version: u64 },
+    /// Worker `worker` swept `slice` (mailbox version `version`) as its
+    /// `service_index`-th leg of the round; `arrival_seq` is the global
+    /// deposit stamp the mailbox carried (recorded for diagnosis, excluded
+    /// from the fingerprint).
+    Take {
+        round: u64,
+        worker: usize,
+        slice: usize,
+        version: u64,
+        service_index: usize,
+        arrival_seq: u64,
+    },
+    /// Worker `worker` forwarded `slice` at version `version` to ring
+    /// successor `dest`, paying `bytes` on the data plane.
+    Forward {
+        round: u64,
+        worker: usize,
+        slice: usize,
+        version: u64,
+        dest: usize,
+        bytes: usize,
+    },
+    /// The coordinator settled the lease on `slice` at version `version`.
+    Settle { round: u64, slice: usize, version: u64 },
+    /// The scheduler deferred `slice` (still in flight); `debt` is the
+    /// slice's coverage debt *after* the charge.
+    Skip { round: u64, slice: usize, debt: u64 },
+    /// The coverage-debt ledger charged `slice` one deferral; `debt` is the
+    /// post-charge balance.
+    DebtCharge { round: u64, slice: usize, debt: u64 },
+    /// The engine evaluated the objective (`objective_bits` = f64 bits).
+    Eval { round: u64, objective_bits: u64 },
+    /// A backend resolved a round at clock reading `now_bits` (f64 bits).
+    /// Timing-only: never fingerprinted, never replayed.
+    Resolve { round: u64, now_bits: u64 },
+}
+
+impl Event {
+    /// The round this event belongs to.
+    pub fn round(&self) -> u64 {
+        match *self {
+            Event::Grant { round, .. }
+            | Event::Take { round, .. }
+            | Event::Forward { round, .. }
+            | Event::Settle { round, .. }
+            | Event::Skip { round, .. }
+            | Event::DebtCharge { round, .. }
+            | Event::Eval { round, .. }
+            | Event::Resolve { round, .. } => round,
+        }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_u64(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a hash of one event's schedule-identity fields, or `None` for
+/// events excluded from fingerprinting (`Resolve`).
+pub fn event_hash(e: &Event) -> Option<u64> {
+    let mut h = FNV_OFFSET;
+    match *e {
+        Event::Grant { round, worker, slice, version } => {
+            for v in [1, round, worker as u64, slice as u64, version] {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::Take { round, worker, slice, version, service_index, .. } => {
+            // arrival_seq deliberately omitted: the global deposit counter
+            // is stamped by racing worker threads.
+            for v in
+                [2, round, worker as u64, slice as u64, version, service_index as u64]
+            {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::Forward { round, worker, slice, version, dest, bytes } => {
+            for v in [
+                3,
+                round,
+                worker as u64,
+                slice as u64,
+                version,
+                dest as u64,
+                bytes as u64,
+            ] {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::Settle { round, slice, version } => {
+            for v in [4, round, slice as u64, version] {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::Skip { round, slice, debt } => {
+            for v in [5, round, slice as u64, debt] {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::DebtCharge { round, slice, debt } => {
+            for v in [6, round, slice as u64, debt] {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::Eval { round, objective_bits } => {
+            for v in [7, round, objective_bits] {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::Resolve { .. } => return None,
+    }
+    Some(h)
+}
+
+/// Fingerprint an event stream: per-round accumulators combine event
+/// hashes with commutative `wrapping_add` (order-insensitive within a
+/// round), then rounds are chained in ascending order (order-sensitive
+/// across rounds).
+pub fn fingerprint(events: &[Event]) -> u64 {
+    let mut rounds: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events {
+        if let Some(h) = event_hash(e) {
+            let acc = rounds.entry(e.round()).or_insert(0);
+            *acc = acc.wrapping_add(h);
+        }
+    }
+    let mut fp = FNV_OFFSET;
+    for (round, acc) in rounds {
+        fp = fnv_u64(fp, round);
+        fp = fnv_u64(fp, acc);
+    }
+    fp
+}
+
+/// Ring-buffered per-run event recorder (the `TraceRecorder`).
+///
+/// Shared by `Arc` across the coordinator, scheduler, ledger, and backend;
+/// `push` is a short mutex hold (events are `Copy`).  When full the oldest
+/// event is dropped and counted, so a runaway run degrades to a bounded
+/// suffix instead of unbounded memory.
+#[derive(Debug)]
+pub struct TraceBuffer {
+    inner: Mutex<BufferInner>,
+}
+
+#[derive(Debug)]
+struct BufferInner {
+    events: VecDeque<Event>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl TraceBuffer {
+    /// Default capacity: 1 Mi events (~48 MiB worst case) — far above any
+    /// smoke-scale run, bounded for production ones.
+    pub fn new() -> Self {
+        Self::with_capacity(1 << 20)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity > 0, "trace buffer capacity must be positive");
+        TraceBuffer {
+            inner: Mutex::new(BufferInner {
+                events: VecDeque::with_capacity(capacity.min(1 << 12)),
+                capacity,
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub fn push(&self, e: Event) {
+        let mut g = self.inner.lock().unwrap();
+        if g.events.len() == g.capacity {
+            g.events.pop_front();
+            g.dropped += 1;
+        }
+        g.events.push_back(e);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events dropped to the ring bound so far (0 ⇒ the trace is complete
+    /// and its fingerprint is authoritative).
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Snapshot the recorded events (oldest first) without clearing.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.inner.lock().unwrap().events.iter().copied().collect()
+    }
+}
+
+impl Default for TraceBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// What a run should do about tracing (a [`RunConfig`] field).
+///
+/// [`RunConfig`]: crate::coordinator::RunConfig
+#[derive(Debug, Clone, Default)]
+pub enum TraceMode {
+    /// No recording; every trace site is a `None` check.
+    #[default]
+    Off,
+    /// Record events into a fresh ring buffer; `RunResult` carries the
+    /// finished [`Trace`] and its fingerprint.
+    Record,
+    /// Re-drive the run from a previously recorded trace (skip decisions
+    /// and service order come from the trace, not live signals) while also
+    /// recording, so the replay's fingerprint can be compared to the
+    /// original's.  Replay requires `BackendKind::Sim`.
+    Replay(Arc<Trace>),
+}
+
+impl TraceMode {
+    pub fn is_off(&self) -> bool {
+        matches!(self, TraceMode::Off)
+    }
+}
+
+/// The per-run trace wiring handed to every recording/replaying site.
+#[derive(Debug, Clone, Default)]
+pub struct TracePlumbing {
+    /// Recording sink, if this run records.
+    pub sink: Option<Arc<TraceBuffer>>,
+    /// Replay decisions, if this run replays a prior trace.
+    pub replayer: Option<Arc<TraceReplayer>>,
+}
+
+impl TracePlumbing {
+    /// Build the wiring for a run: `Off` → inert, `Record` → fresh sink,
+    /// `Replay` → fresh sink *plus* a replayer over the source trace (a
+    /// replayed run records too, so fingerprints can be compared).
+    pub fn from_mode(mode: &TraceMode) -> Self {
+        match mode {
+            TraceMode::Off => TracePlumbing::default(),
+            TraceMode::Record => TracePlumbing {
+                sink: Some(Arc::new(TraceBuffer::new())),
+                replayer: None,
+            },
+            TraceMode::Replay(trace) => TracePlumbing {
+                sink: Some(Arc::new(TraceBuffer::new())),
+                replayer: Some(Arc::new(TraceReplayer::from_trace(trace))),
+            },
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, e: Event) {
+        if let Some(sink) = &self.sink {
+            sink.push(e);
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.sink.is_some()
+    }
+}
+
+/// A finished, serializable event trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    /// The backend the trace was recorded under (`"sim"` / `"threads"`) —
+    /// informational; replay always runs under `Sim`.
+    pub backend: String,
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    pub fn fingerprint(&self) -> u64 {
+        fingerprint(&self.events)
+    }
+
+    /// Canonical line-oriented text form:
+    ///
+    /// ```text
+    /// strads-trace v1 <backend>
+    /// grant <round> <worker> <slice> <version>
+    /// take <round> <worker> <slice> <version> <service_index> <arrival_seq>
+    /// forward <round> <worker> <slice> <version> <dest> <bytes>
+    /// settle <round> <slice> <version>
+    /// skip <round> <slice> <debt>
+    /// debt <round> <slice> <debt>
+    /// eval <round> <objective_bits:hex>
+    /// resolve <round> <now_bits:hex>
+    /// ```
+    pub fn to_text(&self) -> String {
+        let mut out = String::with_capacity(32 + self.events.len() * 24);
+        out.push_str("strads-trace v1 ");
+        out.push_str(&self.backend);
+        out.push('\n');
+        for e in &self.events {
+            match *e {
+                Event::Grant { round, worker, slice, version } => {
+                    out.push_str(&format!(
+                        "grant {round} {worker} {slice} {version}\n"
+                    ));
+                }
+                Event::Take {
+                    round,
+                    worker,
+                    slice,
+                    version,
+                    service_index,
+                    arrival_seq,
+                } => {
+                    out.push_str(&format!(
+                        "take {round} {worker} {slice} {version} {service_index} {arrival_seq}\n"
+                    ));
+                }
+                Event::Forward { round, worker, slice, version, dest, bytes } => {
+                    out.push_str(&format!(
+                        "forward {round} {worker} {slice} {version} {dest} {bytes}\n"
+                    ));
+                }
+                Event::Settle { round, slice, version } => {
+                    out.push_str(&format!("settle {round} {slice} {version}\n"));
+                }
+                Event::Skip { round, slice, debt } => {
+                    out.push_str(&format!("skip {round} {slice} {debt}\n"));
+                }
+                Event::DebtCharge { round, slice, debt } => {
+                    out.push_str(&format!("debt {round} {slice} {debt}\n"));
+                }
+                Event::Eval { round, objective_bits } => {
+                    out.push_str(&format!("eval {round} {objective_bits:x}\n"));
+                }
+                Event::Resolve { round, now_bits } => {
+                    out.push_str(&format!("resolve {round} {now_bits:x}\n"));
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse the canonical text form back into a trace.
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty trace")?;
+        let mut hp = header.split_whitespace();
+        if hp.next() != Some("strads-trace") || hp.next() != Some("v1") {
+            return Err(format!("bad trace header: {header:?}"));
+        }
+        let backend = hp.next().unwrap_or("sim").to_string();
+        let mut events = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let mut f = line.split_whitespace();
+            let tag = f.next().ok_or_else(|| format!("line {}: empty", i + 2))?;
+            let mut dec = |name: &str| -> Result<u64, String> {
+                f.next()
+                    .ok_or_else(|| {
+                        format!("line {}: missing {name}", i + 2)
+                    })?
+                    .parse::<u64>()
+                    .map_err(|e| format!("line {}: bad {name}: {e}", i + 2))
+            };
+            let ev = match tag {
+                "grant" => Event::Grant {
+                    round: dec("round")?,
+                    worker: dec("worker")? as usize,
+                    slice: dec("slice")? as usize,
+                    version: dec("version")?,
+                },
+                "take" => Event::Take {
+                    round: dec("round")?,
+                    worker: dec("worker")? as usize,
+                    slice: dec("slice")? as usize,
+                    version: dec("version")?,
+                    service_index: dec("service_index")? as usize,
+                    arrival_seq: dec("arrival_seq")?,
+                },
+                "forward" => Event::Forward {
+                    round: dec("round")?,
+                    worker: dec("worker")? as usize,
+                    slice: dec("slice")? as usize,
+                    version: dec("version")?,
+                    dest: dec("dest")? as usize,
+                    bytes: dec("bytes")? as usize,
+                },
+                "settle" => Event::Settle {
+                    round: dec("round")?,
+                    slice: dec("slice")? as usize,
+                    version: dec("version")?,
+                },
+                "skip" => Event::Skip {
+                    round: dec("round")?,
+                    slice: dec("slice")? as usize,
+                    debt: dec("debt")?,
+                },
+                "debt" => Event::DebtCharge {
+                    round: dec("round")?,
+                    slice: dec("slice")? as usize,
+                    debt: dec("debt")?,
+                },
+                "eval" => {
+                    let round = dec("round")?;
+                    let bits = f
+                        .next()
+                        .ok_or_else(|| format!("line {}: missing bits", i + 2))?;
+                    Event::Eval {
+                        round,
+                        objective_bits: u64::from_str_radix(bits, 16).map_err(
+                            |e| format!("line {}: bad bits: {e}", i + 2),
+                        )?,
+                    }
+                }
+                "resolve" => {
+                    let round = dec("round")?;
+                    let bits = f
+                        .next()
+                        .ok_or_else(|| format!("line {}: missing bits", i + 2))?;
+                    Event::Resolve {
+                        round,
+                        now_bits: u64::from_str_radix(bits, 16).map_err(|e| {
+                            format!("line {}: bad bits: {e}", i + 2)
+                        })?,
+                    }
+                }
+                other => {
+                    return Err(format!("line {}: unknown tag {other:?}", i + 2))
+                }
+            };
+            if f.next().is_some() {
+                return Err(format!("line {}: trailing fields", i + 2));
+            }
+            events.push(ev);
+        }
+        Ok(Trace { backend, events })
+    }
+}
+
+/// Replay decisions extracted from a recorded trace.
+///
+/// Two live signals make rotation runs timing-dependent; the replayer
+/// pins both:
+///
+/// * **skips** — `Defer`'s availability poll is answered by the recorded
+///   skip set (`skipped(round, slice)`); feeding `!skipped` into
+///   `next_round_grants` reproduces the schedule exactly because the debt
+///   ledger evolves deterministically given the same skip sequence;
+/// * **service order** — each worker's grant queue is reordered into the
+///   recorded sweep order (`service_order(round, worker)`) and then
+///   serviced strictly; the recorded order was realizable (it happened),
+///   so strict blocking service cannot deadlock.
+#[derive(Debug)]
+pub struct TraceReplayer {
+    skipped: HashSet<(u64, usize)>,
+    service: HashMap<(u64, usize), Vec<(usize, usize)>>,
+    grants: HashSet<(u64, usize, usize)>,
+}
+
+impl TraceReplayer {
+    pub fn from_trace(trace: &Trace) -> Self {
+        let mut skipped = HashSet::new();
+        let mut service: HashMap<(u64, usize), Vec<(usize, usize)>> =
+            HashMap::new();
+        let mut grants = HashSet::new();
+        for e in &trace.events {
+            match *e {
+                Event::Skip { round, slice, .. } => {
+                    skipped.insert((round, slice));
+                }
+                Event::Take { round, worker, slice, service_index, .. } => {
+                    service
+                        .entry((round, worker))
+                        .or_default()
+                        .push((service_index, slice));
+                }
+                Event::Grant { round, worker, slice, .. } => {
+                    grants.insert((round, worker, slice));
+                }
+                _ => {}
+            }
+        }
+        for order in service.values_mut() {
+            order.sort_unstable();
+        }
+        TraceReplayer { skipped, service, grants }
+    }
+
+    /// Was `slice` skipped (deferred) in `round`?
+    pub fn skipped(&self, round: u64, slice: usize) -> bool {
+        self.skipped.contains(&(round, slice))
+    }
+
+    /// The recorded sweep order for `(round, worker)` as slice ids,
+    /// earliest-serviced first; `None` if the trace has no takes there.
+    pub fn service_order(&self, round: u64, worker: usize) -> Option<Vec<usize>> {
+        self.service
+            .get(&(round, worker))
+            .map(|v| v.iter().map(|&(_, s)| s).collect())
+    }
+
+    /// Was `slice` granted to `worker` in `round`?  (Cross-check that the
+    /// replayed schedule matches the recorded one grant-for-grant.)
+    pub fn granted(&self, round: u64, worker: usize, slice: usize) -> bool {
+        self.grants.contains(&(round, worker, slice))
+    }
+
+    /// Number of grant events in the source trace.
+    pub fn n_grants(&self) -> usize {
+        self.grants.len()
+    }
+
+    /// Reorder a worker's scheduled queue (`legs`, keyed by `slice_of`)
+    /// into the recorded sweep order for `(round, worker)`, so a strict
+    /// blocking service reproduces the original take sequence exactly.
+    /// Panics on divergence: the recorded order must name exactly the
+    /// scheduled slices (the engine's grant cross-check makes any other
+    /// outcome a replay bug, not a user error).
+    pub fn reorder_legs<L>(
+        &self,
+        round: u64,
+        worker: usize,
+        legs: Vec<L>,
+        slice_of: impl Fn(&L) -> usize,
+    ) -> Vec<L> {
+        let Some(recorded) = self.service_order(round, worker) else {
+            assert!(
+                legs.is_empty(),
+                "replay diverged: round {round} schedules worker {worker} \
+                 a non-empty queue but the trace records no takes there"
+            );
+            return legs;
+        };
+        let mut by_slice: HashMap<usize, L> =
+            legs.into_iter().map(|l| (slice_of(&l), l)).collect();
+        let out: Vec<L> = recorded
+            .iter()
+            .map(|s| {
+                by_slice.remove(s).unwrap_or_else(|| {
+                    panic!(
+                        "replay diverged: recorded sweep order for round \
+                         {round} worker {worker} takes slice {s}, absent \
+                         from the scheduled queue"
+                    )
+                })
+            })
+            .collect();
+        assert!(
+            by_slice.is_empty(),
+            "replay diverged: round {round} worker {worker} queue holds \
+             slices the recorded sweep order never takes"
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::Grant { round: 0, worker: 0, slice: 2, version: 1 },
+            Event::Grant { round: 0, worker: 1, slice: 3, version: 1 },
+            Event::Take {
+                round: 0,
+                worker: 0,
+                slice: 2,
+                version: 0,
+                service_index: 0,
+                arrival_seq: 17,
+            },
+            Event::Forward {
+                round: 0,
+                worker: 0,
+                slice: 2,
+                version: 1,
+                dest: 1,
+                bytes: 4096,
+            },
+            Event::Settle { round: 0, slice: 2, version: 0 },
+            Event::Skip { round: 1, slice: 3, debt: 1 },
+            Event::DebtCharge { round: 1, slice: 3, debt: 1 },
+            Event::Eval { round: 1, objective_bits: 0x3ff0000000000000 },
+            Event::Resolve { round: 1, now_bits: 0x4000000000000000 },
+        ]
+    }
+
+    #[test]
+    fn text_round_trip_is_lossless() {
+        let t = Trace { backend: "threads".into(), events: sample_events() };
+        let parsed = Trace::parse(&t.to_text()).expect("parse");
+        assert_eq!(parsed, t);
+        assert_eq!(parsed.fingerprint(), t.fingerprint());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Trace::parse("").is_err());
+        assert!(Trace::parse("not-a-trace v1 sim").is_err());
+        assert!(Trace::parse("strads-trace v1 sim\nbogus 1 2 3").is_err());
+        assert!(Trace::parse("strads-trace v1 sim\ngrant 1 2").is_err());
+        assert!(Trace::parse("strads-trace v1 sim\ngrant 1 2 3 4 5").is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_order_insensitive_within_a_round() {
+        let mut events = sample_events();
+        let fp = fingerprint(&events);
+        events.swap(0, 1); // both round-0 grants
+        assert_eq!(fingerprint(&events), fp);
+        events.swap(2, 3); // round-0 take vs forward
+        assert_eq!(fingerprint(&events), fp);
+    }
+
+    #[test]
+    fn fingerprint_is_order_sensitive_across_rounds() {
+        let a = vec![
+            Event::Settle { round: 0, slice: 1, version: 0 },
+            Event::Settle { round: 1, slice: 2, version: 0 },
+        ];
+        let b = vec![
+            Event::Settle { round: 0, slice: 2, version: 0 },
+            Event::Settle { round: 1, slice: 1, version: 0 },
+        ];
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+    }
+
+    fn take(round: u64, worker: usize, slice: usize, version: u64, si: usize) -> Event {
+        Event::Take {
+            round,
+            worker,
+            slice,
+            version,
+            service_index: si,
+            arrival_seq: 9,
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_sensitive_to_every_identity_field() {
+        let base = take(3, 1, 4, 2, 0);
+        let variants = [
+            take(4, 1, 4, 2, 0),
+            take(3, 2, 4, 2, 0),
+            take(3, 1, 5, 2, 0),
+            take(3, 1, 4, 3, 0),
+            take(3, 1, 4, 2, 1),
+        ];
+        let h0 = event_hash(&base).unwrap();
+        for v in variants {
+            assert_ne!(event_hash(&v).unwrap(), h0, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn arrival_seq_and_resolve_are_excluded_from_the_fingerprint() {
+        let a = Event::Take {
+            round: 0,
+            worker: 0,
+            slice: 1,
+            version: 0,
+            service_index: 0,
+            arrival_seq: 5,
+        };
+        let b = Event::Take {
+            round: 0,
+            worker: 0,
+            slice: 1,
+            version: 0,
+            service_index: 0,
+            arrival_seq: 99,
+        };
+        assert_eq!(event_hash(&a), event_hash(&b));
+        assert_eq!(
+            event_hash(&Event::Resolve { round: 0, now_bits: 1 }),
+            None
+        );
+        let with = vec![a, Event::Resolve { round: 0, now_bits: 1 }];
+        let without = vec![a];
+        assert_eq!(fingerprint(&with), fingerprint(&without));
+    }
+
+    #[test]
+    fn ring_buffer_drops_oldest_and_counts() {
+        let buf = TraceBuffer::with_capacity(2);
+        for v in 0..4 {
+            buf.push(Event::Settle { round: v, slice: 0, version: v });
+        }
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.dropped(), 2);
+        let snap = buf.snapshot();
+        assert_eq!(snap[0].round(), 2);
+        assert_eq!(snap[1].round(), 3);
+    }
+
+    #[test]
+    fn replayer_extracts_skips_service_order_and_grants() {
+        let trace = Trace {
+            backend: "sim".into(),
+            events: vec![
+                Event::Grant { round: 0, worker: 0, slice: 1, version: 1 },
+                Event::Grant { round: 0, worker: 0, slice: 2, version: 1 },
+                // takes recorded out of order: service_index orders them
+                Event::Take {
+                    round: 0,
+                    worker: 0,
+                    slice: 2,
+                    version: 0,
+                    service_index: 1,
+                    arrival_seq: 0,
+                },
+                Event::Take {
+                    round: 0,
+                    worker: 0,
+                    slice: 1,
+                    version: 0,
+                    service_index: 0,
+                    arrival_seq: 0,
+                },
+                Event::Skip { round: 2, slice: 4, debt: 1 },
+            ],
+        };
+        let r = TraceReplayer::from_trace(&trace);
+        assert!(r.skipped(2, 4));
+        assert!(!r.skipped(2, 5));
+        assert!(!r.skipped(0, 4));
+        assert_eq!(r.service_order(0, 0), Some(vec![1, 2]));
+        assert_eq!(r.service_order(0, 1), None);
+        assert!(r.granted(0, 0, 1));
+        assert!(r.granted(0, 0, 2));
+        assert!(!r.granted(0, 0, 3));
+        assert_eq!(r.n_grants(), 2);
+    }
+}

@@ -18,16 +18,19 @@
 //! loops formerly copied across `rotation_handoff.rs` /
 //! `availability_rotation.rs`); the engine-level matrix runs real LDA
 //! pipelines.  Golden tests additionally pin the `Strict` and
-//! `Availability` virtual-time replays and schedule streams bit-exact to
-//! their pre-Dynamic (PR-4) arithmetic under `SkipPolicy::Never`, so the
-//! tentpole cannot silently perturb existing arms.
+//! `Availability` arms through their **trace fingerprints** (rerun
+//! equality + canonical-text round-trip + the hash's round-keyed
+//! order-insensitivity), plus one literal U = 5 / P = 2 grant-stream
+//! golden with a hand-built `Event::Grant` encoding cross-check, so a
+//! refactor cannot silently perturb existing arms.
 //!
 //! Seeded via `STRADS_PROP_SEED` (see `src/testing`): a CI failure prints
 //! the failing seed, and re-running with that seed reproduces the case.
 
 use strads::cluster::HandoffJitter;
 use strads::coordinator::{
-    replay_queue, ExecutionMode, QueueOrder, RunConfig, SkipPolicy,
+    replay_queue, ExecutionMode, QueueOrder, RunConfig, SkipPolicy, Trace,
+    TraceMode,
 };
 use strads::figures::common::{
     figure_corpus, lda_engine_sliced, mf_block_engine,
@@ -36,6 +39,7 @@ use strads::scheduler::rotation::GrantLeg;
 use strads::scheduler::RotationScheduler;
 use strads::testing::rotation::{drive_protocol, mode_matrix};
 use strads::testing::{ensure, prop_check, Prop};
+use strads::trace::{fingerprint, Event};
 
 // ---------------------------------------------------------------------
 // Protocol level: the grant→take→forward→settle loop over random rings,
@@ -316,62 +320,61 @@ fn mf_block_dynamic_defer_runs_and_learns() {
 }
 
 // ---------------------------------------------------------------------
-// Goldens: the Strict and Availability replays and schedule streams are
-// pinned bit-exact to their PR-4 arithmetic under SkipPolicy::Never.
+// Goldens: the Strict and Availability arms are pinned through trace
+// fingerprints under SkipPolicy::Never; the U = 5 / P = 2 schedule
+// stream stays a literal golden with an Event-encoding cross-check.
 // ---------------------------------------------------------------------
 
-/// Strict replay golden: hand-computed PR-4 arithmetic, exact f64s (all
-/// values are small dyadic rationals, so the comparison is bit-exact).
+/// Trace-fingerprint golden for the Strict and Availability arms (the
+/// successor of the PR-4 literal virtual-time replay goldens — the
+/// pinned surface is now the *event stream*, hashed): a traced run
+/// fingerprints identically on a rerun, its canonical text round-trips
+/// losslessly, and the hash keys on round numbers rather than event
+/// list positions.
 #[test]
-fn golden_strict_replay_is_pinned() {
-    let legs = [(0usize, 2.0f64), (1, 1.0), (2, 4.0)];
-    let ready = [3.0, 0.0, 8.0];
-    let mut next = ready.to_vec();
-    let out = replay_queue(
-        QueueOrder::Strict,
-        1.0,
-        &legs,
-        &ready,
-        &mut next,
-        0,
-        &HandoffJitter::None,
-    );
-    assert_eq!(out, (12.0, 7.0, 4.0));
-    assert_eq!(next, vec![5.0, 6.0, 12.0]);
-    // with a uniform 0.5× handoff latency the releases shift by half a
-    // sweep each — still exact halves
-    let mut next = ready.to_vec();
-    let out = replay_queue(
-        QueueOrder::Strict,
-        1.0,
-        &legs,
-        &ready,
-        &mut next,
-        0,
-        &HandoffJitter::Uniform { frac: 0.5 },
-    );
-    assert_eq!(out, (12.0, 7.0, 4.0));
-    assert_eq!(next, vec![6.0, 6.5, 14.0]);
-}
-
-/// Availability replay golden: earliest-ready-first on the same instance.
-#[test]
-fn golden_availability_replay_is_pinned() {
-    let legs = [(0usize, 2.0f64), (1, 1.0), (2, 4.0)];
-    let ready = [3.0, 0.0, 8.0];
-    let mut next = ready.to_vec();
-    let out = replay_queue(
-        QueueOrder::Availability,
-        1.0,
-        &legs,
-        &ready,
-        &mut next,
-        0,
-        &HandoffJitter::None,
-    );
-    // services leg 1 (ready 0), then 0 (ready 3), then 2 (ready 8)
-    assert_eq!(out, (12.0, 7.0, 4.0));
-    assert_eq!(next, vec![5.0, 2.0, 12.0]);
+fn golden_order_fingerprints_are_stable_and_canonical() {
+    for order in [QueueOrder::Strict, QueueOrder::Availability] {
+        let run = || {
+            let corpus = figure_corpus(300, 50, 17);
+            let cfg = RunConfig::builder()
+                .max_rounds(8)
+                .eval_every(4)
+                .mode(ExecutionMode::Rotation { depth: 2 })
+                .queue_order(order)
+                .handoff_jitter(HandoffJitter::Jittered {
+                    base_frac: 0.2,
+                    jitter_frac: 1.5,
+                    seed: 17,
+                })
+                .trace(TraceMode::Record)
+                .label(format!("golden-fp-{order:?}"))
+                .build()
+                .expect("valid golden config");
+            let mut e = lda_engine_sliced(&corpus, 6, 2, 4, 17, &cfg);
+            e.run(&cfg)
+        };
+        let a = run();
+        let b = run();
+        let fp = a.fingerprint.expect("recording runs carry a fingerprint");
+        assert_eq!(
+            Some(fp),
+            b.fingerprint,
+            "{order:?}: identical runs must fingerprint identically"
+        );
+        let trace = a.trace.expect("recording runs keep the trace");
+        assert_eq!(trace.fingerprint(), fp, "{order:?}: RunResult hash");
+        assert!(!trace.events.is_empty(), "{order:?}: events recorded");
+        // canonical text round-trips losslessly
+        let rt =
+            Trace::parse(&trace.to_text()).expect("canonical text parses");
+        assert_eq!(rt.events, trace.events, "{order:?}: text round-trip");
+        assert_eq!(rt.fingerprint(), fp, "{order:?}: round-trip hash");
+        // round-keyed, not positional: reversing the list permutes every
+        // round's events (and their interleaving) yet the hash holds
+        let mut reversed = trace.events.clone();
+        reversed.reverse();
+        assert_eq!(fingerprint(&reversed), fp, "{order:?}: order-free");
+    }
 }
 
 /// Schedule-stream golden: `next_round_grants` under `Never` emits the
@@ -413,6 +416,47 @@ fn golden_never_grant_stream_is_pinned() {
             ]
         );
     }
+}
+
+/// Event-encoding cross-check on the literal stream above: hand-built
+/// `Event::Grant`s taken from the pinned U = 5 / P = 2 round-0/round-1
+/// schedules hash commutatively within a round and sensitively across
+/// rounds and field values — the properties the fingerprint goldens
+/// lean on, pinned against literals rather than engine output.
+#[test]
+fn golden_grant_event_encoding_cross_check() {
+    let g = |round: u64, worker: usize, slice: usize| Event::Grant {
+        round,
+        worker,
+        slice,
+        version: round + 1,
+    };
+    // the literal streams asserted in golden_never_grant_stream_is_pinned
+    let both = vec![
+        g(0, 0, 0),
+        g(0, 0, 2),
+        g(0, 0, 4),
+        g(0, 1, 1),
+        g(0, 1, 3),
+        g(1, 0, 1),
+        g(1, 0, 3),
+        g(1, 0, 0),
+        g(1, 1, 2),
+        g(1, 1, 4),
+    ];
+    let fp = fingerprint(&both);
+    // within-round permutation leaves the hash unchanged
+    let mut permuted = both.clone();
+    permuted.swap(0, 4);
+    assert_eq!(fingerprint(&permuted), fp, "within-round commutative");
+    // moving a grant to the neighbouring round changes it
+    let mut moved = both.clone();
+    moved[1] = g(1, 0, 2);
+    assert_ne!(fingerprint(&moved), fp, "cross-round sensitive");
+    // and so does perturbing any hashed field (here: the chain version)
+    let mut bumped = both.clone();
+    bumped[0] = Event::Grant { round: 0, worker: 0, slice: 0, version: 9 };
+    assert_ne!(fingerprint(&bumped), fp, "field sensitive");
 }
 
 /// Dynamic replay agrees with Availability on the worker's own finish

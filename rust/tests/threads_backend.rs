@@ -6,7 +6,7 @@
 //! seed; only the clocks differ.
 
 use strads::cluster::{NetworkConfig, StragglerModel};
-use strads::coordinator::{BackendKind, ExecutionMode, RunConfig};
+use strads::coordinator::{BackendKind, ExecutionMode, RunConfig, TraceMode};
 use strads::figures::common::{figure_corpus, lda_engine, mf_block_engine};
 use strads::scheduler::rotation::SkipPolicy;
 use strads::testing::rotation::{drive_protocol_threaded, mode_matrix};
@@ -66,17 +66,18 @@ fn lda_rotation_cfg(
     pace: f64,
     label: &str,
 ) -> RunConfig {
-    RunConfig {
-        max_rounds: sweeps * workers as u64,
-        eval_every: workers as u64,
-        network: NetworkConfig::ideal(),
-        mode: ExecutionMode::Rotation { depth },
-        backend,
-        straggler,
-        threads_pace_secs: pace,
-        label: label.into(),
-        ..Default::default()
-    }
+    RunConfig::builder()
+        .max_rounds(sweeps * workers as u64)
+        .eval_every(workers as u64)
+        .network(NetworkConfig::ideal())
+        .mode(ExecutionMode::Rotation { depth })
+        .backend(backend)
+        .straggler(straggler)
+        .threads_pace_secs(pace)
+        .trace(TraceMode::Record)
+        .label(label)
+        .build()
+        .expect("valid threads-equivalence config")
 }
 
 /// Acceptance criterion: a depth-1 Strict/Never rotation run on the
@@ -123,6 +124,13 @@ fn threaded_lda_rotation_is_bit_identical_to_sim() {
     }
     assert_eq!(sim.total_p2p_bytes, thr.total_p2p_bytes);
     assert_eq!(sim.total_p2p_msgs, thr.total_p2p_msgs);
+    // ...and the traced event streams hash identically: the fingerprint
+    // is the whole equivalence contract in one u64
+    assert_eq!(
+        sim.fingerprint, thr.fingerprint,
+        "sim/threads fingerprints diverged"
+    );
+    assert!(sim.fingerprint.is_some(), "recording runs fingerprint");
     assert!(thr.wall_secs > 0.0, "threads must report wall-clock");
     assert!(thr.router_block_secs >= 0.0);
 }
@@ -158,6 +166,10 @@ fn straggler_sleeps_and_pace_do_not_perturb_model_state() {
         thr.final_objective,
         sim.final_objective
     );
+    assert_eq!(
+        sim.fingerprint, thr.fingerprint,
+        "skewed threads event stream diverged from sim"
+    );
     // the pace floor guarantees a wall-clock lower bound the sim never
     // pays: at least one paced leg per round on the slowest worker
     assert!(thr.wall_secs >= 0.001 * sweeps as f64);
@@ -170,15 +182,15 @@ fn straggler_sleeps_and_pace_do_not_perturb_model_state() {
 fn threaded_mf_block_rotation_runs_end_to_end() {
     let workers = 4usize;
     let rounds = 6 * workers as u64;
-    let cfg = RunConfig {
-        max_rounds: rounds,
-        eval_every: workers as u64,
-        network: NetworkConfig::ideal(),
-        mode: ExecutionMode::Rotation { depth: 2 },
-        backend: BackendKind::Threads,
-        label: "thr-mf".into(),
-        ..Default::default()
-    };
+    let cfg = RunConfig::builder()
+        .max_rounds(rounds)
+        .eval_every(workers as u64)
+        .network(NetworkConfig::ideal())
+        .mode(ExecutionMode::Rotation { depth: 2 })
+        .backend(BackendKind::Threads)
+        .label("thr-mf")
+        .build()
+        .expect("valid threaded mf config");
     let mut e =
         mf_block_engine(150, 80, 4, workers, 2 * workers, 0.05, 0.05, 13, &cfg);
     let res = e.run(&cfg);

@@ -1,0 +1,309 @@
+//! End-to-end trace/replay determinism: a recorded run, serialized to
+//! canonical text, parsed back, and re-driven under the sim backend must
+//! reproduce the original `RunResult`'s deterministic parts bit-exactly
+//! — same objectives, same traffic counters, same skip/debt totals, and
+//! the same trace fingerprint.
+//!
+//! The replay contract: the replaying run uses the *same* `RunConfig`
+//! as the recording except `backend` forced to `Sim` and `trace` set to
+//! `TraceMode::Replay`.  The replayer then pins the run's two live
+//! timing signals — `SkipPolicy::Defer`'s availability poll and the
+//! within-queue service order — from the recorded `Skip`/`Take` events,
+//! so even a *threaded* recording replays bit-exact in virtual time.
+//!
+//! Seeded via `STRADS_PROP_SEED` (see `src/testing`).
+
+use std::sync::Arc;
+
+use strads::cluster::HandoffJitter;
+use strads::coordinator::{
+    BackendKind, ExecutionMode, QueueOrder, RunConfig, RunResult,
+    SkipPolicy, Trace, TraceMode,
+};
+use strads::figures::common::{
+    figure_corpus, lda_engine_sliced, mf_block_engine,
+};
+use strads::testing::{prop_check, Prop};
+
+fn check<T: PartialEq + std::fmt::Debug>(
+    what: &str,
+    recorded: T,
+    replayed: T,
+) -> Result<(), String> {
+    if recorded == replayed {
+        Ok(())
+    } else {
+        Err(format!("{what}: recorded {recorded:?} vs replayed {replayed:?}"))
+    }
+}
+
+/// The deterministic parts of a `RunResult` (objectives as bit patterns;
+/// timing fields deliberately excluded — wall clocks never replay, and a
+/// threaded recording has no virtual clock to compare against).
+fn deterministic_parts(
+    r: &RunResult,
+) -> (u64, u64, Vec<(u64, u64)>, u64, u64, u64, u64) {
+    (
+        r.rounds_run,
+        r.final_objective.to_bits(),
+        r.recorder
+            .points()
+            .iter()
+            .map(|p| (p.round, p.objective.to_bits()))
+            .collect(),
+        r.total_p2p_bytes,
+        r.total_p2p_msgs,
+        r.total_skipped_legs,
+        r.max_coverage_debt,
+    )
+}
+
+fn jitter(seed: u64) -> HandoffJitter {
+    HandoffJitter::Jittered { base_frac: 0.2, jitter_frac: 1.5, seed }
+}
+
+fn lda_cfg(
+    order: QueueOrder,
+    skip: SkipPolicy,
+    depth: u64,
+    backend: BackendKind,
+    seed: u64,
+    trace: TraceMode,
+    label: &str,
+) -> RunConfig {
+    RunConfig::builder()
+        .max_rounds(8)
+        .eval_every(4)
+        .mode(ExecutionMode::Rotation { depth })
+        .queue_order(order)
+        .skip_policy(skip)
+        .handoff_jitter(jitter(seed))
+        .backend(backend)
+        .trace(trace)
+        .label(label)
+        .build()
+        .expect("valid replay-matrix config")
+}
+
+/// Record one LDA rotation run, round-trip its trace through canonical
+/// text, replay under the sim backend, and compare every deterministic
+/// part of the two `RunResult`s (plus the final topic-sum model state)
+/// bit-exactly.
+fn record_then_replay(
+    order: QueueOrder,
+    skip: SkipPolicy,
+    depth: u64,
+    backend: BackendKind,
+    seed: u64,
+) -> Result<(), String> {
+    let label = format!("replay-{order:?}-{skip:?}-d{depth}-{backend:?}");
+    let corpus = figure_corpus(300, 50, seed);
+
+    let rec_cfg = lda_cfg(
+        order,
+        skip,
+        depth,
+        backend,
+        seed,
+        TraceMode::Record,
+        &label,
+    );
+    let mut rec_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &rec_cfg);
+    let rec = rec_engine.run(&rec_cfg);
+    let rec_fp =
+        rec.fingerprint.ok_or_else(|| format!("{label}: no fingerprint"))?;
+    let trace =
+        rec.trace.as_ref().ok_or_else(|| format!("{label}: no trace"))?;
+
+    // serialize → deserialize: the canonical text is lossless
+    let parsed = Trace::parse(&trace.to_text())
+        .map_err(|e| format!("{label}: canonical text rejected: {e}"))?;
+    check(&format!("{label}: round-trip events"), &parsed, trace)?;
+    check(&format!("{label}: round-trip hash"), parsed.fingerprint(), rec_fp)?;
+
+    // replay: same config, backend forced to Sim, trace = Replay
+    let rep_cfg = lda_cfg(
+        order,
+        skip,
+        depth,
+        BackendKind::Sim,
+        seed,
+        TraceMode::Replay(Arc::new(parsed)),
+        &label,
+    );
+    let mut rep_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &rep_cfg);
+    let rep = rep_engine.run(&rep_cfg);
+
+    check(
+        &format!("{label}: deterministic RunResult parts"),
+        deterministic_parts(&rec),
+        deterministic_parts(&rep),
+    )?;
+    check(&format!("{label}: fingerprint"), Some(rec_fp), rep.fingerprint)?;
+    check(
+        &format!("{label}: final topic sums"),
+        rec_engine.app().s.clone(),
+        rep_engine.app().s.clone(),
+    )
+}
+
+/// The full mode matrix under the sim backend: {Strict, Availability,
+/// Dynamic} × {Never, Defer{2}} × depth {1, 2} — every combination
+/// records, round-trips, and replays bit-exact.
+#[test]
+fn replay_matrix_reproduces_runs_bit_exact() {
+    for order in
+        [QueueOrder::Strict, QueueOrder::Availability, QueueOrder::Dynamic]
+    {
+        for skip in [SkipPolicy::Never, SkipPolicy::Defer { debt_limit: 2 }] {
+            for depth in [1u64, 2] {
+                record_then_replay(
+                    order,
+                    skip,
+                    depth,
+                    BackendKind::Sim,
+                    41,
+                )
+                .unwrap();
+            }
+        }
+    }
+}
+
+/// Random corners of the matrix across seeds: the replay contract is a
+/// property of the protocol, not of one lucky seed.
+#[test]
+fn prop_replay_round_trips_across_seeds() {
+    prop_check("trace replay round-trip", 8, |g| {
+        let order = match g.usize_in(0, 2) {
+            0 => QueueOrder::Strict,
+            1 => QueueOrder::Availability,
+            _ => QueueOrder::Dynamic,
+        };
+        let skip = if g.bool_with(0.5) {
+            SkipPolicy::Defer { debt_limit: g.usize_in(0, 2) as u64 }
+        } else {
+            SkipPolicy::Never
+        };
+        let depth = g.usize_in(1, 3) as u64;
+        let seed = g.seed();
+        match record_then_replay(order, skip, depth, BackendKind::Sim, seed)
+        {
+            Ok(()) => Prop::Ok,
+            Err(e) => Prop::Fail(e),
+        }
+    });
+}
+
+/// The acceptance corner: a **threaded** Dynamic + Defer{2} recording —
+/// both live timing signals exercised by real thread scheduling — must
+/// replay bit-exact under the sim backend.
+#[test]
+fn threaded_dynamic_defer_recording_replays_bit_exact_under_sim() {
+    record_then_replay(
+        QueueOrder::Dynamic,
+        SkipPolicy::Defer { debt_limit: 2 },
+        2,
+        BackendKind::Threads,
+        43,
+    )
+    .unwrap();
+}
+
+/// Threaded Strict/Never corner: with no live timing signal in the
+/// protocol, the threaded recording's fingerprint must equal an
+/// *independent* sim run's — not just its own replay's.
+#[test]
+fn threaded_strict_never_fingerprint_matches_independent_sim_run() {
+    let seed = 47u64;
+    let corpus = figure_corpus(300, 50, seed);
+    let run = |backend: BackendKind| {
+        let cfg = lda_cfg(
+            QueueOrder::Strict,
+            SkipPolicy::Never,
+            2,
+            backend,
+            seed,
+            TraceMode::Record,
+            "xbackend-fp",
+        );
+        let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        e.run(&cfg).fingerprint.expect("recording run fingerprints")
+    };
+    assert_eq!(
+        run(BackendKind::Sim),
+        run(BackendKind::Threads),
+        "Strict/Never event streams are backend-independent"
+    );
+}
+
+/// Second rotation app: an MF block-rotation Dynamic + Defer recording
+/// replays bit-exact through the same contract.
+#[test]
+fn mf_block_recording_replays_bit_exact() {
+    let mk = |trace: TraceMode| {
+        RunConfig::builder()
+            .max_rounds(12)
+            .eval_every(6)
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .queue_order(QueueOrder::Dynamic)
+            .skip_policy(SkipPolicy::Defer { debt_limit: 1 })
+            .handoff_jitter(jitter(31))
+            .trace(trace)
+            .label("mf-replay")
+            .build()
+            .expect("valid mf replay config")
+    };
+    let rec_cfg = mk(TraceMode::Record);
+    let mut rec_engine =
+        mf_block_engine(90, 60, 4, 3, 6, 0.05, 0.08, 31, &rec_cfg);
+    let rec = rec_engine.run(&rec_cfg);
+    let trace = rec.trace.as_ref().expect("recorded trace");
+    let parsed =
+        Trace::parse(&trace.to_text()).expect("canonical text parses");
+    assert_eq!(&parsed, trace, "text round-trip");
+
+    let rep_cfg = mk(TraceMode::Replay(Arc::new(parsed)));
+    let mut rep_engine =
+        mf_block_engine(90, 60, 4, 3, 6, 0.05, 0.08, 31, &rep_cfg);
+    let rep = rep_engine.run(&rep_cfg);
+    assert_eq!(
+        deterministic_parts(&rec),
+        deterministic_parts(&rep),
+        "mf block replay deterministic parts"
+    );
+    assert_eq!(rec.fingerprint, rep.fingerprint, "mf block fingerprint");
+}
+
+/// Tracing off is free *and* inert: the same run under `TraceMode::Off`
+/// and `TraceMode::Record` produces identical deterministic results —
+/// the recorder must observe, never perturb.
+#[test]
+fn tracing_off_and_record_produce_identical_runs() {
+    let run = |trace: TraceMode| {
+        let cfg = lda_cfg(
+            QueueOrder::Dynamic,
+            SkipPolicy::Defer { debt_limit: 2 },
+            2,
+            BackendKind::Sim,
+            53,
+            trace,
+            "trace-inert",
+        );
+        let corpus = figure_corpus(300, 50, 53);
+        let mut e = lda_engine_sliced(&corpus, 6, 2, 4, 53, &cfg);
+        let res = e.run(&cfg);
+        (
+            deterministic_parts(&res),
+            res.virtual_secs.to_bits(),
+            res.fingerprint,
+            res.trace.is_some(),
+        )
+    };
+    let (off_parts, off_vs, off_fp, off_trace) = run(TraceMode::Off);
+    let (rec_parts, rec_vs, rec_fp, rec_trace) = run(TraceMode::Record);
+    assert_eq!(off_parts, rec_parts, "recording must not perturb the run");
+    assert_eq!(off_vs, rec_vs, "recording must not perturb the sim clock");
+    assert_eq!((off_fp, off_trace), (None, false), "off leaves no trace");
+    assert!(rec_fp.is_some() && rec_trace, "record keeps its trace");
+}
