@@ -48,6 +48,15 @@ METRICS = [
     "sim_fingerprint",
     "wall_fingerprint",
     "trace_overhead_secs",
+    # chaos_arm: fault-injection recovery cost and the armed-but-unfired
+    # inertness fingerprints (hex strings — printed, never delta'd)
+    "fault_free_secs_to_target",
+    "chaos_secs_to_target",
+    "recoveries",
+    "rounds_lost",
+    "checkpoint_secs",
+    "clean_fingerprint",
+    "unfired_fingerprint",
 ]
 
 
@@ -138,6 +147,13 @@ def main():
             # informational only: the bench binary gates this equality
             print(f"!! {name}: sim/threads fingerprints differ "
                   f"({sim_fp} vs {wall_fp})")
+        clean_fp = arm.get("clean_fingerprint")
+        unfired_fp = arm.get("unfired_fingerprint")
+        if (clean_fp is not None and unfired_fp is not None
+                and clean_fp != unfired_fp):
+            # informational only: the bench binary gates this equality
+            print(f"!! {name}: an armed-but-unfired fault plan perturbed "
+                  f"the run ({clean_fp} vs {unfired_fp})")
     b, c = base.get("wall_secs"), cur.get("wall_secs")
     print(f"-- wall_secs: {fmt(b)} -> {fmt(c)} {delta_str(b, c)}")
     removed = sorted(n for n in base_arms if n not in cur_arms)

@@ -176,3 +176,64 @@ def test_fingerprint_mismatch_warns_but_never_fails(tmp_path, monkeypatch,
     out = capsys.readouterr().out
     assert "fingerprints differ" in out
     assert "aaaa" in out and "bbbb" in out
+
+
+def _chaos_arm(recoveries=2, rounds_lost=4, clean_fp="c0de", unfired_fp="c0de"):
+    return {
+        "app": "LDA-chaos",
+        "target": -123.0,
+        "fault_free_secs_to_target": 3.0,
+        "chaos_secs_to_target": 4.0,
+        "recoveries": recoveries,
+        "rounds_lost": rounds_lost,
+        "checkpoint_secs": 0.02,
+        "clean_fingerprint": clean_fp,
+        "unfired_fingerprint": unfired_fp,
+    }
+
+
+def test_chaos_arm_metrics_flow_through(tmp_path, monkeypatch, capsys):
+    # the chaos arm carries recovery-cost keys plus the inertness
+    # fingerprints; numbers delta, fingerprints print verbatim
+    base = _doc(["rotation"])
+    base["chaos_arm"] = _chaos_arm()
+    cur = _doc(["rotation"])
+    cur["chaos_arm"] = _chaos_arm(rounds_lost=6)
+    _run(tmp_path, base, cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "-- chaos_arm" in out
+    assert "recoveries" in out
+    assert "rounds_lost" in out and "(+50.0%)" in out
+    assert "chaos_secs_to_target" in out
+    assert "checkpoint_secs" in out
+    assert "clean_fingerprint" in out and "c0de" in out
+    assert "perturbed" not in out
+    assert "arms removed" not in out
+
+
+def test_unfired_fingerprint_mismatch_warns_but_never_fails(tmp_path,
+                                                            monkeypatch,
+                                                            capsys):
+    # the bench binary gates clean == unfired; the delta report only
+    # flags it
+    cur = _doc(["rotation"])
+    cur["chaos_arm"] = _chaos_arm(clean_fp="aaaa", unfired_fp="bbbb")
+    _run(tmp_path, _doc(["rotation"]), cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "armed-but-unfired fault plan perturbed" in out
+    assert "aaaa" in out and "bbbb" in out
+
+
+def test_null_chaos_baseline_prints_one_sided(tmp_path, monkeypatch, capsys):
+    # the committed BENCH_fig9.json placeholder nulls every chaos metric;
+    # the first toolchain-equipped run must print one-sided and pass
+    base = _doc(["rotation"])
+    base["chaos_arm"] = {k: (v if k == "app" else None)
+                         for k, v in _chaos_arm().items()}
+    cur = _doc(["rotation"])
+    cur["chaos_arm"] = _chaos_arm()
+    _run(tmp_path, base, cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "-- chaos_arm" in out
+    assert "n/a" in out
+    assert "perturbed" not in out

@@ -9,7 +9,9 @@
 //! there so the perf trajectory can be archived per-PR.
 
 use strads::cluster::HandoffJitter;
-use strads::figures::fig9::{self, ModeComparison, Panel, ThreadsComparison};
+use strads::figures::fig9::{
+    self, ChaosComparison, ModeComparison, Panel, ThreadsComparison,
+};
 use strads::metrics::Recorder;
 use strads::util::JsonValue;
 
@@ -88,6 +90,31 @@ fn threads_arm_json(c: &ThreadsComparison) -> JsonValue {
             format!("{:016x}", c.wall_fingerprint).as_str(),
         )
         .field("trace_overhead_secs", c.trace_overhead_secs)
+        .build()
+}
+
+fn chaos_arm_json(c: &ChaosComparison) -> JsonValue {
+    JsonValue::obj()
+        .field("app", c.app.as_str())
+        .field("target", c.target)
+        .field(
+            "fault_free_secs_to_target",
+            opt_num(c.fault_free_secs_to_target),
+        )
+        .field("chaos_secs_to_target", opt_num(c.chaos_secs_to_target))
+        .field("recoveries", c.recoveries)
+        .field("rounds_lost", c.rounds_lost)
+        .field("checkpoint_secs", c.checkpoint_secs)
+        .field(
+            "clean_fingerprint",
+            format!("{:016x}", c.clean_fingerprint).as_str(),
+        )
+        .field(
+            "unfired_fingerprint",
+            format!("{:016x}", c.unfired_fingerprint).as_str(),
+        )
+        .field("fault_free", recorder_json(&c.fault_free))
+        .field("chaos", recorder_json(&c.chaos))
         .build()
 }
 
@@ -387,6 +414,39 @@ fn main() {
         threads.sim_fingerprint, threads.wall_fingerprint
     );
 
+    // ---- chaos arm: crash + re-join under periodic checkpoints --------
+    // Kill worker 1 at 50% of the run, re-join at 75%, checkpoint every
+    // eval interval.  Recovery must be bounded (≤ depth window rounds
+    // re-driven per boundary), the degraded run must still reach the
+    // fault-free run's 90% LL target, and an armed-but-unfired fault plan
+    // must leave the event stream bit-identical to the clean run.
+    let chaos_depth = 3u64;
+    let chaos = fig9::run_chaos_comparison(&cfg, chaos_depth);
+    fig9::print_chaos_comparison(&chaos);
+    assert_eq!(chaos.recoveries, 2, "kill + join each fire one recovery");
+    assert!(
+        chaos.rounds_lost <= chaos.recoveries * chaos_depth,
+        "recovery re-drove {} rounds across {} depth-{chaos_depth} \
+         boundaries",
+        chaos.rounds_lost,
+        chaos.recoveries
+    );
+    chaos
+        .fault_free_secs_to_target
+        .expect("fault-free run reaches its own 90% target");
+    assert!(
+        chaos.chaos_secs_to_target.is_some(),
+        "chaos run must still converge to the fault-free 90% LL target \
+         {:.6} (bounded-delay degradation)",
+        chaos.target
+    );
+    assert_eq!(
+        chaos.clean_fingerprint, chaos.unfired_fingerprint,
+        "armed-but-unfired fault plan must not perturb the trace \
+         ({:016x} vs {:016x})",
+        chaos.clean_fingerprint, chaos.unfired_fingerprint
+    );
+
     // ---- BENCH_fig9.json ---------------------------------------------
     let json = JsonValue::obj()
         .field("figure", "fig9")
@@ -409,6 +469,7 @@ fn main() {
         .field("dynamic_uniform_arm", arm_json(&dyn_uni))
         .field("mf_rotation_arm", arm_json(&mf_rot))
         .field("threads_arm", threads_arm_json(&threads))
+        .field("chaos_arm", chaos_arm_json(&chaos))
         .field("wall_secs", t.elapsed().as_secs_f64())
         .build();
     let dir = std::env::var("STRADS_BENCH_DIR")

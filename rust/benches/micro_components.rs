@@ -77,7 +77,8 @@ fn main() {
         let mut next = vec![0u64; u];
         let runs = time_it(10, 200, || {
             for a in 0..u {
-                let (data, v) = router.take(a, next[a]);
+                let (data, v) =
+                    router.take(a, next[a]).expect("parked handoff");
                 router.forward(a, data, v + 1);
                 next[a] = v + 1;
             }

@@ -29,12 +29,15 @@ use crate::cluster::router_spin_ms;
 use crate::coordinator::{
     EffectiveConfig, HandoffLeg, RotationCaps, RunConfig, StradsApp,
 };
-use crate::kvstore::{LeaseLedger, LeaseToken, SliceMass, SliceRouter, SliceStore};
+use crate::kvstore::{
+    LeaseLedger, LeaseToken, RouterError, SliceMass, SliceRouter, SliceStore,
+};
 use crate::metrics::s_error;
 use crate::scheduler::rotation::{
     self, GrantLeg, QueueOrder, RotationScheduler, SkipPolicy,
 };
 use crate::trace::{TracePlumbing, TraceReplayer};
+use crate::util::wire::{Unwire, Wire};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -118,6 +121,11 @@ pub struct LdaPartial {
     pub s_local: Vec<f32>,
     pub touched_words: usize,
     pub n_topics: usize,
+    /// Rotation path: a take deadline expired mid-sweep.  The sweep stops
+    /// at the wedged leg (already-swept legs were forwarded and are
+    /// reported above) and the engine aborts the run cleanly instead of
+    /// panicking on a worker thread ([`StradsApp::partial_error`]).
+    pub error: Option<RouterError>,
 }
 
 /// Coordinator state.
@@ -441,9 +449,24 @@ impl StradsApp for LdaApp {
                         (l.slice_id, version)
                     })
                     .collect();
-                let (pick, data, consumed) = match order {
+                let picked = match order {
                     QueueOrder::Dynamic => router.take_heaviest(&grants, spin),
                     _ => router.take_earliest(&grants, spin),
+                };
+                let (pick, data, consumed) = match picked {
+                    Ok(t) => t,
+                    Err(e) => {
+                        // deadline expired with every remaining grant still
+                        // parked — report the wedge instead of panicking;
+                        // the engine aborts the run
+                        return LdaPartial {
+                            legs: out_legs,
+                            s_local: s_running,
+                            touched_words,
+                            n_topics,
+                            error: Some(e),
+                        };
+                    }
                 };
                 let leg = remaining.remove(pick);
                 let (touched, out) = routed_leg(
@@ -463,9 +486,11 @@ impl StradsApp for LdaApp {
                 s_local: s_running,
                 touched_words,
                 n_topics,
+                error: None,
             };
         }
 
+        let mut error = None;
         for leg in legs {
             let LdaTaskLeg { slice_id, b_slice, version, dest_worker } = leg;
             match (&router, version, b_slice) {
@@ -473,7 +498,14 @@ impl StradsApp for LdaApp {
                     // receive the slice from its previous holder (blocks
                     // until exactly this version was forwarded), sweep,
                     // then hand it straight on to the next holder
-                    let (data, consumed) = router.take(slice_id, version);
+                    let (data, consumed) = match router.take(slice_id, version)
+                    {
+                        Ok(t) => t,
+                        Err(e) => {
+                            error = Some(e);
+                            break;
+                        }
+                    };
                     let (touched, out) = routed_leg(
                         ws, router, slice_id, dest_worker, data, consumed,
                         &mut s_running,
@@ -501,7 +533,7 @@ impl StradsApp for LdaApp {
                 _ => panic!("task leg mixes the BSP and routed forms"),
             }
         }
-        LdaPartial { legs: out_legs, s_local: s_running, touched_words, n_topics }
+        LdaPartial { legs: out_legs, s_local: s_running, touched_words, n_topics, error }
     }
 
     fn pull(&mut self, round: u64, partials: Vec<LdaPartial>) -> Option<Vec<f32>> {
@@ -537,7 +569,14 @@ impl StradsApp for LdaApp {
                         };
                         self.slices.checkin(lease);
                     }
-                    (None, Some(token)) => self.ledger.settle(&token),
+                    (None, Some(token)) => {
+                        // the engine collects every granted lease exactly
+                        // once, so a fenced (zombie) settle here is a
+                        // pipeline bug, not a recoverable condition
+                        self.ledger.settle(&token).unwrap_or_else(|z| {
+                            panic!("zombie settle in engine flow: {z:?}")
+                        });
+                    }
                     (None, None) => {
                         panic!("partial leg carries neither a slice nor a lease")
                     }
@@ -624,7 +663,10 @@ impl StradsApp for LdaApp {
         // with a live parked-version signal, and push/pull tolerate short
         // (even empty) queues — a skipped slice simply contributes no
         // sweep and no s̃ delta that round.
-        RotationCaps { queue_reorder: true, skip: true }
+        // elastic: slice state lives in the router/store, not on workers;
+        // ownership is pure placement, so membership changes reduce to a
+        // re_place at a drained boundary (recover_membership below).
+        RotationCaps { queue_reorder: true, skip: true, elastic: true }
     }
 
     fn negotiate(&mut self, cfg: &RunConfig) -> EffectiveConfig {
@@ -695,6 +737,134 @@ impl StradsApp for LdaApp {
                 })
             })
             .collect()
+    }
+
+    fn partial_error(p: &LdaPartial) -> Option<RouterError> {
+        p.error
+    }
+
+    fn recover_membership(&mut self, alive: &[bool]) -> usize {
+        let router = self.router.as_ref().expect("rotation mode active");
+        // Revive before kill: `set_alive` asserts at least one worker
+        // stays live, and a same-boundary kill+join could transiently
+        // empty the ring if deaths were applied first.
+        let prev: Vec<bool> = self.sched.alive().to_vec();
+        for (w, &live) in alive.iter().enumerate() {
+            if live && !prev[w] {
+                self.sched.set_alive(w, true);
+            }
+        }
+        for (w, &live) in alive.iter().enumerate() {
+            if !live && prev[w] {
+                self.sched.set_alive(w, false);
+            }
+        }
+        // Rebalance from the *parked* slice masses — the engine drains
+        // the window before recovery, so every slice sits in its slot.
+        // Dead workers keep a ring residue but their speed is pinned ≈0,
+        // so the skew-aware split leaves their cohorts empty and
+        // `live_owner` folds their positions onto live neighbors.
+        let u = self.n_slices;
+        let masses: Vec<u64> = (0..u)
+            .map(|a| {
+                router.with_slice(a, |s| {
+                    s.expect("slice parked at a drained recovery boundary")
+                        .mass()
+                }) as u64
+            })
+            .collect();
+        let speeds: Vec<f64> = alive
+            .iter()
+            .map(|&live| if live { 1.0 } else { 1e-9 })
+            .collect();
+        let placement = rotation::skew_aware_placement(&masses, &speeds);
+        let moved =
+            (0..u).filter(|&v| self.sched.slice_at(v) != placement[v]).count();
+        self.sched.re_place(placement);
+        // Fence every chain at its settled head so a zombie settle from
+        // the dead worker's last partial hits [`StaleLease`], never the
+        // ledger.  The drain above already collected all live grants, so
+        // no orphans are expected here — the fence is belt-and-braces.
+        let orphaned = self.ledger.recover_all();
+        debug_assert_eq!(orphaned, 0, "recovery boundary was not drained");
+        moved
+    }
+
+    fn supports_checkpoint() -> bool {
+        true
+    }
+
+    fn checkpoint_app(&mut self) -> Vec<u8> {
+        let router =
+            self.router.as_ref().expect("checkpoint requires rotation mode");
+        let mut w = Wire::new();
+        w.put_u64(self.n_slices as u64);
+        w.put_u64(self.n_topics as u64);
+        for a in 0..self.n_slices {
+            // every slice is parked at a drained boundary, so the chain
+            // head is exactly the parked version
+            let version = router
+                .parked_version(a)
+                .expect("slice parked at a drained checkpoint boundary");
+            w.put_u64(version);
+            let (n_words, counts) = router.with_slice(a, |s| {
+                let s =
+                    s.expect("slice parked at a drained checkpoint boundary");
+                (s.n_words as u64, s.counts.clone())
+            });
+            w.put_u64(n_words);
+            w.put_f32s(&counts);
+        }
+        w.put_f32s(&self.s);
+        w.put_f32s(&self.s_snapshot);
+        w.put_u64(self.pulls);
+        w.put_u64(self.sched.round());
+        // current-round slice coordinates (what `re_place` consumes),
+        // so a resume reproduces placement even after mid-run reshuffles
+        let current: Vec<u64> =
+            (0..self.n_slices).map(|v| self.sched.slice_at(v) as u64).collect();
+        w.put_u64s(&current);
+        w.into_bytes()
+    }
+
+    fn restore_app(&mut self, blob: &[u8]) {
+        assert!(
+            self.router.is_none(),
+            "restore must run before begin_rotation"
+        );
+        let mut r = Unwire::new(blob);
+        assert_eq!(r.u64() as usize, self.n_slices, "slice count mismatch");
+        assert_eq!(r.u64() as usize, self.n_topics, "topic count mismatch");
+        for a in 0..self.n_slices {
+            let version = r.u64();
+            let n_words = r.u64() as usize;
+            let counts = r.f32s();
+            // drop the freshly built payload, then restore into the empty
+            // slot (versions only move forward, which a checkpoint of the
+            // same run always satisfies)
+            let _ = self.slices.checkout(a);
+            self.slices.restore(a, BSlice { counts, n_words }, version);
+        }
+        self.s = r.f32s();
+        self.s_snapshot = r.f32s();
+        self.pulls = r.u64();
+        let counter = r.u64();
+        let current: Vec<usize> =
+            r.u64s().into_iter().map(|v| v as usize).collect();
+        r.done();
+        // set_round first: re_place converts current-round coordinates
+        // through the restored counter
+        self.sched.set_round(counter);
+        self.sched.re_place(current);
+        self.inflight_s.clear();
+    }
+
+    fn checkpoint_worker(ws: &mut Self::WorkerState) -> Vec<u8> {
+        ws.save_state()
+    }
+
+    fn restore_worker(ws: &mut Self::WorkerState, blob: &[u8]) {
+        ws.load_state(blob);
     }
 }
 

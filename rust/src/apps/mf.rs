@@ -630,7 +630,8 @@ impl StradsApp for MfBlockApp {
                 let (pick, data, consumed) = match order {
                     QueueOrder::Dynamic => router.take_heaviest(&grants, spin),
                     _ => router.take_earliest(&grants, spin),
-                };
+                }
+                .expect("MF rotation take deadline expired");
                 let leg = remaining.remove(pick);
                 out_legs.push(routed_leg(
                     ws,
@@ -650,7 +651,9 @@ impl StradsApp for MfBlockApp {
                 leg;
             match (&router, version, h_block) {
                 (Some(router), Some(version), None) => {
-                    let (data, consumed) = router.take(block_id, version);
+                    let (data, consumed) = router
+                        .take(block_id, version)
+                        .expect("MF rotation take deadline expired");
                     out_legs.push(routed_leg(
                         ws, router, block_id, dest_worker, data, consumed,
                         eta,
@@ -690,7 +693,11 @@ impl StradsApp for MfBlockApp {
                         };
                         self.blocks.checkin(lease);
                     }
-                    (None, Some(token)) => self.ledger.settle(&token),
+                    (None, Some(token)) => {
+                        self.ledger.settle(&token).unwrap_or_else(|z| {
+                            panic!("zombie settle in engine flow: {z:?}")
+                        });
+                    }
                     (None, None) => {
                         panic!("partial leg carries neither a block nor a lease")
                     }
@@ -760,7 +767,10 @@ impl StradsApp for MfBlockApp {
         // parked-version signal, and a short (even empty) queue is just a
         // round with fewer SGD sweeps — W rows and the eval mirror need
         // no per-round completeness.
-        RotationCaps { queue_reorder: true, skip: true }
+        // elastic: not yet wired — H blocks are coordinator-held like
+        // LDA's slices, but the W shards are worker-resident, so a
+        // membership change would strand a dead worker's W rows.
+        RotationCaps { queue_reorder: true, skip: true, elastic: false }
     }
 
     fn negotiate(&mut self, cfg: &RunConfig) -> EffectiveConfig {

@@ -42,6 +42,17 @@ pub trait MfShard: Send {
     fn loss(&self) -> f64;
     /// Model bytes (W shard + H copy + residuals).
     fn model_bytes(&self) -> u64;
+    /// Serialize the shard's full mutable state for a KV checkpoint
+    /// (restore via [`MfShard::load_state`] is bit-exact).  Backends that
+    /// never run under `--checkpoint-every` may keep the panicking default.
+    fn save_state(&self) -> Vec<u8> {
+        unimplemented!("this MfShard backend does not support checkpointing")
+    }
+    /// Restore state captured by [`MfShard::save_state`] into a shard
+    /// built from the same immutable inputs.
+    fn load_state(&mut self, _bytes: &[u8]) {
+        unimplemented!("this MfShard backend does not support checkpointing")
+    }
 }
 
 /// LDA shard compute (one worker's document shard).
@@ -80,4 +91,17 @@ pub trait LdaShard: Send {
     fn doc_loglik(&self) -> f64;
     /// Model bytes (doc-topic rows + local s copy).
     fn model_bytes(&self) -> u64;
+    /// Serialize the shard's full mutable sampler state (topic
+    /// assignments + RNG position) for a KV checkpoint; restore via
+    /// [`LdaShard::load_state`] is bit-exact, so a resumed run draws the
+    /// same Gibbs chain the uninterrupted run would have.  Backends that
+    /// never run under `--checkpoint-every` may keep the panicking default.
+    fn save_state(&self) -> Vec<u8> {
+        unimplemented!("this LdaShard backend does not support checkpointing")
+    }
+    /// Restore state captured by [`LdaShard::save_state`] into a shard
+    /// built from the same corpus shard.
+    fn load_state(&mut self, _bytes: &[u8]) {
+        unimplemented!("this LdaShard backend does not support checkpointing")
+    }
 }

@@ -4,7 +4,7 @@
 
 use super::{LassoShard, LdaShard, MfShard};
 use crate::sparse::{CscMatrix, CsrMatrix};
-use crate::util::Rng;
+use crate::util::{Rng, Unwire, Wire};
 
 // ------------------------------------------------------------- Lasso -----
 
@@ -215,6 +215,41 @@ impl MfShard for NativeMfShard {
     fn model_bytes(&self) -> u64 {
         // W shard + replicated H copy + residual values
         (self.w.len() * 4 + self.h.len() * 4 + self.resid.nnz() * 4) as u64
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        // mutable state only: W, the local H copy, residual values (the
+        // sparsity pattern and λ are immutable construction inputs)
+        let mut wr = Wire::new();
+        wr.put_f32s(&self.w);
+        wr.put_f32s(&self.h);
+        wr.put_u64(self.resid.rows() as u64);
+        for i in 0..self.resid.rows() {
+            wr.put_f32s(self.resid.row(i).1);
+        }
+        wr.into_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) {
+        let mut r = Unwire::new(bytes);
+        let w = r.f32s();
+        assert_eq!(w.len(), self.w.len(), "checkpoint W shape mismatch");
+        self.w = w;
+        let h = r.f32s();
+        assert_eq!(h.len(), self.h.len(), "checkpoint H shape mismatch");
+        self.h = h;
+        assert_eq!(
+            r.u64() as usize,
+            self.resid.rows(),
+            "checkpoint residual row-count mismatch"
+        );
+        for i in 0..self.resid.rows() {
+            let vals = r.f32s();
+            let row = self.resid.row_values_mut(i);
+            assert_eq!(vals.len(), row.len(), "checkpoint residual mismatch");
+            row.copy_from_slice(&vals);
+        }
+        r.done();
     }
 }
 
@@ -427,6 +462,49 @@ impl LdaShard for NativeLdaShard {
     fn model_bytes(&self) -> u64 {
         (self.d_tab.len() * 4 + self.k * 4) as u64
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        // mutable sampler state: topic assignments + RNG position.  The
+        // doc-topic table is a pure function of the assignments (sums of
+        // 1.0 — exactly representable, order-free) and is rebuilt on load;
+        // tokens' doc/word coordinates and doc_totals are immutable.
+        let mut w = Wire::new();
+        w.put_u64(self.k as u64);
+        w.put_u64(self.tokens.len() as u64);
+        for bucket in &self.tokens {
+            w.put_u32s(&bucket.iter().map(|t| t.z).collect::<Vec<u32>>());
+        }
+        w.put_u64s(&self.rng.state());
+        w.into_bytes()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) {
+        let mut r = Unwire::new(bytes);
+        assert_eq!(r.u64() as usize, self.k, "checkpoint topic-count mismatch");
+        assert_eq!(
+            r.u64() as usize,
+            self.tokens.len(),
+            "checkpoint slice-count mismatch"
+        );
+        self.d_tab.iter_mut().for_each(|c| *c = 0.0);
+        for bucket in self.tokens.iter_mut() {
+            let zs = r.u32s();
+            assert_eq!(
+                zs.len(),
+                bucket.len(),
+                "checkpoint token-count mismatch"
+            );
+            for (t, z) in bucket.iter_mut().zip(zs) {
+                t.z = z;
+                self.d_tab[t.doc as usize * self.k + z as usize] += 1.0;
+            }
+        }
+        let st = r.u64s();
+        self.rng = Rng::from_state(
+            st.try_into().expect("rng state is four words"),
+        );
+        r.done();
+    }
 }
 
 #[cfg(test)]
@@ -614,6 +692,52 @@ mod tests {
             assert!(b.iter().all(|&c| c >= 0.0));
             assert!(shard.d_tab().iter().all(|&c| c >= -1e-6));
         }
+    }
+
+    #[test]
+    fn lda_checkpoint_roundtrip_resumes_the_exact_chain() {
+        fn bits(v: &[f32]) -> Vec<u32> {
+            v.iter().map(|x| x.to_bits()).collect()
+        }
+        let (mut a, mut b_a, s) = lda_fixture(31);
+        let _ = a.gibbs_slice(0, &mut b_a, &s);
+        let blob = a.save_state();
+        // restore into a shard built from the same corpus inputs; the B
+        // slice travels separately (it lives in the KV plane)
+        let (mut c, mut b_c, _) = lda_fixture(31);
+        c.load_state(&blob);
+        b_c.copy_from_slice(&b_a);
+        assert_eq!(bits(a.d_tab()), bits(c.d_tab()));
+        // both shards must now draw the identical Gibbs chain
+        let (sa, na, _) = a.gibbs_slice(0, &mut b_a, &s);
+        let (sc, nc, _) = c.gibbs_slice(0, &mut b_c, &s);
+        assert_eq!(na, nc);
+        assert_eq!(bits(&sa), bits(&sc));
+        assert_eq!(bits(&b_a), bits(&b_c));
+        assert_eq!(bits(a.d_tab()), bits(c.d_tab()));
+    }
+
+    #[test]
+    fn mf_checkpoint_roundtrip_is_bit_exact() {
+        let mut a = mf_fixture();
+        let (sa, sb) = a.h_stats(0);
+        let row: Vec<f32> = sa
+            .iter()
+            .zip(sb.iter())
+            .map(|(x, y)| x / (0.01 + y))
+            .collect();
+        a.set_h_row(0, &row);
+        a.update_w(0);
+        let blob = a.save_state();
+        let mut c = mf_fixture();
+        c.load_state(&blob);
+        assert_eq!(a.loss().to_bits(), c.loss().to_bits());
+        // further identical updates stay bit-identical
+        a.update_w(0);
+        c.update_w(0);
+        let wa: Vec<u32> = a.w.iter().map(|v| v.to_bits()).collect();
+        let wc: Vec<u32> = c.w.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wa, wc);
     }
 
     #[test]

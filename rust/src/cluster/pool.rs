@@ -8,7 +8,7 @@
 //! is always applied first — this ordering is what makes the engine's BSP
 //! barrier correct (see coordinator::engine).
 
-use crate::kvstore::LeaseToken;
+use crate::kvstore::{LeaseToken, RouterError};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
@@ -206,17 +206,20 @@ impl<T> ForwardQueue<T> {
     /// Block until `slot` holds exactly `version`, then take it.  Returns
     /// the item together with the version the *producer* deposited (the
     /// consumer's independent evidence of what it consumed).  Panics on a
-    /// version mismatch or if the handoff never arrives within the
-    /// [`router_spin_ms`] deadlock guard.
-    pub fn take(&self, slot: usize, version: u64) -> (T, u64) {
+    /// version mismatch (a protocol fork); a handoff that never arrives
+    /// within the [`router_spin_ms`] deadline is a *liveness* fault and
+    /// returns a typed [`RouterError`] instead — the queue layer's
+    /// `chain_head` is best-effort (the parked version, if any;
+    /// [`crate::kvstore::SliceRouter::take`] reports the true chain head).
+    pub fn take(&self, slot: usize, version: u64) -> Result<(T, u64), RouterError> {
         let ms = router_spin_ms();
         self.take_for(slot, version, Duration::from_millis(ms))
-            .unwrap_or_else(|| {
-                panic!(
-                    "forward queue slot {slot}: version {version} never \
-                     arrived within {ms}ms (handoff deadlock? tune \
-                     STRADS_ROUTER_SPIN_MS)"
-                )
+            .ok_or_else(|| RouterError {
+                slice_id: slot,
+                version,
+                chain_head: self.parked_version(slot).unwrap_or(0),
+                suspected_holder: None,
+                waited_ms: ms,
             })
     }
 
@@ -323,35 +326,115 @@ impl<T> ForwardQueue<T> {
 }
 
 /// Pool of worker threads, one per simulated machine.
+///
+/// Membership is **elastic**: [`WorkerPool::kill`] really stops a worker's
+/// OS thread (fault injection, under both execution backends) and parks
+/// its state; [`WorkerPool::revive`] respawns the thread from the parked
+/// state.  While a worker is down, jobs addressed to it run *inline* on
+/// the dispatching (coordinator) thread against the parked state — the
+/// frozen shard keeps receiving syncs and being evaluated, so reply
+/// arithmetic stays dense (`collect` always sees `n_workers` replies) and
+/// the objective stays comparable across a fault.  The engine must only
+/// address non-blocking (lease-free) jobs to dead workers, or the inline
+/// run would stall the coordinator.
 pub struct WorkerPool<S> {
-    senders: Vec<mpsc::Sender<Job<S>>>,
-    handles: Vec<JoinHandle<()>>,
+    senders: Vec<Option<mpsc::Sender<Job<S>>>>,
+    handles: Vec<Option<JoinHandle<S>>>,
+    /// Killed workers' states, frozen after their mailbox drained
+    /// (`Mutex` because inline jobs mutate them through `&self`).
+    parked: Vec<Mutex<Option<S>>>,
 }
 
 impl<S: Send + 'static> WorkerPool<S> {
     /// Spawn one thread per element of `states`.
     pub fn new(states: Vec<S>) -> Self {
-        let mut senders = Vec::with_capacity(states.len());
-        let mut handles = Vec::with_capacity(states.len());
-        for (p, mut state) in states.into_iter().enumerate() {
-            let (tx, rx) = mpsc::channel::<Job<S>>();
-            senders.push(tx);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("strads-worker-{p}"))
-                    .spawn(move || {
-                        while let Ok(job) = rx.recv() {
-                            job(&mut state);
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+        let n = states.len();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (p, state) in states.into_iter().enumerate() {
+            let (tx, h) = Self::spawn_worker(p, state);
+            senders.push(Some(tx));
+            handles.push(Some(h));
         }
-        WorkerPool { senders, handles }
+        WorkerPool {
+            senders,
+            handles,
+            parked: (0..n).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    fn spawn_worker(
+        p: usize,
+        mut state: S,
+    ) -> (mpsc::Sender<Job<S>>, JoinHandle<S>) {
+        let (tx, rx) = mpsc::channel::<Job<S>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("strads-worker-{p}"))
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    job(&mut state);
+                }
+                state // handed back to kill(): the shard outlives its thread
+            })
+            .expect("spawn worker");
+        (tx, handle)
+    }
+
+    /// Stop worker `p`'s OS thread (crash injection).  Closing the mailbox
+    /// lets the thread drain every already-enqueued job first — no sync or
+    /// push dispatched before the kill is lost — then the thread exits and
+    /// its state is parked for inline jobs and a later
+    /// [`WorkerPool::revive`].  Panics if the worker is already dead.
+    pub fn kill(&mut self, p: usize) {
+        let tx = self.senders[p]
+            .take()
+            .unwrap_or_else(|| panic!("worker {p} is already dead"));
+        drop(tx); // closes the mailbox; the thread drains it and exits
+        let h = self.handles[p].take().expect("live worker has a handle");
+        let state = h.join().expect("worker thread panicked");
+        *self.parked[p].lock().expect("parked state poisoned") = Some(state);
+    }
+
+    /// Restart worker `p` from its parked state (elastic re-join).  The
+    /// new OS thread resumes exactly where the dead one stopped — plus
+    /// whatever inline jobs ran against the parked state in between.
+    /// Panics if the worker is live or was never killed.
+    pub fn revive(&mut self, p: usize) {
+        assert!(self.senders[p].is_none(), "worker {p} is already live");
+        let state = self.parked[p]
+            .lock()
+            .expect("parked state poisoned")
+            .take()
+            .unwrap_or_else(|| panic!("worker {p} has no parked state"));
+        let (tx, h) = Self::spawn_worker(p, state);
+        self.senders[p] = Some(tx);
+        self.handles[p] = Some(h);
+    }
+
+    /// Whether worker `p`'s OS thread is currently running.
+    pub fn is_live(&self, p: usize) -> bool {
+        self.senders[p].is_some()
+    }
+
+    /// Number of workers with a live OS thread.
+    pub fn n_live(&self) -> usize {
+        self.senders.iter().filter(|s| s.is_some()).count()
     }
 
     pub fn n_workers(&self) -> usize {
         self.senders.len()
+    }
+
+    /// Run one job against a dead worker's parked state on the calling
+    /// thread, returning the result and the measured inline CPU seconds.
+    fn run_inline<R>(&self, p: usize, job: impl FnOnce(&mut S) -> R) -> (R, f64) {
+        let mut parked = self.parked[p].lock().expect("parked state poisoned");
+        let state = parked
+            .as_mut()
+            .unwrap_or_else(|| panic!("worker {p} has no parked state"));
+        let t0 = thread_cpu_secs();
+        let out = job(state);
+        (out, thread_cpu_secs() - t0)
     }
 
     /// Run `make_job(p)`'s closure on every worker; collect results in
@@ -379,15 +462,24 @@ impl<S: Send + 'static> WorkerPool<S> {
         let (rtx, rrx) = mpsc::channel::<(usize, R, f64)>();
         for (p, sender) in self.senders.iter().enumerate() {
             let job = make_job(p);
-            let rtx = rtx.clone();
-            let wrapped: Job<S> = Box::new(move |state: &mut S| {
-                let t0 = thread_cpu_secs();
-                let out = job(state);
-                let secs = thread_cpu_secs() - t0;
-                // receiver never hangs up before collecting
-                let _ = rtx.send((p, out, secs));
-            });
-            sender.send(wrapped).expect("worker thread alive");
+            match sender {
+                Some(sender) => {
+                    let rtx = rtx.clone();
+                    let wrapped: Job<S> = Box::new(move |state: &mut S| {
+                        let t0 = thread_cpu_secs();
+                        let out = job(state);
+                        let secs = thread_cpu_secs() - t0;
+                        // receiver never hangs up before collecting
+                        let _ = rtx.send((p, out, secs));
+                    });
+                    sender.send(wrapped).expect("worker thread alive");
+                }
+                None => {
+                    // dead worker: run inline so the round stays dense
+                    let (out, secs) = self.run_inline(p, job);
+                    let _ = rtx.send((p, out, secs));
+                }
+            }
         }
         PendingRound { rrx, n_workers: self.senders.len(), leases: Vec::new() }
     }
@@ -398,14 +490,19 @@ impl<S: Send + 'static> WorkerPool<S> {
         R: Send + 'static,
         F: FnOnce(&mut S) -> R + Send + 'static,
     {
-        let (rtx, rrx) = mpsc::channel::<(R, f64)>();
-        let wrapped: Job<S> = Box::new(move |state: &mut S| {
-            let t0 = thread_cpu_secs();
-            let out = job(state);
-            let _ = rtx.send((out, thread_cpu_secs() - t0));
-        });
-        self.senders[p].send(wrapped).expect("worker thread alive");
-        rrx.recv().expect("worker reply")
+        match &self.senders[p] {
+            Some(sender) => {
+                let (rtx, rrx) = mpsc::channel::<(R, f64)>();
+                let wrapped: Job<S> = Box::new(move |state: &mut S| {
+                    let t0 = thread_cpu_secs();
+                    let out = job(state);
+                    let _ = rtx.send((out, thread_cpu_secs() - t0));
+                });
+                sender.send(wrapped).expect("worker thread alive");
+                rrx.recv().expect("worker reply")
+            }
+            None => self.run_inline(p, job),
+        }
     }
 
     /// Fire-and-forget broadcast (sync messages): FIFO mailboxes guarantee
@@ -417,8 +514,16 @@ impl<S: Send + 'static> WorkerPool<S> {
     {
         for (p, sender) in self.senders.iter().enumerate() {
             let job = make_job(p);
-            let wrapped: Job<S> = Box::new(move |state: &mut S| job(state));
-            sender.send(wrapped).expect("worker thread alive");
+            match sender {
+                Some(sender) => {
+                    let wrapped: Job<S> =
+                        Box::new(move |state: &mut S| job(state));
+                    sender.send(wrapped).expect("worker thread alive");
+                }
+                // dead worker: apply to the parked state so the frozen
+                // shard keeps receiving syncs and stays evaluable
+                None => drop(self.run_inline(p, job)),
+            }
         }
     }
 }
@@ -471,7 +576,7 @@ impl<R> PendingRound<R> {
 impl<S> Drop for WorkerPool<S> {
     fn drop(&mut self) {
         self.senders.clear(); // closes mailboxes; threads exit their loop
-        for h in self.handles.drain(..) {
+        for h in self.handles.drain(..).flatten() {
             let _ = h.join();
         }
     }
@@ -556,7 +661,7 @@ mod tests {
         let h = std::thread::spawn(move || q2.take(1, 4));
         std::thread::sleep(Duration::from_millis(20));
         q.deposit(1, "slice".to_string(), 4);
-        let (item, v) = h.join().expect("taker thread");
+        let (item, v) = h.join().expect("taker thread").expect("deposit landed");
         assert_eq!((item.as_str(), v), ("slice", 4));
         assert!(q.reclaim(1).is_none());
     }
@@ -613,7 +718,7 @@ mod tests {
         // now succeeds
         assert_eq!(q.try_take(0, 2), Some((7u8, 2)));
         q.deposit(0, 8u8, 3);
-        assert_eq!(q.take(0, 3), (8u8, 3));
+        assert_eq!(q.take(0, 3).unwrap(), (8u8, 3));
     }
 
     #[test]
@@ -678,6 +783,64 @@ mod tests {
         assert_eq!(q.blocked_secs(), 0.0, "nothing parked yet");
         let _ = q.take_for(0, 0, Duration::from_millis(25));
         assert!(q.blocked_secs() >= 0.02, "the timed-out wait was parked");
+    }
+
+    #[test]
+    fn kill_stops_the_thread_and_parks_state_for_inline_jobs() {
+        let mut pool = WorkerPool::new(vec![0i64; 3]);
+        pool.run(|_| |s: &mut i64| *s += 1);
+        pool.kill(1);
+        assert!(!pool.is_live(1));
+        assert_eq!(pool.n_live(), 2);
+        // dispatched work still covers the dead worker (inline), so the
+        // round stays dense and the frozen shard keeps up with syncs
+        let out = pool.run(|_| |s: &mut i64| {
+            *s += 1;
+            *s
+        });
+        assert_eq!(out.iter().map(|(v, _)| *v).collect::<Vec<_>>(), [2, 2, 2]);
+        pool.broadcast(|_| |s: &mut i64| *s += 10);
+        let (v, _) = pool.run_on(1, |s: &mut i64| *s);
+        assert_eq!(v, 12, "broadcast reached the parked state");
+        // revive: the new OS thread resumes from the parked state
+        pool.revive(1);
+        assert!(pool.is_live(1));
+        assert_eq!(pool.n_live(), 3);
+        let out = pool.run(|_| |s: &mut i64| *s);
+        assert_eq!(out.iter().map(|(v, _)| *v).collect::<Vec<_>>(), [12, 12, 12]);
+    }
+
+    #[test]
+    fn kill_drains_the_mailbox_before_parking() {
+        // a job already enqueued when the kill lands must be applied to
+        // the state before it parks — no dispatched sync is ever lost
+        let mut pool = WorkerPool::new(vec![Vec::<u32>::new(); 2]);
+        let pending = pool.dispatch(|_| {
+            |s: &mut Vec<u32>| {
+                s.push(7);
+                s.len()
+            }
+        });
+        pool.kill(0);
+        let out = pending.collect();
+        assert_eq!(out.iter().map(|(n, _)| *n).collect::<Vec<_>>(), [1, 1]);
+        let (state, _) = pool.run_on(0, |s: &mut Vec<u32>| s.clone());
+        assert_eq!(state, vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already dead")]
+    fn killing_a_dead_worker_panics() {
+        let mut pool = WorkerPool::new(vec![(); 2]);
+        pool.kill(0);
+        pool.kill(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already live")]
+    fn reviving_a_live_worker_panics() {
+        let mut pool = WorkerPool::new(vec![(); 2]);
+        pool.revive(1);
     }
 
     #[test]

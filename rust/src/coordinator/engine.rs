@@ -69,7 +69,7 @@ use crate::cluster::{
     NetworkConfig, NetworkModel, PendingRound, StragglerModel, VirtualClock,
     WorkerPool,
 };
-use crate::kvstore::{LeaseToken, VersionVector};
+use crate::kvstore::{LeaseToken, RouterError, VersionVector};
 use crate::metrics::{Recorder, SspStats};
 use crate::scheduler::rotation::{QueueOrder, SkipPolicy};
 use crate::trace::{Event, Trace, TraceMode, TracePlumbing};
@@ -270,6 +270,64 @@ pub trait StradsApp {
         0.0
     }
 
+    /// Rotation liveness: the typed data-plane error this partial
+    /// carries, if its worker lost a slice handoff (a router take
+    /// deadline expired — [`crate::kvstore::RouterError`]).  The engine
+    /// aborts the run cleanly ([`RunResult::aborted`]) instead of
+    /// panicking the process, after filling `suspected_holder` from its
+    /// recent-grant table.  Default: partials never carry errors.
+    fn partial_error(_partial: &Self::Partial) -> Option<RouterError> {
+        None
+    }
+
+    // ---- elastic membership + fault tolerance (RunConfig::faults) ----
+
+    /// Cluster membership changed — a worker crashed or re-joined;
+    /// `alive[p]` is the new liveness vector.  The app must re-point its
+    /// rotation scheduler at the survivors (placement re-balanced over
+    /// the live workers, lease ledger fenced past any orphaned grants)
+    /// and return the number of ring positions whose slice assignment
+    /// moved.  Called only at fully-drained round boundaries, so every
+    /// lease is settled when it runs.  Apps opt in via
+    /// [`RotationCaps::elastic`]; the default panics.
+    fn recover_membership(&mut self, _alive: &[bool]) -> usize {
+        panic!("this app does not support elastic membership")
+    }
+
+    /// Whether the app can serialize its rotation state for periodic
+    /// checkpoints ([`FaultPlan::checkpoint_every`]) and bit-exact
+    /// resume ([`Engine::resume`]).
+    fn supports_checkpoint() -> bool {
+        false
+    }
+
+    /// Serialize coordinator-side rotation state (slice payloads, chain
+    /// heads, synced sums, scheduler round) into a byte blob.  Called
+    /// only at fully-drained round boundaries, so every slice is parked
+    /// and every lease settled.
+    fn checkpoint_app(&mut self) -> Vec<u8> {
+        unimplemented!("this app does not support checkpointing")
+    }
+
+    /// Restore state captured by [`StradsApp::checkpoint_app`] into a
+    /// freshly built app (static configuration is reconstructed by the
+    /// caller's deterministic setup; the blob carries dynamic state
+    /// only).  Called before [`StradsApp::begin_rotation`].
+    fn restore_app(&mut self, _blob: &[u8]) {
+        unimplemented!("this app does not support checkpointing")
+    }
+
+    /// Serialize one worker's shard state (e.g. topic assignments + RNG)
+    /// — the worker-side half of a [`RunCheckpoint`].
+    fn checkpoint_worker(_ws: &mut Self::WorkerState) -> Vec<u8> {
+        unimplemented!("this app does not support checkpointing")
+    }
+
+    /// Restore state captured by [`StradsApp::checkpoint_worker`].
+    fn restore_worker(_ws: &mut Self::WorkerState, _blob: &[u8]) {
+        unimplemented!("this app does not support checkpointing")
+    }
+
     /// Generic p2p payloads ([`StradsApp::p2p_payloads`]): the worker that
     /// receives `worker`'s payload ring-wise.  The single source of truth
     /// for the orientation is
@@ -300,6 +358,11 @@ pub struct RotationCaps {
     /// The schedule can defer a still-in-flight slice
     /// ([`SkipPolicy::Defer`]).
     pub skip: bool,
+    /// The app survives elastic membership: its scheduler can re-place
+    /// slices over the live workers and its lease ledger can fence
+    /// orphaned grants ([`StradsApp::recover_membership`]), so
+    /// [`RunConfig::faults`] kills/joins are honoured.
+    pub elastic: bool,
 }
 
 /// The rotation settings a run actually executes with, after degrading
@@ -352,6 +415,59 @@ pub enum ExecutionMode {
     Rotation { depth: u64 },
 }
 
+/// Fault-injection plan for a rotation run ([`RunConfig::faults`]):
+/// worker crashes and arrivals fire at round *boundaries* — the pipeline
+/// window is drained first, so every lease is settled when membership
+/// changes and recovery re-grants literally from the settled chain heads
+/// — and periodic KV checkpoints bound the work a crash can lose.
+///
+/// Under both backends the pool genuinely stops (and restarts) the
+/// worker's OS thread; the sim backend then models the survivors' round
+/// times while the threaded backend measures them.  An empty plan (the
+/// default) leaves the rotation path bit-identical to the fault-free
+/// engine — including a plan whose rounds never fire.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// `(worker, round)`: kill `worker` at the boundary before
+    /// dispatching `round`.  A round ≥ `max_rounds` never fires (useful
+    /// for proving a configured-but-unfired plan changes nothing).
+    pub kills: Vec<(usize, u64)>,
+    /// Round boundaries at which a replacement worker arrives; each join
+    /// revives the lowest-indexed dead worker (its shard state — frozen
+    /// while dead — comes back with it).
+    pub joins: Vec<u64>,
+    /// Take a [`RunCheckpoint`] every this many rounds (0 = off);
+    /// requires [`StradsApp::supports_checkpoint`] and
+    /// `SkipPolicy::Never` (coverage-debt state is not serialized).
+    pub checkpoint_every: u64,
+}
+
+impl FaultPlan {
+    /// No kills, no joins, no checkpoints — the bit-identical default.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+            && self.joins.is_empty()
+            && self.checkpoint_every == 0
+    }
+}
+
+/// A consistent snapshot of a rotation run at a drained round boundary:
+/// the coordinator-side app blob (slice payloads + chain heads + synced
+/// sums + scheduler round) and one blob per worker (shard assignments +
+/// RNG).  Resuming via [`Engine::resume`] on a freshly built engine
+/// reproduces the uninterrupted run's remaining rounds bit-exactly
+/// (equal trace-suffix fingerprints) under `SkipPolicy::Never`.
+#[derive(Debug, Clone)]
+pub struct RunCheckpoint {
+    /// The boundary the snapshot captures: rounds `0..round` are fully
+    /// collected; [`Engine::resume`] re-dispatches from `round`.
+    pub round: u64,
+    /// Coordinator-side state ([`StradsApp::checkpoint_app`]).
+    pub app: Vec<u8>,
+    /// Per-worker state ([`StradsApp::checkpoint_worker`]).
+    pub workers: Vec<Vec<u8>>,
+}
+
 /// Engine run parameters.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -402,6 +518,11 @@ pub struct RunConfig {
     /// `Replay(trace)` (re-drive skip decisions and queue service order
     /// from a recorded trace, bit-exact; requires `BackendKind::Sim`).
     pub trace: TraceMode,
+    /// Rotation mode: fault-injection plan — worker kills/joins at round
+    /// boundaries plus periodic KV checkpoints (default: empty, the
+    /// fault-free engine bit-exactly).  CLI: `--kill-worker W@round`,
+    /// `--join-worker @round`, `--checkpoint-every N`.
+    pub faults: FaultPlan,
 }
 
 impl Default for RunConfig {
@@ -421,6 +542,7 @@ impl Default for RunConfig {
             backend: BackendKind::Sim,
             threads_pace_secs: 0.0,
             trace: TraceMode::Off,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -532,6 +654,26 @@ impl RunConfigBuilder {
         self
     }
 
+    /// Kill `worker` at the boundary before dispatching `round`
+    /// (rotation mode; both backends genuinely stop the worker thread).
+    pub fn kill_worker(mut self, worker: usize, round: u64) -> Self {
+        self.cfg.faults.kills.push((worker, round));
+        self
+    }
+
+    /// A replacement worker arrives at the boundary before `round`,
+    /// reviving the lowest-indexed dead worker.
+    pub fn join_worker(mut self, round: u64) -> Self {
+        self.cfg.faults.joins.push(round);
+        self
+    }
+
+    /// Take a [`RunCheckpoint`] every `every` rounds (0 = off).
+    pub fn checkpoint_every(mut self, every: u64) -> Self {
+        self.cfg.faults.checkpoint_every = every;
+        self
+    }
+
     /// Validate coherence and return the config.
     ///
     /// Rejected combinations:
@@ -583,6 +725,38 @@ impl RunConfigBuilder {
                     .into(),
             );
         }
+        if !cfg.faults.is_empty() {
+            if !rotation {
+                return Err(
+                    "fault injection / checkpoints require \
+                     ExecutionMode::Rotation"
+                        .into(),
+                );
+            }
+            if matches!(cfg.trace, TraceMode::Replay(_)) {
+                return Err(
+                    "fault injection cannot run under TraceMode::Replay \
+                     (replay re-drives a recorded, fault-free schedule)"
+                        .into(),
+                );
+            }
+            if cfg.faults.checkpoint_every > 0
+                && cfg.skip_policy != SkipPolicy::Never
+            {
+                return Err(
+                    "checkpoints require SkipPolicy::Never (coverage-debt \
+                     state is not serialized)"
+                        .into(),
+                );
+            }
+            for &join in &cfg.faults.joins {
+                if !cfg.faults.kills.iter().any(|&(_, at)| at < join) {
+                    return Err(format!(
+                        "join at round {join} has no earlier kill to revive"
+                    ));
+                }
+            }
+        }
         Ok(cfg)
     }
 
@@ -606,6 +780,23 @@ impl RunConfigBuilder {
                  (RotationCaps::skip is false)",
                 self.cfg.skip_policy
             ));
+        }
+        if !(self.cfg.faults.kills.is_empty()
+            && self.cfg.faults.joins.is_empty())
+            && !caps.elastic
+        {
+            return Err(
+                "fault plan requested but the app does not support elastic \
+                 membership (RotationCaps::elastic is false)"
+                    .into(),
+            );
+        }
+        if self.cfg.faults.checkpoint_every > 0 && !A::supports_checkpoint() {
+            return Err(
+                "checkpoint_every requested but the app does not support \
+                 checkpointing"
+                    .into(),
+            );
         }
         self.build()
     }
@@ -641,6 +832,23 @@ pub struct RunResult {
     /// under the sim backend; the measured router contention under
     /// `--backend threads`.
     pub router_block_secs: f64,
+    /// Crash/join membership recoveries performed over the run
+    /// ([`RunConfig::faults`]; 0 on fault-free runs).
+    pub recoveries: u64,
+    /// In-flight rounds drained at fault boundaries — the pipeline work a
+    /// crash disrupted, at most `depth` per recovery.
+    pub rounds_lost: u64,
+    /// Wall seconds spent serializing periodic checkpoints.
+    pub checkpoint_secs: f64,
+    /// The last [`RunCheckpoint`] taken ([`FaultPlan::checkpoint_every`];
+    /// None when checkpointing is off).  Feed it to [`Engine::resume`].
+    pub checkpoint: Option<RunCheckpoint>,
+    /// Set when the run aborted cleanly on a data-plane liveness error (a
+    /// router take deadline expired): the formatted
+    /// [`crate::kvstore::RouterError`], suspected holder filled from the
+    /// engine's recent-grant table.  The recorder keeps the rounds that
+    /// completed before the abort.
+    pub aborted: Option<String>,
     /// Set if a worker exceeded the modelled memory capacity.
     pub oom: Option<String>,
     /// Pipeline accounting (observed staleness, straggler wait hidden) for
@@ -845,8 +1053,10 @@ impl<A: StradsApp> Engine<A> {
             for (p, t) in tasks.iter().enumerate() {
                 self.network.send_down(p, A::task_bytes(t));
                 let granted = A::task_leases(t);
+                // a dead worker's ring positions were re-placed onto live
+                // neighbours, so its task legitimately carries no leases
                 assert!(
-                    may_skip || !granted.is_empty(),
+                    may_skip || !granted.is_empty() || !self.pool.is_live(p),
                     "rotation task must carry at least one lease"
                 );
                 for tok in &granted {
@@ -876,16 +1086,27 @@ impl<A: StradsApp> Engine<A> {
 
         // dispatch push: tasks move into per-worker closures
         let slots = RefCell::new(tasks.into_iter().map(Some).collect::<Vec<_>>());
+        // a dead worker's (empty) job runs inline on the dispatcher
+        // thread — never sleep there, it would stall the coordinator
+        let live_mask: Vec<bool> = (0..self.pool.n_workers())
+            .map(|p| self.pool.is_live(p))
+            .collect();
         let mut pending = self.pool.dispatch(|p| {
             let task = slots.borrow_mut()[p].take().expect("one task per worker");
-            let slow = slowdowns.get(p).copied().unwrap_or(1.0);
+            let live = live_mask[p];
+            let slow = if live {
+                slowdowns.get(p).copied().unwrap_or(1.0)
+            } else {
+                1.0
+            };
+            let pace = if live { pace_floor } else { 0.0 };
             move |ws: &mut A::WorkerState| {
-                if slow > 1.0 || pace_floor > 0.0 {
+                if slow > 1.0 || pace > 0.0 {
                     // threaded backend: realize this worker's straggler
                     // multiple physically, on this thread's wall clock
                     let sw = Stopwatch::start();
                     let out = A::push(ws, task);
-                    let target = sw.secs().max(pace_floor) * slow;
+                    let target = sw.secs().max(pace) * slow;
                     let remain = target - sw.secs();
                     if remain > 0.0 {
                         std::thread::sleep(
@@ -1051,6 +1272,10 @@ impl<A: StradsApp> Engine<A> {
     /// The strict BSP loop — unchanged from the original single-mode
     /// engine, so default trajectories are bit-identical.
     fn run_bsp(&mut self, cfg: &RunConfig) -> RunResult {
+        assert!(
+            cfg.faults.is_empty(),
+            "fault injection requires the rotation pipeline"
+        );
         let wall = Stopwatch::start();
         let block0 = self.app.data_plane_block_secs();
         let plumbing = TracePlumbing::from_mode(&cfg.trace);
@@ -1124,6 +1349,11 @@ impl<A: StradsApp> Engine<A> {
             max_coverage_debt: 0,
             router_block_secs: (self.app.data_plane_block_secs() - block0)
                 .max(0.0),
+            recoveries: 0,
+            rounds_lost: 0,
+            checkpoint_secs: 0.0,
+            checkpoint: None,
+            aborted: None,
             recorder,
             oom,
             ssp: None,
@@ -1145,6 +1375,10 @@ impl<A: StradsApp> Engine<A> {
     /// drain the window first, so recorded objectives always reflect fully
     /// committed rounds.
     fn run_ssp(&mut self, cfg: &RunConfig, staleness: u64) -> RunResult {
+        assert!(
+            cfg.faults.is_empty(),
+            "fault injection requires the rotation pipeline"
+        );
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
         let block0 = self.app.data_plane_block_secs();
@@ -1268,6 +1502,11 @@ impl<A: StradsApp> Engine<A> {
             total_skipped_legs: 0,
             max_coverage_debt: 0,
             router_block_secs: router_block,
+            recoveries: 0,
+            rounds_lost: 0,
+            checkpoint_secs: 0.0,
+            checkpoint: None,
+            aborted: None,
             recorder,
             oom,
             ssp: Some(stats),
@@ -1336,7 +1575,10 @@ impl<A: StradsApp> Engine<A> {
     /// deterministic).  Returns each worker's legs as `(slice_id,
     /// seconds)` — the worker's straggler-scaled measured seconds
     /// apportioned across its queue by the legs' reported weights — plus
-    /// the measured pull seconds.
+    /// the measured pull seconds.  `Err` when any worker's sweep hit a
+    /// data-plane liveness error ([`StradsApp::partial_error`]): the round
+    /// is abandoned before any lease cross-checking (the errored worker's
+    /// leg list is legitimately short).
     fn rot_collect_round(
         &mut self,
         round_idx: u64,
@@ -1344,7 +1586,7 @@ impl<A: StradsApp> Engine<A> {
         order: QueueOrder,
         backend: &dyn ExecBackend,
         plumbing: &TracePlumbing,
-    ) -> (Vec<Vec<(usize, f64)>>, f64) {
+    ) -> Result<(Vec<Vec<(usize, f64)>>, f64), RouterError> {
         let n = self.pool.n_workers();
         let granted = pending.leases().to_vec();
         assert_eq!(
@@ -1353,6 +1595,11 @@ impl<A: StradsApp> Engine<A> {
             "rotation round must track one lease queue per worker"
         );
         let results = pending.collect();
+        for (partial, _) in &results {
+            if let Some(err) = A::partial_error(partial) {
+                return Err(err);
+            }
+        }
         let mut partials = Vec::with_capacity(results.len());
         let mut compute_secs = Vec::with_capacity(results.len());
         let mut legs_by_worker = Vec::with_capacity(results.len());
@@ -1481,7 +1728,7 @@ impl<A: StradsApp> Engine<A> {
                 move |ws: &mut A::WorkerState| A::sync(ws, &msg)
             });
         }
-        (timed_legs, pull_secs)
+        Ok((timed_legs, pull_secs))
     }
 
     /// The rotation pipeline: up to `depth` rounds in flight, slices
@@ -1517,6 +1764,43 @@ impl<A: StradsApp> Engine<A> {
     /// no jitter serializes collects behind dispatches and reproduces BSP
     /// ordering (and objectives) exactly.
     fn run_rotation(&mut self, cfg: &RunConfig, depth: u64) -> RunResult {
+        self.run_rotation_from(cfg, depth, 0)
+    }
+
+    /// [`Engine::run_rotation`] generalized to start at `start_round`
+    /// (the resume path: [`Engine::resume`] restores a [`RunCheckpoint`]
+    /// first, then re-enters here at the checkpointed round).  This is
+    /// also where [`RunConfig::faults`] fires: kills/joins scheduled at
+    /// round `r` drain the pipeline (the drained in-flight rounds are the
+    /// crash's `rounds_lost`, at most `depth` per recovery), stop/start
+    /// the worker's OS thread under the threaded backend, and hand the
+    /// live-set to [`StradsApp::recover_membership`] — which re-places
+    /// the dead worker's ring positions onto live neighbours and fences
+    /// its leases — before round `r` is scheduled.
+    fn run_rotation_from(
+        &mut self,
+        cfg: &RunConfig,
+        depth: u64,
+        start_round: u64,
+    ) -> RunResult {
+        assert!(
+            start_round < cfg.max_rounds,
+            "resume round {start_round} is past max_rounds {}",
+            cfg.max_rounds
+        );
+        let plan = cfg.faults.clone();
+        if !plan.kills.is_empty() || !plan.joins.is_empty() {
+            // mirrored from RunConfigBuilder::build_for, for struct-literal
+            // configs that bypass the builder
+            assert!(
+                A::rotation_caps().elastic,
+                "fault plan requires RotationCaps::elastic"
+            );
+            assert!(
+                !matches!(cfg.trace, TraceMode::Replay(_)),
+                "fault injection cannot run under TraceMode::Replay"
+            );
+        }
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
         let block0 = self.app.data_plane_block_secs();
@@ -1535,6 +1819,18 @@ impl<A: StradsApp> Engine<A> {
         let eff = self.app.negotiate(cfg);
         let order = eff.queue_order;
         let may_skip = eff.skip_policy != SkipPolicy::Never;
+        if plan.checkpoint_every > 0 {
+            assert!(
+                A::supports_checkpoint(),
+                "checkpoint_every requires StradsApp::supports_checkpoint"
+            );
+            // a deferred slice's coverage debt is scheduler-internal and
+            // not snapshotted; resume is exact only under Never
+            assert!(
+                !may_skip,
+                "checkpointing requires SkipPolicy::Never"
+            );
+        }
         self.app.install_trace(plumbing.clone());
         self.app.begin_rotation(depth);
         let n_slices = self.app.n_rotation_slices();
@@ -1545,14 +1841,14 @@ impl<A: StradsApp> Engine<A> {
         );
         let mut last_obj = self.evaluate();
         recorder.record_with(
-            0,
+            start_round,
             self.clock.seconds(),
             wall.secs(),
             last_obj,
             vec![("staleness".into(), 0.0), ("wait_saved_secs".into(), 0.0)],
         );
         plumbing.record(Event::Eval {
-            round: 0,
+            round: start_round,
             objective_bits: last_obj.to_bits(),
         });
         let mut oom = None;
@@ -1568,9 +1864,15 @@ impl<A: StradsApp> Engine<A> {
             collected: 0,
         };
 
-        let mut rounds_run = 0;
-        'rounds: for r in 0..cfg.max_rounds {
-            while window.len() >= depth as usize {
+        let mut recent_grants: Vec<Vec<(u64, usize)>> =
+            vec![Vec::new(); n_slices];
+        let mut aborted: Option<String> = None;
+        let mut checkpoint: Option<RunCheckpoint> = None;
+        // one collect, shared arg list (the error handling stays at the
+        // call sites: `break 'rounds` inside a macro body cannot name a
+        // call-site label)
+        macro_rules! collect_oldest {
+            () => {
                 self.rot_collect_oldest(
                     &mut window,
                     backend.as_mut(),
@@ -1582,12 +1884,127 @@ impl<A: StradsApp> Engine<A> {
                     order,
                     &cfg.handoff_jitter,
                     &plumbing,
+                )
+            };
+        }
+
+        let mut rounds_run = 0;
+        'rounds: for r in start_round..cfg.max_rounds {
+            // --- fault boundary: kills/joins scheduled at round r fire
+            // before r is scheduled.  Drain the pipeline first — after a
+            // full drain every grant is settled, so recovery re-grants
+            // from settled heads and the drained in-flight rounds are
+            // exactly the work the fault disrupted (≤ depth). ---
+            let kills_now: Vec<usize> = plan
+                .kills
+                .iter()
+                .filter(|&&(_, at)| at == r)
+                .map(|&(w, _)| w)
+                .collect();
+            let joins_now =
+                plan.joins.iter().filter(|&&at| at == r).count();
+            if !kills_now.is_empty() || joins_now > 0 {
+                let lost = window.len() as u64;
+                while !window.is_empty() {
+                    if let Err(e) = collect_oldest!() {
+                        aborted = Some(
+                            fill_suspected_holder(e, &recent_grants)
+                                .to_string(),
+                        );
+                        break 'rounds;
+                    }
+                }
+                stats.rounds_lost += lost;
+                let mut first_affected = None;
+                for &w in &kills_now {
+                    assert!(w < n, "fault plan kills nonexistent worker {w}");
+                    assert!(
+                        self.pool.is_live(w),
+                        "fault plan kills already-dead worker {w}"
+                    );
+                    self.pool.kill(w);
+                    plumbing.record(Event::Crash { round: r, worker: w });
+                    first_affected.get_or_insert(w);
+                }
+                for _ in 0..joins_now {
+                    let w = (0..n)
+                        .find(|&w| !self.pool.is_live(w))
+                        .expect("join fired with no dead worker to revive");
+                    self.pool.revive(w);
+                    plumbing.record(Event::Join { round: r, worker: w });
+                    first_affected.get_or_insert(w);
+                }
+                let alive: Vec<bool> =
+                    (0..n).map(|w| self.pool.is_live(w)).collect();
+                assert!(
+                    alive.iter().any(|&a| a),
+                    "fault plan killed every worker"
                 );
+                let moved = self.app.recover_membership(&alive);
+                stats.recoveries += 1;
+                plumbing.record(Event::Recover {
+                    round: r,
+                    worker: first_affected.unwrap_or(0),
+                    moved,
+                });
+            }
+            // --- periodic checkpoint: drain, then snapshot app + every
+            // worker shard at a settled boundary (crash recovery loses at
+            // most checkpoint_every + depth rounds of work) ---
+            if plan.checkpoint_every > 0
+                && r > start_round
+                && r % plan.checkpoint_every == 0
+            {
+                while !window.is_empty() {
+                    if let Err(e) = collect_oldest!() {
+                        aborted = Some(
+                            fill_suspected_holder(e, &recent_grants)
+                                .to_string(),
+                        );
+                        break 'rounds;
+                    }
+                }
+                let sw = Stopwatch::start();
+                let app_blob = self.app.checkpoint_app();
+                let worker_blobs: Vec<Vec<u8>> = self
+                    .pool
+                    .run(|_| |ws: &mut A::WorkerState| A::checkpoint_worker(ws))
+                    .into_iter()
+                    .map(|(blob, _)| blob)
+                    .collect();
+                stats.checkpoint_secs += sw.secs();
+                let bytes = app_blob.len()
+                    + worker_blobs.iter().map(Vec::len).sum::<usize>();
+                plumbing.record(Event::Checkpoint { round: r, bytes });
+                checkpoint = Some(RunCheckpoint {
+                    round: r,
+                    app: app_blob,
+                    workers: worker_blobs,
+                });
+            }
+            while window.len() >= depth as usize {
+                if let Err(e) = collect_oldest!() {
+                    aborted = Some(
+                        fill_suspected_holder(e, &recent_grants).to_string(),
+                    );
+                    break 'rounds;
+                }
             }
             let slow = round_slowdowns(backend.as_ref(), r, n);
             let pace = backend.pace_floor_secs();
             let (pending, schedule_secs) = self
                 .dispatch_round_inner(r, true, may_skip, &slow, pace, &plumbing);
+            // recent-grant table: lets an abort name the suspected wedged
+            // holder (the worker granted the slice's previous version)
+            for (p, granted) in pending.leases().iter().enumerate() {
+                for tok in granted {
+                    let recent = &mut recent_grants[tok.slice_id];
+                    recent.push((tok.version, p));
+                    if recent.len() > 4 {
+                        recent.remove(0);
+                    }
+                }
+            }
             let dispatched_at = backend.on_dispatch(schedule_secs, wall.secs());
             window.push_back(InFlight {
                 round: r,
@@ -1601,18 +2018,13 @@ impl<A: StradsApp> Engine<A> {
                 // drain the ring so every slice is parked and every lease
                 // settled before the objective reads them
                 while !window.is_empty() {
-                    self.rot_collect_oldest(
-                        &mut window,
-                        backend.as_mut(),
-                        &wall,
-                        &mut prog,
-                        &mut vv,
-                        &mut stats,
-                        depth,
-                        order,
-                        &cfg.handoff_jitter,
-                        &plumbing,
-                    );
+                    if let Err(e) = collect_oldest!() {
+                        aborted = Some(
+                            fill_suspected_holder(e, &recent_grants)
+                                .to_string(),
+                        );
+                        break 'rounds;
+                    }
                 }
                 let obj = self.evaluate();
                 recorder.record_with(
@@ -1644,26 +2056,27 @@ impl<A: StradsApp> Engine<A> {
             }
         }
         // drain anything left in flight (early break paths)
-        while !window.is_empty() {
-            self.rot_collect_oldest(
-                &mut window,
-                backend.as_mut(),
-                &wall,
-                &mut prog,
-                &mut vv,
-                &mut stats,
-                depth,
-                order,
-                &cfg.handoff_jitter,
-                &plumbing,
-            );
+        while aborted.is_none() && !window.is_empty() {
+            if let Err(e) = collect_oldest!() {
+                aborted = Some(
+                    fill_suspected_holder(e, &recent_grants).to_string(),
+                );
+            }
         }
         // sample the data-plane block counter before end_rotation
         // reclaims (and drops) the router
         let router_block =
             (self.app.data_plane_block_secs() - block0).max(0.0);
         stats.router_block_secs = router_block;
-        self.app.end_rotation();
+        if aborted.is_none() {
+            self.app.end_rotation();
+        } else {
+            // the data plane is wedged (a take deadline expired): both a
+            // further drain and end_rotation's reclaim would block on the
+            // missing slices.  Drop the in-flight rounds instead — pool
+            // workers send replies through dropped channels harmlessly.
+            window.clear();
+        }
 
         let (fingerprint, trace) = finish_trace(&plumbing, self.backend_kind);
         RunResult {
@@ -1679,6 +2092,11 @@ impl<A: StradsApp> Engine<A> {
             total_skipped_legs: stats.skipped_legs,
             max_coverage_debt: stats.max_coverage_debt,
             router_block_secs: router_block,
+            recoveries: stats.recoveries,
+            rounds_lost: stats.rounds_lost,
+            checkpoint_secs: stats.checkpoint_secs,
+            checkpoint,
+            aborted,
             recorder,
             oom,
             ssp: Some(stats),
@@ -1690,7 +2108,8 @@ impl<A: StradsApp> Engine<A> {
     /// Collect the oldest in-flight rotation round: verify the pipeline
     /// bound, pull+settle, and resolve run time through the backend (the
     /// sim backend replays both the worker availability model and the
-    /// ring handoff gates).
+    /// ring handoff gates).  `Err` propagates a worker's data-plane
+    /// liveness error — the round's accounting is abandoned.
     #[allow(clippy::too_many_arguments)]
     fn rot_collect_oldest(
         &mut self,
@@ -1704,7 +2123,7 @@ impl<A: StradsApp> Engine<A> {
         order: QueueOrder,
         jitter: &HandoffJitter,
         plumbing: &TracePlumbing,
-    ) {
+    ) -> Result<(), RouterError> {
         let inflight = window.pop_front().expect("window not empty");
         for p in 0..self.pool.n_workers() {
             vv.apply(p, inflight.version_at_dispatch);
@@ -1722,7 +2141,7 @@ impl<A: StradsApp> Engine<A> {
             order,
             &*backend,
             plumbing,
-        );
+        )?;
         // every rotation pull commits coordinator state (settled leases +
         // refreshed sums) even without a sync broadcast
         vv.commit();
@@ -1767,7 +2186,68 @@ impl<A: StradsApp> Engine<A> {
         }
         stats.record(observed, out.wait_saved_secs);
         self.clock.advance_round_to(out.now);
+        Ok(())
     }
+
+    /// Restore app + per-worker shard state from a [`RunCheckpoint`]
+    /// (taken by a run with [`FaultPlan::checkpoint_every`] set).  Call
+    /// on a freshly built engine over the same worker count; follow with
+    /// [`Engine::resume`] to continue the run.
+    pub fn restore(&mut self, ckpt: &RunCheckpoint) {
+        assert!(
+            A::supports_checkpoint(),
+            "restore requires StradsApp::supports_checkpoint"
+        );
+        assert_eq!(
+            ckpt.workers.len(),
+            self.pool.n_workers(),
+            "checkpoint was taken over a different worker count"
+        );
+        self.app.restore_app(&ckpt.app);
+        self.pool.run(|p| {
+            let blob = ckpt.workers[p].clone();
+            move |ws: &mut A::WorkerState| A::restore_worker(ws, &blob)
+        });
+    }
+
+    /// Resume a rotation run from a checkpoint: [`Engine::restore`], then
+    /// run rounds `ckpt.round..cfg.max_rounds`.  The recorder and trace
+    /// cover only the resumed suffix — compare against an uninterrupted
+    /// run's suffix with [`crate::trace::Trace::fingerprint_from`], which
+    /// is bit-identical under [`QueueOrder::Strict`] determinism.
+    pub fn resume(&mut self, cfg: &RunConfig, ckpt: &RunCheckpoint) -> RunResult {
+        assert!(
+            A::supports_rotation(),
+            "resume requires a rotation-capable app"
+        );
+        let depth = match cfg.mode {
+            ExecutionMode::Rotation { depth } => depth.max(1),
+            ExecutionMode::Ssp { staleness } => staleness + 1,
+            _ => panic!("resume requires a pipelined execution mode"),
+        };
+        self.restore(ckpt);
+        self.run_rotation_from(cfg, depth, ckpt.round)
+    }
+}
+
+/// Fill a router error's `suspected_holder` from the engine's
+/// recent-grant table: the worker most recently granted the slice's
+/// *previous* version is the one whose unfinished sweep (or lost
+/// handoff) is starving the waiter.
+fn fill_suspected_holder(
+    mut err: RouterError,
+    recent: &[Vec<(u64, usize)>],
+) -> RouterError {
+    if err.suspected_holder.is_none() && err.version > 0 {
+        if let Some(grants) = recent.get(err.slice_id) {
+            err.suspected_holder = grants
+                .iter()
+                .rev()
+                .find(|&&(v, _)| v + 1 == err.version)
+                .map(|&(_, w)| w);
+        }
+    }
+    err
 }
 
 // The virtual-time queue-replay model lives with the backends now
@@ -2273,5 +2753,76 @@ mod tests {
         let stats = ssp_res.ssp.unwrap();
         assert!(stats.wait_saved_secs > 0.0);
         assert!(stats.max_staleness() <= 2);
+    }
+
+    #[test]
+    fn fault_plan_builder_validation() {
+        // faults outside rotation mode are rejected
+        assert!(RunConfig::builder().kill_worker(1, 4).build().is_err());
+        assert!(RunConfig::builder().checkpoint_every(2).build().is_err());
+        // a join with no earlier kill has nobody to revive
+        assert!(RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .kill_worker(0, 8)
+            .join_worker(4)
+            .build()
+            .is_err());
+        // checkpoints with Defer would lose coverage-debt state
+        assert!(RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .skip_policy(SkipPolicy::Defer { debt_limit: 2 })
+            .checkpoint_every(4)
+            .build()
+            .is_err());
+        // a coherent plan builds and round-trips
+        let cfg = RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .kill_worker(1, 4)
+            .join_worker(6)
+            .checkpoint_every(2)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.faults.kills, vec![(1, 4)]);
+        assert_eq!(cfg.faults.joins, vec![6]);
+        assert_eq!(cfg.faults.checkpoint_every, 2);
+        assert!(!cfg.faults.is_empty());
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn build_for_rejects_faults_on_non_elastic_app() {
+        // Consensus reports RotationCaps::default(): elastic = false and
+        // no checkpoint support
+        let err = RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .kill_worker(0, 4)
+            .build_for::<Consensus>()
+            .unwrap_err();
+        assert!(err.contains("elastic"), "{err}");
+        let err = RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .checkpoint_every(2)
+            .build_for::<Consensus>()
+            .unwrap_err();
+        assert!(err.contains("checkpoint"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "fault injection requires the rotation pipeline")]
+    fn faults_on_bsp_run_panic() {
+        // struct-literal configs bypass the builder; the run loop still
+        // refuses to silently ignore the plan
+        let cfg = RunConfig {
+            max_rounds: 2,
+            eval_every: 1,
+            faults: FaultPlan {
+                kills: vec![(0, 1)],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut e =
+            Engine::new(Consensus { n_workers: 2, committed: 0.0 }, vec![0.0, 1.0], &cfg);
+        e.run(&cfg);
     }
 }

@@ -9,8 +9,8 @@ pub mod engine;
 
 pub use engine::{
     replay_queue, EffectiveConfig, Engine as StradsEngine, ExecutionMode,
-    HandoffLeg, RotationCaps, RunConfig, RunConfigBuilder, RunResult,
-    StradsApp,
+    FaultPlan, HandoffLeg, RotationCaps, RunCheckpoint, RunConfig,
+    RunConfigBuilder, RunResult, StradsApp,
 };
 pub use crate::cluster::BackendKind;
 pub use crate::scheduler::rotation::{QueueOrder, SkipPolicy};

@@ -22,7 +22,8 @@ pub mod slices;
 pub mod versioned;
 
 pub use router::{
-    rotation_availability, LeaseLedger, LeaseToken, SliceMass, SliceRouter,
+    rotation_availability, LeaseLedger, LeaseToken, RouterError, SliceMass,
+    SliceRouter, StaleLease,
 };
 pub use slices::{SliceLease, SliceStore};
 pub use versioned::{VersionVector, VersionedParams};

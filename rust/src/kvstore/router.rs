@@ -33,6 +33,7 @@
 //!   has exactly one parent `v`; any skip, replay, or fork panics.
 
 use crate::cluster::{router_spin_ms, ForwardQueue};
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -45,6 +46,47 @@ pub struct LeaseToken {
     pub slice_id: usize,
     pub version: u64,
 }
+
+/// A data-plane take whose deadline expired: the awaited handoff never
+/// landed.  Carries everything a recovery (or a clean abort) needs — the
+/// wedged slice, the version awaited, the chain head actually reached, and
+/// (once the engine fills it from its in-flight lease table) the worker
+/// suspected of holding the missing forward.  Returned instead of
+/// panicking so a wedged take aborts the *run*, not the process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouterError {
+    /// The slice whose handoff never arrived.
+    pub slice_id: usize,
+    /// The version the take awaited.
+    pub version: u64,
+    /// The slice's chain head when the deadline expired (`version - 1`
+    /// means the predecessor never forwarded; anything older means the
+    /// wedge is further upstream).
+    pub chain_head: u64,
+    /// The worker holding the lease that should have produced the awaited
+    /// version — `None` at the router layer (the data plane does not know
+    /// the schedule); the engine fills it from its in-flight lease table.
+    pub suspected_holder: Option<usize>,
+    /// How long the take waited before giving up.
+    pub waited_ms: u64,
+}
+
+impl fmt::Display for RouterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "slice {} handoff lost: awaited v{} never arrived within {}ms \
+             (chain head is v{}",
+            self.slice_id, self.version, self.waited_ms, self.chain_head
+        )?;
+        match self.suspected_holder {
+            Some(w) => write!(f, "; suspected holder: worker {w})"),
+            None => write!(f, "; holder unknown — tune STRADS_ROUTER_SPIN_MS)"),
+        }
+    }
+}
+
+impl std::error::Error for RouterError {}
 
 /// Sweep-cost mass of a routed payload — what the dynamic queue order
 /// ([`crate::scheduler::rotation::QueueOrder::Dynamic`]) scores parked
@@ -120,33 +162,39 @@ impl<T: Send> SliceRouter<T> {
     /// cross-checks it against the granted token at collect time).  An
     /// *older* parked version is pipeline lag (its own consumer is still
     /// on its way) and the wait continues; a *newer* one panics (the
-    /// awaited handoff can no longer arrive).  The wait parks on the
-    /// slot's condvar (no busy-spin); it panics — with
-    /// slice/version/chain-head context — when the handoff never lands
-    /// within the bounded [`crate::cluster::router_spin_ms`] deadline: a
-    /// lost handoff is a scheduling bug that must fail CI loudly, not hang
-    /// the job.
-    pub fn take(&self, slice_id: usize, version: u64) -> (T, u64) {
+    /// awaited handoff can no longer arrive — a fork, i.e. a protocol
+    /// bug, not a liveness fault).  The wait parks on the slot's condvar
+    /// (no busy-spin); when the handoff never lands within the bounded
+    /// [`crate::cluster::router_spin_ms`] deadline it returns a typed
+    /// [`RouterError`] with slice/version/chain-head context — a lost
+    /// handoff is a *liveness* fault (e.g. a dead holder) the engine maps
+    /// to a recovery attempt or a clean run abort, never a process-killing
+    /// panic.
+    pub fn take(
+        &self,
+        slice_id: usize,
+        version: u64,
+    ) -> Result<(T, u64), RouterError> {
         self.take_for(slice_id, version, Duration::from_millis(router_spin_ms()))
     }
 
     /// [`SliceRouter::take`] with an explicit deadline (tests drive the
-    /// lost-handoff panic without waiting out the process-wide default).
+    /// lost-handoff error without waiting out the process-wide default).
     pub fn take_for(
         &self,
         slice_id: usize,
         version: u64,
         timeout: Duration,
-    ) -> (T, u64) {
+    ) -> Result<(T, u64), RouterError> {
         match self.queue.take_for(slice_id, version, timeout) {
-            Some(got) => got,
-            None => panic!(
-                "slice {slice_id} handoff lost: awaited v{version} never \
-                 arrived within {ms}ms (chain head is v{head}: the holder \
-                 of v{version} never forwarded — tune STRADS_ROUTER_SPIN_MS)",
-                ms = timeout.as_millis(),
-                head = self.version(slice_id)
-            ),
+            Some(got) => Ok(got),
+            None => Err(RouterError {
+                slice_id,
+                version,
+                chain_head: self.version(slice_id),
+                suspected_holder: None,
+                waited_ms: timeout.as_millis() as u64,
+            }),
         }
     }
 
@@ -179,14 +227,15 @@ impl<T: Send> SliceRouter<T> {
     ///
     /// Only the granted worker polls these `(slice, version)` pairs, so a
     /// slice seen parked cannot be taken by anyone else between the poll
-    /// and the take.  Panics after `timeout` with every still-pending
-    /// grant listed — a stalled sweep is a lost-handoff scheduling bug,
-    /// not a recoverable condition.
+    /// and the take.  After `timeout` it returns a typed [`RouterError`]
+    /// naming the first still-pending grant — a stalled sweep is a
+    /// lost-handoff liveness fault the engine maps to recovery or a clean
+    /// run abort.
     pub fn take_earliest(
         &self,
         grants: &[(usize, u64)],
         timeout: Duration,
-    ) -> (usize, T, u64) {
+    ) -> Result<(usize, T, u64), RouterError> {
         self.spin_take(grants, timeout, "availability", |router, grants| {
             let mut best: Option<(usize, u64)> = None;
             for (i, &(slice_id, version)) in grants.iter().enumerate() {
@@ -201,12 +250,12 @@ impl<T: Send> SliceRouter<T> {
         })
     }
 
-    /// The shared scan/park/panic skeleton under both reordered-take
+    /// The shared scan/park/expire skeleton under both reordered-take
     /// disciplines: scan until `pick_best` names a parked grant to take,
-    /// panic (listing every pending grant) when nothing lands within
-    /// `timeout`.  `pick_best` sees the router and the grant list and
-    /// returns the index of its chosen *parked* entry, or `None` while
-    /// everything is in flight.
+    /// or return a typed [`RouterError`] (naming the first still-pending
+    /// grant) when nothing lands within `timeout`.  `pick_best` sees the
+    /// router and the grant list and returns the index of its chosen
+    /// *parked* entry, or `None` while everything is in flight.
     ///
     /// Between scans the caller **parks** on the queue's deposit epoch
     /// ([`crate::cluster::ForwardQueue::wait_any_until`]) rather than
@@ -219,7 +268,7 @@ impl<T: Send> SliceRouter<T> {
         timeout: Duration,
         discipline: &str,
         mut pick_best: impl FnMut(&Self, &[(usize, u64)]) -> Option<usize>,
-    ) -> (usize, T, u64) {
+    ) -> Result<(usize, T, u64), RouterError> {
         assert!(
             !grants.is_empty(),
             "{discipline} take needs at least one grant"
@@ -234,20 +283,23 @@ impl<T: Send> SliceRouter<T> {
                 let (data, consumed) = self
                     .try_take(slice_id, version)
                     .expect("slice was parked when picked");
-                return (i, data, consumed);
+                return Ok((i, data, consumed));
             }
             if std::time::Instant::now() >= deadline {
-                let stalled: Vec<String> = grants
+                // every grant is still pending; report the first one (the
+                // queue-order head — under a ring schedule that is the
+                // most upstream wedge, hence the best recovery target)
+                let &(slice_id, version) = grants
                     .iter()
-                    .map(|&(a, v)| format!("slice {a} v{v}"))
-                    .collect();
-                panic!(
-                    "{discipline} sweep stalled: none of the awaited \
-                     handoffs landed within {}ms (awaiting {}) — tune \
-                     STRADS_ROUTER_SPIN_MS",
-                    timeout.as_millis(),
-                    stalled.join(", ")
-                );
+                    .find(|&&(a, v)| self.parked_version(a) != Some(v))
+                    .unwrap_or(&grants[0]);
+                return Err(RouterError {
+                    slice_id,
+                    version,
+                    chain_head: self.version(slice_id),
+                    suspected_holder: None,
+                    waited_ms: timeout.as_millis() as u64,
+                });
             }
             self.queue.wait_any_until(seen, deadline);
         }
@@ -293,13 +345,13 @@ impl<T: Send> SliceRouter<T> {
     /// ([`crate::scheduler::rotation::QueueOrder::Dynamic`]); see
     /// [`SliceRouter::take_earliest`] for the earliest-landed-first
     /// sibling and the race-freedom argument (only the granted worker
-    /// polls these pairs).  Panics after `timeout` with every
-    /// still-pending grant listed.
+    /// polls these pairs).  Returns a typed [`RouterError`] after
+    /// `timeout`.
     pub fn take_heaviest(
         &self,
         grants: &[(usize, u64)],
         timeout: Duration,
-    ) -> (usize, T, u64)
+    ) -> Result<(usize, T, u64), RouterError>
     where
         T: SliceMass,
     {
@@ -423,20 +475,61 @@ pub fn rotation_availability<T: Send>(
     }
 }
 
+/// A settle rejected by the ledger's crash fence: the token belongs to a
+/// lease that was re-granted after a recovery, so its holder is a zombie
+/// (a worker presumed dead writing back stale work).  Returned — not
+/// panicked — so the coordinator can drop the write and keep running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StaleLease {
+    pub slice_id: usize,
+    /// The zombie token's version.
+    pub version: u64,
+    /// The settled head the last recovery armed the fence at.
+    pub fence: u64,
+}
+
+impl fmt::Display for StaleLease {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "stale lease: slice {} v{} was re-granted after a crash \
+             (fence at v{}); zombie write rejected",
+            self.slice_id, self.version, self.fence
+        )
+    }
+}
+
+impl std::error::Error for StaleLease {}
+
 /// Coordinator-side lease accounting for the rotation pipeline: a
 /// per-slice version chain advanced by `grant` (schedule time) and
-/// `settle` (pull time), panicking on any fork.
+/// `settle` (pull time), panicking on any fork.  After a crash recovery
+/// ([`LeaseLedger::recover`]) a per-slice **fence** additionally rejects
+/// settles of pre-recovery tokens ([`StaleLease`]) — zombie-worker write
+/// fencing.
 #[derive(Debug, Clone)]
 pub struct LeaseLedger {
     /// Next version to grant per slice.
     granted: Vec<u64>,
     /// Next version to settle per slice (≤ granted; the gap is in flight).
     settled: Vec<u64>,
+    /// Armed by recovery with the settled head the chain resumed from
+    /// (`None` = never recovered, nothing fenced).  Recovery re-grants the
+    /// *same* versions the dead holder held, so a zombie token is
+    /// indistinguishable from the re-grant by version alone *until* the
+    /// re-granted lease settles — after which the zombie's settle targets
+    /// an already-settled version, which on a fenced slice is rejected as
+    /// stale rather than treated as a chain fork.
+    fences: Vec<Option<u64>>,
 }
 
 impl LeaseLedger {
     pub fn new(n_slices: usize) -> Self {
-        LeaseLedger { granted: vec![0; n_slices], settled: vec![0; n_slices] }
+        LeaseLedger {
+            granted: vec![0; n_slices],
+            settled: vec![0; n_slices],
+            fences: vec![None; n_slices],
+        }
     }
 
     pub fn n_slices(&self) -> usize {
@@ -472,10 +565,30 @@ impl LeaseLedger {
         self.granted[slice_id]
     }
 
-    /// Retire a consumed lease.  Panics unless it is exactly the oldest
-    /// outstanding version — a skip or replay means the chain forked
-    /// (version `v+1` with zero or two parents `v`).
-    pub fn settle(&mut self, token: &LeaseToken) {
+    /// Retire a consumed lease.  Two distinct failure modes:
+    ///
+    /// * on a slice *fenced by a crash recovery*, a settle of an
+    ///   already-settled version is a zombie write — the dead holder's
+    ///   lease was re-granted and the re-grant settled first — and
+    ///   returns a [`StaleLease`] error; the write is dropped, the run
+    ///   continues.  (A zombie that races *ahead* of the re-grant is
+    ///   indistinguishable by version and is accepted; in this codebase
+    ///   that race cannot occur, because a killed worker's reply channel
+    ///   is dropped before recovery runs.)
+    /// * anything else out of sequence **panics**: settling a version that
+    ///   is not exactly the oldest outstanding one means the chain forked
+    ///   (version `v+1` with zero or two parents `v`) — a protocol bug,
+    ///   not a membership fault.
+    pub fn settle(&mut self, token: &LeaseToken) -> Result<(), StaleLease> {
+        if let Some(fence) = self.fences[token.slice_id] {
+            if token.version < self.settled[token.slice_id] {
+                return Err(StaleLease {
+                    slice_id: token.slice_id,
+                    version: token.version,
+                    fence,
+                });
+            }
+        }
         assert!(
             token.version < self.granted[token.slice_id],
             "lease fork: slice {} settling ungranted v{}",
@@ -490,6 +603,38 @@ impl LeaseLedger {
             self.settled[token.slice_id]
         );
         self.settled[token.slice_id] += 1;
+        Ok(())
+    }
+
+    /// Crash recovery for one slice: roll the grant head back to the last
+    /// *settled* version (orphaned in-flight grants are forgotten — the
+    /// next [`LeaseLedger::grant`] re-grants from the last settled
+    /// version) and arm the fence so any zombie settle of a pre-recovery
+    /// token is rejected with [`StaleLease`].  Returns the settled head
+    /// the chain resumes from.
+    pub fn recover(&mut self, slice_id: usize) -> u64 {
+        let head = self.settled[slice_id];
+        self.granted[slice_id] = head;
+        self.fences[slice_id] = Some(head);
+        head
+    }
+
+    /// [`LeaseLedger::recover`] over every slice; returns how many slices
+    /// had orphaned (granted-but-unsettled) leases rolled back.
+    pub fn recover_all(&mut self) -> usize {
+        let orphaned = (0..self.n_slices())
+            .filter(|&a| self.outstanding(a) > 0)
+            .count();
+        for a in 0..self.n_slices() {
+            self.recover(a);
+        }
+        orphaned
+    }
+
+    /// The settled head the last recovery of this slice armed its fence
+    /// at (0 if never recovered).
+    pub fn fence(&self, slice_id: usize) -> u64 {
+        self.fences[slice_id].unwrap_or(0)
     }
 
     /// Leases granted but not yet settled for one slice.
@@ -519,7 +664,7 @@ mod tests {
         r.seed(0, vec![1.0f32], 3);
         r.seed(1, vec![2.0f32], 0);
         assert_eq!(r.version(0), 3);
-        let (d, consumed) = r.take(0, 3);
+        let (d, consumed) = r.take(0, 3).expect("seeded handoff is parked");
         assert_eq!(d, vec![1.0]);
         assert_eq!(consumed, 3);
         r.forward(0, d, consumed + 1);
@@ -557,12 +702,14 @@ mod tests {
         // grants listed in ring order: slice 2 first, then 1; the earlier
         // arrival (slice 1) must win regardless
         let grants = [(2usize, 0u64), (1, 0)];
-        let (idx, data, consumed) =
-            r.take_earliest(&grants, Duration::from_millis(100));
+        let (idx, data, consumed) = r
+            .take_earliest(&grants, Duration::from_millis(100))
+            .expect("a grant is parked");
         assert_eq!((idx, data, consumed), (1, 11u8, 0));
         // slice 2 is the only parked grant left
-        let (idx, data, _) =
-            r.take_earliest(&grants[..1], Duration::from_millis(100));
+        let (idx, data, _) = r
+            .take_earliest(&grants[..1], Duration::from_millis(100))
+            .expect("a grant is parked");
         assert_eq!((idx, data), (0, 22u8));
     }
 
@@ -586,14 +733,14 @@ mod tests {
         r.seed(1, vec![1, 2, 3], 0); // mass 3
         // slice 2 never seeded: in flight, must be ignored
         let grants = [(0usize, 0u64), (1, 0), (2, 0)];
-        let (idx, data, consumed) = r.take_heaviest(
-            &grants[..2],
-            Duration::from_millis(100),
-        );
+        let (idx, data, consumed) = r
+            .take_heaviest(&grants[..2], Duration::from_millis(100))
+            .expect("a grant is parked");
         assert_eq!((idx, data, consumed), (1, vec![1, 2, 3], 0));
         // only the light slice remains parked
-        let (idx, data, _) =
-            r.take_heaviest(&grants[..1], Duration::from_millis(100));
+        let (idx, data, _) = r
+            .take_heaviest(&grants[..1], Duration::from_millis(100))
+            .expect("a grant is parked");
         assert_eq!((idx, data), (0, vec![7]));
     }
 
@@ -603,8 +750,9 @@ mod tests {
         r.seed(1, vec![5, 6], 0); // lands first
         r.seed(0, vec![7, 8], 0); // equal mass, lands second
         let grants = [(0usize, 0u64), (1, 0)];
-        let (idx, data, _) =
-            r.take_heaviest(&grants, Duration::from_millis(100));
+        let (idx, data, _) = r
+            .take_heaviest(&grants, Duration::from_millis(100))
+            .expect("a grant is parked");
         assert_eq!((idx, data), (1, vec![5, 6]));
     }
 
@@ -623,8 +771,9 @@ mod tests {
                 r.seed(1, vec![4, 5, 6], 0);
             })
         };
-        let (idx, data, consumed) =
-            r.take_earliest(&[(0, 0), (1, 0)], Duration::from_secs(5));
+        let (idx, data, consumed) = r
+            .take_earliest(&[(0, 0), (1, 0)], Duration::from_secs(5))
+            .expect("producer deposits within the deadline");
         producer.join().expect("producer thread panicked");
         assert_eq!((idx, data, consumed), (1, vec![4, 5, 6], 0));
         assert!(
@@ -635,34 +784,52 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "dynamic sweep stalled")]
-    fn take_heaviest_panics_listing_pending_grants_after_timeout() {
+    fn take_heaviest_errors_typed_after_timeout() {
         let r: SliceRouter<Vec<u32>> = SliceRouter::new(2);
-        let _ = r.take_heaviest(&[(0, 0), (1, 0)], Duration::from_millis(10));
+        let err = r
+            .take_heaviest(&[(0, 0), (1, 0)], Duration::from_millis(10))
+            .expect_err("nothing ever parked");
+        assert_eq!(err.slice_id, 0);
+        assert_eq!(err.version, 0);
+        assert_eq!(err.suspected_holder, None);
     }
 
     #[test]
-    #[should_panic(expected = "availability sweep stalled")]
-    fn take_earliest_panics_listing_pending_grants_after_timeout() {
+    fn take_earliest_errors_typed_after_timeout() {
         let r: SliceRouter<u8> = SliceRouter::new(2);
         // nothing ever seeded: both grants stay pending
-        let _ = r.take_earliest(&[(0, 0), (1, 0)], Duration::from_millis(10));
+        let err = r
+            .take_earliest(&[(0, 0), (1, 0)], Duration::from_millis(10))
+            .expect_err("nothing ever parked");
+        assert_eq!((err.slice_id, err.version), (0, 0));
     }
 
     #[test]
-    #[should_panic(expected = "handoff lost")]
-    fn take_panics_with_context_after_bounded_spin() {
+    fn take_errors_with_context_after_bounded_spin() {
         // consume the whole chain, then await a version nobody ever
-        // forwards: the bounded spin must panic with the lost lease's
-        // context (slice, version, chain head) rather than hang.  The
-        // explicit-timeout form drives it; `take` uses the env-tunable
-        // STRADS_ROUTER_SPIN_MS default, which tests must not mutate.
+        // forwards: the bounded wait must return a typed RouterError with
+        // the lost lease's context (slice, version, chain head) rather
+        // than hang or kill the process.  The explicit-timeout form
+        // drives it; `take` uses the env-tunable STRADS_ROUTER_SPIN_MS
+        // default, which tests must not mutate.
         let r: SliceRouter<u8> = SliceRouter::new(1);
         r.seed(0, 1, 0);
-        let (d, v) = r.take(0, 0);
+        let (d, v) = r.take(0, 0).expect("seeded");
         r.forward(0, d, v + 1);
-        let _held = r.take(0, 1);
-        let _ = r.take_for(0, 2, Duration::from_millis(10));
+        let _held = r.take(0, 1).expect("forwarded");
+        let err = r
+            .take_for(0, 2, Duration::from_millis(10))
+            .expect_err("v2 is never forwarded");
+        assert_eq!(err.slice_id, 0);
+        assert_eq!(err.version, 2);
+        assert_eq!(err.chain_head, 1, "chain head names the wedge point");
+        assert_eq!(err.waited_ms, 10);
+        let msg = err.to_string();
+        assert!(msg.contains("handoff lost"), "{msg}");
+        assert!(msg.contains("chain head is v1"), "{msg}");
+        // the engine fills the holder once it consults its lease table
+        let filled = RouterError { suspected_holder: Some(3), ..err };
+        assert!(filled.to_string().contains("worker 3"), "{filled}");
     }
 
     #[test]
@@ -670,9 +837,9 @@ mod tests {
     fn second_child_of_same_parent_panics() {
         let r = SliceRouter::new(1);
         r.seed(0, 7u8, 0);
-        let (d, _) = r.take(0, 0);
+        let (d, _) = r.take(0, 0).unwrap();
         r.forward(0, d, 1);
-        let (d, _) = r.take(0, 1);
+        let (d, _) = r.take(0, 1).unwrap();
         // chain head is already v1: a second v1 (two children of v0 in
         // spirit) must panic rather than silently rewind
         r.forward(0, d, 1);
@@ -683,7 +850,7 @@ mod tests {
     fn reclaiming_an_in_flight_slice_panics() {
         let r = SliceRouter::new(1);
         r.seed(0, 7u8, 0);
-        let _held = r.take(0, 0);
+        let _held = r.take(0, 0).unwrap();
         let _ = r.reclaim(0);
     }
 
@@ -696,9 +863,9 @@ mod tests {
         assert_eq!(l.grant(1), 5);
         assert_eq!(l.outstanding(0), 2);
         assert_eq!(l.max_outstanding(), 2);
-        l.settle(&LeaseToken { slice_id: 0, version: 0 });
-        l.settle(&LeaseToken { slice_id: 0, version: 1 });
-        l.settle(&LeaseToken { slice_id: 1, version: 5 });
+        l.settle(&LeaseToken { slice_id: 0, version: 0 }).unwrap();
+        l.settle(&LeaseToken { slice_id: 0, version: 1 }).unwrap();
+        l.settle(&LeaseToken { slice_id: 1, version: 5 }).unwrap();
         assert_eq!(l.max_outstanding(), 0);
         assert_eq!(l.settled_head(0), 2);
         assert_eq!(l.settled_head(1), 6);
@@ -710,13 +877,58 @@ mod tests {
         let mut l = LeaseLedger::new(1);
         let _v0 = l.grant(0);
         let _v1 = l.grant(0);
-        l.settle(&LeaseToken { slice_id: 0, version: 1 }); // skips v0
+        let _ = l.settle(&LeaseToken { slice_id: 0, version: 1 }); // skips v0
     }
 
     #[test]
     #[should_panic(expected = "lease fork")]
     fn settling_an_ungranted_lease_panics() {
         let mut l = LeaseLedger::new(1);
-        l.settle(&LeaseToken { slice_id: 0, version: 0 });
+        let _ = l.settle(&LeaseToken { slice_id: 0, version: 0 });
+    }
+
+    #[test]
+    fn zombie_writes_are_fenced_after_recovery() {
+        // Satellite 2: a lease granted before a crash must not settle
+        // after the slice's chain was recovered and re-granted — the
+        // zombie worker's write is fenced, the survivor's is accepted.
+        let mut l = LeaseLedger::new(2);
+        let zombie = LeaseToken { slice_id: 0, version: l.grant(0) };
+        // worker dies holding the v0 lease; the coordinator rolls the
+        // chain back to the settled head and arms the fence there
+        assert_eq!(l.recover(0), 0);
+        assert_eq!(l.fence(0), 0);
+        assert_eq!(l.outstanding(0), 0, "recovery reclaims the grant");
+        // fence at v0 means v0 itself was re-granted: the survivor's
+        // fresh lease (same version, post-fence grant) must settle...
+        let survivor = LeaseToken { slice_id: 0, version: l.grant(0) };
+        assert_eq!(survivor.version, zombie.version);
+        l.settle(&survivor).expect("re-granted lease settles");
+        // ...after which the chain has moved past the fence, and the
+        // zombie's stale settle is rejected with a typed error
+        let err = l.settle(&zombie).expect_err("zombie write is fenced");
+        assert_eq!(err.slice_id, 0);
+        assert_eq!(err.version, 0);
+        assert_eq!(err.fence, 0);
+        let msg = err.to_string();
+        assert!(msg.contains("stale lease"), "{msg}");
+        assert!(msg.contains("zombie write rejected"), "{msg}");
+        // untouched slices keep a zero fence
+        assert_eq!(l.fence(1), 0);
+    }
+
+    #[test]
+    fn recover_all_counts_only_orphaned_slices() {
+        let mut l = LeaseLedger::new(3);
+        let t0 = l.grant(0);
+        let _t1 = l.grant(1); // left outstanding: orphaned
+        let _t2 = l.grant(1); // same slice, deeper pipeline
+        l.settle(&LeaseToken { slice_id: 0, version: t0 }).unwrap();
+        // slice 0 fully settled, slice 1 has two in flight, slice 2 idle
+        assert_eq!(l.recover_all(), 1);
+        assert_eq!(l.outstanding(1), 0);
+        assert_eq!(l.fence(1), 0, "fence armed at the settled head");
+        // post-recovery the ledger re-grants from the settled head
+        assert_eq!(l.grant(1), 0);
     }
 }

@@ -68,6 +68,15 @@ USAGE:
       --replay PATH   re-drive a recorded trace bit-exact under the sim
                           backend (same flags as the recording run);
                           exits 1 if the fingerprints diverge
+      lda (rotation, --depth > 0) fault injection:
+      --kill-worker W@R[,W@R...]   crash worker W at the boundary before
+                          round R (its ring positions fall to live
+                          neighbors; placement rebalances skew-aware)
+      --join-worker @R[,@R...]     a replacement arrives before round R
+                          (re-occupies the lowest dead rank)
+      --checkpoint-every N   snapshot the full run state every N rounds
+                          (bit-exact resume; bounds loss to <= depth +
+                          N rounds; requires --skip-policy never)
 
   strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
       regenerate a paper figure's rows/series (scaled-down by default)
@@ -124,7 +133,7 @@ fn cmd_train(args: &Args) {
                      order: QueueOrder,
                      skip: SkipPolicy|
      -> RunConfig {
-        RunConfig::builder()
+        let mut b = RunConfig::builder()
             .max_rounds(rounds)
             .eval_every((rounds / 20).max(1))
             .network(network.clone())
@@ -133,12 +142,18 @@ fn cmd_train(args: &Args) {
             .queue_order(order)
             .skip_policy(skip)
             .trace(trace.clone())
-            .label(format!("{app}-train"))
-            .build()
-            .unwrap_or_else(|e| {
-                eprintln!("invalid run configuration: {e}");
-                std::process::exit(2);
-            })
+            .label(format!("{app}-train"));
+        for (w, r) in kill_specs(args) {
+            b = b.kill_worker(w, r);
+        }
+        for r in join_specs(args) {
+            b = b.join_worker(r);
+        }
+        b = b.checkpoint_every(args.parse_or("checkpoint-every", 0u64));
+        b.build().unwrap_or_else(|e| {
+            eprintln!("invalid run configuration: {e}");
+            std::process::exit(2);
+        })
     };
     let run_cfg =
         build_cfg(ExecutionMode::Bsp, QueueOrder::Strict, SkipPolicy::Never);
@@ -246,6 +261,7 @@ fn cmd_train(args: &Args) {
                 e.app().s_error_history.iter().sum::<f64>()
                     / e.app().s_error_history.len().max(1) as f64
             );
+            fault_report(&res);
             trace_report(&res, trace_out.as_deref(), replay_src_fp);
         }
         other => {
@@ -253,6 +269,41 @@ fn cmd_train(args: &Args) {
             std::process::exit(2);
         }
     }
+}
+
+/// `--kill-worker W@R[,W@R...]` → crash schedule `(worker, round)` pairs.
+fn kill_specs(args: &Args) -> Vec<(usize, u64)> {
+    let Some(raw) = args.get("kill-worker") else { return Vec::new() };
+    raw.split(',')
+        .map(|spec| {
+            let bad = || -> ! {
+                eprintln!(
+                    "--kill-worker expects W@ROUND[,W@ROUND...], got {spec:?}"
+                );
+                std::process::exit(2);
+            };
+            let Some((w, r)) = spec.split_once('@') else { bad() };
+            match (w.trim().parse(), r.trim().parse()) {
+                (Ok(w), Ok(r)) => (w, r),
+                _ => bad(),
+            }
+        })
+        .collect()
+}
+
+/// `--join-worker @R[,@R...]` → replacement-arrival rounds.
+fn join_specs(args: &Args) -> Vec<u64> {
+    let Some(raw) = args.get("join-worker") else { return Vec::new() };
+    raw.split(',')
+        .map(|spec| {
+            spec.trim().trim_start_matches('@').parse().unwrap_or_else(|_| {
+                eprintln!(
+                    "--join-worker expects @ROUND[,@ROUND...], got {spec:?}"
+                );
+                std::process::exit(2);
+            })
+        })
+        .collect()
 }
 
 /// `--order strict|avail|dynamic` → rotation queue service discipline.
@@ -295,6 +346,22 @@ fn trace_mode(args: &Args) -> (TraceMode, Option<u64>) {
         (TraceMode::Record, None)
     } else {
         (TraceMode::Off, None)
+    }
+}
+
+/// Recovery summary when faults were injected (or the run aborted on a
+/// wedged handoff).
+fn fault_report(res: &RunResult) {
+    if res.recoveries > 0 {
+        println!(
+            "recoveries {}: {} rounds of window progress re-driven, \
+             checkpoint overhead {:.3}s",
+            res.recoveries, res.rounds_lost, res.checkpoint_secs
+        );
+    }
+    if let Some(why) = &res.aborted {
+        eprintln!("run aborted: {why}");
+        std::process::exit(1);
     }
 }
 

@@ -35,6 +35,17 @@ pub struct SspStats {
     /// contention — the baseline future lock-granularity work is judged
     /// against.
     pub router_block_secs: f64,
+    /// Membership-recovery passes completed (one per fault the engine
+    /// absorbed: a worker crash or a worker join each count once).
+    pub recoveries: u64,
+    /// Pipeline rounds flushed early because a fault forced a full window
+    /// drain before the membership change could be applied (the pipelining
+    /// overlap sacrificed to reach a consistent barrier — the work itself
+    /// completes, only its round-overlap is lost).
+    pub rounds_lost: u64,
+    /// Wall seconds spent serializing KV checkpoints (coordinator +
+    /// worker snapshots; 0.0 when `--checkpoint-every` is off).
+    pub checkpoint_secs: f64,
 }
 
 impl SspStats {
@@ -118,6 +129,9 @@ mod tests {
         assert_eq!(s.skipped_legs, 0);
         assert_eq!(s.max_coverage_debt, 0);
         assert_eq!(s.router_block_secs, 0.0);
+        assert_eq!(s.recoveries, 0);
+        assert_eq!(s.rounds_lost, 0);
+        assert_eq!(s.checkpoint_secs, 0.0);
     }
 
     #[test]

@@ -144,6 +144,25 @@ pub fn position_owner(position: usize, n_workers: usize) -> usize {
     position % n_workers
 }
 
+/// Membership-aware [`position_owner`]: the first **live** worker at or
+/// cyclically after the position's residue.  With every worker alive this
+/// is exactly `position % P`; with worker `w` dead, `w`'s positions fall
+/// to the next live worker on the ring (which then carries a double
+/// queue) so every slice is still granted every round — coverage survives
+/// a crash with no skips, at a bounded balance cost until the membership
+/// heals or a recovery re-placement rebalances the ring.
+pub fn live_owner(alive: &[bool], position: usize) -> usize {
+    let p = alive.len();
+    let mut w = position % p;
+    for _ in 0..p {
+        if alive[w] {
+            return w;
+        }
+        w = (w + 1) % p;
+    }
+    panic!("no live workers on the ring")
+}
+
 /// Skew-aware ring placement: order `masses.len()` slices on the virtual
 /// ring so that (a) each worker's per-round token mass is balanced and
 /// (b) heavy slices start on fast workers.
@@ -224,6 +243,10 @@ pub struct RotationScheduler {
     placement: Vec<usize>,
     /// Rotation counter C (a "global model variable" in the paper).
     counter: u64,
+    /// Cluster membership: `alive[w]` = worker `w` currently accepts
+    /// grants.  Dead workers' ring positions fall to the next live worker
+    /// (see [`live_owner`]); all true initially.
+    alive: Vec<bool>,
     /// Within-queue service discipline (does not affect queue contents).
     order: QueueOrder,
     /// Whether rounds may defer unavailable slices (see [`SkipPolicy`]).
@@ -262,6 +285,7 @@ impl RotationScheduler {
             n_workers,
             placement: (0..n_slices).collect(),
             counter: 0,
+            alive: vec![true; n_workers],
             order: QueueOrder::Strict,
             skip: SkipPolicy::Never,
             pos_of: Vec::new(),
@@ -340,19 +364,93 @@ impl RotationScheduler {
     /// Install a ring placement (e.g. from [`skew_aware_placement`]).
     /// Must be a permutation of the slice ids, set before the first round
     /// — re-ordering a ring with slices already in flight would fork the
-    /// handoff chains.
+    /// handoff chains.  For the mid-run (crash-recovery) form see
+    /// [`RotationScheduler::re_place`].
     pub fn set_placement(&mut self, placement: Vec<usize>) {
         assert_eq!(self.counter, 0, "placement must be set before round 0");
         assert_eq!(placement.len(), self.n_slices);
-        let mut seen = vec![false; self.n_slices];
-        for &s in &placement {
-            assert!(s < self.n_slices && !seen[s], "placement not a permutation");
-            seen[s] = true;
-        }
+        Self::check_permutation(&placement, self.n_slices);
         self.placement = placement;
         if self.debt.is_some() {
             self.rebuild_positions();
         }
+    }
+
+    fn check_permutation(placement: &[usize], u: usize) {
+        let mut seen = vec![false; u];
+        for &s in placement {
+            assert!(s < u && !seen[s], "placement not a permutation");
+            seen[s] = true;
+        }
+    }
+
+    /// Mid-run re-placement for crash recovery: install `current`, the
+    /// slice that sits at each virtual ring position **starting this
+    /// round** (so [`RotationScheduler::slice_at`]`(v) == current[v]`
+    /// until the counter next advances).  Unlike
+    /// [`RotationScheduler::set_placement`] this is legal at any *drained*
+    /// round boundary — no leases in flight, every chain settled — which
+    /// is exactly when the engine runs recovery; calling it with rounds
+    /// still in flight would fork the handoff chains.  Under
+    /// [`SkipPolicy::Defer`] the per-slice positions are rebuilt from
+    /// `current`, folding any frozen (deferred) positions into the new
+    /// ring: the one-time coverage delay this adds is bounded by U rounds
+    /// and is accounted as recovery cost, on top of the usual
+    /// `U + debt_limit` horizon.
+    pub fn re_place(&mut self, current: Vec<usize>) {
+        assert_eq!(current.len(), self.n_slices);
+        Self::check_permutation(&current, self.n_slices);
+        let u = self.n_slices;
+        let c = self.counter as usize;
+        let mut placement = vec![usize::MAX; u];
+        for (v, &a) in current.iter().enumerate() {
+            placement[(v + c) % u] = a;
+        }
+        self.placement = placement;
+        if self.debt.is_some() {
+            for (v, &a) in current.iter().enumerate() {
+                self.pos_of[a] = v;
+            }
+        }
+    }
+
+    /// Mark one worker dead (`false`) or live again (`true`).  Grants
+    /// re-route immediately: a dead worker's ring positions fall to the
+    /// next live worker ([`live_owner`]) and return when it rejoins.
+    /// Legal at any round boundary; at least one worker must stay live.
+    pub fn set_alive(&mut self, worker: usize, alive: bool) {
+        self.alive[worker] = alive;
+        assert!(
+            self.alive.iter().any(|&b| b),
+            "no live workers left on the ring"
+        );
+    }
+
+    /// Current membership mask (`alive[w]` = worker accepts grants).
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Number of live workers.
+    pub fn n_live(&self) -> usize {
+        self.alive.iter().filter(|&&b| b).count()
+    }
+
+    /// The live worker that services virtual ring position `v` this round
+    /// (membership-aware [`position_owner`]).
+    pub fn owner_of(&self, v: usize) -> usize {
+        live_owner(&self.alive, v)
+    }
+
+    /// Restore the rotation counter from a checkpoint (resume support).
+    /// [`SkipPolicy::Never`] only: `Defer` carries per-slice position
+    /// state a bare counter cannot reconstruct.
+    pub fn set_round(&mut self, counter: u64) {
+        assert!(
+            self.debt.is_none(),
+            "checkpoint resume requires SkipPolicy::Never"
+        );
+        self.counter = counter;
     }
 
     /// Slice at virtual ring position `v` this round.
@@ -425,20 +523,19 @@ impl RotationScheduler {
         let p = self.n_workers;
         match self.skip {
             SkipPolicy::Never => {
-                let queues = self.next_round_queues();
-                queues
-                    .into_iter()
-                    .enumerate()
-                    .map(|(w, q)| {
-                        q.into_iter()
-                            .enumerate()
-                            .map(|(j, slice_id)| GrantLeg {
-                                slice_id,
-                                dest_worker: self.next_holder(w + j * p),
-                            })
-                            .collect()
-                    })
-                    .collect()
+                // walk positions in ring order so each live worker's queue
+                // is position-sorted (identical to the PR-4 queue stream
+                // when every worker is alive); a dead worker's positions
+                // land on the next live worker, interleaved by position
+                let mut grants: Vec<Vec<GrantLeg>> = vec![Vec::new(); p];
+                for v in 0..u {
+                    grants[self.owner_of(v)].push(GrantLeg {
+                        slice_id: self.slice_at(v),
+                        dest_worker: self.next_holder(v),
+                    });
+                }
+                self.counter += 1;
+                grants
             }
             SkipPolicy::Defer { .. } => {
                 let round = self.counter;
@@ -469,7 +566,7 @@ impl RotationScheduler {
                         continue; // position frozen: leased next round
                     }
                     debt.record_grant(a);
-                    grants[position_owner(v, p)].push((v, a));
+                    grants[live_owner(&self.alive, v)].push((v, a));
                     self.pos_of[a] = ring_successor(v, u);
                 }
                 self.counter += 1;
@@ -480,7 +577,10 @@ impl RotationScheduler {
                         q.into_iter()
                             .map(|(v, slice_id)| GrantLeg {
                                 slice_id,
-                                dest_worker: position_owner(ring_successor(v, u), p),
+                                dest_worker: live_owner(
+                                    &self.alive,
+                                    ring_successor(v, u),
+                                ),
                             })
                             .collect()
                     })
@@ -501,10 +601,12 @@ impl RotationScheduler {
         self.n_workers
     }
 
-    /// The worker holding the slice at position `v` *next* round — where a
-    /// pipelined rotation forwards that slice (see [`ring_successor`]).
+    /// The **live** worker holding the slice at position `v` *next* round
+    /// — where a pipelined rotation forwards that slice (see
+    /// [`ring_successor`]; membership-aware, so a handoff never targets a
+    /// dead worker).
     pub fn next_holder(&self, v: usize) -> usize {
-        position_owner(ring_successor(v, self.n_slices), self.n_workers)
+        live_owner(&self.alive, ring_successor(v, self.n_slices))
     }
 
     /// U = P form: the worker that holds `worker`'s current slice next
@@ -1117,6 +1219,122 @@ mod tests {
             count[a] += 1;
         }
         assert!(count.iter().all(|&c| c >= 1), "{count:?}");
+    }
+
+    #[test]
+    fn dead_workers_positions_fall_to_the_next_live_worker() {
+        // U = 6, P = 3: kill worker 1.  Every round must still grant all
+        // six slices, worker 1's queue must be empty, worker 2 (the next
+        // live residue) must carry the double queue, and no grant or
+        // handoff destination may name the dead worker.
+        let (u, p) = (6usize, 3usize);
+        let mut s = RotationScheduler::with_workers(u, p);
+        s.set_alive(1, false);
+        assert_eq!(s.n_live(), 2);
+        assert_eq!(s.alive(), &[true, false, true]);
+        assert_eq!(s.owner_of(1), 2, "residue 1 falls to worker 2");
+        assert_eq!(s.owner_of(4), 2);
+        for _ in 0..2 * u {
+            let grants = s.next_round_grants(|_| true);
+            assert!(grants[1].is_empty(), "dead worker must idle");
+            assert_eq!(grants[0].len(), 2);
+            assert_eq!(grants[2].len(), 4, "neighbor carries the double queue");
+            let mut all: Vec<usize> = grants
+                .iter()
+                .flatten()
+                .map(|l| l.slice_id)
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..u).collect::<Vec<_>>(), "coverage survives");
+            assert!(
+                grants.iter().flatten().all(|l| l.dest_worker != 1),
+                "no handoff may target the dead worker"
+            );
+        }
+        // rejoin: the ring heals to the all-alive stream
+        s.set_alive(1, true);
+        let healed = s.next_round_grants(|_| true);
+        assert_eq!(healed.iter().map(|q| q.len()).collect::<Vec<_>>(), [2, 2, 2]);
+    }
+
+    #[test]
+    fn membership_with_all_alive_matches_the_position_owner_stream() {
+        // the live-owner generalization must be invisible when nobody died
+        let (u, p) = (10usize, 4usize);
+        let mut a = RotationScheduler::with_workers(u, p);
+        let mut b = RotationScheduler::with_workers(u, p);
+        b.set_alive(0, false);
+        b.set_alive(0, true); // toggling through dead-and-back is identity
+        for _ in 0..2 * u {
+            assert_eq!(
+                a.next_round_grants(|_| true),
+                b.next_round_grants(|_| true)
+            );
+        }
+        for v in 0..u {
+            assert_eq!(a.owner_of(v), position_owner(v, p));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no live workers")]
+    fn killing_the_last_worker_panics() {
+        let mut s = RotationScheduler::with_workers(2, 2);
+        s.set_alive(0, false);
+        s.set_alive(1, false);
+    }
+
+    #[test]
+    fn re_place_installs_the_current_view_mid_run() {
+        let (u, p) = (4usize, 2usize);
+        let mut s = RotationScheduler::with_workers(u, p);
+        for _ in 0..3 {
+            s.next_round_grants(|_| true);
+        }
+        // install "slice 3 now sits at position 0, 2 at 1, ..." mid-run
+        let current = vec![3usize, 2, 1, 0];
+        s.re_place(current.clone());
+        for (v, &a) in current.iter().enumerate() {
+            assert_eq!(s.slice_at(v), a, "position {v}");
+        }
+        // the ring keeps rotating from the new view
+        let before: Vec<usize> = (0..u).map(|v| s.slice_at(v)).collect();
+        s.next_round_grants(|_| true);
+        for v in 0..u {
+            assert_eq!(s.slice_at(v), before[(v + 1) % u]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation")]
+    fn re_place_rejects_non_permutations() {
+        let mut s = RotationScheduler::with_workers(4, 2);
+        s.next_round_grants(|_| true);
+        s.re_place(vec![0, 1, 2, 2]);
+    }
+
+    #[test]
+    fn defer_grants_avoid_dead_workers_too() {
+        // Defer mode with an outage and a dead worker: grants stay
+        // disjoint, cover granted+deferred, and never name worker 0
+        let (u, p) = (6usize, 3usize);
+        let mut s = RotationScheduler::with_workers(u, p);
+        s.set_skip_policy(SkipPolicy::Defer { debt_limit: 2 });
+        s.set_alive(0, false);
+        for r in 0..3 * u as u64 {
+            let grants = s.next_round_grants(|a| a % 3 != (r % 3) as usize);
+            assert!(grants[0].is_empty(), "dead worker must idle");
+            assert!(
+                grants.iter().flatten().all(|l| l.dest_worker != 0),
+                "no handoff may target the dead worker"
+            );
+            let mut granted: Vec<usize> =
+                grants.iter().flatten().map(|l| l.slice_id).collect();
+            let n = granted.len();
+            granted.sort_unstable();
+            granted.dedup();
+            assert_eq!(granted.len(), n, "grants must stay disjoint");
+        }
     }
 
     #[test]

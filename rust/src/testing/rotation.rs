@@ -159,7 +159,9 @@ pub fn drive_protocol(
                 ));
             }
             router.forward(slice_id, data, consumed + 1);
-            ledger.settle(&LeaseToken { slice_id, version: consumed });
+            ledger
+                .settle(&LeaseToken { slice_id, version: consumed })
+                .map_err(|z| format!("unexpected zombie settle: {z:?}"))?;
         }
     }
     if ledger.max_outstanding() != 0 {
@@ -268,7 +270,9 @@ pub fn drive_protocol_threaded(
             return Err(e);
         }
         for token in tokens {
-            ledger.settle(&token);
+            ledger
+                .settle(&token)
+                .map_err(|z| format!("unexpected zombie settle: {z:?}"))?;
         }
         Ok(())
     }
@@ -400,8 +404,9 @@ fn worker_round(
     match order {
         QueueOrder::Strict => {
             for (slice_id, version) in legs {
-                let (data, consumed) =
-                    router.take_for(slice_id, version, take_timeout);
+                let (data, consumed) = router
+                    .take_for(slice_id, version, take_timeout)
+                    .map_err(|e| e.to_string())?;
                 serve(slice_id, data, consumed, version)?;
             }
         }
@@ -413,7 +418,8 @@ fn worker_round(
                         router.take_heaviest(&remaining, take_timeout)
                     }
                     _ => router.take_earliest(&remaining, take_timeout),
-                };
+                }
+                .map_err(|e| e.to_string())?;
                 let (slice_id, version) = remaining.remove(pick);
                 serve(slice_id, data, consumed, version)?;
             }

@@ -78,6 +78,22 @@ pub enum Event {
     /// A backend resolved a round at clock reading `now_bits` (f64 bits).
     /// Timing-only: never fingerprinted, never replayed.
     Resolve { round: u64, now_bits: u64 },
+    /// Worker `worker` died at the round-`round` boundary (fault
+    /// injection); the engine drained the pipeline window first, so every
+    /// outstanding lease was settled before the crash took effect.
+    Crash { round: u64, worker: usize },
+    /// Worker `worker` (re)joined the cluster at the round-`round`
+    /// boundary.
+    Join { round: u64, worker: usize },
+    /// A membership-recovery pass completed at the round-`round` boundary
+    /// for `worker`: lease fences re-armed, the ring re-placed, `moved`
+    /// slices migrated to a different cohort.
+    Recover { round: u64, worker: usize, moved: usize },
+    /// A consistent KV checkpoint (`bytes` serialized) was taken at the
+    /// round-`round` boundary.  Bookkeeping-only: excluded from the
+    /// fingerprint so a checkpointed run stays bit-identical to the same
+    /// run without checkpoints.
+    Checkpoint { round: u64, bytes: usize },
 }
 
 impl Event {
@@ -91,7 +107,11 @@ impl Event {
             | Event::Skip { round, .. }
             | Event::DebtCharge { round, .. }
             | Event::Eval { round, .. }
-            | Event::Resolve { round, .. } => round,
+            | Event::Resolve { round, .. }
+            | Event::Crash { round, .. }
+            | Event::Join { round, .. }
+            | Event::Recover { round, .. }
+            | Event::Checkpoint { round, .. } => round,
         }
     }
 }
@@ -159,7 +179,25 @@ pub fn event_hash(e: &Event) -> Option<u64> {
                 h = fnv_u64(h, v);
             }
         }
-        Event::Resolve { .. } => return None,
+        Event::Crash { round, worker } => {
+            for v in [8, round, worker as u64] {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::Join { round, worker } => {
+            for v in [9, round, worker as u64] {
+                h = fnv_u64(h, v);
+            }
+        }
+        Event::Recover { round, worker, moved } => {
+            for v in [10, round, worker as u64, moved as u64] {
+                h = fnv_u64(h, v);
+            }
+        }
+        // Checkpoint is bookkeeping, not schedule identity: excluding it
+        // keeps a checkpointed run's fingerprint bit-identical to the same
+        // run without checkpoints (locked by tests/checkpoint_roundtrip.rs).
+        Event::Resolve { .. } | Event::Checkpoint { .. } => return None,
     }
     Some(h)
 }
@@ -332,6 +370,21 @@ impl Trace {
         fingerprint(&self.events)
     }
 
+    /// Fingerprint only the events of rounds `>= from` — the *suffix*
+    /// fingerprint.  A run resumed from a round-`from` checkpoint records
+    /// exactly the suffix events, so its full fingerprint must equal the
+    /// uninterrupted run's `fingerprint_from(from)` (locked by
+    /// `tests/checkpoint_roundtrip.rs`).
+    pub fn fingerprint_from(&self, from: u64) -> u64 {
+        let suffix: Vec<Event> = self
+            .events
+            .iter()
+            .filter(|e| e.round() >= from)
+            .copied()
+            .collect();
+        fingerprint(&suffix)
+    }
+
     /// Canonical line-oriented text form:
     ///
     /// ```text
@@ -388,6 +441,18 @@ impl Trace {
                 }
                 Event::Resolve { round, now_bits } => {
                     out.push_str(&format!("resolve {round} {now_bits:x}\n"));
+                }
+                Event::Crash { round, worker } => {
+                    out.push_str(&format!("crash {round} {worker}\n"));
+                }
+                Event::Join { round, worker } => {
+                    out.push_str(&format!("join {round} {worker}\n"));
+                }
+                Event::Recover { round, worker, moved } => {
+                    out.push_str(&format!("recover {round} {worker} {moved}\n"));
+                }
+                Event::Checkpoint { round, bytes } => {
+                    out.push_str(&format!("ckpt {round} {bytes}\n"));
                 }
             }
         }
@@ -480,6 +545,23 @@ impl Trace {
                         })?,
                     }
                 }
+                "crash" => Event::Crash {
+                    round: dec("round")?,
+                    worker: dec("worker")? as usize,
+                },
+                "join" => Event::Join {
+                    round: dec("round")?,
+                    worker: dec("worker")? as usize,
+                },
+                "recover" => Event::Recover {
+                    round: dec("round")?,
+                    worker: dec("worker")? as usize,
+                    moved: dec("moved")? as usize,
+                },
+                "ckpt" => Event::Checkpoint {
+                    round: dec("round")?,
+                    bytes: dec("bytes")? as usize,
+                },
                 other => {
                     return Err(format!("line {}: unknown tag {other:?}", i + 2))
                 }
@@ -639,6 +721,10 @@ mod tests {
             Event::DebtCharge { round: 1, slice: 3, debt: 1 },
             Event::Eval { round: 1, objective_bits: 0x3ff0000000000000 },
             Event::Resolve { round: 1, now_bits: 0x4000000000000000 },
+            Event::Crash { round: 2, worker: 1 },
+            Event::Recover { round: 2, worker: 1, moved: 3 },
+            Event::Join { round: 3, worker: 1 },
+            Event::Checkpoint { round: 3, bytes: 4096 },
         ]
     }
 
@@ -735,6 +821,33 @@ mod tests {
         let with = vec![a, Event::Resolve { round: 0, now_bits: 1 }];
         let without = vec![a];
         assert_eq!(fingerprint(&with), fingerprint(&without));
+    }
+
+    #[test]
+    fn checkpoints_are_excluded_but_faults_are_fingerprinted() {
+        let base = vec![Event::Settle { round: 0, slice: 1, version: 0 }];
+        let mut ckpt = base.clone();
+        ckpt.push(Event::Checkpoint { round: 0, bytes: 1024 });
+        // a checkpointed run fingerprints identically to the same run
+        // without checkpoints
+        assert_eq!(fingerprint(&ckpt), fingerprint(&base));
+        // a crashed/recovered run does NOT — membership faults are
+        // schedule identity
+        for e in [
+            Event::Crash { round: 0, worker: 1 },
+            Event::Join { round: 0, worker: 1 },
+            Event::Recover { round: 0, worker: 1, moved: 2 },
+        ] {
+            let mut faulted = base.clone();
+            faulted.push(e);
+            assert_ne!(fingerprint(&faulted), fingerprint(&base), "{e:?}");
+            assert!(event_hash(&e).is_some());
+        }
+        // recover's moved count is identity too
+        assert_ne!(
+            event_hash(&Event::Recover { round: 0, worker: 1, moved: 2 }),
+            event_hash(&Event::Recover { round: 0, worker: 1, moved: 3 }),
+        );
     }
 
     #[test]

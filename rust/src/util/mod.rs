@@ -9,9 +9,11 @@ pub mod json;
 pub mod linalg;
 pub mod rng;
 pub mod stats;
+pub mod wire;
 
 pub use args::Args;
 pub use config::Config;
 pub use fenwick::FenwickTree;
 pub use json::JsonValue;
 pub use rng::Rng;
+pub use wire::{Unwire, Wire};

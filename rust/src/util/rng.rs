@@ -40,6 +40,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Raw generator state (KV checkpointing): restoring via
+    /// [`Rng::from_state`] resumes the exact stream position.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a previously captured [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
+
     /// Next raw 64 bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

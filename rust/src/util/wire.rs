@@ -1,0 +1,204 @@
+//! Minimal little-endian wire format for KV checkpoints.
+//!
+//! Checkpoints are process-internal artifacts (taken and restored by the
+//! same binary), so the format optimizes for exactness and simplicity:
+//! fixed-width little-endian scalars, length-prefixed vectors, floats as
+//! raw bit patterns (restores are bit-identical — the checkpoint
+//! round-trip fingerprint test depends on it).  [`Unwire`] panics on
+//! truncated or trailing bytes: a malformed checkpoint is a corrupted
+//! artifact, not a user error to recover from.
+
+/// Append-only checkpoint encoder.
+#[derive(Debug, Default)]
+pub struct Wire {
+    buf: Vec<u8>,
+}
+
+impl Wire {
+    pub fn new() -> Self {
+        Wire { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// Length-prefixed f32 vector (bit patterns, restore is bit-exact).
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_f32(v);
+        }
+    }
+
+    /// Length-prefixed u64 vector.
+    pub fn put_u64s(&mut self, vs: &[u64]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u64(v);
+        }
+    }
+
+    /// Length-prefixed u32 vector.
+    pub fn put_u32s(&mut self, vs: &[u32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u32(v);
+        }
+    }
+
+    /// Length-prefixed opaque blob (nesting sub-checkpoints).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+}
+
+/// Checkpoint decoder over a byte slice; panics on malformed input.
+#[derive(Debug)]
+pub struct Unwire<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Unwire<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Unwire { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        assert!(
+            self.pos + n <= self.buf.len(),
+            "truncated checkpoint: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        out
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        f64::from_bits(self.u64())
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        f32::from_bits(self.u32())
+    }
+
+    pub fn f32s(&mut self) -> Vec<f32> {
+        let n = self.u64() as usize;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn u64s(&mut self) -> Vec<u64> {
+        let n = self.u64() as usize;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn u32s(&mut self) -> Vec<u32> {
+        let n = self.u64() as usize;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn bytes(&mut self) -> &'a [u8] {
+        let n = self.u64() as usize;
+        self.take(n)
+    }
+
+    /// Assert every byte was consumed (trailing garbage = corruption).
+    pub fn done(&self) {
+        assert_eq!(
+            self.pos,
+            self.buf.len(),
+            "checkpoint has {} trailing bytes",
+            self.buf.len() - self.pos
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_scalars_and_vectors() {
+        let mut w = Wire::new();
+        w.put_u64(u64::MAX);
+        w.put_u32(7);
+        w.put_f64(-0.0);
+        w.put_f32(f32::MIN_POSITIVE);
+        w.put_f32s(&[1.5, -2.25, 0.1]);
+        w.put_u64s(&[3, 1, 4]);
+        w.put_u32s(&[]);
+        w.put_bytes(b"blob");
+        let bytes = w.into_bytes();
+        let mut r = Unwire::new(&bytes);
+        assert_eq!(r.u64(), u64::MAX);
+        assert_eq!(r.u32(), 7);
+        assert_eq!(r.f64().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f32(), f32::MIN_POSITIVE);
+        assert_eq!(
+            r.f32s().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            [1.5f32, -2.25, 0.1].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(r.u64s(), vec![3, 1, 4]);
+        assert_eq!(r.u32s(), Vec::<u32>::new());
+        assert_eq!(r.bytes(), b"blob");
+        r.done();
+    }
+
+    #[test]
+    #[should_panic(expected = "truncated checkpoint")]
+    fn truncation_panics() {
+        let mut w = Wire::new();
+        w.put_u64(1);
+        let bytes = w.into_bytes();
+        let mut r = Unwire::new(&bytes[..4]);
+        let _ = r.u64();
+    }
+
+    #[test]
+    #[should_panic(expected = "trailing bytes")]
+    fn trailing_bytes_panic() {
+        let mut w = Wire::new();
+        w.put_u64(1);
+        w.put_u64(2);
+        let bytes = w.into_bytes();
+        let mut r = Unwire::new(&bytes);
+        let _ = r.u64();
+        r.done();
+    }
+}

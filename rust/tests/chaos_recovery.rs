@@ -1,0 +1,120 @@
+//! Elastic-membership chaos runs: a worker killed mid-run and a
+//! replacement joining later must both trigger bounded membership
+//! recoveries — the run finishes every round, loses at most `depth`
+//! in-flight rounds per recovery, conserves token mass, and keeps
+//! learning — under *both* execution backends.
+//!
+//! Also pins the fault-plan inertness contract: a plan whose kill round
+//! is at/after `max_rounds` never fires, and such an armed-but-unfired
+//! run is bit-identical (trace fingerprint) to a run with no plan at
+//! all.
+
+use strads::coordinator::{
+    BackendKind, ExecutionMode, QueueOrder, RunConfig, SkipPolicy, TraceMode,
+};
+use strads::figures::common::{figure_corpus, lda_engine_sliced};
+
+const ROUNDS: u64 = 16;
+const DEPTH: u64 = 2;
+
+fn base_builder(
+    backend: BackendKind,
+    label: &str,
+) -> strads::coordinator::RunConfigBuilder {
+    RunConfig::builder()
+        .max_rounds(ROUNDS)
+        .eval_every(4)
+        .mode(ExecutionMode::Rotation { depth: DEPTH })
+        .queue_order(QueueOrder::Strict)
+        .skip_policy(SkipPolicy::Never)
+        .backend(backend)
+        .trace(TraceMode::Record)
+        .label(label)
+}
+
+/// Kill worker 1 at the round-6 boundary, join a replacement at round 9,
+/// checkpoint every 4 rounds: two recoveries, bounded drain loss, mass
+/// conserved, objective still improving — on the sim backend and on real
+/// threads.
+#[test]
+fn kill_then_join_recovers_under_both_backends() {
+    for backend in [BackendKind::Sim, BackendKind::Threads] {
+        let seed = 83;
+        let corpus = figure_corpus(300, 50, seed);
+        let cfg = base_builder(backend, &format!("chaos-{backend:?}"))
+            .kill_worker(1, 6)
+            .join_worker(9)
+            .checkpoint_every(4)
+            .build()
+            .expect("valid chaos config");
+        let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let total0: f32 = e.app().s.iter().sum();
+        let res = e.run(&cfg);
+
+        assert!(
+            res.aborted.is_none(),
+            "{backend:?}: chaos run must recover, not abort: {:?}",
+            res.aborted
+        );
+        assert_eq!(res.rounds_run, ROUNDS, "{backend:?}: all rounds run");
+        assert_eq!(
+            res.recoveries, 2,
+            "{backend:?}: the kill and the join each drive one recovery"
+        );
+        assert!(
+            res.rounds_lost <= res.recoveries * DEPTH,
+            "{backend:?}: drained {} rounds, bound is {} (depth {DEPTH} \
+             per recovery)",
+            res.rounds_lost,
+            res.recoveries * DEPTH
+        );
+        assert!(
+            res.checkpoint.is_some(),
+            "{backend:?}: periodic checkpoints keep the last one"
+        );
+        let pts = res.recorder.points();
+        assert!(
+            pts.last().unwrap().objective > pts.first().unwrap().objective,
+            "{backend:?}: log-likelihood must improve across the faults"
+        );
+        let total1: f32 = e.app().s.iter().sum();
+        assert!(
+            (total0 - total1).abs() < 1e-2,
+            "{backend:?}: token mass drifted across recovery: \
+             {total0} -> {total1}"
+        );
+    }
+}
+
+/// A fault plan armed past the horizon (kill at `max_rounds`) never
+/// fires and must not perturb the run: same trace fingerprint, same
+/// final objective bits as a plan-free run.
+#[test]
+fn unfired_fault_plan_is_inert() {
+    let seed = 89;
+    let corpus = figure_corpus(300, 50, seed);
+    let run = |armed: bool| {
+        let mut b = base_builder(BackendKind::Sim, "chaos-inert");
+        if armed {
+            b = b.kill_worker(1, ROUNDS);
+        }
+        let cfg = b.build().expect("valid config");
+        let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let res = e.run(&cfg);
+        (
+            res.fingerprint.expect("recorded run fingerprints"),
+            res.final_objective.to_bits(),
+            res.recoveries,
+        )
+    };
+    let (clean_fp, clean_obj, clean_rec) = run(false);
+    let (armed_fp, armed_obj, armed_rec) = run(true);
+    assert_eq!(armed_rec, 0, "a kill at max_rounds never fires");
+    assert_eq!(clean_rec, 0);
+    assert_eq!(
+        clean_fp, armed_fp,
+        "an armed-but-unfired fault plan must leave the event stream \
+         bit-identical"
+    );
+    assert_eq!(clean_obj, armed_obj, "and the objective bits");
+}

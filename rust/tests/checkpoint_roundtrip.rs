@@ -1,0 +1,119 @@
+//! Checkpoint/resume round-trip: a run with periodic KV checkpoints
+//! ([`FaultPlan::checkpoint_every`]) leaves its last [`RunCheckpoint`]
+//! in the `RunResult`; a freshly built engine restored from it and
+//! resumed must reproduce the uninterrupted run's *suffix* — under
+//! `QueueOrder::Strict` bit-exactly, down to the trace fingerprint.
+//!
+//! Alignment contract: `checkpoint_every` is set equal to `eval_every`,
+//! so the uninterrupted run's `Eval` event at the checkpoint round
+//! (emitted at the end of the preceding round) matches the resumed
+//! run's initial `Eval` at its start round, and
+//! `Trace::fingerprint_from(ckpt.round)` compares the exact same event
+//! set the resumed run records.  `Checkpoint` events themselves are
+//! fingerprint-exempt, so the full run's extra checkpoints don't skew
+//! the hash.
+
+use strads::coordinator::{
+    ExecutionMode, QueueOrder, RunConfig, SkipPolicy, TraceMode,
+};
+use strads::figures::common::{figure_corpus, lda_engine_sliced};
+
+fn ckpt_cfg(order: QueueOrder, depth: u64, label: &str) -> RunConfig {
+    RunConfig::builder()
+        .max_rounds(12)
+        .eval_every(4)
+        .mode(ExecutionMode::Rotation { depth })
+        .queue_order(order)
+        .skip_policy(SkipPolicy::Never)
+        .checkpoint_every(4)
+        .trace(TraceMode::Record)
+        .label(label)
+        .build()
+        .expect("valid checkpoint config")
+}
+
+/// Strict order × depth {1, 2, 3}: resume-at-round-8 reproduces the
+/// uninterrupted run bit-exactly — suffix trace fingerprint, final
+/// objective bits, and final topic sums all identical.
+#[test]
+fn strict_resume_is_bit_exact_across_depths() {
+    for depth in [1u64, 2, 3] {
+        let seed = 29 + depth;
+        let corpus = figure_corpus(300, 50, seed);
+        let cfg =
+            ckpt_cfg(QueueOrder::Strict, depth, &format!("ckpt-strict-d{depth}"));
+
+        let mut full_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let full = full_engine.run(&cfg);
+        assert!(full.aborted.is_none(), "depth {depth}: clean run aborted");
+        let ckpt = full
+            .checkpoint
+            .as_ref()
+            .expect("checkpoint_every run keeps its last checkpoint");
+        assert_eq!(
+            ckpt.round, 8,
+            "12 rounds at every-4 checkpoints leave round 8 last \
+             (round 12 is never reached inside the loop)"
+        );
+        let full_trace = full.trace.as_ref().expect("recorded trace");
+
+        let mut resumed_engine =
+            lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let resumed = resumed_engine.resume(&cfg, ckpt);
+
+        assert!(resumed.aborted.is_none(), "depth {depth}: resume aborted");
+        assert_eq!(
+            resumed.rounds_run, 12,
+            "depth {depth}: resume runs through max_rounds"
+        );
+        assert_eq!(
+            resumed.fingerprint.expect("resumed run fingerprints"),
+            full_trace.fingerprint_from(ckpt.round),
+            "depth {depth}: the resumed suffix event stream must be \
+             bit-identical to the uninterrupted run's"
+        );
+        assert_eq!(
+            resumed.final_objective.to_bits(),
+            full.final_objective.to_bits(),
+            "depth {depth}: final log-likelihood must match bit-exactly"
+        );
+        assert_eq!(
+            full_engine.app().s,
+            resumed_engine.app().s,
+            "depth {depth}: final topic sums must match bit-exactly"
+        );
+    }
+}
+
+/// Reordered arms (Availability, Dynamic) at depth 2: resume is
+/// invariant-sound — it completes every remaining round without abort
+/// and lands on a finite objective — but within-queue service order is
+/// a live timing signal, so suffix bit-equality is not part of the
+/// contract and not asserted here.
+#[test]
+fn reordered_resume_completes() {
+    for order in [QueueOrder::Availability, QueueOrder::Dynamic] {
+        let seed = 61;
+        let corpus = figure_corpus(300, 50, seed);
+        let cfg = ckpt_cfg(order, 2, &format!("ckpt-{order:?}"));
+
+        let mut full_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let full = full_engine.run(&cfg);
+        assert!(full.aborted.is_none(), "{order:?}: clean run aborted");
+        let ckpt = full
+            .checkpoint
+            .as_ref()
+            .expect("checkpoint_every run keeps its last checkpoint");
+
+        let mut resumed_engine =
+            lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let resumed = resumed_engine.resume(&cfg, ckpt);
+
+        assert!(resumed.aborted.is_none(), "{order:?}: resume aborted");
+        assert_eq!(resumed.rounds_run, 12, "{order:?}: resume finishes");
+        assert!(
+            resumed.final_objective.is_finite(),
+            "{order:?}: resumed objective must be finite"
+        );
+    }
+}

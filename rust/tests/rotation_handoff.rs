@@ -74,9 +74,9 @@ fn prop_multislice_handoff_chain_never_forks() {
 fn forked_version_chain_panics() {
     let router: SliceRouter<u8> = SliceRouter::new(1);
     router.seed(0, 9, 0);
-    let (d, _) = router.take(0, 0);
+    let (d, _) = router.take(0, 0).expect("seeded");
     router.forward(0, d, 1);
-    let (d, _) = router.take(0, 1);
+    let (d, _) = router.take(0, 1).expect("forwarded");
     router.forward(0, d, 1); // second child of v0
 }
 
@@ -88,7 +88,7 @@ fn out_of_order_settle_panics() {
     let mut ledger = LeaseLedger::new(1);
     let _v0 = ledger.grant(0);
     let _v1 = ledger.grant(0);
-    ledger.settle(&LeaseToken { slice_id: 0, version: 1 });
+    let _ = ledger.settle(&LeaseToken { slice_id: 0, version: 1 });
 }
 
 /// Re-seeding a slice that was never consumed deposits over an occupied
