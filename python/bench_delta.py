@@ -57,6 +57,14 @@ METRICS = [
     "checkpoint_secs",
     "clean_fingerprint",
     "unfired_fingerprint",
+    # lossy_arm: redelivery-protocol masking cost and the zero-plan
+    # inertness fingerprint (hex strings — printed, never delta'd)
+    "clean_secs_to_target",
+    "lossy_secs_to_target",
+    "retransmits",
+    "dup_discards",
+    "retry_wait_secs",
+    "zero_plan_fingerprint",
 ]
 
 
@@ -154,6 +162,12 @@ def main():
             # informational only: the bench binary gates this equality
             print(f"!! {name}: an armed-but-unfired fault plan perturbed "
                   f"the run ({clean_fp} vs {unfired_fp})")
+        zero_fp = arm.get("zero_plan_fingerprint")
+        if (clean_fp is not None and zero_fp is not None
+                and clean_fp != zero_fp):
+            # informational only: the bench binary gates this equality
+            print(f"!! {name}: a zero-rate net fault plan perturbed "
+                  f"the run ({clean_fp} vs {zero_fp})")
     b, c = base.get("wall_secs"), cur.get("wall_secs")
     print(f"-- wall_secs: {fmt(b)} -> {fmt(c)} {delta_str(b, c)}")
     removed = sorted(n for n in base_arms if n not in cur_arms)

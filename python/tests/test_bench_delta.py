@@ -237,3 +237,67 @@ def test_null_chaos_baseline_prints_one_sided(tmp_path, monkeypatch, capsys):
     assert "-- chaos_arm" in out
     assert "n/a" in out
     assert "perturbed" not in out
+
+
+def _lossy_arm(retransmits=12, dup_discards=3, clean_fp="f00d",
+               zero_fp="f00d"):
+    return {
+        "app": "LDA-lossy",
+        "target": -456.0,
+        "clean_secs_to_target": 3.0,
+        "lossy_secs_to_target": 3.3,
+        "retransmits": retransmits,
+        "dup_discards": dup_discards,
+        "retry_wait_secs": 0.04,
+        "recoveries": 0,
+        "clean_objective": -400.0,
+        "lossy_objective": -400.0,
+        "clean_fingerprint": clean_fp,
+        "zero_plan_fingerprint": zero_fp,
+    }
+
+
+def test_lossy_arm_metrics_flow_through(tmp_path, monkeypatch, capsys):
+    # the lossy arm carries redelivery-cost keys plus the zero-plan
+    # inertness fingerprint; numbers delta, fingerprints print verbatim
+    base = _doc(["rotation"])
+    base["lossy_arm"] = _lossy_arm()
+    cur = _doc(["rotation"])
+    cur["lossy_arm"] = _lossy_arm(retransmits=18)
+    _run(tmp_path, base, cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "-- lossy_arm" in out
+    assert "retransmits" in out and "(+50.0%)" in out
+    assert "dup_discards" in out
+    assert "retry_wait_secs" in out
+    assert "lossy_secs_to_target" in out
+    assert "zero_plan_fingerprint" in out and "f00d" in out
+    assert "perturbed" not in out
+    assert "arms removed" not in out
+
+
+def test_zero_plan_fingerprint_mismatch_warns_but_never_fails(tmp_path,
+                                                              monkeypatch,
+                                                              capsys):
+    # the bench binary gates clean == zero-plan; the delta report only
+    # flags it
+    cur = _doc(["rotation"])
+    cur["lossy_arm"] = _lossy_arm(clean_fp="aaaa", zero_fp="bbbb")
+    _run(tmp_path, _doc(["rotation"]), cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "zero-rate net fault plan perturbed" in out
+    assert "aaaa" in out and "bbbb" in out
+
+
+def test_null_lossy_baseline_prints_one_sided(tmp_path, monkeypatch, capsys):
+    # the committed BENCH_fig9.json placeholder nulls every lossy metric
+    base = _doc(["rotation"])
+    base["lossy_arm"] = {k: (v if k == "app" else None)
+                         for k, v in _lossy_arm().items()}
+    cur = _doc(["rotation"])
+    cur["lossy_arm"] = _lossy_arm()
+    _run(tmp_path, base, cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "-- lossy_arm" in out
+    assert "n/a" in out
+    assert "perturbed" not in out

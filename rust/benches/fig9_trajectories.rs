@@ -10,7 +10,8 @@
 
 use strads::cluster::HandoffJitter;
 use strads::figures::fig9::{
-    self, ChaosComparison, ModeComparison, Panel, ThreadsComparison,
+    self, ChaosComparison, LossyComparison, ModeComparison, Panel,
+    ThreadsComparison,
 };
 use strads::metrics::Recorder;
 use strads::util::JsonValue;
@@ -115,6 +116,31 @@ fn chaos_arm_json(c: &ChaosComparison) -> JsonValue {
         )
         .field("fault_free", recorder_json(&c.fault_free))
         .field("chaos", recorder_json(&c.chaos))
+        .build()
+}
+
+fn lossy_arm_json(c: &LossyComparison) -> JsonValue {
+    JsonValue::obj()
+        .field("app", c.app.as_str())
+        .field("target", c.target)
+        .field("clean_secs_to_target", opt_num(c.clean_secs_to_target))
+        .field("lossy_secs_to_target", opt_num(c.lossy_secs_to_target))
+        .field("retransmits", c.retransmits)
+        .field("dup_discards", c.dup_discards)
+        .field("retry_wait_secs", c.retry_wait_secs)
+        .field("recoveries", c.recoveries)
+        .field("clean_objective", c.clean_objective)
+        .field("lossy_objective", c.lossy_objective)
+        .field(
+            "clean_fingerprint",
+            format!("{:016x}", c.clean_fingerprint).as_str(),
+        )
+        .field(
+            "zero_plan_fingerprint",
+            format!("{:016x}", c.zero_plan_fingerprint).as_str(),
+        )
+        .field("clean", recorder_json(&c.clean))
+        .field("lossy", recorder_json(&c.lossy))
         .build()
 }
 
@@ -447,6 +473,44 @@ fn main() {
         chaos.clean_fingerprint, chaos.unfired_fingerprint
     );
 
+    // ---- lossy arm: drop/dup/delay injection under redelivery ---------
+    // Drop 5% + dup 2% + delay 10% under the jittered 4x straggler.  The
+    // ack/retry protocol must mask every fault: no abort, the final LL
+    // bit-identical to the clean run (asserted inside the arm), the 90%
+    // target reached within 1.25x the clean virtual time, and a
+    // configured-but-zero plan must leave the trace bit-identical.
+    let lossy = fig9::run_lossy_comparison(&cfg, 3);
+    fig9::print_lossy_comparison(&lossy);
+    assert!(
+        lossy.retransmits > 0,
+        "drop 5% must exercise the retransmit path"
+    );
+    assert!(
+        lossy.dup_discards > 0,
+        "dup 2% must exercise the idempotent-discard path"
+    );
+    assert_eq!(
+        lossy.recoveries, 0,
+        "retry alone must mask this fault mix (no mid-round recoveries)"
+    );
+    let lossy_clean_t = lossy
+        .clean_secs_to_target
+        .expect("clean run reaches its own 90% target");
+    let lossy_t = lossy
+        .lossy_secs_to_target
+        .expect("lossy run must reach the clean 90% LL target");
+    assert!(
+        lossy_t <= 1.25 * lossy_clean_t,
+        "lossy arm too slow: {lossy_t:.4}s vs clean {lossy_clean_t:.4}s \
+         (bound 1.25x)"
+    );
+    assert_eq!(
+        lossy.clean_fingerprint, lossy.zero_plan_fingerprint,
+        "zero-rate NetFaultPlan must not perturb the trace \
+         ({:016x} vs {:016x})",
+        lossy.clean_fingerprint, lossy.zero_plan_fingerprint
+    );
+
     // ---- BENCH_fig9.json ---------------------------------------------
     let json = JsonValue::obj()
         .field("figure", "fig9")
@@ -470,6 +534,7 @@ fn main() {
         .field("mf_rotation_arm", arm_json(&mf_rot))
         .field("threads_arm", threads_arm_json(&threads))
         .field("chaos_arm", chaos_arm_json(&chaos))
+        .field("lossy_arm", lossy_arm_json(&lossy))
         .field("wall_secs", t.elapsed().as_secs_f64())
         .build();
     let dir = std::env::var("STRADS_BENCH_DIR")

@@ -25,18 +25,19 @@
 //! engine's per-slice virtual-time model scores exactly that overlap).
 
 use crate::backend::LdaShard;
-use crate::cluster::router_spin_ms;
+use crate::cluster::{router_spin_ms, NetFaultPlan};
 use crate::coordinator::{
     EffectiveConfig, HandoffLeg, RotationCaps, RunConfig, StradsApp,
 };
 use crate::kvstore::{
-    LeaseLedger, LeaseToken, RouterError, SliceMass, SliceRouter, SliceStore,
+    LeaseLedger, LeaseToken, NetLinkStats, RouterError, SliceChecksum,
+    SliceMass, SliceRouter, SliceStore,
 };
 use crate::metrics::s_error;
 use crate::scheduler::rotation::{
     self, GrantLeg, QueueOrder, RotationScheduler, SkipPolicy,
 };
-use crate::trace::{TracePlumbing, TraceReplayer};
+use crate::trace::{TraceBuffer, TracePlumbing, TraceReplayer};
 use crate::util::wire::{Unwire, Wire};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -64,6 +65,15 @@ pub struct BSlice {
 impl SliceMass for BSlice {
     fn mass(&self) -> f64 {
         self.counts.iter().map(|&c| c as f64).sum()
+    }
+}
+
+/// Content checksum for the lossy-transport envelope: the redelivery
+/// protocol verifies a delivered slice bit-matches what the sender
+/// forwarded (shape and count bits both participate).
+impl SliceChecksum for BSlice {
+    fn checksum64(&self) -> u64 {
+        (self.n_words as u64) ^ self.counts.checksum64().rotate_left(17)
     }
 }
 
@@ -689,6 +699,35 @@ impl StradsApp for LdaApp {
         // cumulative seconds workers physically parked on the handoff
         // ring (0.0 under BSP, where there is no router)
         self.router.as_ref().map(|r| r.block_secs()).unwrap_or(0.0)
+    }
+
+    fn install_net_faults(
+        &mut self,
+        plan: NetFaultPlan,
+        sink: Option<Arc<TraceBuffer>>,
+    ) {
+        self.router
+            .as_ref()
+            .expect("net faults install after begin_rotation")
+            .install_link(plan, sink);
+    }
+
+    fn net_stats(&self) -> NetLinkStats {
+        self.router.as_ref().map(|r| r.net_stats()).unwrap_or_default()
+    }
+
+    fn recover_data_plane(&mut self) -> bool {
+        // Transport recovery at a salvaged boundary: redeliver every
+        // buffered retransmit into its slot (the sender already swept the
+        // payload — it must not be lost), then fence each chain at its
+        // settled head so the engine re-grants exactly the legs whose
+        // sweeps never completed.  Unlike `recover_membership` this runs
+        // at a *wedged* boundary: orphaned grants are the expected case,
+        // not a drain bug.
+        let router = self.router.as_ref().expect("rotation mode active");
+        router.flush_all();
+        self.ledger.recover_all();
+        true
     }
 
     fn begin_rotation(&mut self, _depth: u64) {

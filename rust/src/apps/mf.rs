@@ -21,17 +21,18 @@
 //! availability-ordered queue discipline) as LDA.
 
 use crate::backend::MfShard;
-use crate::cluster::router_spin_ms;
+use crate::cluster::{router_spin_ms, NetFaultPlan};
 use crate::coordinator::{
     EffectiveConfig, HandoffLeg, RotationCaps, RunConfig, StradsApp,
 };
 use crate::kvstore::{
-    LeaseLedger, LeaseToken, SliceMass, SliceRouter, SliceStore,
+    LeaseLedger, LeaseToken, NetLinkStats, RouterError, SliceChecksum,
+    SliceMass, SliceRouter, SliceStore,
 };
 use crate::scheduler::rotation::{
     self, GrantLeg, QueueOrder, RotationScheduler, SkipPolicy,
 };
-use crate::trace::{TracePlumbing, TraceReplayer};
+use crate::trace::{TraceBuffer, TracePlumbing, TraceReplayer};
 use crate::scheduler::round_robin::{Factor, MfRound, RoundRobinScheduler};
 use crate::sparse::CsrMatrix;
 use std::collections::HashMap;
@@ -226,6 +227,15 @@ impl SliceMass for HBlock {
     }
 }
 
+/// Content checksum for the lossy-transport envelope: both the column ids
+/// and the factor bits participate, so a corrupted redelivery of either
+/// half is detectable.
+impl SliceChecksum for HBlock {
+    fn checksum64(&self) -> u64 {
+        self.cols.checksum64() ^ self.h.checksum64().rotate_left(17)
+    }
+}
+
 /// Coordinator-side configuration for [`MfBlockApp`].
 pub struct MfBlockConfig {
     pub rank: usize,
@@ -277,6 +287,11 @@ pub struct MfBlockPartialLeg {
 /// Worker partial: per-leg results in sweep order.
 pub struct MfBlockPartial {
     pub legs: Vec<MfBlockPartialLeg>,
+    /// Rotation path: a take deadline expired mid-sweep.  The sweep stops
+    /// at the wedged leg (already-swept legs were forwarded and are
+    /// reported above) and the engine recovers or aborts cleanly instead
+    /// of panicking on a worker thread ([`StradsApp::partial_error`]).
+    pub error: Option<RouterError>,
 }
 
 /// One worker's state for block-rotation MF: its user-row ratings shard,
@@ -627,11 +642,22 @@ impl StradsApp for MfBlockApp {
                         (l.block_id, version)
                     })
                     .collect();
-                let (pick, data, consumed) = match order {
+                let picked = match order {
                     QueueOrder::Dynamic => router.take_heaviest(&grants, spin),
                     _ => router.take_earliest(&grants, spin),
-                }
-                .expect("MF rotation take deadline expired");
+                };
+                let (pick, data, consumed) = match picked {
+                    Ok(t) => t,
+                    Err(e) => {
+                        // deadline expired with every remaining grant still
+                        // parked — report the wedge instead of panicking;
+                        // the engine recovers (lossy transport) or aborts
+                        return MfBlockPartial {
+                            legs: out_legs,
+                            error: Some(e),
+                        };
+                    }
+                };
                 let leg = remaining.remove(pick);
                 out_legs.push(routed_leg(
                     ws,
@@ -643,17 +669,23 @@ impl StradsApp for MfBlockApp {
                     eta,
                 ));
             }
-            return MfBlockPartial { legs: out_legs };
+            return MfBlockPartial { legs: out_legs, error: None };
         }
 
+        let mut error = None;
         for leg in legs {
             let MfBlockTaskLeg { block_id, h_block, version, dest_worker } =
                 leg;
             match (&router, version, h_block) {
                 (Some(router), Some(version), None) => {
-                    let (data, consumed) = router
-                        .take(block_id, version)
-                        .expect("MF rotation take deadline expired");
+                    let (data, consumed) = match router.take(block_id, version)
+                    {
+                        Ok(t) => t,
+                        Err(e) => {
+                            error = Some(e);
+                            break;
+                        }
+                    };
                     out_legs.push(routed_leg(
                         ws, router, block_id, dest_worker, data, consumed,
                         eta,
@@ -674,7 +706,7 @@ impl StradsApp for MfBlockApp {
                 _ => panic!("task leg mixes the BSP and routed forms"),
             }
         }
-        MfBlockPartial { legs: out_legs }
+        MfBlockPartial { legs: out_legs, error }
     }
 
     fn pull(
@@ -793,6 +825,35 @@ impl StradsApp for MfBlockApp {
         // cumulative seconds workers physically parked on the handoff
         // ring (0.0 under BSP, where there is no router)
         self.router.as_ref().map(|r| r.block_secs()).unwrap_or(0.0)
+    }
+
+    fn partial_error(p: &MfBlockPartial) -> Option<RouterError> {
+        p.error
+    }
+
+    fn install_net_faults(
+        &mut self,
+        plan: NetFaultPlan,
+        sink: Option<Arc<TraceBuffer>>,
+    ) {
+        self.router
+            .as_ref()
+            .expect("net faults install after begin_rotation")
+            .install_link(plan, sink);
+    }
+
+    fn net_stats(&self) -> NetLinkStats {
+        self.router.as_ref().map(|r| r.net_stats()).unwrap_or_default()
+    }
+
+    fn recover_data_plane(&mut self) -> bool {
+        // See [`crate::apps::lda::LdaApp`]: redeliver buffered
+        // retransmits, then fence every chain at its settled head so only
+        // uncompleted legs are re-granted.
+        let router = self.router.as_ref().expect("rotation mode active");
+        router.flush_all();
+        self.ledger.recover_all();
+        true
     }
 
     fn begin_rotation(&mut self, _depth: u64) {

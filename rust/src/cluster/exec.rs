@@ -36,7 +36,7 @@
 //! so injected straggler sleeps never contaminate the measured seconds —
 //! the stats stay comparable across backends.
 
-use crate::cluster::{HandoffJitter, StragglerModel};
+use crate::cluster::{HandoffJitter, NetFaultPlan, StragglerModel};
 use crate::scheduler::rotation::QueueOrder;
 use crate::trace::{Event, TraceBuffer};
 use std::sync::Arc;
@@ -102,6 +102,12 @@ pub struct RotObs<'a> {
     pub pull_secs: f64,
     pub order: QueueOrder,
     pub jitter: &'a HandoffJitter,
+    /// The run's lossy-transport plan: the sim backend charges each leg's
+    /// forward the latency the redelivery protocol *would* pay to mask
+    /// the plan's drops/delays ([`NetFaultPlan::virtual_latency`]), so
+    /// virtual time degrades with the fault rates just as wall time does
+    /// under threads.  An empty plan charges exactly 0.0 (bit-identical).
+    pub net: &'a NetFaultPlan,
     /// Wall seconds since the run began (threaded resolution).
     pub wall_now: f64,
 }
@@ -365,6 +371,18 @@ impl ExecBackend for SimBackend {
             self.worker_free[p] = finish;
             finish_max = finish_max.max(finish);
             compute_max = compute_max.max(total);
+        }
+        if !obs.net.is_empty() {
+            // lossy transport: each forwarded slice lands downstream late
+            // by the expected retransmit/delay-hold cost of masking the
+            // plan's faults — deterministic per (slice, version), matching
+            // the retry schedule the threaded backend physically waits out
+            for legs in obs.timed_legs {
+                for &(slice, secs) in legs {
+                    next_ready[slice] +=
+                        obs.net.virtual_latency(slice, obs.round + 1, secs);
+                }
+            }
         }
         self.slice_ready = next_ready;
         let before = self.coord_now;
@@ -705,6 +723,7 @@ mod tests {
                 pull_secs: 0.0,
                 order: QueueOrder::Strict,
                 jitter: &HandoffJitter::None,
+                net: &NetFaultPlan::default(),
                 wall_now: 0.0,
             },
             &mut waits,
@@ -713,6 +732,51 @@ mod tests {
         assert!((out.now - 3.0).abs() < 1e-12);
         // slice 0's next sweep is gated at 1.0, slice 1's at 3.0
         assert_eq!(b.slice_ready, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn sim_backend_charges_virtual_net_latency_to_slice_readiness() {
+        let resolve = |net: &NetFaultPlan| {
+            let mut b = SimBackend::new(StragglerModel::None);
+            b.begin_run(0.0, 2, 2);
+            let at = b.on_dispatch(0.0, 0.0);
+            let legs = vec![vec![(0usize, 1.0f64)], vec![(1usize, 3.0f64)]];
+            let mut waits = Vec::new();
+            b.resolve_rot_round(
+                &RotObs {
+                    round: 0,
+                    dispatched_at: at,
+                    timed_legs: &legs,
+                    comm_secs: 0.0,
+                    pull_secs: 0.0,
+                    order: QueueOrder::Strict,
+                    jitter: &HandoffJitter::None,
+                    net,
+                    wall_now: 0.0,
+                },
+                &mut waits,
+            );
+            b.slice_ready.clone()
+        };
+        // an all-zero plan charges exactly nothing (bit-identical)
+        assert_eq!(resolve(&NetFaultPlan::default()), vec![1.0, 3.0]);
+        // a lossy plan gates every forwarded slice's next sweep strictly
+        // later — the modelled cost of masking its drops and delays
+        let lossy = NetFaultPlan {
+            drop_rate: 0.4,
+            delay_rate: 0.5,
+            seed: 17,
+            ..NetFaultPlan::default()
+        };
+        let ready = resolve(&lossy);
+        assert!(
+            ready[0] >= 1.0 && ready[1] >= 3.0,
+            "latency never rewinds readiness: {ready:?}"
+        );
+        assert!(
+            ready[0] > 1.0 || ready[1] > 3.0,
+            "a 40%/50% plan must charge some leg: {ready:?}"
+        );
     }
 
     #[test]
@@ -762,6 +826,7 @@ mod tests {
                 pull_secs: 0.0,
                 order: QueueOrder::Strict,
                 jitter: &HandoffJitter::None,
+                net: &NetFaultPlan::default(),
                 wall_now: 0.75,
             },
             &mut waits,

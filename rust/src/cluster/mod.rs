@@ -27,5 +27,5 @@ pub mod pool;
 pub use clock::{StragglerModel, VirtualClock};
 pub use exec::{make_backend, BackendKind, ExecBackend};
 pub use memory::MemoryTracker;
-pub use network::{HandoffJitter, NetworkConfig, NetworkModel};
+pub use network::{HandoffJitter, NetFaultPlan, NetworkConfig, NetworkModel};
 pub use pool::{router_spin_ms, ForwardQueue, PendingRound, WorkerPool};

@@ -106,6 +106,177 @@ impl HandoffJitter {
     }
 }
 
+/// Seeded message-level fault plan for the rotation data plane: the
+/// probability that a slice forward is dropped, duplicated, or delayed in
+/// flight.  All decisions are **stateless hashes** of (seed, stream,
+/// slice, version, attempt) — two runs with the same plan see the same
+/// fault schedule regardless of wall-clock interleaving, and the
+/// virtual-time model ([`NetFaultPlan::virtual_latency`]) can replay the
+/// same decisions the real link makes.
+///
+/// The default plan (all rates 0) is inert: every decision returns
+/// false, [`NetFaultPlan::virtual_latency`] returns exactly `0.0`, and a
+/// run with the fault layer compiled in is bit-identical to one without.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetFaultPlan {
+    /// P(a transmission attempt is dropped in flight).
+    pub drop_rate: f64,
+    /// P(a forward is duplicated — the copy races the original and is
+    /// discarded idempotently at the receiver).
+    pub dup_rate: f64,
+    /// P(a delivery is held back for a seeded sub-sweep delay, possibly
+    /// reordering it past later forwards).
+    pub delay_rate: f64,
+    /// Seed for every fault decision stream.
+    pub seed: u64,
+}
+
+impl Default for NetFaultPlan {
+    fn default() -> Self {
+        NetFaultPlan { drop_rate: 0.0, dup_rate: 0.0, delay_rate: 0.0, seed: 0 }
+    }
+}
+
+/// Decision-stream tags: each fault kind hashes an independent stream so
+/// e.g. raising `drop_rate` never perturbs which forwards get duplicated.
+const STREAM_DROP: u64 = 1;
+const STREAM_DUP: u64 = 2;
+const STREAM_DELAY: u64 = 3;
+const STREAM_BACKOFF: u64 = 4;
+const STREAM_DELAY_FRAC: u64 = 5;
+
+impl NetFaultPlan {
+    /// True when every rate is zero — the layer makes no decisions and
+    /// charges no virtual time.
+    pub fn is_empty(&self) -> bool {
+        self.drop_rate == 0.0 && self.dup_rate == 0.0 && self.delay_rate == 0.0
+    }
+
+    /// Rates must be finite probabilities in `[0, 1]`.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, r) in [
+            ("drop_rate", self.drop_rate),
+            ("dup_rate", self.dup_rate),
+            ("delay_rate", self.delay_rate),
+        ] {
+            if !r.is_finite() || !(0.0..=1.0).contains(&r) {
+                return Err(format!(
+                    "net fault {name} must be a probability in [0, 1], got {r}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministic u ∈ [0, 1) per (seed, stream, slice, version,
+    /// attempt) — splitmix64 finalizer over the mixed key (the
+    /// [`HandoffJitter::u01`] recipe with per-stream decorrelation).
+    fn u01(&self, stream: u64, slice: usize, version: u64, attempt: u64) -> f64 {
+        let mut x = self
+            .seed
+            .wrapping_add(stream.wrapping_mul(0xA0761D6478BD642F))
+            .wrapping_add((slice as u64).wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add(version.wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add(attempt.wrapping_mul(0x94D049BB133111EB));
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D049BB133111EB);
+        x ^= x >> 31;
+        (x >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Does transmission `attempt` (1-based) of `slice`'s version
+    /// `version` forward get dropped in flight?
+    pub fn drops(&self, slice: usize, version: u64, attempt: u64) -> bool {
+        self.drop_rate > 0.0
+            && self.u01(STREAM_DROP, slice, version, attempt) < self.drop_rate
+    }
+
+    /// Is this forward duplicated (a second copy injected on the link)?
+    pub fn duplicates(&self, slice: usize, version: u64) -> bool {
+        self.dup_rate > 0.0
+            && self.u01(STREAM_DUP, slice, version, 0) < self.dup_rate
+    }
+
+    /// Is the delivery of `attempt` held back by an in-flight delay?
+    pub fn delayed(&self, slice: usize, version: u64, attempt: u64) -> bool {
+        self.delay_rate > 0.0
+            && self.u01(STREAM_DELAY, slice, version, attempt) < self.delay_rate
+    }
+
+    /// Seeded delay magnitude u ∈ [0, 1) for a delayed delivery — scales
+    /// both the real link's hold duration and the virtual-time charge.
+    pub fn delay_frac(&self, slice: usize, version: u64) -> f64 {
+        self.u01(STREAM_DELAY_FRAC, slice, version, 0)
+    }
+
+    /// Real-link retransmit backoff before attempt `attempt + 1`:
+    /// exponential from ~1 ms, capped at ~16 ms, with seeded jitter (full
+    /// jitter keeps retransmit storms decorrelated across slices).
+    pub fn backoff(
+        &self,
+        slice: usize,
+        version: u64,
+        attempt: u64,
+    ) -> std::time::Duration {
+        let base_us = 500u64 << attempt.min(5);
+        let jitter = self.u01(STREAM_BACKOFF, slice, version, attempt);
+        std::time::Duration::from_micros(
+            base_us + (jitter * base_us as f64) as u64,
+        )
+    }
+
+    /// Real-link hold duration for a delayed delivery (a few ms, seeded).
+    pub fn delay_hold(
+        &self,
+        slice: usize,
+        version: u64,
+    ) -> std::time::Duration {
+        std::time::Duration::from_micros(
+            1_000 + (self.delay_frac(slice, version) * 3_000.0) as u64,
+        )
+    }
+
+    /// Extra virtual seconds the fault layer charges the handoff of
+    /// `slice` at `version`, for a forwarding sweep of `sweep_secs`:
+    /// each modelled drop costs a retransmit round-trip
+    /// (`RETX_FRAC`x sweep), and a delayed delivering attempt adds its
+    /// seeded hold.  Mirrors the decisions the real link makes for the
+    /// same (slice, version) keys; an empty plan returns exactly 0.0 so
+    /// default-plan timelines stay bit-identical.
+    pub fn virtual_latency(
+        &self,
+        slice: usize,
+        version: u64,
+        sweep_secs: f64,
+    ) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        /// Retransmit cost as a fraction of the forwarding sweep.
+        const RETX_FRAC: f64 = 0.25;
+        /// Max hold fraction for a delayed delivery.
+        const DELAY_FRAC: f64 = 0.5;
+        /// Liveness bound for the *model*: past this many modelled
+        /// drops the real link would have wedged into the recovery path,
+        /// whose cost the engine accounts separately.
+        const MAX_MODELED_RETRIES: u64 = 16;
+        let mut extra = 0.0;
+        let mut attempt = 1u64;
+        while attempt <= MAX_MODELED_RETRIES
+            && self.drops(slice, version, attempt)
+        {
+            extra += RETX_FRAC * sweep_secs;
+            attempt += 1;
+        }
+        if self.delayed(slice, version, attempt) {
+            extra += DELAY_FRAC * self.delay_frac(slice, version) * sweep_secs;
+        }
+        extra
+    }
+}
+
 /// Per-round traffic accounting and time modelling.
 #[derive(Debug)]
 pub struct NetworkModel {
@@ -332,6 +503,119 @@ mod tests {
         assert_ne!(a, j.latency(3, 8, 1.0), "round varies the draw");
         // scales linearly with the sweep
         assert!((j.latency(3, 7, 2.0) - 2.0 * a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn net_fault_plan_default_is_inert() {
+        let p = NetFaultPlan::default();
+        assert!(p.is_empty());
+        assert!(p.validate().is_ok());
+        for v in 0..64u64 {
+            assert!(!p.drops(3, v, 1));
+            assert!(!p.duplicates(3, v));
+            assert!(!p.delayed(3, v, 1));
+            assert_eq!(p.virtual_latency(3, v, 1.0), 0.0, "exact zero");
+        }
+    }
+
+    #[test]
+    fn net_fault_decisions_are_deterministic_and_seeded() {
+        let p = NetFaultPlan {
+            drop_rate: 0.3,
+            dup_rate: 0.3,
+            delay_rate: 0.3,
+            seed: 17,
+        };
+        // same key -> same decision, every call
+        for v in 0..32u64 {
+            assert_eq!(p.drops(2, v, 1), p.drops(2, v, 1));
+            assert_eq!(p.duplicates(2, v), p.duplicates(2, v));
+            assert_eq!(p.virtual_latency(2, v, 1.0), p.virtual_latency(2, v, 1.0));
+        }
+        // a different seed reshuffles the schedule
+        let q = NetFaultPlan { seed: 18, ..p };
+        let differs = (0..256u64).any(|v| p.drops(2, v, 1) != q.drops(2, v, 1));
+        assert!(differs, "seed must vary the drop schedule");
+        // observed rates land near the configured probability
+        let hits = (0..4096u64).filter(|&v| p.drops(2, v, 1)).count();
+        let rate = hits as f64 / 4096.0;
+        assert!((rate - 0.3).abs() < 0.05, "drop rate {rate} far from 0.3");
+    }
+
+    #[test]
+    fn net_fault_streams_are_independent() {
+        // raising drop_rate must not change which forwards duplicate
+        let p = NetFaultPlan {
+            drop_rate: 0.0,
+            dup_rate: 0.4,
+            delay_rate: 0.0,
+            seed: 5,
+        };
+        let q = NetFaultPlan { drop_rate: 0.9, ..p };
+        for v in 0..256u64 {
+            assert_eq!(p.duplicates(7, v), q.duplicates(7, v));
+        }
+    }
+
+    #[test]
+    fn net_fault_validation_rejects_bad_rates() {
+        let bad = |d, u, l| NetFaultPlan {
+            drop_rate: d,
+            dup_rate: u,
+            delay_rate: l,
+            seed: 0,
+        };
+        assert!(bad(1.5, 0.0, 0.0).validate().is_err());
+        assert!(bad(0.0, -0.1, 0.0).validate().is_err());
+        assert!(bad(0.0, 0.0, f64::NAN).validate().is_err());
+        assert!(bad(1.0, 1.0, 1.0).validate().is_ok());
+    }
+
+    #[test]
+    fn net_fault_virtual_latency_charges_drops_and_delays() {
+        let p = NetFaultPlan {
+            drop_rate: 0.5,
+            dup_rate: 0.0,
+            delay_rate: 0.5,
+            seed: 23,
+        };
+        // some leg in the first few hundred versions must pay a charge,
+        // and every charge scales linearly with the sweep
+        let mut any = false;
+        for v in 0..256u64 {
+            let c1 = p.virtual_latency(4, v, 1.0);
+            assert!(c1 >= 0.0 && c1.is_finite());
+            assert!((p.virtual_latency(4, v, 2.0) - 2.0 * c1).abs() < 1e-12);
+            any |= c1 > 0.0;
+        }
+        assert!(any, "50% drop + 50% delay charged nothing in 256 legs");
+        // a total-loss plan is still finite (the model caps retransmits;
+        // the real link wedges into the engine's recovery path instead)
+        let wedge = NetFaultPlan {
+            drop_rate: 1.0,
+            dup_rate: 0.0,
+            delay_rate: 0.0,
+            seed: 1,
+        };
+        assert!(wedge.virtual_latency(0, 0, 1.0).is_finite());
+    }
+
+    #[test]
+    fn net_fault_backoff_grows_and_caps() {
+        let p = NetFaultPlan {
+            drop_rate: 0.5,
+            dup_rate: 0.0,
+            delay_rate: 0.0,
+            seed: 3,
+        };
+        let b1 = p.backoff(0, 1, 1);
+        let b4 = p.backoff(0, 1, 4);
+        assert!(b1 >= std::time::Duration::from_micros(500));
+        assert!(b4 > b1, "backoff must grow with the attempt");
+        // cap: attempt 50 stays in the same band as attempt 5
+        assert!(p.backoff(0, 1, 50) <= std::time::Duration::from_millis(32));
+        assert!(p.delay_hold(0, 1) >= std::time::Duration::from_millis(1));
+        assert!(p.delay_hold(0, 1) <= std::time::Duration::from_millis(4));
     }
 
     #[test]

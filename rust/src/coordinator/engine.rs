@@ -66,16 +66,17 @@
 use crate::cluster::exec::{RotObs, RoundObs};
 use crate::cluster::{
     make_backend, BackendKind, ExecBackend, HandoffJitter, MemoryTracker,
-    NetworkConfig, NetworkModel, PendingRound, StragglerModel, VirtualClock,
-    WorkerPool,
+    NetFaultPlan, NetworkConfig, NetworkModel, PendingRound, StragglerModel,
+    VirtualClock, WorkerPool,
 };
-use crate::kvstore::{LeaseToken, RouterError, VersionVector};
+use crate::kvstore::{LeaseToken, NetLinkStats, RouterError, VersionVector};
 use crate::metrics::{Recorder, SspStats};
 use crate::scheduler::rotation::{QueueOrder, SkipPolicy};
-use crate::trace::{Event, Trace, TraceMode, TracePlumbing};
+use crate::trace::{Event, Trace, TraceBuffer, TraceMode, TracePlumbing};
 use crate::util::stats::Stopwatch;
 use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// One rotation handoff reported by a collected partial: the lease the
 /// worker consumed for one slice of its queue, where the swept slice went,
@@ -278,6 +279,51 @@ pub trait StradsApp {
     /// recent-grant table.  Default: partials never carry errors.
     fn partial_error(_partial: &Self::Partial) -> Option<RouterError> {
         None
+    }
+
+    // ---- lossy transport + redelivery (RunConfig::net_faults) ----
+
+    /// Install the run's lossy-transport fault plan on the app's slice
+    /// router ([`crate::kvstore::SliceRouter::install_link`], with the
+    /// run's trace sink so `NetDrop`/`Retransmit`/`DupDiscard`/`Redeliver`
+    /// events land in the recorded stream).  Called once per rotation run,
+    /// after [`StradsApp::begin_rotation`] (the router exists by then) and
+    /// only when the plan actually injects faults — a clean run never
+    /// touches the link layer, so the fault-free path stays bit-identical
+    /// with the transport compiled in.  The default panics: an app must
+    /// opt in before a fault plan can mean anything.
+    fn install_net_faults(
+        &mut self,
+        _plan: NetFaultPlan,
+        _sink: Option<Arc<TraceBuffer>>,
+    ) {
+        panic!(
+            "this app does not route slice forwards through a lossy transport"
+        )
+    }
+
+    /// Transport-layer counters from the app's slice-router lossy link
+    /// ([`crate::kvstore::SliceRouter::net_stats`]); zeros when no
+    /// [`RunConfig::net_faults`] plan was installed.  Sampled once at the
+    /// end of a rotation run, before [`StradsApp::end_rotation`] reclaims
+    /// the router.
+    fn net_stats(&self) -> NetLinkStats {
+        NetLinkStats::default()
+    }
+
+    /// Mid-round data-plane recovery after a transport fault wedged a
+    /// router take past its deadline: flush the link's retained envelopes
+    /// (force-delivering anything undelivered) and re-grant every
+    /// unsettled lease from the settled chain heads
+    /// ([`crate::kvstore::SliceRouter::flush_all`] +
+    /// [`crate::kvstore::LeaseLedger::recover_all`]).  Called only after
+    /// the engine drained and salvaged the whole in-flight window, so
+    /// every *completed* leg is already settled.  Return `true` when the
+    /// data plane was re-armed (the run continues from the settled
+    /// heads); the default `false` keeps the clean-abort semantics for
+    /// apps without a recovery path.
+    fn recover_data_plane(&mut self) -> bool {
+        false
     }
 
     // ---- elastic membership + fault tolerance (RunConfig::faults) ----
@@ -523,6 +569,13 @@ pub struct RunConfig {
     /// fault-free engine bit-exactly).  CLI: `--kill-worker W@round`,
     /// `--join-worker @round`, `--checkpoint-every N`.
     pub faults: FaultPlan,
+    /// Rotation mode: lossy-transport fault plan for slice forwards —
+    /// seeded probabilistic drop/duplicate/delay on every handoff
+    /// delivery, masked by the router's ack/retry redelivery protocol
+    /// (default: all-zero, the link layer is never installed and the run
+    /// is bit-identical to the pre-transport engine).  CLI: `--drop-rate
+    /// R`, `--dup-rate R`, `--delay-rate R`, `--net-fault-seed S`.
+    pub net_faults: NetFaultPlan,
 }
 
 impl Default for RunConfig {
@@ -543,6 +596,7 @@ impl Default for RunConfig {
             threads_pace_secs: 0.0,
             trace: TraceMode::Off,
             faults: FaultPlan::default(),
+            net_faults: NetFaultPlan::default(),
         }
     }
 }
@@ -674,6 +728,15 @@ impl RunConfigBuilder {
         self
     }
 
+    /// Lossy-transport fault plan for rotation slice forwards (CLI
+    /// `--drop-rate` / `--dup-rate` / `--delay-rate` /
+    /// `--net-fault-seed`); the all-zero default leaves the link layer
+    /// uninstalled.
+    pub fn net_faults(mut self, v: NetFaultPlan) -> Self {
+        self.cfg.net_faults = v;
+        self
+    }
+
     /// Validate coherence and return the config.
     ///
     /// Rejected combinations:
@@ -755,6 +818,22 @@ impl RunConfigBuilder {
                         "join at round {join} has no earlier kill to revive"
                     ));
                 }
+            }
+        }
+        if !cfg.net_faults.is_empty() {
+            cfg.net_faults.validate()?;
+            if !rotation {
+                return Err(
+                    "net fault injection requires ExecutionMode::Rotation"
+                        .into(),
+                );
+            }
+            if matches!(cfg.trace, TraceMode::Replay(_)) {
+                return Err(
+                    "net fault injection cannot run under TraceMode::Replay \
+                     (replay re-drives the recorded, post-masking schedule)"
+                        .into(),
+                );
             }
         }
         Ok(cfg)
@@ -840,6 +919,13 @@ pub struct RunResult {
     pub rounds_lost: u64,
     /// Wall seconds spent serializing periodic checkpoints.
     pub checkpoint_secs: f64,
+    /// Slice forwards retransmitted by the lossy-transport redelivery
+    /// protocol ([`RunConfig::net_faults`]; 0 on clean runs).
+    pub retransmits: u64,
+    /// Duplicate deliveries discarded idempotently on the receive side.
+    pub dup_discards: u64,
+    /// Wall seconds deliveries spent parked in retransmit backoff.
+    pub retry_wait_secs: f64,
     /// The last [`RunCheckpoint`] taken ([`FaultPlan::checkpoint_every`];
     /// None when checkpointing is off).  Feed it to [`Engine::resume`].
     pub checkpoint: Option<RunCheckpoint>,
@@ -1276,6 +1362,10 @@ impl<A: StradsApp> Engine<A> {
             cfg.faults.is_empty(),
             "fault injection requires the rotation pipeline"
         );
+        assert!(
+            cfg.net_faults.is_empty(),
+            "net fault injection requires the rotation pipeline"
+        );
         let wall = Stopwatch::start();
         let block0 = self.app.data_plane_block_secs();
         let plumbing = TracePlumbing::from_mode(&cfg.trace);
@@ -1352,6 +1442,9 @@ impl<A: StradsApp> Engine<A> {
             recoveries: 0,
             rounds_lost: 0,
             checkpoint_secs: 0.0,
+            retransmits: 0,
+            dup_discards: 0,
+            retry_wait_secs: 0.0,
             checkpoint: None,
             aborted: None,
             recorder,
@@ -1378,6 +1471,10 @@ impl<A: StradsApp> Engine<A> {
         assert!(
             cfg.faults.is_empty(),
             "fault injection requires the rotation pipeline"
+        );
+        assert!(
+            cfg.net_faults.is_empty(),
+            "net fault injection requires the rotation pipeline"
         );
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
@@ -1505,6 +1602,9 @@ impl<A: StradsApp> Engine<A> {
             recoveries: 0,
             rounds_lost: 0,
             checkpoint_secs: 0.0,
+            retransmits: 0,
+            dup_discards: 0,
+            retry_wait_secs: 0.0,
             checkpoint: None,
             aborted: None,
             recorder,
@@ -1586,6 +1686,7 @@ impl<A: StradsApp> Engine<A> {
         order: QueueOrder,
         backend: &dyn ExecBackend,
         plumbing: &TracePlumbing,
+        salvage: bool,
     ) -> Result<(Vec<Vec<(usize, f64)>>, f64), RouterError> {
         let n = self.pool.n_workers();
         let granted = pending.leases().to_vec();
@@ -1595,10 +1696,18 @@ impl<A: StradsApp> Engine<A> {
             "rotation round must track one lease queue per worker"
         );
         let results = pending.collect();
-        for (partial, _) in &results {
-            if let Some(err) = A::partial_error(partial) {
-                return Err(err);
+        if let Some(err) = results.iter().find_map(|(p, _)| A::partial_error(p))
+        {
+            if salvage {
+                // the round is abandoned, but under an active net-fault
+                // plan the legs that DID complete must still settle before
+                // recovery: recover_all re-grants from the settled chain
+                // heads, and an unsettled completed leg would be re-granted
+                // a version its slice already moved past
+                let partials = results.into_iter().map(|(p, _)| p).collect();
+                self.rot_salvage_partials(round_idx, partials);
             }
+            return Err(err);
         }
         let mut partials = Vec::with_capacity(results.len());
         let mut compute_secs = Vec::with_capacity(results.len());
@@ -1801,6 +1910,18 @@ impl<A: StradsApp> Engine<A> {
                 "fault injection cannot run under TraceMode::Replay"
             );
         }
+        let net_active = !cfg.net_faults.is_empty();
+        if net_active {
+            // mirrored from RunConfigBuilder::build, for struct-literal
+            // configs that bypass the builder
+            if let Err(e) = cfg.net_faults.validate() {
+                panic!("invalid net fault plan: {e}");
+            }
+            assert!(
+                !matches!(cfg.trace, TraceMode::Replay(_)),
+                "net fault injection cannot run under TraceMode::Replay"
+            );
+        }
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
         let block0 = self.app.data_plane_block_secs();
@@ -1833,6 +1954,14 @@ impl<A: StradsApp> Engine<A> {
         }
         self.app.install_trace(plumbing.clone());
         self.app.begin_rotation(depth);
+        if net_active {
+            // after begin_rotation (the router exists) and only when the
+            // plan injects faults: clean runs never install the link, so
+            // the fault-free path stays bit-identical with the transport
+            // layer compiled in
+            self.app
+                .install_net_faults(cfg.net_faults, plumbing.sink.clone());
+        }
         let n_slices = self.app.n_rotation_slices();
         assert!(
             n_slices >= n,
@@ -1883,8 +2012,73 @@ impl<A: StradsApp> Engine<A> {
                     depth,
                     order,
                     &cfg.handoff_jitter,
+                    &cfg.net_faults,
                     &plumbing,
+                    net_active,
                 )
+            };
+        }
+
+        // transport-fault recovery bound: consecutive recoveries with no
+        // successful collect between them mean redelivery is not restoring
+        // progress — the state is genuinely unrecoverable, so abort
+        const MAX_STALLED_RECOVERIES: u32 = 3;
+        let mut stalled_recoveries = 0u32;
+        // one collect with mid-round transport recovery: `Ok` resets the
+        // stall counter; `Err` under an active net-fault plan drains and
+        // salvages the in-flight window (settling every completed leg),
+        // then re-arms the data plane from the settled chain heads instead
+        // of aborting.  Expands to `true` when the run may continue;
+        // `false` means `aborted` was set.
+        macro_rules! collect_or_recover {
+            ($r:expr) => {
+                match collect_oldest!() {
+                    Ok(()) => {
+                        stalled_recoveries = 0;
+                        true
+                    }
+                    Err(e) => {
+                        let e = fill_suspected_holder(e, &recent_grants);
+                        let mut recovered = false;
+                        if net_active
+                            && stalled_recoveries < MAX_STALLED_RECOVERIES
+                        {
+                            // the errored round salvaged its completed legs
+                            // on the way out (rot_collect_round settles
+                            // them before returning Err); drain the younger
+                            // in-flight rounds the same way, then re-grant
+                            // the lost legs from the settled chain heads
+                            let lost = 1 + window.len() as u64;
+                            while let Some(inflight) = window.pop_front() {
+                                let partials = inflight
+                                    .pending
+                                    .collect()
+                                    .into_iter()
+                                    .map(|(p, _)| p)
+                                    .collect();
+                                self.rot_salvage_partials(
+                                    inflight.round,
+                                    partials,
+                                );
+                            }
+                            if self.app.recover_data_plane() {
+                                stats.rounds_lost += lost;
+                                stats.recoveries += 1;
+                                stalled_recoveries += 1;
+                                plumbing.record(Event::Recover {
+                                    round: $r,
+                                    worker: e.suspected_holder.unwrap_or(0),
+                                    moved: 0,
+                                });
+                                recovered = true;
+                            }
+                        }
+                        if !recovered {
+                            aborted = Some(e.to_string());
+                        }
+                        recovered
+                    }
+                }
             };
         }
 
@@ -1906,11 +2100,7 @@ impl<A: StradsApp> Engine<A> {
             if !kills_now.is_empty() || joins_now > 0 {
                 let lost = window.len() as u64;
                 while !window.is_empty() {
-                    if let Err(e) = collect_oldest!() {
-                        aborted = Some(
-                            fill_suspected_holder(e, &recent_grants)
-                                .to_string(),
-                        );
+                    if !collect_or_recover!(r) {
                         break 'rounds;
                     }
                 }
@@ -1941,6 +2131,15 @@ impl<A: StradsApp> Engine<A> {
                     "fault plan killed every worker"
                 );
                 let moved = self.app.recover_membership(&alive);
+                // the recent-grant table may still name a dead worker as a
+                // slice's most recent holder; recovery re-placed those legs
+                // onto survivors, so a stale entry would misdirect a later
+                // abort's suspected_holder at a corpse.  Keep only grants
+                // held by live workers — the re-grants recorded at the next
+                // dispatch resolve through the post-recovery placement.
+                for recent in recent_grants.iter_mut() {
+                    recent.retain(|&(_, w)| alive[w]);
+                }
                 stats.recoveries += 1;
                 plumbing.record(Event::Recover {
                     round: r,
@@ -1956,11 +2155,7 @@ impl<A: StradsApp> Engine<A> {
                 && r % plan.checkpoint_every == 0
             {
                 while !window.is_empty() {
-                    if let Err(e) = collect_oldest!() {
-                        aborted = Some(
-                            fill_suspected_holder(e, &recent_grants)
-                                .to_string(),
-                        );
+                    if !collect_or_recover!(r) {
                         break 'rounds;
                     }
                 }
@@ -1983,10 +2178,7 @@ impl<A: StradsApp> Engine<A> {
                 });
             }
             while window.len() >= depth as usize {
-                if let Err(e) = collect_oldest!() {
-                    aborted = Some(
-                        fill_suspected_holder(e, &recent_grants).to_string(),
-                    );
+                if !collect_or_recover!(r) {
                     break 'rounds;
                 }
             }
@@ -2018,11 +2210,7 @@ impl<A: StradsApp> Engine<A> {
                 // drain the ring so every slice is parked and every lease
                 // settled before the objective reads them
                 while !window.is_empty() {
-                    if let Err(e) = collect_oldest!() {
-                        aborted = Some(
-                            fill_suspected_holder(e, &recent_grants)
-                                .to_string(),
-                        );
+                    if !collect_or_recover!(r) {
                         break 'rounds;
                     }
                 }
@@ -2057,10 +2245,8 @@ impl<A: StradsApp> Engine<A> {
         }
         // drain anything left in flight (early break paths)
         while aborted.is_none() && !window.is_empty() {
-            if let Err(e) = collect_oldest!() {
-                aborted = Some(
-                    fill_suspected_holder(e, &recent_grants).to_string(),
-                );
+            if !collect_or_recover!(rounds_run) {
+                break;
             }
         }
         // sample the data-plane block counter before end_rotation
@@ -2068,6 +2254,12 @@ impl<A: StradsApp> Engine<A> {
         let router_block =
             (self.app.data_plane_block_secs() - block0).max(0.0);
         stats.router_block_secs = router_block;
+        // transport counters, likewise sampled before the router is
+        // reclaimed (zeros when no link was installed)
+        let net = self.app.net_stats();
+        stats.retransmits = net.retransmits;
+        stats.dup_discards = net.dup_discards;
+        stats.retry_wait_secs = net.retry_wait_secs;
         if aborted.is_none() {
             self.app.end_rotation();
         } else {
@@ -2095,6 +2287,9 @@ impl<A: StradsApp> Engine<A> {
             recoveries: stats.recoveries,
             rounds_lost: stats.rounds_lost,
             checkpoint_secs: stats.checkpoint_secs,
+            retransmits: stats.retransmits,
+            dup_discards: stats.dup_discards,
+            retry_wait_secs: stats.retry_wait_secs,
             checkpoint,
             aborted,
             recorder,
@@ -2122,7 +2317,9 @@ impl<A: StradsApp> Engine<A> {
         depth: u64,
         order: QueueOrder,
         jitter: &HandoffJitter,
+        net: &NetFaultPlan,
         plumbing: &TracePlumbing,
+        salvage: bool,
     ) -> Result<(), RouterError> {
         let inflight = window.pop_front().expect("window not empty");
         for p in 0..self.pool.n_workers() {
@@ -2141,6 +2338,7 @@ impl<A: StradsApp> Engine<A> {
             order,
             &*backend,
             plumbing,
+            salvage,
         )?;
         // every rotation pull commits coordinator state (settled leases +
         // refreshed sums) even without a sync broadcast
@@ -2177,6 +2375,7 @@ impl<A: StradsApp> Engine<A> {
                 pull_secs,
                 order,
                 jitter,
+                net,
                 wall_now: wall.secs(),
             },
             &mut waits,
@@ -2187,6 +2386,25 @@ impl<A: StradsApp> Engine<A> {
         stats.record(observed, out.wait_saved_secs);
         self.clock.advance_round_to(out.now);
         Ok(())
+    }
+
+    /// Degraded collect for a round abandoned by a transport fault: pull
+    /// the partials so every *completed* leg's lease settles (no lease
+    /// cross-checking — the errored worker's leg list is legitimately
+    /// short) and broadcast any resulting sync so worker state stays
+    /// consistent with the coordinator.  Timing, tracing, and skip/debt
+    /// accounting are skipped: the round counts as lost, not collected.
+    fn rot_salvage_partials(
+        &mut self,
+        round_idx: u64,
+        partials: Vec<A::Partial>,
+    ) {
+        if let Some(msg) = self.app.pull(round_idx, partials) {
+            self.pool.broadcast(|_| {
+                let msg = msg.clone();
+                move |ws: &mut A::WorkerState| A::sync(ws, &msg)
+            });
+        }
     }
 
     /// Restore app + per-worker shard state from a [`RunCheckpoint`]
@@ -2787,6 +3005,102 @@ mod tests {
         assert_eq!(cfg.faults.checkpoint_every, 2);
         assert!(!cfg.faults.is_empty());
         assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn net_fault_builder_validation() {
+        let lossy = NetFaultPlan { drop_rate: 0.05, ..Default::default() };
+        // net faults outside rotation mode are rejected
+        assert!(RunConfig::builder().net_faults(lossy).build().is_err());
+        // an out-of-range rate is rejected even in rotation mode
+        assert!(RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .net_faults(NetFaultPlan { dup_rate: 1.5, ..Default::default() })
+            .build()
+            .is_err());
+        // replay re-drives the recorded, post-masking schedule: arming
+        // faults under it is incoherent
+        assert!(RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .net_faults(lossy)
+            .trace(TraceMode::Replay(Trace {
+                backend: "sim".into(),
+                events: Vec::new(),
+            }))
+            .build()
+            .is_err());
+        // the all-zero default is inert everywhere
+        assert!(RunConfig::builder()
+            .net_faults(NetFaultPlan::default())
+            .build()
+            .is_ok());
+        // a coherent plan builds and round-trips
+        let cfg = RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .net_faults(NetFaultPlan {
+                drop_rate: 0.05,
+                dup_rate: 0.02,
+                delay_rate: 0.1,
+                seed: 7,
+            })
+            .build()
+            .unwrap();
+        assert!(!cfg.net_faults.is_empty());
+        assert_eq!(cfg.net_faults.seed, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "net fault injection requires the rotation")]
+    fn net_faults_on_bsp_run_panic() {
+        let cfg = RunConfig {
+            max_rounds: 2,
+            eval_every: 1,
+            net_faults: NetFaultPlan {
+                drop_rate: 0.5,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut e = Engine::new(
+            Consensus { n_workers: 2, committed: 0.0 },
+            vec![0.0, 1.0],
+            &cfg,
+        );
+        e.run(&cfg);
+    }
+
+    #[test]
+    fn suspected_holder_resolves_through_post_recovery_placement() {
+        // Satellite: after a membership recovery the recent-grant table
+        // must not name the dead worker — the engine purges its entries,
+        // and the re-grant recorded at the next dispatch points the
+        // suspicion at the slice's *live* holder.
+        let err = RouterError {
+            slice_id: 0,
+            version: 5,
+            chain_head: 4,
+            suspected_holder: None,
+            waited_ms: 10,
+        };
+        // v4 was granted to worker 1, which then died
+        let mut recent = vec![vec![(3u64, 0usize), (4, 1)]];
+        assert_eq!(
+            fill_suspected_holder(err, &recent).suspected_holder,
+            Some(1),
+            "pre-recovery the table names the (now dead) holder"
+        );
+        // membership recovery: purge dead workers' grants, then the
+        // re-placed leg is re-granted to surviving worker 2
+        let alive = [true, false, true];
+        for r in recent.iter_mut() {
+            r.retain(|&(_, w)| alive[w]);
+        }
+        recent[0].push((4, 2));
+        assert_eq!(
+            fill_suspected_holder(err, &recent).suspected_holder,
+            Some(2),
+            "post-recovery suspicion follows the re-placed grant"
+        );
     }
 
     #[test]

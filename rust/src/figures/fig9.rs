@@ -6,7 +6,9 @@
 //! Lasso-RR crawls.
 
 use crate::baselines::{AlsConfig, AlsMf, YahooLda, YahooLdaConfig};
-use crate::cluster::{HandoffJitter, NetworkConfig, StragglerModel};
+use crate::cluster::{
+    HandoffJitter, NetFaultPlan, NetworkConfig, StragglerModel,
+};
 use crate::coordinator::{
     BackendKind, ExecutionMode, QueueOrder, RunConfig, TraceMode,
 };
@@ -844,6 +846,156 @@ pub fn print_chaos_comparison(c: &ChaosComparison) {
     );
 }
 
+/// The lossy arm: the same LDA rotation workload on a clean fabric vs
+/// under drop/dup/delay injection (with the ack/retry redelivery protocol
+/// masking the faults), plus a run whose [`NetFaultPlan`] is configured
+/// but all-zero.  The protocol's contract, measured: identical math
+/// (objective bits equal), a bounded virtual-time penalty, no aborts.
+pub struct LossyComparison {
+    pub app: String,
+    /// Clean-fabric trajectory (the reference).
+    pub clean: Recorder,
+    /// Trajectory under drop 5% + dup 2% + delay 10%.
+    pub lossy: Recorder,
+    /// The clean run's 90%-improvement objective.
+    pub target: f64,
+    pub clean_secs_to_target: Option<f64>,
+    pub lossy_secs_to_target: Option<f64>,
+    /// Transport-layer work the redelivery protocol did to mask the
+    /// faults (all zero in the clean run).
+    pub retransmits: u64,
+    pub dup_discards: u64,
+    pub retry_wait_secs: f64,
+    /// Mid-round transport recoveries the engine fired (0 when retry
+    /// alone masked every fault — the expected case at these rates).
+    pub recoveries: u64,
+    pub clean_objective: f64,
+    pub lossy_objective: f64,
+    /// Fingerprint of the clean run's recorded trace.
+    pub clean_fingerprint: u64,
+    /// Fingerprint of the run configured with an all-zero plan.  Must
+    /// equal `clean_fingerprint`: compiling the fault layer in (rates 0)
+    /// must not perturb the schedule.
+    pub zero_plan_fingerprint: u64,
+}
+
+/// Run the lossy arm on the U = 2P LDA rotation workload at the given
+/// pipeline depth, under a jittered 4x rotating straggler: clean
+/// reference, all-zero-plan control, and a drop 5% + dup 2% + delay 10%
+/// injected run.
+pub fn run_lossy_comparison(cfg: &Fig9Config, depth: u64) -> LossyComparison {
+    let corpus =
+        figure_corpus(sc(6_000, cfg.scale), sc(600, cfg.scale), cfg.seed);
+    let k = sc(32, cfg.scale);
+    let sweeps = 6u64;
+    let p = cfg.n_workers as u64;
+    let rounds = sweeps * p;
+    let run = |label: &str, plan: Option<NetFaultPlan>| {
+        let mut b = RunConfig::builder()
+            .max_rounds(rounds)
+            .eval_every(p)
+            .network(NetworkConfig::ideal())
+            .label(label)
+            .mode(ExecutionMode::Rotation { depth })
+            .straggler(StragglerModel::Rotating { factor: 4.0 })
+            .handoff_jitter(HandoffJitter::Jittered {
+                base_frac: 0.2,
+                jitter_frac: 1.5,
+                seed: 5,
+            })
+            .trace(TraceMode::Record);
+        if let Some(plan) = plan {
+            b = b.net_faults(plan);
+        }
+        let run_cfg = b.build().expect("static lossy-arm config");
+        let mut e = lda_engine_sliced(
+            &corpus,
+            k,
+            cfg.n_workers,
+            2 * cfg.n_workers,
+            cfg.seed,
+            &run_cfg,
+        );
+        e.run(&run_cfg)
+    };
+    let clean = run("LDA-lossy-clean", None);
+    let zero = run("LDA-lossy-zero", Some(NetFaultPlan::default()));
+    let lossy = run(
+        "LDA-lossy",
+        Some(NetFaultPlan {
+            drop_rate: 0.05,
+            dup_rate: 0.02,
+            delay_rate: 0.10,
+            seed: cfg.seed ^ 0x10551,
+        }),
+    );
+    assert!(
+        lossy.aborted.is_none(),
+        "lossy run aborted: {:?}",
+        lossy.aborted
+    );
+    // the redelivery protocol masks every fault below the liveness bound:
+    // the math must come out bit-identical, not merely close
+    assert_eq!(
+        clean.final_objective.to_bits(),
+        lossy.final_objective.to_bits(),
+        "redelivery must mask the fault mix exactly: clean {} vs lossy {}",
+        clean.final_objective,
+        lossy.final_objective
+    );
+    let first = clean.recorder.points()[0].objective;
+    let target = first + 0.9 * (clean.final_objective - first);
+    LossyComparison {
+        app: "LDA-lossy".into(),
+        target,
+        clean_secs_to_target: clean.recorder.time_to_target(target, false),
+        lossy_secs_to_target: lossy.recorder.time_to_target(target, false),
+        retransmits: lossy.retransmits,
+        dup_discards: lossy.dup_discards,
+        retry_wait_secs: lossy.retry_wait_secs,
+        recoveries: lossy.recoveries,
+        clean_objective: clean.final_objective,
+        lossy_objective: lossy.final_objective,
+        clean_fingerprint: clean.fingerprint.expect("recorded run"),
+        zero_plan_fingerprint: zero.fingerprint.expect("recorded run"),
+        clean: clean.recorder,
+        lossy: lossy.recorder,
+    }
+}
+
+/// Print the lossy arm.
+pub fn print_lossy_comparison(c: &LossyComparison) {
+    println!("\n== Figure 9 (lossy arm): {} ==", c.app);
+    for rec in [&c.clean, &c.lossy] {
+        println!("  --- {} ---", rec.label);
+        println!("  {:>10}  {:>12}  {:>16}", "round", "vtime(s)", "objective");
+        for pt in rec.points() {
+            println!(
+                "  {:>10}  {:>12.4}  {:>16.6}",
+                pt.round, pt.virtual_secs, pt.objective
+            );
+        }
+    }
+    println!(
+        "  target {:.6}: clean {:?}s vs lossy {:?}s",
+        c.target, c.clean_secs_to_target, c.lossy_secs_to_target
+    );
+    println!(
+        "  masked: {} retransmits, {} dup discards, {:.4}s retry wait, \
+         {} recoveries",
+        c.retransmits, c.dup_discards, c.retry_wait_secs, c.recoveries
+    );
+    println!(
+        "  objectives bit-equal: {} (clean {:.6})",
+        c.clean_objective.to_bits() == c.lossy_objective.to_bits(),
+        c.clean_objective
+    );
+    println!(
+        "  fingerprints: clean {:016x} vs zero-plan {:016x}",
+        c.clean_fingerprint, c.zero_plan_fingerprint
+    );
+}
+
 fn comparison(
     app: &str,
     bsp: crate::coordinator::RunResult,
@@ -1211,6 +1363,41 @@ mod tests {
             "armed-but-unfired fault plan changed the trace: \
              {:016x} vs {:016x}",
             c.clean_fingerprint, c.unfired_fingerprint
+        );
+    }
+
+    #[test]
+    fn lossy_comparison_masks_faults_bit_exactly() {
+        // run_lossy_comparison itself asserts no-abort and objective
+        // bit-equality; this test gates the rest of the contract
+        let c = run_lossy_comparison(&tiny(), 2);
+        assert_eq!(
+            c.clean_objective.to_bits(),
+            c.lossy_objective.to_bits(),
+            "masked run must match the clean math bit for bit"
+        );
+        // the fault mix actually exercised the protocol
+        assert!(c.retransmits > 0, "drop 5% fired no retransmits");
+        assert!(c.dup_discards > 0, "dup 2% fired no duplicate discards");
+        assert!(c.retry_wait_secs >= 0.0);
+        // at these rates retry masks everything below the recovery path
+        assert_eq!(c.recoveries, 0, "retry alone should mask this mix");
+        // a configured-but-all-zero plan must be schedule-inert
+        assert_eq!(
+            c.clean_fingerprint, c.zero_plan_fingerprint,
+            "zero-rate NetFaultPlan changed the trace: {:016x} vs {:016x}",
+            c.clean_fingerprint, c.zero_plan_fingerprint
+        );
+        // bounded degradation in deterministic virtual time: the lossy
+        // run reaches the clean run's 90% target within 1.25x
+        let clean_t =
+            c.clean_secs_to_target.expect("clean run reaches its target");
+        let lossy_t = c
+            .lossy_secs_to_target
+            .expect("lossy run never reached the clean 90% target");
+        assert!(
+            lossy_t <= 1.25 * clean_t,
+            "lossy arm too slow: {lossy_t:.4}s vs clean {clean_t:.4}s"
         );
     }
 

@@ -22,8 +22,8 @@ pub mod slices;
 pub mod versioned;
 
 pub use router::{
-    rotation_availability, LeaseLedger, LeaseToken, RouterError, SliceMass,
-    SliceRouter, StaleLease,
+    rotation_availability, LeaseLedger, LeaseToken, NetLinkStats, RouterError,
+    SliceChecksum, SliceMass, SliceRouter, StaleLease,
 };
 pub use slices::{SliceLease, SliceStore};
 pub use versioned::{VersionVector, VersionedParams};

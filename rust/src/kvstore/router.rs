@@ -32,11 +32,12 @@
 //!   them strictly in order at pull time.  Every version `v+1` therefore
 //!   has exactly one parent `v`; any skip, replay, or fork panics.
 
-use crate::cluster::{router_spin_ms, ForwardQueue};
+use crate::cluster::{router_spin_ms, ForwardQueue, NetFaultPlan};
+use crate::trace::{Event, TraceBuffer};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 /// One lease in a slice's version chain: the worker holding this token may
 /// consume exactly version `version` of slice `slice_id` (and forwards
@@ -106,6 +107,139 @@ impl SliceMass for Vec<u32> {
     }
 }
 
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content checksum of a routed payload — stamped into the transport
+/// envelope at forward time and verified at delivery time, so a corrupt
+/// retransmit buffer (or a payload type whose `Clone` is not value-exact)
+/// fails loudly instead of silently diverging the model.  Order-sensitive
+/// FNV-1a over the payload's canonical byte stream; two payloads that
+/// compare equal must checksum equal.
+pub trait SliceChecksum {
+    fn checksum64(&self) -> u64;
+}
+
+impl SliceChecksum for u8 {
+    fn checksum64(&self) -> u64 {
+        fnv_bytes(FNV_OFFSET, &[*self])
+    }
+}
+
+impl SliceChecksum for Vec<u32> {
+    fn checksum64(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for v in self {
+            h = fnv_bytes(h, &v.to_le_bytes());
+        }
+        h
+    }
+}
+
+impl SliceChecksum for Vec<f32> {
+    fn checksum64(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for v in self {
+            h = fnv_bytes(h, &v.to_bits().to_le_bytes());
+        }
+        h
+    }
+}
+
+/// Cumulative counters of one [`SliceRouter`]'s lossy-transport link
+/// (all zero when no link is installed).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetLinkStats {
+    /// Delivery attempts re-sent after an earlier attempt was dropped.
+    pub retransmits: u64,
+    /// Duplicate deliveries discarded idempotently by the receive side.
+    pub dup_discards: u64,
+    /// Delivery attempts the fault plan dropped.
+    pub drops: u64,
+    /// Retained payloads force-delivered by a recovery flush.
+    pub redelivers: u64,
+    /// Wall seconds deliveries spent parked in retransmit backoff.
+    pub retry_wait_secs: f64,
+}
+
+/// One in-flight transport envelope: the retransmit buffer entry a sender
+/// keeps from [`SliceRouter::forward`] until the receiver's take acks it.
+#[derive(Debug)]
+struct LinkEntry<T> {
+    payload: T,
+    version: u64,
+    checksum: u64,
+    /// Delivery attempts made so far (1-based once the first fires).
+    attempts: u64,
+    /// The payload reached the receive mailbox (awaiting the take-ack).
+    delivered: bool,
+    /// Earliest instant the next delivery attempt may fire (exponential
+    /// backoff after a drop; the epoch for attempt 1).
+    next_retry: Instant,
+    /// Armed by a delay fault: the attempt is in flight and lands here.
+    deliver_at: Option<Instant>,
+    /// Armed by a duplication fault at forward time: a second copy is in
+    /// flight, delivered if the primary drops (masking) and discarded
+    /// idempotently otherwise.
+    dup_pending: bool,
+    /// When the most recent drop happened (meters the backoff latency the
+    /// protocol paid once the payload finally lands).
+    last_drop_at: Instant,
+}
+
+/// The lossy-transport layer under a [`SliceRouter`]'s forwards: a seeded
+/// [`NetFaultPlan`] decides per delivery attempt whether to drop, delay,
+/// or duplicate, and the ack/retry/backoff protocol around the retained
+/// payload masks whatever the plan injects.  Installed at most once per
+/// router ([`SliceRouter::install_link`]); with no link installed every
+/// forward deposits directly, byte-identical to the pre-link code path.
+///
+/// There is no pump thread: receivers drive redelivery from their own
+/// wait loops (`take_for` / the reordered-take sweeps pump between short
+/// condvar parks), so the protocol works identically under both
+/// execution backends.
+#[derive(Debug)]
+pub struct LossyLink<T> {
+    plan: NetFaultPlan,
+    /// Per-slice retransmit buffer (at most one outstanding envelope per
+    /// slice: forwarding `v+1` requires taking `v`, which acks it).
+    entries: Vec<Mutex<Option<LinkEntry<T>>>>,
+    /// Highest version delivered to the mailbox per slice (seeded from
+    /// the chain heads at install time, so coordinator seeds count as
+    /// delivered) — the idempotent-receive dedup line.
+    delivered_head: Vec<AtomicU64>,
+    retransmits: AtomicU64,
+    dup_discards: AtomicU64,
+    drops: AtomicU64,
+    redelivers: AtomicU64,
+    retry_wait_nanos: AtomicU64,
+    /// Trace sink for `NetDrop`/`Retransmit`/`DupDiscard`/`Redeliver`
+    /// events (all excluded from fingerprints — the post-masking stream
+    /// is what replay sees).
+    sink: Option<Arc<TraceBuffer>>,
+}
+
+impl<T> LossyLink<T> {
+    fn trace(&self, e: Event) {
+        if let Some(sink) = &self.sink {
+            sink.push(e);
+        }
+    }
+}
+
+/// How often a link-driven wait re-pumps the transport between condvar
+/// parks — short against the smallest backoff step (~1 ms) so a due
+/// retransmit never waits long for a driver.
+const PUMP_INTERVAL: Duration = Duration::from_micros(500);
+
 /// Worker-side slice handoff ring: versioned slices move peer→peer through
 /// a blocking per-slice mailbox, never through the coordinator.
 ///
@@ -123,6 +257,10 @@ pub struct SliceRouter<T> {
     /// ([`crate::scheduler::rotation::QueueOrder`]).
     arrivals: Mutex<Vec<u64>>,
     arrival_counter: AtomicU64,
+    /// Lossy-transport layer, installed at most once
+    /// ([`SliceRouter::install_link`]); `None` keeps every forward on the
+    /// direct-deposit path.
+    link: OnceLock<LossyLink<T>>,
 }
 
 impl<T: Send> SliceRouter<T> {
@@ -132,6 +270,7 @@ impl<T: Send> SliceRouter<T> {
             heads: Mutex::new(vec![0; n_slices]),
             arrivals: Mutex::new(vec![0; n_slices]),
             arrival_counter: AtomicU64::new(0),
+            link: OnceLock::new(),
         }
     }
 
@@ -153,6 +292,114 @@ impl<T: Send> SliceRouter<T> {
         self.heads.lock().expect("router heads poisoned")[slice_id] = version;
         self.stamp_arrival(slice_id);
         self.queue.deposit(slice_id, data, version);
+    }
+
+    /// Version currently parked in the slice's slot (`None` while the
+    /// handoff is in flight) — the poll an availability-ordered consumer
+    /// uses to rank its queue before committing to a take.  Deliberately
+    /// does **not** pump the transport link: a delivery still held by a
+    /// delay fault is genuinely unavailable, which is exactly the signal
+    /// `SkipPolicy::Defer` keys off.
+    pub fn parked_version(&self, slice_id: usize) -> Option<u64> {
+        self.queue.parked_version(slice_id)
+    }
+
+    /// Arrival stamp (global deposit sequence number) of the slice's most
+    /// recent deposit.  Consumers compare stamps across *parked* slices to
+    /// sweep earliest-landed-first; a stamp read while the slice is in
+    /// flight refers to the previous deposit and means nothing.
+    ///
+    /// Trace contract: a holder reading the stamp of the handoff it just
+    /// consumed must do so **before** its own [`SliceRouter::forward`],
+    /// which re-stamps the slot.  The read cannot race — the holder is
+    /// the slot's sole depositor until it forwards.  The stamp lands in
+    /// [`crate::trace::Event::Take`] as metadata only and is excluded
+    /// from fingerprints (it counts *global* deposits, so it is
+    /// timing-dependent across workers).
+    pub fn arrival_seq(&self, slice_id: usize) -> u64 {
+        self.arrivals.lock().expect("router arrivals poisoned")[slice_id]
+    }
+
+    /// Non-blocking peek of a parked slice's [`SliceMass`] score (`None`
+    /// while the handoff is in flight) — how a dynamic-ordered consumer
+    /// ranks its queue without taking anything.  Stable between the peek
+    /// and a take by the granted worker: depositing over an occupied slot
+    /// panics, so parked data cannot change under the poller.
+    pub fn peek_parked_mass(&self, slice_id: usize) -> Option<f64>
+    where
+        T: SliceMass,
+    {
+        self.queue
+            .with_slot(slice_id, |slot| slot.map(|(data, _)| data.mass()))
+    }
+
+    /// Current chain head (highest version deposited).
+    pub fn version(&self, slice_id: usize) -> u64 {
+        self.heads.lock().expect("router heads poisoned")[slice_id]
+    }
+
+    /// Cumulative seconds consumers spent *physically blocked* on this
+    /// router's data plane (parked on slot condvars in
+    /// [`SliceRouter::take_for`], or on the deposit epoch in the
+    /// reordered-take sweeps).  ~0 under the single-threaded sim driver,
+    /// which only ever takes parked slices; under `--backend threads` it
+    /// is the measured handoff contention surfaced as
+    /// `SspStats::router_block_secs`.
+    pub fn block_secs(&self) -> f64 {
+        self.queue.blocked_secs()
+    }
+}
+
+/// The consumer/producer surface: every method that moves payloads (and
+/// therefore may traverse the lossy link) requires `Clone` (the
+/// retransmit buffer retains the payload until the take-ack) and
+/// [`SliceChecksum`] (the envelope stamp verified at delivery).  With no
+/// link installed, every path below is byte-identical to the pre-link
+/// code.
+impl<T: Send + Clone + SliceChecksum> SliceRouter<T> {
+    /// Install the lossy-transport layer under this router's forwards (at
+    /// most once, before any faulted forward fires).  The idempotence
+    /// line `delivered_head` starts at the current chain heads, so
+    /// coordinator seeds count as already delivered.  `sink` receives the
+    /// transport trace events (`NetDrop`/`Retransmit`/`DupDiscard`/
+    /// `Redeliver`), all excluded from fingerprints.
+    pub fn install_link(&self, plan: NetFaultPlan, sink: Option<Arc<TraceBuffer>>) {
+        plan.validate().expect("invalid net fault plan");
+        let heads = self.heads.lock().expect("router heads poisoned");
+        let link = LossyLink {
+            plan,
+            entries: (0..self.n_slices()).map(|_| Mutex::new(None)).collect(),
+            delivered_head: heads.iter().map(|&h| AtomicU64::new(h)).collect(),
+            retransmits: AtomicU64::new(0),
+            dup_discards: AtomicU64::new(0),
+            drops: AtomicU64::new(0),
+            redelivers: AtomicU64::new(0),
+            retry_wait_nanos: AtomicU64::new(0),
+            sink,
+        };
+        drop(heads);
+        assert!(self.link.set(link).is_ok(), "lossy link already installed");
+    }
+
+    /// Whether a lossy-transport link is installed.
+    pub fn has_link(&self) -> bool {
+        self.link.get().is_some()
+    }
+
+    /// Snapshot of the link's cumulative counters (zeros with no link).
+    pub fn net_stats(&self) -> NetLinkStats {
+        match self.link.get() {
+            None => NetLinkStats::default(),
+            Some(l) => NetLinkStats {
+                retransmits: l.retransmits.load(Ordering::Relaxed),
+                dup_discards: l.dup_discards.load(Ordering::Relaxed),
+                drops: l.drops.load(Ordering::Relaxed),
+                redelivers: l.redelivers.load(Ordering::Relaxed),
+                retry_wait_secs: l.retry_wait_nanos.load(Ordering::Relaxed)
+                    as f64
+                    * 1e-9,
+            },
+        }
     }
 
     /// Worker-side receive: block until exactly `version` of the slice has
@@ -186,15 +433,36 @@ impl<T: Send> SliceRouter<T> {
         version: u64,
         timeout: Duration,
     ) -> Result<(T, u64), RouterError> {
-        match self.queue.take_for(slice_id, version, timeout) {
-            Some(got) => Ok(got),
-            None => Err(RouterError {
-                slice_id,
-                version,
-                chain_head: self.version(slice_id),
-                suspected_holder: None,
-                waited_ms: timeout.as_millis() as u64,
-            }),
+        let lost = || RouterError {
+            slice_id,
+            version,
+            chain_head: self.version(slice_id),
+            suspected_holder: None,
+            waited_ms: timeout.as_millis() as u64,
+        };
+        if self.link.get().is_none() {
+            return match self.queue.take_for(slice_id, version, timeout) {
+                Some(got) => Ok(got),
+                None => Err(lost()),
+            };
+        }
+        // link installed: the take loop doubles as the transport pump —
+        // short mailbox parks interleaved with redelivery attempts (there
+        // is no pump thread; receivers drive their own redelivery)
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.pump_slice(slice_id);
+            let now = Instant::now();
+            let chunk = PUMP_INTERVAL.min(deadline.saturating_duration_since(now));
+            if let Some((data, consumed)) =
+                self.queue.take_for(slice_id, version, chunk)
+            {
+                self.ack(slice_id, consumed);
+                return Ok((data, consumed));
+            }
+            if Instant::now() >= deadline {
+                return Err(lost());
+            }
         }
     }
 
@@ -206,14 +474,12 @@ impl<T: Send> SliceRouter<T> {
     /// queued slice landed first instead of stalling on a fixed ring
     /// order.
     pub fn try_take(&self, slice_id: usize, version: u64) -> Option<(T, u64)> {
-        self.queue.try_take(slice_id, version)
-    }
-
-    /// Version currently parked in the slice's slot (`None` while the
-    /// handoff is in flight) — the poll an availability-ordered consumer
-    /// uses to rank its queue before committing to a take.
-    pub fn parked_version(&self, slice_id: usize) -> Option<u64> {
-        self.queue.parked_version(slice_id)
+        self.pump_slice(slice_id);
+        let got = self.queue.try_take(slice_id, version);
+        if let Some((_, consumed)) = &got {
+            self.ack(slice_id, *consumed);
+        }
+        got
     }
 
     /// Availability-ordered take: block until **any** of the granted
@@ -275,6 +541,11 @@ impl<T: Send> SliceRouter<T> {
         );
         let deadline = std::time::Instant::now() + timeout;
         loop {
+            // drive any pending transport deliveries for the granted
+            // slices before scanning (no-op without a link)
+            for &(slice_id, _) in grants {
+                self.pump_slice(slice_id);
+            }
             // epoch snapshot BEFORE the scan: any deposit after this point
             // makes the park below return at once
             let seen = self.queue.epoch();
@@ -301,37 +572,15 @@ impl<T: Send> SliceRouter<T> {
                     waited_ms: timeout.as_millis() as u64,
                 });
             }
-            self.queue.wait_any_until(seen, deadline);
+            // with a link, cap each park at the pump interval so a due
+            // retransmit or delayed delivery never waits for a deposit
+            let park = if self.link.get().is_some() {
+                deadline.min(std::time::Instant::now() + PUMP_INTERVAL)
+            } else {
+                deadline
+            };
+            self.queue.wait_any_until(seen, park);
         }
-    }
-
-    /// Arrival stamp (global deposit sequence number) of the slice's most
-    /// recent deposit.  Consumers compare stamps across *parked* slices to
-    /// sweep earliest-landed-first; a stamp read while the slice is in
-    /// flight refers to the previous deposit and means nothing.
-    ///
-    /// Trace contract: a holder reading the stamp of the handoff it just
-    /// consumed must do so **before** its own [`SliceRouter::forward`],
-    /// which re-stamps the slot.  The read cannot race — the holder is
-    /// the slot's sole depositor until it forwards.  The stamp lands in
-    /// [`crate::trace::Event::Take`] as metadata only and is excluded
-    /// from fingerprints (it counts *global* deposits, so it is
-    /// timing-dependent across workers).
-    pub fn arrival_seq(&self, slice_id: usize) -> u64 {
-        self.arrivals.lock().expect("router arrivals poisoned")[slice_id]
-    }
-
-    /// Non-blocking peek of a parked slice's [`SliceMass`] score (`None`
-    /// while the handoff is in flight) — how a dynamic-ordered consumer
-    /// ranks its queue without taking anything.  Stable between the peek
-    /// and a take by the granted worker: depositing over an occupied slot
-    /// panics, so parked data cannot change under the poller.
-    pub fn peek_parked_mass(&self, slice_id: usize) -> Option<f64>
-    where
-        T: SliceMass,
-    {
-        self.queue
-            .with_slot(slice_id, |slot| slot.map(|(data, _)| data.mass()))
     }
 
     /// Dynamic-ordered take: block until **any** of the granted
@@ -402,18 +651,45 @@ impl<T: Send> SliceRouter<T> {
             );
             heads[slice_id] = version;
         }
-        self.stamp_arrival(slice_id);
-        self.queue.deposit(slice_id, data, version);
-    }
-
-    /// Current chain head (highest version deposited).
-    pub fn version(&self, slice_id: usize) -> u64 {
-        self.heads.lock().expect("router heads poisoned")[slice_id]
+        let Some(link) = self.link.get() else {
+            self.stamp_arrival(slice_id);
+            self.queue.deposit(slice_id, data, version);
+            return;
+        };
+        // envelope path: checksum + version stamp into the retransmit
+        // buffer, then drive the first delivery attempt immediately — a
+        // fault-free decision delivers synchronously, so an armed but
+        // all-zero plan behaves exactly like the direct path
+        let checksum = data.checksum64();
+        let now = Instant::now();
+        {
+            let mut entry =
+                link.entries[slice_id].lock().expect("lossy link poisoned");
+            assert!(
+                entry.is_none(),
+                "slice {slice_id} already has an un-acked envelope in flight"
+            );
+            *entry = Some(LinkEntry {
+                payload: data,
+                version,
+                checksum,
+                attempts: 0,
+                delivered: false,
+                next_retry: now,
+                deliver_at: None,
+                dup_pending: link.plan.duplicates(slice_id, version),
+                last_drop_at: now,
+            });
+        }
+        self.pump_slice(slice_id);
     }
 
     /// Non-blocking removal of whatever the slot holds (pipeline
-    /// teardown).  Panics if the slice is still in flight.
+    /// teardown).  Flushes the slice's pending transport delivery first —
+    /// the final forward of a run has no taker to pump it home.  Panics
+    /// if the slice is still in flight.
     pub fn reclaim(&self, slice_id: usize) -> (T, u64) {
+        self.flush_slice(slice_id);
         self.queue
             .reclaim(slice_id)
             .unwrap_or_else(|| panic!("slice {slice_id} still in flight at teardown"))
@@ -421,19 +697,167 @@ impl<T: Send> SliceRouter<T> {
 
     /// Inspect a parked slice without consuming it (eval-time reads; the
     /// engine drains the pipeline first, so `None` means a protocol bug).
+    /// Flushes the slice's pending transport delivery first, so an eval
+    /// read sees the chain head regardless of injected faults.
     pub fn with_slice<R>(&self, slice_id: usize, f: impl FnOnce(Option<&T>) -> R) -> R {
+        self.flush_slice(slice_id);
         self.queue.with_slot(slice_id, |slot| f(slot.map(|(data, _)| data)))
     }
 
-    /// Cumulative seconds consumers spent *physically blocked* on this
-    /// router's data plane (parked on slot condvars in
-    /// [`SliceRouter::take_for`], or on the deposit epoch in the
-    /// reordered-take sweeps).  ~0 under the single-threaded sim driver,
-    /// which only ever takes parked slices; under `--backend threads` it
-    /// is the measured handoff contention surfaced as
-    /// `SspStats::router_block_secs`.
-    pub fn block_secs(&self) -> f64 {
-        self.queue.blocked_secs()
+    /// Drive one slice's transport state machine: fire a due delivery
+    /// attempt (applying the fault plan's drop/delay decisions), land a
+    /// due delayed delivery, and resolve a pending duplicate.  No-op
+    /// without a link or with no envelope in flight.
+    fn pump_slice(&self, slice_id: usize) {
+        let Some(link) = self.link.get() else { return };
+        let mut guard =
+            link.entries[slice_id].lock().expect("lossy link poisoned");
+        let Some(entry) = guard.as_mut() else { return };
+        let now = Instant::now();
+        if let Some(at) = entry.deliver_at {
+            // a delayed attempt in flight: it lands once its hold expires
+            if !entry.delivered && now >= at {
+                entry.deliver_at = None;
+                self.deliver_copy(link, slice_id, entry, false);
+            }
+        } else if !entry.delivered && now >= entry.next_retry {
+            entry.attempts += 1;
+            if entry.attempts > 1 {
+                link.retransmits.fetch_add(1, Ordering::Relaxed);
+                link.retry_wait_nanos.fetch_add(
+                    now.duration_since(entry.last_drop_at).as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
+                link.trace(Event::Retransmit {
+                    slice: slice_id,
+                    version: entry.version,
+                    attempt: entry.attempts,
+                });
+            }
+            if link.plan.drops(slice_id, entry.version, entry.attempts) {
+                link.drops.fetch_add(1, Ordering::Relaxed);
+                link.trace(Event::NetDrop {
+                    slice: slice_id,
+                    version: entry.version,
+                    attempt: entry.attempts,
+                });
+                entry.last_drop_at = now;
+                entry.next_retry = now
+                    + link.plan.backoff(slice_id, entry.version, entry.attempts);
+                if entry.dup_pending {
+                    // the duplicated copy is an independent transmission:
+                    // it masks the dropped primary by landing anyway
+                    entry.dup_pending = false;
+                    self.deliver_copy(link, slice_id, entry, false);
+                }
+            } else if link.plan.delayed(slice_id, entry.version, entry.attempts) {
+                entry.deliver_at =
+                    Some(now + link.plan.delay_hold(slice_id, entry.version));
+            } else {
+                self.deliver_copy(link, slice_id, entry, false);
+            }
+        }
+        if entry.dup_pending && entry.delivered {
+            // duplicate of an already-delivered version: idempotent discard
+            entry.dup_pending = false;
+            link.dup_discards.fetch_add(1, Ordering::Relaxed);
+            link.trace(Event::DupDiscard {
+                slice: slice_id,
+                version: entry.version,
+            });
+        }
+    }
+
+    /// Clone the retained payload into the receive mailbox — the actual
+    /// "wire delivery".  Verifies the envelope checksum, dedups against
+    /// the delivered head (idempotent receive), and stamps the arrival.
+    fn deliver_copy(
+        &self,
+        link: &LossyLink<T>,
+        slice_id: usize,
+        entry: &mut LinkEntry<T>,
+        redelivery: bool,
+    ) {
+        let head = link.delivered_head[slice_id].load(Ordering::Relaxed);
+        if entry.version <= head {
+            link.dup_discards.fetch_add(1, Ordering::Relaxed);
+            link.trace(Event::DupDiscard {
+                slice: slice_id,
+                version: entry.version,
+            });
+            entry.delivered = true;
+            return;
+        }
+        let payload = entry.payload.clone();
+        assert!(
+            payload.checksum64() == entry.checksum,
+            "slice {slice_id} v{} failed its transport checksum",
+            entry.version
+        );
+        link.delivered_head[slice_id].store(entry.version, Ordering::Relaxed);
+        if redelivery {
+            link.redelivers.fetch_add(1, Ordering::Relaxed);
+            link.trace(Event::Redeliver {
+                slice: slice_id,
+                version: entry.version,
+            });
+        }
+        self.stamp_arrival(slice_id);
+        self.queue.deposit(slice_id, payload, entry.version);
+        entry.delivered = true;
+    }
+
+    /// Take-side acknowledgement: the consumer physically received
+    /// `version`, so the sender's retained envelope is released.  A
+    /// still-pending duplicate of the acked version is discarded here,
+    /// keeping the dup counter deterministic (every injected dup is
+    /// either delivered once, masking a drop, or discarded once).
+    fn ack(&self, slice_id: usize, version: u64) {
+        let Some(link) = self.link.get() else { return };
+        let mut guard =
+            link.entries[slice_id].lock().expect("lossy link poisoned");
+        if let Some(entry) = guard.as_ref() {
+            if entry.version == version {
+                if entry.dup_pending {
+                    link.dup_discards.fetch_add(1, Ordering::Relaxed);
+                    link.trace(Event::DupDiscard { slice: slice_id, version });
+                }
+                *guard = None;
+            }
+        }
+    }
+
+    /// Force-deliver one slice's pending envelope, bypassing the fault
+    /// plan's remaining decisions (recovery, teardown, and eval reads
+    /// must see the chain head regardless of injected faults).  Traced as
+    /// [`Event::Redeliver`] when a payload actually lands.
+    fn flush_slice(&self, slice_id: usize) {
+        let Some(link) = self.link.get() else { return };
+        let mut guard =
+            link.entries[slice_id].lock().expect("lossy link poisoned");
+        if let Some(entry) = guard.as_mut() {
+            if !entry.delivered {
+                entry.deliver_at = None;
+                self.deliver_copy(link, slice_id, entry, true);
+            }
+            if entry.dup_pending {
+                entry.dup_pending = false;
+                link.dup_discards.fetch_add(1, Ordering::Relaxed);
+                link.trace(Event::DupDiscard {
+                    slice: slice_id,
+                    version: entry.version,
+                });
+            }
+        }
+    }
+
+    /// [`Self::flush_slice`] over every slice — the recovery boundary's
+    /// "make the data plane quiescent" step.  Idempotent; no-op without a
+    /// link.
+    pub fn flush_all(&self) {
+        for a in 0..self.n_slices() {
+            self.flush_slice(a);
+        }
     }
 }
 
@@ -915,6 +1339,229 @@ mod tests {
         assert!(msg.contains("zombie write rejected"), "{msg}");
         // untouched slices keep a zero fence
         assert_eq!(l.fence(1), 0);
+    }
+
+    #[test]
+    fn checksums_are_content_stable_and_content_sensitive() {
+        assert_eq!(vec![1u32, 2, 3].checksum64(), vec![1u32, 2, 3].checksum64());
+        assert_ne!(vec![1u32, 2, 3].checksum64(), vec![1u32, 3, 2].checksum64());
+        assert_ne!(vec![1u32, 2].checksum64(), vec![1u32, 2, 0].checksum64());
+        assert_eq!(vec![1.5f32].checksum64(), vec![1.5f32].checksum64());
+        assert_ne!(vec![1.5f32].checksum64(), vec![-1.5f32].checksum64());
+        assert_ne!(3u8.checksum64(), 4u8.checksum64());
+    }
+
+    #[test]
+    fn zero_rate_link_is_pass_through() {
+        // an armed but all-zero plan must behave exactly like no link:
+        // synchronous delivery at forward time, zero counters
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(2);
+        r.seed(0, vec![1, 2], 0);
+        r.install_link(NetFaultPlan::default(), None);
+        assert!(r.has_link());
+        let (d, v) = r.take(0, 0).expect("seeded");
+        r.forward(0, d, v + 1);
+        assert_eq!(r.parked_version(0), Some(1), "delivered synchronously");
+        let (d, v) = r.take(0, 1).expect("forwarded through the link");
+        assert_eq!((d, v), (vec![1, 2], 1));
+        assert_eq!(r.net_stats(), NetLinkStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "already installed")]
+    fn installing_a_second_link_panics() {
+        let r: SliceRouter<u8> = SliceRouter::new(1);
+        r.install_link(NetFaultPlan::default(), None);
+        r.install_link(NetFaultPlan::default(), None);
+    }
+
+    #[test]
+    fn dropped_forwards_retransmit_until_delivered() {
+        // drop 60% of attempts: the ack/retry protocol must still land
+        // every forward, metering the drops and retransmits it masked
+        let plan = NetFaultPlan {
+            drop_rate: 0.6,
+            seed: 11,
+            ..NetFaultPlan::default()
+        };
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(1);
+        r.seed(0, vec![7], 0);
+        r.install_link(plan, None);
+        let mut payload = vec![7];
+        for v in 0..8u64 {
+            let (d, consumed) = r
+                .take_for(0, v, Duration::from_secs(20))
+                .expect("redelivery must mask every drop");
+            assert_eq!(d, payload);
+            assert_eq!(consumed, v);
+            payload.push(v as u32);
+            r.forward(0, payload.clone(), v + 1);
+        }
+        let stats = r.net_stats();
+        assert!(stats.drops > 0, "60% drop rate over 8 forwards: {stats:?}");
+        assert_eq!(
+            stats.retransmits, stats.drops,
+            "every drop costs exactly one retransmit: {stats:?}"
+        );
+        assert!(stats.retry_wait_secs > 0.0, "backoff waits are metered");
+        assert_eq!(stats.redelivers, 0, "no recovery flush ran");
+    }
+
+    #[test]
+    fn wedged_link_errors_typed_and_flush_redelivers() {
+        // drop_rate 1.0 is a deterministic wedge: the take times out with
+        // the usual typed error, and a recovery flush force-delivers the
+        // retained payload so the run can continue
+        let plan =
+            NetFaultPlan { drop_rate: 1.0, seed: 3, ..NetFaultPlan::default() };
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(1);
+        r.seed(0, vec![5], 0);
+        r.install_link(plan, None);
+        let (d, _) = r.take(0, 0).expect("seeds bypass the link");
+        r.forward(0, d, 1);
+        let err = r
+            .take_for(0, 1, Duration::from_millis(60))
+            .expect_err("every delivery attempt drops");
+        assert_eq!((err.slice_id, err.version), (0, 1));
+        assert_eq!(err.chain_head, 1, "forwarded but never delivered");
+        assert!(r.net_stats().drops >= 1);
+        r.flush_all();
+        assert_eq!(r.parked_version(0), Some(1), "flush force-delivered");
+        assert_eq!(r.net_stats().redelivers, 1);
+        let (d, v) = r.take(0, 1).expect("redelivered payload is takeable");
+        assert_eq!((d, v), (vec![5], 1));
+        // the take acked the envelope: the next forward finds it clear
+        r.forward(0, d, 2);
+    }
+
+    #[test]
+    fn duplicates_are_discarded_idempotently() {
+        // dup 100%, no drops: every forward spawns a duplicate copy that
+        // must be discarded exactly once, never deposited twice
+        let plan =
+            NetFaultPlan { dup_rate: 1.0, seed: 9, ..NetFaultPlan::default() };
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(1);
+        r.seed(0, vec![1], 0);
+        r.install_link(plan, None);
+        let (mut d, _) = r.take(0, 0).expect("seeded");
+        for v in 1..=4u64 {
+            r.forward(0, d, v);
+            let got = r.take_for(0, v, Duration::from_secs(5)).expect("delivered");
+            d = got.0;
+        }
+        let stats = r.net_stats();
+        assert_eq!(stats.dup_discards, 4, "one discard per duplicated forward");
+        assert_eq!(stats.drops, 0);
+        assert_eq!(stats.retransmits, 0);
+    }
+
+    #[test]
+    fn a_duplicate_masks_a_dropped_primary() {
+        // drop 100% + dup 100%: the primary always drops, but the
+        // duplicated copy is an independent transmission and lands — no
+        // retransmit, no flush, the take succeeds immediately
+        let plan = NetFaultPlan {
+            drop_rate: 1.0,
+            dup_rate: 1.0,
+            seed: 5,
+            ..NetFaultPlan::default()
+        };
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(1);
+        r.seed(0, vec![2], 0);
+        r.install_link(plan, None);
+        let (d, _) = r.take(0, 0).expect("seeded");
+        r.forward(0, d, 1);
+        let (d, v) = r
+            .take_for(0, 1, Duration::from_secs(5))
+            .expect("the duplicate masks the dropped primary");
+        assert_eq!((d, v), (vec![2], 1));
+        let stats = r.net_stats();
+        assert_eq!(stats.drops, 1, "the primary dropped");
+        assert_eq!(stats.dup_discards, 0, "the duplicate was consumed, not discarded");
+        assert_eq!(stats.redelivers, 0, "no flush was needed");
+    }
+
+    #[test]
+    fn delayed_delivery_holds_then_lands() {
+        // delay 100%: the forward is withheld (parked_version stays None —
+        // exactly the unavailability signal SkipPolicy::Defer keys off)
+        // until the hold expires, then a pumped take receives it
+        let plan = NetFaultPlan {
+            delay_rate: 1.0,
+            seed: 13,
+            ..NetFaultPlan::default()
+        };
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(1);
+        r.seed(0, vec![9], 0);
+        r.install_link(plan, None);
+        let (d, _) = r.take(0, 0).expect("seeded");
+        r.forward(0, d, 1);
+        assert_eq!(
+            r.parked_version(0),
+            None,
+            "a delayed delivery is genuinely unavailable"
+        );
+        let (d, v) = r
+            .take_for(0, 1, Duration::from_secs(5))
+            .expect("the hold expires within a few ms");
+        assert_eq!((d, v), (vec![9], 1));
+    }
+
+    #[test]
+    fn reordered_takes_pump_the_link_home() {
+        // the availability-ordered sweep must drive redelivery itself:
+        // drop the first attempts of both grants and let take_earliest's
+        // pump retransmit them until they land
+        let plan = NetFaultPlan {
+            drop_rate: 0.5,
+            delay_rate: 0.3,
+            seed: 21,
+            ..NetFaultPlan::default()
+        };
+        let r: SliceRouter<Vec<u32>> = SliceRouter::new(2);
+        r.seed(0, vec![1], 0);
+        r.seed(1, vec![2, 2], 0);
+        r.install_link(plan, None);
+        let (d0, _) = r.take(0, 0).expect("seeded");
+        let (d1, _) = r.take(1, 0).expect("seeded");
+        r.forward(0, d0, 1);
+        r.forward(1, d1, 1);
+        let grants = [(0usize, 1u64), (1, 1)];
+        let (i, _, _) = r
+            .take_earliest(&grants, Duration::from_secs(20))
+            .expect("sweep pumps deliveries home");
+        let rest = [grants[1 - i]];
+        let (_, _, v) = r
+            .take_heaviest(&rest, Duration::from_secs(20))
+            .expect("second grant lands too");
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn double_settle_after_recovery_is_fenced_and_head_unchanged() {
+        // Satellite: a duplicated (redelivered ack) or zombie settle
+        // arriving after recover_all must hit the StaleLease fence and
+        // leave the chain head exactly where it was — idempotently.
+        let mut l = LeaseLedger::new(2);
+        let t0 = LeaseToken { slice_id: 0, version: l.grant(0) };
+        l.settle(&t0).unwrap();
+        // v1 is in flight when the fault hits
+        let t1 = LeaseToken { slice_id: 0, version: l.grant(0) };
+        assert_eq!(l.recover_all(), 1, "one slice had an orphaned lease");
+        // the survivor's re-granted lease settles normally
+        let r1 = LeaseToken { slice_id: 0, version: l.grant(0) };
+        assert_eq!(r1.version, t1.version);
+        l.settle(&r1).expect("re-granted lease settles");
+        let head = l.settled_head(0);
+        // the zombie's duplicate settle of the same version is fenced...
+        let err = l.settle(&t1).expect_err("duplicate settle is fenced");
+        assert_eq!(err.slice_id, 0);
+        assert_eq!(err.version, t1.version);
+        assert_eq!(l.settled_head(0), head, "fenced settle moved the head");
+        // ...and idempotently so: replaying the duplicate changes nothing
+        let err2 = l.settle(&t1).expect_err("still fenced");
+        assert_eq!(err, err2);
+        assert_eq!(l.settled_head(0), head);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! parsing.)
 
 use std::sync::Arc;
-use strads::cluster::NetworkConfig;
+use strads::cluster::{NetFaultPlan, NetworkConfig};
 use strads::coordinator::{
     BackendKind, ExecutionMode, QueueOrder, RunConfig, RunResult, SkipPolicy,
     Trace, TraceMode,
@@ -77,6 +77,16 @@ USAGE:
       --checkpoint-every N   snapshot the full run state every N rounds
                           (bit-exact resume; bounds loss to <= depth +
                           N rounds; requires --skip-policy never)
+      lda/mf (rotation) lossy-transport injection (the ack/retry
+                          redelivery protocol masks every fault; the run's
+                          math stays bit-identical to a clean run):
+      --drop-rate P   P(a slice forward's transmission attempt is dropped;
+                          the sender retransmits with capped backoff)
+      --dup-rate P    P(a forward is duplicated; the receiver discards the
+                          copy idempotently by version + checksum)
+      --delay-rate P  P(a delivery is held back a seeded sub-sweep delay)
+      --net-fault-seed S   seed for the fault decision streams
+                          (default: --seed)
 
   strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
       regenerate a paper figure's rows/series (scaled-down by default)
@@ -150,6 +160,15 @@ fn cmd_train(args: &Args) {
             b = b.join_worker(r);
         }
         b = b.checkpoint_every(args.parse_or("checkpoint-every", 0u64));
+        let net_plan = NetFaultPlan {
+            drop_rate: args.parse_or("drop-rate", 0.0f64),
+            dup_rate: args.parse_or("dup-rate", 0.0f64),
+            delay_rate: args.parse_or("delay-rate", 0.0f64),
+            seed: args.parse_or("net-fault-seed", seed),
+        };
+        if !net_plan.is_empty() {
+            b = b.net_faults(net_plan);
+        }
         b.build().unwrap_or_else(|e| {
             eprintln!("invalid run configuration: {e}");
             std::process::exit(2);
@@ -216,6 +235,7 @@ fn cmd_train(args: &Args) {
                     res.total_p2p_msgs,
                     res.total_handoff_wait_secs
                 );
+                fault_report(&res);
                 trace_report(&res, trace_out.as_deref(), replay_src_fp);
                 return;
             }
@@ -357,6 +377,13 @@ fn fault_report(res: &RunResult) {
             "recoveries {}: {} rounds of window progress re-driven, \
              checkpoint overhead {:.3}s",
             res.recoveries, res.rounds_lost, res.checkpoint_secs
+        );
+    }
+    if res.retransmits > 0 || res.dup_discards > 0 {
+        println!(
+            "lossy transport masked: {} retransmits, {} duplicate \
+             discards, {:.3}s retry wait",
+            res.retransmits, res.dup_discards, res.retry_wait_secs
         );
     }
     if let Some(why) = &res.aborted {

@@ -46,6 +46,16 @@ pub struct SspStats {
     /// Wall seconds spent serializing KV checkpoints (coordinator +
     /// worker snapshots; 0.0 when `--checkpoint-every` is off).
     pub checkpoint_secs: f64,
+    /// Slice forwards the lossy-transport layer retransmitted after a
+    /// dropped delivery attempt (0 with no `NetFaultPlan` armed).
+    pub retransmits: u64,
+    /// Duplicate deliveries the receive side discarded idempotently
+    /// (injected dups plus redeliveries of already-delivered versions).
+    pub dup_discards: u64,
+    /// Wall seconds deliveries spent parked in retransmit backoff before
+    /// the payload finally landed (the latency the redelivery protocol
+    /// paid to mask drops).
+    pub retry_wait_secs: f64,
 }
 
 impl SspStats {
@@ -132,6 +142,9 @@ mod tests {
         assert_eq!(s.recoveries, 0);
         assert_eq!(s.rounds_lost, 0);
         assert_eq!(s.checkpoint_secs, 0.0);
+        assert_eq!(s.retransmits, 0);
+        assert_eq!(s.dup_discards, 0);
+        assert_eq!(s.retry_wait_secs, 0.0);
     }
 
     #[test]

@@ -94,6 +94,22 @@ pub enum Event {
     /// fingerprint so a checkpointed run stays bit-identical to the same
     /// run without checkpoints.
     Checkpoint { round: u64, bytes: usize },
+    /// The lossy-transport layer dropped delivery attempt `attempt` of
+    /// `slice`'s version-`version` forward (fault injection).  Transport
+    /// events carry no round (the data plane does not know the schedule)
+    /// and are excluded from fingerprints: the redelivery protocol masks
+    /// them, so the *post-masking* event stream — what replay and
+    /// fingerprints see — is identical to a clean run's.
+    NetDrop { slice: usize, version: u64, attempt: u64 },
+    /// The sender retransmitted `slice` at version `version` (delivery
+    /// attempt `attempt`) after an earlier attempt was dropped.
+    Retransmit { slice: usize, version: u64, attempt: u64 },
+    /// The receiver discarded a duplicate delivery of `slice` at version
+    /// `version` (already delivered — idempotent receive).
+    DupDiscard { slice: usize, version: u64 },
+    /// A recovery flush force-delivered the retained payload of `slice`
+    /// at version `version` (bypassing pending fault decisions).
+    Redeliver { slice: usize, version: u64 },
 }
 
 impl Event {
@@ -112,6 +128,11 @@ impl Event {
             | Event::Join { round, .. }
             | Event::Recover { round, .. }
             | Event::Checkpoint { round, .. } => round,
+            // transport events happen below the schedule: no round
+            Event::NetDrop { .. }
+            | Event::Retransmit { .. }
+            | Event::DupDiscard { .. }
+            | Event::Redeliver { .. } => 0,
         }
     }
 }
@@ -197,7 +218,15 @@ pub fn event_hash(e: &Event) -> Option<u64> {
         // Checkpoint is bookkeeping, not schedule identity: excluding it
         // keeps a checkpointed run's fingerprint bit-identical to the same
         // run without checkpoints (locked by tests/checkpoint_roundtrip.rs).
-        Event::Resolve { .. } | Event::Checkpoint { .. } => return None,
+        // Transport faults are likewise excluded: the redelivery protocol
+        // masks them, so a faulted run whose faults were all absorbed
+        // fingerprints identically to the clean run (tests/net_chaos.rs).
+        Event::Resolve { .. }
+        | Event::Checkpoint { .. }
+        | Event::NetDrop { .. }
+        | Event::Retransmit { .. }
+        | Event::DupDiscard { .. }
+        | Event::Redeliver { .. } => return None,
     }
     Some(h)
 }
@@ -454,6 +483,18 @@ impl Trace {
                 Event::Checkpoint { round, bytes } => {
                     out.push_str(&format!("ckpt {round} {bytes}\n"));
                 }
+                Event::NetDrop { slice, version, attempt } => {
+                    out.push_str(&format!("netdrop {slice} {version} {attempt}\n"));
+                }
+                Event::Retransmit { slice, version, attempt } => {
+                    out.push_str(&format!("retx {slice} {version} {attempt}\n"));
+                }
+                Event::DupDiscard { slice, version } => {
+                    out.push_str(&format!("dupdiscard {slice} {version}\n"));
+                }
+                Event::Redeliver { slice, version } => {
+                    out.push_str(&format!("redeliver {slice} {version}\n"));
+                }
             }
         }
         out
@@ -561,6 +602,24 @@ impl Trace {
                 "ckpt" => Event::Checkpoint {
                     round: dec("round")?,
                     bytes: dec("bytes")? as usize,
+                },
+                "netdrop" => Event::NetDrop {
+                    slice: dec("slice")? as usize,
+                    version: dec("version")?,
+                    attempt: dec("attempt")?,
+                },
+                "retx" => Event::Retransmit {
+                    slice: dec("slice")? as usize,
+                    version: dec("version")?,
+                    attempt: dec("attempt")?,
+                },
+                "dupdiscard" => Event::DupDiscard {
+                    slice: dec("slice")? as usize,
+                    version: dec("version")?,
+                },
+                "redeliver" => Event::Redeliver {
+                    slice: dec("slice")? as usize,
+                    version: dec("version")?,
                 },
                 other => {
                     return Err(format!("line {}: unknown tag {other:?}", i + 2))
@@ -725,6 +784,10 @@ mod tests {
             Event::Recover { round: 2, worker: 1, moved: 3 },
             Event::Join { round: 3, worker: 1 },
             Event::Checkpoint { round: 3, bytes: 4096 },
+            Event::NetDrop { slice: 2, version: 5, attempt: 1 },
+            Event::Retransmit { slice: 2, version: 5, attempt: 2 },
+            Event::DupDiscard { slice: 3, version: 4 },
+            Event::Redeliver { slice: 1, version: 7 },
         ]
     }
 
@@ -848,6 +911,26 @@ mod tests {
             event_hash(&Event::Recover { round: 0, worker: 1, moved: 2 }),
             event_hash(&Event::Recover { round: 0, worker: 1, moved: 3 }),
         );
+    }
+
+    #[test]
+    fn transport_events_are_excluded_from_the_fingerprint() {
+        // the redelivery protocol masks transport faults, so a faulted
+        // run whose drops/dups were all absorbed must fingerprint
+        // identically to the clean run — net events hash to None
+        let base = vec![Event::Settle { round: 0, slice: 1, version: 0 }];
+        for e in [
+            Event::NetDrop { slice: 1, version: 2, attempt: 1 },
+            Event::Retransmit { slice: 1, version: 2, attempt: 2 },
+            Event::DupDiscard { slice: 1, version: 2 },
+            Event::Redeliver { slice: 1, version: 2 },
+        ] {
+            assert_eq!(event_hash(&e), None, "{e:?}");
+            assert_eq!(e.round(), 0, "transport events carry no round");
+            let mut faulted = base.clone();
+            faulted.push(e);
+            assert_eq!(fingerprint(&faulted), fingerprint(&base), "{e:?}");
+        }
     }
 
     #[test]

@@ -86,12 +86,24 @@ fn strict_resume_is_bit_exact_across_depths() {
 }
 
 /// Reordered arms (Availability, Dynamic) at depth 2: resume is
-/// invariant-sound — it completes every remaining round without abort
-/// and lands on a finite objective — but within-queue service order is
-/// a live timing signal, so suffix bit-equality is not part of the
-/// contract and not asserted here.
+/// invariant-sound — it completes every remaining round without abort,
+/// conserves token mass, and lands in the clean run's objective
+/// neighbourhood.
+///
+/// Bit-exactness is deliberately NOT part of this contract: under a
+/// reordered queue the within-round service order is a *live* timing
+/// signal (which parked slice a worker sweeps first depends on arrival
+/// order, and arrivals after a restore replay from a different pipeline
+/// fill state), so the resumed suffix may interleave leg updates
+/// differently from the uninterrupted run.  Every interleaving is a
+/// valid serialization of the same round's updates — the model state
+/// they produce differs only by floating-point summation order — so the
+/// checks here are the order-independent ones: conservation, full
+/// completion, and objective agreement to a tolerance rather than to
+/// the bit.  (`strict_resume_is_bit_exact_across_depths` pins the
+/// bit-exact half of the contract where the schedule is closed.)
 #[test]
-fn reordered_resume_completes() {
+fn reordered_resume_conserves_and_reaches_clean_objective() {
     for order in [QueueOrder::Availability, QueueOrder::Dynamic] {
         let seed = 61;
         let corpus = figure_corpus(300, 50, seed);
@@ -107,6 +119,7 @@ fn reordered_resume_completes() {
 
         let mut resumed_engine =
             lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let total0: f32 = resumed_engine.app().s.iter().sum();
         let resumed = resumed_engine.resume(&cfg, ckpt);
 
         assert!(resumed.aborted.is_none(), "{order:?}: resume aborted");
@@ -114,6 +127,44 @@ fn reordered_resume_completes() {
         assert!(
             resumed.final_objective.is_finite(),
             "{order:?}: resumed objective must be finite"
+        );
+        // conservation: restoring + resuming must neither mint nor lose
+        // token mass, and must land on the same total the clean run kept
+        let total1: f32 = resumed_engine.app().s.iter().sum();
+        assert!(
+            (total0 - total1).abs() < 1e-2,
+            "{order:?}: token mass drifted across resume: \
+             {total0} -> {total1}"
+        );
+        let full_total: f32 = full_engine.app().s.iter().sum();
+        assert!(
+            (full_total - total1).abs() < 1e-2,
+            "{order:?}: resumed mass {total1} diverged from the clean \
+             run's {full_total}"
+        );
+        // the resumed run must keep learning past the checkpoint and
+        // land in the clean run's objective neighbourhood (same data,
+        // same rounds; only summation order differs)
+        let at_ckpt = full
+            .recorder
+            .points()
+            .iter()
+            .find(|p| p.round == ckpt.round)
+            .expect("eval_every aligns an eval with the checkpoint round")
+            .objective;
+        assert!(
+            resumed.final_objective > at_ckpt,
+            "{order:?}: resume stopped learning: checkpoint-round \
+             objective {at_ckpt} -> {}",
+            resumed.final_objective
+        );
+        let band = 0.01 * full.final_objective.abs().max(1.0);
+        assert!(
+            (resumed.final_objective - full.final_objective).abs() <= band,
+            "{order:?}: resumed objective {} strayed outside the clean \
+             run's neighbourhood {} ± {band}",
+            resumed.final_objective,
+            full.final_objective
         );
     }
 }

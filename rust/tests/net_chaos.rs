@@ -1,0 +1,361 @@
+//! Lossy-transport chaos soak: seeded drop/duplicate/delay fault plans on
+//! the slice ring must be fully **masked** by the ack/retry redelivery
+//! protocol — every run completes without abort, conserves token mass,
+//! and keeps learning, across the full {order} × {skip} mode matrix under
+//! both execution backends.  When no take-deadline recovery fired and the
+//! discipline is Strict/Never, the masked run must be **bit-identical**
+//! to a clean run: same trace fingerprint (net events are excluded from
+//! the hash), same final-objective bits.
+//!
+//! Also pins the liveness edge (a 100% drop plan wedges every forward
+//! until the take deadline drives a mid-round recovery — the run
+//! finishes, it does not abort) and the inertness contract (a default
+//! all-zero plan with the fault layer compiled in is fingerprint-
+//! identical to a plan-free run).
+//!
+//! The randomized soak is seeded via `STRADS_PROP_SEED` (see
+//! `src/testing`): a CI failure prints the failing seed, and re-running
+//! with that seed reproduces the fault schedule exactly.
+
+use strads::cluster::NetFaultPlan;
+use strads::coordinator::{
+    BackendKind, ExecutionMode, QueueOrder, RunConfig, SkipPolicy, TraceMode,
+};
+use strads::figures::common::{
+    figure_corpus, lda_engine_sliced, mf_block_engine,
+};
+use strads::testing::rotation::mode_matrix;
+use strads::testing::{ensure, prop_check, Prop};
+
+const ROUNDS: u64 = 12;
+const DEPTH: u64 = 2;
+
+/// Shorten the per-leg take deadline for this whole binary.
+/// `STRADS_ROUTER_SPIN_MS` is parsed once process-wide, so every test
+/// here calls this first: the wedge test *relies* on deadline-driven
+/// mid-round recovery, and 500 ms keeps it fast.  The masked soaks stay
+/// recovery-free at this deadline — a take would need ~19 consecutive
+/// seeded drops (capped ~32 ms backoff each) to trip it, p < 1e-11 at
+/// the rates used here.
+fn fast_take_deadline() {
+    std::env::set_var("STRADS_ROUTER_SPIN_MS", "500");
+}
+
+/// The mixed fault cocktail the deterministic sweeps inject: heavy enough
+/// that every fault kind actually fires over 12 rounds, light enough that
+/// the redelivery protocol masks it without a recovery.
+fn mixed_plan(seed: u64) -> NetFaultPlan {
+    NetFaultPlan {
+        drop_rate: 0.15,
+        dup_rate: 0.05,
+        delay_rate: 0.15,
+        seed,
+    }
+}
+
+fn base_builder(
+    backend: BackendKind,
+    order: QueueOrder,
+    skip: SkipPolicy,
+    depth: u64,
+    rounds: u64,
+    label: &str,
+) -> strads::coordinator::RunConfigBuilder {
+    RunConfig::builder()
+        .max_rounds(rounds)
+        .eval_every(4)
+        .mode(ExecutionMode::Rotation { depth })
+        .queue_order(order)
+        .skip_policy(skip)
+        .backend(backend)
+        .trace(TraceMode::Record)
+        .label(label)
+}
+
+/// Every {order} × {skip} combination under both backends, soaked with
+/// the mixed drop/dup/delay plan: no abort, every round runs, token mass
+/// is conserved, the objective improves — and across the sweep the link
+/// actually exercised retransmission and duplicate discard (a soak that
+/// injected nothing would pass vacuously).
+#[test]
+fn masked_mode_matrix_soak_completes_and_conserves() {
+    fast_take_deadline();
+    let seed = 101;
+    let corpus = figure_corpus(300, 50, seed);
+    let mut total_retransmits = 0u64;
+    let mut total_dup_discards = 0u64;
+    for backend in [BackendKind::Sim, BackendKind::Threads] {
+        for (order, skip) in mode_matrix(2) {
+            let label = format!("net-soak-{backend:?}-{order:?}-{skip:?}");
+            let cfg = base_builder(backend, order, skip, DEPTH, ROUNDS, &label)
+                .net_faults(mixed_plan(seed))
+                .build()
+                .expect("valid lossy config");
+            let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+            let total0: f32 = e.app().s.iter().sum();
+            let res = e.run(&cfg);
+            assert!(
+                res.aborted.is_none(),
+                "{label}: masked faults must not abort: {:?}",
+                res.aborted
+            );
+            assert_eq!(res.rounds_run, ROUNDS, "{label}: all rounds run");
+            let pts = res.recorder.points();
+            assert!(
+                pts.last().unwrap().objective > pts.first().unwrap().objective,
+                "{label}: log-likelihood must improve through the faults"
+            );
+            let total1: f32 = e.app().s.iter().sum();
+            assert!(
+                (total0 - total1).abs() < 1e-2,
+                "{label}: token mass drifted under lossy transport: \
+                 {total0} -> {total1}"
+            );
+            total_retransmits += res.retransmits;
+            total_dup_discards += res.dup_discards;
+        }
+    }
+    assert!(
+        total_retransmits > 0,
+        "a 15% drop plan must force at least one retransmit in the sweep"
+    );
+    assert!(
+        total_dup_discards > 0,
+        "a 5% dup plan must force at least one idempotent discard"
+    );
+}
+
+/// The masking contract at full strength: under Strict/Never (the
+/// bit-reproducible discipline) a lossy run that needed no recovery is
+/// indistinguishable from a clean run — identical trace fingerprint (net
+/// events are excluded from the hash) and identical final-objective
+/// bits — on the sim backend and on real threads.
+#[test]
+fn strict_never_lossy_run_is_bit_identical_to_clean() {
+    fast_take_deadline();
+    let seed = 107;
+    let corpus = figure_corpus(300, 50, seed);
+    for backend in [BackendKind::Sim, BackendKind::Threads] {
+        let run = |plan: Option<NetFaultPlan>| {
+            let mut b = base_builder(
+                backend,
+                QueueOrder::Strict,
+                SkipPolicy::Never,
+                DEPTH,
+                ROUNDS,
+                "net-bitexact",
+            );
+            if let Some(p) = plan {
+                b = b.net_faults(p);
+            }
+            let cfg = b.build().expect("valid config");
+            let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+            let res = e.run(&cfg);
+            assert!(res.aborted.is_none(), "{backend:?}: {:?}", res.aborted);
+            res
+        };
+        let clean = run(None);
+        let lossy = run(Some(mixed_plan(seed ^ 0x1055)));
+        assert_eq!(
+            lossy.recoveries, 0,
+            "{backend:?}: masked faults never reach the take deadline"
+        );
+        assert!(
+            lossy.retransmits > 0,
+            "{backend:?}: the plan must actually have dropped something"
+        );
+        assert_eq!(
+            clean.fingerprint, lossy.fingerprint,
+            "{backend:?}: masked lossy run must replay the clean event \
+             stream bit-for-bit"
+        );
+        assert_eq!(
+            clean.final_objective.to_bits(),
+            lossy.final_objective.to_bits(),
+            "{backend:?}: masked lossy run must land on the same \
+             objective bits"
+        );
+    }
+}
+
+/// The MF block-rotation path rides the same router, so the same masking
+/// contract holds for its H-block ring: lossy Strict/Never matches clean
+/// bit-for-bit and the link metered real retransmits.
+#[test]
+fn mf_block_rotation_masks_faults_bit_exactly() {
+    fast_take_deadline();
+    let run = |plan: Option<NetFaultPlan>| {
+        let mut b = base_builder(
+            BackendKind::Sim,
+            QueueOrder::Strict,
+            SkipPolicy::Never,
+            DEPTH,
+            ROUNDS,
+            "net-mf",
+        );
+        if let Some(p) = plan {
+            b = b.net_faults(p);
+        }
+        let cfg = b.build().expect("valid config");
+        let mut e = mf_block_engine(90, 60, 4, 3, 6, 0.05, 0.08, 31, &cfg);
+        let res = e.run(&cfg);
+        assert!(res.aborted.is_none(), "mf lossy run aborted: {:?}", res.aborted);
+        res
+    };
+    let clean = run(None);
+    let lossy = run(Some(mixed_plan(31)));
+    assert_eq!(lossy.recoveries, 0, "masked faults need no recovery");
+    assert!(lossy.retransmits > 0, "drops must have fired");
+    assert_eq!(clean.fingerprint, lossy.fingerprint, "mf event stream");
+    assert_eq!(
+        clean.final_objective.to_bits(),
+        lossy.final_objective.to_bits(),
+        "mf objective bits"
+    );
+}
+
+/// Liveness edge: a 100% drop plan wedges every forward — no transmission
+/// attempt ever lands, so each round's takes sit at the deadline until
+/// router expiry drives a mid-round recovery (flush + re-grant at the
+/// settled heads).  The run must finish every round with recoveries
+/// metered, not abort, and still conserve token mass.
+#[test]
+fn full_drop_wedge_recovers_mid_round_instead_of_aborting() {
+    fast_take_deadline();
+    let seed = 113;
+    let rounds = 4;
+    let corpus = figure_corpus(200, 40, seed);
+    let cfg = base_builder(
+        BackendKind::Sim,
+        QueueOrder::Strict,
+        SkipPolicy::Never,
+        1,
+        rounds,
+        "net-wedge",
+    )
+    .net_faults(NetFaultPlan {
+        drop_rate: 1.0,
+        dup_rate: 0.0,
+        delay_rate: 0.0,
+        seed,
+    })
+    .build()
+    .expect("valid wedge config");
+    let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+    let total0: f32 = e.app().s.iter().sum();
+    let res = e.run(&cfg);
+    assert!(
+        res.aborted.is_none(),
+        "a wedged ring must recover, not abort: {:?}",
+        res.aborted
+    );
+    assert_eq!(res.rounds_run, rounds, "every round still runs");
+    assert!(
+        res.recoveries > 0,
+        "a 100% drop plan must have forced deadline-driven recovery"
+    );
+    let total1: f32 = e.app().s.iter().sum();
+    assert!(
+        (total0 - total1).abs() < 1e-2,
+        "token mass drifted across wedge recovery: {total0} -> {total1}"
+    );
+}
+
+/// Inertness: a default (all-zero) [`NetFaultPlan`] with the fault layer
+/// compiled in must leave the run bit-identical to a plan-free run —
+/// same fingerprint, same objective bits, no transport activity metered.
+#[test]
+fn default_plan_is_fingerprint_inert() {
+    fast_take_deadline();
+    let seed = 127;
+    let corpus = figure_corpus(300, 50, seed);
+    let run = |armed: bool| {
+        let mut b = base_builder(
+            BackendKind::Sim,
+            QueueOrder::Strict,
+            SkipPolicy::Never,
+            DEPTH,
+            ROUNDS,
+            "net-inert",
+        );
+        if armed {
+            b = b.net_faults(NetFaultPlan::default());
+        }
+        let cfg = b.build().expect("valid config");
+        let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let res = e.run(&cfg);
+        (
+            res.fingerprint.expect("recorded run fingerprints"),
+            res.final_objective.to_bits(),
+            res.retransmits + res.dup_discards + res.recoveries,
+        )
+    };
+    let (clean_fp, clean_obj, clean_act) = run(false);
+    let (armed_fp, armed_obj, armed_act) = run(true);
+    assert_eq!(armed_act, 0, "an all-zero plan must inject nothing");
+    assert_eq!(clean_act, 0);
+    assert_eq!(
+        clean_fp, armed_fp,
+        "a default plan must leave the event stream bit-identical"
+    );
+    assert_eq!(clean_obj, armed_obj, "and the objective bits");
+}
+
+/// Randomized soak: `STRADS_PROP_SEED`-driven fault schedules across the
+/// rate cube × discipline matrix × depth × backend.  Every sampled run
+/// must complete without abort, run every round, and conserve token
+/// mass — the redelivery protocol's liveness bound, checked from many
+/// directions instead of one hand-picked cocktail.
+#[test]
+fn randomized_fault_schedules_never_break_liveness() {
+    fast_take_deadline();
+    let corpus = figure_corpus(200, 40, 17);
+    let matrix = mode_matrix(2);
+    prop_check("net-chaos-soak", 10, |g| {
+        let plan = NetFaultPlan {
+            drop_rate: g.f64_in(0.0, 0.25),
+            dup_rate: g.f64_in(0.0, 0.20),
+            delay_rate: g.f64_in(0.0, 0.30),
+            seed: g.seed(),
+        };
+        if plan.is_empty() {
+            return Prop::Discard; // the inertness test owns this corner
+        }
+        let (order, skip) = matrix[g.usize_in(0, matrix.len() - 1)];
+        let depth = g.usize_in(1, 2) as u64;
+        let backend = if g.bool_with(0.5) {
+            BackendKind::Sim
+        } else {
+            BackendKind::Threads
+        };
+        let rounds = 8;
+        let label = format!("net-prop-{backend:?}-{order:?}-{skip:?}");
+        let cfg = match base_builder(backend, order, skip, depth, rounds, &label)
+            .net_faults(plan)
+            .build()
+        {
+            Ok(c) => c,
+            Err(e) => return Prop::Fail(format!("config rejected: {e}")),
+        };
+        let mut e = lda_engine_sliced(&corpus, 6, 2, 4, 17, &cfg);
+        let total0: f32 = e.app().s.iter().sum();
+        let res = e.run(&cfg);
+        if let Some(why) = &res.aborted {
+            return Prop::Fail(format!("{label}: aborted: {why}"));
+        }
+        if res.rounds_run != rounds {
+            return Prop::Fail(format!(
+                "{label}: {} of {rounds} rounds ran",
+                res.rounds_run
+            ));
+        }
+        let total1: f32 = e.app().s.iter().sum();
+        ensure(
+            (total0 - total1).abs() < 1e-2,
+            format!(
+                "{label}: token mass drifted {total0} -> {total1} under \
+                 {plan:?}"
+            ),
+        )
+    });
+}
