@@ -1,7 +1,10 @@
 #!/usr/bin/env python3
-"""Print the delta between a committed fig9 bench baseline and a fresh run.
+"""Print the delta between a committed bench baseline and a fresh run.
 
 Usage: bench_delta.py BASELINE.json CURRENT.json
+
+Works on any bench JSON that follows the fig9/fig8 shape: top-level
+`*_arm` dicts (plus an optional `ssp_arms` list) of flat metric scalars.
 
 Compares the time-to-objective and p2p-traffic metrics of every
 comparison arm (ssp_arms[], rotation_arm, multislice_arm, ...) plus
@@ -65,6 +68,17 @@ METRICS = [
     "dup_discards",
     "retry_wait_secs",
     "zero_plan_fingerprint",
+    # fig8 sampler_scaling_arm: per-token sampling cost (ns) for the
+    # exact O(K) kernel vs the alias/MH O(1) kernel at the low/high
+    # topic counts, and the K-scaling ratios the bench gates on
+    "k_lo",
+    "k_hi",
+    "exact_ns_per_token_k_lo",
+    "exact_ns_per_token_k_hi",
+    "mh_ns_per_token_k_lo",
+    "mh_ns_per_token_k_hi",
+    "exact_ratio",
+    "mh_ratio",
 ]
 
 
@@ -136,7 +150,8 @@ def main():
 
     base_arms = dict(arms(base))
     cur_arms = dict(arms(cur))
-    print(f"== fig9 bench delta: {sys.argv[2]} vs baseline {sys.argv[1]} ==")
+    fig = cur.get("figure", "bench")
+    print(f"== {fig} bench delta: {sys.argv[2]} vs baseline {sys.argv[1]} ==")
     scale = cur.get("scale"), cur.get("n_workers")
     bscale = base.get("scale"), base.get("n_workers")
     if None not in bscale and bscale != scale:

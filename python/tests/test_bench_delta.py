@@ -301,3 +301,62 @@ def test_null_lossy_baseline_prints_one_sided(tmp_path, monkeypatch, capsys):
     assert "-- lossy_arm" in out
     assert "n/a" in out
     assert "perturbed" not in out
+
+
+def _sampler_doc(arm):
+    # BENCH_fig8.json shape: a single top-level sampler_scaling_arm, no
+    # ssp_arms and no n_workers
+    return {"figure": "fig8", "scale": 1.0, "wall_secs": 9.0,
+            "sampler_scaling_arm": arm}
+
+
+def _sampler_arm(mh_hi=60.0):
+    return {
+        "app": "LDA-sampler-scaling",
+        "vocab": 500000,
+        "n_docs": 4000,
+        "k_lo": 50,
+        "k_hi": 400,
+        "exact_ns_per_token_k_lo": 100.0,
+        "exact_ns_per_token_k_hi": 700.0,
+        "mh_ns_per_token_k_lo": 50.0,
+        "mh_ns_per_token_k_hi": mh_hi,
+        "exact_ratio": 7.0,
+        "mh_ratio": mh_hi / 50.0,
+    }
+
+
+def test_sampler_arm_metrics_flow_through(tmp_path, monkeypatch, capsys):
+    # the fig8 sampler arm carries per-token-cost keys; numbers delta and
+    # the report header names the right figure
+    base = _sampler_doc(_sampler_arm())
+    cur = _sampler_doc(_sampler_arm(mh_hi=90.0))
+    _run(tmp_path, base, cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "== fig8 bench delta" in out
+    assert "-- sampler_scaling_arm" in out
+    assert "mh_ns_per_token_k_hi" in out and "(+50.0%)" in out
+    assert "exact_ns_per_token_k_lo" in out
+    assert "mh_ratio" in out
+    assert "arms removed" not in out
+
+
+def test_null_sampler_baseline_prints_one_sided(tmp_path, monkeypatch,
+                                                capsys):
+    # the committed BENCH_fig8.json placeholder nulls every sampler metric
+    base = _sampler_doc({k: (v if k == "app" else None)
+                         for k, v in _sampler_arm().items()})
+    cur = _sampler_doc(_sampler_arm())
+    _run(tmp_path, base, cur, monkeypatch)
+    out = capsys.readouterr().out
+    assert "-- sampler_scaling_arm" in out
+    assert "n/a" in out
+
+
+def test_removed_sampler_arm_fails_the_job(tmp_path, monkeypatch, capsys):
+    base = _sampler_doc(_sampler_arm())
+    cur = {"figure": "fig8", "scale": 1.0, "wall_secs": 9.0}
+    with pytest.raises(SystemExit) as exc:
+        _run(tmp_path, base, cur, monkeypatch)
+    assert exc.value.code == 1
+    assert "sampler_scaling_arm" in capsys.readouterr().out

@@ -1,7 +1,20 @@
 //! Bench: regenerate paper Figure 8 (convergence time vs model size, all
-//! three panels) at bench scale.  `cargo bench --bench fig8_model_size`
+//! three panels) at bench scale, plus the big-vocab **sampler scaling**
+//! arm: per-token sampling cost for the exact O(K) Gibbs kernel vs the
+//! alias/Metropolis–Hastings O(1) kernel as K grows.
+//! `cargo bench --bench fig8_model_size`
+//!
+//! Knobs (CI smoke uses these): `STRADS_BENCH_SCALE` (default 1.0 —
+//! scales the sampler arm's corpus; the panels run a fixed bench shape),
+//! `STRADS_BENCH_DIR` (default `target/bench`) — the run writes
+//! `BENCH_fig8.json` there so the perf trajectory can be archived per-PR.
 
 use strads::figures::fig8;
+use strads::util::JsonValue;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
 
 fn main() {
     let t = std::time::Instant::now();
@@ -51,5 +64,78 @@ fn main() {
     fig8::print_panel("Figure 8 (right): Lasso", "Lasso-RR", &lasso);
     assert!(lasso.iter().all(|b| b.strads_secs.is_some()));
 
-    println!("\nfig8 bench completed in {:.2}s", t.elapsed().as_secs_f64());
+    // ---- sampler scaling arm: exact O(K) vs alias/MH O(1) -------------
+    // The big-model extension: at 500K vocabulary most words are rare, so
+    // the exact kernel's running-CDF scan pays the full topic count per
+    // token while MH pays the word's own occupancy.  Per-token cost for
+    // the exact kernel must therefore grow strongly with K while the MH
+    // kernel stays near-flat (the ≤ 2x band absorbs cache effects and
+    // the K-proportional alias rebuild amortization).
+    let scale = env_f64("STRADS_BENCH_SCALE", 1.0);
+    let sc = |v: usize| ((v as f64 * scale) as usize).max(64);
+    let s_cfg = fig8::SamplerScalingConfig {
+        vocab: sc(500_000),
+        n_docs: sc(4_000),
+        topic_counts: vec![50, 400],
+        n_slices: 8,
+        sweeps: 3,
+        seed: 42,
+    };
+    let points = fig8::run_sampler_scaling(&s_cfg);
+    fig8::print_sampler_scaling(&points);
+    let lo = points.first().expect("sampler arm has a low-K point");
+    let hi = points.last().expect("sampler arm has a high-K point");
+    let mh_ratio = hi.mh_ns_per_token / lo.mh_ns_per_token;
+    let exact_ratio = hi.exact_ns_per_token / lo.exact_ns_per_token;
+    println!(
+        "sampler scaling K={} -> K={}: exact {:.2}x, mh {:.2}x",
+        lo.k, hi.k, exact_ratio, mh_ratio
+    );
+    assert!(
+        mh_ratio <= 2.0,
+        "mh per-token cost must stay near-flat in K: {:.1}ns @K={} -> \
+         {:.1}ns @K={} ({mh_ratio:.2}x > 2x)",
+        lo.mh_ns_per_token,
+        lo.k,
+        hi.mh_ns_per_token,
+        hi.k
+    );
+    assert!(
+        exact_ratio > mh_ratio,
+        "exact must scale worse than mh across K={}..{}: exact \
+         {exact_ratio:.2}x vs mh {mh_ratio:.2}x",
+        lo.k,
+        hi.k
+    );
+
+    // ---- BENCH_fig8.json ---------------------------------------------
+    let json = JsonValue::obj()
+        .field("figure", "fig8")
+        .field("scale", scale)
+        .field(
+            "sampler_scaling_arm",
+            JsonValue::obj()
+                .field("app", "LDA-sampler-scaling")
+                .field("vocab", s_cfg.vocab)
+                .field("n_docs", s_cfg.n_docs)
+                .field("k_lo", lo.k)
+                .field("k_hi", hi.k)
+                .field("exact_ns_per_token_k_lo", lo.exact_ns_per_token)
+                .field("exact_ns_per_token_k_hi", hi.exact_ns_per_token)
+                .field("mh_ns_per_token_k_lo", lo.mh_ns_per_token)
+                .field("mh_ns_per_token_k_hi", hi.mh_ns_per_token)
+                .field("exact_ratio", exact_ratio)
+                .field("mh_ratio", mh_ratio)
+                .build(),
+        )
+        .field("wall_secs", t.elapsed().as_secs_f64())
+        .build();
+    let dir = std::env::var("STRADS_BENCH_DIR")
+        .unwrap_or_else(|_| "target/bench".to_string());
+    std::fs::create_dir_all(&dir).expect("create bench output dir");
+    let path = format!("{dir}/BENCH_fig8.json");
+    std::fs::write(&path, json.to_json()).expect("write bench json");
+    println!("\nwrote {path}");
+
+    println!("fig8 bench completed in {:.2}s", t.elapsed().as_secs_f64());
 }

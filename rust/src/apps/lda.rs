@@ -24,7 +24,7 @@
 //! a worker sweeps one parked slice while another is still in flight (the
 //! engine's per-slice virtual-time model scores exactly that overlap).
 
-use crate::backend::LdaShard;
+use crate::backend::{LdaShard, SamplerKind};
 use crate::cluster::{router_spin_ms, NetFaultPlan};
 use crate::coordinator::{
     EffectiveConfig, HandoffLeg, RotationCaps, RunConfig, StradsApp,
@@ -97,11 +97,17 @@ pub struct LdaTask {
     /// Rotation-pipelined path: take/forward each leg's slice through the
     /// router instead of shipping payloads.
     pub router: Option<Arc<SliceRouter<BSlice>>>,
+    /// The negotiated sampling kernel — stamped into every task so shards
+    /// hear it before each sweep under both backends (workers are built
+    /// before negotiation, so the choice cannot ride the constructor).
+    pub sampler: SamplerKind,
     /// Within-queue service discipline: `Strict` blocks on each leg in
     /// queue order; `Availability` polls the router and sweeps whichever
     /// granted slice landed first (routed legs only — BSP legs carry
     /// their slice and have nothing to wait on).
     pub order: QueueOrder,
+    /// The negotiated sampling kernel for this round's sweeps.
+    pub sampler: SamplerKind,
 }
 
 /// One leg of a worker partial: mirrors [`LdaTaskLeg`] after the sweep.
@@ -178,6 +184,12 @@ pub struct LdaApp {
     /// in the recorded sweep order and services it strictly (see
     /// [`TraceReplayer::reorder_legs`]).
     replay: Option<Arc<TraceReplayer>>,
+    /// The negotiated sampling kernel, stamped into every task.
+    sampler: SamplerKind,
+    /// Sampler recorded in a restored checkpoint: `negotiate` asserts the
+    /// resumed run asks for the same kernel (resuming an mh chain under
+    /// exact would silently sample a different chain).
+    restored_sampler: Option<SamplerKind>,
 }
 
 impl LdaApp {
@@ -221,6 +233,8 @@ impl LdaApp {
             s_staleness: 1,
             pulls: 0,
             replay: None,
+            sampler: SamplerKind::Exact,
+            restored_sampler: None,
         }
     }
 
@@ -386,6 +400,7 @@ impl StradsApp for LdaApp {
                 s: self.s_snapshot.clone(),
                 router: self.router.as_ref().map(Arc::clone),
                 order,
+                sampler: self.sampler,
             });
         }
         if self.router.is_some() {
@@ -432,7 +447,10 @@ impl StradsApp for LdaApp {
             (touched, leg)
         }
 
-        let LdaTask { legs, s, router, order } = task;
+        let LdaTask { legs, s, router, order, sampler } = task;
+        // kernel selection precedes every sweep: tasks are the only
+        // channel that reaches worker state under both backends
+        ws.set_sampler(sampler);
         let n_topics = s.len();
         // the worker's local s̃ threads through the queue: the next swept
         // leg samples against the sums the previous one left behind
@@ -676,13 +694,31 @@ impl StradsApp for LdaApp {
         // elastic: slice state lives in the router/store, not on workers;
         // ownership is pure placement, so membership changes reduce to a
         // re_place at a drained boundary (recover_membership below).
-        RotationCaps { queue_reorder: true, skip: true, elastic: true }
+        // mh_sampler: the native shard implements the alias/MH kernel and
+        // every sweep is already lease-scoped, which is the cache boundary
+        // the kernel needs.
+        RotationCaps {
+            queue_reorder: true,
+            skip: true,
+            elastic: true,
+            mh_sampler: true,
+        }
     }
 
     fn negotiate(&mut self, cfg: &RunConfig) -> EffectiveConfig {
         let eff = EffectiveConfig::negotiate(cfg, Self::rotation_caps());
         self.sched.set_queue_order(eff.queue_order);
         self.sched.set_skip_policy(eff.skip_policy);
+        if let Some(restored) = self.restored_sampler {
+            assert_eq!(
+                restored, eff.sampler,
+                "checkpoint was taken under sampler {restored} but this \
+                 resume negotiates {}: resuming a chain under the other \
+                 kernel would silently sample a different posterior path",
+                eff.sampler
+            );
+        }
+        self.sampler = eff.sampler;
         eff
     }
 
@@ -863,6 +899,11 @@ impl StradsApp for LdaApp {
         let current: Vec<u64> =
             (0..self.n_slices).map(|v| self.sched.slice_at(v) as u64).collect();
         w.put_u64s(&current);
+        // the kernel is chain state: a resume must negotiate the same one
+        w.put_u64(match self.sampler {
+            SamplerKind::Exact => 0,
+            SamplerKind::Mh => 1,
+        });
         w.into_bytes()
     }
 
@@ -890,6 +931,11 @@ impl StradsApp for LdaApp {
         let counter = r.u64();
         let current: Vec<usize> =
             r.u64s().into_iter().map(|v| v as usize).collect();
+        self.restored_sampler = Some(match r.u64() {
+            0 => SamplerKind::Exact,
+            1 => SamplerKind::Mh,
+            other => panic!("checkpoint has unknown sampler tag {other}"),
+        });
         r.done();
         // set_round first: re_place converts current-round coordinates
         // through the restored counter

@@ -802,7 +802,14 @@ impl StradsApp for MfBlockApp {
         // elastic: not yet wired — H blocks are coordinator-held like
         // LDA's slices, but the W shards are worker-resident, so a
         // membership change would strand a dead worker's W rows.
-        RotationCaps { queue_reorder: true, skip: true, elastic: false }
+        // mh_sampler: an LDA-kernel knob — meaningless for CCD sweeps, so
+        // a stray `--sampler mh` degrades to exact instead of lying.
+        RotationCaps {
+            queue_reorder: true,
+            skip: true,
+            elastic: false,
+            mh_sampler: false,
+        }
     }
 
     fn negotiate(&mut self, cfg: &RunConfig) -> EffectiveConfig {

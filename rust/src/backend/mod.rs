@@ -13,6 +13,53 @@ pub mod native;
 #[cfg(feature = "xla")]
 pub mod xla;
 
+/// Which LDA sampling kernel a sweep runs (`RunConfig::sampler`, CLI
+/// `--sampler exact|mh`).
+///
+/// * [`SamplerKind::Exact`] (default) — the collapsed-Gibbs running-CDF
+///   scan: O(K) per token, bit-exact with every pre-sampler golden.
+/// * [`SamplerKind::Mh`] — LightLDA-style Metropolis–Hastings with
+///   alias-table proposals rebuilt at each slice lease: amortized O(1)
+///   per token, same stationary distribution via stale-proposal
+///   acceptance correction.  Rotation-only (the lease is the cache
+///   boundary); drawn from a different RNG sub-stream, so mh runs are
+///   deterministic per seed but fingerprint differently from exact runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplerKind {
+    #[default]
+    Exact,
+    Mh,
+}
+
+impl SamplerKind {
+    /// Canonical CLI / trace-header token.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SamplerKind::Exact => "exact",
+            SamplerKind::Mh => "mh",
+        }
+    }
+}
+
+impl std::fmt::Display for SamplerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for SamplerKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "exact" => Ok(SamplerKind::Exact),
+            "mh" => Ok(SamplerKind::Mh),
+            other => Err(format!(
+                "unknown sampler {other:?} (expected \"exact\" or \"mh\")"
+            )),
+        }
+    }
+}
+
 /// Lasso shard compute (one worker's row shard).
 pub trait LassoShard: Send {
     /// Partial correlations z_sel for the scheduled columns (paper eq. 6):
@@ -86,6 +133,18 @@ pub trait LdaShard: Send {
             self.gibbs_slice(slice_id, b_slice, s_running);
         *s_running = s_local;
         (n, touched)
+    }
+    /// Select the sampling kernel for subsequent sweeps.  The app stamps
+    /// the negotiated choice into every task, so shards hear it before
+    /// each leg under both backends.  Backends that only implement the
+    /// exact kernel keep the default, which rejects `Mh` loudly instead
+    /// of silently sampling a different chain.
+    fn set_sampler(&mut self, kind: SamplerKind) {
+        assert_eq!(
+            kind,
+            SamplerKind::Exact,
+            "this LdaShard backend only implements the exact sampler"
+        );
     }
     /// Document-side log-likelihood contribution.
     fn doc_loglik(&self) -> f64;

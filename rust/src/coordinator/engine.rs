@@ -63,6 +63,7 @@
 //! protocol, same app calls, physically-real concurrency (see
 //! `crate::cluster::exec` for the equivalence contract).
 
+use crate::backend::SamplerKind;
 use crate::cluster::exec::{RotObs, RoundObs};
 use crate::cluster::{
     make_backend, BackendKind, ExecBackend, HandoffJitter, MemoryTracker,
@@ -409,6 +410,10 @@ pub struct RotationCaps {
     /// orphaned grants ([`StradsApp::recover_membership`]), so
     /// [`RunConfig::faults`] kills/joins are honoured.
     pub elastic: bool,
+    /// The app's shards implement the O(1) Metropolis–Hastings sampling
+    /// kernel ([`SamplerKind::Mh`], LDA only); a `--sampler mh` request
+    /// on an app without it degrades to [`SamplerKind::Exact`].
+    pub mh_sampler: bool,
 }
 
 /// The rotation settings a run actually executes with, after degrading
@@ -418,12 +423,14 @@ pub struct RotationCaps {
 pub struct EffectiveConfig {
     pub queue_order: QueueOrder,
     pub skip_policy: SkipPolicy,
+    pub sampler: SamplerKind,
 }
 
 impl EffectiveConfig {
     /// Degrade: a non-`Strict` queue order on an app without
     /// `queue_reorder` falls back to `Strict`; a `Defer` skip policy on an
-    /// app without `skip` falls back to `Never`.
+    /// app without `skip` falls back to `Never`; an `Mh` sampler on an
+    /// app without `mh_sampler` falls back to `Exact`.
     pub fn negotiate(cfg: &RunConfig, caps: RotationCaps) -> EffectiveConfig {
         let queue_order = match cfg.queue_order {
             QueueOrder::Strict => QueueOrder::Strict,
@@ -434,7 +441,11 @@ impl EffectiveConfig {
             SkipPolicy::Defer { .. } if caps.skip => cfg.skip_policy,
             _ => SkipPolicy::Never,
         };
-        EffectiveConfig { queue_order, skip_policy }
+        let sampler = match cfg.sampler {
+            SamplerKind::Mh if caps.mh_sampler => SamplerKind::Mh,
+            _ => SamplerKind::Exact,
+        };
+        EffectiveConfig { queue_order, skip_policy, sampler }
     }
 }
 
@@ -576,6 +587,13 @@ pub struct RunConfig {
     /// is bit-identical to the pre-transport engine).  CLI: `--drop-rate
     /// R`, `--dup-rate R`, `--delay-rate R`, `--net-fault-seed S`.
     pub net_faults: NetFaultPlan,
+    /// Rotation mode: which LDA sampling kernel the shards run — the
+    /// default `Exact` collapsed-Gibbs scan (bit-identical to every
+    /// pre-sampler golden) or the amortized-O(1) `Mh` alias kernel.
+    /// Takes effect only on apps whose [`StradsApp::rotation_caps`]
+    /// report `mh_sampler`; everything else degrades to `Exact` — see
+    /// [`EffectiveConfig::negotiate`].  CLI: `--sampler exact|mh`.
+    pub sampler: SamplerKind,
 }
 
 impl Default for RunConfig {
@@ -597,6 +615,7 @@ impl Default for RunConfig {
             trace: TraceMode::Off,
             faults: FaultPlan::default(),
             net_faults: NetFaultPlan::default(),
+            sampler: SamplerKind::Exact,
         }
     }
 }
@@ -737,6 +756,13 @@ impl RunConfigBuilder {
         self
     }
 
+    /// Select the LDA sampling kernel (CLI `--sampler exact|mh`).  `Mh`
+    /// is rotation-only: the slice lease is the alias-cache boundary.
+    pub fn sampler(mut self, v: SamplerKind) -> Self {
+        self.cfg.sampler = v;
+        self
+    }
+
     /// Validate coherence and return the config.
     ///
     /// Rejected combinations:
@@ -772,6 +798,13 @@ impl RunConfigBuilder {
                 return Err(
                     "handoff_jitter requires ExecutionMode::Rotation".into()
                 );
+            }
+            if cfg.sampler != SamplerKind::Exact {
+                return Err(format!(
+                    "sampler {:?} requires ExecutionMode::Rotation (the \
+                     slice lease is the alias-cache boundary)",
+                    cfg.sampler
+                ));
             }
         }
         if cfg.threads_pace_secs > 0.0 && cfg.backend != BackendKind::Threads {
@@ -858,6 +891,13 @@ impl RunConfigBuilder {
                 "skip_policy {:?} requested but the app cannot skip slices \
                  (RotationCaps::skip is false)",
                 self.cfg.skip_policy
+            ));
+        }
+        if self.cfg.sampler != SamplerKind::Exact && !caps.mh_sampler {
+            return Err(format!(
+                "sampler {:?} requested but the app's shards only implement \
+                 the exact kernel (RotationCaps::mh_sampler is false)",
+                self.cfg.sampler
             ));
         }
         if !(self.cfg.faults.kills.is_empty()
@@ -987,11 +1027,13 @@ fn round_slowdowns(backend: &dyn ExecBackend, round: u64, n: usize) -> Vec<f64> 
 fn finish_trace(
     plumbing: &TracePlumbing,
     backend: BackendKind,
+    sampler: SamplerKind,
 ) -> (Option<u64>, Option<Trace>) {
     match &plumbing.sink {
         Some(sink) => {
             let t = Trace {
                 backend: backend.to_string(),
+                sampler,
                 events: sink.snapshot(),
             };
             let fp = t.fingerprint();
@@ -1366,6 +1408,12 @@ impl<A: StradsApp> Engine<A> {
             cfg.net_faults.is_empty(),
             "net fault injection requires the rotation pipeline"
         );
+        assert_eq!(
+            cfg.sampler,
+            SamplerKind::Exact,
+            "the mh sampler requires the rotation pipeline (the slice \
+             lease is the alias-cache boundary)"
+        );
         let wall = Stopwatch::start();
         let block0 = self.app.data_plane_block_secs();
         let plumbing = TracePlumbing::from_mode(&cfg.trace);
@@ -1424,7 +1472,8 @@ impl<A: StradsApp> Engine<A> {
             }
         }
 
-        let (fingerprint, trace) = finish_trace(&plumbing, self.backend_kind);
+        let (fingerprint, trace) =
+            finish_trace(&plumbing, self.backend_kind, SamplerKind::Exact);
         RunResult {
             rounds_run,
             virtual_secs: self.clock.seconds(),
@@ -1475,6 +1524,12 @@ impl<A: StradsApp> Engine<A> {
         assert!(
             cfg.net_faults.is_empty(),
             "net fault injection requires the rotation pipeline"
+        );
+        assert_eq!(
+            cfg.sampler,
+            SamplerKind::Exact,
+            "the mh sampler requires the rotation pipeline (the slice \
+             lease is the alias-cache boundary)"
         );
         let wall = Stopwatch::start();
         let n = self.pool.n_workers();
@@ -1585,7 +1640,8 @@ impl<A: StradsApp> Engine<A> {
             (self.app.data_plane_block_secs() - block0).max(0.0);
         stats.router_block_secs = router_block;
 
-        let (fingerprint, trace) = finish_trace(&plumbing, self.backend_kind);
+        let (fingerprint, trace) =
+            finish_trace(&plumbing, self.backend_kind, SamplerKind::Exact);
         RunResult {
             rounds_run,
             virtual_secs: self.clock.seconds(),
@@ -1938,6 +1994,17 @@ impl<A: StradsApp> Engine<A> {
         // skip policy's debt ledger exists by then) and precedes
         // begin_rotation.
         let eff = self.app.negotiate(cfg);
+        if let TraceMode::Replay(t) = &cfg.trace {
+            // an mh chain draws a different RNG sequence than exact, so
+            // replaying a trace under the other kernel would silently
+            // diverge from the recorded run — fail loudly instead
+            assert_eq!(
+                t.sampler, eff.sampler,
+                "replay trace was recorded under sampler {} but this run \
+                 negotiates {}",
+                t.sampler, eff.sampler
+            );
+        }
         let order = eff.queue_order;
         let may_skip = eff.skip_policy != SkipPolicy::Never;
         if plan.checkpoint_every > 0 {
@@ -2270,7 +2337,8 @@ impl<A: StradsApp> Engine<A> {
             window.clear();
         }
 
-        let (fingerprint, trace) = finish_trace(&plumbing, self.backend_kind);
+        let (fingerprint, trace) =
+            finish_trace(&plumbing, self.backend_kind, eff.sampler);
         RunResult {
             rounds_run,
             virtual_secs: self.clock.seconds(),
@@ -3008,6 +3076,28 @@ mod tests {
     }
 
     #[test]
+    fn sampler_builder_validation() {
+        // mh outside rotation mode is rejected: the slice lease is the
+        // alias-cache boundary, so bsp/ssp have nowhere to rebuild
+        assert!(RunConfig::builder().sampler(SamplerKind::Mh).build().is_err());
+        assert!(RunConfig::builder()
+            .mode(ExecutionMode::Ssp { staleness: 2 })
+            .sampler(SamplerKind::Mh)
+            .build()
+            .is_err());
+        // exact is fine everywhere (it is the default)
+        assert!(RunConfig::builder().sampler(SamplerKind::Exact).build().is_ok());
+        assert_eq!(RunConfig::default().sampler, SamplerKind::Exact);
+        // mh + rotation builds
+        let cfg = RunConfig::builder()
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .sampler(SamplerKind::Mh)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.sampler, SamplerKind::Mh);
+    }
+
+    #[test]
     fn net_fault_builder_validation() {
         let lossy = NetFaultPlan { drop_rate: 0.05, ..Default::default() };
         // net faults outside rotation mode are rejected
@@ -3025,6 +3115,7 @@ mod tests {
             .net_faults(lossy)
             .trace(TraceMode::Replay(Trace {
                 backend: "sim".into(),
+                sampler: SamplerKind::Exact,
                 events: Vec::new(),
             }))
             .build()

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! strads train --app lasso|mf|lda [--workers N] [--rounds R] [--backend sim|threads] ...
-//! strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
+//! strads figure --fig 3|5|8lda|8mf|8lasso|8sampler|9|10 [--scale S] [--out DIR]
 //! strads artifacts [--dir artifacts]          # inspect the AOT manifest
 //! strads datagen --kind lasso|mf|lda ...      # summarize a generated set
 //! ```
@@ -11,6 +11,7 @@
 //! parsing.)
 
 use std::sync::Arc;
+use strads::backend::SamplerKind;
 use strads::cluster::{NetFaultPlan, NetworkConfig};
 use strads::coordinator::{
     BackendKind, ExecutionMode, QueueOrder, RunConfig, RunResult, SkipPolicy,
@@ -55,6 +56,11 @@ USAGE:
              --slices U   rotation slices (default = workers; U > workers
                           over-decomposes with skew-aware ring placement)
              --depth D    pipelined rotation depth (default 0 = BSP)
+             --sampler exact|mh   Gibbs kernel (default exact; mh = O(1)
+                          alias/Metropolis–Hastings per token, requires
+                          --depth > 0 — the slice lease is the alias-cache
+                          boundary — and changes the drawn chain, so
+                          fingerprints differ from exact runs)
       lda/mf --order strict|avail|dynamic   rotation queue service order
                           (avail = sweep whichever slice handoff landed
                           first; dynamic = sweep the heaviest parked
@@ -88,8 +94,9 @@ USAGE:
       --net-fault-seed S   seed for the fault decision streams
                           (default: --seed)
 
-  strads figure --fig 3|5|8lda|8mf|8lasso|9|10 [--scale S] [--out DIR]
-      regenerate a paper figure's rows/series (scaled-down by default)
+  strads figure --fig 3|5|8lda|8mf|8lasso|8sampler|9|10 [--scale S] [--out DIR]
+      regenerate a paper figure's rows/series (scaled-down by default;
+      8sampler = big-vocab exact-vs-mh per-token cost scaling)
 
   strads artifacts [--dir artifacts]
       list the AOT artifact manifest (HLO-text graphs the runtime executes)
@@ -139,6 +146,13 @@ fn cmd_train(args: &Args) {
     } else {
         backend
     };
+    let sampler: SamplerKind = args
+        .str_or("sampler", "exact")
+        .parse()
+        .unwrap_or_else(|e: String| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
     let build_cfg = |mode: ExecutionMode,
                      order: QueueOrder,
                      skip: SkipPolicy|
@@ -151,6 +165,7 @@ fn cmd_train(args: &Args) {
             .mode(mode)
             .queue_order(order)
             .skip_policy(skip)
+            .sampler(sampler)
             .trace(trace.clone())
             .label(format!("{app}-train"));
         for (w, r) in kill_specs(args) {
@@ -493,6 +508,15 @@ fn cmd_figure(args: &Args) {
                 "Lasso-RR",
                 &bars,
             );
+        }
+        "8sampler" => {
+            let points =
+                fig8::run_sampler_scaling(&fig8::SamplerScalingConfig {
+                    vocab: sc(500_000),
+                    n_docs: sc(4_000),
+                    ..Default::default()
+                });
+            fig8::print_sampler_scaling(&points);
         }
         "9" => {
             let cfg = fig9::Fig9Config { scale, ..Default::default() };

@@ -391,6 +391,11 @@ pub struct Trace {
     /// The backend the trace was recorded under (`"sim"` / `"threads"`) —
     /// informational; replay always runs under `Sim`.
     pub backend: String,
+    /// The LDA sampling kernel the trace was recorded under.  Replay
+    /// *checks* this: an mh chain draws a different RNG sequence than
+    /// exact, so re-driving a trace under the other kernel would
+    /// silently diverge from the recorded objectives.
+    pub sampler: crate::backend::SamplerKind,
     pub events: Vec<Event>,
 }
 
@@ -417,7 +422,7 @@ impl Trace {
     /// Canonical line-oriented text form:
     ///
     /// ```text
-    /// strads-trace v1 <backend>
+    /// strads-trace v1 <backend> [mh]
     /// grant <round> <worker> <slice> <version>
     /// take <round> <worker> <slice> <version> <service_index> <arrival_seq>
     /// forward <round> <worker> <slice> <version> <dest> <bytes>
@@ -431,6 +436,12 @@ impl Trace {
         let mut out = String::with_capacity(32 + self.events.len() * 24);
         out.push_str("strads-trace v1 ");
         out.push_str(&self.backend);
+        // sampler token only when non-default: exact traces stay
+        // byte-identical with every pre-sampler golden
+        if self.sampler == crate::backend::SamplerKind::Mh {
+            out.push(' ');
+            out.push_str(self.sampler.as_str());
+        }
         out.push('\n');
         for e in &self.events {
             match *e {
@@ -509,6 +520,14 @@ impl Trace {
             return Err(format!("bad trace header: {header:?}"));
         }
         let backend = hp.next().unwrap_or("sim").to_string();
+        // optional 4th header token: the sampler the trace was recorded
+        // under (absent = exact, the pre-sampler format)
+        let sampler = match hp.next() {
+            None => crate::backend::SamplerKind::Exact,
+            Some(tok) => tok.parse::<crate::backend::SamplerKind>().map_err(
+                |e| format!("bad trace header sampler token: {e}"),
+            )?,
+        };
         let mut events = Vec::new();
         for (i, line) in lines.enumerate() {
             if line.is_empty() {
@@ -630,7 +649,7 @@ impl Trace {
             }
             events.push(ev);
         }
-        Ok(Trace { backend, events })
+        Ok(Trace { backend, sampler, events })
     }
 }
 
@@ -793,10 +812,56 @@ mod tests {
 
     #[test]
     fn text_round_trip_is_lossless() {
-        let t = Trace { backend: "threads".into(), events: sample_events() };
+        let t = Trace {
+            backend: "threads".into(),
+            sampler: crate::backend::SamplerKind::Exact,
+            events: sample_events(),
+        };
         let parsed = Trace::parse(&t.to_text()).expect("parse");
         assert_eq!(parsed, t);
         assert_eq!(parsed.fingerprint(), t.fingerprint());
+    }
+
+    #[test]
+    fn sampler_header_token_round_trips() {
+        let t = Trace {
+            backend: "sim".into(),
+            sampler: crate::backend::SamplerKind::Mh,
+            events: sample_events(),
+        };
+        let text = t.to_text();
+        assert!(text.starts_with("strads-trace v1 sim mh\n"), "{text:?}");
+        let parsed = Trace::parse(&text).expect("parse");
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn legacy_three_token_header_parses_as_exact() {
+        // traces recorded before the sampler existed have no 4th token
+        let parsed =
+            Trace::parse("strads-trace v1 threads\ngrant 0 1 2 3\n")
+                .expect("parse");
+        assert_eq!(parsed.sampler, crate::backend::SamplerKind::Exact);
+        assert_eq!(parsed.backend, "threads");
+        assert_eq!(parsed.events.len(), 1);
+    }
+
+    #[test]
+    fn exact_trace_text_has_no_sampler_token() {
+        // the exact header must stay byte-identical with pre-sampler
+        // goldens
+        let t = Trace {
+            backend: "sim".into(),
+            sampler: crate::backend::SamplerKind::Exact,
+            events: Vec::new(),
+        };
+        assert_eq!(t.to_text(), "strads-trace v1 sim\n");
+    }
+
+    #[test]
+    fn unknown_sampler_header_token_is_rejected() {
+        let err = Trace::parse("strads-trace v1 sim warp\n").unwrap_err();
+        assert!(err.contains("sampler"), "{err}");
     }
 
     #[test]
@@ -950,6 +1015,7 @@ mod tests {
     fn replayer_extracts_skips_service_order_and_grants() {
         let trace = Trace {
             backend: "sim".into(),
+            sampler: crate::backend::SamplerKind::Exact,
             events: vec![
                 Event::Grant { round: 0, worker: 0, slice: 1, version: 1 },
                 Event::Grant { round: 0, worker: 0, slice: 2, version: 1 },

@@ -11,7 +11,8 @@
 pub struct FenwickTree {
     tree: Vec<f64>,
     values: Vec<f64>,
-    /// Smallest power of two ≥ len (for the descend-search).
+    /// Largest power of two ≤ len (for the descend-search; 1 when the
+    /// tree is empty, but `sample` guards the empty case before using it).
     top: usize,
 }
 
@@ -86,8 +87,13 @@ impl FenwickTree {
     /// draw has zeroed weights) lands past the end; instead of blindly
     /// clamping to `len()-1` — which may be a zero-weight bucket and, in
     /// the scheduler, an already-drawn candidate — we walk back to the
-    /// nearest positive-weight index.  With all weights zero, returns 0.
+    /// nearest positive-weight index.  With all weights zero, returns 0;
+    /// an empty tree also returns 0 (there is nothing to index, and
+    /// `len() - 1` would underflow).
     pub fn sample(&self, target: f64) -> usize {
+        if self.is_empty() {
+            return 0;
+        }
         let mut idx = 0usize; // 1-based cursor into tree
         let mut remaining = target;
         let mut mask = self.top;
@@ -174,6 +180,35 @@ mod tests {
         let t = FenwickTree::new(&[0.0; 4]);
         assert_eq!(t.sample(0.0), 0);
         assert_eq!(t.sample(1.0), 0);
+    }
+
+    #[test]
+    fn empty_tree_sample_does_not_underflow() {
+        // regression: `idx.min(self.len() - 1)` underflowed on an empty
+        // tree; sample must return 0 for any target instead of panicking
+        let t = FenwickTree::new(&[]);
+        assert_eq!(t.len(), 0);
+        assert!(t.is_empty());
+        assert_eq!(t.sample(0.0), 0);
+        assert_eq!(t.sample(1.0), 0);
+        assert_eq!(t.total(), 0.0);
+        assert_eq!(t.prefix_sum(0), 0.0);
+    }
+
+    #[test]
+    fn top_is_largest_power_of_two_at_most_len() {
+        // regression: the `top` doc comment claimed the *smallest* power
+        // of two ≥ len; the descend-search actually needs the largest
+        // power of two ≤ len (a too-large top would step past the tree)
+        for (n, want) in
+            [(1usize, 1usize), (2, 2), (3, 2), (4, 4), (5, 4), (8, 8), (9, 8)]
+        {
+            let w = vec![1.0; n];
+            let t = FenwickTree::new(&w);
+            assert_eq!(t.top, want, "n={n}");
+            assert!(t.top <= n);
+            assert!(t.top * 2 > n);
+        }
     }
 
     #[test]

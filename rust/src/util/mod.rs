@@ -2,6 +2,7 @@
 //! and a small dense-linalg kit.  These replace `rand`, `clap`, `serde`,
 //! and `nalgebra`, which are unavailable in this build environment.
 
+pub mod alias;
 pub mod args;
 pub mod config;
 pub mod fenwick;
@@ -11,6 +12,7 @@ pub mod rng;
 pub mod stats;
 pub mod wire;
 
+pub use alias::AliasTable;
 pub use args::Args;
 pub use config::Config;
 pub use fenwick::FenwickTree;

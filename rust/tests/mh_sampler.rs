@@ -1,0 +1,295 @@
+//! End-to-end coverage for the alias/Metropolis–Hastings LDA kernel
+//! (`RunConfig::sampler = SamplerKind::Mh`): statistical parity with the
+//! exact collapsed-Gibbs kernel at equal sweeps, backend-independent
+//! determinism, trace/replay and checkpoint/resume carrying of the
+//! kernel choice, and loud failure when a recorded artifact is re-driven
+//! under the other kernel.
+//!
+//! The kernel-level correctness tests (alias-table TV distance, MH
+//! acceptance ratios, frozen-state stationarity) live next to the kernel
+//! in `src/backend/native.rs` and `src/util/alias.rs`; this suite pins
+//! the *plumbing* contract: CLI config → negotiate → tasks → shards →
+//! trace/checkpoint round trips.
+
+use std::sync::Arc;
+
+use strads::backend::SamplerKind;
+use strads::coordinator::{
+    BackendKind, ExecutionMode, QueueOrder, RunConfig, RunResult,
+    SkipPolicy, Trace, TraceMode,
+};
+use strads::figures::common::{figure_corpus, lda_engine_sliced};
+
+fn mh_cfg(
+    sampler: SamplerKind,
+    backend: BackendKind,
+    trace: TraceMode,
+    label: &str,
+) -> RunConfig {
+    RunConfig::builder()
+        .max_rounds(12)
+        .eval_every(4)
+        .mode(ExecutionMode::Rotation { depth: 2 })
+        .queue_order(QueueOrder::Strict)
+        .skip_policy(SkipPolicy::Never)
+        .sampler(sampler)
+        .backend(backend)
+        .trace(trace)
+        .label(label)
+        .build()
+        .expect("valid mh suite config")
+}
+
+/// The deterministic parts of a `RunResult` (objectives as bit patterns;
+/// wall-clock timing excluded).
+fn deterministic_parts(r: &RunResult) -> (u64, u64, Vec<(u64, u64)>) {
+    (
+        r.rounds_run,
+        r.final_objective.to_bits(),
+        r.recorder
+            .points()
+            .iter()
+            .map(|p| (p.round, p.objective.to_bits()))
+            .collect(),
+    )
+}
+
+/// The mh kernel is rotation-only: the slice lease is the alias-cache
+/// boundary, so the builder rejects it under BSP (the default mode) and
+/// SSP outright rather than letting a run silently degrade.
+#[test]
+fn mh_outside_rotation_is_rejected_at_build() {
+    assert!(RunConfig::builder()
+        .sampler(SamplerKind::Mh)
+        .build()
+        .is_err());
+    assert!(RunConfig::builder()
+        .sampler(SamplerKind::Mh)
+        .mode(ExecutionMode::Ssp { staleness: 2 })
+        .build()
+        .is_err());
+    assert!(RunConfig::builder()
+        .sampler(SamplerKind::Mh)
+        .mode(ExecutionMode::Rotation { depth: 1 })
+        .build()
+        .is_ok());
+}
+
+/// Statistical parity at equal sweeps: from the same initialization the
+/// MH chain's log-likelihood improvement must reach at least 80% of the
+/// exact kernel's — the cycled word/doc proposals with full Hastings
+/// correction target the same posterior, so only mixing speed (not the
+/// stationary distribution) may differ.
+#[test]
+fn mh_reaches_exact_quality_at_equal_sweeps() {
+    let seed = 17u64;
+    let corpus = figure_corpus(300, 50, seed);
+    let improvement = |sampler: SamplerKind| {
+        let cfg = RunConfig::builder()
+            .max_rounds(30)
+            .eval_every(10)
+            .mode(ExecutionMode::Rotation { depth: 2 })
+            .sampler(sampler)
+            .label("mh-parity")
+            .build()
+            .expect("valid parity config");
+        let mut e = lda_engine_sliced(&corpus, 8, 2, 4, seed, &cfg);
+        let res = e.run(&cfg);
+        assert!(res.aborted.is_none(), "{sampler:?} run aborted");
+        let initial = res.recorder.points()[0].objective;
+        res.final_objective - initial
+    };
+    let exact_gain = improvement(SamplerKind::Exact);
+    let mh_gain = improvement(SamplerKind::Mh);
+    assert!(
+        exact_gain > 0.0,
+        "exact chain must improve the log-likelihood (gained {exact_gain})"
+    );
+    assert!(
+        mh_gain >= 0.8 * exact_gain,
+        "mh chain must reach >= 80% of the exact kernel's improvement at \
+         equal sweeps: mh gained {mh_gain:.3}, exact gained {exact_gain:.3}"
+    );
+}
+
+/// The kernels draw genuinely different chains: the same run under
+/// `Exact` and `Mh` must not coincide bit-for-bit (if it did, the mh
+/// dispatch would be dead code).
+#[test]
+fn mh_and_exact_draw_different_chains() {
+    let seed = 23u64;
+    let corpus = figure_corpus(300, 50, seed);
+    let run = |sampler: SamplerKind| {
+        let cfg = mh_cfg(sampler, BackendKind::Sim, TraceMode::Off, "mh-diff");
+        let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        e.run(&cfg).final_objective.to_bits()
+    };
+    assert_ne!(
+        run(SamplerKind::Exact),
+        run(SamplerKind::Mh),
+        "exact and mh must sample different chains"
+    );
+}
+
+/// Backend independence: under Strict/Never there is no live timing
+/// signal in the protocol, so the threaded mh run's event stream — and
+/// its final model, bit-for-bit — must equal an independent sim run's.
+#[test]
+fn mh_is_deterministic_across_backends() {
+    let seed = 31u64;
+    let corpus = figure_corpus(300, 50, seed);
+    let run = |backend: BackendKind| {
+        let cfg = mh_cfg(
+            SamplerKind::Mh,
+            backend,
+            TraceMode::Record,
+            "mh-xbackend",
+        );
+        let mut e = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+        let res = e.run(&cfg);
+        (
+            res.fingerprint.expect("recording run fingerprints"),
+            res.final_objective.to_bits(),
+        )
+    };
+    assert_eq!(
+        run(BackendKind::Sim),
+        run(BackendKind::Threads),
+        "Strict/Never mh runs are backend-independent"
+    );
+}
+
+/// Trace round trip: an mh recording's canonical text carries the
+/// kernel in the header, parses back losslessly, and replays bit-exact
+/// under the sim backend.
+#[test]
+fn mh_trace_records_the_kernel_and_replays_bit_exact() {
+    let seed = 37u64;
+    let corpus = figure_corpus(300, 50, seed);
+    let rec_cfg =
+        mh_cfg(SamplerKind::Mh, BackendKind::Sim, TraceMode::Record, "mh-replay");
+    let mut rec_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &rec_cfg);
+    let rec = rec_engine.run(&rec_cfg);
+    let trace = rec.trace.as_ref().expect("recorded trace");
+
+    let text = trace.to_text();
+    assert!(
+        text.starts_with("strads-trace v1 sim mh\n"),
+        "mh trace header must carry the kernel token: {:?}",
+        text.lines().next()
+    );
+    let parsed = Trace::parse(&text).expect("canonical text parses");
+    assert_eq!(&parsed, trace, "text round-trip");
+    assert_eq!(parsed.sampler, SamplerKind::Mh);
+
+    let rep_cfg = mh_cfg(
+        SamplerKind::Mh,
+        BackendKind::Sim,
+        TraceMode::Replay(Arc::new(parsed)),
+        "mh-replay",
+    );
+    let mut rep_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &rep_cfg);
+    let rep = rep_engine.run(&rep_cfg);
+    assert_eq!(
+        deterministic_parts(&rec),
+        deterministic_parts(&rep),
+        "mh replay deterministic parts"
+    );
+    assert_eq!(rec.fingerprint, rep.fingerprint, "mh replay fingerprint");
+    assert_eq!(
+        rec_engine.app().s,
+        rep_engine.app().s,
+        "mh replay final topic sums"
+    );
+}
+
+/// Kernel mismatch at replay is loud: an mh chain draws a different RNG
+/// sequence than exact, so re-driving an exact recording under mh would
+/// silently diverge from the recorded run — the engine must refuse.
+#[test]
+#[should_panic(expected = "replay trace was recorded under sampler")]
+fn replaying_an_exact_trace_under_mh_fails_loudly() {
+    let seed = 41u64;
+    let corpus = figure_corpus(300, 50, seed);
+    let rec_cfg = mh_cfg(
+        SamplerKind::Exact,
+        BackendKind::Sim,
+        TraceMode::Record,
+        "mh-mismatch",
+    );
+    let mut rec_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &rec_cfg);
+    let rec = rec_engine.run(&rec_cfg);
+    let trace = rec.trace.expect("recorded trace");
+
+    let rep_cfg = mh_cfg(
+        SamplerKind::Mh,
+        BackendKind::Sim,
+        TraceMode::Replay(Arc::new(trace)),
+        "mh-mismatch",
+    );
+    let mut rep_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &rep_cfg);
+    rep_engine.run(&rep_cfg);
+}
+
+fn ckpt_cfg(sampler: SamplerKind, label: &str) -> RunConfig {
+    RunConfig::builder()
+        .max_rounds(12)
+        .eval_every(4)
+        .mode(ExecutionMode::Rotation { depth: 2 })
+        .sampler(sampler)
+        .checkpoint_every(4)
+        .trace(TraceMode::Record)
+        .label(label)
+        .build()
+        .expect("valid mh checkpoint config")
+}
+
+/// Checkpoint/resume under mh is bit-exact: the shard blobs carry the
+/// kernel (and its MH proposal state), so a Strict resume reproduces
+/// the uninterrupted run's suffix down to the trace fingerprint.
+#[test]
+fn mh_checkpoint_resume_is_bit_exact() {
+    let seed = 43u64;
+    let corpus = figure_corpus(300, 50, seed);
+    let cfg = ckpt_cfg(SamplerKind::Mh, "mh-ckpt");
+
+    let mut full_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+    let full = full_engine.run(&cfg);
+    assert!(full.aborted.is_none(), "clean mh run aborted");
+    let ckpt = full.checkpoint.as_ref().expect("run keeps its checkpoint");
+    let full_trace = full.trace.as_ref().expect("recorded trace");
+
+    let mut resumed_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &cfg);
+    let resumed = resumed_engine.resume(&cfg, ckpt);
+    assert!(resumed.aborted.is_none(), "mh resume aborted");
+    assert_eq!(
+        resumed.fingerprint.expect("resumed run fingerprints"),
+        full_trace.fingerprint_from(ckpt.round),
+        "the resumed mh suffix event stream must be bit-identical to the \
+         uninterrupted run's"
+    );
+    assert_eq!(
+        resumed.final_objective.to_bits(),
+        full.final_objective.to_bits(),
+        "final log-likelihood must match bit-exactly across mh resume"
+    );
+}
+
+/// Kernel mismatch at resume is loud: a checkpoint taken under mh must
+/// refuse to resume under exact (and vice versa) — continuing the chain
+/// under the other kernel would silently sample a different posterior
+/// path while presenting as the same run.
+#[test]
+#[should_panic(expected = "checkpoint was taken under sampler")]
+fn resuming_an_mh_checkpoint_under_exact_fails_loudly() {
+    let seed = 47u64;
+    let corpus = figure_corpus(300, 50, seed);
+    let mh = ckpt_cfg(SamplerKind::Mh, "mh-ckpt-mismatch");
+    let mut full_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &mh);
+    let full = full_engine.run(&mh);
+    let ckpt = full.checkpoint.expect("run keeps its checkpoint");
+
+    let exact = ckpt_cfg(SamplerKind::Exact, "mh-ckpt-mismatch");
+    let mut resumed_engine = lda_engine_sliced(&corpus, 6, 2, 4, seed, &exact);
+    resumed_engine.resume(&exact, &ckpt);
+}
